@@ -1,0 +1,181 @@
+//! Ablations of design choices called out in DESIGN.md §5:
+//!  1. normalizer row-sums: closed-form prefix vs FFT apply of 1ₙ;
+//!  2. continuous-row masks: segment tree (paper) vs prefix sums (ours);
+//!  3. FFT plan cache: cached planner vs rebuilt per call;
+//!  4. row-change deltas: analytic vs O(n) scan;
+//!  5. recovery probe cost: binary search vs linear scan;
+//!  6. apply_matrix: spectrum-cached pair-packed FFT (§Perf L3-1) vs
+//!     per-column linear convolutions.
+
+use conv_basis::basis::{recover_from_oracle, ConvBasis, DenseColumnOracle, KConvBasis, RecoverConfig};
+use conv_basis::fft::FftPlanner;
+use conv_basis::lowrank::masked;
+use conv_basis::tensor::{Matrix, Rng};
+use conv_basis::util::{fmt_dur, time_median, Table};
+
+fn synthetic_basis(n: usize, k: usize, rng: &mut Rng) -> KConvBasis {
+    let mut terms = Vec::new();
+    let mut m = n;
+    for _ in 0..k {
+        terms.push(ConvBasis { b: rng.randn_vec(n).iter().map(|x| x.abs() + 0.1).collect(), m });
+        if m <= 2 {
+            break;
+        }
+        m = m / 2 + 1;
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    KConvBasis::new(
+        n,
+        terms.into_iter().filter(|t| seen.insert(std::cmp::Reverse(t.m))).collect(),
+    )
+}
+
+fn main() {
+    println!("# Ablations");
+    let mut rng = Rng::seeded(4242);
+
+    println!("\n## 1. normalizer D̃: prefix-sum row_sums vs FFT·1ₙ (n sweep, k=8)");
+    let mut t1 = Table::new(&["n", "prefix", "fft", "speedup"]);
+    for &n in &[512usize, 2048, 8192] {
+        let basis = synthetic_basis(n, 8, &mut rng);
+        let ones = vec![1.0; n];
+        let mut planner = FftPlanner::new();
+        let t_prefix = time_median(9, || basis.row_sums());
+        let t_fft = time_median(9, || basis.apply(&mut planner, &ones));
+        t1.row(&[
+            n.to_string(),
+            fmt_dur(t_prefix),
+            fmt_dur(t_fft),
+            format!("{:.1}×", t_fft.as_secs_f64() / t_prefix.as_secs_f64()),
+        ]);
+    }
+    t1.print();
+
+    println!("\n## 2. continuous-row mask: segment tree (paper Alg 6) vs prefix sums");
+    let mut t2 = Table::new(&["n", "segtree", "prefix", "segtree/prefix"]);
+    for &n in &[512usize, 2048, 8192] {
+        let k = 16;
+        let u1 = Matrix::randn(n, k, &mut rng);
+        let u2 = Matrix::randn(n, k, &mut rng);
+        let v = rng.randn_vec(n);
+        let s: Vec<usize> = (0..n).map(|i| i / 2).collect();
+        let t: Vec<usize> = (0..n).map(|i| (i / 2 + n / 4).min(n - 1)).collect();
+        let t_seg =
+            time_median(7, || masked::continuous_row_multiply_segtree(&u1, &u2, &v, &s, &t));
+        let t_pre =
+            time_median(7, || masked::continuous_row_multiply_prefix(&u1, &u2, &v, &s, &t));
+        t2.row(&[
+            n.to_string(),
+            fmt_dur(t_seg),
+            fmt_dur(t_pre),
+            format!("{:.1}×", t_seg.as_secs_f64() / t_pre.as_secs_f64()),
+        ]);
+    }
+    t2.print();
+
+    println!("\n## 3. FFT plan cache: shared planner vs rebuilt per apply (n=2048, k=8, 16 applies)");
+    let mut t3 = Table::new(&["variant", "time"]);
+    {
+        let n = 2048;
+        let basis = synthetic_basis(n, 8, &mut rng);
+        let x = rng.randn_vec(n);
+        let mut shared = FftPlanner::new();
+        let t_cached = time_median(5, || {
+            let mut acc = 0.0;
+            for _ in 0..16 {
+                acc += basis.apply(&mut shared, &x)[n - 1];
+            }
+            acc
+        });
+        let t_cold = time_median(5, || {
+            let mut acc = 0.0;
+            for _ in 0..16 {
+                let mut p = FftPlanner::new();
+                acc += basis.apply(&mut p, &x)[n - 1];
+            }
+            acc
+        });
+        t3.row(&["cached planner".into(), fmt_dur(t_cached)]);
+        t3.row(&["cold planner per apply".into(), fmt_dur(t_cold)]);
+        t3.row(&[
+            "cache speedup".into(),
+            format!("{:.2}×", t_cold.as_secs_f64() / t_cached.as_secs_f64()),
+        ]);
+    }
+    t3.print();
+
+    println!("\n## 4. row-change deltas: analytic vs O(n) scan (sliding window, n sweep)");
+    let mut t4 = Table::new(&["n", "analytic", "scan", "speedup"]);
+    for &n in &[512usize, 2048, 8192] {
+        let k = 16;
+        let u1 = Matrix::randn(n, k, &mut rng);
+        let u2 = Matrix::randn(n, k, &mut rng);
+        let v = rng.randn_vec(n);
+        let sw = conv_basis::attention::Mask::sliding_window(n, 64, 4);
+        let deltas = masked::analytic_deltas(&sw).unwrap();
+        let t_analytic =
+            time_median(7, || masked::row_change_multiply_with_deltas(&deltas, &u1, &u2, &v));
+        let t_scan = time_median(3, || masked::row_change_multiply(&sw, &u1, &u2, &v));
+        t4.row(&[
+            n.to_string(),
+            fmt_dur(t_analytic),
+            fmt_dur(t_scan),
+            format!("{:.1}×", t_scan.as_secs_f64() / t_analytic.as_secs_f64()),
+        ]);
+    }
+    t4.print();
+
+    println!("\n## 5. recovery: binary search (Alg 3) vs linear scan of onsets (n sweep, k=4)");
+    let mut t5 = Table::new(&["n", "probes (binary)", "probes (linear bound)", "saving"]);
+    for &n in &[512usize, 2048, 8192] {
+        let t_win = 4;
+        let mut terms = Vec::new();
+        let mut m = n;
+        for _ in 0..4 {
+            let mut b = rng.randn_vec(n);
+            for x in b.iter_mut().take(t_win) {
+                *x = 1.0 + rng.uniform();
+            }
+            for x in b.iter_mut().skip(m) {
+                *x = 0.0;
+            }
+            terms.push(ConvBasis { b, m });
+            m = m / 2 + 1;
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        let basis = KConvBasis::new(
+            n,
+            terms.into_iter().filter(|t| seen.insert(std::cmp::Reverse(t.m))).collect(),
+        );
+        let h = basis.to_dense();
+        let cfg = RecoverConfig { k_max: 8, t: t_win, delta: 0.5, eps: 1e-9 };
+        let (_, stats) = recover_from_oracle(&DenseColumnOracle(&h), &cfg).unwrap();
+        // A linear scan would probe every column up to the last onset.
+        let linear_bound = n - basis.terms().last().unwrap().m + basis.k();
+        t5.row(&[
+            n.to_string(),
+            stats.columns_probed.to_string(),
+            linear_bound.to_string(),
+            format!("{:.0}×", linear_bound as f64 / stats.columns_probed as f64),
+        ]);
+    }
+    t5.print();
+
+    println!("\n## 6. apply_matrix: spectrum-cached pair-packed (§Perf L3-1) vs per-column");
+    let mut t6 = Table::new(&["n", "d", "per-column", "spectrum+pair", "speedup"]);
+    for &(n, d) in &[(2048usize, 64usize), (4096, 64), (4096, 128)] {
+        let basis = synthetic_basis(n, 8, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let mut planner = FftPlanner::new();
+        let t_old = time_median(3, || basis.apply_matrix_percolumn(&mut planner, &v));
+        let t_new = time_median(3, || basis.apply_matrix(&mut planner, &v));
+        t6.row(&[
+            n.to_string(),
+            d.to_string(),
+            fmt_dur(t_old),
+            fmt_dur(t_new),
+            format!("{:.2}×", t_old.as_secs_f64() / t_new.as_secs_f64()),
+        ]);
+    }
+    t6.print();
+}

@@ -1,0 +1,46 @@
+//! Figure 1a: naive `conv(a)·w` vs FFT, time-per-token and
+//! FLOPs-per-token vs n. Reproduces both panels of the paper's
+//! Figure 1a (who wins and where the crossover sits).
+
+use conv_basis::conv::{conv_apply, conv_apply_naive};
+use conv_basis::fft::{fft_conv_flops, naive_conv_flops, FftPlanner};
+use conv_basis::tensor::Rng;
+use conv_basis::util::{fmt_dur, time_median, Table};
+
+fn main() {
+    println!("# Figure 1a — conv(a)·w: naive O(n²) vs FFT O(n log n)");
+    let mut table = Table::new(&[
+        "n",
+        "naive/time",
+        "fft/time",
+        "speedup",
+        "naive time/n (µs)",
+        "fft time/n (µs)",
+        "naive flops/n",
+        "fft flops/n",
+    ]);
+    let mut rng = Rng::seeded(1);
+    let mut planner = FftPlanner::new();
+    for &n in &[256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+        let a = rng.randn_vec(n);
+        let w = rng.randn_vec(n);
+        let iters = if n <= 2048 { 21 } else { 7 };
+        let t_naive = time_median(iters, || conv_apply_naive(&a, &w));
+        let t_fft = time_median(iters, || conv_apply(&mut planner, &a, &w));
+        table.row(&[
+            n.to_string(),
+            fmt_dur(t_naive),
+            fmt_dur(t_fft),
+            format!("{:.2}×", t_naive.as_secs_f64() / t_fft.as_secs_f64()),
+            format!("{:.4}", t_naive.as_secs_f64() * 1e6 / n as f64),
+            format!("{:.4}", t_fft.as_secs_f64() * 1e6 / n as f64),
+            format!("{:.1}", naive_conv_flops(n) / n as f64),
+            format!("{:.1}", fft_conv_flops(n) / n as f64),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper shape check: naive time/n grows ~linearly in n (O(n²) total); \
+         fft time/n grows ~log n; fft wins beyond the small-n crossover."
+    );
+}

@@ -1,0 +1,146 @@
+//! END-TO-END DRIVER (the DESIGN.md `e2e` experiment): proves all
+//! layers compose on a real small workload.
+//!
+//! Phase 1 — TRAIN: a decoder-only transformer (default ~1.6M params;
+//! `--large` switches to the 100M-class `gpt_100m` config with reduced
+//! steps — CPU-feasible but slow) on the synthetic corpus for a few
+//! hundred steps, logging the loss curve.
+//!
+//! Phase 2 — SWAP: replace the attention operator with conv-basis
+//! attention (no parameter updates — the paper's protocol) and verify
+//! the perplexity penalty is negligible at modest k.
+//!
+//! Phase 3 — SERVE: run a batched request trace through the L3
+//! coordinator (router → batcher → workers → basis cache), reporting
+//! throughput and latency percentiles.
+//!
+//! Results are recorded in EXPERIMENTS.md §e2e.
+
+use conv_basis::coordinator::{
+    run_trace, BatcherConfig, RouterConfig, Server, ServerConfig,
+};
+use conv_basis::data::{ByteTokenizer, SyntheticCorpus, WorkloadConfig, WorkloadTrace};
+use conv_basis::model::{train_lm, AttentionBackend, ModelConfig, TrainConfig};
+use conv_basis::util::Table;
+use std::time::Instant;
+
+fn arg<T: std::str::FromStr>(name: &str, default: T) -> T {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let large = std::env::args().any(|a| a == "--large");
+    let steps: usize = arg("--steps", if large { 20 } else { 300 });
+    let seq: usize = arg("--seq", if large { 256 } else { 128 });
+
+    // ---- Phase 1: train -------------------------------------------------
+    let mcfg = if large {
+        ModelConfig { max_seq: seq, ..ModelConfig::gpt_100m() }
+    } else {
+        ModelConfig {
+            vocab_size: 260,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 4,
+            d_ff: 512,
+            max_seq: seq,
+        }
+    };
+    println!("# e2e — train / swap / serve");
+    println!(
+        "\n## phase 1: train ({} params, {} steps, seq {seq})",
+        mcfg.approx_params(),
+        steps
+    );
+    let tcfg = TrainConfig {
+        steps,
+        lr: 1e-3,
+        seq_len: seq,
+        batch: 4,
+        log_every: (steps / 10).max(1),
+        seed: 1,
+    };
+    let t0 = Instant::now();
+    let (model, log) = train_lm(&mcfg, &tcfg, 200_000);
+    println!("wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    println!("loss curve (step, mean loss):");
+    for (step, loss) in &log.losses {
+        println!("  {step:>5}  {loss:.4}");
+    }
+    let first = log.losses.first().unwrap().1;
+    let last = log.losses.last().unwrap().1;
+    assert!(last < first, "training failed to reduce loss");
+    println!("loss: {first:.3} → {last:.3} ✓");
+
+    // ---- Phase 2: swap attention ----------------------------------------
+    println!("\n## phase 2: conv-basis swap (no parameter updates)");
+    let tok = ByteTokenizer::new();
+    let corpus = SyntheticCorpus::generate(40_000, 999); // held-out seed
+    let eval_windows: Vec<_> = corpus.windows(&tok, seq).into_iter().take(8).collect();
+    let mean_loss = |backend: &AttentionBackend| -> f64 {
+        let mut total = 0.0;
+        for (x, y) in &eval_windows {
+            let rec = model.forward(x, backend, false);
+            total += model.lm_loss(&rec, y, ByteTokenizer::PAD).0;
+        }
+        total / eval_windows.len() as f64
+    };
+    let mut table = Table::new(&["backend", "held-out loss", "Δ vs exact"]);
+    let exact_loss = mean_loss(&AttentionBackend::Exact);
+    table.row(&["exact".into(), format!("{exact_loss:.4}"), "—".into()]);
+    for k in [seq / 16, seq / 4, seq] {
+        let backend = if k >= seq {
+            AttentionBackend::ConvBasis(conv_basis::basis::RecoverConfig::exact(seq))
+        } else {
+            AttentionBackend::conv_with_k(k.max(1), seq)
+        };
+        let l = mean_loss(&backend);
+        table.row(&[
+            format!("conv k={k}"),
+            format!("{l:.4}"),
+            format!("{:+.4}", l - exact_loss),
+        ]);
+    }
+    table.print();
+
+    // ---- Phase 3: serve --------------------------------------------------
+    println!("\n## phase 3: serve a batched trace through the coordinator");
+    let n_requests: usize = arg("--requests", 150);
+    let server = Server::start(ServerConfig {
+        router: RouterConfig { exact_below: 128, k_frac: 0.05, k_cap: 32, ..Default::default() },
+        batcher: BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(2) },
+        workers: 4,
+        cache_capacity: 64,
+        lowrank_degree: 2,
+    });
+    let trace = WorkloadTrace::generate(
+        n_requests,
+        &WorkloadConfig {
+            rate_per_s: 2_000.0,
+            len_buckets: [128, 256, 512, 1024],
+            len_weights: [0.4, 0.3, 0.2, 0.1],
+            d_model: 64,
+        },
+        7,
+    );
+    let t0 = Instant::now();
+    let resps = run_trace(&server, &trace, 1.0);
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    let snap = metrics.snapshot();
+    println!("{}", snap.report());
+    println!(
+        "throughput: {:.1} req/s over {:.2}s wall ({} responses, all finite: {})",
+        resps.len() as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64(),
+        resps.len(),
+        resps.iter().all(|r| r.y.is_finite()),
+    );
+    assert_eq!(resps.len(), n_requests);
+    println!("\ne2e OK — all three layers composed (train → swap → serve).");
+}

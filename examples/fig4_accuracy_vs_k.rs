@@ -1,0 +1,108 @@
+//! Figure 4 reproduction (full protocol, repo-scale substitution):
+//!
+//! Paper: Llama3-8B-Instruct, IMDB, context 2048, conv attention with
+//! varying k; metrics = relative final-layer error ‖Y−Ỹ‖²_F/‖Y‖²_F and
+//! classification accuracy over 5 groups × 200 samples.
+//!
+//! Here: a transformer trained in-repo on the synthetic sentiment task
+//! (DESIGN.md substitution log), context `--seq` (default 256; pass
+//! `--seq 2048 --groups 5 --per-group 200` for the paper's exact sizes —
+//! hours on CPU), conv attention with k ∈ {n/16 … n}; same two metrics,
+//! averaged over groups with the paper's 5-group protocol.
+
+use conv_basis::data::{ByteTokenizer, SentimentDataset};
+use conv_basis::model::{
+    eval_classifier, train_classifier, AttentionBackend, ModelConfig, TrainConfig,
+};
+use conv_basis::tensor::rel_fro_error;
+use conv_basis::util::Table;
+
+fn arg<T: std::str::FromStr>(name: &str, default: T) -> T {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let seq: usize = arg("--seq", 128);
+    let groups: usize = arg("--groups", 5);
+    let per_group: usize = arg("--per-group", 20);
+    let steps: usize = arg("--steps", 400);
+
+    println!("# Figure 4 — relative error and accuracy vs number of conv bases k");
+    println!("(context n = {seq}, {groups} groups × {per_group} samples; paper: n = 2048, 5 × 200 on IMDB/Llama3-8B — substitution documented in DESIGN.md; pass --seq 2048 --groups 5 --per-group 200 for paper-scale)\n");
+
+    let mcfg = ModelConfig {
+        vocab_size: 260,
+        d_model: 64,
+        n_heads: 4,
+        n_layers: 3,
+        d_ff: 128,
+        max_seq: seq,
+    };
+    let n_test = groups * per_group;
+    let ds = SentimentDataset::generate(300, n_test, 77);
+    let tcfg = TrainConfig { steps, lr: 3e-3, seq_len: seq, batch: 4, log_every: 50, seed: 42 };
+    let (model, log) = train_classifier(&mcfg, &tcfg, &ds);
+    println!(
+        "trained model: {} params; train loss {:.3} → {:.3}",
+        model.num_params(),
+        log.losses.first().unwrap().1,
+        log.losses.last().unwrap().1
+    );
+    let acc_exact = eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact);
+    println!("exact-attention accuracy: {acc_exact:.3}\n");
+
+    let tok = ByteTokenizer::new();
+    // Error sample: first example of each group.
+    let err_samples: Vec<Vec<usize>> = ds
+        .test_groups(groups)
+        .iter()
+        .map(|g| tok.encode_for_classification(&g[0].text, seq))
+        .collect();
+    let exact_hidden: Vec<_> = err_samples
+        .iter()
+        .map(|t| model.forward(t, &AttentionBackend::Exact, false).final_hidden)
+        .collect();
+
+    let ks: Vec<usize> =
+        [seq / 16, seq / 8, seq / 4, seq / 2, seq].iter().cloned().filter(|&k| k >= 1).collect();
+    let mut table =
+        Table::new(&["k", "rel ‖Y−Ỹ‖²_F/‖Y‖²_F", "acc mean", "acc std", "Δacc vs exact"]);
+    for &k in &ks {
+        let backend = if k >= seq {
+            // k = n reproduces the exact output (the paper's k = 2048
+            // baseline point).
+            AttentionBackend::ConvBasis(conv_basis::basis::RecoverConfig::exact(seq))
+        } else {
+            AttentionBackend::conv_with_k(k, seq)
+        };
+        let mut err_sum = 0.0;
+        for (tokens, exact) in err_samples.iter().zip(&exact_hidden) {
+            let rec = model.forward(tokens, &backend, false);
+            err_sum += rel_fro_error(exact, &rec.final_hidden);
+        }
+        let rel_err = err_sum / err_samples.len() as f64;
+        // Per-group accuracy (the paper's averaging protocol).
+        let accs: Vec<f64> = ds
+            .test_groups(groups)
+            .iter()
+            .map(|g| eval_classifier(&model, g, seq, &backend))
+            .collect();
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let var =
+            accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>() / accs.len() as f64;
+        table.row(&[
+            k.to_string(),
+            format!("{:.3e}", rel_err),
+            format!("{:.3}", mean),
+            format!("{:.3}", var.sqrt()),
+            format!("{:+.3}", mean - acc_exact),
+        ]);
+    }
+    table.print();
+    println!("\nreading (paper's Figure 4 shape): relative error falls rapidly with k; accuracy reaches the exact baseline well before k = n — the accuracy/efficiency trade-off the paper reports.");
+}

@@ -1,0 +1,115 @@
+"""AOT lowering: jax → HLO **text** → artifacts/ for the Rust runtime.
+
+HLO text (NOT `lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()`)
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction
+ids that xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_conv_attention(n: int, d: int, k: int, blk: int) -> tuple[str, dict]:
+    var = model.default_variant(n=n, d=d, k=k)
+    ms = var["ms"]
+
+    def fn(bases, v):
+        return model.conv_attention(bases, v, ms=ms, blk=blk)
+
+    bases_spec = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    v_spec = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    lowered = jax.jit(fn).lower(bases_spec, v_spec)
+    meta = {
+        "kind": "conv_attention",
+        "n": n,
+        "d": d,
+        "k": k,
+        "ms": list(ms),
+        "blk": blk,
+        "inputs": [["bases", [k, n]], ["v", [n, d]]],
+        "outputs": [["y", [n, d]]],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_lowrank_causal(n: int, d: int, rank: int, blk: int) -> tuple[str, dict]:
+    def fn(u1, u2, v):
+        return model.lowrank_causal_attention(u1, u2, v, blk=blk)
+
+    u_spec = jax.ShapeDtypeStruct((n, rank), jnp.float32)
+    v_spec = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    lowered = jax.jit(fn).lower(u_spec, u_spec, v_spec)
+    meta = {
+        "kind": "lowrank_causal",
+        "n": n,
+        "d": d,
+        "rank": rank,
+        "blk": blk,
+        "inputs": [["u1", [n, rank]], ["u2", [n, rank]], ["v", [n, d]]],
+        "outputs": [["y", [n, d]]],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def lower_exact_attention(n: int, d: int) -> tuple[str, dict]:
+    spec = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    lowered = jax.jit(model.exact_attention).lower(spec, spec, spec)
+    meta = {
+        "kind": "exact_attention",
+        "n": n,
+        "d": d,
+        "inputs": [["q", [n, d]], ["k", [n, d]], ["v", [n, d]]],
+        "outputs": [["y", [n, d]]],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--blk", type=int, default=128)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    built = []
+    for name, (text, meta) in {
+        "conv_attention": lower_conv_attention(args.n, args.d, args.k, args.blk),
+        "exact_attention": lower_exact_attention(args.n, args.d),
+        "lowrank_causal": lower_lowrank_causal(args.n, args.d, 16, args.blk),
+    }.items():
+        hlo_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        with open(os.path.join(args.out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=2)
+        built.append((hlo_path, len(text)))
+    for path, size in built:
+        print(f"wrote {path} ({size} chars)")
+
+
+if __name__ == "__main__":
+    main()

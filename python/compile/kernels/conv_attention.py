@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: banded k-conv attention apply.
+
+TPU rethink of the paper's FFT hot-spot (DESIGN.md §Hardware-Adaptation):
+an FFT butterfly is hostile to the MXU systolic array, so the kernel
+exploits the *same* structure the FFT exploits — Toeplitz redundancy —
+in MXU-friendly form. The n×n operand `Σ_r conv(b̃_r, m_r)` is never
+read from HBM; each BLK×BLK tile is **synthesized in VMEM from the
+length-n basis vectors** (a gather along the diagonal offset) and
+immediately contracted against the matching BLK×d tile of V:
+
+    HBM traffic:  O(k·n + n·d)   (the paper's Appendix-A memory claim)
+    VMEM working set per step: BLK² + BLK·d + k·n floats
+    MXU work: one (BLK×BLK)·(BLK×d) matmul per causal tile
+
+The grid is (row-blocks, col-blocks); the causal band makes the column
+loop triangular (`pl.when(bj <= bi)`). Outputs: the unnormalized
+numerator O = A·V and the row sums s = A·1; the final division happens
+in the calling jax function (L2) so the kernel stays a pure contraction.
+
+interpret=True everywhere: the CPU image cannot run Mosaic custom-calls;
+real-TPU efficiency is *estimated* in EXPERIMENTS.md §Perf from the
+block shapes above.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(b_ref, v_ref, o_ref, s_ref, *, ms, n, blk):
+    """One (bi, bj) grid step: synthesize tile, contract, accumulate."""
+    bi = pl.program_id(0)
+    bj = pl.program_id(1)
+
+    # Zero the accumulators on the first column-block visit.
+    @pl.when(bj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    @pl.when(bj <= bi)
+    def _compute():
+        rows = bi * blk + jax.lax.iota(jnp.int32, blk)
+        cols = bj * blk + jax.lax.iota(jnp.int32, blk)
+        offs = rows[:, None] - cols[None, :]  # (blk, blk) diagonal offset
+        causal = offs >= 0
+        offs_c = jnp.clip(offs, 0, n - 1)
+        tile = jnp.zeros((blk, blk), dtype=o_ref.dtype)
+        bases = b_ref[...]  # (k, n) resident in VMEM
+        for r, m in enumerate(ms):  # k is static — unrolled
+            covered = cols[None, :] >= (n - int(m))
+            vals = jnp.take(bases[r], offs_c, axis=0)
+            tile = tile + jnp.where(causal & covered, vals, 0.0)
+        v_tile = v_ref[...]  # (blk, d)
+        o_ref[...] += jnp.dot(tile, v_tile, preferred_element_type=o_ref.dtype)
+        s_ref[...] += tile.sum(axis=1, keepdims=True)
+
+
+def conv_apply_pallas(bases: jnp.ndarray, ms, v: jnp.ndarray, blk: int = 128):
+    """(A·V, A·1) for A = Σ_r conv(bases[r], ms[r]) via the banded kernel.
+
+    bases: (k, n) float32; ms: static tuple of ints (n ≥ m_1 > … ≥ 1);
+    v: (n, d). blk must divide n.
+    """
+    k, n = bases.shape
+    d = v.shape[1]
+    assert v.shape[0] == n
+    blk = min(blk, n)
+    assert n % blk == 0, f"blk {blk} must divide n {n}"
+    ms = tuple(int(m) for m in ms)
+    assert len(ms) == k
+    grid = (n // blk, n // blk)
+
+    kernel = functools.partial(_kernel, ms=ms, n=n, blk=blk)
+    out_shapes = (
+        jax.ShapeDtypeStruct((n, d), v.dtype),
+        jax.ShapeDtypeStruct((n, 1), v.dtype),
+    )
+    o, s = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Whole basis bank resident (k·n floats — the paper's O(kn)).
+            pl.BlockSpec((k, n), lambda bi, bj: (0, 0)),
+            # V streamed one column-block at a time.
+            pl.BlockSpec((blk, d), lambda bi, bj: (bj, 0)),
+        ],
+        out_specs=(
+            # Output row-block revisited across the bj reduction.
+            pl.BlockSpec((blk, d), lambda bi, bj: (bi, 0)),
+            pl.BlockSpec((blk, 1), lambda bi, bj: (bi, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,  # CPU image: Mosaic custom-calls cannot run here
+    )(bases, v)
+    return o, s[:, 0]
+
+
+def conv_attention_pallas(bases: jnp.ndarray, ms, v: jnp.ndarray, blk: int = 128) -> jnp.ndarray:
+    """Normalized conv attention Ỹ = D̃⁻¹·A·V (Algorithm 1 lines 3–5)."""
+    o, s = conv_apply_pallas(bases, ms, v, blk=blk)
+    return o / s[:, None]
+
+
+def vmem_footprint_floats(k: int, n: int, d: int, blk: int) -> int:
+    """Estimated VMEM working set of one grid step, in f32 words:
+    basis bank + V tile + synthesized tile + output tiles.
+
+    Used by EXPERIMENTS.md §Perf to pick blk per (n, d, k) and to
+    estimate MXU utilization headroom on real hardware.
+    """
+    return k * n + blk * d + blk * blk + blk * d + blk
+
+
+def mxu_utilization_estimate(n: int, blk: int) -> float:
+    """Fraction of issued MXU tiles that carry useful (causal) work:
+    lower-triangular block coverage of the band, ≈ (nb+1)/(2·nb) for
+    nb = n/blk row blocks — the tile-synthesis overhead is amortized by
+    the BLK×BLK×d contraction when d ≳ k."""
+    nb = n // blk
+    useful = nb * (nb + 1) / 2
+    issued = nb * nb
+    return useful / issued

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel #2: Algorithm 4 (causal masked low-rank multiply)
+as a TPU prefix scan.
+
+Computes `Y = (M_causal ∘ U₁U₂ᵀ)·V` without materializing the n×n
+product, via the Lemma D.5 identity `Y_j = ⟨(U₁)_j, c_j⟩` with the
+running prefix state `c_j = Σ_{l≤j} (U₂)_l ⊗ V_l ∈ R^{k×d}`.
+
+TPU mapping: the grid walks row blocks **sequentially** (TPU grids are
+sequential on a core, which is exactly what a scan needs); the carry
+`c` lives in a revisited output block (constant index_map), so each
+step sees the previous step's state. Within a block the causal prefix
+is a `cumsum` over the BLK axis of the rank-k outer products, followed
+by one einsum against U₁ — all MXU/VPU-friendly dense ops.
+
+Cost: O(n·k·d) flops, O(nk + nd) HBM traffic — the Theorem 6.5 causal
+row. interpret=True for the CPU image, as with the conv kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u1_ref, u2_ref, v_ref, y_ref, carry_ref, *, blk):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    u1 = u1_ref[...]  # (blk, k)
+    u2 = u2_ref[...]  # (blk, k)
+    v = v_ref[...]  # (blk, d)
+    c_in = carry_ref[...]  # (k, d) carry from previous blocks
+
+    # Rank-k outer products per row: (blk, k, d), then inclusive prefix.
+    outers = u2[:, :, None] * v[:, None, :]
+    prefix = jnp.cumsum(outers, axis=0)  # c within the block
+    # c_j for row p = c_in + prefix[p]  → y[p] = Σ_k u1[p,k]·c_j[k,:]
+    y = jnp.einsum("pk,pkd->pd", u1, prefix) + u1 @ c_in
+    y_ref[...] = y
+    carry_ref[...] = c_in + prefix[blk - 1]
+
+
+def causal_lowrank_pallas(u1: jnp.ndarray, u2: jnp.ndarray, v: jnp.ndarray, blk: int = 128):
+    """`(M_causal ∘ U₁U₂ᵀ)·V` via the sequential-grid prefix scan."""
+    n, k = u1.shape
+    d = v.shape[1]
+    assert u2.shape == (n, k) and v.shape[0] == n
+    blk = min(blk, n)
+    assert n % blk == 0, f"blk {blk} must divide n {n}"
+    kernel = functools.partial(_kernel, blk=blk)
+    y, _carry = pl.pallas_call(
+        kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, k), lambda bi: (bi, 0)),
+            pl.BlockSpec((blk, k), lambda bi: (bi, 0)),
+            pl.BlockSpec((blk, d), lambda bi: (bi, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((blk, d), lambda bi: (bi, 0)),
+            # The carry: one (k, d) block revisited by every grid step.
+            pl.BlockSpec((k, d), lambda bi: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, d), v.dtype),
+            jax.ShapeDtypeStruct((k, d), v.dtype),
+        ),
+        interpret=True,
+    )(u1, u2, v)
+    return y
+
+
+def causal_lowrank_attention_pallas(
+    u1: jnp.ndarray, u2: jnp.ndarray, v: jnp.ndarray, blk: int = 128
+):
+    """Normalized Theorem 6.5 attention: `D̃⁻¹ (M∘U₁U₂ᵀ) V` (Lemma D.3:
+    one extra multiply with 1ₙ gives the normalizer)."""
+    ones = jnp.ones((v.shape[0], 1), dtype=v.dtype)
+    num = causal_lowrank_pallas(u1, u2, v, blk=blk)
+    den = causal_lowrank_pallas(u1, u2, ones, blk=blk)
+    return num / den
+
+
+def causal_lowrank_ref(u1: jnp.ndarray, u2: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle."""
+    n = u1.shape[0]
+    a = jnp.where(jnp.tril(jnp.ones((n, n), dtype=bool)), u1 @ u2.T, 0.0)
+    return a @ v

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the k-conv attention apply.
+
+This is the CORE correctness signal for the L1 Pallas kernel: a dense,
+obviously-correct construction of
+
+    A = Σ_{r<k} conv(b_r, m_r)          (Definitions 3.5 / 3.9)
+    Y = diag(A·1)^{-1} · A · V          (Algorithm 1 lines 3–4)
+
+The dense build is O(n²) and only exists for testing; the kernel and the
+Rust hot path never materialize A.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv_matrix_dense(b: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Dense sub-convolution matrix conv(b, m) ∈ R^{n×n}.
+
+    Entry (i, j) is b[i−j] when j ≥ n−m and i ≥ j, else 0.
+    """
+    n = b.shape[0]
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    offs = i - j
+    vals = jnp.take(b, jnp.clip(offs, 0, n - 1), axis=0)
+    mask = (offs >= 0) & (j >= n - m)
+    return jnp.where(mask, vals, 0.0)
+
+
+def kconv_dense(bases: jnp.ndarray, ms) -> jnp.ndarray:
+    """Dense Σ_r conv(bases[r], ms[r]). `bases` is (k, n); `ms` static."""
+    k, n = bases.shape
+    acc = jnp.zeros((n, n), dtype=bases.dtype)
+    for r in range(k):
+        acc = acc + conv_matrix_dense(bases[r], int(ms[r]))
+    return acc
+
+
+def conv_attention_ref(bases: jnp.ndarray, ms, v: jnp.ndarray) -> jnp.ndarray:
+    """Reference Ỹ = D̃⁻¹ (Σ_r conv(b̃_r, m_r)) V."""
+    a = kconv_dense(bases, ms)
+    d = a.sum(axis=1, keepdims=True)
+    return (a @ v) / d
+
+
+def conv_apply_ref(bases: jnp.ndarray, ms, v: jnp.ndarray):
+    """Unnormalized numerator and row sums (what the kernel emits)."""
+    a = kconv_dense(bases, ms)
+    return a @ v, a.sum(axis=1)
+
+
+def exact_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Exact causal softmax attention (Definition 3.3) — the baseline
+    the second AOT artifact lowers."""
+    n = q.shape[0]
+    logits = q @ k.T
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    a = jnp.where(mask, jnp.exp(logits), 0.0)
+    d = a.sum(axis=1, keepdims=True)
+    return (a @ v) / d

@@ -1,0 +1,58 @@
+"""L2: the jax compute graphs that get AOT-lowered for the Rust runtime.
+
+Two build-time artifacts (one executable per model variant — shapes and
+window sizes are baked at lowering time):
+
+* ``conv_attention``  — Algorithm 1's apply: given the exp-transformed
+  basis bank (k, n) and V (n, d), return Ỹ = D̃⁻¹·(Σ conv(b̃_r, m_r))·V.
+  The hot-spot runs through the L1 Pallas kernel
+  (`kernels.conv_attention`), so the kernel lowers into the same HLO.
+* ``exact_attention`` — the quadratic baseline (Definition 3.3), used by
+  the Rust integration tests to cross-check numerics between the native
+  path and the PJRT path.
+
+Python never runs at serving time: `make artifacts` lowers these once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv_attention import conv_attention_pallas
+from .kernels.lowrank_causal import causal_lowrank_attention_pallas
+from .kernels import ref
+
+
+def conv_attention(bases: jnp.ndarray, v: jnp.ndarray, *, ms, blk: int = 128):
+    """Normalized k-conv attention through the Pallas kernel.
+
+    `ms` is static (baked into the artifact); returns a 1-tuple so the
+    lowered computation is a tuple root (the xla crate unwraps it with
+    `to_tuple1`).
+    """
+    return (conv_attention_pallas(bases, ms, v, blk=blk),)
+
+
+def conv_attention_ref_graph(bases: jnp.ndarray, v: jnp.ndarray, *, ms):
+    """Same computation through the dense jnp oracle (shape-check /
+    ablation artifact)."""
+    return (ref.conv_attention_ref(bases, ms, v),)
+
+
+def exact_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray):
+    """Exact causal attention baseline (Definition 3.3)."""
+    return (ref.exact_attention_ref(q, k, v),)
+
+
+def lowrank_causal_attention(u1: jnp.ndarray, u2: jnp.ndarray, v: jnp.ndarray, *, blk: int = 128):
+    """Theorem 6.5 causal low-rank attention through the Algorithm-4
+    prefix-scan kernel (second L1 kernel)."""
+    return (causal_lowrank_attention_pallas(u1, u2, v, blk=blk),)
+
+
+def default_variant(n: int = 256, d: int = 32, k: int = 4):
+    """The artifact variant built by default: geometric window schedule
+    m = (n, n/2, n/4, …) — the shape the serving layer requests."""
+    ms = tuple(max(1, n >> r) for r in range(k))
+    return {"n": n, "d": d, "k": k, "ms": ms}

@@ -1,0 +1,130 @@
+"""L1 correctness: the Pallas banded conv-attention kernel vs the dense
+jnp oracle — the CORE build-time signal.
+
+Hypothesis sweeps shapes (n, d, k, block size) and basis structure;
+fixed-seed cases pin the exact configurations the artifacts bake in.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv_attention import (
+    conv_apply_pallas,
+    conv_attention_pallas,
+    mxu_utilization_estimate,
+    vmem_footprint_floats,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_case(n, d, k, seed, positive=True):
+    rng = np.random.default_rng(seed)
+    bases = rng.standard_normal((k, n)).astype(np.float32)
+    if positive:
+        # Post-exp bases are positive and the first window is full —
+        # mirrors what exp_transform emits (normalizer must be > 0).
+        bases = np.abs(bases) + 0.1
+    # Strictly decreasing windows with m_1 = n.
+    ms = sorted(rng.choice(np.arange(1, n + 1), size=k, replace=False).tolist(), reverse=True)
+    ms[0] = n
+    ms = tuple(dict.fromkeys(ms))  # dedupe, keep order
+    bases = bases[: len(ms)]
+    v = rng.standard_normal((n, d)).astype(np.float32)
+    return jnp.asarray(bases), ms, jnp.asarray(v)
+
+
+@pytest.mark.parametrize("n,d,k,blk", [
+    (64, 8, 1, 32),
+    (64, 8, 3, 32),
+    (128, 16, 4, 64),
+    (128, 16, 4, 128),
+    (256, 32, 4, 128),  # the default artifact variant
+])
+def test_kernel_matches_ref_fixed(n, d, k, blk):
+    bases, ms, v = make_case(n, d, k, seed=n + d + k)
+    o_fast, s_fast = conv_apply_pallas(bases, ms, v, blk=blk)
+    o_ref, s_ref = ref.conv_apply_ref(bases, ms, v)
+    np.testing.assert_allclose(np.asarray(o_fast), np.asarray(o_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fast), np.asarray(s_ref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("blk", [32, 64])
+def test_normalized_attention_matches_ref(blk):
+    bases, ms, v = make_case(64, 8, 3, seed=7)
+    y_fast = conv_attention_pallas(bases, ms, v, blk=blk)
+    y_ref = ref.conv_attention_ref(bases, ms, v)
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_n=st.integers(5, 8),
+    d=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 6),
+    blk_div=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_matches_ref_hypothesis(log_n, d, k, blk_div, seed):
+    n = 1 << log_n
+    blk = max(8, n // blk_div)
+    k = min(k, n)
+    bases, ms, v = make_case(n, d, k, seed)
+    o_fast, s_fast = conv_apply_pallas(bases, ms, v, blk=blk)
+    o_ref, s_ref = ref.conv_apply_ref(bases, ms, v)
+    np.testing.assert_allclose(np.asarray(o_fast), np.asarray(o_ref), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s_fast), np.asarray(s_ref), rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_signed_bases_supported(seed):
+    # Negative basis entries arise from the mask-complement correction;
+    # the unnormalized kernel must handle them.
+    bases, ms, v = make_case(64, 8, 3, seed, positive=False)
+    o_fast, s_fast = conv_apply_pallas(bases, ms, v, blk=32)
+    o_ref, s_ref = ref.conv_apply_ref(bases, ms, v)
+    np.testing.assert_allclose(np.asarray(o_fast), np.asarray(o_ref), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s_fast), np.asarray(s_ref), rtol=5e-4, atol=5e-4)
+
+
+def test_identity_basis_is_identity_attention():
+    # conv(e_1, n) = I ⇒ attention output = V.
+    n, d = 32, 4
+    bases = jnp.zeros((1, n), dtype=jnp.float32).at[0, 0].set(1.0)
+    v = jnp.asarray(np.random.default_rng(0).standard_normal((n, d)), dtype=jnp.float32)
+    y = conv_attention_pallas(bases, (n,), v, blk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(v), rtol=1e-5, atol=1e-5)
+
+
+def test_all_ones_basis_is_causal_mean():
+    # conv(1, n): row i averages V[0..i] after normalization.
+    n, d = 16, 2
+    bases = jnp.ones((1, n), dtype=jnp.float32)
+    v = jnp.asarray(np.arange(n * d, dtype=np.float32).reshape(n, d))
+    y = conv_attention_pallas(bases, (n,), v, blk=16)
+    want = np.cumsum(np.asarray(v), axis=0) / np.arange(1, n + 1)[:, None]
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5)
+
+
+def test_blk_must_divide_n():
+    bases, ms, v = make_case(48, 4, 2, seed=1)
+    with pytest.raises(AssertionError):
+        conv_apply_pallas(bases, ms, v, blk=32)
+
+
+def test_vmem_model_monotone_in_blk():
+    small = vmem_footprint_floats(4, 2048, 64, 128)
+    big = vmem_footprint_floats(4, 2048, 64, 512)
+    assert big > small
+    # 16 MiB VMEM budget check for the default artifact config.
+    assert vmem_footprint_floats(4, 2048, 64, 256) * 4 < 16 * 1024 * 1024
+
+
+def test_mxu_estimate_in_range():
+    u = mxu_utilization_estimate(2048, 256)
+    assert 0.5 <= u <= 1.0

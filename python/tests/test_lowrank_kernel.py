@@ -1,0 +1,78 @@
+"""L1 correctness for the Algorithm-4 prefix-scan kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lowrank_causal import (
+    causal_lowrank_attention_pallas,
+    causal_lowrank_pallas,
+    causal_lowrank_ref,
+)
+
+
+def make_case(n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    u1 = jnp.asarray(rng.standard_normal((n, k)), dtype=jnp.float32)
+    u2 = jnp.asarray(rng.standard_normal((n, k)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    return u1, u2, v
+
+
+@pytest.mark.parametrize("n,k,d,blk", [
+    (64, 4, 8, 16),
+    (64, 4, 8, 64),
+    (128, 16, 32, 64),
+    (256, 8, 16, 128),
+])
+def test_matches_dense_oracle(n, k, d, blk):
+    u1, u2, v = make_case(n, k, d, seed=n + k)
+    fast = causal_lowrank_pallas(u1, u2, v, blk=blk)
+    want = causal_lowrank_ref(u1, u2, v)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_n=st.integers(4, 8),
+    k=st.sampled_from([1, 4, 8]),
+    d=st.sampled_from([2, 8, 16]),
+    blk_div=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 10_000),
+)
+def test_matches_dense_oracle_hypothesis(log_n, k, d, blk_div, seed):
+    n = 1 << log_n
+    blk = max(4, n // blk_div)
+    u1, u2, v = make_case(n, k, d, seed)
+    fast = causal_lowrank_pallas(u1, u2, v, blk=blk)
+    want = causal_lowrank_ref(u1, u2, v)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+def test_block_size_invariance():
+    u1, u2, v = make_case(128, 4, 8, seed=3)
+    y16 = causal_lowrank_pallas(u1, u2, v, blk=16)
+    y128 = causal_lowrank_pallas(u1, u2, v, blk=128)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y128), rtol=2e-4, atol=2e-4)
+
+
+def test_normalized_attention_rows_sum_to_one_property():
+    # With V = 1 columns, normalized output is exactly 1 wherever the
+    # row normalizer is nonzero.
+    n, k = 64, 4
+    rng = np.random.default_rng(5)
+    # Positive factors ⇒ positive attention weights ⇒ valid softmax-like
+    # normalization.
+    u1 = jnp.asarray(np.abs(rng.standard_normal((n, k))) + 0.1, dtype=jnp.float32)
+    u2 = jnp.asarray(np.abs(rng.standard_normal((n, k))) + 0.1, dtype=jnp.float32)
+    v = jnp.ones((n, 3), dtype=jnp.float32)
+    y = causal_lowrank_attention_pallas(u1, u2, v, blk=32)
+    np.testing.assert_allclose(np.asarray(y), 1.0, rtol=1e-5)
+
+
+def test_first_row_attends_only_itself():
+    u1, u2, v = make_case(32, 4, 4, seed=9)
+    y = causal_lowrank_pallas(u1, u2, v, blk=16)
+    want = float(jnp.dot(u1[0], u2[0])) * np.asarray(v[0])
+    np.testing.assert_allclose(np.asarray(y[0]), want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,78 @@
+"""L2 checks: model graphs, shapes, and the AOT lowering path."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_conv_attention_graph_matches_ref():
+    var = model.default_variant(n=128, d=16, k=3)
+    rng = np.random.default_rng(1)
+    bases = jnp.asarray(np.abs(rng.standard_normal((var["k"] - 1, var["n"]))) + 0.1,
+                        dtype=jnp.float32)
+    # default_variant k=3 → ms has 3 entries; rebuild matching bases.
+    bases = jnp.asarray(np.abs(rng.standard_normal((len(var["ms"]), var["n"]))) + 0.1,
+                        dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((var["n"], var["d"])), dtype=jnp.float32)
+    (y_kernel,) = model.conv_attention(bases, v, ms=var["ms"], blk=64)
+    (y_ref,) = model.conv_attention_ref_graph(bases, v, ms=var["ms"])
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_exact_attention_graph_is_softmax():
+    n, d = 32, 8
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((n, d)) * 0.3, dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((n, d)) * 0.3, dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    (y,) = model.exact_attention(q, k, v)
+    # Row 0 attends only to itself.
+    np.testing.assert_allclose(np.asarray(y)[0], np.asarray(v)[0], rtol=1e-5)
+    # With V = ones, output is ones.
+    (y1,) = model.exact_attention(q, k, jnp.ones_like(v))
+    np.testing.assert_allclose(np.asarray(y1), 1.0, rtol=1e-5)
+
+
+def test_default_variant_windows():
+    var = model.default_variant(n=256, d=32, k=4)
+    assert var["ms"] == (256, 128, 64, 32)
+    ms = var["ms"]
+    assert all(ms[i] > ms[i + 1] for i in range(len(ms) - 1))
+
+
+def test_aot_emits_parseable_hlo_text(tmp_path=None):
+    with tempfile.TemporaryDirectory() as td:
+        text, meta = aot.lower_conv_attention(n=64, d=8, k=2, blk=32)
+        assert "HloModule" in text
+        assert meta["ms"] == [64, 32]
+        path = os.path.join(td, "x.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        assert os.path.getsize(path) > 1000
+
+        text2, meta2 = aot.lower_exact_attention(n=64, d=8)
+        assert "HloModule" in text2
+        assert meta2["kind"] == "exact_attention"
+
+
+def test_lowered_conv_artifact_executes_in_jax():
+    # Sanity: the lowered computation (with the kernel inside) still
+    # produces oracle numerics when compiled by jax itself.
+    n, d, k, blk = 64, 8, 2, 32
+    var = model.default_variant(n=n, d=d, k=k)
+
+    def fn(bases, v):
+        return model.conv_attention(bases, v, ms=var["ms"], blk=blk)
+
+    rng = np.random.default_rng(3)
+    bases = jnp.asarray(np.abs(rng.standard_normal((k, n))) + 0.1, dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    (y,) = jax.jit(fn)(bases, v)
+    y_ref = ref.conv_attention_ref(bases, var["ms"], v)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,253 @@
+//! Incremental (decode-time) conv-basis attention.
+//!
+//! The paper motivates long-context *inference*; in autoregressive
+//! serving the dominant operation is attending the **newest** token
+//! against the prefix. With a cached conv basis this is a banded dot
+//! product, not an FFT:
+//!
+//! row `n−1` of `Σ_r conv(b̃_r, m_r)` is `Σ_r b̃_r[n−1−j]` over covered
+//! columns, so `y_last = (Σ_j A[n−1, j]·v_j) / D[n−1]` costs `O(k·n)`
+//! for the weights + `O(n·d)` for the weighted sum — no `n×n` matrix,
+//! no transform. This module also maintains the basis under sequence
+//! *growth*: appending a token extends every `b̃_r` by one tail entry
+//! probed from the new K row (exact when the underlying structure is
+//! conv; the serving layer re-recovers on drift).
+
+use super::Mask;
+use crate::basis::{ConvBasis, KConvBasis};
+use crate::tensor::Matrix;
+
+/// Decode-time attention state for one (layer, head): the cached
+/// post-exp basis and normalizer over the current prefix.
+#[derive(Clone, Debug)]
+pub struct DecodeState {
+    post_basis: KConvBasis,
+    d_tilde: Vec<f64>,
+}
+
+impl DecodeState {
+    pub fn new(post_basis: KConvBasis, d_tilde: Vec<f64>) -> Self {
+        assert_eq!(post_basis.n(), d_tilde.len());
+        DecodeState { post_basis, d_tilde }
+    }
+
+    pub fn n(&self) -> usize {
+        self.post_basis.n()
+    }
+
+    pub fn basis(&self) -> &KConvBasis {
+        &self.post_basis
+    }
+
+    /// Attention output for the **last** row only — `O(k·n + n·d)`.
+    pub fn attend_last(&self, v: &Matrix) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(v.rows(), n);
+        let d = v.cols();
+        // Row n−1 attention weights from the basis vectors.
+        let mut y = vec![0.0; d];
+        let mut weight_row = vec![0.0; n];
+        for t in self.post_basis.terms() {
+            let off = n - t.m;
+            // Columns off..n are covered; weight at column j is b[n−1−j].
+            for j in off..n {
+                weight_row[j] += t.b[n - 1 - j];
+            }
+        }
+        for (j, &w) in weight_row.iter().enumerate() {
+            if w != 0.0 {
+                crate::tensor::axpy(w, v.row(j), &mut y);
+            }
+        }
+        let inv = 1.0 / self.d_tilde[n - 1];
+        for x in y.iter_mut() {
+            *x *= inv;
+        }
+        y
+    }
+
+    /// Append one token: extend each basis vector with the probed tail
+    /// value and update the normalizer. `new_row_of_h` is the new last
+    /// row of `M ∘ (QKᵀ)` *pre-exp* (length `n+1`, i.e. `q_new · k_j`
+    /// for `j ≤ n`).
+    ///
+    /// Exactness: if the grown matrix still has the same onsets, this
+    /// reproduces recover-from-scratch; under drift the serving layer's
+    /// fingerprint check forces re-recovery. For the common k = 1
+    /// (Toeplitz) case the update is exact whenever the new row extends
+    /// the same generator.
+    pub fn append_token(&mut self, new_row_of_h: &[f64]) {
+        let n = self.n();
+        assert_eq!(new_row_of_h.len(), n + 1);
+        // Pre-exp cumulative generator value at each diagonal offset is
+        // implied by the post-exp telescoping; for the append we need
+        // the new diagonal offset t = n (the farthest entry, column 0)
+        // and to extend every b̃_r by one slot. The exp of the new
+        // row's value at column 0 equals the cumulative Σ b̃_r[n], so
+        // the *first* basis (largest window, covering column 0) absorbs
+        // the tail; other windows keep their (shorter) reach.
+        let mut terms: Vec<ConvBasis> = Vec::with_capacity(self.post_basis.k());
+        for (r, t) in self.post_basis.terms().iter().enumerate() {
+            let mut b = t.b.clone();
+            // Extend vector length to n+1.
+            b.push(0.0);
+            if r == 0 {
+                // New farthest offset: exp(H[n, 0]) (column 0 is covered
+                // only by the first window).
+                b[n] = new_row_of_h[0].exp();
+            }
+            terms.push(ConvBasis { b, m: t.m + 1 });
+        }
+        // Windows grew by one uniformly — still strictly decreasing.
+        let grown = KConvBasis::new(n + 1, terms);
+        // New normalizer entry: row n of the grown matrix = exp of the
+        // new pre-exp row (exact softmax denominator for the new token).
+        let mut d = self.d_tilde.clone();
+        let new_d: f64 = new_row_of_h.iter().map(|&h| h.exp()).sum();
+        d.push(new_d);
+        self.post_basis = grown;
+        self.d_tilde = d;
+    }
+}
+
+
+/// Fair exact last-row baseline: computes only row `n−1` of the
+/// attention — `O(n·d)` (dot per column + softmax + weighted sum).
+/// This is what a KV-cache serving stack actually does per decode step.
+pub fn exact_attend_last_row_only(q: &Matrix, k: &Matrix, v: &Matrix) -> Vec<f64> {
+    let n = q.rows();
+    let d = v.cols();
+    let qn = q.row(n - 1);
+    // Stabilized softmax over the causal row.
+    let mut logits = Vec::with_capacity(n);
+    let mut mx = f64::NEG_INFINITY;
+    for j in 0..n {
+        let l = crate::tensor::dot(qn, k.row(j));
+        mx = mx.max(l);
+        logits.push(l);
+    }
+    let mut den = 0.0;
+    let mut y = vec![0.0; d];
+    for j in 0..n {
+        let w = (logits[j] - mx).exp();
+        den += w;
+        crate::tensor::axpy(w, v.row(j), &mut y);
+    }
+    for x in y.iter_mut() {
+        *x /= den;
+    }
+    y
+}
+
+/// Exact last-row attention oracle (for tests): softmax row `n−1` of
+/// `M ∘ exp(QKᵀ)` applied to V.
+pub fn exact_attend_last(q: &Matrix, k: &Matrix, v: &Matrix) -> Vec<f64> {
+    let n = q.rows();
+    let mask = Mask::causal(n);
+    let y = super::exact_attention(q, k, v, &mask);
+    y.row(n - 1).to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::conv_attention_strided;
+    use crate::attention::rope::rope_structured_qk;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn fast_exact_last_row_matches_full() {
+        let mut rng = Rng::seeded(505);
+        let (n, d) = (24, 5);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.4);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.4);
+        let v = Matrix::randn(n, d, &mut rng);
+        let fast = exact_attend_last_row_only(&q, &k, &v);
+        let full = exact_attend_last(&q, &k, &v);
+        for (a, b) in fast.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn attend_last_matches_full_forward() {
+        let mut rng = Rng::seeded(501);
+        let (n, d) = (48, 8);
+        let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let out = conv_attention_strided(&q, &k, &v, 4).unwrap();
+        let state = DecodeState::new(out.post_basis.clone(), out.d_tilde.clone());
+        let last = state.attend_last(&v);
+        for (a, b) in last.iter().zip(out.y.row(n - 1)) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn attend_last_matches_exact_oracle_on_structured() {
+        let mut rng = Rng::seeded(502);
+        let (n, d) = (64, 8);
+        let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let out = conv_attention_strided(&q, &k, &v, 1).unwrap();
+        let state = DecodeState::new(out.post_basis, out.d_tilde);
+        let fast = state.attend_last(&v);
+        let want = exact_attend_last(&q, &k, &v);
+        for (a, b) in fast.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn append_token_exact_on_toeplitz_growth() {
+        // Grow a Toeplitz-structured sequence by one token; incremental
+        // state must match recover-from-scratch on the longer prefix.
+        let mut rng = Rng::seeded(503);
+        let (n, d) = (32, 8);
+        let (q_full, k_full) = rope_structured_qk(n + 1, d, 3, &mut rng);
+        let q = q_full.slice(0, n, 0, d);
+        let k = k_full.slice(0, n, 0, d);
+        let out = conv_attention_strided(&q, &k, &Matrix::zeros(n, d), 1).unwrap();
+        let mut state = DecodeState::new(out.post_basis, out.d_tilde);
+
+        // New pre-exp row: q_new · k_j for j ≤ n.
+        let qn = q_full.row(n);
+        let new_row: Vec<f64> = (0..=n)
+            .map(|j| crate::tensor::dot(qn, k_full.row(j)))
+            .collect();
+        state.append_token(&new_row);
+
+        let v_full = Matrix::randn(n + 1, d, &mut rng);
+        let fast = state.attend_last(&v_full);
+        let want = exact_attend_last(&q_full, &k_full, &v_full);
+        for (a, b) in fast.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_loop_stays_exact_over_many_appends() {
+        let mut rng = Rng::seeded(504);
+        let (n0, grow, d) = (16, 12, 6);
+        let n_final = n0 + grow;
+        let (q_full, k_full) = rope_structured_qk(n_final, d, 2, &mut rng);
+        let q0 = q_full.slice(0, n0, 0, d);
+        let k0 = k_full.slice(0, n0, 0, d);
+        let out = conv_attention_strided(&q0, &k0, &Matrix::zeros(n0, d), 1).unwrap();
+        let mut state = DecodeState::new(out.post_basis, out.d_tilde);
+        for step in 0..grow {
+            let n_cur = n0 + step;
+            let qn = q_full.row(n_cur);
+            let new_row: Vec<f64> =
+                (0..=n_cur).map(|j| crate::tensor::dot(qn, k_full.row(j))).collect();
+            state.append_token(&new_row);
+        }
+        assert_eq!(state.n(), n_final);
+        let v = Matrix::randn(n_final, d, &mut rng);
+        let fast = state.attend_last(&v);
+        let want = exact_attend_last(&q_full, &k_full, &v);
+        for (a, b) in fast.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+}

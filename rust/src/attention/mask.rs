@@ -1,0 +1,317 @@
+//! Attention masks: the causal mask (Definition 3.2) plus the Section 6
+//! mask families (Figure 3) and the LongLora sparse mask (Appendix A).
+
+use crate::tensor::Matrix;
+
+/// An `n×n` boolean attention mask.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    n: usize,
+    kind: MaskKind,
+}
+
+/// Mask families used by the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MaskKind {
+    /// Causal (Definition 3.2): `M[i][j] = 1 ⇔ i ≥ j`.
+    Causal,
+    /// LongLora-style shifted sparse mask (Appendix A, Figure 3 left):
+    /// causal *and* within a sliding window of `w` tokens, plus sink
+    /// attention to the first `sink` tokens. Row support changes by an
+    /// amortized constant → Definition 6.1 with `B_j = O(1)`.
+    SlidingWindow { w: usize, sink: usize },
+    /// Continuous-row mask (Definition 6.2): row `i` attends to
+    /// `s[i] ..= t[i]`.
+    ContinuousRow { s: Vec<usize>, t: Vec<usize> },
+    /// Distinct-r rows mask (Definition 6.4): row `i` uses pattern
+    /// `patterns[assign[i]]`.
+    DistinctRows { assign: Vec<usize>, patterns: Vec<Vec<bool>> },
+    /// Distinct-r columns mask (Definition 6.3).
+    DistinctCols { assign: Vec<usize>, patterns: Vec<Vec<bool>> },
+    /// Arbitrary dense mask (row-major bits).
+    Dense(Vec<bool>),
+}
+
+impl Mask {
+    /// Causal mask (Definition 3.2).
+    pub fn causal(n: usize) -> Self {
+        Mask { n, kind: MaskKind::Causal }
+    }
+
+    /// LongLora-style causal sliding-window mask.
+    pub fn sliding_window(n: usize, w: usize, sink: usize) -> Self {
+        assert!(w >= 1);
+        Mask { n, kind: MaskKind::SlidingWindow { w, sink } }
+    }
+
+    /// Continuous-row mask (Definition 6.2); `s[i] ≤ t[i]`, 0-indexed
+    /// inclusive.
+    pub fn continuous_row(s: Vec<usize>, t: Vec<usize>) -> Self {
+        assert_eq!(s.len(), t.len());
+        let n = s.len();
+        for i in 0..n {
+            assert!(s[i] <= t[i] && t[i] < n, "row {i}: bad interval");
+        }
+        Mask { n, kind: MaskKind::ContinuousRow { s, t } }
+    }
+
+    /// Distinct-r rows mask (Definition 6.4).
+    pub fn distinct_rows(assign: Vec<usize>, patterns: Vec<Vec<bool>>) -> Self {
+        let n = assign.len();
+        for &a in &assign {
+            assert!(a < patterns.len());
+        }
+        for p in &patterns {
+            assert_eq!(p.len(), n);
+        }
+        Mask { n, kind: MaskKind::DistinctRows { assign, patterns } }
+    }
+
+    /// Distinct-r columns mask (Definition 6.3).
+    pub fn distinct_cols(assign: Vec<usize>, patterns: Vec<Vec<bool>>) -> Self {
+        let n = assign.len();
+        for &a in &assign {
+            assert!(a < patterns.len());
+        }
+        for p in &patterns {
+            assert_eq!(p.len(), n);
+        }
+        Mask { n, kind: MaskKind::DistinctCols { assign, patterns } }
+    }
+
+    /// Arbitrary dense mask from a boolean matrix (row-major).
+    pub fn dense(n: usize, bits: Vec<bool>) -> Self {
+        assert_eq!(bits.len(), n * n);
+        Mask { n, kind: MaskKind::Dense(bits) }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn kind(&self) -> &MaskKind {
+        &self.kind
+    }
+
+    /// `M[i][j]`.
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.n && j < self.n);
+        match &self.kind {
+            MaskKind::Causal => i >= j,
+            MaskKind::SlidingWindow { w, sink } => i >= j && (i - j < *w || j < *sink),
+            MaskKind::ContinuousRow { s, t } => j >= s[i] && j <= t[i],
+            MaskKind::DistinctRows { assign, patterns } => patterns[assign[i]][j],
+            MaskKind::DistinctCols { assign, patterns } => patterns[assign[j]][i],
+            MaskKind::Dense(bits) => bits[i * self.n + j],
+        }
+    }
+
+    /// Whether the mask is lower-triangular (required by the conv-basis
+    /// decomposition; the Section 6 low-rank path accepts any mask).
+    pub fn is_lower_triangular(&self) -> bool {
+        match &self.kind {
+            MaskKind::Causal | MaskKind::SlidingWindow { .. } => true,
+            _ => {
+                for i in 0..self.n {
+                    for j in i + 1..self.n {
+                        if self.entry(i, j) {
+                            return false;
+                        }
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    /// `M ∘ X` — Hadamard with the 0/1 mask.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.shape(), (self.n, self.n));
+        Matrix::from_fn(self.n, self.n, |i, j| if self.entry(i, j) { x[(i, j)] } else { 0.0 })
+    }
+
+    /// Dense 0/1 materialization.
+    pub fn to_dense(&self) -> Matrix {
+        Matrix::from_fn(self.n, self.n, |i, j| if self.entry(i, j) { 1.0 } else { 0.0 })
+    }
+
+    /// Support set of row `i` (sorted column indices).
+    pub fn row_support(&self, i: usize) -> Vec<usize> {
+        (0..self.n).filter(|&j| self.entry(i, j)).collect()
+    }
+
+    /// Row-change bounds `B_j = |S_j Δ S_{j−1}|` (Definition 6.1, with
+    /// `S_0 = ∅`). LongLora-style masks have `B_j = O(1)` (Claim D.7:
+    /// causal has `B_j = 1`).
+    pub fn row_change_bounds(&self) -> Vec<usize> {
+        let mut prev: Vec<bool> = vec![false; self.n];
+        let mut out = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let mut b = 0;
+            for j in 0..self.n {
+                let cur = self.entry(i, j);
+                if cur != prev[j] {
+                    b += 1;
+                }
+                prev[j] = cur;
+            }
+            out.push(b);
+        }
+        out
+    }
+
+    /// Number of set entries (observability / density reporting).
+    pub fn nnz(&self) -> usize {
+        let mut c = 0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if self.entry(i, j) {
+                    c += 1;
+                }
+            }
+        }
+        c
+    }
+
+    /// ASCII rendering (Figure 3 style: `█` = 1, `·` = 0).
+    pub fn render(&self) -> String {
+        let mut s = String::with_capacity(self.n * (self.n + 1));
+        for i in 0..self.n {
+            for j in 0..self.n {
+                s.push(if self.entry(i, j) { '█' } else { '·' });
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// The Figure 3 gallery: the paper's three illustrative 16×16 masks.
+pub fn figure3_masks() -> Vec<(&'static str, Mask)> {
+    let n = 16;
+    // Left: row change by amortized constant — LongLora-style shifted
+    // sparse window.
+    let left = Mask::sliding_window(n, 5, 1);
+    // Middle: continuous row mask with drifting intervals.
+    let s: Vec<usize> = (0..n).map(|i| i.saturating_sub(6)).collect();
+    let t: Vec<usize> = (0..n).map(|i| (i + 2).min(n - 1)).collect();
+    let middle = Mask::continuous_row(s, t);
+    // Right: distinct 3 rows.
+    let mut patterns = vec![vec![false; n]; 3];
+    for j in 0..n {
+        patterns[0][j] = j < 8;
+        patterns[1][j] = (4..12).contains(&j);
+        patterns[2][j] = j % 2 == 0;
+    }
+    let assign: Vec<usize> = (0..n).map(|i| i % 3).collect();
+    let right = Mask::distinct_rows(assign, patterns);
+    vec![
+        ("row change by amortized constant (Def 6.1)", left),
+        ("continuous row (Def 6.2)", middle),
+        ("distinct 3 rows (Def 6.4)", right),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causal_matches_definition_3_2() {
+        let m = Mask::causal(4);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(m.entry(i, j), i >= j);
+            }
+        }
+        assert!(m.is_lower_triangular());
+        assert_eq!(m.nnz(), 10);
+    }
+
+    #[test]
+    fn causal_row_change_is_one() {
+        // Claim D.7: causal mask has B_j = 1 for all j.
+        let m = Mask::causal(8);
+        assert_eq!(m.row_change_bounds(), vec![1; 8]);
+    }
+
+    #[test]
+    fn sliding_window_is_causal_subset() {
+        let m = Mask::sliding_window(12, 4, 2);
+        assert!(m.is_lower_triangular());
+        for i in 0..12 {
+            for j in 0..12 {
+                if m.entry(i, j) {
+                    assert!(i >= j);
+                    assert!(i - j < 4 || j < 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_window_row_change_amortized_constant() {
+        let m = Mask::sliding_window(32, 6, 0);
+        let bounds = m.row_change_bounds();
+        // Window slides one step per row: B_j ≤ 2.
+        assert!(bounds.iter().all(|&b| b <= 2), "{bounds:?}");
+    }
+
+    #[test]
+    fn continuous_row_entries() {
+        let m = Mask::continuous_row(vec![1, 0, 2], vec![2, 1, 2]);
+        assert!(!m.entry(0, 0) && m.entry(0, 1) && m.entry(0, 2));
+        assert!(m.entry(1, 0) && m.entry(1, 1) && !m.entry(1, 2));
+        assert!(!m.entry(2, 0) && !m.entry(2, 1) && m.entry(2, 2));
+    }
+
+    #[test]
+    fn distinct_rows_share_patterns() {
+        let patterns = vec![vec![true, false, true], vec![false, true, false]];
+        let m = Mask::distinct_rows(vec![0, 1, 0], patterns);
+        assert_eq!(m.row_support(0), m.row_support(2));
+        assert_ne!(m.row_support(0), m.row_support(1));
+    }
+
+    #[test]
+    fn distinct_cols_transpose_of_rows() {
+        let patterns = vec![vec![true, false, true], vec![false, true, false]];
+        let rows = Mask::distinct_rows(vec![0, 1, 0], patterns.clone());
+        let cols = Mask::distinct_cols(vec![0, 1, 0], patterns);
+        let rd = rows.to_dense();
+        let cd = cols.to_dense();
+        assert_eq!(rd.transpose(), cd);
+    }
+
+    #[test]
+    fn apply_zeroes_masked_entries() {
+        let m = Mask::causal(3);
+        let x = Matrix::ones(3, 3);
+        let y = m.apply(&x);
+        assert_eq!(y[(0, 1)], 0.0);
+        assert_eq!(y[(1, 0)], 1.0);
+    }
+
+    #[test]
+    fn figure3_gallery_shapes() {
+        let gallery = figure3_masks();
+        assert_eq!(gallery.len(), 3);
+        for (_, m) in &gallery {
+            assert_eq!(m.n(), 16);
+            assert!(m.nnz() > 0);
+        }
+        // The continuous-row render has 16 lines.
+        assert_eq!(gallery[1].1.render().lines().count(), 16);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let bits = vec![true, false, false, true];
+        let m = Mask::dense(2, bits);
+        assert!(m.entry(0, 0) && m.entry(1, 1));
+        assert!(!m.entry(0, 1) && !m.entry(1, 0));
+    }
+}

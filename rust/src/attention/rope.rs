@@ -1,0 +1,250 @@
+//! Rotary Position Embedding (RoPE) and the paper's structured-QK
+//! constructions (Appendix A case study + Appendix B.5).
+//!
+//! Lemma B.25 / B.30: unit vectors built from rotations at frequencies
+//! `θ_k` have `⟨z_i, z_j⟩ = g(i − j)`, so `QKᵀ = ZZᵀ` is **exactly
+//! Toeplitz** — the cleanest instance of the conv-like structure the
+//! paper observes in Llama3 (Figure 1b), and our stand-in for those
+//! proprietary attention matrices.
+
+use crate::tensor::{Matrix, Rng};
+
+/// Rotary position embedding with the standard geometric frequency
+/// schedule `θ_k = base^{−2k/d}`.
+#[derive(Clone, Debug)]
+pub struct Rope {
+    d: usize,
+    freqs: Vec<f64>,
+}
+
+impl Rope {
+    /// `d` must be even (RoPE rotates coordinate pairs).
+    pub fn new(d: usize, base: f64) -> Self {
+        assert!(d % 2 == 0, "RoPE requires even head dim");
+        let freqs = (0..d / 2).map(|k| base.powf(-2.0 * k as f64 / d as f64)).collect();
+        Rope { d, freqs }
+    }
+
+    /// Apply the position-`pos` rotation to one row (in place).
+    pub fn rotate_row(&self, row: &mut [f64], pos: usize) {
+        assert_eq!(row.len(), self.d);
+        for (k, &f) in self.freqs.iter().enumerate() {
+            let theta = pos as f64 * f;
+            let (s, c) = theta.sin_cos();
+            let (a, b) = (row[2 * k], row[2 * k + 1]);
+            row[2 * k] = a * c - b * s;
+            row[2 * k + 1] = a * s + b * c;
+        }
+    }
+
+    /// Apply to every row of an `n×d` matrix: row `i` gets rotation
+    /// `R^{(i)}` — Appendix A: `Q' = R·Q, K' = R·K` in `O(nd)` time,
+    /// after which Theorem 4.4 applies unchanged to `Q', K'`.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        let mut out = x.clone();
+        for i in 0..out.rows() {
+            self.rotate_row(out.row_mut(i), i);
+        }
+        out
+    }
+}
+
+/// Lemma B.25 construction: generate `Q, K ∈ R^{n×d}` such that
+/// `QKᵀ` is exactly Toeplitz, i.e. `(QKᵀ)[i][j] = g(i−j)` — a matrix
+/// with small conv-basis k after masking.
+///
+/// `Z` rows are `z_i = H·u_i` with `u_{i,2k} = a_k cos(iθ_k)`,
+/// `u_{i,2k+1} = a_k sin(iθ_k)`, `Σ a_k² = 1`; we return `Q = K = Z·c`
+/// (scaled by `c = scale`) so `QKᵀ = c²·ZZᵀ` with
+/// `(ZZᵀ)[i][j] = Σ_k a_k² cos((i−j)θ_k)`.
+///
+/// `n_freqs ≤ d/2` controls how many rotation planes are active.
+pub fn rope_structured_qk(n: usize, d: usize, n_freqs: usize, rng: &mut Rng) -> (Matrix, Matrix) {
+    // Lemma B.25 covers both parities: when d is odd the last coordinate
+    // is a constant a_l (it contributes a_l² to every inner product,
+    // which is still a function of i−j).
+    let planes = d / 2;
+    let n_freqs = n_freqs.clamp(1, planes.max(1));
+    let odd = d % 2 == 1;
+    assert!(d >= 2, "need d ≥ 2");
+    // Random amplitudes on the simplex (Σ a_k² [+ const²] = 1).
+    let n_amp = n_freqs + usize::from(odd);
+    let mut amps: Vec<f64> = (0..n_amp).map(|_| rng.uniform() + 0.1).collect();
+    let norm: f64 = amps.iter().map(|a| a * a).sum::<f64>().sqrt();
+    for a in amps.iter_mut() {
+        *a /= norm;
+    }
+    let thetas: Vec<f64> = (0..n_freqs)
+        .map(|k| 0.3 * (k as f64 + 1.0) / n_freqs as f64 + 0.05 * rng.uniform())
+        .collect();
+
+    // Random orthonormal H via Gram–Schmidt on a Gaussian matrix
+    // (Lemma B.25 allows any orthonormal H; it cancels in ZZᵀ but makes
+    // Q, K look generic to downstream code).
+    let h = random_orthonormal(d, rng);
+
+    let mut u = Matrix::zeros(n, d);
+    for i in 0..n {
+        for k in 0..n_freqs {
+            let theta = i as f64 * thetas[k];
+            u[(i, 2 * k)] = amps[k] * theta.cos();
+            u[(i, 2 * k + 1)] = amps[k] * theta.sin();
+        }
+        if odd {
+            u[(i, d - 1)] = amps[n_freqs];
+        }
+    }
+    let z = u.matmul(&h);
+    (z.clone(), z)
+}
+
+/// Random orthonormal `d×d` matrix (Gram–Schmidt on Gaussian columns).
+pub fn random_orthonormal(d: usize, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::randn(d, d, rng);
+    // Orthonormalize rows.
+    for i in 0..d {
+        for j in 0..i {
+            let proj = crate::tensor::dot(m.row(i), m.row(j));
+            let (head, tail) = m.data_mut().split_at_mut(i * d);
+            let row_j = &head[j * d..(j + 1) * d];
+            let row_i = &mut tail[..d];
+            for (x, y) in row_i.iter_mut().zip(row_j) {
+                *x -= proj * y;
+            }
+        }
+        let nrm = crate::tensor::dot(m.row(i), m.row(i)).sqrt();
+        for x in m.row_mut(i) {
+            *x /= nrm;
+        }
+    }
+    m
+}
+
+
+/// Fraction of lower-triangular Frobenius energy captured by the best
+/// Toeplitz (conv-structured) approximation — diagonal means. 1.0 ⇔
+/// exactly conv-structured; trained attention heads land high but < 1
+/// (the Figure 1b observation made quantitative).
+pub fn toeplitz_energy_fraction(h: &Matrix) -> f64 {
+    let n = h.rows();
+    let mut total = 0.0;
+    let mut captured = 0.0;
+    for off in 0..n {
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        let count = (n - off) as f64;
+        for i in off..n {
+            let v = h[(i, i - off)];
+            sum += v;
+            sumsq += v * v;
+        }
+        total += sumsq;
+        captured += sum * sum / count; // ‖mean·1‖² on this diagonal
+    }
+    if total == 0.0 {
+        1.0
+    } else {
+        captured / total
+    }
+}
+
+/// Measure how Toeplitz a matrix is: max over diagonals of the spread
+/// (max − min) of entries on that diagonal, lower triangle only. Zero ⇔
+/// exactly conv-structured (Figure 1b's qualitative claim made
+/// quantitative).
+pub fn toeplitzness(h: &Matrix) -> f64 {
+    let n = h.rows();
+    let mut worst: f64 = 0.0;
+    for off in 0..n {
+        let mut mn = f64::INFINITY;
+        let mut mx = f64::NEG_INFINITY;
+        for i in off..n {
+            let v = h[(i, i - off)];
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        worst = worst.max(mx - mn);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Rng::seeded(91);
+        let rope = Rope::new(8, 10_000.0);
+        let mut row = rng.randn_vec(8);
+        let before: f64 = row.iter().map(|x| x * x).sum();
+        rope.rotate_row(&mut row, 17);
+        let after: f64 = row.iter().map(|x| x * x).sum();
+        assert!((before - after).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rope_relative_position_property() {
+        // (R^(i) q)·(R^(j) k) depends only on i − j:
+        // check ⟨rot(q,i), rot(k,j)⟩ == ⟨rot(q,i+5), rot(k,j+5)⟩.
+        let mut rng = Rng::seeded(92);
+        let rope = Rope::new(16, 10_000.0);
+        let q0 = rng.randn_vec(16);
+        let k0 = rng.randn_vec(16);
+        let dotp = |i: usize, j: usize| {
+            let mut q = q0.clone();
+            let mut k = k0.clone();
+            rope.rotate_row(&mut q, i);
+            rope.rotate_row(&mut k, j);
+            crate::tensor::dot(&q, &k)
+        };
+        assert!((dotp(7, 3) - dotp(12, 8)).abs() < 1e-9);
+        assert!((dotp(0, 0) - dotp(25, 25)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn structured_qk_is_exactly_toeplitz() {
+        let mut rng = Rng::seeded(93);
+        let (q, k) = rope_structured_qk(32, 8, 3, &mut rng);
+        let h = q.matmul(&k.transpose());
+        assert!(toeplitzness(&h) < 1e-9, "spread = {}", toeplitzness(&h));
+    }
+
+    #[test]
+    fn structured_qk_rows_unit_norm() {
+        let mut rng = Rng::seeded(94);
+        let (q, _) = rope_structured_qk(16, 6, 2, &mut rng);
+        for i in 0..16 {
+            let nrm: f64 = q.row(i).iter().map(|x| x * x).sum();
+            assert!((nrm - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Rng::seeded(95);
+        let h = random_orthonormal(6, &mut rng);
+        let gram = h.matmul(&h.transpose());
+        let eye = Matrix::eye(6);
+        assert!(crate::tensor::max_abs_diff(&gram, &eye) < 1e-9);
+    }
+
+    #[test]
+    fn toeplitz_energy_fraction_bounds() {
+        let mut rng = Rng::seeded(97);
+        let (q, _) = rope_structured_qk(20, 6, 2, &mut rng);
+        let toep = q.matmul(&q.transpose());
+        assert!((toeplitz_energy_fraction(&toep) - 1.0).abs() < 1e-9);
+        let generic = Matrix::randn(20, 20, &mut rng);
+        let frac = toeplitz_energy_fraction(&generic);
+        assert!(frac > 0.0 && frac < 0.5, "frac = {frac}");
+    }
+
+    #[test]
+    fn generic_qk_is_not_toeplitz() {
+        let mut rng = Rng::seeded(96);
+        let q = Matrix::randn(16, 4, &mut rng);
+        let h = q.matmul(&q.transpose());
+        assert!(toeplitzness(&h) > 0.1);
+    }
+}

@@ -1,0 +1,140 @@
+//! Exact k-conv decomposition — the constructive proof of Lemma 3.12.
+//!
+//! Peel columns left to right: at column `j` (0-indexed) the residual
+//! (after subtracting the already-extracted bases) restricted to rows
+//! `j..n` is either zero — column `j` follows the diagonal pattern set by
+//! earlier columns, no new basis — or non-zero, in which case it *is* the
+//! next basis vector, with window `m = n − j`. The number of non-zero
+//! residual columns is exactly the paper's unique `k`.
+
+use super::{ConvBasis, KConvBasis};
+use crate::tensor::Matrix;
+
+/// Decompose a lower-triangular matrix into its exact k-conv basis.
+///
+/// `tol` treats |residual| ≤ tol as zero (pass `0.0` for the literal
+/// lemma; floating-point inputs want something like `1e-12`).
+///
+/// Panics if `h` is not square. Upper-triangular entries are ignored
+/// (the decomposition only represents the lower triangle — callers
+/// should pass a lower-triangular matrix; `debug_assert`ed).
+pub fn decompose_exact(h: &Matrix, tol: f64) -> KConvBasis {
+    let n = h.rows();
+    assert_eq!(h.cols(), n, "decompose_exact requires a square matrix");
+    #[cfg(debug_assertions)]
+    for i in 0..n {
+        for j in i + 1..n {
+            debug_assert!(
+                h[(i, j)].abs() <= tol.max(0.0),
+                "decompose_exact expects a lower-triangular matrix"
+            );
+        }
+    }
+
+    let mut terms: Vec<ConvBasis> = Vec::new();
+    // cum[t] = Σ over extracted bases of b[t] — the value the existing
+    // bases predict for diagonal offset t at the current column.
+    let mut cum = vec![0.0; n];
+    for j in 0..n {
+        // Residual of column j, rows j..n, against the prediction.
+        let mut best: f64 = 0.0;
+        for i in j..n {
+            best = best.max((h[(i, j)] - cum[i - j]).abs());
+        }
+        if best <= tol {
+            continue;
+        }
+        let mut b = vec![0.0; n];
+        let m = n - j;
+        for i in j..n {
+            b[i - j] = h[(i, j)] - cum[i - j];
+        }
+        for t in 0..m {
+            cum[t] += b[t];
+        }
+        terms.push(ConvBasis { b, m });
+    }
+    KConvBasis::new(n, terms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    #[test]
+    fn roundtrip_random_basis() {
+        let mut rng = Rng::seeded(71);
+        let n = 24;
+        let ms = [24usize, 15, 8, 3];
+        let terms: Vec<ConvBasis> = ms
+            .iter()
+            .map(|&m| {
+                let mut b = rng.randn_vec(n);
+                // Zero the ignored tail so equality is exact.
+                for t in b.iter_mut().skip(m) {
+                    *t = 0.0;
+                }
+                ConvBasis { b, m }
+            })
+            .collect();
+        let basis = KConvBasis::new(n, terms);
+        let h = basis.to_dense();
+        let rec = decompose_exact(&h, 1e-10);
+        assert_eq!(rec.k(), 4, "minimal k recovered");
+        assert!(max_abs_diff(&rec.to_dense(), &h) < 1e-9);
+        // And the windows match.
+        let ms_rec: Vec<usize> = rec.terms().iter().map(|t| t.m).collect();
+        assert_eq!(ms_rec, ms.to_vec());
+    }
+
+    #[test]
+    fn pure_conv_matrix_is_1_conv() {
+        let mut rng = Rng::seeded(72);
+        let n = 16;
+        let a = rng.randn_vec(n);
+        let h = crate::conv::ConvMatrix::new(a).to_dense();
+        let rec = decompose_exact(&h, 1e-12);
+        assert_eq!(rec.k(), 1);
+    }
+
+    #[test]
+    fn all_ones_lower_triangular_is_1_conv() {
+        // The footnote-1 example: all-ones lower triangle has k = 1.
+        let n = 12;
+        let h = Matrix::ones(n, n).tril();
+        let rec = decompose_exact(&h, 0.0);
+        assert_eq!(rec.k(), 1);
+        assert!(max_abs_diff(&rec.to_dense(), &h) < 1e-12);
+    }
+
+    #[test]
+    fn generic_lower_triangular_is_n_conv() {
+        // A generic lower-triangular matrix needs k = n.
+        let mut rng = Rng::seeded(73);
+        let n = 10;
+        let h = Matrix::randn(n, n, &mut rng).tril();
+        let rec = decompose_exact(&h, 1e-12);
+        assert_eq!(rec.k(), n);
+        assert!(max_abs_diff(&rec.to_dense(), &h) < 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix_is_0_conv() {
+        // (Lemma 3.12 excludes the zero matrix; we return k = 0.)
+        let rec = decompose_exact(&Matrix::zeros(5, 5), 0.0);
+        assert_eq!(rec.k(), 0);
+    }
+
+    #[test]
+    fn k_is_minimal_for_figure2_structure() {
+        // Figure 2: 3 bases with onsets at columns 0, 2, 4 of a 6×6.
+        let n = 6;
+        let t1 = ConvBasis { b: vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0], m: 6 };
+        let t2 = ConvBasis { b: vec![2.0, 2.0, 2.0, 2.0, 0.0, 0.0], m: 4 };
+        let t3 = ConvBasis { b: vec![3.0, 3.0, 0.0, 0.0, 0.0, 0.0], m: 2 };
+        let h = KConvBasis::new(n, vec![t1, t2, t3]).to_dense();
+        let rec = decompose_exact(&h, 0.0);
+        assert_eq!(rec.k(), 3);
+    }
+}

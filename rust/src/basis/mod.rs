@@ -1,0 +1,363 @@
+//! The k-conv basis system (§3.2, §4, Appendix B).
+//!
+//! * [`KConvBasis`] — `H = Σ_{r∈[k]} conv(b_r, m_r)` with
+//!   `n ≥ m_1 > m_2 > … > m_k ≥ 1` (Definition 3.11).
+//! * [`decompose_exact`] — the constructive proof of Lemma 3.12: any
+//!   non-zero lower-triangular matrix has a unique k-conv basis.
+//! * [`exp_transform`] — Lemma B.16: turn the pre-softmax basis of
+//!   `H = M ∘ (QKᵀ)` into the post-`exp` basis of `M ∘ exp(QKᵀ)` via
+//!   the telescoping identity.
+//! * [`recover`] (in [`recover`](self::recover)) — Algorithm 2 + the
+//!   binary search of Algorithm 3.
+
+mod decompose;
+mod recover_impl;
+
+pub use decompose::decompose_exact;
+pub use recover_impl::{
+    recover, recover_from_oracle, recover_strided, ColumnOracle, DenseColumnOracle,
+    QkColumnOracle, RecoverConfig, RecoverError, RecoverStats,
+};
+
+use crate::conv::sub_conv_apply_into;
+use crate::fft::FftPlanner;
+use crate::tensor::{exp_vec, sub_vec, Matrix};
+
+/// One basis element: the pair `(b, m)` defining `conv(b, m)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvBasis {
+    /// Defining vector `b ∈ Rⁿ` (entries beyond `m` are ignored by the
+    /// sub-convolution but kept so bases compose with plain vector adds).
+    pub b: Vec<f64>,
+    /// Window size `m ∈ [1, n]`.
+    pub m: usize,
+}
+
+/// A k-conv basis: `Σ_r conv(b_r, m_r)` with strictly decreasing `m_r`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KConvBasis {
+    terms: Vec<ConvBasis>,
+    n: usize,
+}
+
+impl KConvBasis {
+    /// Build from terms; validates Definition 3.11's ordering constraint
+    /// `n ≥ m_1 > m_2 > … > m_k ≥ 1`.
+    pub fn new(n: usize, terms: Vec<ConvBasis>) -> Self {
+        for t in &terms {
+            assert_eq!(t.b.len(), n, "basis vector length must equal n");
+            assert!(t.m >= 1 && t.m <= n, "m out of range");
+        }
+        for w in terms.windows(2) {
+            assert!(w[0].m > w[1].m, "window sizes must be strictly decreasing");
+        }
+        KConvBasis { terms, n }
+    }
+
+    pub fn empty(n: usize) -> Self {
+        KConvBasis { terms: Vec::new(), n }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of basis elements `k`.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.terms.len()
+    }
+
+    #[inline]
+    pub fn terms(&self) -> &[ConvBasis] {
+        &self.terms
+    }
+
+    /// Memory footprint in floats — the Appendix A claim (`O(kn)`).
+    pub fn memory_floats(&self) -> usize {
+        self.terms.iter().map(|t| t.b.len()).sum()
+    }
+
+    /// Entry `(i, j)` of the composed matrix (0-indexed; oracle use).
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        if i < j {
+            return 0.0;
+        }
+        let n = self.n;
+        let mut s = 0.0;
+        for t in &self.terms {
+            if j >= n - t.m {
+                s += t.b[i - j];
+            } else {
+                // Terms are sorted by decreasing m: once one misses, all
+                // later (smaller-m) terms miss too.
+                break;
+            }
+        }
+        s
+    }
+
+    /// Dense composition (tests/oracles only — O(n²)).
+    pub fn to_dense(&self) -> Matrix {
+        Matrix::from_fn(self.n, self.n, |i, j| self.entry(i, j))
+    }
+
+    /// `(Σ_r conv(b_r, m_r)) · x` via FFT — `O(k n log n)` (Claim 3.10).
+    pub fn apply(&self, planner: &mut FftPlanner, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut out = vec![0.0; self.n];
+        for t in &self.terms {
+            sub_conv_apply_into(planner, &t.b, t.m, x, &mut out);
+        }
+        out
+    }
+
+    /// Row sums `(Σ_r conv(b_r, m_r)) · 1_n` in closed form: row `n−m+i`
+    /// of `conv(b, m)·1` is the prefix sum `Σ_{j ≤ i} b_j`.
+    ///
+    /// `O(k n)` — strictly cheaper than the FFT route Algorithm 1 line 3
+    /// describes; used for the normalizer `D̃`. (§Perf: “rowsums via
+    /// prefix sums”.)
+    pub fn row_sums(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut out = vec![0.0; n];
+        for t in &self.terms {
+            let off = n - t.m;
+            let mut prefix = 0.0;
+            for i in 0..t.m {
+                prefix += t.b[i];
+                out[off + i] += prefix;
+            }
+        }
+        out
+    }
+
+    /// Apply to each column of a matrix: `(Σ_r conv(b_r,m_r)) · V`,
+    /// `O(k·d·n log n)` — the Algorithm 1 line 4 workhorse.
+    ///
+    /// §Perf (EXPERIMENTS.md §Perf L3-1): per basis term the kernel
+    /// spectrum is transformed **once** ([`KernelSpectrum`]) and two
+    /// real columns of V share each complex transform, cutting the
+    /// transform count per basis from `2d` to `d + 1` vs the naive
+    /// per-column `linear_convolution` loop (kept as
+    /// [`Self::apply_matrix_percolumn`] for the ablation bench).
+    pub fn apply_matrix(&self, planner: &mut FftPlanner, v: &Matrix) -> Matrix {
+        assert_eq!(v.rows(), self.n);
+        let n = self.n;
+        let d = v.cols();
+        let mut out = Matrix::zeros(n, d);
+        // Column cache: extracting columns once, not per basis.
+        let cols: Vec<Vec<f64>> = (0..d).map(|j| v.col(j)).collect();
+        let mut ycol = vec![vec![0.0; n]; d];
+        let mut scratch: Vec<crate::fft::Complex> = Vec::new();
+        let mut y1 = vec![0.0; n];
+        let mut y2 = vec![0.0; n];
+        for t in &self.terms {
+            let m = t.m;
+            let off = n - m;
+            let spec = crate::fft::KernelSpectrum::new(planner, &t.b[..m], m);
+            scratch.resize(spec.fft_len(), crate::fft::Complex::zero());
+            let mut j = 0;
+            while j + 1 < d {
+                spec.conv_pair_into(
+                    &cols[j][off..],
+                    &cols[j + 1][off..],
+                    &mut scratch[..spec.fft_len()],
+                    &mut y1[..m],
+                    &mut y2[..m],
+                );
+                for i in 0..m {
+                    ycol[j][off + i] += y1[i];
+                    ycol[j + 1][off + i] += y2[i];
+                }
+                j += 2;
+            }
+            if j < d {
+                let y = spec.conv_one(&cols[j][off..], m);
+                for i in 0..m {
+                    ycol[j][off + i] += y[i];
+                }
+            }
+        }
+        for (j, y) in ycol.iter().enumerate() {
+            out.set_col(j, y);
+        }
+        out
+    }
+
+    /// Pre-§Perf per-column apply (ablation baseline; see
+    /// `benches/ablations.rs` §6).
+    pub fn apply_matrix_percolumn(&self, planner: &mut FftPlanner, v: &Matrix) -> Matrix {
+        assert_eq!(v.rows(), self.n);
+        let d = v.cols();
+        let mut out = Matrix::zeros(self.n, d);
+        for j in 0..d {
+            let col = v.col(j);
+            let y = self.apply(planner, &col);
+            out.set_col(j, &y);
+        }
+        out
+    }
+}
+
+/// Lemma B.16 (+ the `m₁ = n` completion): convert the k-conv basis of
+/// the **pre-softmax** matrix `H = M ∘ (QKᵀ)` into a basis of
+/// `M ∘ exp(H)`.
+///
+/// `b̃_1 = exp(b_1)` and `b̃_r = exp(Σ_{l≤r} b_l) − exp(Σ_{l≤r−1} b_l)`
+/// for `r ≥ 2` — a telescoping sum, so positions covered by bases
+/// `1..ℓ` get exactly `exp(H_{ij})`.
+///
+/// The lemma implicitly assumes `m₁ = n` (every masked position is
+/// covered by the first basis). When the recovered basis has `m₁ < n`
+/// the uncovered positions of `M ∘ exp(H)` equal `exp(0) = 1`, so we
+/// *complete* the basis with a prepended zero term of window `n`, whose
+/// transformed vector is `exp(0)·1 = 1_n`. Pass `complete = false` to get
+/// the literal lemma statement.
+pub fn exp_transform(basis: &KConvBasis, complete: bool) -> KConvBasis {
+    let n = basis.n();
+    let mut pre: Vec<ConvBasis> = Vec::with_capacity(basis.k() + 1);
+    if complete && basis.terms().first().map(|t| t.m < n).unwrap_or(true) {
+        pre.push(ConvBasis { b: vec![0.0; n], m: n });
+    }
+    pre.extend(basis.terms().iter().cloned());
+
+    let mut out = Vec::with_capacity(pre.len());
+    let mut cum = vec![0.0; n];
+    for (r, t) in pre.iter().enumerate() {
+        let prev_exp = if r == 0 { None } else { Some(exp_vec(&cum)) };
+        for (c, b) in cum.iter_mut().zip(&t.b) {
+            *c += b;
+        }
+        let cur_exp = exp_vec(&cum);
+        let b_tilde = match prev_exp {
+            None => cur_exp, // b̃₁ = exp(b₁)
+            Some(prev) => sub_vec(&cur_exp, &prev),
+        };
+        out.push(ConvBasis { b: b_tilde, m: t.m });
+    }
+    KConvBasis::new(n, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Mask;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    fn random_basis(n: usize, ms: &[usize], rng: &mut Rng) -> KConvBasis {
+        let terms = ms
+            .iter()
+            .map(|&m| ConvBasis { b: rng.randn_vec(n), m })
+            .collect();
+        KConvBasis::new(n, terms)
+    }
+
+    #[test]
+    fn entry_matches_dense() {
+        let mut rng = Rng::seeded(61);
+        let basis = random_basis(16, &[16, 9, 3], &mut rng);
+        let d = basis.to_dense();
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(basis.entry(i, j), d[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn figure_2_three_conv_composition() {
+        // The Figure 2 structure: red = basis 1 everywhere it reaches,
+        // purple = basis 1 + basis 2, dark green = all three.
+        let n = 6;
+        let b1 = ConvBasis { b: vec![1.0; n], m: 6 }; // red
+        let b2 = ConvBasis { b: vec![10.0; n], m: 4 }; // blue
+        let b3 = ConvBasis { b: vec![100.0; n], m: 2 }; // green
+        let h = KConvBasis::new(n, vec![b1, b2, b3]).to_dense();
+        assert_eq!(h[(0, 0)], 1.0); // red-only region (cols 0..2)
+        assert_eq!(h[(3, 2)], 11.0); // red+blue region (cols 2..4)
+        assert_eq!(h[(5, 4)], 111.0); // all three (cols 4..)
+        assert_eq!(h[(0, 5)], 0.0); // upper triangle
+    }
+
+    #[test]
+    fn apply_matches_dense_matvec() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(62);
+        let basis = random_basis(31, &[31, 17, 5, 2], &mut rng);
+        let x = rng.randn_vec(31);
+        let fast = basis.apply(&mut p, &x);
+        let dense = basis.to_dense().matvec(&x);
+        for (u, v) in fast.iter().zip(&dense) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn row_sums_match_apply_ones() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(63);
+        let basis = random_basis(24, &[20, 10, 1], &mut rng);
+        let ones = vec![1.0; 24];
+        let via_fft = basis.apply(&mut p, &ones);
+        let closed = basis.row_sums();
+        for (u, v) in via_fft.iter().zip(&closed) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn apply_matrix_matches_dense() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(64);
+        let basis = random_basis(20, &[20, 7], &mut rng);
+        let v = Matrix::randn(20, 5, &mut rng);
+        let fast = basis.apply_matrix(&mut p, &v);
+        let dense = basis.to_dense().matmul(&v);
+        assert!(max_abs_diff(&fast, &dense) < 1e-8);
+    }
+
+    #[test]
+    fn exp_transform_full_window() {
+        // m1 = n: literal Lemma B.16.
+        let mut rng = Rng::seeded(65);
+        let n = 12;
+        let basis = random_basis(n, &[12, 6, 2], &mut rng);
+        let h = basis.to_dense();
+        let transformed = exp_transform(&basis, true);
+        assert_eq!(transformed.k(), 3); // no completion term needed
+        let want = Mask::causal(n).apply(&h.map(f64::exp));
+        let got = transformed.to_dense();
+        assert!(max_abs_diff(&want, &got) < 1e-10);
+    }
+
+    #[test]
+    fn exp_transform_completion_when_m1_lt_n() {
+        let mut rng = Rng::seeded(66);
+        let n = 10;
+        let basis = random_basis(n, &[6, 3], &mut rng);
+        let h = basis.to_dense();
+        let transformed = exp_transform(&basis, true);
+        assert_eq!(transformed.k(), 3); // zero-basis prepended
+        let want = Mask::causal(n).apply(&h.map(f64::exp));
+        let got = transformed.to_dense();
+        assert!(max_abs_diff(&want, &got) < 1e-10);
+    }
+
+    #[test]
+    fn memory_is_kn() {
+        let mut rng = Rng::seeded(67);
+        let basis = random_basis(64, &[64, 32, 16], &mut rng);
+        assert_eq!(basis.memory_floats(), 3 * 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly decreasing")]
+    fn rejects_non_decreasing_windows() {
+        let n = 4;
+        let t1 = ConvBasis { b: vec![0.0; n], m: 2 };
+        let t2 = ConvBasis { b: vec![0.0; n], m: 2 };
+        let _ = KConvBasis::new(n, vec![t1, t2]);
+    }
+}

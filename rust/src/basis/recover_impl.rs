@@ -1,0 +1,457 @@
+//! Algorithm 2 (`Recover`) and Algorithm 3 (binary `Search`).
+//!
+//! The algorithms never materialize `H̃ = M ∘ (QKᵀ)`; they probe single
+//! columns through a [`ColumnOracle`] (`H̃_j = M_j ∘ (Q·(Kᵀ)_j)`,
+//! Lemma B.15, `O(nd)` per probe). Total work: `O(k·log n)` probes →
+//! `O(k·n·d·log n)` (Lemma B.20's running-time claim).
+
+use super::{ConvBasis, KConvBasis};
+use crate::attention::Mask;
+use crate::tensor::Matrix;
+use std::cell::Cell;
+
+/// Lazy access to columns of `H̃ = M ∘ (QKᵀ)`.
+pub trait ColumnOracle {
+    /// Sequence length `n`.
+    fn n(&self) -> usize;
+    /// Column `j` (0-indexed), as a length-n vector with masked entries
+    /// zeroed.
+    fn column(&self, j: usize) -> Vec<f64>;
+}
+
+/// The production oracle: `H̃_j = M_j ∘ (Q · (Kᵀ)_j)` (Lemma B.15).
+pub struct QkColumnOracle<'a> {
+    q: &'a Matrix,
+    k: &'a Matrix,
+    mask: &'a Mask,
+    probes: Cell<usize>,
+}
+
+impl<'a> QkColumnOracle<'a> {
+    pub fn new(q: &'a Matrix, k: &'a Matrix, mask: &'a Mask) -> Self {
+        assert_eq!(q.rows(), k.rows(), "Q and K must share n");
+        assert_eq!(q.cols(), k.cols(), "Q and K must share d");
+        assert_eq!(mask.n(), q.rows(), "mask size must equal n");
+        QkColumnOracle { q, k, mask, probes: Cell::new(0) }
+    }
+
+    /// Number of O(nd) column probes issued (observability).
+    pub fn probes(&self) -> usize {
+        self.probes.get()
+    }
+}
+
+impl ColumnOracle for QkColumnOracle<'_> {
+    fn n(&self) -> usize {
+        self.q.rows()
+    }
+
+    fn column(&self, j: usize) -> Vec<f64> {
+        self.probes.set(self.probes.get() + 1);
+        let kj = self.k.row(j);
+        let n = self.n();
+        let mut col = vec![0.0; n];
+        // §Perf (EXPERIMENTS.md §Perf L3-2): the causal fast path skips
+        // the masked prefix entirely (no per-row branch), turning the
+        // probe into a contiguous GEMV over rows j..n.
+        if matches!(self.mask.kind(), crate::attention::MaskKind::Causal) {
+            for (i, slot) in col.iter_mut().enumerate().skip(j) {
+                *slot = crate::tensor::dot(self.q.row(i), kj);
+            }
+        } else {
+            for (i, slot) in col.iter_mut().enumerate() {
+                // Fused mask+dot: masked entries skip the GEMV row.
+                if self.mask.entry(i, j) {
+                    *slot = crate::tensor::dot(self.q.row(i), kj);
+                }
+            }
+        }
+        col
+    }
+}
+
+/// Test oracle over a dense, already-masked matrix.
+pub struct DenseColumnOracle<'a>(pub &'a Matrix);
+
+impl ColumnOracle for DenseColumnOracle<'_> {
+    fn n(&self) -> usize {
+        self.0.rows()
+    }
+
+    fn column(&self, j: usize) -> Vec<f64> {
+        self.0.col(j)
+    }
+}
+
+/// Hyper-parameters of Algorithms 1–3 (`k, T, δ, ε` in the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoverConfig {
+    /// Maximum number of bases to recover (`k`).
+    pub k_max: usize,
+    /// Probe window length (`T`).
+    pub t: usize,
+    /// Non-degeneracy threshold (`δ`, Definition 4.1).
+    pub delta: f64,
+    /// Noise level (`ε`, Definition 4.2; requires `ε ≤ δ/(5T)` for the
+    /// binary-search separation argument).
+    pub eps: f64,
+}
+
+impl RecoverConfig {
+    /// Exact-recovery configuration (Corollary 4.5: `k=n, T=1, δ=ε=0`).
+    /// With `δ = 0` every column qualifies, so every column is peeled
+    /// exactly — `O(n²d)` worst case, zero error.
+    pub fn exact(n: usize) -> Self {
+        RecoverConfig { k_max: n, t: 1, delta: 0.0, eps: 0.0 }
+    }
+
+    /// The Definition 4.2 admissibility condition `ε ≤ δ / (5T)`.
+    pub fn is_admissible(&self) -> bool {
+        self.t >= 1 && self.eps <= self.delta / (5.0 * self.t as f64)
+    }
+
+    /// The binary-search acceptance threshold `δ − 2Tε` (Algorithm 3
+    /// line 8).
+    pub fn threshold(&self) -> f64 {
+        self.delta - 2.0 * self.t as f64 * self.eps
+    }
+}
+
+/// Recovery failure modes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecoverError {
+    /// `T` must satisfy `1 ≤ T ≤ n`.
+    BadWindow { t: usize, n: usize },
+    /// `k_max` must be ≥ 1.
+    ZeroK,
+    /// `ε > δ/(5T)`: the separation argument of Lemma B.19 fails and the
+    /// binary search may mis-locate onsets.
+    Inadmissible { delta: f64, eps: f64, t: usize },
+}
+
+impl std::fmt::Display for RecoverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecoverError::BadWindow { t, n } => {
+                write!(f, "window T={t} out of range for n={n}")
+            }
+            RecoverError::ZeroK => write!(f, "k_max must be at least 1"),
+            RecoverError::Inadmissible { delta, eps, t } => write!(
+                f,
+                "inadmissible config: eps={eps} > delta/(5T) = {}",
+                delta / (5.0 * *t as f64)
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RecoverError {}
+
+/// Observability counters for a recovery run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecoverStats {
+    /// Columns probed (each probe is O(nd) through [`QkColumnOracle`]).
+    pub columns_probed: usize,
+    /// Bases found (`≤ k_max`).
+    pub bases_found: usize,
+    /// Binary-search iterations across all bases.
+    pub search_steps: usize,
+}
+
+/// Algorithm 2: recover the (pre-softmax) k-conv basis of `H̃` through a
+/// column oracle. Returns the basis (windows strictly decreasing) and
+/// run statistics.
+pub fn recover_from_oracle<O: ColumnOracle>(
+    oracle: &O,
+    cfg: &RecoverConfig,
+) -> Result<(KConvBasis, RecoverStats), RecoverError> {
+    let n = oracle.n();
+    if cfg.t < 1 || cfg.t > n {
+        return Err(RecoverError::BadWindow { t: cfg.t, n });
+    }
+    if cfg.k_max == 0 {
+        return Err(RecoverError::ZeroK);
+    }
+    if !cfg.is_admissible() {
+        return Err(RecoverError::Inadmissible { delta: cfg.delta, eps: cfg.eps, t: cfg.t });
+    }
+
+    let mut stats = RecoverStats::default();
+    let threshold = cfg.threshold();
+    let t_win = cfg.t;
+    let hi = n - t_win; // largest probe-able onset column (0-indexed)
+
+    // α_j = ‖(H̃_j)_{j:j+T−1} − v‖₁ ≥ δ − 2Tε ⇔ a basis onset is at or
+    // before column j (Lemma B.19 Part 2).
+    let probe = |j: usize, v: &[f64], stats: &mut RecoverStats| -> bool {
+        stats.columns_probed += 1;
+        let col = oracle.column(j);
+        let mut alpha = 0.0;
+        for i in 0..t_win {
+            alpha += (col[j + i] - v[i]).abs();
+        }
+        alpha >= threshold
+    };
+
+    let mut v = vec![0.0; t_win]; // Σ (b'_r)_{1:T}
+    let mut u = vec![0.0; n]; // Σ b'_r
+    let mut terms: Vec<ConvBasis> = Vec::new();
+    let mut lo = 0usize;
+
+    while terms.len() < cfg.k_max && lo <= hi {
+        // Algorithm 3: binary search for the smallest qualifying column.
+        let (mut a, mut b) = (lo, hi);
+        while a < b {
+            stats.search_steps += 1;
+            let mid = (a + b) / 2;
+            if probe(mid, &v, &mut stats) {
+                b = mid;
+            } else {
+                a = mid + 1;
+            }
+        }
+        if !probe(a, &v, &mut stats) {
+            break; // no further basis (Theorem 4.3 flexibility: fewer than k_max)
+        }
+        let s = a;
+        let m = n - s;
+        // Algorithm 2 lines 7–8: peel the basis vector off column s.
+        let col = oracle.column(s);
+        stats.columns_probed += 1;
+        let mut bvec = vec![0.0; n];
+        for i in 0..m {
+            bvec[i] = col[s + i] - u[i];
+        }
+        for i in 0..t_win {
+            v[i] += bvec[i];
+        }
+        for (ui, bi) in u.iter_mut().zip(&bvec) {
+            *ui += bi;
+        }
+        terms.push(ConvBasis { b: bvec, m });
+        stats.bases_found += 1;
+        lo = s + 1;
+    }
+
+    Ok((KConvBasis::new(n, terms), stats))
+}
+
+
+/// Non-adaptive **strided** recovery: peel the basis at `k` uniformly
+/// spaced onset columns `j_r = ⌊r·n/k⌋` (windows `m_r = n − j_r`).
+///
+/// Theorem 4.3 guarantees *some* `(k, T, δ, ε)` makes the adaptive
+/// search exact, but real attention matrices are only approximately
+/// conv-structured and give no usable δ-gap; the paper's Section 7
+/// protocol ("incrementally increase the number of conv basis k",
+/// k = n reproducing the exact output) corresponds to this uniform
+/// schedule. Cost: `k` column probes, `O(k·n·d)` — no binary search.
+pub fn recover_strided<O: ColumnOracle>(oracle: &O, k: usize) -> (KConvBasis, RecoverStats) {
+    let n = oracle.n();
+    let k = k.clamp(1, n);
+    let mut stats = RecoverStats::default();
+    let mut u = vec![0.0; n];
+    let mut terms: Vec<ConvBasis> = Vec::with_capacity(k);
+    let mut prev_onset = usize::MAX;
+    for r in 0..k {
+        let s = r * n / k;
+        if s == prev_onset {
+            continue; // duplicate onset when k ∤ n
+        }
+        prev_onset = s;
+        let col = oracle.column(s);
+        stats.columns_probed += 1;
+        let m = n - s;
+        let mut b = vec![0.0; n];
+        let mut nonzero = false;
+        for i in 0..m {
+            b[i] = col[s + i] - u[i];
+            nonzero |= b[i] != 0.0;
+        }
+        for (ui, bi) in u.iter_mut().zip(&b) {
+            *ui += bi;
+        }
+        if nonzero || r == 0 {
+            terms.push(ConvBasis { b, m });
+            stats.bases_found += 1;
+        }
+    }
+    (KConvBasis::new(n, terms), stats)
+}
+
+/// Convenience wrapper: recover from `Q`, `K` and a mask.
+pub fn recover(
+    q: &Matrix,
+    k: &Matrix,
+    mask: &Mask,
+    cfg: &RecoverConfig,
+) -> Result<(KConvBasis, RecoverStats), RecoverError> {
+    let oracle = QkColumnOracle::new(q, k, mask);
+    recover_from_oracle(&oracle, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    /// Build a non-degenerate basis: each b has |b[0..T]| entries ≥ δ of
+    /// one sign, so partial sums can't cancel (Definition 4.1).
+    fn nondegenerate_basis(n: usize, ms: &[usize], t: usize, rng: &mut Rng) -> KConvBasis {
+        let terms = ms
+            .iter()
+            .map(|&m| {
+                let mut b = rng.randn_vec(n);
+                for x in b.iter_mut().take(t) {
+                    *x = 1.0 + rng.uniform(); // all positive in the window
+                }
+                for x in b.iter_mut().skip(m) {
+                    *x = 0.0;
+                }
+                ConvBasis { b, m }
+            })
+            .collect();
+        KConvBasis::new(n, terms)
+    }
+
+    #[test]
+    fn recovers_clean_basis_exactly() {
+        let mut rng = Rng::seeded(81);
+        let n = 48;
+        let ms = [48usize, 30, 12, 5];
+        let t = 4;
+        let basis = nondegenerate_basis(n, &ms, t, &mut rng);
+        let h = basis.to_dense();
+        let oracle = DenseColumnOracle(&h);
+        let cfg = RecoverConfig { k_max: 8, t, delta: 0.5, eps: 1e-9 };
+        let (rec, stats) = recover_from_oracle(&oracle, &cfg).unwrap();
+        assert_eq!(rec.k(), 4);
+        assert_eq!(stats.bases_found, 4);
+        let ms_rec: Vec<usize> = rec.terms().iter().map(|x| x.m).collect();
+        assert_eq!(ms_rec, ms.to_vec());
+        assert!(max_abs_diff(&rec.to_dense(), &h) < 1e-9);
+    }
+
+    #[test]
+    fn recovery_is_sublinear_in_probes() {
+        let mut rng = Rng::seeded(82);
+        let n = 512;
+        let ms = [512usize, 200, 77];
+        let t = 4;
+        let basis = nondegenerate_basis(n, &ms, t, &mut rng);
+        let h = basis.to_dense();
+        let oracle = DenseColumnOracle(&h);
+        let cfg = RecoverConfig { k_max: 4, t, delta: 0.5, eps: 1e-9 };
+        let (rec, stats) = recover_from_oracle(&oracle, &cfg).unwrap();
+        assert_eq!(rec.k(), 3);
+        // O(k log n) probes, not O(n): generous bound 4·k·(log2 n + 2).
+        let bound = 4 * 4 * ((n as f64).log2() as usize + 2);
+        assert!(
+            stats.columns_probed < bound,
+            "probed {} ≥ bound {}",
+            stats.columns_probed,
+            bound
+        );
+    }
+
+    #[test]
+    fn tolerates_bounded_noise() {
+        // Lemma B.19 parts 3–4: with ‖R‖∞ ≤ ε, recovered partial sums are
+        // within Tε (window) / ε (pointwise).
+        let mut rng = Rng::seeded(83);
+        let n = 64;
+        let t = 4;
+        let ms = [64usize, 40, 13];
+        let basis = nondegenerate_basis(n, &ms, t, &mut rng);
+        let mut h = basis.to_dense();
+        let eps = 1e-3;
+        // Add lower-triangular noise bounded by eps.
+        for i in 0..n {
+            for j in 0..=i {
+                h[(i, j)] += (rng.uniform() * 2.0 - 1.0) * eps;
+            }
+        }
+        let oracle = DenseColumnOracle(&h);
+        let delta = 1.0;
+        let cfg = RecoverConfig { k_max: 4, t, delta, eps };
+        assert!(cfg.is_admissible());
+        let (rec, _) = recover_from_oracle(&oracle, &cfg).unwrap();
+        assert_eq!(rec.k(), 3);
+        let ms_rec: Vec<usize> = rec.terms().iter().map(|x| x.m).collect();
+        assert_eq!(ms_rec, ms.to_vec());
+        // Part 4 invariant: |Σ b'_r − Σ b_r| ≤ ε pointwise, so the
+        // composed matrices differ by ≤ 2ε (H̃ vs H ≤ ε, H̃ vs H' ≤ ε).
+        assert!(max_abs_diff(&rec.to_dense(), &basis.to_dense()) <= 2.0 * eps + 1e-12);
+    }
+
+    #[test]
+    fn stops_when_no_more_bases() {
+        let mut rng = Rng::seeded(84);
+        let n = 32;
+        let t = 2;
+        let basis = nondegenerate_basis(n, &[32], t, &mut rng);
+        let h = basis.to_dense();
+        let oracle = DenseColumnOracle(&h);
+        let cfg = RecoverConfig { k_max: 10, t, delta: 0.5, eps: 0.0 };
+        let (rec, _) = recover_from_oracle(&oracle, &cfg).unwrap();
+        assert_eq!(rec.k(), 1);
+    }
+
+    #[test]
+    fn zero_matrix_recovers_empty() {
+        let h = Matrix::zeros(16, 16);
+        let oracle = DenseColumnOracle(&h);
+        let cfg = RecoverConfig { k_max: 4, t: 2, delta: 0.5, eps: 0.0 };
+        let (rec, _) = recover_from_oracle(&oracle, &cfg).unwrap();
+        assert_eq!(rec.k(), 0);
+    }
+
+    #[test]
+    fn config_validation() {
+        let h = Matrix::zeros(8, 8);
+        let oracle = DenseColumnOracle(&h);
+        let bad_t = RecoverConfig { k_max: 1, t: 0, delta: 1.0, eps: 0.0 };
+        assert!(matches!(
+            recover_from_oracle(&oracle, &bad_t),
+            Err(RecoverError::BadWindow { .. })
+        ));
+        let bad_k = RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 };
+        assert!(matches!(recover_from_oracle(&oracle, &bad_k), Err(RecoverError::ZeroK)));
+        let bad_eps = RecoverConfig { k_max: 1, t: 2, delta: 1.0, eps: 0.5 };
+        assert!(matches!(
+            recover_from_oracle(&oracle, &bad_eps),
+            Err(RecoverError::Inadmissible { .. })
+        ));
+    }
+
+    #[test]
+    fn qk_oracle_matches_dense() {
+        let mut rng = Rng::seeded(85);
+        let n = 20;
+        let d = 6;
+        let q = Matrix::randn(n, d, &mut rng);
+        let k = Matrix::randn(n, d, &mut rng);
+        let mask = Mask::causal(n);
+        let dense = mask.apply(&q.matmul(&k.transpose()));
+        let oracle = QkColumnOracle::new(&q, &k, &mask);
+        for j in [0usize, 5, 19] {
+            let col = oracle.column(j);
+            for i in 0..n {
+                assert!((col[i] - dense[(i, j)]).abs() < 1e-10);
+            }
+        }
+        assert_eq!(oracle.probes(), 3);
+    }
+
+    #[test]
+    fn exact_config_recovers_any_lower_triangular() {
+        // Corollary 4.5: k=n, T=1, δ→0, ε=0 recovers exactly.
+        let mut rng = Rng::seeded(86);
+        let n = 24;
+        let h = Matrix::randn(n, n, &mut rng).tril();
+        let oracle = DenseColumnOracle(&h);
+        let cfg = RecoverConfig::exact(n);
+        let (rec, _) = recover_from_oracle(&oracle, &cfg).unwrap();
+        assert!(max_abs_diff(&rec.to_dense(), &h) < 1e-9);
+    }
+}

@@ -1,0 +1,122 @@
+//! Appendix B.5 case-study constructions: explicit `Q, K` families
+//! whose `exp(QKᵀ)` is exactly circulant (Lemma B.26) or Toeplitz
+//! (Lemmas B.27 / B.30), verified constructively. These are the
+//! paper's bridge from RoPE-style embeddings to the conv-basis theory —
+//! and the generators behind [`crate::attention::rope::rope_structured_qk`].
+
+use super::{Circulant, Toeplitz};
+use crate::tensor::{Matrix, Rng};
+
+/// Lemma B.26 setup: build `Q, K ∈ R^{n×d}` (d = n here, via an
+/// explicit factorization) such that `(QKᵀ)[i][j] = b[(i−j) mod n]`,
+/// i.e. `QKᵀ = Circ(b)`. Returns `(Q, K)`.
+///
+/// Construction: `Circ(b)` itself factored as `Q = Circ(b)`, `K = I` —
+/// the lemma only requires the *pattern*, not minimal d.
+pub fn circulant_qk(b: &[f64]) -> (Matrix, Matrix) {
+    let n = b.len();
+    let q = Circulant::new(b.to_vec()).to_dense();
+    (q, Matrix::eye(n))
+}
+
+/// Lemma B.26: with `(QKᵀ)[i][j] = b[(i−j) mod n]`,
+/// `exp(QKᵀ) = Circ(exp(b))`.
+pub fn lemma_b26_exp_is_circulant(b: &[f64]) -> (Matrix, Circulant) {
+    let (q, k) = circulant_qk(b);
+    let exp_qk = q.matmul(&k.transpose()).map(f64::exp);
+    let circ = Circulant::new(b.iter().map(|x| x.exp()).collect());
+    (exp_qk, circ)
+}
+
+/// Lemma B.27 setup: `(QKᵀ)[i][j] = b[i−j]` for a length-(2n−1)
+/// generator (indexed −(n−1)..(n−1)) — `QKᵀ = Toep(b)`.
+pub fn toeplitz_qk(n: usize, diag: &[f64]) -> (Matrix, Matrix) {
+    assert_eq!(diag.len(), 2 * n - 1);
+    let q = Toeplitz::new(n, diag.to_vec()).to_dense();
+    (q, Matrix::eye(n))
+}
+
+/// Lemma B.27: `exp(QKᵀ) = Toep(exp(b))`.
+pub fn lemma_b27_exp_is_toeplitz(n: usize, diag: &[f64]) -> (Matrix, Toeplitz) {
+    let (q, k) = toeplitz_qk(n, diag);
+    let exp_qk = q.matmul(&k.transpose()).map(f64::exp);
+    let toep = Toeplitz::new(n, diag.iter().map(|x| x.exp()).collect());
+    (exp_qk, toep)
+}
+
+/// Lemma B.30 / Assumption B.28: `W_Q W_Kᵀ` PSD with `Z = X·A` rows
+/// satisfying the Lemma B.25 rotation structure ⇒ `QKᵀ = ZZᵀ` Toeplitz.
+/// Returns `(Z, generator g)` with `(ZZᵀ)[i][j] = g[i−j + (n−1)]`.
+pub fn lemma_b30_psd_construction(n: usize, d: usize, rng: &mut Rng) -> (Matrix, Vec<f64>) {
+    let (z, _) = crate::attention::rope::rope_structured_qk(n, d, (d / 2).clamp(1, 3), rng);
+    let gram = z.matmul(&z.transpose());
+    // Extract the generator from the first column/row.
+    let mut g = vec![0.0; 2 * n - 1];
+    for i in 0..n {
+        g[n - 1 + i] = gram[(i, 0)]; // offsets 0..n−1
+        g[n - 1 - i] = gram[(0, i)]; // offsets −(n−1)..0
+    }
+    (z, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::max_abs_diff;
+
+    #[test]
+    fn lemma_b26_holds() {
+        let mut rng = Rng::seeded(601);
+        let b = rng.randn_vec(12);
+        let (exp_qk, circ) = lemma_b26_exp_is_circulant(&b);
+        assert!(max_abs_diff(&exp_qk, &circ.to_dense()) < 1e-10);
+    }
+
+    #[test]
+    fn lemma_b27_holds() {
+        let mut rng = Rng::seeded(602);
+        let n = 9;
+        let diag: Vec<f64> = rng.randn_vec(2 * n - 1).iter().map(|x| x * 0.5).collect();
+        let (exp_qk, toep) = lemma_b27_exp_is_toeplitz(n, &diag);
+        assert!(max_abs_diff(&exp_qk, &toep.to_dense()) < 1e-10);
+    }
+
+    #[test]
+    fn lemma_b30_gram_is_toeplitz() {
+        let mut rng = Rng::seeded(603);
+        let (z, g) = lemma_b30_psd_construction(16, 6, &mut rng);
+        let gram = z.matmul(&z.transpose());
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = g[(i as isize - j as isize + 15) as usize];
+                assert!((gram[(i, j)] - want).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn b26_circulant_attention_is_1conv_after_masking() {
+        // The masked pre-softmax matrix M ∘ Circ(b) decomposes into at
+        // most 2 conv bases (the wrap-around splits once).
+        let mut rng = Rng::seeded(604);
+        let b = rng.randn_vec(10);
+        let (q, k) = circulant_qk(&b);
+        let masked = crate::attention::Mask::causal(10).apply(&q.matmul(&k.transpose()));
+        let basis = crate::basis::decompose_exact(&masked, 1e-10);
+        assert!(basis.k() <= 1, "masked circulant is pure conv: k = {}", basis.k());
+    }
+
+    #[test]
+    fn b27_toeplitz_attention_exact_with_k1() {
+        // Theorem 4.4 end-to-end on the Lemma B.27 family.
+        let mut rng = Rng::seeded(605);
+        let n = 24;
+        let diag: Vec<f64> = rng.randn_vec(2 * n - 1).iter().map(|x| x * 0.3).collect();
+        let (q, k) = toeplitz_qk(n, &diag);
+        let v = Matrix::randn(n, n, &mut rng);
+        let exact =
+            crate::attention::exact_attention(&q, &k, &v, &crate::attention::Mask::causal(n));
+        let out = crate::attention::conv_attention_strided(&q, &k, &v, 1).unwrap();
+        assert!(max_abs_diff(&exact, &out.y) < 1e-9);
+    }
+}

@@ -1,0 +1,253 @@
+//! Toeplitz (Definition B.2) and circulant (Definition B.3) matrices,
+//! with the embedding facts B.6–B.8 used in the proof of Claim 3.7.
+
+use crate::fft::{circular_convolution, FftPlanner};
+use crate::tensor::Matrix;
+
+/// Toeplitz matrix defined by a length-(2n−1) vector `a` indexed
+/// `−(n−1) … (n−1)`: `Toep(a)[i][j] = a[i−j]`.
+///
+/// Storage: `diag[k]` holds `a_{k−(n−1)}`, i.e. `diag` is the paper's
+/// vector read left-to-right (`a_{−(n−1)}, …, a_0, …, a_{n−1}`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Toeplitz {
+    n: usize,
+    diag: Vec<f64>,
+}
+
+impl Toeplitz {
+    /// Build from the paper-ordered vector `a_{−(n−1)} … a_{n−1}`.
+    pub fn new(n: usize, diag: Vec<f64>) -> Self {
+        assert_eq!(diag.len(), 2 * n - 1);
+        Toeplitz { n, diag }
+    }
+
+    /// `a_k` for `k ∈ [−(n−1), n−1]`.
+    #[inline]
+    pub fn coeff(&self, k: isize) -> f64 {
+        self.diag[(k + self.n as isize - 1) as usize]
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        Matrix::from_fn(self.n, self.n, |i, j| self.coeff(i as isize - j as isize))
+    }
+
+    /// Fact B.7: embed into a length-2n circulant and multiply via FFT.
+    pub fn apply(&self, planner: &mut FftPlanner, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let n = self.n;
+        // a' = [a_0, a_1, …, a_{n−1}, 0, a_{−(n−1)}, …, a_{−1}]  (len 2n)
+        let mut a2 = Vec::with_capacity(2 * n);
+        for k in 0..n as isize {
+            a2.push(self.coeff(k));
+        }
+        a2.push(0.0);
+        for k in -(n as isize - 1)..0 {
+            a2.push(self.coeff(k));
+        }
+        let mut x2 = vec![0.0; 2 * n];
+        x2[..n].copy_from_slice(x);
+        let y2 = circular_convolution(planner, &a2, &x2);
+        y2[..n].to_vec()
+    }
+}
+
+/// Circulant matrix (Definition B.3): `Circ(a)[i][j] = a[(i−j) mod n]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Circulant {
+    a: Vec<f64>,
+}
+
+impl Circulant {
+    pub fn new(a: Vec<f64>) -> Self {
+        Circulant { a }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        Matrix::from_fn(n, n, |i, j| self.a[(i + n - j) % n])
+    }
+
+    /// Fact B.8: `Circ(a)·x = F⁻¹ diag(F a) F x` — one FFT-conv.
+    pub fn apply(&self, planner: &mut FftPlanner, x: &[f64]) -> Vec<f64> {
+        circular_convolution(planner, &self.a, x)
+    }
+}
+
+
+/// Residual matrix `Resi(a)` of Fact B.7: the off-diagonal block of the
+/// 2n-circulant embedding of `Toep(a)`. `Resi(a)[i][j] = a'[i−j]` where
+/// the index wraps through the padded circulant (0 on the diagonal,
+/// `a_{n−1}…a_1` above, `a_{−(n−1)}…a_{−1}` below).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Resi {
+    n: usize,
+    diag: Vec<f64>,
+}
+
+impl Resi {
+    /// Build from the same paper-ordered vector as [`Toeplitz::new`].
+    pub fn new(n: usize, diag: Vec<f64>) -> Self {
+        assert_eq!(diag.len(), 2 * n - 1);
+        Resi { n, diag }
+    }
+
+    fn coeff(&self, k: isize) -> f64 {
+        self.diag[(k + self.n as isize - 1) as usize]
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n as isize;
+        Matrix::from_fn(self.n, self.n, |i, j| {
+            let off = i as isize - j as isize;
+            if off == 0 {
+                0.0
+            } else if off < 0 {
+                // Above diagonal: a_{n+off} (wraps from the positive end).
+                self.coeff(n + off)
+            } else {
+                // Below diagonal: a_{off−n}.
+                self.coeff(off - n)
+            }
+        })
+    }
+}
+
+/// Fact B.7, verified constructively: the length-2n circulant built
+/// from `a'' = [a_0..a_{n−1}, 0, a_{−(n−1)}..a_{−1}]` decomposes into
+/// the 2×2 block form `[[Toep(a), Resi(a)], [Resi(a), Toep(a)]]`, so
+/// `Circ(a'')·[x; 0] = [Toep(a)·x; Resi(a)·x]`.
+pub fn fact_b7_embedding(n: usize, diag: &[f64]) -> (Circulant, Toeplitz, Resi) {
+    assert_eq!(diag.len(), 2 * n - 1);
+    let toep = Toeplitz::new(n, diag.to_vec());
+    let resi = Resi::new(n, diag.to_vec());
+    let mut a2 = Vec::with_capacity(2 * n);
+    for k in 0..n as isize {
+        a2.push(toep.coeff(k));
+    }
+    a2.push(0.0);
+    for k in -(n as isize - 1)..0 {
+        a2.push(toep.coeff(k));
+    }
+    (Circulant::new(a2), toep, resi)
+}
+
+/// Claim B.6: `conv(a) = Toep([0_{n−1}; a])` — build the Toeplitz view
+/// of a convolution matrix.
+#[allow(dead_code)]
+pub fn conv_as_toeplitz(a: &[f64]) -> Toeplitz {
+    let n = a.len();
+    let mut diag = vec![0.0; 2 * n - 1];
+    diag[n - 1..].copy_from_slice(a); // a_0 .. a_{n-1} = a, negatives 0
+    Toeplitz::new(n, diag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvMatrix;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn toeplitz_dense_layout() {
+        // n=3, diag = a_{-2},a_{-1},a_0,a_1,a_2 = [9, 8, 1, 2, 3]
+        let t = Toeplitz::new(3, vec![9.0, 8.0, 1.0, 2.0, 3.0]);
+        let d = t.to_dense();
+        let expect = Matrix::from_vec(3, 3, vec![1.0, 8.0, 9.0, 2.0, 1.0, 8.0, 3.0, 2.0, 1.0]);
+        assert_eq!(d, expect);
+    }
+
+    #[test]
+    fn toeplitz_apply_matches_dense() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(51);
+        for &n in &[1usize, 2, 5, 16, 31] {
+            let diag = rng.randn_vec(2 * n - 1);
+            let x = rng.randn_vec(n);
+            let t = Toeplitz::new(n, diag);
+            let fast = t.apply(&mut p, &x);
+            let dense = t.to_dense().matvec(&x);
+            for (u, v) in fast.iter().zip(&dense) {
+                assert!((u - v).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_apply_matches_dense() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(52);
+        for &n in &[1usize, 3, 8, 21] {
+            let a = rng.randn_vec(n);
+            let x = rng.randn_vec(n);
+            let c = Circulant::new(a);
+            let fast = c.apply(&mut p, &x);
+            let dense = c.to_dense().matvec(&x);
+            for (u, v) in fast.iter().zip(&dense) {
+                assert!((u - v).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+
+    #[test]
+    fn fact_b7_block_structure() {
+        let mut rng = Rng::seeded(54);
+        let n = 7;
+        let diag = rng.randn_vec(2 * n - 1);
+        let (circ, toep, resi) = fact_b7_embedding(n, &diag);
+        let c = circ.to_dense();
+        let t = toep.to_dense();
+        let r = resi.to_dense();
+        for i in 0..n {
+            for j in 0..n {
+                assert!((c[(i, j)] - t[(i, j)]).abs() < 1e-12, "TL");
+                assert!((c[(i, j + n)] - r[(i, j)]).abs() < 1e-12, "TR");
+                assert!((c[(i + n, j)] - r[(i, j)]).abs() < 1e-12, "BL");
+                assert!((c[(i + n, j + n)] - t[(i, j)]).abs() < 1e-12, "BR");
+            }
+        }
+    }
+
+    #[test]
+    fn fact_b7_multiply_identity() {
+        // Circ(a'')·[x; 0] = [Toep(a)·x; Resi(a)·x]
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(55);
+        let n = 9;
+        let diag = rng.randn_vec(2 * n - 1);
+        let x = rng.randn_vec(n);
+        let (circ, toep, resi) = fact_b7_embedding(n, &diag);
+        let mut x2 = vec![0.0; 2 * n];
+        x2[..n].copy_from_slice(&x);
+        let y2 = circ.apply(&mut p, &x2);
+        let yt = toep.to_dense().matvec(&x);
+        let yr = resi.to_dense().matvec(&x);
+        for i in 0..n {
+            assert!((y2[i] - yt[i]).abs() < 1e-8);
+            assert!((y2[n + i] - yr[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn claim_b6_conv_equals_masked_toeplitz() {
+        let mut rng = Rng::seeded(53);
+        let n = 9;
+        let a = rng.randn_vec(n);
+        let conv_dense = ConvMatrix::new(a.clone()).to_dense();
+        let toep_dense = conv_as_toeplitz(&a).to_dense();
+        assert_eq!(conv_dense, toep_dense.tril());
+        // And the full Toeplitz with zero negative diagonals IS conv(a).
+        assert_eq!(conv_dense, toep_dense);
+    }
+}

@@ -1,0 +1,187 @@
+//! Dynamic batcher: groups requests by (backend, sequence bucket) and
+//! flushes on batch-size or deadline — the vLLM-style continuous
+//! batching loop, scoped to attention calls.
+
+use super::router::Backend;
+use super::server::AttnRequest;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A flushed batch: same backend, same bucket.
+#[derive(Debug)]
+pub struct Batch {
+    pub backend: Backend,
+    pub bucket: usize,
+    pub requests: Vec<AttnRequest>,
+    /// When the oldest member entered the batcher.
+    pub opened_at: Instant,
+}
+
+struct Pending {
+    requests: Vec<AttnRequest>,
+    opened_at: Instant,
+}
+
+/// Accumulates requests; emits batches.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    pending: HashMap<(Backend, usize), Pending>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher { cfg, pending: HashMap::new() }
+    }
+
+    /// Add a request; returns a batch if this push filled one.
+    pub fn push(&mut self, backend: Backend, bucket: usize, req: AttnRequest) -> Option<Batch> {
+        let now = Instant::now();
+        let entry = self
+            .pending
+            .entry((backend, bucket))
+            .or_insert_with(|| Pending { requests: Vec::new(), opened_at: now });
+        entry.requests.push(req);
+        if entry.requests.len() >= self.cfg.max_batch {
+            let p = self.pending.remove(&(backend, bucket)).unwrap();
+            Some(Batch { backend, bucket, requests: p.requests, opened_at: p.opened_at })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every group whose deadline has passed (or all, when
+    /// `force`).
+    pub fn flush(&mut self, force: bool) -> Vec<Batch> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        let keys: Vec<(Backend, usize)> = self.pending.keys().cloned().collect();
+        for key in keys {
+            let due = {
+                let p = &self.pending[&key];
+                force || now.duration_since(p.opened_at) >= self.cfg.max_wait
+            };
+            if due {
+                let p = self.pending.remove(&key).unwrap();
+                if !p.requests.is_empty() {
+                    out.push(Batch {
+                        backend: key.0,
+                        bucket: key.1,
+                        requests: p.requests,
+                        opened_at: p.opened_at,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Time until the earliest pending deadline (for the dispatch loop's
+    /// park timeout).
+    pub fn next_deadline(&self) -> Option<Duration> {
+        let now = Instant::now();
+        self.pending
+            .values()
+            .map(|p| {
+                let elapsed = now.duration_since(p.opened_at);
+                self.cfg.max_wait.saturating_sub(elapsed)
+            })
+            .min()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.values().map(|p| p.requests.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::Payload;
+
+    fn req(id: u64, n: usize) -> AttnRequest {
+        AttnRequest {
+            id,
+            seq_len: n,
+            d_model: 8,
+            bounded_entries: false,
+            payload: Payload::Synthetic { seed: id },
+            submitted_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fills_batch_at_max() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 3, ..Default::default() });
+        assert!(b.push(Backend::Exact, 128, req(1, 100)).is_none());
+        assert!(b.push(Backend::Exact, 128, req(2, 100)).is_none());
+        let batch = b.push(Backend::Exact, 128, req(3, 100)).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn separates_buckets_and_backends() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, ..Default::default() });
+        assert!(b.push(Backend::Exact, 128, req(1, 100)).is_none());
+        assert!(b.push(Backend::ConvBasis, 128, req(2, 100)).is_none());
+        assert!(b.push(Backend::Exact, 256, req(3, 200)).is_none());
+        assert_eq!(b.pending_len(), 3);
+        let batch = b.push(Backend::Exact, 128, req(4, 100)).unwrap();
+        assert_eq!(batch.bucket, 128);
+        assert_eq!(batch.backend, Backend::Exact);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(Backend::ConvBasis, 512, req(1, 500));
+        std::thread::sleep(Duration::from_millis(3));
+        let batches = b.flush(false);
+        assert_eq!(batches.len(), 1);
+    }
+
+    #[test]
+    fn force_flush_empties() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        b.push(Backend::Exact, 128, req(1, 100));
+        b.push(Backend::ConvBasis, 256, req(2, 200));
+        let batches = b.flush(true);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn no_request_dropped_or_duplicated() {
+        // Property: every pushed id appears in exactly one emitted batch.
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 4, ..Default::default() });
+        let mut emitted = Vec::new();
+        for id in 0..37u64 {
+            let bucket = if id % 3 == 0 { 128 } else { 256 };
+            let backend = if id % 2 == 0 { Backend::Exact } else { Backend::ConvBasis };
+            if let Some(batch) = b.push(backend, bucket, req(id, bucket - 1)) {
+                emitted.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        for batch in b.flush(true) {
+            emitted.extend(batch.requests.iter().map(|r| r.id));
+        }
+        emitted.sort();
+        assert_eq!(emitted, (0..37).collect::<Vec<_>>());
+    }
+}

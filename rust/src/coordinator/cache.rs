@@ -1,0 +1,188 @@
+//! Conv-basis cache: *recover once, apply many*.
+//!
+//! The expensive half of Algorithm 1 is Recover (`O(knd log n)` probe
+//! work); the apply is cheap per V. In decode-style serving the same
+//! (layer, prefix) pair recurs, so the coordinator caches the
+//! exp-transformed basis and its normalizer, keyed by a fingerprint of
+//! (model id, layer, Q/K content hash).
+
+use crate::basis::KConvBasis;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Cache key: model/layer plus a content fingerprint of (Q, K).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub model_id: u64,
+    pub layer: u32,
+    pub qk_fingerprint: u64,
+}
+
+/// FNV-1a over the f64 bit patterns — cheap, deterministic fingerprint.
+pub fn fingerprint(data: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &x in data {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[derive(Clone, Debug)]
+pub struct CachedBasis {
+    pub post_basis: KConvBasis,
+    pub d_tilde: Vec<f64>,
+}
+
+/// Bounded LRU (timestamp-based eviction; sizes are small — the value
+/// payload is `O(kn)` floats, the Appendix A memory claim).
+pub struct BasisCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+struct Inner {
+    map: HashMap<CacheKey, (CachedBasis, u64)>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl BasisCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        BasisCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), clock: 0, hits: 0, misses: 0 }),
+            capacity,
+        }
+    }
+
+    pub fn get(&self, key: &CacheKey) -> Option<CachedBasis> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        match g.map.get_mut(key) {
+            Some((v, stamp)) => {
+                *stamp = clock;
+                let out = v.clone();
+                g.hits += 1;
+                Some(out)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: CacheKey, value: CachedBasis) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        if g.map.len() >= self.capacity && !g.map.contains_key(&key) {
+            // Evict the least-recently used entry.
+            if let Some(victim) = g
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                g.map.remove(&victim);
+            }
+        }
+        g.map.insert(key, (value, clock));
+    }
+
+    /// (hits, misses, len).
+    pub fn stats(&self) -> (u64, u64, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.misses, g.map.len())
+    }
+
+    /// Approximate resident floats (memory accounting: `Σ k·n + n`).
+    pub fn resident_floats(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.map
+            .values()
+            .map(|(v, _)| v.post_basis.memory_floats() + v.d_tilde.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::{ConvBasis, KConvBasis};
+
+    fn dummy_basis(n: usize) -> CachedBasis {
+        CachedBasis {
+            post_basis: KConvBasis::new(n, vec![ConvBasis { b: vec![1.0; n], m: n }]),
+            d_tilde: vec![1.0; n],
+        }
+    }
+
+    fn key(i: u64) -> CacheKey {
+        CacheKey { model_id: 1, layer: 0, qk_fingerprint: i }
+    }
+
+    #[test]
+    fn hit_after_put() {
+        let c = BasisCache::new(4);
+        assert!(c.get(&key(1)).is_none());
+        c.put(key(1), dummy_basis(8));
+        assert!(c.get(&key(1)).is_some());
+        let (hits, misses, len) = c.stats();
+        assert_eq!((hits, misses, len), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let c = BasisCache::new(2);
+        c.put(key(1), dummy_basis(4));
+        c.put(key(2), dummy_basis(4));
+        let _ = c.get(&key(1)); // refresh 1
+        c.put(key(3), dummy_basis(4)); // evicts 2
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(2)).is_none());
+        assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_content() {
+        let a = fingerprint(&[1.0, 2.0, 3.0]);
+        let b = fingerprint(&[1.0, 2.0, 3.0000001]);
+        let c = fingerprint(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let c = BasisCache::new(4);
+        c.put(key(1), dummy_basis(16));
+        assert_eq!(c.resident_floats(), 16 + 16);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c = std::sync::Arc::new(BasisCache::new(8));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    c.put(key(t * 100 + i % 5), dummy_basis(4));
+                    let _ = c.get(&key(t * 100 + i % 5));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (hits, _, len) = c.stats();
+        assert!(hits > 0);
+        assert!(len <= 8);
+    }
+}

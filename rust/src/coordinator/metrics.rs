@@ -1,0 +1,177 @@
+//! Lock-free serving metrics: counters on atomics, latency samples in a
+//! striped mutex (recording is off the execution hot loop).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Latency summary (microseconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+fn summarize(samples: &mut Vec<f64>) -> LatencyStats {
+    if samples.is_empty() {
+        return LatencyStats::default();
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let count = samples.len();
+    let pick = |q: f64| samples[((q * (count - 1) as f64).round() as usize).min(count - 1)];
+    LatencyStats {
+        count,
+        mean_us: samples.iter().sum::<f64>() / count as f64,
+        p50_us: pick(0.50),
+        p95_us: pick(0.95),
+        p99_us: pick(0.99),
+        max_us: *samples.last().unwrap(),
+    }
+}
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub conv_requests: AtomicU64,
+    pub exact_requests: AtomicU64,
+    pub lowrank_requests: AtomicU64,
+    pub fallbacks: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    queue_lat: Mutex<Vec<f64>>,
+    exec_lat: Mutex<Vec<f64>>,
+    e2e_lat: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    #[inline]
+    pub fn incr(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_queue(&self, d: Duration) {
+        self.queue_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_exec(&self, d: Duration) {
+        self.exec_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_e2e(&self, d: Duration) {
+        self.e2e_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
+            requests_completed: self.requests_completed.load(Ordering::Relaxed),
+            batches_executed: self.batches_executed.load(Ordering::Relaxed),
+            conv_requests: self.conv_requests.load(Ordering::Relaxed),
+            exact_requests: self.exact_requests.load(Ordering::Relaxed),
+            lowrank_requests: self.lowrank_requests.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            queue: summarize(&mut self.queue_lat.lock().unwrap()),
+            exec: summarize(&mut self.exec_lat.lock().unwrap()),
+            e2e: summarize(&mut self.e2e_lat.lock().unwrap()),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub batches_executed: u64,
+    pub conv_requests: u64,
+    pub exact_requests: u64,
+    pub lowrank_requests: u64,
+    pub fallbacks: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub queue: LatencyStats,
+    pub exec: LatencyStats,
+    pub e2e: LatencyStats,
+}
+
+impl MetricsSnapshot {
+    /// Render a compact report (used by the serve example and benches).
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} submitted / {} completed | batches: {} | \
+             backends: conv={} exact={} lowrank={} fallbacks={} | \
+             cache: {}h/{}m | e2e p50={:.0}µs p95={:.0}µs p99={:.0}µs max={:.0}µs | \
+             exec mean={:.0}µs | queue mean={:.0}µs",
+            self.requests_submitted,
+            self.requests_completed,
+            self.batches_executed,
+            self.conv_requests,
+            self.exact_requests,
+            self.lowrank_requests,
+            self.fallbacks,
+            self.cache_hits,
+            self.cache_misses,
+            self.e2e.p50_us,
+            self.e2e.p95_us,
+            self.e2e.p99_us,
+            self.e2e.max_us,
+            self.exec.mean_us,
+            self.queue.mean_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_e2e(Duration::from_micros(i));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.e2e.count, 100);
+        assert!(s.e2e.p50_us <= s.e2e.p95_us);
+        assert!(s.e2e.p95_us <= s.e2e.p99_us);
+        assert!(s.e2e.p99_us <= s.e2e.max_us);
+        assert_eq!(s.e2e.max_us, 100.0);
+    }
+
+    #[test]
+    fn empty_latency_is_zero() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.e2e, LatencyStats::default());
+    }
+
+    #[test]
+    fn counters_relaxed() {
+        let m = Metrics::new();
+        Metrics::incr(&m.requests_submitted);
+        Metrics::incr(&m.requests_submitted);
+        assert_eq!(m.snapshot().requests_submitted, 2);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        Metrics::incr(&m.conv_requests);
+        let r = m.snapshot().report();
+        assert!(r.contains("conv=1"));
+    }
+}

@@ -1,0 +1,33 @@
+//! L3 serving coordinator — the systems layer wrapping the paper's
+//! algorithms, shaped like an attention-inference service (the paper's
+//! motivating workload is long-context LLM inference):
+//!
+//! * [`Router`] — per-request backend policy: exact attention for short
+//!   sequences (quadratic is cheap there — Figure 1a's crossover),
+//!   conv-basis for long ones, low-rank when the request asks for it.
+//! * [`DynamicBatcher`] — groups requests by sequence-length bucket and
+//!   flushes on size or deadline, so workers amortize FFT plans and
+//!   basis recovery across a batch.
+//! * [`BasisCache`] — recovered conv bases keyed by (model, layer, Q/K
+//!   fingerprint): *recover once, apply per request* — the serving-side
+//!   realization of Algorithm 1's split between Recover and the FFT
+//!   apply.
+//! * [`Server`] — worker threads draining the batch queue (std::thread
+//!   + mpsc; this image vendors no async runtime, and the workload is
+//!   CPU-bound anyway).
+//! * [`Metrics`] — lock-free counters + latency recording.
+//!
+//! The runtime is deliberately deterministic given a trace and a seed —
+//! every number in EXPERIMENTS.md §coordinator is reproducible.
+
+mod batcher;
+mod cache;
+mod metrics;
+mod router;
+mod server;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use cache::{BasisCache, CacheKey};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use router::{Backend, Router, RouterConfig};
+pub use server::{run_trace, AttnRequest, AttnResponse, Payload, Server, ServerConfig};

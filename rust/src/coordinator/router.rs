@@ -1,0 +1,114 @@
+//! Request router: picks the attention backend per request.
+//!
+//! Policy follows the paper's complexity analysis: exact `O(n²d)` wins
+//! below the FFT crossover; conv-basis `O(knd log n)` wins beyond it;
+//! low-rank is selected for masks/workloads where Theorem 6.5's kernels
+//! apply. Thresholds are configurable and benchable (ablations bench).
+
+/// The backend chosen for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    Exact,
+    ConvBasis,
+    LowRank,
+}
+
+/// Routing policy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Sequences shorter than this go to the exact backend.
+    pub exact_below: usize,
+    /// Sequences at least this long *and* flagged bounded-entry go to
+    /// low-rank; everything else long goes to conv-basis.
+    pub lowrank_min: usize,
+    /// Conv recovery budget as a fraction of n (k_max = ceil(frac·n)),
+    /// clamped to [1, k_cap].
+    pub k_frac: f64,
+    pub k_cap: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { exact_below: 128, lowrank_min: usize::MAX, k_frac: 0.05, k_cap: 64 }
+    }
+}
+
+/// Stateless router (cheap to share across workers).
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Self {
+        Router { cfg }
+    }
+
+    /// Route a request by sequence length and entry-boundedness hint.
+    pub fn route(&self, seq_len: usize, bounded_entries: bool) -> Backend {
+        if seq_len < self.cfg.exact_below {
+            Backend::Exact
+        } else if bounded_entries && seq_len >= self.cfg.lowrank_min {
+            Backend::LowRank
+        } else {
+            Backend::ConvBasis
+        }
+    }
+
+    /// Conv recovery budget for a sequence length.
+    pub fn k_budget(&self, seq_len: usize) -> usize {
+        ((self.cfg.k_frac * seq_len as f64).ceil() as usize).clamp(1, self.cfg.k_cap)
+    }
+
+    /// Sequence-length bucket (power-of-two rounding) — the batching key.
+    pub fn bucket(&self, seq_len: usize) -> usize {
+        seq_len.next_power_of_two()
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_sequences_go_exact() {
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(64, false), Backend::Exact);
+        assert_eq!(r.route(127, true), Backend::Exact);
+    }
+
+    #[test]
+    fn long_sequences_go_conv() {
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(r.route(2048, false), Backend::ConvBasis);
+    }
+
+    #[test]
+    fn lowrank_when_configured_and_bounded() {
+        let cfg = RouterConfig { lowrank_min: 512, ..Default::default() };
+        let r = Router::new(cfg);
+        assert_eq!(r.route(1024, true), Backend::LowRank);
+        assert_eq!(r.route(1024, false), Backend::ConvBasis);
+        assert_eq!(r.route(256, true), Backend::ConvBasis);
+    }
+
+    #[test]
+    fn k_budget_clamped() {
+        let r = Router::new(RouterConfig { k_frac: 0.05, k_cap: 64, ..Default::default() });
+        assert_eq!(r.k_budget(100), 5);
+        assert_eq!(r.k_budget(10_000), 64);
+        assert_eq!(r.k_budget(1), 1);
+    }
+
+    #[test]
+    fn buckets_are_pow2() {
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(r.bucket(100), 128);
+        assert_eq!(r.bucket(128), 128);
+        assert_eq!(r.bucket(129), 256);
+    }
+}

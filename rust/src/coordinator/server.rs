@@ -1,0 +1,438 @@
+//! The serving loop: dispatcher thread (router + batcher) feeding a
+//! worker pool over mpsc channels. Plain std threads — the workload is
+//! CPU-bound attention math, so an async runtime would only add
+//! scheduling noise (and this image vendors none).
+
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::cache::{fingerprint, BasisCache, CacheKey, CachedBasis};
+use super::metrics::Metrics;
+use super::router::{Backend, Router, RouterConfig};
+use crate::attention::rope::rope_structured_qk;
+use crate::attention::{apply_cached_basis, conv_attention_strided, exact_attention, Mask};
+use crate::fft::FftPlanner;
+use crate::lowrank::{LowRankAttention, LowRankConfig};
+use crate::tensor::{Matrix, Rng};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Request payload: explicit tensors, or a synthetic structured
+/// workload generated from a seed (trace-driven benching).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Synthetic { seed: u64 },
+    Explicit { q: Matrix, k: Matrix, v: Matrix },
+}
+
+/// One attention request.
+#[derive(Clone, Debug)]
+pub struct AttnRequest {
+    pub id: u64,
+    pub seq_len: usize,
+    pub d_model: usize,
+    /// Router hint: entries known bounded (enables low-rank).
+    pub bounded_entries: bool,
+    pub payload: Payload,
+    pub submitted_at: Instant,
+}
+
+/// Completed response.
+#[derive(Debug)]
+pub struct AttnResponse {
+    pub id: u64,
+    pub y: Matrix,
+    pub backend: Backend,
+    /// Basis size used (0 for exact / low-rank).
+    pub basis_k: usize,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub router: RouterConfig,
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+    pub cache_capacity: usize,
+    /// Low-rank degree when the router picks LowRank.
+    pub lowrank_degree: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            router: RouterConfig::default(),
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            cache_capacity: 64,
+            lowrank_degree: 2,
+        }
+    }
+}
+
+enum DispatchMsg {
+    Request(AttnRequest),
+    Shutdown,
+}
+
+/// The coordinator server.
+pub struct Server {
+    dispatch_tx: mpsc::Sender<DispatchMsg>,
+    resp_rx: mpsc::Receiver<AttnResponse>,
+    pub metrics: Arc<Metrics>,
+    pub cache: Arc<BasisCache>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    running: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Start dispatcher + worker threads.
+    pub fn start(cfg: ServerConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(BasisCache::new(cfg.cache_capacity));
+        let running = Arc::new(AtomicBool::new(true));
+        let (dispatch_tx, dispatch_rx) = mpsc::channel::<DispatchMsg>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+        let (resp_tx, resp_rx) = mpsc::channel::<AttnResponse>();
+
+        // Dispatcher: route + batch.
+        let router = Router::new(cfg.router);
+        let bcfg = cfg.batcher;
+        let running_d = running.clone();
+        let metrics_d = metrics.clone();
+        let dispatcher = std::thread::spawn(move || {
+            let mut batcher = DynamicBatcher::new(bcfg);
+            loop {
+                let timeout = batcher.next_deadline().unwrap_or(bcfg.max_wait);
+                match dispatch_rx.recv_timeout(timeout) {
+                    Ok(DispatchMsg::Request(req)) => {
+                        Metrics::incr(&metrics_d.requests_submitted);
+                        let backend = router.route(req.seq_len, req.bounded_entries);
+                        let bucket = router.bucket(req.seq_len);
+                        if let Some(batch) = batcher.push(backend, bucket, req) {
+                            let _ = batch_tx.send(batch);
+                        }
+                    }
+                    Ok(DispatchMsg::Shutdown) => {
+                        for b in batcher.flush(true) {
+                            let _ = batch_tx.send(b);
+                        }
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        for b in batcher.flush(false) {
+                            let _ = batch_tx.send(b);
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                if !running_d.load(Ordering::Relaxed) {
+                    for b in batcher.flush(true) {
+                        let _ = batch_tx.send(b);
+                    }
+                    break;
+                }
+            }
+        });
+
+        // Workers: execute batches.
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let tx = resp_tx.clone();
+            let metrics_w = metrics.clone();
+            let cache_w = cache.clone();
+            let router_w = Router::new(cfg.router);
+            let lowrank_degree = cfg.lowrank_degree;
+            workers.push(std::thread::spawn(move || {
+                // Per-worker FFT planner: plans are reused across the
+                // worker's lifetime (§Perf: plan reuse).
+                let mut planner = FftPlanner::new();
+                loop {
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    let t0 = Instant::now();
+                    for req in batch.requests {
+                        let queue_d = t0.duration_since(req.submitted_at);
+                        metrics_w.record_queue(queue_d);
+                        let e0 = Instant::now();
+                        let resp = execute_one(
+                            &req,
+                            batch.backend,
+                            &router_w,
+                            &cache_w,
+                            &metrics_w,
+                            &mut planner,
+                            lowrank_degree,
+                        );
+                        metrics_w.record_exec(e0.elapsed());
+                        metrics_w.record_e2e(req.submitted_at.elapsed());
+                        Metrics::incr(&metrics_w.requests_completed);
+                        let _ = tx.send(resp);
+                    }
+                    Metrics::incr(&metrics_w.batches_executed);
+                }
+            }));
+        }
+        drop(resp_tx);
+
+        Server { dispatch_tx, resp_rx, metrics, cache, dispatcher: Some(dispatcher), workers, running }
+    }
+
+    /// Submit a request (non-blocking).
+    pub fn submit(&self, req: AttnRequest) {
+        let _ = self.dispatch_tx.send(DispatchMsg::Request(req));
+    }
+
+    /// Collect `n` responses (blocking).
+    pub fn collect(&self, n: usize) -> Vec<AttnResponse> {
+        (0..n).filter_map(|_| self.resp_rx.recv().ok()).collect()
+    }
+
+    /// Graceful shutdown: flush, join.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.running.store(false, Ordering::Relaxed);
+        let _ = self.dispatch_tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        // Workers exit when the batch channel closes (dispatcher gone).
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.clone()
+    }
+}
+
+fn synthesize(seq_len: usize, d_model: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::seeded(seed);
+    let freqs = (d_model / 2).min(4).max(1);
+    let (q, k) = rope_structured_qk(seq_len, d_model, freqs, &mut rng);
+    let v = Matrix::randn(seq_len, d_model, &mut rng);
+    (q, k, v)
+}
+
+fn execute_one(
+    req: &AttnRequest,
+    backend: Backend,
+    router: &Router,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    planner: &mut FftPlanner,
+    lowrank_degree: usize,
+) -> AttnResponse {
+    let (q, k, v) = match &req.payload {
+        Payload::Explicit { q, k, v } => (q.clone(), k.clone(), v.clone()),
+        Payload::Synthetic { seed } => synthesize(req.seq_len, req.d_model, *seed),
+    };
+    let n = q.rows();
+    match backend {
+        Backend::Exact => {
+            Metrics::incr(&metrics.exact_requests);
+            let y = exact_attention(&q, &k, &v, &Mask::causal(n));
+            AttnResponse { id: req.id, y, backend, basis_k: 0 }
+        }
+        Backend::LowRank => {
+            Metrics::incr(&metrics.lowrank_requests);
+            let lr = LowRankAttention::new(
+                &q,
+                &k,
+                Mask::causal(n),
+                &LowRankConfig::new(lowrank_degree, q.cols() as f64),
+            );
+            AttnResponse { id: req.id, y: lr.forward(&v), backend, basis_k: 0 }
+        }
+        Backend::ConvBasis => {
+            Metrics::incr(&metrics.conv_requests);
+            // Cache lookup: recover once per (Q,K) fingerprint.
+            let key = CacheKey {
+                model_id: 0,
+                layer: 0,
+                qk_fingerprint: fingerprint(q.data()) ^ fingerprint(k.data()).rotate_left(1),
+            };
+            if let Some(hit) = cache.get(&key) {
+                Metrics::incr(&metrics.cache_hits);
+                let y = apply_cached_basis(planner, &hit.post_basis, &hit.d_tilde, &v);
+                return AttnResponse { id: req.id, y, backend, basis_k: hit.post_basis.k() };
+            }
+            Metrics::incr(&metrics.cache_misses);
+            match conv_attention_strided(&q, &k, &v, router.k_budget(n)) {
+                Ok(out) => {
+                    cache.put(
+                        key,
+                        CachedBasis { post_basis: out.post_basis.clone(), d_tilde: out.d_tilde.clone() },
+                    );
+                    AttnResponse { id: req.id, y: out.y, backend, basis_k: out.post_basis.k() }
+                }
+                Err(_) => {
+                    Metrics::incr(&metrics.fallbacks);
+                    let y = exact_attention(&q, &k, &v, &Mask::causal(n));
+                    AttnResponse { id: req.id, y, backend: Backend::Exact, basis_k: 0 }
+                }
+            }
+        }
+    }
+}
+
+/// Drive a whole workload trace through a server, honouring arrival
+/// times scaled by `time_scale` (0 = as fast as possible). Returns
+/// responses sorted by id.
+pub fn run_trace(
+    server: &Server,
+    trace: &crate::data::WorkloadTrace,
+    time_scale: f64,
+) -> Vec<AttnResponse> {
+    let t0 = Instant::now();
+    for r in &trace.requests {
+        if time_scale > 0.0 {
+            let due = std::time::Duration::from_micros((r.arrival_us as f64 * time_scale) as u64);
+            let elapsed = t0.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+        }
+        server.submit(AttnRequest {
+            id: r.id,
+            seq_len: r.seq_len,
+            d_model: r.d_model,
+            bounded_entries: false,
+            payload: Payload::Synthetic { seed: r.id % 16 }, // repeats → cache hits
+            submitted_at: Instant::now(),
+        });
+    }
+    let mut out = server.collect(trace.requests.len());
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{WorkloadConfig, WorkloadTrace};
+
+    fn small_server() -> Server {
+        Server::start(ServerConfig {
+            router: RouterConfig { exact_below: 64, ..Default::default() },
+            batcher: BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+            workers: 2,
+            cache_capacity: 16,
+            lowrank_degree: 2,
+        })
+    }
+
+    #[test]
+    fn serves_explicit_request_exactly() {
+        let server = small_server();
+        let mut rng = Rng::seeded(231);
+        let (n, d) = (32, 8);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let v = Matrix::randn(n, d, &mut rng);
+        let want = exact_attention(&q, &k, &v, &Mask::causal(n));
+        server.submit(AttnRequest {
+            id: 7,
+            seq_len: n,
+            d_model: d,
+            bounded_entries: false,
+            payload: Payload::Explicit { q, k, v },
+            submitted_at: Instant::now(),
+        });
+        let resps = server.collect(1);
+        assert_eq!(resps[0].id, 7);
+        assert_eq!(resps[0].backend, Backend::Exact);
+        assert!(crate::tensor::max_abs_diff(&resps[0].y, &want) < 1e-10);
+        server.shutdown();
+    }
+
+    #[test]
+    fn all_trace_requests_complete_once() {
+        let server = small_server();
+        let cfg = WorkloadConfig {
+            rate_per_s: 10_000.0,
+            len_buckets: [32, 48, 96, 128],
+            len_weights: [0.4, 0.3, 0.2, 0.1],
+            d_model: 8,
+        };
+        let trace = WorkloadTrace::generate(40, &cfg, 5);
+        let resps = run_trace(&server, &trace, 0.0);
+        assert_eq!(resps.len(), 40);
+        let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+        let m = server.shutdown();
+        let s = m.snapshot();
+        assert_eq!(s.requests_completed, 40);
+        assert_eq!(s.requests_submitted, 40);
+    }
+
+    #[test]
+    fn conv_path_hits_cache_on_repeats() {
+        let server = small_server();
+        // Same synthetic seed ⇒ same (Q,K) fingerprint ⇒ cache hits.
+        for i in 0..6u64 {
+            server.submit(AttnRequest {
+                id: i,
+                seq_len: 96, // ≥ exact_below ⇒ conv
+                d_model: 8,
+                bounded_entries: false,
+                payload: Payload::Synthetic { seed: 1 },
+                submitted_at: Instant::now(),
+            });
+        }
+        let resps = server.collect(6);
+        assert_eq!(resps.len(), 6);
+        let m = server.shutdown();
+        let s = m.snapshot();
+        assert!(s.cache_hits >= 1, "cache hits = {}", s.cache_hits);
+        assert!(s.conv_requests == 6);
+    }
+
+    #[test]
+    fn conv_and_exact_agree_on_structured_payloads() {
+        let server = small_server();
+        let (q, k, v) = synthesize(128, 8, 3);
+        let want = exact_attention(&q, &k, &v, &Mask::causal(128));
+        server.submit(AttnRequest {
+            id: 0,
+            seq_len: 128,
+            d_model: 8,
+            bounded_entries: false,
+            payload: Payload::Explicit { q, k, v },
+            submitted_at: Instant::now(),
+        });
+        let resp = &server.collect(1)[0];
+        assert_eq!(resp.backend, Backend::ConvBasis);
+        assert!(resp.basis_k >= 1);
+        let err = crate::tensor::max_abs_diff(&resp.y, &want);
+        assert!(err < 1e-6, "err = {err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let server = Server::start(ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 1000, // never fills
+                max_wait: std::time::Duration::from_secs(3600),
+            },
+            ..Default::default()
+        });
+        server.submit(AttnRequest {
+            id: 1,
+            seq_len: 32,
+            d_model: 8,
+            bounded_entries: false,
+            payload: Payload::Synthetic { seed: 0 },
+            submitted_at: Instant::now(),
+        });
+        // The batch can never fill and the deadline is an hour away —
+        // only the shutdown flush can complete this request.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let m = server.shutdown();
+        let s = m.snapshot();
+        assert_eq!(s.requests_completed, 1);
+    }
+}

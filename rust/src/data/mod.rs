@@ -1,0 +1,152 @@
+//! Data substrate: byte-level tokenizer, deterministic synthetic
+//! corpora, the synthetic sentiment task standing in for IMDB
+//! (Figure 4 — see DESIGN.md substitution log), and serving workload
+//! traces for the coordinator benches.
+
+mod sentiment;
+mod tokenizer;
+mod workload;
+
+pub use sentiment::{SentimentDataset, SentimentExample};
+pub use tokenizer::ByteTokenizer;
+pub use workload::{Request, WorkloadTrace, WorkloadConfig};
+
+use crate::tensor::Rng;
+
+/// A deterministic tiny language corpus: templated English-like
+/// sentences with long-range repetition (so attention matrices develop
+/// the induction-head / conv-like structure the paper banks on).
+pub struct SyntheticCorpus {
+    text: String,
+}
+
+const SUBJECTS: &[&str] = &[
+    "the model", "the system", "a transformer", "the kernel", "the scheduler", "our method",
+    "the baseline", "the router",
+];
+const VERBS: &[&str] =
+    &["computes", "approximates", "accelerates", "decomposes", "normalizes", "batches", "routes"];
+const OBJECTS: &[&str] = &[
+    "the attention matrix",
+    "a convolution basis",
+    "the gradient",
+    "long sequences",
+    "the softmax",
+    "every request",
+    "the key cache",
+];
+const TAILS: &[&str] = &[
+    "in almost linear time",
+    "with bounded error",
+    "via fast fourier transforms",
+    "under a causal mask",
+    "without retraining",
+    "at every layer",
+];
+
+impl SyntheticCorpus {
+    /// Generate ~`target_bytes` of text, deterministically from `seed`.
+    pub fn generate(target_bytes: usize, seed: u64) -> Self {
+        let mut rng = Rng::seeded(seed);
+        let mut text = String::with_capacity(target_bytes + 128);
+        while text.len() < target_bytes {
+            let s = *rng.choose(SUBJECTS);
+            let v = *rng.choose(VERBS);
+            let o = *rng.choose(OBJECTS);
+            let t = *rng.choose(TAILS);
+            text.push_str(s);
+            text.push(' ');
+            text.push_str(v);
+            text.push(' ');
+            text.push_str(o);
+            text.push(' ');
+            text.push_str(t);
+            text.push_str(". ");
+            // Occasionally repeat the previous sentence verbatim —
+            // induction-head bait.
+            if rng.uniform() < 0.25 && text.len() > 120 {
+                let tail_start = text.len().saturating_sub(60);
+                // Find a sentence boundary to copy from.
+                if let Some(pos) = text[..tail_start].rfind(". ") {
+                    let copy = text[pos + 2..tail_start].to_string();
+                    text.push_str(&copy);
+                }
+            }
+        }
+        text.truncate(target_bytes);
+        SyntheticCorpus { text }
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+
+    /// Token stream under the byte tokenizer.
+    pub fn tokens(&self, tok: &ByteTokenizer) -> Vec<usize> {
+        tok.encode(&self.text)
+    }
+
+    /// Contiguous (input, target) training windows of length `seq_len`.
+    pub fn windows(&self, tok: &ByteTokenizer, seq_len: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let toks = self.tokens(tok);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start + seq_len + 1 <= toks.len() {
+            let x = toks[start..start + seq_len].to_vec();
+            let y = toks[start + 1..start + seq_len + 1].to_vec();
+            out.push((x, y));
+            start += seq_len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = SyntheticCorpus::generate(1000, 7);
+        let b = SyntheticCorpus::generate(1000, 7);
+        assert_eq!(a.text(), b.text());
+        let c = SyntheticCorpus::generate(1000, 8);
+        assert_ne!(a.text(), c.text());
+    }
+
+    #[test]
+    fn corpus_has_requested_size() {
+        let c = SyntheticCorpus::generate(5000, 1);
+        assert_eq!(c.text().len(), 5000);
+    }
+
+    #[test]
+    fn windows_cover_corpus() {
+        let c = SyntheticCorpus::generate(2000, 2);
+        let tok = ByteTokenizer::new();
+        let w = c.windows(&tok, 64);
+        assert!(w.len() >= 30);
+        for (x, y) in &w {
+            assert_eq!(x.len(), 64);
+            assert_eq!(y.len(), 64);
+            // Targets are inputs shifted by one.
+            assert_eq!(&x[1..], &y[..63]);
+        }
+    }
+
+    #[test]
+    fn corpus_contains_repetitions() {
+        let c = SyntheticCorpus::generate(20_000, 3);
+        // Induction bait: at least one sentence should appear twice.
+        let sentences: Vec<&str> = c.text().split(". ").collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut dup = false;
+        for s in sentences {
+            if s.len() > 10 && !seen.insert(s) {
+                dup = true;
+                break;
+            }
+        }
+        assert!(dup, "no repeated sentences found");
+    }
+}

@@ -1,0 +1,139 @@
+//! Synthetic sentiment task — the stand-in for IMDB in Figure 4
+//! (substitution documented in DESIGN.md).
+//!
+//! Templated movie reviews with unambiguous polarity words, plus
+//! distractor clauses so the classifier must actually attend. Labels
+//! are balanced and the train/test split is deterministic.
+
+use crate::tensor::Rng;
+
+const POS_OPENERS: &[&str] = &[
+    "an absolute triumph",
+    "a stunning achievement",
+    "a delightful surprise",
+    "a masterful film",
+    "pure joy from start to finish",
+    "a brilliant and moving picture",
+];
+const NEG_OPENERS: &[&str] = &[
+    "a complete disaster",
+    "a tedious slog",
+    "an incoherent mess",
+    "a painful waste of time",
+    "utterly forgettable",
+    "a dull and lifeless film",
+];
+const POS_BODIES: &[&str] = &[
+    "the acting was superb and the pacing perfect",
+    "every scene sparkled with wit and warmth",
+    "i was captivated by the gorgeous cinematography",
+    "the script crackles and the score soars",
+];
+const NEG_BODIES: &[&str] = &[
+    "the acting was wooden and the pacing glacial",
+    "every scene dragged without purpose",
+    "i was bored by the muddy cinematography",
+    "the script clunks and the score grates",
+];
+const NEUTRAL: &[&str] = &[
+    "the film runs just over two hours",
+    "it was shot on location last spring",
+    "the cast includes several newcomers",
+    "the director previously worked in television",
+];
+
+/// One labelled review.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SentimentExample {
+    pub text: String,
+    /// `true` = positive.
+    pub label: bool,
+}
+
+/// A balanced, deterministic sentiment dataset with a train/test split.
+#[derive(Clone, Debug)]
+pub struct SentimentDataset {
+    pub train: Vec<SentimentExample>,
+    pub test: Vec<SentimentExample>,
+}
+
+impl SentimentDataset {
+    /// Generate `n_train + n_test` balanced examples from `seed`.
+    pub fn generate(n_train: usize, n_test: usize, seed: u64) -> Self {
+        let mut rng = Rng::seeded(seed);
+        let total = n_train + n_test;
+        let mut examples = Vec::with_capacity(total);
+        for i in 0..total {
+            let label = i % 2 == 0;
+            examples.push(Self::make_example(label, &mut rng));
+        }
+        rng.shuffle(&mut examples);
+        let test = examples.split_off(n_train);
+        SentimentDataset { train: examples, test }
+    }
+
+    fn make_example(label: bool, rng: &mut Rng) -> SentimentExample {
+        let (openers, bodies) = if label {
+            (POS_OPENERS, POS_BODIES)
+        } else {
+            (NEG_OPENERS, NEG_BODIES)
+        };
+        let mut text = String::new();
+        // Distractor-first half the time: polarity evidence is not
+        // always in a fixed position.
+        if rng.uniform() < 0.5 {
+            text.push_str(*rng.choose(NEUTRAL));
+            text.push_str(". ");
+        }
+        text.push_str(*rng.choose(openers));
+        text.push_str(". ");
+        text.push_str(*rng.choose(bodies));
+        text.push_str(". ");
+        if rng.uniform() < 0.5 {
+            text.push_str(*rng.choose(NEUTRAL));
+            text.push('.');
+        }
+        SentimentExample { text, label }
+    }
+
+    /// The paper's evaluation protocol (Section 7): "5 sample groups,
+    /// 200 samples per group" — deterministic grouping of the test set.
+    pub fn test_groups(&self, groups: usize) -> Vec<&[SentimentExample]> {
+        let per = self.test.len() / groups;
+        (0..groups).map(|g| &self.test[g * per..(g + 1) * per]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = SentimentDataset::generate(100, 40, 5);
+        let b = SentimentDataset::generate(100, 40, 5);
+        assert_eq!(a.train, b.train);
+        let pos = a.train.iter().filter(|e| e.label).count()
+            + a.test.iter().filter(|e| e.label).count();
+        assert_eq!(pos, 70);
+    }
+
+    #[test]
+    fn polarity_words_match_labels() {
+        let ds = SentimentDataset::generate(50, 10, 6);
+        for e in ds.train.iter().chain(&ds.test) {
+            let has_pos = POS_OPENERS.iter().any(|w| e.text.contains(w));
+            let has_neg = NEG_OPENERS.iter().any(|w| e.text.contains(w));
+            assert_eq!(has_pos, e.label);
+            assert_eq!(has_neg, !e.label);
+        }
+    }
+
+    #[test]
+    fn groups_partition_test_set() {
+        let ds = SentimentDataset::generate(10, 100, 7);
+        let groups = ds.test_groups(5);
+        assert_eq!(groups.len(), 5);
+        assert!(groups.iter().all(|g| g.len() == 20));
+    }
+}

@@ -1,0 +1,105 @@
+//! Byte-level tokenizer: 256 byte tokens + BOS/EOS/PAD/CLS specials.
+//! Deterministic, lossless, zero-config — the right substrate for a
+//! reproduction where no pretrained vocabulary exists.
+
+/// Byte-level tokenizer with four special tokens.
+#[derive(Clone, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const PAD: usize = 256;
+    pub const BOS: usize = 257;
+    pub const EOS: usize = 258;
+    /// Classification token appended for sentence-level tasks.
+    pub const CLS: usize = 259;
+
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    /// Vocabulary size (bytes + specials).
+    pub fn vocab_size(&self) -> usize {
+        260
+    }
+
+    /// Encode UTF-8 text to token ids (raw bytes; no specials added).
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        text.bytes().map(|b| b as usize).collect()
+    }
+
+    /// Encode with BOS … EOS framing.
+    pub fn encode_framed(&self, text: &str) -> Vec<usize> {
+        let mut out = Vec::with_capacity(text.len() + 2);
+        out.push(Self::BOS);
+        out.extend(text.bytes().map(|b| b as usize));
+        out.push(Self::EOS);
+        out
+    }
+
+    /// Encode for classification: BOS … text … CLS, truncated / padded
+    /// to exactly `len` (pad inserted before CLS so CLS stays last).
+    pub fn encode_for_classification(&self, text: &str, len: usize) -> Vec<usize> {
+        assert!(len >= 3);
+        let body_budget = len - 2;
+        let mut body: Vec<usize> = text.bytes().map(|b| b as usize).collect();
+        body.truncate(body_budget);
+        let mut out = Vec::with_capacity(len);
+        out.push(Self::BOS);
+        out.extend_from_slice(&body);
+        while out.len() < len - 1 {
+            out.push(Self::PAD);
+        }
+        out.push(Self::CLS);
+        out
+    }
+
+    /// Decode token ids back to text (specials dropped; invalid bytes
+    /// replaced).
+    pub fn decode(&self, ids: &[usize]) -> String {
+        let bytes: Vec<u8> = ids.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tok = ByteTokenizer::new();
+        let text = "conv basis attention!";
+        assert_eq!(tok.decode(&tok.encode(text)), text);
+    }
+
+    #[test]
+    fn framed_has_specials() {
+        let tok = ByteTokenizer::new();
+        let ids = tok.encode_framed("ab");
+        assert_eq!(ids, vec![ByteTokenizer::BOS, 97, 98, ByteTokenizer::EOS]);
+    }
+
+    #[test]
+    fn classification_encoding_is_fixed_length() {
+        let tok = ByteTokenizer::new();
+        for text in ["short", &"x".repeat(500)] {
+            let ids = tok.encode_for_classification(text, 32);
+            assert_eq!(ids.len(), 32);
+            assert_eq!(ids[0], ByteTokenizer::BOS);
+            assert_eq!(*ids.last().unwrap(), ByteTokenizer::CLS);
+        }
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let tok = ByteTokenizer::new();
+        let ids = vec![ByteTokenizer::BOS, 104, 105, ByteTokenizer::PAD, ByteTokenizer::CLS];
+        assert_eq!(tok.decode(&ids), "hi");
+    }
+
+    #[test]
+    fn vocab_covers_all_ids() {
+        let tok = ByteTokenizer::new();
+        assert!(ByteTokenizer::CLS < tok.vocab_size());
+    }
+}

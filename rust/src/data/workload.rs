@@ -1,0 +1,116 @@
+//! Serving workload traces: Poisson-ish arrivals with mixed sequence
+//! lengths — the input to the L3 coordinator benches (the paper's
+//! motivating long-context inference scenario; no production trace is
+//! public, so we synthesize one — DESIGN.md substitution log).
+
+use crate::tensor::Rng;
+
+/// One inference request in a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in microseconds from trace start.
+    pub arrival_us: u64,
+    /// Sequence length of the prompt.
+    pub seq_len: usize,
+    /// Hidden dim of the attention call (model-dependent; carried so
+    /// mixed-model traces are expressible).
+    pub d_model: usize,
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadConfig {
+    /// Mean arrival rate, requests per second.
+    pub rate_per_s: f64,
+    /// Sequence-length buckets (sampled with `len_weights`).
+    pub len_buckets: [usize; 4],
+    /// Relative weights of the buckets.
+    pub len_weights: [f64; 4],
+    pub d_model: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            rate_per_s: 200.0,
+            len_buckets: [128, 256, 512, 1024],
+            len_weights: [0.4, 0.3, 0.2, 0.1],
+            d_model: 64,
+        }
+    }
+}
+
+/// A deterministic synthetic request trace.
+#[derive(Clone, Debug)]
+pub struct WorkloadTrace {
+    pub requests: Vec<Request>,
+}
+
+impl WorkloadTrace {
+    /// Generate `n` requests with exponential inter-arrivals.
+    pub fn generate(n: usize, cfg: &WorkloadConfig, seed: u64) -> Self {
+        let mut rng = Rng::seeded(seed);
+        let mut t_us = 0u64;
+        let mean_gap_us = 1e6 / cfg.rate_per_s;
+        let total_w: f64 = cfg.len_weights.iter().sum();
+        let mut requests = Vec::with_capacity(n);
+        for id in 0..n as u64 {
+            // Exponential inter-arrival via inverse CDF.
+            let u = rng.uniform().max(1e-12);
+            t_us += (-u.ln() * mean_gap_us) as u64;
+            // Weighted bucket choice.
+            let mut pick = rng.uniform() * total_w;
+            let mut seq_len = cfg.len_buckets[3];
+            for (b, &w) in cfg.len_weights.iter().enumerate() {
+                if pick < w {
+                    seq_len = cfg.len_buckets[b];
+                    break;
+                }
+                pick -= w;
+            }
+            requests.push(Request { id, arrival_us: t_us, seq_len, d_model: cfg.d_model });
+        }
+        WorkloadTrace { requests }
+    }
+
+    /// Aggregate statistics (mean len, span).
+    pub fn stats(&self) -> (f64, u64) {
+        let mean_len = self.requests.iter().map(|r| r.seq_len as f64).sum::<f64>()
+            / self.requests.len().max(1) as f64;
+        let span = self.requests.last().map(|r| r.arrival_us).unwrap_or(0);
+        (mean_len, span)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = WorkloadConfig::default();
+        let a = WorkloadTrace::generate(100, &cfg, 1);
+        let b = WorkloadTrace::generate(100, &cfg, 1);
+        assert_eq!(a.requests, b.requests);
+        assert!(a.requests.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+    }
+
+    #[test]
+    fn lengths_come_from_buckets() {
+        let cfg = WorkloadConfig::default();
+        let t = WorkloadTrace::generate(200, &cfg, 2);
+        for r in &t.requests {
+            assert!(cfg.len_buckets.contains(&r.seq_len));
+        }
+    }
+
+    #[test]
+    fn rate_is_roughly_respected() {
+        let cfg = WorkloadConfig { rate_per_s: 1000.0, ..Default::default() };
+        let t = WorkloadTrace::generate(2000, &cfg, 3);
+        let (_, span_us) = t.stats();
+        let observed_rate = 2000.0 / (span_us as f64 / 1e6);
+        assert!((observed_rate - 1000.0).abs() / 1000.0 < 0.2, "rate = {observed_rate}");
+    }
+}

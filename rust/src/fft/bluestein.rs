@@ -1,0 +1,120 @@
+//! Bluestein (chirp-z) transform: DFT of arbitrary length `n` via a
+//! circular convolution of length `≥ 2n−1` rounded up to a power of two.
+//!
+//! Needed because sub-convolution windows `m` (Definition 3.9) are
+//! arbitrary integers: the recovery algorithm produces whatever `m_i`
+//! the binary search finds.
+
+use super::radix2::Radix2Plan;
+use super::Complex;
+use std::sync::Arc;
+
+/// Precomputed Bluestein plan for a fixed (arbitrary) length.
+#[derive(Debug)]
+pub struct BluesteinPlan {
+    n: usize,
+    m: usize,
+    inner: Arc<Radix2Plan>,
+    /// Chirp `w_j = e^{-iπ j² / n}` for `j < n`.
+    chirp: Vec<Complex>,
+    /// FFT of the padded conjugate-chirp kernel (precomputed).
+    kernel_fft: Vec<Complex>,
+}
+
+impl BluesteinPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = Arc::new(Radix2Plan::new(m));
+        // j² mod 2n to keep the angle argument bounded (avoids precision
+        // loss for large n).
+        let two_n = 2 * n as u64;
+        let chirp: Vec<Complex> = (0..n)
+            .map(|j| {
+                let jsq = (j as u64 * j as u64) % two_n;
+                Complex::cis(-std::f64::consts::PI * jsq as f64 / n as f64)
+            })
+            .collect();
+        let mut kernel = vec![Complex::zero(); m];
+        kernel[0] = chirp[0].conj();
+        for j in 1..n {
+            let c = chirp[j].conj();
+            kernel[j] = c;
+            kernel[m - j] = c;
+        }
+        inner.forward(&mut kernel);
+        BluesteinPlan { n, m, inner, chirp, kernel_fft: kernel }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Forward DFT, in place over a length-n buffer.
+    pub fn forward(&self, x: &mut [Complex]) {
+        assert_eq!(x.len(), self.n);
+        let mut buf = vec![Complex::zero(); self.m];
+        for j in 0..self.n {
+            buf[j] = x[j] * self.chirp[j];
+        }
+        self.inner.forward(&mut buf);
+        for (b, k) in buf.iter_mut().zip(&self.kernel_fft) {
+            *b = *b * *k;
+        }
+        self.inner.inverse(&mut buf);
+        for j in 0..self.n {
+            x[j] = buf[j] * self.chirp[j];
+        }
+    }
+
+    /// Inverse DFT (with 1/n normalization): conjugate trick.
+    pub fn inverse(&self, x: &mut [Complex]) {
+        for v in x.iter_mut() {
+            *v = v.conj();
+        }
+        self.forward(x);
+        let scale = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = v.conj() * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft_naive;
+
+    #[test]
+    fn matches_naive_dft_arbitrary_lengths() {
+        let mut rng = crate::tensor::Rng::seeded(31);
+        for &n in &[1usize, 2, 3, 5, 7, 12, 47, 100, 257] {
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.randn(), rng.randn())).collect();
+            let want = dft_naive(&x, false);
+            let plan = BluesteinPlan::new(n);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a.re - b.re).abs() < 1e-6, "n={n}: {} vs {}", a.re, b.re);
+                assert!((a.im - b.im).abs() < 1e-6, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_prime_length() {
+        let mut rng = crate::tensor::Rng::seeded(32);
+        let n = 101;
+        let x: Vec<Complex> = (0..n).map(|_| Complex::new(rng.randn(), rng.randn())).collect();
+        let plan = BluesteinPlan::new(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a.re - b.re).abs() < 1e-8);
+            assert!((a.im - b.im).abs() < 1e-8);
+        }
+    }
+}

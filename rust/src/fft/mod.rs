@@ -1,0 +1,265 @@
+//! From-scratch FFT substrate.
+//!
+//! Claim 3.7 / 3.10 and Fact B.8 of the paper reduce `conv(a)·x` and
+//! `conv(a, m)·x` to circular convolutions, i.e. to FFTs. We implement:
+//!
+//! * an iterative radix-2 Cooley–Tukey transform with precomputed
+//!   bit-reversal and twiddle tables ([`radix2`]),
+//! * a Bluestein (chirp-z) fallback so *any* length is supported
+//!   ([`bluestein`]) — sub-convolutions have arbitrary sizes `m`,
+//! * a [`FftPlanner`] that caches plans per length: the serving hot loop
+//!   applies the same-length transform thousands of times.
+//!
+//! Real-input convolutions pack two real sequences into one complex
+//! transform (`linear_convolution` below), halving transform count — one
+//! of the §Perf optimizations recorded in EXPERIMENTS.md.
+
+mod bluestein;
+mod planner;
+mod radix2;
+mod spectrum;
+
+pub use planner::{Fft, FftPlanner};
+pub use spectrum::KernelSpectrum;
+
+/// Minimal complex number (we avoid a `num-complex` dependency).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    #[inline]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub const fn zero() -> Self {
+        Complex { re: 0.0, im: 0.0 }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    /// `e^{iθ}`.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        Complex { re: theta.cos(), im: theta.sin() }
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+}
+
+impl std::ops::Add for Complex {
+    type Output = Complex;
+    #[inline]
+    fn add(self, o: Complex) -> Complex {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl std::ops::Sub for Complex {
+    type Output = Complex;
+    #[inline]
+    fn sub(self, o: Complex) -> Complex {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl std::ops::Mul for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, o: Complex) -> Complex {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl std::ops::Mul<f64> for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, s: f64) -> Complex {
+        Complex { re: self.re * s, im: self.im * s }
+    }
+}
+
+/// Next power of two ≥ `n`.
+#[inline]
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Naive O(n²) DFT — the correctness oracle for the fast transforms.
+pub fn dft_naive(x: &[Complex], inverse: bool) -> Vec<Complex> {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut out = vec![Complex::zero(); n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex::zero();
+        for (j, &xj) in x.iter().enumerate() {
+            let theta = sign * 2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+            acc = acc + xj * Complex::cis(theta);
+        }
+        *o = if inverse { acc * (1.0 / n as f64) } else { acc };
+    }
+    out
+}
+
+/// Linear convolution of two real sequences via one complex FFT
+/// (packing trick: `z = a + i·b`, unpack via conjugate symmetry).
+///
+/// Returns `a.len() + b.len() - 1` coefficients:
+/// `out[t] = Σ_{i+j=t} a[i]·b[j]`.
+pub fn linear_convolution(planner: &mut FftPlanner, a: &[f64], b: &[f64]) -> Vec<f64> {
+    if a.is_empty() || b.is_empty() {
+        return vec![];
+    }
+    let out_len = a.len() + b.len() - 1;
+    let n = next_pow2(out_len);
+    let fft = planner.plan(n);
+
+    // Pack a into the real part, b into the imaginary part.
+    let mut z = vec![Complex::zero(); n];
+    for (i, &ai) in a.iter().enumerate() {
+        z[i].re = ai;
+    }
+    for (i, &bi) in b.iter().enumerate() {
+        z[i].im = bi;
+    }
+    fft.forward(&mut z);
+
+    // With Z = FFT(a + i b):  A[k] = (Z[k] + conj(Z[n-k]))/2,
+    //                          B[k] = (Z[k] - conj(Z[n-k]))/(2i).
+    // We need C[k] = A[k]·B[k]; compute in place.
+    let mut c = vec![Complex::zero(); n];
+    for k in 0..n {
+        let zk = z[k];
+        let znk = z[(n - k) % n].conj();
+        let ak = (zk + znk) * 0.5;
+        // B[k] = (Z[k] − conj(Z[n−k])) / (2i) = −(i/2)·(Z[k] − conj(Z[n−k]))
+        let diff = zk - znk;
+        let bk = Complex::new(diff.im * 0.5, -diff.re * 0.5);
+        c[k] = ak * bk;
+    }
+    fft.inverse(&mut c);
+    c.truncate(out_len);
+    c.into_iter().map(|v| v.re).collect()
+}
+
+/// Circular convolution of two real length-n sequences (Fact B.8:
+/// `Circ(a)·x = F⁻¹ diag(F a) F x`).
+pub fn circular_convolution(planner: &mut FftPlanner, a: &[f64], x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), x.len());
+    let n = a.len();
+    let lin = linear_convolution(planner, a, x);
+    // Fold the tail back (indices ≥ n wrap modulo n).
+    let mut out = vec![0.0; n];
+    for (t, &v) in lin.iter().enumerate() {
+        out[t % n] += v;
+    }
+    out
+}
+
+/// FLOP estimate for an FFT-based length-n linear convolution
+/// (3 transforms of size 2n, 5·N·log₂N flops each, plus pointwise
+/// products). Used by the Figure 1a FLOP series.
+pub fn fft_conv_flops(n: usize) -> f64 {
+    let padded = next_pow2(2 * n) as f64;
+    3.0 * 5.0 * padded * padded.log2() + 6.0 * padded
+}
+
+/// FLOP count of a naive length-n convolution-matrix multiply
+/// (`conv(a)·x`: n(n+1)/2 multiply-adds).
+pub fn naive_conv_flops(n: usize) -> f64 {
+    (n as f64) * (n as f64 + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn linear_convolution_small() {
+        let mut p = FftPlanner::new();
+        // (1 + 2x)(3 + 4x) = 3 + 10x + 8x^2
+        let out = linear_convolution(&mut p, &[1.0, 2.0], &[3.0, 4.0]);
+        assert_close(&out, &[3.0, 10.0, 8.0], 1e-9);
+    }
+
+    #[test]
+    fn linear_convolution_matches_naive() {
+        let mut p = FftPlanner::new();
+        let mut rng = crate::tensor::Rng::seeded(11);
+        for &(la, lb) in &[(1, 1), (5, 3), (17, 17), (64, 10), (100, 100)] {
+            let a = rng.randn_vec(la);
+            let b = rng.randn_vec(lb);
+            let fast = linear_convolution(&mut p, &a, &b);
+            let mut naive = vec![0.0; la + lb - 1];
+            for i in 0..la {
+                for j in 0..lb {
+                    naive[i + j] += a[i] * b[j];
+                }
+            }
+            assert_close(&fast, &naive, 1e-8);
+        }
+    }
+
+    #[test]
+    fn circular_convolution_matches_matrix() {
+        let mut p = FftPlanner::new();
+        let mut rng = crate::tensor::Rng::seeded(12);
+        let n = 13;
+        let a = rng.randn_vec(n);
+        let x = rng.randn_vec(n);
+        let fast = circular_convolution(&mut p, &a, &x);
+        // Circ(a)[i][j] = a[(i - j) mod n]
+        let mut naive = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                naive[i] += a[(i + n - j) % n] * x[j];
+            }
+        }
+        assert_close(&fast, &naive, 1e-9);
+    }
+
+    #[test]
+    fn dft_naive_roundtrip() {
+        let x: Vec<Complex> =
+            (0..8).map(|i| Complex::new(i as f64, (i as f64).cos())).collect();
+        let f = dft_naive(&x, false);
+        let back = dft_naive(&f, true);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_convolution() {
+        let mut p = FftPlanner::new();
+        assert!(linear_convolution(&mut p, &[], &[1.0]).is_empty());
+    }
+
+    #[test]
+    fn flop_models_ordering() {
+        // FFT flops should beat naive flops for large n.
+        assert!(fft_conv_flops(8192) < naive_conv_flops(8192));
+        // ... and lose for tiny n.
+        assert!(fft_conv_flops(8) > naive_conv_flops(8));
+    }
+}

@@ -1,0 +1,95 @@
+//! Plan cache. The conv-attention hot loop applies thousands of
+//! same-length transforms; building twiddle/bit-reversal tables every
+//! call would dominate. `FftPlanner` hands out `Arc`-shared plans.
+
+use super::bluestein::BluesteinPlan;
+use super::radix2::Radix2Plan;
+use super::Complex;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A length-specific FFT (radix-2 when possible, Bluestein otherwise).
+#[derive(Debug, Clone)]
+pub enum Fft {
+    Radix2(Arc<Radix2Plan>),
+    Bluestein(Arc<BluesteinPlan>),
+}
+
+impl Fft {
+    pub fn len(&self) -> usize {
+        match self {
+            Fft::Radix2(p) => p.len(),
+            Fft::Bluestein(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn forward(&self, x: &mut [Complex]) {
+        match self {
+            Fft::Radix2(p) => p.forward(x),
+            Fft::Bluestein(p) => p.forward(x),
+        }
+    }
+
+    pub fn inverse(&self, x: &mut [Complex]) {
+        match self {
+            Fft::Radix2(p) => p.inverse(x),
+            Fft::Bluestein(p) => p.inverse(x),
+        }
+    }
+}
+
+/// Caches one plan per requested length.
+#[derive(Debug, Default)]
+pub struct FftPlanner {
+    plans: HashMap<usize, Fft>,
+}
+
+impl FftPlanner {
+    pub fn new() -> Self {
+        FftPlanner { plans: HashMap::new() }
+    }
+
+    /// Get (or build) a plan for length `n`.
+    pub fn plan(&mut self, n: usize) -> Fft {
+        self.plans
+            .entry(n)
+            .or_insert_with(|| {
+                if n.is_power_of_two() {
+                    Fft::Radix2(Arc::new(Radix2Plan::new(n)))
+                } else {
+                    Fft::Bluestein(Arc::new(BluesteinPlan::new(n)))
+                }
+            })
+            .clone()
+    }
+
+    /// Number of cached plans (observability for the coordinator metrics).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planner_caches() {
+        let mut p = FftPlanner::new();
+        let _ = p.plan(16);
+        let _ = p.plan(16);
+        let _ = p.plan(12);
+        assert_eq!(p.cached_plans(), 2);
+    }
+
+    #[test]
+    fn planner_picks_backend() {
+        let mut p = FftPlanner::new();
+        assert!(matches!(p.plan(64), Fft::Radix2(_)));
+        assert!(matches!(p.plan(63), Fft::Bluestein(_)));
+    }
+}

@@ -1,0 +1,141 @@
+//! Iterative radix-2 Cooley–Tukey FFT with precomputed bit-reversal and
+//! twiddle tables. Power-of-two lengths only; [`super::bluestein`]
+//! handles the rest.
+
+use super::Complex;
+
+/// Precomputed radix-2 plan for a fixed power-of-two length.
+#[derive(Debug)]
+pub struct Radix2Plan {
+    n: usize,
+    /// Bit-reversal permutation.
+    rev: Vec<u32>,
+    /// Forward twiddles, one flat table: for stage with half-size `h`,
+    /// twiddles `e^{-2πi k / (2h)}`, `k < h`, stored consecutively.
+    twiddles: Vec<Complex>,
+    /// Offsets into `twiddles` per stage.
+    stage_offsets: Vec<usize>,
+}
+
+impl Radix2Plan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "Radix2Plan requires a power of two, got {n}");
+        let bits = n.trailing_zeros();
+        let mut rev = vec![0u32; n];
+        for i in 0..n {
+            rev[i] = (i as u32).reverse_bits() >> (32 - bits.max(1));
+        }
+        if n == 1 {
+            rev[0] = 0;
+        }
+        let mut twiddles = Vec::new();
+        let mut stage_offsets = Vec::new();
+        let mut h = 1;
+        while h < n {
+            stage_offsets.push(twiddles.len());
+            for k in 0..h {
+                let theta = -std::f64::consts::PI * k as f64 / h as f64;
+                twiddles.push(Complex::cis(theta));
+            }
+            h *= 2;
+        }
+        Radix2Plan { n, rev, twiddles, stage_offsets }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// In-place forward transform (DFT with `e^{-2πi}` convention).
+    pub fn forward(&self, x: &mut [Complex]) {
+        self.transform(x, false);
+    }
+
+    /// In-place inverse transform (includes the 1/n normalization).
+    pub fn inverse(&self, x: &mut [Complex]) {
+        self.transform(x, true);
+        let scale = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = *v * scale;
+        }
+    }
+
+    fn transform(&self, x: &mut [Complex], inverse: bool) {
+        let n = self.n;
+        assert_eq!(x.len(), n, "buffer length mismatch");
+        if n == 1 {
+            return;
+        }
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                x.swap(i, j);
+            }
+        }
+        // Butterflies.
+        let mut h = 1;
+        let mut stage = 0;
+        while h < n {
+            let tw = &self.twiddles[self.stage_offsets[stage]..self.stage_offsets[stage] + h];
+            let mut base = 0;
+            while base < n {
+                for k in 0..h {
+                    let w = if inverse { tw[k].conj() } else { tw[k] };
+                    let a = x[base + k];
+                    let b = x[base + k + h] * w;
+                    x[base + k] = a + b;
+                    x[base + k + h] = a - b;
+                }
+                base += 2 * h;
+            }
+            h *= 2;
+            stage += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft_naive;
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = crate::tensor::Rng::seeded(21);
+        for &n in &[1usize, 2, 4, 8, 64, 256] {
+            let x: Vec<Complex> =
+                (0..n).map(|_| Complex::new(rng.randn(), rng.randn())).collect();
+            let want = dft_naive(&x, false);
+            let plan = Radix2Plan::new(n);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a.re - b.re).abs() < 1e-7, "n={n}");
+                assert!((a.im - b.im).abs() < 1e-7, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = crate::tensor::Rng::seeded(22);
+        let n = 128;
+        let x: Vec<Complex> = (0..n).map(|_| Complex::new(rng.randn(), rng.randn())).collect();
+        let plan = Radix2Plan::new(n);
+        let mut y = x.clone();
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a.re - b.re).abs() < 1e-10);
+            assert!((a.im - b.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let _ = Radix2Plan::new(12);
+    }
+}

@@ -1,0 +1,156 @@
+//! Spectrum-cached convolution — the §Perf optimization for the k-conv
+//! apply (`EXPERIMENTS.md §Perf L3-1`).
+//!
+//! `apply_matrix` convolves the *same* basis vector against d columns of
+//! V. The generic `linear_convolution` packs (a, x) into one transform,
+//! which re-transforms `a` every call. Here we:
+//!
+//! 1. transform the (zero-padded) basis vector **once** per basis,
+//! 2. pack **two real columns** per complex forward transform
+//!    (`z = x₁ + i·x₂`; the kernel spectrum is from a real sequence, so
+//!    by linearity `IFFT(A·Z) = y₁ + i·y₂` exactly),
+//!
+//! cutting transform count per basis from `2d` to `d + 1`.
+
+use super::{Complex, Fft, FftPlanner};
+
+/// Precomputed spectrum of a real convolution kernel at a fixed FFT size.
+#[derive(Clone, Debug)]
+pub struct KernelSpectrum {
+    /// FFT of the zero-padded kernel.
+    spec: Vec<Complex>,
+    /// Kernel length (m of the sub-convolution).
+    kernel_len: usize,
+    fft: Fft,
+}
+
+impl KernelSpectrum {
+    /// Build for kernel `a` and signal length `sig_len` (the linear
+    /// convolution needs `a.len() + sig_len − 1` coefficients).
+    pub fn new(planner: &mut FftPlanner, a: &[f64], sig_len: usize) -> Self {
+        let out_len = a.len() + sig_len - 1;
+        let n = out_len.next_power_of_two();
+        let fft = planner.plan(n);
+        let mut spec = vec![Complex::zero(); n];
+        for (i, &v) in a.iter().enumerate() {
+            spec[i].re = v;
+        }
+        fft.forward(&mut spec);
+        KernelSpectrum { spec, kernel_len: a.len(), fft }
+    }
+
+    #[inline]
+    pub fn fft_len(&self) -> usize {
+        self.spec.len()
+    }
+
+    /// Convolve one real signal: returns the first `take` coefficients
+    /// of `a * x`.
+    pub fn conv_one(&self, x: &[f64], take: usize) -> Vec<f64> {
+        let n = self.fft_len();
+        debug_assert!(self.kernel_len + x.len() - 1 <= n);
+        let mut z = vec![Complex::zero(); n];
+        for (i, &v) in x.iter().enumerate() {
+            z[i].re = v;
+        }
+        self.fft.forward(&mut z);
+        for (zi, ai) in z.iter_mut().zip(&self.spec) {
+            *zi = *zi * *ai;
+        }
+        self.fft.inverse(&mut z);
+        z.into_iter().take(take).map(|c| c.re).collect()
+    }
+
+    /// Convolve two real signals with ONE forward + ONE inverse
+    /// transform (two-for-one packing). Returns the first `take`
+    /// coefficients of `a * x₁` and `a * x₂`.
+    pub fn conv_pair(&self, x1: &[f64], x2: &[f64], take: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut scratch = vec![Complex::zero(); self.fft_len()];
+        let mut y1 = vec![0.0; take];
+        let mut y2 = vec![0.0; take];
+        self.conv_pair_into(x1, x2, &mut scratch, &mut y1, &mut y2);
+        (y1, y2)
+    }
+
+    /// Allocation-free pair convolution: caller supplies the complex
+    /// scratch (length [`Self::fft_len`]) and output slices (§Perf L3-3:
+    /// the hot loop reuses one scratch across all column pairs).
+    pub fn conv_pair_into(
+        &self,
+        x1: &[f64],
+        x2: &[f64],
+        scratch: &mut [Complex],
+        y1: &mut [f64],
+        y2: &mut [f64],
+    ) {
+        debug_assert_eq!(x1.len(), x2.len());
+        debug_assert_eq!(y1.len(), y2.len());
+        let n = self.fft_len();
+        assert_eq!(scratch.len(), n);
+        for (i, s) in scratch.iter_mut().enumerate() {
+            *s = if i < x1.len() { Complex::new(x1[i], x2[i]) } else { Complex::zero() };
+        }
+        self.fft.forward(scratch);
+        for (zi, ai) in scratch.iter_mut().zip(&self.spec) {
+            *zi = *zi * *ai;
+        }
+        self.fft.inverse(scratch);
+        for (i, c) in scratch.iter().take(y1.len()).enumerate() {
+            y1[i] = c.re;
+            y2[i] = c.im;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::linear_convolution;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn conv_one_matches_linear_convolution() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(401);
+        for &(la, lx) in &[(8usize, 8usize), (16, 5), (33, 33)] {
+            let a = rng.randn_vec(la);
+            let x = rng.randn_vec(lx);
+            let want = linear_convolution(&mut p, &a, &x);
+            let spec = KernelSpectrum::new(&mut p, &a, lx);
+            let got = spec.conv_one(&x, want.len());
+            for (u, v) in got.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_pair_matches_two_singles() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(402);
+        let a = rng.randn_vec(24);
+        let x1 = rng.randn_vec(24);
+        let x2 = rng.randn_vec(24);
+        let spec = KernelSpectrum::new(&mut p, &a, 24);
+        let take = 24;
+        let (y1, y2) = spec.conv_pair(&x1, &x2, take);
+        let w1 = spec.conv_one(&x1, take);
+        let w2 = spec.conv_one(&x2, take);
+        for i in 0..take {
+            assert!((y1[i] - w1[i]).abs() < 1e-8);
+            assert!((y2[i] - w2[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn spectrum_is_reusable() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(403);
+        let a = rng.randn_vec(16);
+        let spec = KernelSpectrum::new(&mut p, &a, 16);
+        let x = rng.randn_vec(16);
+        let y1 = spec.conv_one(&x, 16);
+        let y2 = spec.conv_one(&x, 16);
+        assert_eq!(y1, y2);
+    }
+}

@@ -1,0 +1,237 @@
+//! The fast gradient path (Theorem 5.6 / Theorem C.17):
+//! `O(k·n·d²·log n)` backward, `O(k·n·d·log n + T_mat(n,d,d))` forward.
+//!
+//! Everything flows through one primitive: `f(x)·w` where
+//! `f = D⁻¹·(M ∘ exp(A₁XA₂ᵀ))` is applied via the recovered k-conv
+//! basis (Lemma C.10). `q(x)` stays in rank-d factored form
+//! `q = c·hᵀ` (Lemma C.12); the Hadamard `p₁ = f ∘ q` multiplies
+//! through the diag-sandwich `Σ_i diag(c_i) f diag(h_i)` (Lemma C.13);
+//! `p₂ = diag(r)·f` with `r_j = ⟨f_j, q_j⟩` computed off the factored
+//! form (Lemmas C.14–C.15).
+
+use super::naive::f_dense;
+use super::AttentionLossProblem;
+use crate::attention::AttentionError;
+use crate::basis::{exp_transform, recover, KConvBasis, RecoverConfig};
+use crate::fft::FftPlanner;
+use crate::tensor::Matrix;
+
+/// Run report for observability / complexity accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FastGradientReport {
+    /// Recovered basis size `k`.
+    pub basis_k: usize,
+    /// Column probes used by recovery.
+    pub recover_probes: usize,
+    /// Number of `f·w` basis applications performed.
+    pub f_applies: usize,
+}
+
+/// The conv-backed normalized-attention operator `f(x)·w`.
+struct FOperator {
+    post_basis: KConvBasis,
+    d_inv: Vec<f64>,
+    planner: FftPlanner,
+    applies: usize,
+}
+
+impl FOperator {
+    /// Build from the problem: recover the basis of `M ∘ (A₁XA₂ᵀ)` using
+    /// `Q = A₁X`, `K = A₂` (so `QKᵀ = A₁XA₂ᵀ`), exp-transform, and take
+    /// row sums as the normalizer.
+    fn build(
+        p: &AttentionLossProblem,
+        x: &Matrix,
+        cfg: &RecoverConfig,
+    ) -> Result<(Self, FastGradientReport), AttentionError> {
+        let q = p.a1.matmul(x);
+        let (pre, stats) = recover(&q, &p.a2, &p.mask, cfg)?;
+        let post = exp_transform(&pre, true);
+        let d = post.row_sums();
+        for (row, &val) in d.iter().enumerate() {
+            if !(val > 0.0) {
+                return Err(AttentionError::DegenerateNormalizer { row, value: val });
+            }
+        }
+        let report = FastGradientReport {
+            basis_k: post.k(),
+            recover_probes: stats.columns_probed,
+            f_applies: 0,
+        };
+        let d_inv = d.iter().map(|&v| 1.0 / v).collect();
+        Ok((
+            FOperator { post_basis: post, d_inv, planner: FftPlanner::new(), applies: 0 },
+            report,
+        ))
+    }
+
+    /// `f·w` — one k-conv FFT apply plus a diagonal scale:
+    /// `O(k·n·log n)` (Lemma C.10).
+    fn apply(&mut self, w: &[f64]) -> Vec<f64> {
+        self.applies += 1;
+        let mut y = self.post_basis.apply(&mut self.planner, w);
+        for (yi, di) in y.iter_mut().zip(&self.d_inv) {
+            *yi *= di;
+        }
+        y
+    }
+
+    /// `f·W` column-wise.
+    fn apply_matrix(&mut self, w: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(w.rows(), w.cols());
+        for c in 0..w.cols() {
+            let y = self.apply(&w.col(c));
+            out.set_col(c, &y);
+        }
+        out
+    }
+}
+
+/// Fast training **forward**: `L(X)` in `O(knd log n + T_mat(n,d,d))`
+/// (Theorem 5.6 forward clause).
+pub fn loss_fast(
+    p: &AttentionLossProblem,
+    x: &Matrix,
+    cfg: &RecoverConfig,
+) -> Result<f64, AttentionError> {
+    let (mut f_op, _) = FOperator::build(p, x, cfg)?;
+    let h = p.h();
+    let c = f_op.apply_matrix(&h).sub(&p.e);
+    Ok(0.5 * c.data().iter().map(|v| v * v).sum::<f64>())
+}
+
+/// Fast **backward**: `∇L = A₁ᵀ p(x) A₂` in `O(k·n·d²·log n)`
+/// (Theorem C.17). Returns the `d×d` gradient and a run report.
+pub fn grad_fast(
+    p: &AttentionLossProblem,
+    x: &Matrix,
+    cfg: &RecoverConfig,
+) -> Result<(Matrix, FastGradientReport), AttentionError> {
+    let n = p.n();
+    let d = p.d();
+    let (mut f_op, mut report) = FOperator::build(p, x, cfg)?;
+
+    // h(y) = A₃Y — T_mat(n,d,d) (Lemma C.10 part 2).
+    let h = p.h();
+    // c = f·h − E — d basis applies (Lemma C.11).
+    let fh = f_op.apply_matrix(&h);
+    let c = fh.sub(&p.e);
+    // q = c·hᵀ, kept factored (Lemma C.12): U_a = c, U_b = h.
+
+    // r_j = ⟨f_j, q_j⟩ = ⟨(f·h)_j, c_j⟩ (Lemma C.14, using q = c hᵀ ⇒
+    // f·qᵀ = (f·h)·cᵀ whose diagonal is r).
+    let r: Vec<f64> = (0..n)
+        .map(|j| crate::tensor::dot(fh.row(j), c.row(j)))
+        .collect();
+
+    // p·A₂, one column at a time: p·w = p₁·w − p₂·w with
+    //   p₁·w = Σ_{i<d} c_{:,i} ∘ (f·(h_{:,i} ∘ w))   (Lemma C.13)
+    //   p₂·w = r ∘ (f·w)                              (Lemma C.15)
+    let mut pa2 = Matrix::zeros(n, d);
+    let mut scratch = vec![0.0; n];
+    for col in 0..d {
+        let w = p.a2.col(col);
+        let mut acc = vec![0.0; n];
+        for i in 0..d {
+            // h_{:,i} ∘ w
+            for (row, s) in scratch.iter_mut().enumerate() {
+                *s = h[(row, i)] * w[row];
+            }
+            let fw = f_op.apply(&scratch);
+            for row in 0..n {
+                acc[row] += c[(row, i)] * fw[row];
+            }
+        }
+        let fw = f_op.apply(&w);
+        for row in 0..n {
+            acc[row] -= r[row] * fw[row];
+        }
+        pa2.set_col(col, &acc);
+    }
+    report.f_applies = f_op.applies;
+
+    // ∇L = A₁ᵀ (p·A₂) — T_mat(d,n,d) (Lemma C.16).
+    Ok((p.a1.transpose().matmul(&pa2), report))
+}
+
+/// Dense-f variant of the fast pipeline (ablation: same factored-q /
+/// diag-sandwich structure but `f·w` via the materialized matrix,
+/// `O(n²)` per apply). Lets the benches separate the conv speedup from
+/// the tensor-trick speedup.
+pub fn grad_factored_dense(p: &AttentionLossProblem, x: &Matrix) -> Matrix {
+    let n = p.n();
+    let d = p.d();
+    let f = f_dense(p, x);
+    let h = p.h();
+    let fh = f.matmul(&h);
+    let c = fh.sub(&p.e);
+    let r: Vec<f64> = (0..n)
+        .map(|j| crate::tensor::dot(fh.row(j), c.row(j)))
+        .collect();
+    let mut pa2 = Matrix::zeros(n, d);
+    let mut scratch = vec![0.0; n];
+    for col in 0..d {
+        let w = p.a2.col(col);
+        let mut acc = vec![0.0; n];
+        for i in 0..d {
+            for (row, s) in scratch.iter_mut().enumerate() {
+                *s = h[(row, i)] * w[row];
+            }
+            let fw = f.matvec(&scratch);
+            for row in 0..n {
+                acc[row] += c[(row, i)] * fw[row];
+            }
+        }
+        let fw = f.matvec(&w);
+        for row in 0..n {
+            acc[row] -= r[row] * fw[row];
+        }
+        pa2.set_col(col, &acc);
+    }
+    p.a1.transpose().matmul(&pa2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    #[test]
+    fn factored_dense_matches_naive() {
+        let mut rng = Rng::seeded(171);
+        let p = AttentionLossProblem::random_structured(14, 3, &mut rng);
+        let x = Matrix::randn(3, 3, &mut rng).scale(0.4);
+        let want = super::super::naive::grad_naive(&p, &x);
+        let got = grad_factored_dense(&p, &x);
+        assert!(max_abs_diff(&want, &got) < 1e-9);
+    }
+
+    #[test]
+    fn f_operator_matches_dense_f() {
+        let mut rng = Rng::seeded(172);
+        let p = AttentionLossProblem::random_structured(18, 4, &mut rng);
+        let x = Matrix::eye(4).scale(0.3);
+        let cfg = RecoverConfig::exact(18);
+        let (mut f_op, _) = FOperator::build(&p, &x, &cfg).unwrap();
+        let f = f_dense(&p, &x);
+        let w = rng.randn_vec(18);
+        let fast = f_op.apply(&w);
+        let dense = f.matvec(&w);
+        for (a, b) in fast.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn report_counts_applies() {
+        let mut rng = Rng::seeded(173);
+        let p = AttentionLossProblem::random_structured(12, 3, &mut rng);
+        let x = Matrix::eye(3);
+        let cfg = RecoverConfig::exact(12);
+        let (_, report) = grad_fast(&p, &x, &cfg).unwrap();
+        // d applies for f·h, plus per output column (d): d Hadamard
+        // applies + 1 plain apply ⇒ d + d·(d+1).
+        let d = 3;
+        assert_eq!(report.f_applies, d + d * (d + 1));
+    }
+}

@@ -1,0 +1,124 @@
+//! Dense oracles for the attention loss: `O(n²d)` analytic gradient and
+//! finite differences. These anchor the correctness of [`super::fast`].
+
+use super::AttentionLossProblem;
+use crate::tensor::Matrix;
+
+/// `f(x) = D(X)⁻¹ (M ∘ exp(A₁XA₂ᵀ))` — dense (Definition C.2 rows).
+pub fn f_dense(p: &AttentionLossProblem, x: &Matrix) -> Matrix {
+    let n = p.n();
+    let logits = p.a1.matmul(x).matmul(&p.a2.transpose());
+    let u = Matrix::from_fn(n, n, |i, j| {
+        if p.mask.entry(i, j) {
+            logits[(i, j)].exp()
+        } else {
+            0.0
+        }
+    });
+    let d = u.row_sums();
+    let inv: Vec<f64> = d.iter().map(|&v| 1.0 / v).collect();
+    u.scale_rows(&inv)
+}
+
+/// Dense loss `L(X)` (Definition 5.1).
+pub fn loss_naive(p: &AttentionLossProblem, x: &Matrix) -> f64 {
+    let f = f_dense(p, x);
+    let h = p.h();
+    let c = f.matmul(&h).sub(&p.e);
+    0.5 * c.data().iter().map(|v| v * v).sum::<f64>()
+}
+
+/// Dense analytic gradient: `∇L = A₁ᵀ p(x) A₂` with
+/// `p_j = (diag(f_j) − f_j f_jᵀ) q_j`, `q = c hᵀ` (Lemma C.9).
+pub fn grad_naive(p: &AttentionLossProblem, x: &Matrix) -> Matrix {
+    let n = p.n();
+    let f = f_dense(p, x);
+    let h = p.h();
+    let c = f.matmul(&h).sub(&p.e); // n×d
+    let q = c.matmul(&h.transpose()); // n×n (dense oracle: fine)
+    // p rows: diag(f_j) q_j − ⟨f_j, q_j⟩ f_j.
+    let mut pmat = Matrix::zeros(n, n);
+    for j in 0..n {
+        let fj = f.row(j);
+        let qj = q.row(j);
+        let r: f64 = crate::tensor::dot(fj, qj);
+        let prow = pmat.row_mut(j);
+        for l in 0..n {
+            prow[l] = fj[l] * qj[l] - r * fj[l];
+        }
+    }
+    p.a1.transpose().matmul(&pmat).matmul(&p.a2)
+}
+
+/// Central finite differences — the ground-truth gradient.
+pub fn grad_finite_diff(p: &AttentionLossProblem, x: &Matrix, h: f64) -> Matrix {
+    let d = x.rows();
+    let mut g = Matrix::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            let mut xp = x.clone();
+            xp[(i, j)] += h;
+            let mut xm = x.clone();
+            xm[(i, j)] -= h;
+            g[(i, j)] = (loss_naive(p, &xp) - loss_naive(p, &xm)) / (2.0 * h);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Mask;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn f_rows_sum_to_one_on_support() {
+        let mut rng = Rng::seeded(161);
+        let p = AttentionLossProblem::random_structured(10, 3, &mut rng);
+        let x = Matrix::randn(3, 3, &mut rng).scale(0.5);
+        let f = f_dense(&p, &x);
+        for i in 0..10 {
+            let s: f64 = f.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn loss_is_zero_when_e_matches() {
+        let mut rng = Rng::seeded(162);
+        let mut p = AttentionLossProblem::random_structured(8, 3, &mut rng);
+        let x = Matrix::randn(3, 3, &mut rng).scale(0.3);
+        let f = f_dense(&p, &x);
+        p.e = f.matmul(&p.h());
+        assert!(loss_naive(&p, &x).abs() < 1e-18);
+        // And the gradient at the optimum is ~0.
+        let g = grad_naive(&p, &x);
+        assert!(crate::tensor::linf_norm_mat(&g) < 1e-12);
+    }
+
+    #[test]
+    fn masked_positions_do_not_affect_gradient() {
+        // Changing K rows that the mask hides from row 0 must not change
+        // row-0's contribution — sanity on mask handling.
+        let mut rng = Rng::seeded(163);
+        let n = 6;
+        let d = 2;
+        let a = Matrix::randn(n, d, &mut rng);
+        let p = AttentionLossProblem::new(
+            a.clone(),
+            a.clone(),
+            a,
+            Matrix::eye(d),
+            Matrix::zeros(n, d),
+            Mask::causal(n),
+        );
+        let x = Matrix::eye(d).scale(0.5);
+        let f = f_dense(&p, &x);
+        // Row 0 attends only to itself under the causal mask.
+        assert!((f[(0, 0)] - 1.0).abs() < 1e-12);
+        for j in 1..n {
+            assert_eq!(f[(0, j)], 0.0);
+        }
+    }
+}

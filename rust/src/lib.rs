@@ -1,0 +1,85 @@
+//! # conv-basis
+//!
+//! Production-grade reproduction of *“Conv-Basis: A New Paradigm for
+//! Efficient Attention Inference and Gradient Computation in
+//! Transformers”* (EMNLP 2025 Findings).
+//!
+//! The library decomposes the (masked, pre-softmax) attention matrix
+//! `H = M ∘ (QKᵀ)` into a sum of **sub-convolution matrices**
+//! `H = Σ_{r∈[k]} conv(b_r, m_r)` (a *k-conv basis*, Definition 3.11 of
+//! the paper), recovers that basis from `Q, K` alone with `O(k·n·d·log n)`
+//! work via binary search (Algorithms 2–3), and then evaluates attention
+//! `Y = D⁻¹·(M ∘ exp(QKᵀ))·V` through FFTs in `O(k·n·d·log n)` instead of
+//! the quadratic `O(n²·d)` (Algorithm 1, Theorem 4.4). The same machinery
+//! accelerates the training gradient (Theorem 5.6) and extends the
+//! low-rank attention approximation of [AS23] to masked attention
+//! (Theorem 6.5).
+//!
+//! ## Crate layout
+//!
+//! * [`tensor`] — dense row-major matrix/vector micro-BLAS (the substrate
+//!   everything else is written against; no external linear algebra).
+//! * [`fft`] — from-scratch complex FFT (iterative radix-2 Cooley–Tukey +
+//!   Bluestein for arbitrary lengths) and a plan cache.
+//! * [`conv`] — structured matrices: `conv(a)`, sub-convolution
+//!   `conv(a, m)`, Toeplitz, circulant; FFT-backed multiplies.
+//! * [`basis`] — the k-conv basis type, exact decomposition
+//!   (Lemma 3.12), the `Recover` algorithm (Algorithm 2) with binary
+//!   search (Algorithm 3), and the exp-transform (Lemma B.16).
+//! * [`attention`] — exact attention oracle, conv-basis attention
+//!   (Algorithm 1), masks (causal / LongLora / continuous-row /
+//!   distinct-r / row-change), RoPE, and the full (non-causal)
+//!   self-attention split of Appendix A.
+//! * [`lowrank`] — the [AS23] `(ε,k)`-approximation via polynomial
+//!   features and the mask-aware multiplies of Appendix D
+//!   (prefix-sum, support-delta, segment-tree, distinct-r).
+//! * [`gradient`] — attention-loss gradient (Definition 5.1): dense
+//!   oracle, finite differences, and the fast conv+low-rank path of
+//!   Appendix C.
+//! * [`model`] — a small decoder-only transformer with a pluggable
+//!   attention backend, Adam, and a training loop (used by the Figure 4
+//!   and end-to-end experiments).
+//! * [`data`] — byte-level tokenizer, synthetic corpora, the synthetic
+//!   sentiment task standing in for IMDB, and serving workload traces.
+//! * [`coordinator`] — the L3 serving layer: request router, dynamic
+//!   batcher, per-model conv-basis cache, scheduler and metrics.
+//! * [`runtime`] — PJRT CPU client wrapper loading the AOT artifacts
+//!   produced by `python/compile/aot.py` (HLO text).
+
+pub mod attention;
+pub mod basis;
+pub mod conv;
+pub mod coordinator;
+pub mod data;
+pub mod fft;
+pub mod gradient;
+pub mod lowrank;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::attention::rope::{rope_structured_qk, Rope};
+    pub use crate::attention::{
+        conv_attention, exact_attention, exact_attention_unmasked, ConvAttentionOutput, Mask,
+    };
+    pub use crate::basis::{
+        exp_transform, recover, ConvBasis, KConvBasis, RecoverConfig, RecoverError,
+    };
+    pub use crate::conv::{conv_apply, conv_apply_naive, sub_conv_apply, ConvMatrix, SubConvMatrix};
+    pub use crate::fft::FftPlanner;
+    pub use crate::lowrank::{LowRankAttention, LowRankConfig};
+    pub use crate::tensor::{max_abs_diff, Matrix, Rng, Vector};
+}
+
+#[cfg(test)]
+mod lib_tests {
+    #[test]
+    fn prelude_compiles() {
+        use crate::prelude::*;
+        let m = Matrix::zeros(2, 2);
+        assert_eq!(m.rows(), 2);
+    }
+}

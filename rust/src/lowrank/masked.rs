@@ -1,0 +1,380 @@
+//! Mask-aware low-rank multiplies: `(W ∘ U₁U₂ᵀ)·v` for each mask family
+//! (Appendix D.3–D.6). All kernels share the Lemma D.5 identity
+//! `Y_j = ⟨(U₁ᵀ)_j, Σ_{l ∈ S_j} (U₂ᵀ)_l v_l⟩` — they differ only in how
+//! the per-row support sums `c_j` are maintained.
+
+use super::segtree::VecSegTree;
+use crate::attention::Mask;
+use crate::tensor::{dot, Matrix};
+
+/// Dense oracle (tests / ablation baseline): materialize `W ∘ U₁U₂ᵀ`.
+pub fn dense_multiply(mask: &Mask, u1: &Matrix, u2: &Matrix, v: &[f64]) -> Vec<f64> {
+    let a = mask.apply(&u1.matmul(&u2.transpose()));
+    a.matvec(v)
+}
+
+/// Algorithm 4 (causal mask, Lemma D.6): running prefix sum
+/// `c_j = Σ_{l ≤ j} (U₂ᵀ)_l v_l` — `O(nk)`.
+pub fn causal_multiply(u1: &Matrix, u2: &Matrix, v: &[f64]) -> Vec<f64> {
+    let (n, k) = u2.shape();
+    assert_eq!(u1.shape(), (n, k));
+    assert_eq!(v.len(), n);
+    let mut c = vec![0.0; k];
+    let mut y = Vec::with_capacity(n);
+    for j in 0..n {
+        let row = u2.row(j);
+        let vj = v[j];
+        for (ci, &ui) in c.iter_mut().zip(row) {
+            *ci += ui * vj;
+        }
+        y.push(dot(u1.row(j), &c));
+    }
+    y
+}
+
+/// Algorithm 5 (row-change-by-amortized-constant mask, Lemma D.8):
+/// maintain `c_j` by applying the support deltas
+/// `Q⁺_j = S_j \ S_{j−1}`, `Q⁻_j = S_{j−1} \ S_j` — `O(k·ΣB_j)`.
+///
+/// The deltas come from [`Mask::entry`] row scans here (`O(n)` per row
+/// to *find* the delta, `O(k·B_j)` to apply it); masks that know their
+/// deltas analytically should pre-compute them and call
+/// [`row_change_multiply_with_deltas`].
+pub fn row_change_multiply(mask: &Mask, u1: &Matrix, u2: &Matrix, v: &[f64]) -> Vec<f64> {
+    let n = mask.n();
+    let mut deltas: Vec<(Vec<usize>, Vec<usize>)> = Vec::with_capacity(n);
+    let mut prev = vec![false; n];
+    for i in 0..n {
+        let mut add = Vec::new();
+        let mut del = Vec::new();
+        for j in 0..n {
+            let cur = mask.entry(i, j);
+            if cur && !prev[j] {
+                add.push(j);
+            } else if !cur && prev[j] {
+                del.push(j);
+            }
+            prev[j] = cur;
+        }
+        deltas.push((add, del));
+    }
+    row_change_multiply_with_deltas(&deltas, u1, u2, v)
+}
+
+/// Algorithm 5 core, with the support deltas supplied by the caller.
+pub fn row_change_multiply_with_deltas(
+    deltas: &[(Vec<usize>, Vec<usize>)],
+    u1: &Matrix,
+    u2: &Matrix,
+    v: &[f64],
+) -> Vec<f64> {
+    let (n, k) = u2.shape();
+    assert_eq!(deltas.len(), n);
+    let mut c = vec![0.0; k];
+    let mut y = Vec::with_capacity(n);
+    for (j, (add, del)) in deltas.iter().enumerate() {
+        for &i in add {
+            let row = u2.row(i);
+            let vi = v[i];
+            for (ci, &ui) in c.iter_mut().zip(row) {
+                *ci += ui * vi;
+            }
+        }
+        for &i in del {
+            let row = u2.row(i);
+            let vi = v[i];
+            for (ci, &ui) in c.iter_mut().zip(row) {
+                *ci -= ui * vi;
+            }
+        }
+        y.push(dot(u1.row(j), &c));
+    }
+    y
+}
+
+/// Analytic support deltas for the structured masks (sliding-window /
+/// causal) — `O(B_j)` per row instead of the `O(n)` scan.
+pub fn analytic_deltas(mask: &Mask) -> Option<Vec<(Vec<usize>, Vec<usize>)>> {
+    use crate::attention::MaskKind;
+    let n = mask.n();
+    match mask.kind() {
+        MaskKind::Causal => Some((0..n).map(|i| (vec![i], vec![])).collect()),
+        MaskKind::SlidingWindow { w, sink } => Some(
+            (0..n)
+                .map(|i| {
+                    let add = vec![i];
+                    let mut del = Vec::new();
+                    // Row i keeps {j: i−j < w} ∪ {j < sink}; leaving row
+                    // i−1 → i drops column i−w if it is ≥ sink.
+                    if i >= *w && i - *w >= *sink {
+                        del.push(i - *w);
+                    }
+                    (add, del)
+                })
+                .collect(),
+        ),
+        _ => None,
+    }
+}
+
+/// Algorithm 6 (continuous-row mask, Lemma D.9): segment tree over
+/// `b_i = (U₂ᵀ)_i v_i`, range query per row — `O(nk log n)`.
+pub fn continuous_row_multiply_segtree(
+    u1: &Matrix,
+    u2: &Matrix,
+    v: &[f64],
+    s: &[usize],
+    t: &[usize],
+) -> Vec<f64> {
+    let (n, k) = u2.shape();
+    let tree = VecSegTree::build(n, k, |i, out| {
+        let row = u2.row(i);
+        let vi = v[i];
+        for (o, &ui) in out.iter_mut().zip(row) {
+            *o = ui * vi;
+        }
+    });
+    let mut y = Vec::with_capacity(n);
+    let mut c = vec![0.0; k];
+    for i in 0..n {
+        c.fill(0.0);
+        tree.range_sum_into(s[i], t[i], &mut c);
+        y.push(dot(u1.row(i), &c));
+    }
+    y
+}
+
+/// Ablation: continuous-row masks via plain prefix sums —
+/// `c_{[s,t]} = P_{t+1} − P_s`, `O(nk)` and strictly less work than the
+/// segment tree the paper prescribes (DESIGN.md §5; benched in
+/// `benches/ablations.rs`).
+pub fn continuous_row_multiply_prefix(
+    u1: &Matrix,
+    u2: &Matrix,
+    v: &[f64],
+    s: &[usize],
+    t: &[usize],
+) -> Vec<f64> {
+    let (n, k) = u2.shape();
+    // P[i] = Σ_{l < i} b_l, flat (n+1)×k.
+    let mut prefix = vec![0.0; (n + 1) * k];
+    for i in 0..n {
+        let row = u2.row(i);
+        let vi = v[i];
+        let (lo, hi) = prefix.split_at_mut((i + 1) * k);
+        let prev = &lo[i * k..];
+        let cur = &mut hi[..k];
+        for j in 0..k {
+            cur[j] = prev[j] + row[j] * vi;
+        }
+    }
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let lo = &prefix[s[i] * k..(s[i] + 1) * k];
+        let hi = &prefix[(t[i] + 1) * k..(t[i] + 2) * k];
+        let mut acc = 0.0;
+        let u_row = u1.row(i);
+        for j in 0..k {
+            acc += u_row[j] * (hi[j] - lo[j]);
+        }
+        y.push(acc);
+    }
+    y
+}
+
+/// Lemma D.10 (distinct-r **columns** mask):
+/// `Y = Σ_j diag(W_{*,h(j)}) U₁ (U₂ᵀ)_{*,S_j} v_{S_j}` — `O(rnk)`.
+pub fn distinct_cols_multiply(
+    u1: &Matrix,
+    u2: &Matrix,
+    v: &[f64],
+    assign: &[usize],
+    patterns: &[Vec<bool>],
+) -> Vec<f64> {
+    let (n, k) = u2.shape();
+    let r = patterns.len();
+    // Group sums w_g = Σ_{i ∈ S_g} (U₂ᵀ)_i v_i.
+    let mut group_sums = vec![0.0; r * k];
+    for i in 0..n {
+        let g = assign[i];
+        let row = u2.row(i);
+        let vi = v[i];
+        let gs = &mut group_sums[g * k..(g + 1) * k];
+        for (s, &ui) in gs.iter_mut().zip(row) {
+            *s += ui * vi;
+        }
+    }
+    let mut y = vec![0.0; n];
+    for g in 0..r {
+        let gs = &group_sums[g * k..(g + 1) * k];
+        // The column pattern for group g: patterns[g][i] describes
+        // column entries (i.e. W[i][j] for j ∈ S_g equals patterns[g][i]).
+        for i in 0..n {
+            if patterns[g][i] {
+                y[i] += dot(u1.row(i), gs);
+            }
+        }
+    }
+    y
+}
+
+/// Lemma D.11 (distinct-r **rows** mask):
+/// `Y = Σ_j diag(e_{S_j}) U₁ U₂ᵀ diag(W_{h(j),*}) v` — `O(rnk)`.
+pub fn distinct_rows_multiply(
+    u1: &Matrix,
+    u2: &Matrix,
+    v: &[f64],
+    assign: &[usize],
+    patterns: &[Vec<bool>],
+) -> Vec<f64> {
+    let (n, k) = u2.shape();
+    let r = patterns.len();
+    // For each group pattern, w_g = U₂ᵀ (pattern ∘ v).
+    let mut group_w = vec![0.0; r * k];
+    for (g, pat) in patterns.iter().enumerate() {
+        let w = &mut group_w[g * k..(g + 1) * k];
+        for i in 0..n {
+            if pat[i] {
+                let row = u2.row(i);
+                let vi = v[i];
+                for (s, &ui) in w.iter_mut().zip(row) {
+                    *s += ui * vi;
+                }
+            }
+        }
+    }
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let g = assign[i];
+        y[i] = dot(u1.row(i), &group_w[g * k..(g + 1) * k]);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn setup(n: usize, k: usize, seed: u64) -> (Matrix, Matrix, Vec<f64>) {
+        let mut rng = Rng::seeded(seed);
+        let u1 = Matrix::randn(n, k, &mut rng);
+        let u2 = Matrix::randn(n, k, &mut rng);
+        let v = rng.randn_vec(n);
+        (u1, u2, v)
+    }
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn causal_matches_dense() {
+        let (u1, u2, v) = setup(23, 5, 141);
+        let mask = Mask::causal(23);
+        assert_close(&causal_multiply(&u1, &u2, &v), &dense_multiply(&mask, &u1, &u2, &v));
+    }
+
+    #[test]
+    fn row_change_matches_dense_all_masks() {
+        let n = 20;
+        let (u1, u2, v) = setup(n, 4, 142);
+        for mask in [
+            Mask::causal(n),
+            Mask::sliding_window(n, 4, 2),
+            Mask::continuous_row(
+                (0..n).map(|i| i / 3).collect(),
+                (0..n).map(|i| (i / 3 + 5).min(n - 1)).collect(),
+            ),
+        ] {
+            assert_close(
+                &row_change_multiply(&mask, &u1, &u2, &v),
+                &dense_multiply(&mask, &u1, &u2, &v),
+            );
+        }
+    }
+
+    #[test]
+    fn analytic_deltas_match_scanned() {
+        let n = 24;
+        let (u1, u2, v) = setup(n, 3, 143);
+        for mask in [Mask::causal(n), Mask::sliding_window(n, 5, 2)] {
+            let deltas = analytic_deltas(&mask).unwrap();
+            let via_analytic = row_change_multiply_with_deltas(&deltas, &u1, &u2, &v);
+            let via_scan = row_change_multiply(&mask, &u1, &u2, &v);
+            assert_close(&via_analytic, &via_scan);
+        }
+    }
+
+    #[test]
+    fn delta_sizes_match_row_change_bounds() {
+        let mask = Mask::sliding_window(32, 6, 1);
+        let deltas = analytic_deltas(&mask).unwrap();
+        let bounds = mask.row_change_bounds();
+        for (i, (add, del)) in deltas.iter().enumerate() {
+            assert_eq!(add.len() + del.len(), bounds[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn segtree_and_prefix_match_dense() {
+        let n = 29;
+        let (u1, u2, v) = setup(n, 6, 144);
+        let s: Vec<usize> = (0..n).map(|i| i / 2).collect();
+        let t: Vec<usize> = (0..n).map(|i| (i / 2 + 9).min(n - 1)).collect();
+        let mask = Mask::continuous_row(s.clone(), t.clone());
+        let want = dense_multiply(&mask, &u1, &u2, &v);
+        assert_close(&continuous_row_multiply_segtree(&u1, &u2, &v, &s, &t), &want);
+        assert_close(&continuous_row_multiply_prefix(&u1, &u2, &v, &s, &t), &want);
+    }
+
+    #[test]
+    fn distinct_rows_matches_dense() {
+        let n = 21;
+        let (u1, u2, v) = setup(n, 4, 145);
+        let mut patterns = vec![vec![false; n]; 3];
+        for j in 0..n {
+            patterns[0][j] = j % 2 == 0;
+            patterns[1][j] = j < 10;
+            patterns[2][j] = j % 3 == 1;
+        }
+        let assign: Vec<usize> = (0..n).map(|i| (i * 7) % 3).collect();
+        let mask = Mask::distinct_rows(assign.clone(), patterns.clone());
+        assert_close(
+            &distinct_rows_multiply(&u1, &u2, &v, &assign, &patterns),
+            &dense_multiply(&mask, &u1, &u2, &v),
+        );
+    }
+
+    #[test]
+    fn distinct_cols_matches_dense() {
+        let n = 21;
+        let (u1, u2, v) = setup(n, 4, 146);
+        let mut patterns = vec![vec![false; n]; 3];
+        for j in 0..n {
+            patterns[0][j] = j % 2 == 1;
+            patterns[1][j] = j > 5;
+            patterns[2][j] = j % 4 == 0;
+        }
+        let assign: Vec<usize> = (0..n).map(|i| (i * 5) % 3).collect();
+        let mask = Mask::distinct_cols(assign.clone(), patterns.clone());
+        assert_close(
+            &distinct_cols_multiply(&u1, &u2, &v, &assign, &patterns),
+            &dense_multiply(&mask, &u1, &u2, &v),
+        );
+    }
+
+    #[test]
+    fn empty_support_rows_give_zero() {
+        let n = 8;
+        let (u1, u2, v) = setup(n, 3, 147);
+        // Pattern with an all-false row.
+        let patterns = vec![vec![false; n], vec![true; n]];
+        let assign = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        let y = distinct_rows_multiply(&u1, &u2, &v, &assign, &patterns);
+        assert_eq!(y[0], 0.0);
+        assert_ne!(y[1], 0.0);
+    }
+}

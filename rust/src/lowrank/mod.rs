@@ -1,0 +1,340 @@
+//! Low-rank attention approximation with masks (Section 6 / Appendix D).
+//!
+//! [AS23] approximate `H = exp(QKᵀ/d)` by `U₁U₂ᵀ` with
+//! `U₁, U₂ ∈ R^{n×k}` (an `(ε,k)`-approximation, Definition D.1) — but
+//! only without a mask. The paper's Theorem 6.5 extends it: for a mask
+//! `W`, compute `Ỹ = D̃⁻¹ (W ∘ U₁U₂ᵀ) V` where each mask family admits a
+//! fast `(W ∘ U₁U₂ᵀ)·v` kernel:
+//!
+//! | mask | algorithm | time |
+//! |---|---|---|
+//! | causal (Def 3.2) | Alg 4, prefix sums | `O(nk)` |
+//! | row-change `B_j` (Def 6.1) | Alg 5, support deltas | `O(k ΣB_j)` |
+//! | continuous rows (Def 6.2) | Alg 6, segment tree | `O(nk log n)` |
+//! | distinct r rows/cols (Defs 6.3/6.4) | Lemmas D.10–D.12 | `O(rnk)` |
+//!
+//! `U₁, U₂` come from truncated-Taylor polynomial features (the
+//! constructive core of [AS23]'s Lemma 3.4 = Lemma D.2 here).
+
+pub mod masked;
+pub mod segtree;
+
+use crate::attention::{Mask, MaskKind};
+use crate::tensor::Matrix;
+
+/// Configuration of the polynomial-feature approximation.
+#[derive(Clone, Copy, Debug)]
+pub struct LowRankConfig {
+    /// Taylor truncation degree `g`; feature rank is `C(d+g, g)`.
+    pub degree: usize,
+    /// Logit scaling: approximates `exp(QKᵀ / scale)`. The paper (and
+    /// [AS23]) use `scale = d`.
+    pub scale: f64,
+}
+
+impl LowRankConfig {
+    pub fn new(degree: usize, scale: f64) -> Self {
+        assert!(scale > 0.0);
+        LowRankConfig { degree, scale }
+    }
+
+    /// Feature rank `k = C(d+g, g)` for hidden dim `d`.
+    pub fn rank(&self, d: usize) -> usize {
+        binomial(d + self.degree, self.degree)
+    }
+}
+
+fn binomial(n: usize, k: usize) -> usize {
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    let mut den: u128 = 1;
+    for i in 0..k {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as usize
+}
+
+/// The `(ε,k)`-approximation `exp(QKᵀ/scale) ≈ U₁U₂ᵀ`.
+#[derive(Clone, Debug)]
+pub struct LowRankFactors {
+    pub u1: Matrix,
+    pub u2: Matrix,
+}
+
+/// Build polynomial features: `φ(x)` has one coordinate per multiset
+/// `α` of size `t ≤ g` over `[d]`, with value
+/// `sqrt(C(t,α) / (t!·scaleᵗ)) · x^α`, so that
+/// `φ(q)·φ(k) = Σ_{t≤g} (q·k)ᵗ / (t!·scaleᵗ) ≈ exp(q·k/scale)`.
+pub fn poly_features(x: &Matrix, cfg: &LowRankConfig) -> Matrix {
+    let (n, d) = x.shape();
+    let g = cfg.degree;
+    // Enumerate multisets over [d] of each size t ≤ g, as non-decreasing
+    // index tuples, along with the scaled multinomial coefficient.
+    let mut coords: Vec<(Vec<usize>, f64)> = Vec::new();
+    let mut stack: Vec<usize> = Vec::new();
+    enumerate_multisets(d, g, &mut stack, &mut coords, cfg.scale);
+    let k = coords.len();
+    debug_assert_eq!(k, cfg.rank(d));
+
+    let mut out = Matrix::zeros(n, k);
+    for i in 0..n {
+        let row = x.row(i);
+        for (c, (idx, coeff)) in coords.iter().enumerate() {
+            let mut v = *coeff;
+            for &j in idx {
+                v *= row[j];
+            }
+            out[(i, c)] = v;
+        }
+    }
+    out
+}
+
+fn enumerate_multisets(
+    d: usize,
+    g: usize,
+    stack: &mut Vec<usize>,
+    coords: &mut Vec<(Vec<usize>, f64)>,
+    scale: f64,
+) {
+    // Record the current multiset (including the empty one).
+    let t = stack.len();
+    // multinomial C(t, α) = t! / ∏ α_j!
+    let mut fact_t = 1.0;
+    for i in 1..=t {
+        fact_t *= i as f64;
+    }
+    let mut denom = 1.0;
+    let mut run = 1;
+    for w in 1..stack.len() {
+        if stack[w] == stack[w - 1] {
+            run += 1;
+            denom *= run as f64;
+        } else {
+            run = 1;
+        }
+    }
+    let multinomial = fact_t / denom;
+    let coeff = (multinomial / (fact_t * scale.powi(t as i32))).sqrt();
+    coords.push((stack.clone(), coeff));
+
+    if t == g {
+        return;
+    }
+    let start = stack.last().copied().unwrap_or(0);
+    for j in start..d {
+        stack.push(j);
+        enumerate_multisets(d, g, stack, coords, scale);
+        stack.pop();
+    }
+}
+
+/// Build the factors for given `Q, K` (Lemma D.2 constructive step).
+pub fn build_factors(q: &Matrix, k: &Matrix, cfg: &LowRankConfig) -> LowRankFactors {
+    LowRankFactors { u1: poly_features(q, cfg), u2: poly_features(k, cfg) }
+}
+
+/// Masked low-rank attention (Theorem 6.5):
+/// `Ỹ = D̃⁻¹ (W ∘ U₁U₂ᵀ) V`, with the per-mask fast kernels.
+#[derive(Clone, Debug)]
+pub struct LowRankAttention {
+    factors: LowRankFactors,
+    mask: Mask,
+}
+
+impl LowRankAttention {
+    pub fn new(q: &Matrix, k: &Matrix, mask: Mask, cfg: &LowRankConfig) -> Self {
+        assert_eq!(q.rows(), mask.n());
+        LowRankAttention { factors: build_factors(q, k, cfg), mask }
+    }
+
+    pub fn from_factors(factors: LowRankFactors, mask: Mask) -> Self {
+        LowRankAttention { factors, mask }
+    }
+
+    pub fn factors(&self) -> &LowRankFactors {
+        &self.factors
+    }
+
+    pub fn mask(&self) -> &Mask {
+        &self.mask
+    }
+
+    /// `(W ∘ U₁U₂ᵀ)·v` through the mask-specific kernel.
+    pub fn masked_multiply(&self, v: &[f64]) -> Vec<f64> {
+        let f = &self.factors;
+        match self.mask.kind() {
+            MaskKind::Causal => masked::causal_multiply(&f.u1, &f.u2, v),
+            MaskKind::SlidingWindow { .. } => {
+                masked::row_change_multiply(&self.mask, &f.u1, &f.u2, v)
+            }
+            MaskKind::ContinuousRow { s, t } => {
+                masked::continuous_row_multiply_segtree(&f.u1, &f.u2, v, s, t)
+            }
+            MaskKind::DistinctRows { assign, patterns } => {
+                masked::distinct_rows_multiply(&f.u1, &f.u2, v, assign, patterns)
+            }
+            MaskKind::DistinctCols { assign, patterns } => {
+                masked::distinct_cols_multiply(&f.u1, &f.u2, v, assign, patterns)
+            }
+            MaskKind::Dense(_) => masked::row_change_multiply(&self.mask, &f.u1, &f.u2, v),
+        }
+    }
+
+    /// Full attention output: `Ỹ = D̃⁻¹ (W∘U₁U₂ᵀ) V` (Lemma D.3: one
+    /// extra multiply by `1_n` yields the normalizer in `O(t + n)`).
+    pub fn forward(&self, v: &Matrix) -> Matrix {
+        let n = self.mask.n();
+        assert_eq!(v.rows(), n);
+        let ones = vec![1.0; n];
+        let d_tilde = self.masked_multiply(&ones);
+        let mut out = Matrix::zeros(n, v.cols());
+        for c in 0..v.cols() {
+            let col = v.col(c);
+            let y = self.masked_multiply(&col);
+            out.set_col(c, &y);
+        }
+        let inv: Vec<f64> = d_tilde.iter().map(|&x| 1.0 / x).collect();
+        out.scale_rows(&inv)
+    }
+}
+
+/// Exact masked-softmax reference with the [AS23] `1/scale` logit
+/// convention (`A = W ∘ exp(QKᵀ/scale)`) — the oracle Theorem 6.5's
+/// `4ε‖V‖∞` bound compares against.
+pub fn exact_scaled_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    mask: &Mask,
+    scale: f64,
+) -> Matrix {
+    let n = q.rows();
+    let logits = q.matmul(&k.transpose());
+    let a = Matrix::from_fn(n, n, |i, j| {
+        if mask.entry(i, j) {
+            (logits[(i, j)] / scale).exp()
+        } else {
+            0.0
+        }
+    });
+    let d = a.row_sums();
+    let av = a.matmul(v);
+    let inv: Vec<f64> = d.iter().map(|&x| 1.0 / x).collect();
+    av.scale_rows(&inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    #[test]
+    fn rank_formula() {
+        let cfg = LowRankConfig::new(2, 4.0);
+        // C(4+2, 2) = 15
+        assert_eq!(cfg.rank(4), 15);
+        let cfg3 = LowRankConfig::new(3, 8.0);
+        assert_eq!(cfg3.rank(8), binomial(11, 3));
+    }
+
+    #[test]
+    fn features_inner_product_is_truncated_taylor() {
+        let mut rng = Rng::seeded(121);
+        let d = 3;
+        let cfg = LowRankConfig::new(4, d as f64);
+        let q = Matrix::randn(1, d, &mut rng).scale(0.5);
+        let k = Matrix::randn(1, d, &mut rng).scale(0.5);
+        let fq = poly_features(&q, &cfg);
+        let fk = poly_features(&k, &cfg);
+        let got = crate::tensor::dot(fq.row(0), fk.row(0));
+        let x = crate::tensor::dot(q.row(0), k.row(0)) / d as f64;
+        let mut want = 0.0;
+        let mut term = 1.0;
+        for t in 0..=4 {
+            if t > 0 {
+                term *= x / t as f64;
+            }
+            want += term;
+        }
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+
+    #[test]
+    fn factors_approximate_exp_for_bounded_entries() {
+        let mut rng = Rng::seeded(122);
+        let (n, d) = (16, 4);
+        let q = Matrix::rand_uniform(n, d, 0.8, &mut rng);
+        let k = Matrix::rand_uniform(n, d, 0.8, &mut rng);
+        let cfg = LowRankConfig::new(6, d as f64);
+        let f = build_factors(&q, &k, &cfg);
+        let approx = f.u1.matmul(&f.u2.transpose());
+        let exact = q.matmul(&k.transpose()).map(|x| (x / d as f64).exp());
+        // Relative entrywise error (Definition D.1 form).
+        for i in 0..n {
+            for j in 0..n {
+                let rel = (approx[(i, j)] - exact[(i, j)]).abs() / exact[(i, j)];
+                assert!(rel < 1e-4, "rel err {rel} at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_matches_oracle_within_taylor_error() {
+        let mut rng = Rng::seeded(123);
+        let (n, d) = (24, 3);
+        let q = Matrix::rand_uniform(n, d, 1.0, &mut rng);
+        let k = Matrix::rand_uniform(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let cfg = LowRankConfig::new(5, d as f64);
+        let mask = Mask::causal(n);
+        let lr = LowRankAttention::new(&q, &k, mask.clone(), &cfg);
+        let approx = lr.forward(&v);
+        let exact = exact_scaled_attention(&q, &k, &v, &mask, d as f64);
+        let err = max_abs_diff(&exact, &approx);
+        assert!(err < 1e-3 * crate::tensor::linf_norm_mat(&v), "err = {err}");
+    }
+
+    #[test]
+    fn forward_all_mask_kinds_match_dense_oracle() {
+        let mut rng = Rng::seeded(124);
+        let (n, d) = (18, 3);
+        let q = Matrix::rand_uniform(n, d, 0.7, &mut rng);
+        let k = Matrix::rand_uniform(n, d, 0.7, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let cfg = LowRankConfig::new(4, d as f64);
+
+        let mut patterns = vec![vec![false; n]; 3];
+        for j in 0..n {
+            patterns[0][j] = j % 2 == 0;
+            patterns[1][j] = j < n / 2;
+            patterns[2][j] = j > 2;
+        }
+        let assign: Vec<usize> = (0..n).map(|i| i % 3).collect();
+        let masks = vec![
+            Mask::causal(n),
+            Mask::sliding_window(n, 5, 1),
+            Mask::continuous_row(
+                (0..n).map(|i| i / 2).collect(),
+                (0..n).map(|i| (i / 2 + n / 2).min(n - 1)).collect(),
+            ),
+            Mask::distinct_rows(assign.clone(), patterns.clone()),
+            Mask::distinct_cols(assign, patterns),
+        ];
+        for mask in masks {
+            let lr = LowRankAttention::new(&q, &k, mask.clone(), &cfg);
+            let fast = lr.forward(&v);
+            // Dense oracle using the same factors (isolates the masked
+            // multiply from the Taylor error).
+            let f = lr.factors();
+            let a = mask.apply(&f.u1.matmul(&f.u2.transpose()));
+            let dsum = a.row_sums();
+            let av = a.matmul(&v);
+            let inv: Vec<f64> = dsum.iter().map(|&x| 1.0 / x).collect();
+            let want = av.scale_rows(&inv);
+            let err = max_abs_diff(&want, &fast);
+            assert!(err < 1e-9, "mask {:?}: err = {err}", mask.kind());
+        }
+    }
+}

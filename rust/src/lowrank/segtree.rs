@@ -1,0 +1,158 @@
+//! Segment tree over k-dimensional vectors — the data structure of
+//! Algorithm 6 (continuous-row masks, Lemma D.9).
+//!
+//! Stores `b_i = (U₂ᵀ)_i · v_i ∈ Rᵏ` at the leaves; a range query
+//! `Σ_{i ∈ [s, t]} b_i` touches `O(log n)` nodes, each contributing a
+//! k-vector add → `O(k log n)` per row, `O(nk log n)` total.
+
+/// Segment tree of k-vectors with range-sum queries.
+#[derive(Clone, Debug)]
+pub struct VecSegTree {
+    n: usize,
+    k: usize,
+    /// 1-indexed flat binary tree: node i has children 2i, 2i+1; leaves
+    /// occupy `size .. size + n`. Each node stores k contiguous floats.
+    nodes: Vec<f64>,
+    size: usize,
+}
+
+impl VecSegTree {
+    /// Build from `n` leaves, each a k-vector produced by `leaf(i)`.
+    pub fn build(n: usize, k: usize, mut leaf: impl FnMut(usize, &mut [f64])) -> Self {
+        assert!(n >= 1 && k >= 1);
+        let size = n.next_power_of_two();
+        let mut nodes = vec![0.0; 2 * size * k];
+        for i in 0..n {
+            leaf(i, &mut nodes[(size + i) * k..(size + i + 1) * k]);
+        }
+        for node in (1..size).rev() {
+            let (parents, children) = nodes.split_at_mut(2 * node * k);
+            let parent = &mut parents[node * k..(node + 1) * k];
+            let left = &children[..k];
+            let right = &children[k..2 * k];
+            for j in 0..k {
+                parent[j] = left[j] + right[j];
+            }
+        }
+        VecSegTree { n, k, nodes, size }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// `out += Σ_{i ∈ [lo, hi]} leaf_i` (inclusive bounds).
+    ///
+    /// Counts node visits in `visits` when provided (complexity
+    /// accounting for the Theorem 6.5 bench).
+    pub fn range_sum_into(&self, lo: usize, hi: usize, out: &mut [f64]) -> usize {
+        assert!(lo <= hi && hi < self.n);
+        assert_eq!(out.len(), self.k);
+        let mut visits = 0usize;
+        let (mut l, mut r) = (lo + self.size, hi + self.size + 1);
+        while l < r {
+            if l & 1 == 1 {
+                self.add_node(l, out);
+                visits += 1;
+                l += 1;
+            }
+            if r & 1 == 1 {
+                r -= 1;
+                self.add_node(r, out);
+                visits += 1;
+            }
+            l >>= 1;
+            r >>= 1;
+        }
+        visits
+    }
+
+    #[inline]
+    fn add_node(&self, node: usize, out: &mut [f64]) {
+        let base = node * self.k;
+        for j in 0..self.k {
+            out[j] += self.nodes[base + j];
+        }
+    }
+
+    /// Point update: overwrite leaf `i` and repair ancestors —
+    /// `O(k log n)`. (Beyond the paper: lets the serving layer refresh
+    /// one token's contribution without a rebuild.)
+    pub fn update_leaf(&mut self, i: usize, values: &[f64]) {
+        assert!(i < self.n);
+        assert_eq!(values.len(), self.k);
+        let mut node = self.size + i;
+        self.nodes[node * self.k..(node + 1) * self.k].copy_from_slice(values);
+        node >>= 1;
+        while node >= 1 {
+            for j in 0..self.k {
+                self.nodes[node * self.k + j] = self.nodes[2 * node * self.k + j]
+                    + self.nodes[(2 * node + 1) * self.k + j];
+            }
+            if node == 1 {
+                break;
+            }
+            node >>= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn range_sums_match_naive() {
+        let mut rng = Rng::seeded(131);
+        let (n, k) = (37, 4);
+        let leaves: Vec<Vec<f64>> = (0..n).map(|_| rng.randn_vec(k)).collect();
+        let tree = VecSegTree::build(n, k, |i, out| out.copy_from_slice(&leaves[i]));
+        for &(lo, hi) in &[(0usize, 0usize), (0, 36), (5, 20), (36, 36), (17, 18)] {
+            let mut got = vec![0.0; k];
+            tree.range_sum_into(lo, hi, &mut got);
+            let mut want = vec![0.0; k];
+            for leaf in leaves.iter().take(hi + 1).skip(lo) {
+                for j in 0..k {
+                    want[j] += leaf[j];
+                }
+            }
+            for j in 0..k {
+                assert!((got[j] - want[j]).abs() < 1e-10, "[{lo},{hi}] dim {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn query_touches_log_nodes() {
+        let (n, k) = (1024, 2);
+        let tree = VecSegTree::build(n, k, |i, out| out[0] = i as f64);
+        let mut buf = vec![0.0; k];
+        let visits = tree.range_sum_into(3, 1000, &mut buf);
+        assert!(visits <= 2 * 11, "visits = {visits}"); // 2·log2(1024) + slack
+    }
+
+    #[test]
+    fn update_leaf_propagates() {
+        let (n, k) = (10, 3);
+        let mut tree = VecSegTree::build(n, k, |_, out| out.fill(1.0));
+        tree.update_leaf(4, &[5.0, 6.0, 7.0]);
+        let mut got = vec![0.0; k];
+        tree.range_sum_into(0, 9, &mut got);
+        assert_eq!(got, vec![9.0 + 5.0, 9.0 + 6.0, 9.0 + 7.0]);
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let tree = VecSegTree::build(1, 2, |_, out| out.copy_from_slice(&[3.0, 4.0]));
+        let mut got = vec![0.0; 2];
+        tree.range_sum_into(0, 0, &mut got);
+        assert_eq!(got, vec![3.0, 4.0]);
+    }
+}

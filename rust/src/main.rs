@@ -1,0 +1,132 @@
+//! `conv-basis` CLI: the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing — no vendored CLI crate on this
+//! image):
+//!
+//! ```text
+//! conv-basis serve   [--requests N] [--rate R] [--workers W] [--exact-below N]
+//! conv-basis bench   [--n N] [--k K] [--d D]        one-shot conv-vs-exact timing
+//! conv-basis masks                                  render the Figure 3 gallery
+//! conv-basis verify  [--artifact PATH]              load an AOT artifact on PJRT
+//! ```
+
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::{conv_attention, exact_attention, figure3_masks, Mask};
+use conv_basis::basis::RecoverConfig;
+use conv_basis::coordinator::{run_trace, BatcherConfig, RouterConfig, Server, ServerConfig};
+use conv_basis::data::{WorkloadConfig, WorkloadTrace};
+use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
+use std::time::Instant;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn flag_num<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> T {
+    flag(args, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("masks") => cmd_masks(),
+        Some("verify") => cmd_verify(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: conv-basis <serve|bench|masks|verify> [flags]\n\
+                 see `rust/src/main.rs` header for flags"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) {
+    let n_requests: usize = flag_num(args, "--requests", 200);
+    let rate: f64 = flag_num(args, "--rate", 500.0);
+    let workers: usize = flag_num(args, "--workers", 4);
+    let exact_below: usize = flag_num(args, "--exact-below", 128);
+
+    let server = Server::start(ServerConfig {
+        router: RouterConfig { exact_below, ..Default::default() },
+        batcher: BatcherConfig::default(),
+        workers,
+        cache_capacity: 128,
+        lowrank_degree: 2,
+    });
+    let trace = WorkloadTrace::generate(
+        n_requests,
+        &WorkloadConfig { rate_per_s: rate, ..Default::default() },
+        42,
+    );
+    println!("serving {n_requests} requests at {rate}/s across {workers} workers…");
+    let t0 = Instant::now();
+    let resps = run_trace(&server, &trace, 1.0);
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    let snap = metrics.snapshot();
+    println!("{}", snap.report());
+    println!(
+        "throughput: {:.1} req/s (wall {:.2}s, {} responses)",
+        resps.len() as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64(),
+        resps.len()
+    );
+}
+
+fn cmd_bench(args: &[String]) {
+    let n: usize = flag_num(args, "--n", 2048);
+    let k: usize = flag_num(args, "--k", 8);
+    let d: usize = flag_num(args, "--d", 64);
+    let mut rng = Rng::seeded(7);
+    let (q, kk) = rope_structured_qk(n, d, 3.min(d / 2).max(1), &mut rng);
+    let v = Matrix::randn(n, d, &mut rng);
+
+    let t0 = Instant::now();
+    let exact = exact_attention(&q, &kk, &v, &Mask::causal(n));
+    let t_exact = t0.elapsed();
+
+    let t_w = 4.min(n);
+    let cfg = RecoverConfig { k_max: k, t: t_w, delta: 5.0 * t_w as f64 * 1e-7, eps: 1e-7 };
+    let t1 = Instant::now();
+    let out = conv_attention(&q, &kk, &v, &cfg).expect("conv attention");
+    let t_conv = t1.elapsed();
+
+    println!(
+        "n={n} d={d} k_max={k} | exact {:?} | conv {:?} (recovered k={}) | speedup {:.2}× | max err {:.2e}",
+        t_exact,
+        t_conv,
+        out.post_basis.k(),
+        t_exact.as_secs_f64() / t_conv.as_secs_f64(),
+        max_abs_diff(&exact, &out.y),
+    );
+}
+
+fn cmd_masks() {
+    for (name, mask) in figure3_masks() {
+        println!("## {name}\n{}", mask.render());
+    }
+}
+
+fn cmd_verify(args: &[String]) {
+    let path = flag(args, "--artifact")
+        .unwrap_or_else(|| "artifacts/conv_attention.hlo.txt".to_string());
+    match conv_basis::runtime::PjrtRuntime::cpu() {
+        Ok(mut rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            match rt.load(std::path::Path::new(&path)) {
+                Ok(model) => println!("loaded + compiled {}", model.name),
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e}");
+            std::process::exit(1);
+        }
+    }
+}

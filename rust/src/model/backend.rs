@@ -1,0 +1,153 @@
+//! Pluggable attention operator — the Section 7 experiment switch.
+//!
+//! The conv-basis and low-rank backends are *inference-time drop-ins*:
+//! they replace the attention operator of an already-trained model with
+//! no parameter updates, exactly the paper's protocol.
+
+use crate::attention::{conv_attention, exact_attention, Mask};
+use crate::basis::RecoverConfig;
+use crate::lowrank::{LowRankAttention, LowRankConfig};
+use crate::tensor::Matrix;
+
+/// Which operator computes `softmax(QKᵀ)·V` per head.
+#[derive(Clone, Debug)]
+pub enum AttentionBackend {
+    /// Exact `O(n²d)` attention (training + baseline).
+    Exact,
+    /// Algorithm 1 with the adaptive binary-search recovery
+    /// (Algorithms 2–3). Falls back to exact on recovery failure
+    /// (degenerate normalizer etc.) — the serving layer records
+    /// fallbacks in its metrics.
+    ConvBasis(RecoverConfig),
+    /// Algorithm 1 with strided (non-adaptive) recovery at k uniform
+    /// onsets — the Section 7 protocol knob. k = n is exact.
+    ConvStrided(usize),
+    /// Theorem 6.5: masked low-rank approximation.
+    LowRank(LowRankConfig),
+}
+
+impl AttentionBackend {
+    /// A conv backend whose basis count is the paper's x-axis in
+    /// Figure 4 (strided onsets: accuracy grows monotonically with k on
+    /// real attention matrices; k = n reproduces exact attention).
+    pub fn conv_with_k(k: usize, n: usize) -> Self {
+        let _ = n;
+        AttentionBackend::ConvStrided(k.max(1))
+    }
+
+    /// Compute one head: inputs are pre-scaled `Q` (×1/√d_h), `K`, `V`.
+    /// Returns the output and, when `keep_probs` (training), the dense
+    /// attention probabilities (only the exact backend supports that).
+    pub fn attend(
+        &self,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        keep_probs: bool,
+    ) -> (Matrix, Option<Matrix>) {
+        let n = q.rows();
+        let mask = Mask::causal(n);
+        match self {
+            AttentionBackend::Exact => {
+                if keep_probs {
+                    let logits = q.matmul(&k.transpose());
+                    let mut probs = Matrix::zeros(n, n);
+                    for i in 0..n {
+                        let row = crate::tensor::softmax(&logits.row(i)[..=i]);
+                        probs.row_mut(i)[..=i].copy_from_slice(&row);
+                    }
+                    (probs.matmul(v), Some(probs))
+                } else {
+                    (exact_attention(q, k, v, &mask), None)
+                }
+            }
+            AttentionBackend::ConvBasis(cfg) => {
+                assert!(!keep_probs, "approximate backends are inference-only");
+                match conv_attention(q, k, v, cfg) {
+                    Ok(out) => (out.y, None),
+                    Err(_) => (exact_attention(q, k, v, &mask), None),
+                }
+            }
+            AttentionBackend::ConvStrided(kb) => {
+                assert!(!keep_probs, "approximate backends are inference-only");
+                match crate::attention::conv_attention_strided(q, k, v, *kb) {
+                    Ok(out) => (out.y, None),
+                    Err(_) => (exact_attention(q, k, v, &mask), None),
+                }
+            }
+            AttentionBackend::LowRank(cfg) => {
+                assert!(!keep_probs, "approximate backends are inference-only");
+                // LowRankAttention expects unscaled logits divided by
+                // `cfg.scale`; our q is pre-scaled, so scale = 1.
+                let lr = LowRankAttention::new(q, k, mask, &LowRankConfig::new(cfg.degree, 1.0));
+                (lr.forward(v), None)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    #[test]
+    fn exact_paths_agree() {
+        let mut rng = Rng::seeded(211);
+        let (n, d) = (10, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.5);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.5);
+        let v = Matrix::randn(n, d, &mut rng);
+        let b = AttentionBackend::Exact;
+        let (y1, p) = b.attend(&q, &k, &v, true);
+        let (y2, _) = b.attend(&q, &k, &v, false);
+        assert!(max_abs_diff(&y1, &y2) < 1e-10);
+        let probs = p.unwrap();
+        for i in 0..n {
+            let s: f64 = probs.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn conv_backend_with_full_k_matches_exact() {
+        let mut rng = Rng::seeded(212);
+        let (n, d) = (16, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.4);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.4);
+        let v = Matrix::randn(n, d, &mut rng);
+        let exact = AttentionBackend::Exact.attend(&q, &k, &v, false).0;
+        let conv = AttentionBackend::ConvBasis(RecoverConfig::exact(n))
+            .attend(&q, &k, &v, false)
+            .0;
+        assert!(max_abs_diff(&exact, &conv) < 1e-8);
+    }
+
+    #[test]
+    fn lowrank_backend_close_for_bounded_inputs() {
+        let mut rng = Rng::seeded(213);
+        let (n, d) = (14, 3);
+        let q = Matrix::rand_uniform(n, d, 0.5, &mut rng);
+        let k = Matrix::rand_uniform(n, d, 0.5, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let exact = AttentionBackend::Exact.attend(&q, &k, &v, false).0;
+        let lr = AttentionBackend::LowRank(LowRankConfig::new(6, 1.0))
+            .attend(&q, &k, &v, false)
+            .0;
+        assert!(max_abs_diff(&exact, &lr) < 1e-3);
+    }
+
+    #[test]
+    fn conv_backend_falls_back_gracefully() {
+        // Pathological inputs (huge logits) can break recovery; the
+        // backend must still return finite output.
+        let mut rng = Rng::seeded(214);
+        let (n, d) = (12, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(10.0);
+        let k = Matrix::randn(n, d, &mut rng).scale(10.0);
+        let v = Matrix::randn(n, d, &mut rng);
+        let b = AttentionBackend::conv_with_k(2, n);
+        let (y, _) = b.attend(&q, &k, &v, false);
+        assert!(y.is_finite());
+    }
+}

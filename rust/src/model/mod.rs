@@ -1,0 +1,50 @@
+//! A small decoder-only transformer with **pluggable attention
+//! backends** — the Figure 4 / end-to-end experiment substrate.
+//!
+//! The training path uses exact attention with full manual backprop
+//! (this crate has no autograd dependency); the inference path swaps the
+//! attention operator per [`AttentionBackend`]:
+//!
+//! * `Exact` — the `O(n²d)` oracle (Definition 3.3),
+//! * `ConvBasis` — Algorithm 1 (`O(knd log n)`, Theorem 4.4),
+//! * `LowRank` — Theorem 6.5's masked low-rank path.
+//!
+//! This is exactly the paper's Section 7 protocol: train/obtain a model
+//! with standard attention, then replace the attention mechanism at
+//! inference with the conv approximation for varying k — **no parameter
+//! updates**.
+
+mod backend;
+mod optim;
+mod train;
+mod transformer;
+
+pub use backend::AttentionBackend;
+pub use optim::Adam;
+pub use train::{eval_classifier, train_classifier, train_lm, TrainConfig, TrainLog};
+pub use transformer::{ForwardRecord, ModelConfig, Transformer};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn param_count_scales() {
+        let small = ModelConfig::tiny(64);
+        let big = ModelConfig { n_layers: 4, ..small };
+        let mut rng = Rng::seeded(1);
+        let m1 = Transformer::new(&small, &mut rng);
+        let m2 = Transformer::new(&big, &mut rng);
+        assert!(m2.num_params() > m1.num_params());
+    }
+
+    #[test]
+    fn hundred_m_config_exists() {
+        // The e2e example's "100M-class" configuration (run with reduced
+        // steps on CPU; see EXPERIMENTS.md e2e).
+        let cfg = ModelConfig::gpt_100m();
+        let params = cfg.approx_params();
+        assert!(params > 80_000_000 && params < 150_000_000, "params = {params}");
+    }
+}

@@ -1,0 +1,724 @@
+//! Decoder-only transformer with manual forward/backward.
+//!
+//! Architecture: token embedding → L × [RMSNorm → multi-head causal
+//! RoPE attention → residual; RMSNorm → GELU MLP → residual] →
+//! RMSNorm → LM head (+ a 2-way classifier head on the last position
+//! for the sentiment task).
+
+use super::backend::AttentionBackend;
+use crate::attention::rope::Rope;
+use crate::tensor::{Matrix, Rng};
+
+/// Model hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    /// A test-sized model.
+    pub fn tiny(max_seq: usize) -> Self {
+        ModelConfig { vocab_size: 260, d_model: 32, n_heads: 2, n_layers: 2, d_ff: 64, max_seq }
+    }
+
+    /// The Figure 4 evaluation model (~1M params — trainable on CPU in
+    /// seconds, long enough sequences to exercise the conv path).
+    pub fn fig4(max_seq: usize) -> Self {
+        ModelConfig { vocab_size: 260, d_model: 64, n_heads: 4, n_layers: 4, d_ff: 256, max_seq }
+    }
+
+    /// A 100M-class GPT configuration (e2e example; steps scaled down on
+    /// CPU — see EXPERIMENTS.md).
+    pub fn gpt_100m() -> Self {
+        ModelConfig {
+            vocab_size: 260,
+            d_model: 768,
+            n_heads: 12,
+            n_layers: 14,
+            d_ff: 3072,
+            max_seq: 1024,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Approximate parameter count.
+    pub fn approx_params(&self) -> usize {
+        let attn = 4 * self.d_model * self.d_model;
+        let mlp = 2 * self.d_model * self.d_ff;
+        let norms = 2 * self.d_model;
+        self.vocab_size * self.d_model * 2
+            + self.n_layers * (attn + mlp + norms)
+            + self.d_model
+            + 2 * self.d_model
+    }
+}
+
+/// One transformer layer's parameters.
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub ln1_g: Vec<f64>,
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub ln2_g: Vec<f64>,
+    pub w1: Matrix,
+    pub w2: Matrix,
+}
+
+/// Full parameter set.
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub embed: Matrix, // vocab × d_model
+    pub layers: Vec<LayerParams>,
+    pub lnf_g: Vec<f64>,
+    pub head: Matrix, // d_model × vocab
+    pub cls_head: Matrix, // d_model × 2
+    rope: Rope,
+}
+
+/// Per-layer forward cache (needed for backward).
+struct LayerCache {
+    x_in: Matrix,
+    ln1_out: Matrix,
+    ln1_rms: Vec<f64>,
+    q_rot: Matrix,
+    k_rot: Matrix,
+    v: Matrix,
+    probs: Vec<Matrix>, // per head, n×n
+    attn_concat: Matrix,
+    x_mid: Matrix,
+    ln2_out: Matrix,
+    ln2_rms: Vec<f64>,
+    ff_pre: Matrix, // before gelu
+    ff_act: Matrix, // after gelu
+}
+
+/// Forward record returned for observation / backward.
+pub struct ForwardRecord {
+    /// Final hidden states after the last RMSNorm (n × d_model).
+    pub final_hidden: Matrix,
+    /// LM logits (n × vocab).
+    pub logits: Matrix,
+    caches: Option<Vec<LayerCache>>,
+    lnf_rms: Vec<f64>,
+    lnf_in: Matrix,
+    tokens: Vec<usize>,
+}
+
+/// Gradients, mirroring the parameter structure.
+#[derive(Clone, Debug)]
+pub struct Gradients {
+    pub embed: Matrix,
+    pub layers: Vec<LayerParams>,
+    pub lnf_g: Vec<f64>,
+    pub head: Matrix,
+    pub cls_head: Matrix,
+}
+
+const RMS_EPS: f64 = 1e-6;
+
+fn rmsnorm_fwd(x: &Matrix, g: &[f64]) -> (Matrix, Vec<f64>) {
+    let (n, d) = x.shape();
+    let mut out = Matrix::zeros(n, d);
+    let mut rms = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = x.row(i);
+        let ms: f64 = row.iter().map(|v| v * v).sum::<f64>() / d as f64;
+        let r = (ms + RMS_EPS).sqrt();
+        rms.push(r);
+        let orow = out.row_mut(i);
+        for j in 0..d {
+            orow[j] = row[j] * g[j] / r;
+        }
+    }
+    (out, rms)
+}
+
+/// Backward through RMSNorm: returns (dx, dg contribution added).
+fn rmsnorm_bwd(x: &Matrix, g: &[f64], rms: &[f64], dy: &Matrix, dg: &mut [f64]) -> Matrix {
+    let (n, d) = x.shape();
+    let mut dx = Matrix::zeros(n, d);
+    for i in 0..n {
+        let r = rms[i];
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        // dg_j += dy_j * x_j / r
+        for j in 0..d {
+            dg[j] += dyr[j] * xr[j] / r;
+        }
+        // dx = (g∘dy)/r − x·Σ(x∘g∘dy)/(d·r³)
+        let s: f64 = (0..d).map(|j| xr[j] * g[j] * dyr[j]).sum();
+        let coef = s / (d as f64 * r * r * r);
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            dxr[j] = g[j] * dyr[j] / r - xr[j] * coef;
+        }
+    }
+    dx
+}
+
+fn gelu(x: f64) -> f64 {
+    // tanh approximation.
+    const C: f64 = 0.7978845608028654; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f64) -> f64 {
+    const C: f64 = 0.7978845608028654;
+    let u = C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+impl Transformer {
+    /// Initialize with scaled-normal weights (deterministic from `rng`).
+    pub fn new(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        let d = cfg.d_model;
+        let std_attn = 1.0 / (d as f64).sqrt();
+        let std_ff = 1.0 / (cfg.d_ff as f64).sqrt();
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerParams {
+                ln1_g: vec![1.0; d],
+                wq: Matrix::randn(d, d, rng).scale(std_attn),
+                wk: Matrix::randn(d, d, rng).scale(std_attn),
+                wv: Matrix::randn(d, d, rng).scale(std_attn),
+                wo: Matrix::randn(d, d, rng).scale(std_attn / (2.0 * cfg.n_layers as f64).sqrt()),
+                ln2_g: vec![1.0; d],
+                w1: Matrix::randn(d, cfg.d_ff, rng).scale(std_attn),
+                w2: Matrix::randn(cfg.d_ff, d, rng)
+                    .scale(std_ff / (2.0 * cfg.n_layers as f64).sqrt()),
+            })
+            .collect();
+        Transformer {
+            cfg: *cfg,
+            embed: Matrix::randn(cfg.vocab_size, d, rng).scale(0.02),
+            layers,
+            lnf_g: vec![1.0; d],
+            head: Matrix::randn(d, cfg.vocab_size, rng).scale(std_attn),
+            cls_head: Matrix::randn(d, 2, rng).scale(std_attn),
+            rope: Rope::new(cfg.d_model / cfg.n_heads, 10_000.0),
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        let mut n = self.embed.rows() * self.embed.cols()
+            + self.head.rows() * self.head.cols()
+            + self.cls_head.rows() * self.cls_head.cols()
+            + self.lnf_g.len();
+        for l in &self.layers {
+            n += l.ln1_g.len()
+                + l.ln2_g.len()
+                + l.wq.rows() * l.wq.cols() * 4
+                + l.w1.rows() * l.w1.cols()
+                + l.w2.rows() * l.w2.cols();
+        }
+        n
+    }
+
+    /// Zero-shaped gradient holder.
+    pub fn zero_grads(&self) -> Gradients {
+        Gradients {
+            embed: Matrix::zeros(self.embed.rows(), self.embed.cols()),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerParams {
+                    ln1_g: vec![0.0; l.ln1_g.len()],
+                    wq: Matrix::zeros(l.wq.rows(), l.wq.cols()),
+                    wk: Matrix::zeros(l.wk.rows(), l.wk.cols()),
+                    wv: Matrix::zeros(l.wv.rows(), l.wv.cols()),
+                    wo: Matrix::zeros(l.wo.rows(), l.wo.cols()),
+                    ln2_g: vec![0.0; l.ln2_g.len()],
+                    w1: Matrix::zeros(l.w1.rows(), l.w1.cols()),
+                    w2: Matrix::zeros(l.w2.rows(), l.w2.cols()),
+                })
+                .collect(),
+            lnf_g: vec![0.0; self.lnf_g.len()],
+            head: Matrix::zeros(self.head.rows(), self.head.cols()),
+            cls_head: Matrix::zeros(self.cls_head.rows(), self.cls_head.cols()),
+        }
+    }
+
+    /// Forward pass. `backend` selects the attention operator (training
+    /// must use `Exact`; approximate backends are inference-only).
+    /// `keep_cache` retains activations for [`Self::backward`].
+    pub fn forward(
+        &self,
+        tokens: &[usize],
+        backend: &AttentionBackend,
+        keep_cache: bool,
+    ) -> ForwardRecord {
+        let n = tokens.len();
+        assert!(n <= self.cfg.max_seq, "sequence too long");
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+
+        let mut x = Matrix::zeros(n, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(t));
+        }
+
+        let mut caches: Vec<LayerCache> = Vec::new();
+        for layer in &self.layers {
+            let x_in = x.clone();
+            let (ln1_out, ln1_rms) = rmsnorm_fwd(&x, &layer.ln1_g);
+            let q = ln1_out.matmul(&layer.wq);
+            let k = ln1_out.matmul(&layer.wk);
+            let v = ln1_out.matmul(&layer.wv);
+            // RoPE per head, in place on q,k copies.
+            let mut q_rot = q;
+            let mut k_rot = k;
+            for h in 0..nh {
+                for i in 0..n {
+                    let qs = &mut q_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                    self.rope.rotate_row(qs, i);
+                }
+                for i in 0..n {
+                    let ks = &mut k_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                    self.rope.rotate_row(ks, i);
+                }
+            }
+            // Per-head attention through the selected backend.
+            let mut attn_concat = Matrix::zeros(n, d);
+            let mut probs_cache: Vec<Matrix> = Vec::new();
+            for h in 0..nh {
+                let qh = Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale);
+                let kh = Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]);
+                let vh = Matrix::from_fn(n, dh, |i, j| v[(i, h * dh + j)]);
+                let (out_h, probs) = backend.attend(&qh, &kh, &vh, keep_cache);
+                for i in 0..n {
+                    for j in 0..dh {
+                        attn_concat[(i, h * dh + j)] = out_h[(i, j)];
+                    }
+                }
+                if keep_cache {
+                    probs_cache.push(probs.expect("exact backend caches probs"));
+                }
+            }
+            let attn_out = attn_concat.matmul(&layer.wo);
+            let x_mid = x_in.add(&attn_out);
+
+            let (ln2_out, ln2_rms) = rmsnorm_fwd(&x_mid, &layer.ln2_g);
+            let ff_pre = ln2_out.matmul(&layer.w1);
+            let ff_act = ff_pre.map(gelu);
+            let ff_out = ff_act.matmul(&layer.w2);
+            x = x_mid.add(&ff_out);
+
+            if keep_cache {
+                caches.push(LayerCache {
+                    x_in,
+                    ln1_out,
+                    ln1_rms,
+                    q_rot,
+                    k_rot,
+                    v,
+                    probs: probs_cache,
+                    attn_concat,
+                    x_mid,
+                    ln2_out,
+                    ln2_rms,
+                    ff_pre,
+                    ff_act,
+                });
+            }
+        }
+        let lnf_in = x.clone();
+        let (final_hidden, lnf_rms) = rmsnorm_fwd(&x, &self.lnf_g);
+        let logits = final_hidden.matmul(&self.head);
+        ForwardRecord {
+            final_hidden,
+            logits,
+            caches: if keep_cache { Some(caches) } else { None },
+            lnf_rms,
+            lnf_in,
+            tokens: tokens.to_vec(),
+        }
+    }
+
+    /// Classification logits from the last position's hidden state.
+    pub fn classify(&self, record: &ForwardRecord) -> [f64; 2] {
+        let n = record.final_hidden.rows();
+        let h = record.final_hidden.row(n - 1);
+        let out = self.cls_head.transpose().matvec(h);
+        [out[0], out[1]]
+    }
+
+    /// LM cross-entropy over positions whose target ≠ `ignore`; returns
+    /// (mean loss, d_logits) for backward.
+    pub fn lm_loss(
+        &self,
+        record: &ForwardRecord,
+        targets: &[usize],
+        ignore: usize,
+    ) -> (f64, Matrix) {
+        let (n, v) = record.logits.shape();
+        assert_eq!(targets.len(), n);
+        let mut dlogits = Matrix::zeros(n, v);
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for i in 0..n {
+            if targets[i] == ignore {
+                continue;
+            }
+            count += 1;
+            let probs = crate::tensor::softmax(record.logits.row(i));
+            total -= probs[targets[i]].max(1e-300).ln();
+            let drow = dlogits.row_mut(i);
+            drow.copy_from_slice(&probs);
+            drow[targets[i]] -= 1.0;
+        }
+        let c = count.max(1) as f64;
+        for x in dlogits.data_mut() {
+            *x /= c;
+        }
+        (total / c, dlogits)
+    }
+
+    /// Classification cross-entropy on the last position; returns
+    /// (loss, probability of the true class, d_cls_logits).
+    pub fn cls_loss(&self, record: &ForwardRecord, label: bool) -> (f64, f64, [f64; 2]) {
+        let logits = self.classify(record);
+        let probs = crate::tensor::softmax(&logits);
+        let idx = label as usize;
+        let loss = -probs[idx].max(1e-300).ln();
+        let mut d = [probs[0], probs[1]];
+        d[idx] -= 1.0;
+        (loss, probs[idx], d)
+    }
+
+    /// Backward from LM-loss logit gradients (and optionally a
+    /// classification gradient on the last position). Accumulates into
+    /// `grads`.
+    pub fn backward(
+        &self,
+        record: &ForwardRecord,
+        dlogits: &Matrix,
+        dcls: Option<[f64; 2]>,
+        grads: &mut Gradients,
+    ) {
+        let caches = record.caches.as_ref().expect("forward(keep_cache=true) required");
+        let n = record.logits.rows();
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+
+        // Head: logits = final_hidden · head.
+        grads.head.axpy_mat(1.0, &record.final_hidden.transpose().matmul(dlogits));
+        let mut dfinal = dlogits.matmul(&self.head.transpose());
+        if let Some(dc) = dcls {
+            // cls logits = cls_headᵀ · h_last.
+            let h_last = record.final_hidden.row(n - 1);
+            for c in 0..2 {
+                for j in 0..d {
+                    grads.cls_head[(j, c)] += dc[c] * h_last[j];
+                }
+            }
+            let drow = dfinal.row_mut(n - 1);
+            for j in 0..d {
+                drow[j] += dc[0] * self.cls_head[(j, 0)] + dc[1] * self.cls_head[(j, 1)];
+            }
+        }
+        // Final RMSNorm.
+        let mut dx = rmsnorm_bwd(&record.lnf_in, &self.lnf_g, &record.lnf_rms, &dfinal, &mut grads.lnf_g);
+
+        // Layers in reverse.
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let cache = &caches[li];
+            let g = &mut grads.layers[li];
+
+            // x = x_mid + ff_act·w2  (ff path)
+            let dff_out = dx.clone();
+            let dff_act = dff_out.matmul(&layer.w2.transpose());
+            g.w2.axpy_mat(1.0, &cache.ff_act.transpose().matmul(&dff_out));
+            let dff_pre = Matrix::from_fn(n, self.cfg.d_ff, |i, j| {
+                dff_act[(i, j)] * gelu_grad(cache.ff_pre[(i, j)])
+            });
+            g.w1.axpy_mat(1.0, &cache.ln2_out.transpose().matmul(&dff_pre));
+            let dln2_out = dff_pre.matmul(&layer.w1.transpose());
+            let dx_mid_from_ff =
+                rmsnorm_bwd(&cache.x_mid, &layer.ln2_g, &cache.ln2_rms, &dln2_out, &mut g.ln2_g);
+            let mut dx_mid = dx; // residual
+            dx_mid.axpy_mat(1.0, &dx_mid_from_ff);
+
+            // x_mid = x_in + attn_concat·wo
+            let dattn_out = dx_mid.clone();
+            g.wo.axpy_mat(1.0, &cache.attn_concat.transpose().matmul(&dattn_out));
+            let dattn_concat = dattn_out.matmul(&layer.wo.transpose());
+
+            // Per-head attention backward.
+            let mut dq_rot = Matrix::zeros(n, d);
+            let mut dk_rot = Matrix::zeros(n, d);
+            let mut dv_full = Matrix::zeros(n, d);
+            for h in 0..nh {
+                let probs = &cache.probs[h];
+                let dout_h = Matrix::from_fn(n, dh, |i, j| dattn_concat[(i, h * dh + j)]);
+                let vh = Matrix::from_fn(n, dh, |i, j| cache.v[(i, h * dh + j)]);
+                // dV_h = probsᵀ · dout
+                let dvh = probs.transpose().matmul(&dout_h);
+                // dProbs = dout · V_hᵀ
+                let dprobs = dout_h.matmul(&vh.transpose());
+                // dScores = probs ∘ (dprobs − rowdot)
+                let mut dscores = Matrix::zeros(n, n);
+                for i in 0..n {
+                    let prow = probs.row(i);
+                    let dprow = dprobs.row(i);
+                    let dot: f64 = crate::tensor::dot(prow, dprow);
+                    let srow = dscores.row_mut(i);
+                    for j in 0..n {
+                        srow[j] = prow[j] * (dprow[j] - dot);
+                    }
+                }
+                // scores = (q_h·scale)·k_hᵀ  (scale folded into q at fwd)
+                let qh_scaled =
+                    Matrix::from_fn(n, dh, |i, j| cache.q_rot[(i, h * dh + j)] * scale);
+                let kh = Matrix::from_fn(n, dh, |i, j| cache.k_rot[(i, h * dh + j)]);
+                let dqh_scaled = dscores.matmul(&kh);
+                let dkh = dscores.transpose().matmul(&qh_scaled);
+                for i in 0..n {
+                    for j in 0..dh {
+                        dq_rot[(i, h * dh + j)] += dqh_scaled[(i, j)] * scale;
+                        dk_rot[(i, h * dh + j)] += dkh[(i, j)];
+                        dv_full[(i, h * dh + j)] += dvh[(i, j)];
+                    }
+                }
+            }
+            // RoPE backward: inverse rotation (orthogonal).
+            let inv_rope = &self.rope;
+            let mut dq = dq_rot;
+            let mut dk = dk_rot;
+            for h in 0..nh {
+                for i in 0..n {
+                    let qs = &mut dq.row_mut(i)[h * dh..(h + 1) * dh];
+                    rotate_inverse(inv_rope, qs, i);
+                    let ks = &mut dk.row_mut(i)[h * dh..(h + 1) * dh];
+                    rotate_inverse(inv_rope, ks, i);
+                }
+            }
+            // q = ln1_out·wq etc.
+            g.wq.axpy_mat(1.0, &cache.ln1_out.transpose().matmul(&dq));
+            g.wk.axpy_mat(1.0, &cache.ln1_out.transpose().matmul(&dk));
+            g.wv.axpy_mat(1.0, &cache.ln1_out.transpose().matmul(&dv_full));
+            let mut dln1_out = dq.matmul(&layer.wq.transpose());
+            dln1_out.axpy_mat(1.0, &dk.matmul(&layer.wk.transpose()));
+            dln1_out.axpy_mat(1.0, &dv_full.matmul(&layer.wv.transpose()));
+            let dx_in_from_attn =
+                rmsnorm_bwd(&cache.x_in, &layer.ln1_g, &cache.ln1_rms, &dln1_out, &mut g.ln1_g);
+            let mut dx_in = dx_mid; // residual
+            dx_in.axpy_mat(1.0, &dx_in_from_attn);
+            dx = dx_in;
+        }
+
+        // Embedding scatter.
+        for (i, &t) in record.tokens.iter().enumerate() {
+            let drow = dx.row(i);
+            for j in 0..d {
+                grads.embed[(t, j)] += drow[j];
+            }
+        }
+    }
+}
+
+/// Inverse RoPE rotation (rotate by −pos): transpose of the forward
+/// rotation, used for the gradient.
+fn rotate_inverse(_rope: &Rope, row: &mut [f64], pos: usize) {
+    // Forward rotates by +θ·pos per plane; the Jacobian is the rotation
+    // itself, so the gradient rotates by −θ·pos. We re-use the forward
+    // machinery by negating the pairs' angle via conjugation:
+    // rot(-θ): (a, b) → (a c + b s, −a s + b c). Implemented directly.
+    let d = row.len();
+    debug_assert!(d % 2 == 0);
+    // Reconstruct the frequencies the same way Rope::new does.
+    for k in 0..d / 2 {
+        let f = 10_000f64.powf(-2.0 * k as f64 / d as f64);
+        let theta = pos as f64 * f;
+        let (s, c) = theta.sin_cos();
+        let (a, b) = (row[2 * k], row[2 * k + 1]);
+        row[2 * k] = a * c + b * s;
+        row[2 * k + 1] = -a * s + b * c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::max_abs_diff;
+
+    fn tiny_model(seed: u64) -> Transformer {
+        let mut rng = Rng::seeded(seed);
+        let cfg = ModelConfig {
+            vocab_size: 16,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            max_seq: 16,
+        };
+        Transformer::new(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_model(201);
+        let rec = m.forward(&[1, 2, 3, 4, 5], &AttentionBackend::Exact, false);
+        assert_eq!(rec.logits.shape(), (5, 16));
+        assert_eq!(rec.final_hidden.shape(), (5, 8));
+        assert!(rec.logits.is_finite());
+    }
+
+    #[test]
+    fn rotate_inverse_is_inverse() {
+        let rope = Rope::new(8, 10_000.0);
+        let mut rng = Rng::seeded(202);
+        let orig = rng.randn_vec(8);
+        let mut row = orig.clone();
+        rope.rotate_row(&mut row, 13);
+        rotate_inverse(&rope, &mut row, 13);
+        for (a, b) in row.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lm_loss_decreases_on_overfit_step() {
+        let m = tiny_model(203);
+        let tokens = [1usize, 2, 3, 4, 5, 6];
+        let targets = [2usize, 3, 4, 5, 6, 7];
+        let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+        let (loss0, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
+        let mut grads = m.zero_grads();
+        m.backward(&rec, &dlogits, None, &mut grads);
+        // SGD step.
+        let mut m2 = m.clone();
+        let lr = 0.5;
+        m2.embed.axpy_mat(-lr, &grads.embed);
+        m2.head.axpy_mat(-lr, &grads.head);
+        for (l, gl) in m2.layers.iter_mut().zip(&grads.layers) {
+            l.wq.axpy_mat(-lr, &gl.wq);
+            l.wk.axpy_mat(-lr, &gl.wk);
+            l.wv.axpy_mat(-lr, &gl.wv);
+            l.wo.axpy_mat(-lr, &gl.wo);
+            l.w1.axpy_mat(-lr, &gl.w1);
+            l.w2.axpy_mat(-lr, &gl.w2);
+        }
+        let rec2 = m2.forward(&tokens, &AttentionBackend::Exact, false);
+        let (loss1, _) = m2.lm_loss(&rec2, &targets, usize::MAX);
+        assert!(loss1 < loss0, "{loss1} !< {loss0}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Spot-check several parameters end-to-end.
+        let m = tiny_model(204);
+        let tokens = [3usize, 1, 4, 1, 5];
+        let targets = [1usize, 4, 1, 5, 9];
+        let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+        let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
+        let mut grads = m.zero_grads();
+        m.backward(&rec, &dlogits, None, &mut grads);
+
+        let eps = 1e-5;
+        let loss_with = |m: &Transformer| {
+            let r = m.forward(&tokens, &AttentionBackend::Exact, false);
+            m.lm_loss(&r, &targets, usize::MAX).0
+        };
+        // wq of layer 0, a few entries.
+        for &(i, j) in &[(0usize, 0usize), (3, 5), (7, 2)] {
+            let mut mp = m.clone();
+            mp.layers[0].wq[(i, j)] += eps;
+            let mut mm = m.clone();
+            mm.layers[0].wq[(i, j)] -= eps;
+            let fd = (loss_with(&mp) - loss_with(&mm)) / (2.0 * eps);
+            let an = grads.layers[0].wq[(i, j)];
+            assert!((fd - an).abs() < 1e-5, "wq({i},{j}): fd={fd} an={an}");
+        }
+        // ln1_g of layer 1.
+        for &j in &[0usize, 4] {
+            let mut mp = m.clone();
+            mp.layers[1].ln1_g[j] += eps;
+            let mut mm = m.clone();
+            mm.layers[1].ln1_g[j] -= eps;
+            let fd = (loss_with(&mp) - loss_with(&mm)) / (2.0 * eps);
+            let an = grads.layers[1].ln1_g[j];
+            assert!((fd - an).abs() < 1e-5, "ln1_g({j}): fd={fd} an={an}");
+        }
+        // Embedding of token 1 (appears twice).
+        for &j in &[0usize, 7] {
+            let mut mp = m.clone();
+            mp.embed[(1, j)] += eps;
+            let mut mm = m.clone();
+            mm.embed[(1, j)] -= eps;
+            let fd = (loss_with(&mp) - loss_with(&mm)) / (2.0 * eps);
+            let an = grads.embed[(1, j)];
+            assert!((fd - an).abs() < 1e-4 * (1.0 + an.abs()), "embed(1,{j}): fd={fd} an={an}");
+        }
+        // w2 of layer 0.
+        let mut mp = m.clone();
+        mp.layers[0].w2[(5, 3)] += eps;
+        let mut mm = m.clone();
+        mm.layers[0].w2[(5, 3)] -= eps;
+        let fd = (loss_with(&mp) - loss_with(&mm)) / (2.0 * eps);
+        let an = grads.layers[0].w2[(5, 3)];
+        assert!((fd - an).abs() < 1e-5, "w2: fd={fd} an={an}");
+        // Final norm gain + head.
+        let mut mp = m.clone();
+        mp.lnf_g[2] += eps;
+        let mut mm = m.clone();
+        mm.lnf_g[2] -= eps;
+        let fd = (loss_with(&mp) - loss_with(&mm)) / (2.0 * eps);
+        assert!((fd - grads.lnf_g[2]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cls_gradient_matches_finite_differences() {
+        let m = tiny_model(205);
+        let tokens = [2usize, 7, 1, 9];
+        let label = true;
+        let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+        let (_, _, dcls) = m.cls_loss(&rec, label);
+        let mut grads = m.zero_grads();
+        let zero_dlogits = Matrix::zeros(4, 16);
+        m.backward(&rec, &zero_dlogits, Some(dcls), &mut grads);
+
+        let eps = 1e-5;
+        let loss_with = |m: &Transformer| {
+            let r = m.forward(&tokens, &AttentionBackend::Exact, false);
+            m.cls_loss(&r, label).0
+        };
+        let mut mp = m.clone();
+        mp.cls_head[(3, 1)] += eps;
+        let mut mm = m.clone();
+        mm.cls_head[(3, 1)] -= eps;
+        let fd = (loss_with(&mp) - loss_with(&mm)) / (2.0 * eps);
+        assert!((fd - grads.cls_head[(3, 1)]).abs() < 1e-6);
+        // And a weight upstream of the pooled position.
+        let mut mp = m.clone();
+        mp.layers[0].wv[(2, 2)] += eps;
+        let mut mm = m.clone();
+        mm.layers[0].wv[(2, 2)] -= eps;
+        let fd = (loss_with(&mp) - loss_with(&mm)) / (2.0 * eps);
+        let an = grads.layers[0].wv[(2, 2)];
+        assert!((fd - an).abs() < 1e-5, "fd={fd} an={an}");
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let m = tiny_model(206);
+        let a = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
+        let b = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
+        assert!(max_abs_diff(&a.logits, &b.logits) == 0.0);
+    }
+}

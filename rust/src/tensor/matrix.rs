@@ -1,0 +1,442 @@
+//! Row-major dense `f64` matrix with a blocked, thread-parallel matmul
+//! (std::thread scoped threads — this image vendors no rayon).
+
+use super::rng::Rng;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// All-zero `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// All-one matrix.
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a flat row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries (deterministic given the RNG state).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.randn()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform `[-a, a)` entries.
+    pub fn rand_uniform(rows: usize, cols: usize, a: f64, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| (rng.uniform() * 2.0 - 1.0) * a).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy column `j` out.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Set column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Matrix product `self * other`.
+    ///
+    /// i-k-j loop order (streams rows of `other`, auto-vectorizes the
+    /// inner j loop). Rows are split across scoped std threads once the
+    /// work is large enough to amortize thread spawn.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, kk, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        let work = m * kk * n;
+
+        #[inline]
+        fn row_block(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f64]) {
+            let n = b.cols;
+            for (ri, i) in rows.enumerate() {
+                let a_row = a.row(i);
+                let out_row = &mut out[ri * n..(ri + 1) * n];
+                for (k, &aik) in a_row.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = b.row(k);
+                    for j in 0..n {
+                        out_row[j] += aik * b_row[j];
+                    }
+                }
+            }
+        }
+
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        if work < 96 * 96 * 96 || threads == 1 || m < 2 * threads {
+            // Serial path: small matmuls dominate the unit tests; thread
+            // spawn would cost more than the multiply.
+            row_block(self, other, 0..m, &mut out.data);
+            return out;
+        }
+        let chunk_rows = m.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f64] = &mut out.data;
+            let mut start = 0usize;
+            while start < m {
+                let end = (start + chunk_rows).min(m);
+                let (head, tail) = rest.split_at_mut((end - start) * n);
+                rest = tail;
+                let range = start..end;
+                scope.spawn(move || row_block(self, other, range, head));
+                start = end;
+            }
+        });
+        out
+    }
+
+    /// `self * v` for a vector `v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        (0..self.rows).map(|i| super::dot(self.row(i), v)).collect()
+    }
+
+    /// `selfᵀ * v`.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len(), "matvec_t shape mismatch");
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            super::axpy(v[i], self.row(i), &mut out);
+        }
+        out
+    }
+
+    /// Element-wise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64 + Sync) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Element-wise (Hadamard) product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect(),
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// `self * s` for a scalar.
+    pub fn scale(&self, s: f64) -> Matrix {
+        self.map(|x| x * s)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy_mat(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Row sums (`A · 1_n`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Scale each row `i` by `s[i]` (i.e. `diag(s) · A`).
+    pub fn scale_rows(&self, s: &[f64]) -> Matrix {
+        assert_eq!(s.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for x in out.row_mut(i) {
+                *x *= s[i];
+            }
+        }
+        out
+    }
+
+    /// Scale each column `j` by `s[j]` (i.e. `A · diag(s)`).
+    pub fn scale_cols(&self, s: &[f64]) -> Matrix {
+        assert_eq!(s.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= s[j];
+            }
+        }
+        out
+    }
+
+    /// Extract a contiguous sub-matrix (rows `r0..r1`, cols `c0..c1`).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        Matrix::from_fn(r1 - r0, c1 - c0, |i, j| self[(r0 + i, c0 + j)])
+    }
+
+    /// Whether all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Lower-triangular part (inclusive of diagonal); the rest zeroed.
+    pub fn tril(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| if i >= j { self[(i, j)] } else { 0.0 })
+    }
+
+    /// Strictly upper-triangular part.
+    pub fn triu_strict(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |i, j| if i < j { self[(i, j)] } else { 0.0 })
+    }
+
+    /// Convert to `f32` (PJRT interop).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from `f32` data (PJRT interop).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seeded(1);
+        let a = Matrix::randn(5, 7, &mut rng);
+        let i = Matrix::eye(7);
+        let prod = a.matmul(&i);
+        assert_eq!(prod, a);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::seeded(2);
+        let a = Matrix::randn(9, 11, &mut rng);
+        let b = Matrix::randn(11, 6, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..9 {
+            for j in 0..6 {
+                let mut s = 0.0;
+                for k in 0..11 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                assert!((c[(i, j)] - s).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches_serial() {
+        let mut rng = Rng::seeded(3);
+        // Force the parallel branch (work >= 64^3).
+        let a = Matrix::randn(80, 70, &mut rng);
+        let b = Matrix::randn(70, 90, &mut rng);
+        let c = a.matmul(&b);
+        // Check a few entries against a naive computation.
+        for &(i, j) in &[(0, 0), (79, 89), (40, 45), (13, 77)] {
+            let mut s = 0.0;
+            for k in 0..70 {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            assert!((c[(i, j)] - s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seeded(4);
+        let a = Matrix::randn(33, 47, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::seeded(5);
+        let a = Matrix::randn(6, 4, &mut rng);
+        let v = vec![1.0, -2.0, 3.0, 0.5];
+        let vm = Matrix::from_vec(4, 1, v.clone());
+        let via_matmul = a.matmul(&vm);
+        let via_matvec = a.matvec(&v);
+        for i in 0..6 {
+            assert!((via_matmul[(i, 0)] - via_matvec[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let mut rng = Rng::seeded(6);
+        let a = Matrix::randn(6, 4, &mut rng);
+        let v = vec![1.0, -1.0, 2.0, 0.25, 3.0, -0.5];
+        let direct = a.matvec_t(&v);
+        let via_t = a.transpose().matvec(&v);
+        for (x, y) in direct.iter().zip(&via_t) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn row_sums_and_scaling() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.row_sums(), vec![3.0, 7.0]);
+        let scaled = a.scale_rows(&[2.0, 0.5]);
+        assert_eq!(scaled.data(), &[2.0, 4.0, 1.5, 2.0]);
+        let cscaled = a.scale_cols(&[10.0, 1.0]);
+        assert_eq!(cscaled.data(), &[10.0, 2.0, 30.0, 4.0]);
+    }
+
+    #[test]
+    fn tril_triu_partition() {
+        let mut rng = Rng::seeded(7);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let recon = a.tril().add(&a.triu_strict());
+        assert_eq!(recon, a);
+    }
+
+    #[test]
+    fn slice_extracts() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let s = a.slice(1, 3, 2, 4);
+        assert_eq!(s.data(), &[6.0, 7.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = Matrix::from_vec(1, 3, vec![1.5, -2.25, 0.0]);
+        let f = a.to_f32();
+        let back = Matrix::from_f32(1, 3, &f);
+        assert_eq!(back, a);
+    }
+}

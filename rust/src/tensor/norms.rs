@@ -1,0 +1,77 @@
+//! Matrix / vector norms as used throughout the paper (§3 Notations):
+//! entry-wise ℓ₁, ℓ∞ and Frobenius.
+
+use super::Matrix;
+
+/// `‖v‖₁ = Σ|vᵢ|`.
+pub fn l1_norm_vec(v: &[f64]) -> f64 {
+    v.iter().map(|x| x.abs()).sum()
+}
+
+/// `‖v‖∞ = max |vᵢ|`.
+pub fn linf_norm_vec(v: &[f64]) -> f64 {
+    v.iter().fold(0.0, |m, x| m.max(x.abs()))
+}
+
+/// Entry-wise `‖A‖₁ = Σᵢⱼ |Aᵢⱼ|` (paper §3, *not* the operator 1-norm).
+pub fn l1_norm_mat(a: &Matrix) -> f64 {
+    l1_norm_vec(a.data())
+}
+
+/// Entry-wise `‖A‖∞ = maxᵢⱼ |Aᵢⱼ|`.
+pub fn linf_norm_mat(a: &Matrix) -> f64 {
+    linf_norm_vec(a.data())
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Matrix) -> f64 {
+    a.data().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// `maxᵢⱼ |Aᵢⱼ − Bᵢⱼ|` — the error metric of Theorem 4.4.
+pub fn max_abs_diff(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.shape(), b.shape(), "max_abs_diff shape mismatch");
+    a.data()
+        .iter()
+        .zip(b.data())
+        .fold(0.0, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// Relative Frobenius error `‖A − B‖²_F / ‖A‖²_F` — the Figure 4 metric.
+pub fn rel_fro_error(reference: &Matrix, approx: &Matrix) -> f64 {
+    assert_eq!(reference.shape(), approx.shape());
+    let num: f64 = reference
+        .data()
+        .iter()
+        .zip(approx.data())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+    let den: f64 = reference.data().iter().map(|x| x * x).sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_basic() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(l1_norm_mat(&a), 10.0);
+        assert_eq!(linf_norm_mat(&a), 4.0);
+        assert!((fro_norm(&a) - (30f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 2.5, 2.0]);
+        assert_eq!(max_abs_diff(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn rel_fro_zero_for_equal() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert_eq!(rel_fro_error(&a, &a.clone()), 0.0);
+    }
+}

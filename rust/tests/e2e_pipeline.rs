@@ -1,0 +1,135 @@
+//! End-to-end pipeline tests: model training with conv-basis inference
+//! swap (the Figure 4 protocol, scaled down), and coordinator serving
+//! over a workload trace.
+
+use conv_basis::coordinator::{
+    run_trace, BatcherConfig, RouterConfig, Server, ServerConfig,
+};
+use conv_basis::data::{SentimentDataset, WorkloadConfig, WorkloadTrace};
+use conv_basis::model::{
+    eval_classifier, train_classifier, AttentionBackend, ModelConfig, TrainConfig,
+};
+use conv_basis::tensor::rel_fro_error;
+
+#[test]
+fn figure4_protocol_small() {
+    // Train with exact attention; evaluate with conv-basis attention at
+    // increasing k — relative error must fall and accuracy must rise
+    // toward the exact backend's (the Figure 4 shape, at test scale).
+    let seq = 48;
+    let mcfg = ModelConfig {
+        vocab_size: 260,
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 32,
+        max_seq: seq,
+    };
+    let ds = SentimentDataset::generate(80, 30, 11);
+    let tcfg = TrainConfig { steps: 80, lr: 3e-3, seq_len: seq, batch: 4, log_every: 40, seed: 12 };
+    let (model, log) = train_classifier(&mcfg, &tcfg, &ds);
+    assert!(log.losses.last().unwrap().1 < log.losses.first().unwrap().1);
+
+    let tok = conv_basis::data::ByteTokenizer::new();
+    let sample = tok.encode_for_classification(&ds.test[0].text, seq);
+    let exact_rec = model.forward(&sample, &AttentionBackend::Exact, false);
+
+    let mut prev_err = f64::INFINITY;
+    let mut errs = Vec::new();
+    for k in [1usize, 4, seq] {
+        let backend = if k == seq {
+            AttentionBackend::ConvBasis(conv_basis::basis::RecoverConfig::exact(seq))
+        } else {
+            AttentionBackend::conv_with_k(k, seq)
+        };
+        let rec = model.forward(&sample, &backend, false);
+        let err = rel_fro_error(&exact_rec.final_hidden, &rec.final_hidden);
+        errs.push((k, err));
+        prev_err = prev_err.min(err);
+    }
+    // Largest k is (numerically) exact.
+    let (_, err_full) = *errs.last().unwrap();
+    assert!(err_full < 1e-10, "full-k error = {err_full} ({errs:?})");
+    // Error at k=n is no worse than at k=1.
+    assert!(errs.last().unwrap().1 <= errs[0].1 + 1e-12);
+
+    // Accuracy with full-k conv equals exact accuracy.
+    let acc_exact = eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact);
+    let acc_conv = eval_classifier(
+        &model,
+        &ds.test,
+        seq,
+        &AttentionBackend::ConvBasis(conv_basis::basis::RecoverConfig::exact(seq)),
+    );
+    assert!((acc_exact - acc_conv).abs() < 1e-9, "{acc_exact} vs {acc_conv}");
+}
+
+#[test]
+fn coordinator_serves_mixed_trace_with_conv_speedup_metrics() {
+    let server = Server::start(ServerConfig {
+        router: RouterConfig { exact_below: 96, k_frac: 0.05, k_cap: 16, ..Default::default() },
+        batcher: BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+        workers: 3,
+        cache_capacity: 32,
+        lowrank_degree: 2,
+    });
+    let trace = WorkloadTrace::generate(
+        60,
+        &WorkloadConfig {
+            rate_per_s: 50_000.0,
+            len_buckets: [48, 64, 128, 192],
+            len_weights: [0.3, 0.3, 0.2, 0.2],
+            d_model: 8,
+        },
+        21,
+    );
+    let resps = run_trace(&server, &trace, 0.0);
+    assert_eq!(resps.len(), 60);
+    let metrics = server.shutdown();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.requests_completed, 60);
+    // Both backends exercised by the mixed trace.
+    assert!(snap.exact_requests > 0, "no exact requests");
+    assert!(snap.conv_requests > 0, "no conv requests");
+    // Latencies recorded.
+    assert_eq!(snap.e2e.count, 60);
+    assert!(snap.e2e.p50_us > 0.0);
+    // Every response finite.
+    for r in &resps {
+        assert!(r.y.is_finite(), "response {} not finite", r.id);
+    }
+}
+
+#[test]
+fn lm_training_then_conv_generation_consistency() {
+    // Train a small LM, then check next-token distributions under exact
+    // vs exact-config conv attention agree (greedy tokens identical).
+    let mcfg = ModelConfig {
+        vocab_size: 260,
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 1,
+        d_ff: 32,
+        max_seq: 32,
+    };
+    let tcfg = TrainConfig { steps: 30, lr: 3e-3, seq_len: 32, batch: 2, log_every: 15, seed: 5 };
+    let (model, _) = conv_basis::model::train_lm(&mcfg, &tcfg, 3000);
+    let prompt: Vec<usize> = "the model computes".bytes().map(|b| b as usize).collect();
+    let exact = model.forward(&prompt, &AttentionBackend::Exact, false);
+    let conv = model.forward(
+        &prompt,
+        &AttentionBackend::ConvBasis(conv_basis::basis::RecoverConfig::exact(prompt.len())),
+        false,
+    );
+    let last = prompt.len() - 1;
+    let argmax = |logits: &conv_basis::tensor::Matrix| {
+        logits
+            .row(last)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    assert_eq!(argmax(&exact.logits), argmax(&conv.logits));
+}

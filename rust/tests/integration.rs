@@ -1,0 +1,202 @@
+//! Integration tests across modules: PJRT artifacts vs the native Rust
+//! path, and the full recover→transform→apply pipeline end-to-end.
+//!
+//! Artifact-dependent tests skip (with a notice) when `artifacts/` has
+//! not been built; `make test` builds them first.
+
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::{conv_attention, exact_attention, Mask};
+use conv_basis::basis::{ConvBasis, KConvBasis, RecoverConfig};
+use conv_basis::runtime::PjrtRuntime;
+use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
+use std::path::Path;
+
+fn artifacts_root() -> std::path::PathBuf {
+    // Tests run from the crate root.
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("conv_attention.hlo.txt").exists()
+}
+
+/// The default AOT variant baked by `make artifacts` (python/compile/aot.py).
+const ART_N: usize = 256;
+const ART_D: usize = 32;
+const ART_K: usize = 4;
+const ART_MS: [usize; 4] = [256, 128, 64, 32];
+
+#[test]
+fn pjrt_conv_attention_artifact_matches_native() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let model = rt
+        .load(&artifacts_root().join("conv_attention.hlo.txt"))
+        .expect("load artifact");
+
+    // Positive basis bank (mirrors exp_transform output) + V.
+    let mut rng = Rng::seeded(301);
+    let mut bases = Matrix::randn(ART_K, ART_N, &mut rng).map(|x| x.abs() + 0.1);
+    // Keep magnitudes f32-friendly.
+    bases = bases.scale(0.5);
+    let v = Matrix::randn(ART_N, ART_D, &mut rng);
+
+    let out = model
+        .run(&[(&bases, (ART_K, ART_N)), (&v, (ART_N, ART_D))], &[(ART_N, ART_D)])
+        .expect("execute artifact");
+    let y_pjrt = &out[0];
+
+    // Native Rust path with the identical basis bank.
+    let terms: Vec<ConvBasis> = (0..ART_K)
+        .map(|r| ConvBasis { b: bases.row(r).to_vec(), m: ART_MS[r] })
+        .collect();
+    let basis = KConvBasis::new(ART_N, terms);
+    let mut planner = conv_basis::fft::FftPlanner::new();
+    let num = basis.apply_matrix(&mut planner, &v);
+    let d = basis.row_sums();
+    let inv: Vec<f64> = d.iter().map(|&x| 1.0 / x).collect();
+    let y_native = num.scale_rows(&inv);
+
+    let err = max_abs_diff(y_pjrt, &y_native);
+    assert!(err < 5e-4, "pjrt vs native err = {err}"); // f32 artifact
+}
+
+#[test]
+fn pjrt_exact_attention_artifact_matches_native() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let model = rt
+        .load(&artifacts_root().join("exact_attention.hlo.txt"))
+        .expect("load artifact");
+    let mut rng = Rng::seeded(302);
+    let q = Matrix::randn(ART_N, ART_D, &mut rng).scale(0.2);
+    let k = Matrix::randn(ART_N, ART_D, &mut rng).scale(0.2);
+    let v = Matrix::randn(ART_N, ART_D, &mut rng);
+    let out = model
+        .run(
+            &[(&q, (ART_N, ART_D)), (&k, (ART_N, ART_D)), (&v, (ART_N, ART_D))],
+            &[(ART_N, ART_D)],
+        )
+        .expect("execute artifact");
+    let y_native = exact_attention(&q, &k, &v, &Mask::causal(ART_N));
+    let err = max_abs_diff(&out[0], &y_native);
+    assert!(err < 1e-3, "pjrt vs native err = {err}");
+}
+
+#[test]
+fn recover_then_pjrt_apply_pipeline() {
+    // Full three-layer composition: Rust recovers the basis from
+    // structured Q,K (Algorithm 2), then the PJRT artifact (L2+L1,
+    // jax+pallas-lowered) applies it; result must match the exact
+    // attention oracle.
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut rng = Rng::seeded(303);
+    let (q, k) = rope_structured_qk(ART_N, ART_D, 3, &mut rng);
+    let v = Matrix::randn(ART_N, ART_D, &mut rng);
+    let t = 4;
+    let cfg = RecoverConfig { k_max: ART_K, t, delta: 5.0 * t as f64 * 1e-7, eps: 1e-7 };
+    let out = conv_attention(&q, &k, &v, &cfg).expect("conv attention");
+
+    // Pad the recovered basis into the artifact's fixed (k, ms) bank:
+    // the artifact windows are (256,128,64,32); any basis with windows
+    // not matching must be re-expressed. Toeplitz QKᵀ gives k=1, m=256,
+    // which IS the artifact's first slot; remaining slots zero.
+    assert!(out.post_basis.k() <= ART_K);
+    let mut bases = Matrix::zeros(ART_K, ART_N);
+    let mut ok = true;
+    for term in out.post_basis.terms() {
+        if let Some(slot) = ART_MS.iter().position(|&m| m == term.m) {
+            for (j, &x) in term.b.iter().enumerate() {
+                bases[(slot, j)] = x;
+            }
+        } else {
+            ok = false;
+        }
+    }
+    if !ok {
+        eprintln!("SKIP: recovered windows don't fit the artifact variant");
+        return;
+    }
+    let mut rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let model = rt
+        .load(&artifacts_root().join("conv_attention.hlo.txt"))
+        .expect("load artifact");
+    let y_pjrt = &model
+        .run(&[(&bases, (ART_K, ART_N)), (&v, (ART_N, ART_D))], &[(ART_N, ART_D)])
+        .expect("execute")[0];
+
+    let exact = exact_attention(&q, &k, &v, &Mask::causal(ART_N));
+    let err = max_abs_diff(y_pjrt, &exact);
+    assert!(err < 1e-3, "pipeline err vs oracle = {err}");
+}
+
+
+#[test]
+fn pjrt_lowrank_causal_artifact_matches_native() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let model = rt
+        .load(&artifacts_root().join("lowrank_causal.hlo.txt"))
+        .expect("load artifact");
+    const RANK: usize = 16; // aot.py default
+    let mut rng = Rng::seeded(304);
+    // Positive factors: valid normalized attention.
+    let u1 = Matrix::randn(ART_N, RANK, &mut rng).map(|x| x.abs() + 0.1);
+    let u2 = Matrix::randn(ART_N, RANK, &mut rng).map(|x| x.abs() + 0.1);
+    let v = Matrix::randn(ART_N, ART_D, &mut rng);
+    let out = model
+        .run(
+            &[(&u1, (ART_N, RANK)), (&u2, (ART_N, RANK)), (&v, (ART_N, ART_D))],
+            &[(ART_N, ART_D)],
+        )
+        .expect("execute artifact");
+    // Native Theorem 6.5 path with identical factors (Algorithm 4).
+    let lr = conv_basis::lowrank::LowRankAttention::from_factors(
+        conv_basis::lowrank::LowRankFactors { u1, u2 },
+        Mask::causal(ART_N),
+    );
+    let y_native = lr.forward(&v);
+    let err = max_abs_diff(&out[0], &y_native);
+    assert!(err < 1e-3, "pjrt vs native err = {err}");
+}
+
+#[test]
+fn artifact_shape_mismatch_is_detected() {
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load(&artifacts_root().join("conv_attention.hlo.txt")).unwrap();
+    let bad = Matrix::zeros(2, 2);
+    let v = Matrix::zeros(ART_N, ART_D);
+    assert!(model
+        .run(&[(&bad, (ART_K, ART_N)), (&v, (ART_N, ART_D))], &[(ART_N, ART_D)])
+        .is_err());
+}
+
+#[test]
+fn makefile_artifact_paths_exist_or_skipped() {
+    // Keep the default artifact inventory in sync with aot.py.
+    if !have_artifacts() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    for name in ["conv_attention", "exact_attention", "lowrank_causal"] {
+        assert!(artifacts_root().join(format!("{name}.hlo.txt")).exists());
+        assert!(artifacts_root().join(format!("{name}.meta.json")).exists());
+    }
+    let _ = Path::new("x");
+}

@@ -1,0 +1,326 @@
+//! Property-based tests over the crate's core invariants.
+//!
+//! The image vendors no proptest, so this file carries a minimal
+//! in-tree property harness: each property runs across `CASES`
+//! independently-seeded random instances with shrink-free reporting
+//! (the failing seed is printed — re-run with that seed to reproduce).
+
+use conv_basis::attention::{conv_attention, exact_attention, merge_bases, Mask};
+use conv_basis::basis::{
+    decompose_exact, exp_transform, recover_from_oracle, ConvBasis, DenseColumnOracle,
+    KConvBasis, RecoverConfig,
+};
+use conv_basis::conv::{conv_apply, conv_apply_naive, sub_conv_apply};
+use conv_basis::fft::FftPlanner;
+use conv_basis::lowrank::masked;
+use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
+
+const CASES: u64 = 40;
+
+/// Run `prop(seed)` for many seeds; panic with the seed on failure.
+fn for_all(name: &str, prop: impl Fn(u64)) {
+    for case in 0..CASES {
+        let seed = 0xC0FFEE ^ (case * 2654435761);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(seed)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+fn random_dims(rng: &mut Rng) -> (usize, usize) {
+    let n = 8 + rng.below(56); // 8..64
+    let d = 2 + rng.below(7); // 2..9
+    (n, d)
+}
+
+#[test]
+fn prop_fft_conv_equals_naive() {
+    for_all("fft_conv_equals_naive", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 1 + rng.below(200);
+        let a = rng.randn_vec(n);
+        let x = rng.randn_vec(n);
+        let mut p = FftPlanner::new();
+        let fast = conv_apply(&mut p, &a, &x);
+        let naive = conv_apply_naive(&a, &x);
+        for (u, v) in fast.iter().zip(&naive) {
+            assert!((u - v).abs() < 1e-7, "n={n}");
+        }
+    });
+}
+
+#[test]
+fn prop_conv_additivity() {
+    // Claim 3.8: conv(a)x + conv(b)x == conv(a+b)x.
+    for_all("conv_additivity", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 1 + rng.below(128);
+        let a = rng.randn_vec(n);
+        let b = rng.randn_vec(n);
+        let x = rng.randn_vec(n);
+        let mut p = FftPlanner::new();
+        let lhs: Vec<f64> = conv_apply(&mut p, &a, &x)
+            .iter()
+            .zip(conv_apply(&mut p, &b, &x))
+            .map(|(u, v)| u + v)
+            .collect();
+        let sum: Vec<f64> = a.iter().zip(&b).map(|(u, v)| u + v).collect();
+        let rhs = conv_apply(&mut p, &sum, &x);
+        for (u, v) in lhs.iter().zip(&rhs) {
+            assert!((u - v).abs() < 1e-7);
+        }
+    });
+}
+
+#[test]
+fn prop_sub_conv_window_consistency() {
+    // conv(a, m)·x touches only the last m coordinates, and on them
+    // equals the dense sub-conv matvec.
+    for_all("sub_conv_window", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 2 + rng.below(100);
+        let m = 1 + rng.below(n);
+        let a = rng.randn_vec(n);
+        let x = rng.randn_vec(n);
+        let mut p = FftPlanner::new();
+        let y = sub_conv_apply(&mut p, &a, m, &x);
+        for (i, v) in y.iter().enumerate().take(n - m) {
+            assert_eq!(*v, 0.0, "leading zero at {i}");
+        }
+        let dense = conv_basis::conv::SubConvMatrix::new(a, m).to_dense().matvec(&x);
+        for (u, v) in y.iter().zip(&dense) {
+            assert!((u - v).abs() < 1e-7);
+        }
+    });
+}
+
+#[test]
+fn prop_decompose_roundtrip() {
+    // Lemma 3.12: decompose_exact ∘ to_dense == identity on k-conv
+    // matrices, with minimal k.
+    for_all("decompose_roundtrip", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 6 + rng.below(40);
+        let k = 1 + rng.below(4.min(n));
+        // Distinct decreasing windows.
+        let mut ms: Vec<usize> = Vec::new();
+        let mut m = n;
+        for _ in 0..k {
+            ms.push(m);
+            if m <= 2 {
+                break;
+            }
+            m = 1 + rng.below(m - 1);
+        }
+        let terms: Vec<ConvBasis> = ms
+            .iter()
+            .map(|&m| {
+                let mut b = rng.randn_vec(n);
+                for t in b.iter_mut().skip(m) {
+                    *t = 0.0;
+                }
+                // Ensure the onset column actually differs (b ≠ 0 head).
+                b[0] += 1.0;
+                ConvBasis { b, m }
+            })
+            .collect();
+        let basis = KConvBasis::new(n, terms);
+        let h = basis.to_dense();
+        let rec = decompose_exact(&h, 1e-9);
+        assert_eq!(rec.k(), ms.len(), "minimal k");
+        assert!(max_abs_diff(&rec.to_dense(), &h) < 1e-8);
+    });
+}
+
+#[test]
+fn prop_recover_roundtrip_nondegenerate() {
+    // Algorithm 2 recovers any (T, δ)-non-degenerate basis exactly.
+    for_all("recover_roundtrip", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 16 + rng.below(64);
+        let t = 2 + rng.below(3);
+        let k = 1 + rng.below(3);
+        let mut ms = vec![n];
+        for _ in 1..k {
+            let last = *ms.last().unwrap();
+            if last <= t + 1 {
+                break;
+            }
+            ms.push(t + 1 + rng.below(last - t - 1));
+        }
+        let terms: Vec<ConvBasis> = ms
+            .iter()
+            .map(|&m| {
+                let mut b = rng.randn_vec(n);
+                for x in b.iter_mut().take(t) {
+                    *x = 1.0 + rng.uniform(); // positive window head
+                }
+                for x in b.iter_mut().skip(m) {
+                    *x = 0.0;
+                }
+                ConvBasis { b, m }
+            })
+            .collect();
+        let basis = KConvBasis::new(n, terms);
+        let h = basis.to_dense();
+        let cfg = RecoverConfig { k_max: 8, t, delta: 0.5, eps: 1e-9 };
+        let (rec, _) = recover_from_oracle(&DenseColumnOracle(&h), &cfg).unwrap();
+        assert_eq!(rec.k(), ms.len());
+        assert!(max_abs_diff(&rec.to_dense(), &h) < 1e-8);
+    });
+}
+
+#[test]
+fn prop_exp_transform_is_masked_exp() {
+    // Lemma B.16 (+ completion): compose(exp_transform(B)) ==
+    // causal ∘ exp(compose(B)).
+    for_all("exp_transform", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 4 + rng.below(32);
+        let k = 1 + rng.below(3);
+        let mut ms: Vec<usize> = Vec::new();
+        let mut m = 1 + rng.below(n);
+        for _ in 0..k {
+            ms.push(m);
+            if m <= 1 {
+                break;
+            }
+            m = 1 + rng.below(m - 1);
+        }
+        ms.dedup();
+        let terms: Vec<ConvBasis> = ms
+            .iter()
+            .map(|&m| ConvBasis { b: rng.randn_vec(n).iter().map(|x| x * 0.5).collect(), m })
+            .collect();
+        let basis = KConvBasis::new(n, terms);
+        let want = Mask::causal(n).apply(&basis.to_dense().map(f64::exp));
+        let got = exp_transform(&basis, true).to_dense();
+        assert!(max_abs_diff(&want, &got) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_conv_attention_error_bound() {
+    // Theorem 4.4 on exactly-structured inputs: error ≈ 0; on ε-noised
+    // inputs: within the theorem bound.
+    for_all("conv_attention_bound", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 24 + rng.below(40);
+        let d = 4 + 2 * rng.below(3);
+        let (q, k) = conv_basis::attention::rope::rope_structured_qk(n, d, 2, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let exact = exact_attention(&q, &k, &v, &Mask::causal(n));
+        let t = 3;
+        let cfg = RecoverConfig { k_max: 4, t, delta: 5.0 * t as f64 * 1e-8, eps: 1e-8 };
+        let out = conv_attention(&q, &k, &v, &cfg).unwrap();
+        let err = max_abs_diff(&exact, &out.y);
+        assert!(err < 1e-7, "err = {err}");
+    });
+}
+
+#[test]
+fn prop_masked_lowrank_kernels_match_dense() {
+    for_all("masked_lowrank", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let (n, kdim) = random_dims(&mut rng);
+        let u1 = Matrix::randn(n, kdim, &mut rng);
+        let u2 = Matrix::randn(n, kdim, &mut rng);
+        let v = rng.randn_vec(n);
+        // Causal.
+        let causal = Mask::causal(n);
+        let want = masked::dense_multiply(&causal, &u1, &u2, &v);
+        let got = masked::causal_multiply(&u1, &u2, &v);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-8);
+        }
+        // Sliding window via deltas.
+        let w = 1 + rng.below(n);
+        let sw = Mask::sliding_window(n, w, rng.below(3));
+        let want = masked::dense_multiply(&sw, &u1, &u2, &v);
+        let got = masked::row_change_multiply(&sw, &u1, &u2, &v);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-8);
+        }
+        // Continuous rows, segment tree and prefix agree with dense.
+        let s: Vec<usize> = (0..n).map(|i| rng.below(i + 1)).collect();
+        let t: Vec<usize> = (0..n).map(|i| s[i] + rng.below(n - s[i])).collect();
+        let cr = Mask::continuous_row(s.clone(), t.clone());
+        let want = masked::dense_multiply(&cr, &u1, &u2, &v);
+        for got in [
+            masked::continuous_row_multiply_segtree(&u1, &u2, &v, &s, &t),
+            masked::continuous_row_multiply_prefix(&u1, &u2, &v, &s, &t),
+        ] {
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a - b).abs() < 1e-8);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merge_bases_is_sum() {
+    for_all("merge_bases", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 4 + rng.below(24);
+        let mk = |rng: &mut Rng| {
+            let k = 1 + rng.below(3);
+            let mut ms: Vec<usize> = (0..k).map(|_| 1 + rng.below(n)).collect();
+            ms.sort_unstable();
+            ms.dedup();
+            ms.reverse();
+            KConvBasis::new(
+                n,
+                ms.iter().map(|&m| ConvBasis { b: rng.randn_vec(n), m }).collect(),
+            )
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        let merged = merge_bases(&a, &b);
+        let want = a.to_dense().add(&b.to_dense());
+        assert!(max_abs_diff(&merged.to_dense(), &want) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_gradient_fast_matches_naive() {
+    for_all("gradient_fast", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 10 + rng.below(16);
+        let d = 2 + rng.below(3);
+        let p = conv_basis::gradient::AttentionLossProblem::random_structured(n, d, &mut rng);
+        let x = Matrix::randn(d, d, &mut rng).scale(0.3);
+        let g_naive = conv_basis::gradient::grad_naive(&p, &x);
+        let (g_fast, _) =
+            conv_basis::gradient::grad_fast(&p, &x, &RecoverConfig::exact(n)).unwrap();
+        assert!(max_abs_diff(&g_naive, &g_fast) < 1e-7);
+    });
+}
+
+#[test]
+fn prop_row_sums_match_apply_ones() {
+    for_all("row_sums", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 4 + rng.below(48);
+        let k = 1 + rng.below(3);
+        let mut ms: Vec<usize> = (0..k).map(|_| 1 + rng.below(n)).collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms.reverse();
+        let basis = KConvBasis::new(
+            n,
+            ms.iter().map(|&m| ConvBasis { b: rng.randn_vec(n), m }).collect(),
+        );
+        let mut p = FftPlanner::new();
+        let via_fft = basis.apply(&mut p, &vec![1.0; n]);
+        let closed = basis.row_sums();
+        for (a, b) in via_fft.iter().zip(&closed) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    });
+}
