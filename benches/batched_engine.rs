@@ -1,0 +1,111 @@
+//! Tentpole bench: the batched multi-head conv-attention engine vs the
+//! seed's single-sequence loop (one `conv_attention_strided` call per
+//! (sequence, head), fresh FFT planner and fresh recovery every call).
+//!
+//! Three variants per (n, batch) cell:
+//!   * `single`  — sequential per-job calls, the pre-engine behavior;
+//!   * `cold`    — a fresh engine per iteration (pool spawn + empty
+//!                 plan/basis caches): pure fan-out + shared-plan win;
+//!   * `warm`    — a persistent engine: steady-state serving, where the
+//!                 basis cache turns repeat (layer, head, seq_len, QK)
+//!                 traffic into `O(kn + nd)` applies.
+//!
+//! Acceptance (ISSUE 1): batched throughput ≥ 2× single at batch 32,
+//! n = 1024.
+
+use conv_basis::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, EngineConfig};
+use conv_basis::attention::conv_attention_strided;
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::tensor::{Matrix, Rng};
+use conv_basis::util::{fmt_dur, sink, time_median, Table};
+
+const D: usize = 16;
+const HEADS: usize = 2;
+const K_BASES: usize = 8;
+
+fn make_jobs(n: usize, batch: usize, seed: u64) -> Vec<AttnJob> {
+    let mut jobs = Vec::with_capacity(batch * HEADS);
+    for s in 0..batch {
+        let mut rng = Rng::seeded(seed.wrapping_add(s as u64));
+        let (q, k) = rope_structured_qk(n, D, 3, &mut rng);
+        let v = Matrix::randn(n, D, &mut rng);
+        for h in 0..HEADS {
+            jobs.push(AttnJob::causal(
+                0,
+                h as u32,
+                q.clone(),
+                k.clone(),
+                v.clone(),
+                BatchedBackend::Strided(K_BASES),
+            ));
+        }
+    }
+    jobs
+}
+
+fn main() {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+    println!("# Batched multi-head conv-attention engine vs single-sequence loop");
+    println!("(d={D}, heads={HEADS}, strided k={K_BASES}, {workers} pool workers; \
+              jobs = batch × heads; req/s counts jobs)");
+    let mut table = Table::new(&[
+        "n", "batch", "single", "batched cold", "batched warm", "cold ×", "warm ×", "warm req/s",
+    ]);
+    let mut accept_line = String::new();
+    for &n in &[256usize, 1024, 4096] {
+        for &batch in &[1usize, 8, 32] {
+            let jobs = make_jobs(n, batch, n as u64 * 1000 + batch as u64);
+            let n_jobs = jobs.len();
+            let iters = if n >= 4096 { 3 } else { 5 };
+
+            // Single-sequence loop: fresh planner + fresh recovery per
+            // call, sequential — exactly the pre-engine hot path.
+            let t_single = time_median(iters, || {
+                let mut acc = 0.0;
+                for j in &jobs {
+                    let out = conv_attention_strided(&j.q, &j.k, &j.v, K_BASES).unwrap();
+                    acc += out.y[(0, 0)];
+                }
+                acc
+            });
+
+            // Cold engine: pool spawn + empty caches every iteration.
+            let cfg = EngineConfig { workers, cache_capacity: 2 * n_jobs.max(1) };
+            let t_cold = time_median(iters, || {
+                let engine = BatchedEngine::new(cfg);
+                sink(engine.attend_batch(jobs.clone()))
+            });
+
+            // Warm engine: persistent caches (time_median's warmup call
+            // fills them; timed iterations see steady state).
+            let engine = BatchedEngine::new(cfg);
+            let t_warm = time_median(iters, || sink(engine.attend_batch(jobs.clone())));
+
+            let cold_x = t_single.as_secs_f64() / t_cold.as_secs_f64();
+            let warm_x = t_single.as_secs_f64() / t_warm.as_secs_f64();
+            table.row(&[
+                n.to_string(),
+                batch.to_string(),
+                fmt_dur(t_single),
+                fmt_dur(t_cold),
+                fmt_dur(t_warm),
+                format!("{cold_x:.2}×"),
+                format!("{warm_x:.2}×"),
+                format!("{:.1}", n_jobs as f64 / t_warm.as_secs_f64()),
+            ]);
+            if n == 1024 && batch == 32 {
+                accept_line = format!(
+                    "acceptance @ n=1024, batch=32: batched {:.2}× (cold) / {:.2}× (warm) \
+                     vs the single-sequence loop (target ≥ 2×)",
+                    cold_x, warm_x
+                );
+            }
+        }
+    }
+    table.print();
+    println!("\n{accept_line}");
+    println!(
+        "shape check: the cold column isolates pool fan-out + shared FFT plans; \
+         the warm column adds recover-once-apply-per-V basis reuse."
+    );
+}

@@ -51,6 +51,10 @@ fn main() {
     println!("response basis k = {}", resps[0].basis_k);
 
     // --- PJRT cross-check --------------------------------------------------
+    if !conv_basis::runtime::pjrt_available() {
+        println!("built without the `pjrt` feature — skipping the PJRT cross-check");
+        return;
+    }
     let artifact = std::path::Path::new("artifacts/conv_attention.hlo.txt");
     if !artifact.exists() {
         println!("artifacts not built — run `make artifacts` for the PJRT cross-check");

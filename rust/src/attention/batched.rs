@@ -1,0 +1,510 @@
+//! Batched multi-head conv-attention engine.
+//!
+//! The paper's `O(k·n·d·log n)` bound only pays off in serving when its
+//! fixed costs are amortized: FFT plan tables, recovered conv bases, and
+//! thread startup. The seed code evaluated one head of one sequence at a
+//! time, re-planning and re-recovering per call. This engine evaluates
+//! **all heads of a batch of sequences in one call**:
+//!
+//! * one [`SharedFftPlanner`] plan cache for the whole engine — a plan
+//!   per transform length is built once (off-lock) and shared by every
+//!   worker; each job gets a cheap local view whose repeat lookups are
+//!   lock-free ([`FftPlanner::with_shared`]);
+//! * a per-(model, layer, head, seq_len) recovered-basis cache
+//!   ([`BasisCache`], keyed by [`CacheKey`] with a (Q, K, backend)
+//!   content fingerprint) — *recover once, apply per V*, now shared
+//!   across heads, sequences and callers;
+//! * a fixed [`WorkerPool`] of `std::thread` workers fanning the
+//!   (sequence, head) jobs out with **deterministic result ordering**:
+//!   jobs are pure and results are re-ordered by input index, so thread
+//!   counts 1/2/8 produce bit-identical outputs (pinned by
+//!   `tests/properties.rs`).
+//!
+//! Cache-hit/miss counts surface through [`Metrics`]
+//! (`cache_hits`/`cache_misses`, plus `batched_calls`/`batched_jobs`).
+//! The coordinator's server routes whole batches through one engine
+//! ([`BatchedEngine::with_shared`] over the server's cache and metrics),
+//! and the model layer batches all heads of a forward pass through
+//! `Transformer::forward_batch`.
+
+use super::{
+    apply_cached_basis, conv_attention_masked_with, conv_attention_strided_with, exact_attention,
+    Mask, MaskKind,
+};
+use crate::basis::RecoverConfig;
+use crate::coordinator::{fingerprint, BasisCache, CacheKey, CachedBasis, Metrics};
+use crate::fft::{FftPlanner, SharedFftPlanner};
+use crate::lowrank::{LowRankAttention, LowRankConfig};
+use crate::runtime::pool::WorkerPool;
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// Per-job attention operator (the engine-side mirror of the model
+/// layer's `AttentionBackend`; jobs in one batch may mix operators).
+#[derive(Clone, Debug)]
+pub enum BatchedBackend {
+    /// Exact `O(n²d)` attention.
+    Exact,
+    /// Algorithm 1 with adaptive binary-search recovery; falls back to
+    /// exact on recovery failure.
+    Conv(RecoverConfig),
+    /// Algorithm 1 with strided recovery at k uniform onsets (causal
+    /// mask only; non-causal jobs fall back to exact).
+    Strided(usize),
+    /// Theorem 6.5 masked low-rank attention.
+    LowRank(LowRankConfig),
+}
+
+/// One (sequence, head) unit of attention work.
+#[derive(Clone, Debug)]
+pub struct AttnJob {
+    /// Layer index (cache key component).
+    pub layer: u32,
+    /// Head index within the layer (cache key component).
+    pub head: u32,
+    pub q: Matrix,
+    pub k: Matrix,
+    pub v: Matrix,
+    /// `None` means causal.
+    pub mask: Option<Mask>,
+    pub backend: BatchedBackend,
+}
+
+impl AttnJob {
+    /// A causal-mask job.
+    pub fn causal(
+        layer: u32,
+        head: u32,
+        q: Matrix,
+        k: Matrix,
+        v: Matrix,
+        backend: BatchedBackend,
+    ) -> Self {
+        AttnJob { layer, head, q, k, v, mask: None, backend }
+    }
+}
+
+/// Result of one job, with the provenance the serving layer reports.
+#[derive(Clone, Debug)]
+pub struct JobOutput {
+    /// `Ỹ ≈ D⁻¹AV` for this (sequence, head).
+    pub y: Matrix,
+    /// Basis size used (0 for exact / low-rank).
+    pub basis_k: usize,
+    /// Whether a conv path fell back to exact attention.
+    pub fell_back: bool,
+    /// Whether the basis came from the cache (conv paths only).
+    pub cache_hit: bool,
+    /// Wall time this job spent executing on its worker (per-job, so
+    /// latency percentiles stay meaningful under batching).
+    pub exec: std::time::Duration,
+}
+
+/// Engine sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Worker threads in the pool (clamped to ≥ 1).
+    pub workers: usize,
+    /// Recovered-basis cache capacity (entries).
+    pub cache_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2),
+            cache_capacity: 256,
+        }
+    }
+}
+
+/// The batched multi-head conv-attention engine. Cheap to share
+/// (`Arc`): all methods take `&self` and internal state is synchronized.
+pub struct BatchedEngine {
+    pool: WorkerPool,
+    planner: Arc<SharedFftPlanner>,
+    cache: Arc<BasisCache>,
+    metrics: Arc<Metrics>,
+    model_id: u64,
+}
+
+impl BatchedEngine {
+    /// A self-contained engine with its own cache and metrics.
+    pub fn new(cfg: EngineConfig) -> Self {
+        Self::with_shared(
+            cfg.workers,
+            Arc::new(BasisCache::new(cfg.cache_capacity.max(1))),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    /// An engine over an externally owned cache and metrics sink (the
+    /// coordinator's server plugs its own in, so serving dashboards and
+    /// tests observe engine cache hits directly).
+    pub fn with_shared(workers: usize, cache: Arc<BasisCache>, metrics: Arc<Metrics>) -> Self {
+        BatchedEngine {
+            pool: WorkerPool::new(workers),
+            planner: Arc::new(SharedFftPlanner::new()),
+            cache,
+            metrics,
+            model_id: 0,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn cache(&self) -> &Arc<BasisCache> {
+        &self.cache
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Plans resident in the shared FFT plan cache.
+    pub fn cached_plans(&self) -> usize {
+        self.planner.cached_plans()
+    }
+
+    /// Evaluate every job; results come back in job order. Blocks until
+    /// the whole batch is done. Safe to call concurrently from several
+    /// threads (the server's workers share one engine).
+    pub fn attend_batch(&self, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
+        Metrics::incr(&self.metrics.batched_calls);
+        Metrics::add(&self.metrics.batched_jobs, jobs.len() as u64);
+        let planner = Arc::clone(&self.planner);
+        let cache = Arc::clone(&self.cache);
+        let metrics = Arc::clone(&self.metrics);
+        let model_id = self.model_id;
+        self.pool
+            .map(jobs, move |_, job| execute_job(job, &planner, &cache, &metrics, model_id))
+    }
+}
+
+fn execute_job(
+    job: AttnJob,
+    planner: &Arc<SharedFftPlanner>,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    model_id: u64,
+) -> JobOutput {
+    let t0 = std::time::Instant::now();
+    let mut out = execute_job_inner(job, planner, cache, metrics, model_id);
+    out.exec = t0.elapsed();
+    out
+}
+
+fn execute_job_inner(
+    job: AttnJob,
+    planner: &Arc<SharedFftPlanner>,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    model_id: u64,
+) -> JobOutput {
+    let AttnJob { layer, head, q, k, v, mask, backend } = job;
+    let n = q.rows();
+    let mask = mask.unwrap_or_else(|| Mask::causal(n));
+    // Local planner view over the engine-wide plan cache.
+    let mut local = FftPlanner::with_shared(Arc::clone(planner));
+    match backend {
+        BatchedBackend::Exact => {
+            Metrics::incr(&metrics.exact_requests);
+            JobOutput {
+                y: exact_attention(&q, &k, &v, &mask),
+                basis_k: 0,
+                fell_back: false,
+                cache_hit: false,
+                exec: std::time::Duration::ZERO,
+            }
+        }
+        BatchedBackend::LowRank(cfg) => {
+            Metrics::incr(&metrics.lowrank_requests);
+            let lr = LowRankAttention::new(&q, &k, mask, &cfg);
+            JobOutput {
+                y: lr.forward(&v),
+                basis_k: 0,
+                fell_back: false,
+                cache_hit: false,
+                exec: std::time::Duration::ZERO,
+            }
+        }
+        BatchedBackend::Conv(cfg) => {
+            Metrics::incr(&metrics.conv_requests);
+            let key = CacheKey {
+                model_id,
+                layer,
+                head,
+                seq_len: n,
+                qk_fingerprint: conv_fingerprint(&q, &k, &mask) ^ recover_cfg_tag(&cfg),
+            };
+            if let Some(hit) = cache.get(&key) {
+                Metrics::incr(&metrics.cache_hits);
+                let basis_k = hit.post_basis.k();
+                let y = apply_cached_basis(&mut local, &hit.post_basis, &hit.d_tilde, &v);
+                return JobOutput {
+                    y,
+                    basis_k,
+                    fell_back: false,
+                    cache_hit: true,
+                    exec: std::time::Duration::ZERO,
+                };
+            }
+            Metrics::incr(&metrics.cache_misses);
+            match conv_attention_masked_with(&mut local, &q, &k, &v, &mask, &cfg) {
+                Ok(out) => {
+                    cache.put(
+                        key,
+                        CachedBasis {
+                            post_basis: out.post_basis.clone(),
+                            d_tilde: out.d_tilde.clone(),
+                        },
+                    );
+                    JobOutput {
+                        y: out.y,
+                        basis_k: out.post_basis.k(),
+                        fell_back: false,
+                        cache_hit: false,
+                        exec: std::time::Duration::ZERO,
+                    }
+                }
+                Err(_) => {
+                    Metrics::incr(&metrics.fallbacks);
+                    JobOutput {
+                        y: exact_attention(&q, &k, &v, &mask),
+                        basis_k: 0,
+                        fell_back: true,
+                        cache_hit: false,
+                        exec: std::time::Duration::ZERO,
+                    }
+                }
+            }
+        }
+        BatchedBackend::Strided(k_bases) => {
+            Metrics::incr(&metrics.conv_requests);
+            if !matches!(mask.kind(), MaskKind::Causal) {
+                // Strided recovery assumes the causal mask.
+                Metrics::incr(&metrics.fallbacks);
+                return JobOutput {
+                    y: exact_attention(&q, &k, &v, &mask),
+                    basis_k: 0,
+                    fell_back: true,
+                    cache_hit: false,
+                    exec: std::time::Duration::ZERO,
+                };
+            }
+            let key = CacheKey {
+                model_id,
+                layer,
+                head,
+                seq_len: n,
+                qk_fingerprint: conv_fingerprint(&q, &k, &mask) ^ strided_tag(k_bases),
+            };
+            if let Some(hit) = cache.get(&key) {
+                Metrics::incr(&metrics.cache_hits);
+                let basis_k = hit.post_basis.k();
+                let y = apply_cached_basis(&mut local, &hit.post_basis, &hit.d_tilde, &v);
+                return JobOutput {
+                    y,
+                    basis_k,
+                    fell_back: false,
+                    cache_hit: true,
+                    exec: std::time::Duration::ZERO,
+                };
+            }
+            Metrics::incr(&metrics.cache_misses);
+            match conv_attention_strided_with(&mut local, &q, &k, &v, k_bases) {
+                Ok(out) => {
+                    cache.put(
+                        key,
+                        CachedBasis {
+                            post_basis: out.post_basis.clone(),
+                            d_tilde: out.d_tilde.clone(),
+                        },
+                    );
+                    JobOutput {
+                        y: out.y,
+                        basis_k: out.post_basis.k(),
+                        fell_back: false,
+                        cache_hit: false,
+                        exec: std::time::Duration::ZERO,
+                    }
+                }
+                Err(_) => {
+                    Metrics::incr(&metrics.fallbacks);
+                    JobOutput {
+                        y: exact_attention(&q, &k, &v, &mask),
+                        basis_k: 0,
+                        fell_back: true,
+                        cache_hit: false,
+                        exec: std::time::Duration::ZERO,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// FNV-1a step over one u64.
+fn fnv_u64(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+const FNV_SEED: u64 = 0xcbf29ce484222325;
+
+/// Content fingerprint of a (Q, K, mask) triple. A cached basis is only
+/// valid for identical content *and* an identical recovery schedule, so
+/// callers xor in a backend tag as well.
+fn conv_fingerprint(q: &Matrix, k: &Matrix, mask: &Mask) -> u64 {
+    fingerprint(q.data()) ^ fingerprint(k.data()).rotate_left(1) ^ mask_tag(mask).rotate_left(2)
+}
+
+fn mask_tag(mask: &Mask) -> u64 {
+    match mask.kind() {
+        MaskKind::Causal => 0,
+        MaskKind::SlidingWindow { w, sink } => {
+            fnv_u64(fnv_u64(fnv_u64(FNV_SEED, 1), *w as u64), *sink as u64)
+        }
+        _ => {
+            // Generic masks: hash the support (O(n²), only paid by the
+            // rare non-structured masks).
+            let mut h = fnv_u64(FNV_SEED, 2);
+            for i in 0..mask.n() {
+                for j in mask.row_support(i) {
+                    h = fnv_u64(h, ((i as u64) << 32) | j as u64);
+                }
+            }
+            h
+        }
+    }
+}
+
+fn recover_cfg_tag(cfg: &RecoverConfig) -> u64 {
+    let mut h = fnv_u64(FNV_SEED, 3);
+    h = fnv_u64(h, cfg.k_max as u64);
+    h = fnv_u64(h, cfg.t as u64);
+    h = fnv_u64(h, cfg.delta.to_bits());
+    fnv_u64(h, cfg.eps.to_bits())
+}
+
+fn strided_tag(k_bases: usize) -> u64 {
+    fnv_u64(fnv_u64(FNV_SEED, 4), k_bases as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::rope::rope_structured_qk;
+    use crate::attention::{conv_attention_strided, exact_attention};
+    use crate::tensor::{max_abs_diff, Rng};
+
+    fn engine(workers: usize) -> BatchedEngine {
+        BatchedEngine::new(EngineConfig { workers, cache_capacity: 64 })
+    }
+
+    fn structured_job(layer: u32, head: u32, n: usize, d: usize, seed: u64) -> AttnJob {
+        let mut rng = Rng::seeded(seed);
+        let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        AttnJob::causal(layer, head, q, k, v, BatchedBackend::Strided(4))
+    }
+
+    #[test]
+    fn exact_jobs_match_oracle_in_order() {
+        let e = engine(3);
+        let mut rng = Rng::seeded(601);
+        let (n, d) = (24, 4);
+        let mut jobs = Vec::new();
+        let mut want = Vec::new();
+        for h in 0..6u32 {
+            let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+            let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+            let v = Matrix::randn(n, d, &mut rng);
+            want.push(exact_attention(&q, &k, &v, &Mask::causal(n)));
+            jobs.push(AttnJob::causal(0, h, q, k, v, BatchedBackend::Exact));
+        }
+        let outs = e.attend_batch(jobs);
+        assert_eq!(outs.len(), 6);
+        for (out, w) in outs.iter().zip(&want) {
+            assert_eq!(max_abs_diff(&out.y, w), 0.0);
+            assert_eq!(out.basis_k, 0);
+            assert!(!out.fell_back);
+        }
+    }
+
+    #[test]
+    fn strided_jobs_match_single_path() {
+        let e = engine(2);
+        let jobs: Vec<AttnJob> =
+            (0..4).map(|h| structured_job(1, h, 48, 8, 700 + h as u64)).collect();
+        let singles: Vec<Matrix> = jobs
+            .iter()
+            .map(|j| conv_attention_strided(&j.q, &j.k, &j.v, 4).unwrap().y)
+            .collect();
+        let outs = e.attend_batch(jobs);
+        for (out, w) in outs.iter().zip(&singles) {
+            assert!(!out.fell_back);
+            assert!(out.basis_k >= 1);
+            assert_eq!(max_abs_diff(&out.y, w), 0.0, "batched must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn second_call_hits_basis_cache() {
+        let e = engine(2);
+        let jobs: Vec<AttnJob> =
+            (0..3).map(|h| structured_job(2, h, 32, 4, 800 + h as u64)).collect();
+        let first = e.attend_batch(jobs.clone());
+        let second = e.attend_batch(jobs);
+        let snap = e.metrics().snapshot();
+        assert!(snap.cache_hits >= 3, "hits = {}", snap.cache_hits);
+        for (a, b) in first.iter().zip(&second) {
+            assert!(b.cache_hit, "second call must be served from the cache");
+            assert_eq!(max_abs_diff(&a.y, &b.y), 0.0);
+        }
+    }
+
+    #[test]
+    fn different_backend_tags_do_not_collide_in_cache() {
+        // Same (layer, head, seq_len, Q, K) under different strided k
+        // must not reuse each other's basis.
+        let e = engine(1);
+        let j4 = structured_job(0, 0, 40, 8, 900);
+        let mut j2 = j4.clone();
+        j2.backend = BatchedBackend::Strided(2);
+        let out4 = e.attend_batch(vec![j4]);
+        let out2 = e.attend_batch(vec![j2]);
+        assert!(!out2[0].cache_hit, "k=2 must not hit the k=4 entry");
+        assert!(out4[0].basis_k >= out2[0].basis_k);
+    }
+
+    #[test]
+    fn fallback_on_degenerate_conv_is_finite() {
+        let e = engine(2);
+        let mut rng = Rng::seeded(901);
+        let (n, d) = (12, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(5.0);
+        let k = Matrix::randn(n, d, &mut rng).scale(5.0);
+        let v = Matrix::randn(n, d, &mut rng);
+        let jobs = vec![AttnJob::causal(0, 0, q, k, v, BatchedBackend::Strided(2))];
+        let outs = e.attend_batch(jobs);
+        assert!(outs[0].y.is_finite());
+    }
+
+    #[test]
+    fn shared_plan_cache_fills_once() {
+        let e = engine(4);
+        let jobs: Vec<AttnJob> =
+            (0..8).map(|h| structured_job(0, h, 64, 8, 1000 + h as u64)).collect();
+        let _ = e.attend_batch(jobs);
+        // All jobs have the same n ⇒ a handful of distinct transform
+        // lengths, not 8× duplicates.
+        assert!(e.cached_plans() >= 1);
+        assert!(e.cached_plans() <= 8, "plans = {}", e.cached_plans());
+    }
+}

@@ -3,6 +3,7 @@
 //! variants (Appendix A), and the full (bidirectional) self-attention
 //! split (Appendix A “Extend to full self-attention”).
 
+pub mod batched;
 pub mod decode;
 pub mod mask;
 pub mod rope;
@@ -125,6 +126,20 @@ pub fn conv_attention_masked(
     mask: &Mask,
     cfg: &RecoverConfig,
 ) -> Result<ConvAttentionOutput, AttentionError> {
+    conv_attention_masked_with(&mut FftPlanner::new(), q, k, v, mask, cfg)
+}
+
+/// [`conv_attention_masked`] with a caller-owned planner, so the FFT
+/// plan cache amortizes across calls (the batched engine threads one
+/// shared plan cache through every worker this way).
+pub fn conv_attention_masked_with(
+    planner: &mut FftPlanner,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    mask: &Mask,
+    cfg: &RecoverConfig,
+) -> Result<ConvAttentionOutput, AttentionError> {
     if !mask.is_lower_triangular() {
         return Err(AttentionError::MaskNotLowerTriangular);
     }
@@ -137,14 +152,13 @@ pub fn conv_attention_masked(
         post = merge_bases(&post, &correction);
     }
 
-    let mut planner = FftPlanner::new();
     let d_tilde = post.row_sums();
     for (row, &val) in d_tilde.iter().enumerate() {
         if !(val > 0.0) {
             return Err(AttentionError::DegenerateNormalizer { row, value: val });
         }
     }
-    let y_num = post.apply_matrix(&mut planner, v);
+    let y_num = post.apply_matrix(planner, v);
     let inv: Vec<f64> = d_tilde.iter().map(|&x| 1.0 / x).collect();
     let y = y_num.scale_rows(&inv);
     Ok(ConvAttentionOutput { y, pre_basis, post_basis: post, d_tilde, stats })
@@ -163,19 +177,30 @@ pub fn conv_attention_strided(
     v: &Matrix,
     k_bases: usize,
 ) -> Result<ConvAttentionOutput, AttentionError> {
+    conv_attention_strided_with(&mut FftPlanner::new(), q, k, v, k_bases)
+}
+
+/// [`conv_attention_strided`] with a caller-owned planner (see
+/// [`conv_attention_masked_with`]).
+pub fn conv_attention_strided_with(
+    planner: &mut FftPlanner,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    k_bases: usize,
+) -> Result<ConvAttentionOutput, AttentionError> {
     let n = q.rows();
     let mask = Mask::causal(n);
     let oracle = crate::basis::QkColumnOracle::new(q, k, &mask);
     let (pre_basis, stats) = crate::basis::recover_strided(&oracle, k_bases);
     let post = exp_transform(&pre_basis, true);
-    let mut planner = FftPlanner::new();
     let d_tilde = post.row_sums();
     for (row, &val) in d_tilde.iter().enumerate() {
         if !(val > 0.0) {
             return Err(AttentionError::DegenerateNormalizer { row, value: val });
         }
     }
-    let y_num = post.apply_matrix(&mut planner, v);
+    let y_num = post.apply_matrix(planner, v);
     let inv: Vec<f64> = d_tilde.iter().map(|&x| 1.0 / x).collect();
     let y = y_num.scale_rows(&inv);
     Ok(ConvAttentionOutput { y, pre_basis, post_basis: post, d_tilde, stats })

@@ -10,11 +10,18 @@ use crate::basis::KConvBasis;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-/// Cache key: model/layer plus a content fingerprint of (Q, K).
+/// Cache key: (model, layer, head, seq_len) plus a content fingerprint
+/// of (Q, K) — the batched engine's *recover once per (layer, head,
+/// seq_len)* reuse unit; the fingerprint guards against collisions when
+/// the same slot sees different content.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     pub model_id: u64,
     pub layer: u32,
+    /// Attention head within the layer (0 for single-head callers).
+    pub head: u32,
+    /// Sequence length the basis was recovered at.
+    pub seq_len: usize,
     pub qk_fingerprint: u64,
 }
 
@@ -124,7 +131,7 @@ mod tests {
     }
 
     fn key(i: u64) -> CacheKey {
-        CacheKey { model_id: 1, layer: 0, qk_fingerprint: i }
+        CacheKey { model_id: 1, layer: 0, head: 0, seq_len: 8, qk_fingerprint: i }
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct Metrics {
     pub fallbacks: AtomicU64,
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
+    /// Batched-engine calls (one per `attend_batch`).
+    pub batched_calls: AtomicU64,
+    /// Total (sequence, head) jobs executed by the batched engine.
+    pub batched_jobs: AtomicU64,
     queue_lat: Mutex<Vec<f64>>,
     exec_lat: Mutex<Vec<f64>>,
     e2e_lat: Mutex<Vec<f64>>,
@@ -58,6 +62,11 @@ impl Metrics {
     #[inline]
     pub fn incr(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn record_queue(&self, d: Duration) {
@@ -83,6 +92,8 @@ impl Metrics {
             fallbacks: self.fallbacks.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            batched_calls: self.batched_calls.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
             queue: summarize(&mut self.queue_lat.lock().unwrap()),
             exec: summarize(&mut self.exec_lat.lock().unwrap()),
             e2e: summarize(&mut self.e2e_lat.lock().unwrap()),
@@ -102,6 +113,8 @@ pub struct MetricsSnapshot {
     pub fallbacks: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub batched_calls: u64,
+    pub batched_jobs: u64,
     pub queue: LatencyStats,
     pub exec: LatencyStats,
     pub e2e: LatencyStats,
@@ -113,7 +126,8 @@ impl MetricsSnapshot {
         format!(
             "requests: {} submitted / {} completed | batches: {} | \
              backends: conv={} exact={} lowrank={} fallbacks={} | \
-             cache: {}h/{}m | e2e p50={:.0}µs p95={:.0}µs p99={:.0}µs max={:.0}µs | \
+             cache: {}h/{}m | engine: {} calls/{} jobs | \
+             e2e p50={:.0}µs p95={:.0}µs p99={:.0}µs max={:.0}µs | \
              exec mean={:.0}µs | queue mean={:.0}µs",
             self.requests_submitted,
             self.requests_completed,
@@ -124,6 +138,8 @@ impl MetricsSnapshot {
             self.fallbacks,
             self.cache_hits,
             self.cache_misses,
+            self.batched_calls,
+            self.batched_jobs,
             self.e2e.p50_us,
             self.e2e.p95_us,
             self.e2e.p99_us,

@@ -27,7 +27,7 @@ mod router;
 mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use cache::{BasisCache, CacheKey};
+pub use cache::{fingerprint, BasisCache, CacheKey, CachedBasis};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use router::{Backend, Router, RouterConfig};
 pub use server::{run_trace, AttnRequest, AttnResponse, Payload, Server, ServerConfig};

@@ -1,16 +1,18 @@
-//! The serving loop: dispatcher thread (router + batcher) feeding a
-//! worker pool over mpsc channels. Plain std threads — the workload is
-//! CPU-bound attention math, so an async runtime would only add
-//! scheduling noise (and this image vendors none).
+//! The serving loop: dispatcher thread (router + batcher) feeding
+//! worker threads over mpsc channels; workers execute **whole batches**
+//! through the shared [`BatchedEngine`] (one `attend_batch` call per
+//! batch — the dynamic batcher's groups finally reach the attention
+//! layer as batches, not loops of singles). Plain std threads — the
+//! workload is CPU-bound attention math, so an async runtime would only
+//! add scheduling noise (and this image vendors none).
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
-use super::cache::{fingerprint, BasisCache, CacheKey, CachedBasis};
+use super::cache::BasisCache;
 use super::metrics::Metrics;
 use super::router::{Backend, Router, RouterConfig};
+use crate::attention::batched::{AttnJob, BatchedBackend, BatchedEngine};
 use crate::attention::rope::rope_structured_qk;
-use crate::attention::{apply_cached_basis, conv_attention_strided, exact_attention, Mask};
-use crate::fft::FftPlanner;
-use crate::lowrank::{LowRankAttention, LowRankConfig};
+use crate::lowrank::LowRankConfig;
 use crate::tensor::{Matrix, Rng};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -80,6 +82,8 @@ pub struct Server {
     resp_rx: mpsc::Receiver<AttnResponse>,
     pub metrics: Arc<Metrics>,
     pub cache: Arc<BasisCache>,
+    /// The shared batched attention engine all workers execute through.
+    pub engine: Arc<BatchedEngine>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     running: Arc<AtomicBool>,
@@ -136,51 +140,80 @@ impl Server {
             }
         });
 
-        // Workers: execute batches.
+        // The shared batched engine: one FFT plan cache and one basis
+        // cache for the whole server, a fixed pool of compute threads.
+        let engine = Arc::new(BatchedEngine::with_shared(
+            cfg.workers.max(1),
+            cache.clone(),
+            metrics.clone(),
+        ));
+
+        // Workers: drain the batch queue and execute each batch as ONE
+        // engine call (all requests of the batch fan out across the
+        // engine pool together).
         let mut workers = Vec::new();
         for _ in 0..cfg.workers.max(1) {
             let rx = batch_rx.clone();
             let tx = resp_tx.clone();
             let metrics_w = metrics.clone();
-            let cache_w = cache.clone();
             let router_w = Router::new(cfg.router);
+            let engine_w = engine.clone();
             let lowrank_degree = cfg.lowrank_degree;
-            workers.push(std::thread::spawn(move || {
-                // Per-worker FFT planner: plans are reused across the
-                // worker's lifetime (§Perf: plan reuse).
-                let mut planner = FftPlanner::new();
-                loop {
-                    let batch = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { break };
-                    let t0 = Instant::now();
-                    for req in batch.requests {
-                        let queue_d = t0.duration_since(req.submitted_at);
-                        metrics_w.record_queue(queue_d);
-                        let e0 = Instant::now();
-                        let resp = execute_one(
-                            &req,
-                            batch.backend,
-                            &router_w,
-                            &cache_w,
-                            &metrics_w,
-                            &mut planner,
-                            lowrank_degree,
-                        );
-                        metrics_w.record_exec(e0.elapsed());
-                        metrics_w.record_e2e(req.submitted_at.elapsed());
-                        Metrics::incr(&metrics_w.requests_completed);
-                        let _ = tx.send(resp);
-                    }
-                    Metrics::incr(&metrics_w.batches_executed);
+            workers.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(batch) = batch else { break };
+                let t0 = Instant::now();
+                let n_reqs = batch.requests.len();
+                if n_reqs == 0 {
+                    continue;
                 }
+                let mut jobs = Vec::with_capacity(n_reqs);
+                let mut meta = Vec::with_capacity(n_reqs);
+                for req in batch.requests {
+                    metrics_w.record_queue(t0.duration_since(req.submitted_at));
+                    let (q, k, v) = match req.payload {
+                        Payload::Explicit { q, k, v } => (q, k, v),
+                        Payload::Synthetic { seed } => synthesize(req.seq_len, req.d_model, seed),
+                    };
+                    let spec = match batch.backend {
+                        Backend::Exact => BatchedBackend::Exact,
+                        Backend::ConvBasis => BatchedBackend::Strided(router_w.k_budget(q.rows())),
+                        Backend::LowRank => BatchedBackend::LowRank(LowRankConfig::new(
+                            lowrank_degree,
+                            q.cols() as f64,
+                        )),
+                    };
+                    jobs.push(AttnJob::causal(0, 0, q, k, v, spec));
+                    meta.push((req.id, req.submitted_at));
+                }
+                let outs = engine_w.attend_batch(jobs);
+                for ((id, submitted_at), out) in meta.into_iter().zip(outs) {
+                    // Per-job wall time from the engine: exec latency
+                    // percentiles stay per-request under batching.
+                    metrics_w.record_exec(out.exec);
+                    metrics_w.record_e2e(submitted_at.elapsed());
+                    Metrics::incr(&metrics_w.requests_completed);
+                    let backend = if out.fell_back { Backend::Exact } else { batch.backend };
+                    let _ = tx.send(AttnResponse { id, y: out.y, backend, basis_k: out.basis_k });
+                }
+                Metrics::incr(&metrics_w.batches_executed);
             }));
         }
         drop(resp_tx);
 
-        Server { dispatch_tx, resp_rx, metrics, cache, dispatcher: Some(dispatcher), workers, running }
+        Server {
+            dispatch_tx,
+            resp_rx,
+            metrics,
+            cache,
+            engine,
+            dispatcher: Some(dispatcher),
+            workers,
+            running,
+        }
     }
 
     /// Submit a request (non-blocking).
@@ -214,68 +247,6 @@ fn synthesize(seq_len: usize, d_model: usize, seed: u64) -> (Matrix, Matrix, Mat
     let (q, k) = rope_structured_qk(seq_len, d_model, freqs, &mut rng);
     let v = Matrix::randn(seq_len, d_model, &mut rng);
     (q, k, v)
-}
-
-fn execute_one(
-    req: &AttnRequest,
-    backend: Backend,
-    router: &Router,
-    cache: &BasisCache,
-    metrics: &Metrics,
-    planner: &mut FftPlanner,
-    lowrank_degree: usize,
-) -> AttnResponse {
-    let (q, k, v) = match &req.payload {
-        Payload::Explicit { q, k, v } => (q.clone(), k.clone(), v.clone()),
-        Payload::Synthetic { seed } => synthesize(req.seq_len, req.d_model, *seed),
-    };
-    let n = q.rows();
-    match backend {
-        Backend::Exact => {
-            Metrics::incr(&metrics.exact_requests);
-            let y = exact_attention(&q, &k, &v, &Mask::causal(n));
-            AttnResponse { id: req.id, y, backend, basis_k: 0 }
-        }
-        Backend::LowRank => {
-            Metrics::incr(&metrics.lowrank_requests);
-            let lr = LowRankAttention::new(
-                &q,
-                &k,
-                Mask::causal(n),
-                &LowRankConfig::new(lowrank_degree, q.cols() as f64),
-            );
-            AttnResponse { id: req.id, y: lr.forward(&v), backend, basis_k: 0 }
-        }
-        Backend::ConvBasis => {
-            Metrics::incr(&metrics.conv_requests);
-            // Cache lookup: recover once per (Q,K) fingerprint.
-            let key = CacheKey {
-                model_id: 0,
-                layer: 0,
-                qk_fingerprint: fingerprint(q.data()) ^ fingerprint(k.data()).rotate_left(1),
-            };
-            if let Some(hit) = cache.get(&key) {
-                Metrics::incr(&metrics.cache_hits);
-                let y = apply_cached_basis(planner, &hit.post_basis, &hit.d_tilde, &v);
-                return AttnResponse { id: req.id, y, backend, basis_k: hit.post_basis.k() };
-            }
-            Metrics::incr(&metrics.cache_misses);
-            match conv_attention_strided(&q, &k, &v, router.k_budget(n)) {
-                Ok(out) => {
-                    cache.put(
-                        key,
-                        CachedBasis { post_basis: out.post_basis.clone(), d_tilde: out.d_tilde.clone() },
-                    );
-                    AttnResponse { id: req.id, y: out.y, backend, basis_k: out.post_basis.k() }
-                }
-                Err(_) => {
-                    Metrics::incr(&metrics.fallbacks);
-                    let y = exact_attention(&q, &k, &v, &Mask::causal(n));
-                    AttnResponse { id: req.id, y, backend: Backend::Exact, basis_k: 0 }
-                }
-            }
-        }
-    }
 }
 
 /// Drive a whole workload trace through a server, honouring arrival
@@ -312,6 +283,7 @@ pub fn run_trace(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::{exact_attention, Mask};
     use crate::data::{WorkloadConfig, WorkloadTrace};
 
     fn small_server() -> Server {

@@ -19,7 +19,7 @@ mod planner;
 mod radix2;
 mod spectrum;
 
-pub use planner::{Fft, FftPlanner};
+pub use planner::{Fft, FftPlanner, SharedFftPlanner};
 pub use spectrum::KernelSpectrum;
 
 /// Minimal complex number (we avoid a `num-complex` dependency).

@@ -6,7 +6,7 @@ use super::bluestein::BluesteinPlan;
 use super::radix2::Radix2Plan;
 use super::Complex;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// A length-specific FFT (radix-2 when possible, Bluestein otherwise).
 #[derive(Debug, Clone)]
@@ -42,29 +42,79 @@ impl Fft {
     }
 }
 
-/// Caches one plan per requested length.
+fn build_plan(n: usize) -> Fft {
+    if n.is_power_of_two() {
+        Fft::Radix2(Arc::new(Radix2Plan::new(n)))
+    } else {
+        Fft::Bluestein(Arc::new(BluesteinPlan::new(n)))
+    }
+}
+
+/// Thread-safe plan cache shared across the batched engine's workers:
+/// one twiddle/bit-reversal table set per length for the whole engine,
+/// built once under a short lock and handed out as cheap `Arc`-backed
+/// [`Fft`] clones (plans are immutable after construction).
+#[derive(Debug, Default)]
+pub struct SharedFftPlanner {
+    plans: Mutex<HashMap<usize, Fft>>,
+}
+
+impl SharedFftPlanner {
+    pub fn new() -> Self {
+        SharedFftPlanner::default()
+    }
+
+    /// Get (or build) a plan for length `n`. Plans are built *outside*
+    /// the lock so a slow table build (Bluestein is `O(n log n)`) never
+    /// blocks workers that only need an already-cached plan; a rare
+    /// racing duplicate build is discarded (plans are pure functions of
+    /// `n`, so whichever insert wins is numerically identical).
+    pub fn plan(&self, n: usize) -> Fft {
+        if let Some(f) = self.plans.lock().unwrap().get(&n) {
+            return f.clone();
+        }
+        let built = build_plan(n);
+        let mut g = self.plans.lock().unwrap();
+        g.entry(n).or_insert(built).clone()
+    }
+
+    /// Number of cached plans (observability for the engine metrics).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+}
+
+/// Caches one plan per requested length. Optionally backed by a
+/// [`SharedFftPlanner`]: misses then go through the shared cache (plans
+/// built once per engine, reused by every worker) while the local map
+/// keeps repeat lookups lock-free.
 #[derive(Debug, Default)]
 pub struct FftPlanner {
     plans: HashMap<usize, Fft>,
+    shared: Option<Arc<SharedFftPlanner>>,
 }
 
 impl FftPlanner {
     pub fn new() -> Self {
-        FftPlanner { plans: HashMap::new() }
+        FftPlanner { plans: HashMap::new(), shared: None }
+    }
+
+    /// A planner whose cache misses are served by `shared`.
+    pub fn with_shared(shared: Arc<SharedFftPlanner>) -> Self {
+        FftPlanner { plans: HashMap::new(), shared: Some(shared) }
     }
 
     /// Get (or build) a plan for length `n`.
     pub fn plan(&mut self, n: usize) -> Fft {
-        self.plans
-            .entry(n)
-            .or_insert_with(|| {
-                if n.is_power_of_two() {
-                    Fft::Radix2(Arc::new(Radix2Plan::new(n)))
-                } else {
-                    Fft::Bluestein(Arc::new(BluesteinPlan::new(n)))
-                }
-            })
-            .clone()
+        if let Some(f) = self.plans.get(&n) {
+            return f.clone();
+        }
+        let fft = match &self.shared {
+            Some(s) => s.plan(n),
+            None => build_plan(n),
+        };
+        self.plans.insert(n, fft.clone());
+        fft
     }
 
     /// Number of cached plans (observability for the coordinator metrics).
@@ -91,5 +141,24 @@ mod tests {
         let mut p = FftPlanner::new();
         assert!(matches!(p.plan(64), Fft::Radix2(_)));
         assert!(matches!(p.plan(63), Fft::Bluestein(_)));
+    }
+
+    #[test]
+    fn shared_planner_backs_local_planners() {
+        let shared = Arc::new(SharedFftPlanner::new());
+        let mut a = FftPlanner::with_shared(shared.clone());
+        let mut b = FftPlanner::with_shared(shared.clone());
+        let fa = a.plan(32);
+        let fb = b.plan(32);
+        // Both locals hold the same shared plan instance.
+        match (&fa, &fb) {
+            (Fft::Radix2(x), Fft::Radix2(y)) => assert!(Arc::ptr_eq(x, y)),
+            _ => panic!("expected radix-2 plans"),
+        }
+        assert_eq!(shared.cached_plans(), 1);
+        let _ = a.plan(24);
+        assert_eq!(shared.cached_plans(), 2);
+        assert_eq!(a.cached_plans(), 2);
+        assert_eq!(b.cached_plans(), 1);
     }
 }

@@ -28,8 +28,10 @@
 //!   search (Algorithm 3), and the exp-transform (Lemma B.16).
 //! * [`attention`] — exact attention oracle, conv-basis attention
 //!   (Algorithm 1), masks (causal / LongLora / continuous-row /
-//!   distinct-r / row-change), RoPE, and the full (non-causal)
-//!   self-attention split of Appendix A.
+//!   distinct-r / row-change), RoPE, the full (non-causal)
+//!   self-attention split of Appendix A, and the **batched multi-head
+//!   engine** ([`attention::batched`]) that evaluates all heads of a
+//!   batch of sequences in one call.
 //! * [`lowrank`] — the [AS23] `(ε,k)`-approximation via polynomial
 //!   features and the mask-aware multiplies of Appendix D
 //!   (prefix-sum, support-delta, segment-tree, distinct-r).
@@ -43,8 +45,46 @@
 //!   sentiment task standing in for IMDB, and serving workload traces.
 //! * [`coordinator`] — the L3 serving layer: request router, dynamic
 //!   batcher, per-model conv-basis cache, scheduler and metrics.
-//! * [`runtime`] — PJRT CPU client wrapper loading the AOT artifacts
-//!   produced by `python/compile/aot.py` (HLO text).
+//! * [`runtime`] — the worker [`runtime::pool`] behind the batched
+//!   engine, plus the (feature-gated) PJRT CPU client loading the AOT
+//!   artifacts produced by `python/compile/aot.py` (HLO text).
+//!
+//! ## Batched engine architecture
+//!
+//! The serving hot path routes through
+//! [`attention::batched::BatchedEngine`]:
+//!
+//! ```text
+//!   requests ─▶ Router ─▶ DynamicBatcher ─▶ server workers
+//!                                              │ one attend_batch per batch
+//!                                              ▼
+//!                                        BatchedEngine
+//!                       ┌───────────────────┼────────────────────┐
+//!                       ▼                   ▼                    ▼
+//!                 WorkerPool         SharedFftPlanner        BasisCache
+//!            (std::thread fan-out,  (one plan per length   ((layer, head,
+//!             deterministic result    for the whole          seq_len, QK-fp)
+//!             ordering by index)      engine)                → post-exp basis)
+//! ```
+//!
+//! Every (sequence, head) pair is one [`attention::batched::AttnJob`];
+//! jobs are pure, so results are bit-identical for any worker count.
+//! `Transformer::forward_batch` batches all heads of all sequences of a
+//! layer into one engine call; the coordinator's server does the same
+//! per request batch. *Recover once, apply per V* happens engine-wide
+//! through the shared basis cache.
+//!
+//! ## Verifying
+//!
+//! Tier-1 verification is a single line from `rust/`:
+//!
+//! ```bash
+//! cargo build --release && cargo test -q
+//! ```
+//!
+//! Benches (plain `main()` harnesses) run with
+//! `cargo bench --bench batched_engine` etc.; the PJRT integration
+//! tests self-skip unless artifacts exist and the `pjrt` feature is on.
 
 pub mod attention;
 pub mod basis;
@@ -61,6 +101,9 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::attention::batched::{
+        AttnJob, BatchedBackend, BatchedEngine, EngineConfig, JobOutput,
+    };
     pub use crate::attention::rope::{rope_structured_qk, Rope};
     pub use crate::attention::{
         conv_attention, exact_attention, exact_attention_unmasked, ConvAttentionOutput, Mask,

@@ -4,6 +4,7 @@
 //! they replace the attention operator of an already-trained model with
 //! no parameter updates, exactly the paper's protocol.
 
+use crate::attention::batched::BatchedBackend;
 use crate::attention::{conv_attention, exact_attention, Mask};
 use crate::basis::RecoverConfig;
 use crate::lowrank::{LowRankAttention, LowRankConfig};
@@ -33,6 +34,22 @@ impl AttentionBackend {
     pub fn conv_with_k(k: usize, n: usize) -> Self {
         let _ = n;
         AttentionBackend::ConvStrided(k.max(1))
+    }
+
+    /// The engine-side job spec with semantics identical to
+    /// [`Self::attend`]: per-head `Q` arrives pre-scaled by `1/√d_h`, so
+    /// the low-rank path pins `scale = 1` exactly as `attend` does.
+    /// Used by `Transformer::forward_batch` to route all heads of a
+    /// forward pass through one `BatchedEngine` call per layer.
+    pub fn to_batched(&self) -> BatchedBackend {
+        match self {
+            AttentionBackend::Exact => BatchedBackend::Exact,
+            AttentionBackend::ConvBasis(cfg) => BatchedBackend::Conv(*cfg),
+            AttentionBackend::ConvStrided(k) => BatchedBackend::Strided(*k),
+            AttentionBackend::LowRank(cfg) => {
+                BatchedBackend::LowRank(LowRankConfig::new(cfg.degree, 1.0))
+            }
+        }
     }
 
     /// Compute one head: inputs are pre-scaled `Q` (×1/√d_h), `K`, `V`.

@@ -6,6 +6,7 @@
 //! for the sentiment task).
 
 use super::backend::AttentionBackend;
+use crate::attention::batched::{AttnJob, BatchedEngine};
 use crate::attention::rope::Rope;
 use crate::tensor::{Matrix, Rng};
 
@@ -346,6 +347,109 @@ impl Transformer {
             lnf_in,
             tokens: tokens.to_vec(),
         }
+    }
+
+    /// Batched inference forward: run a batch of sequences through the
+    /// model with all (sequence, head) attention jobs of each layer
+    /// fanned out as **one** [`BatchedEngine`] call per layer — the
+    /// engine shares FFT plans and recovered bases across the whole
+    /// batch and runs jobs on its worker pool with deterministic
+    /// ordering. No activation caches are kept (inference only;
+    /// training stays on [`Self::forward`] with the exact backend).
+    ///
+    /// Output is identical to calling [`Self::forward`] per sequence:
+    /// the engine applies the same per-head operator (see
+    /// `AttentionBackend::to_batched`), only batched and in parallel.
+    pub fn forward_batch(
+        &self,
+        seqs: &[Vec<usize>],
+        backend: &AttentionBackend,
+        engine: &BatchedEngine,
+    ) -> Vec<ForwardRecord> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+        let spec = backend.to_batched();
+
+        let mut xs: Vec<Matrix> = seqs
+            .iter()
+            .map(|tokens| {
+                let n = tokens.len();
+                assert!(n <= self.cfg.max_seq, "sequence too long");
+                let mut x = Matrix::zeros(n, d);
+                for (i, &t) in tokens.iter().enumerate() {
+                    x.row_mut(i).copy_from_slice(self.embed.row(t));
+                }
+                x
+            })
+            .collect();
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // Gather: every (sequence, head) attention job of this layer.
+            let mut jobs = Vec::with_capacity(seqs.len() * nh);
+            for x in &xs {
+                let n = x.rows();
+                let (ln1_out, _) = rmsnorm_fwd(x, &layer.ln1_g);
+                let q = ln1_out.matmul(&layer.wq);
+                let k = ln1_out.matmul(&layer.wk);
+                let v = ln1_out.matmul(&layer.wv);
+                let mut q_rot = q;
+                let mut k_rot = k;
+                for h in 0..nh {
+                    for i in 0..n {
+                        let qs = &mut q_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                        self.rope.rotate_row(qs, i);
+                    }
+                    for i in 0..n {
+                        let ks = &mut k_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                        self.rope.rotate_row(ks, i);
+                    }
+                }
+                for h in 0..nh {
+                    let qh = Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale);
+                    let kh = Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]);
+                    let vh = Matrix::from_fn(n, dh, |i, j| v[(i, h * dh + j)]);
+                    jobs.push(AttnJob::causal(li as u32, h as u32, qh, kh, vh, spec.clone()));
+                }
+            }
+            let outs = engine.attend_batch(jobs);
+            // Scatter: finish the layer per sequence.
+            for (s, x) in xs.iter_mut().enumerate() {
+                let n = x.rows();
+                let mut attn_concat = Matrix::zeros(n, d);
+                for h in 0..nh {
+                    let out_h = &outs[s * nh + h].y;
+                    for i in 0..n {
+                        for j in 0..dh {
+                            attn_concat[(i, h * dh + j)] = out_h[(i, j)];
+                        }
+                    }
+                }
+                let attn_out = attn_concat.matmul(&layer.wo);
+                let x_mid = x.add(&attn_out);
+                let (ln2_out, _) = rmsnorm_fwd(&x_mid, &layer.ln2_g);
+                let ff_out = ln2_out.matmul(&layer.w1).map(gelu).matmul(&layer.w2);
+                *x = x_mid.add(&ff_out);
+            }
+        }
+
+        xs.into_iter()
+            .zip(seqs)
+            .map(|(x, tokens)| {
+                let lnf_in = x.clone();
+                let (final_hidden, lnf_rms) = rmsnorm_fwd(&x, &self.lnf_g);
+                let logits = final_hidden.matmul(&self.head);
+                ForwardRecord {
+                    final_hidden,
+                    logits,
+                    caches: None,
+                    lnf_rms,
+                    lnf_in,
+                    tokens: tokens.clone(),
+                }
+            })
+            .collect()
     }
 
     /// Classification logits from the last position's hidden state.
@@ -720,5 +824,27 @@ mod tests {
         let a = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
         let b = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
         assert!(max_abs_diff(&a.logits, &b.logits) == 0.0);
+    }
+
+    #[test]
+    fn forward_batch_matches_per_sequence_forward() {
+        use crate::attention::batched::{BatchedEngine, EngineConfig};
+        let m = tiny_model(207);
+        let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
+        let seqs: Vec<Vec<usize>> =
+            vec![vec![1, 2, 3, 4, 5, 6], vec![7, 8, 9], vec![2, 4, 6, 8, 10, 12, 14, 1]];
+        for backend in [AttentionBackend::Exact, AttentionBackend::ConvStrided(4)] {
+            let singles: Vec<_> =
+                seqs.iter().map(|s| m.forward(s, &backend, false)).collect();
+            let batched = m.forward_batch(&seqs, &backend, &engine);
+            assert_eq!(batched.len(), seqs.len());
+            for (b, s) in batched.iter().zip(&singles) {
+                assert_eq!(
+                    max_abs_diff(&b.logits, &s.logits),
+                    0.0,
+                    "batched forward must be bit-identical to the per-sequence path"
+                );
+            }
+        }
     }
 }

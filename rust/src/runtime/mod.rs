@@ -1,27 +1,32 @@
-//! PJRT runtime: load the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO **text** — see /opt/xla-example/README:
-//! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1)
-//! and execute them on the CPU PJRT client from the Rust hot path.
+//! Execution runtime: the batched engine's [`pool`] of worker threads,
+//! plus the (feature-gated) PJRT client that loads the AOT artifacts
+//! produced by `python/compile/aot.py` (HLO **text** — see
+//! /opt/xla-example/README: serialized protos from jax ≥ 0.5 are
+//! rejected by xla_extension 0.5.1) and executes them on the CPU PJRT
+//! client from the Rust hot path.
+//!
+//! The PJRT path needs the external `xla` crate, which the offline build
+//! image cannot vendor through the registry; it is therefore behind the
+//! `pjrt` cargo feature (supply the crate via a `[patch]`/path
+//! dependency when enabling it). The default build ships a stub with the
+//! identical API whose constructors return
+//! [`RuntimeError::Unavailable`], so every caller — the CLI `verify`
+//! subcommand, `examples/serve_requests.rs`, the integration tests —
+//! compiles unchanged and degrades gracefully.
 //!
 //! Python never runs at request time: `make artifacts` is the only
 //! python invocation, and it is a no-op when artifacts are fresh.
 
-use crate::tensor::Matrix;
-use std::path::Path;
+pub mod pool;
 
-/// A compiled artifact ready to execute.
-pub struct CompiledModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Human-readable identity (artifact path).
-    pub name: String,
-}
-
-/// Runtime errors (wraps the xla crate's error type).
+/// Runtime errors (wraps the xla crate's error type when `pjrt` is on).
 #[derive(Debug)]
 pub enum RuntimeError {
     Xla(String),
     Io(String),
     Shape(String),
+    /// The crate was built without the `pjrt` feature.
+    Unavailable(String),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -30,107 +35,16 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
             RuntimeError::Io(e) => write!(f, "io error: {e}"),
             RuntimeError::Shape(e) => write!(f, "shape error: {e}"),
+            RuntimeError::Unavailable(e) => write!(f, "pjrt unavailable: {e}"),
         }
     }
 }
 
 impl std::error::Error for RuntimeError {}
 
-impl From<xla::Error> for RuntimeError {
-    fn from(e: xla::Error) -> Self {
-        RuntimeError::Xla(e.to_string())
-    }
-}
-
-/// PJRT CPU client wrapper. One per process; compiled executables are
-/// cached by artifact path.
-///
-/// `Rc`, not `Arc`: the xla crate's executables are neither `Send` nor
-/// `Sync`, so a runtime is owned by one thread (the coordinator gives
-/// each worker that needs PJRT its own runtime).
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    compiled: std::collections::HashMap<String, std::rc::Rc<CompiledModel>>,
-}
-
-impl PjrtRuntime {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<Self, RuntimeError> {
-        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()?, compiled: Default::default() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact (cached).
-    pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<CompiledModel>, RuntimeError> {
-        let key = path.display().to_string();
-        if let Some(m) = self.compiled.get(&key) {
-            return Ok(m.clone());
-        }
-        if !path.exists() {
-            return Err(RuntimeError::Io(format!(
-                "artifact {key} not found — run `make artifacts` first"
-            )));
-        }
-        let proto = xla::HloModuleProto::from_text_file(&key)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let model = std::rc::Rc::new(CompiledModel { exe, name: key.clone() });
-        self.compiled.insert(key, model.clone());
-        Ok(model)
-    }
-}
-
-impl CompiledModel {
-    /// Execute with f32 matrix inputs; returns the tuple of f32 matrix
-    /// outputs (shapes supplied by the caller — HLO text carries them,
-    /// but the xla crate's literal API is easiest with explicit dims).
-    pub fn run(
-        &self,
-        inputs: &[(&Matrix, (usize, usize))],
-        out_shapes: &[(usize, usize)],
-    ) -> Result<Vec<Matrix>, RuntimeError> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (m, (r, c)) in inputs {
-            if m.shape() != (*r, *c) {
-                return Err(RuntimeError::Shape(format!(
-                    "input shape {:?} != declared {:?}",
-                    m.shape(),
-                    (r, c)
-                )));
-            }
-            let lit = xla::Literal::vec1(&m.to_f32())
-                .reshape(&[*r as i64, *c as i64])?;
-            literals.push(lit);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let mut result = result;
-        let tuple = result.decompose_tuple()?;
-        if tuple.len() != out_shapes.len() {
-            return Err(RuntimeError::Shape(format!(
-                "artifact returned {} outputs, caller expected {}",
-                tuple.len(),
-                out_shapes.len()
-            )));
-        }
-        let mut out = Vec::with_capacity(tuple.len());
-        for (lit, (r, c)) in tuple.into_iter().zip(out_shapes) {
-            let v = lit.to_vec::<f32>()?;
-            if v.len() != r * c {
-                return Err(RuntimeError::Shape(format!(
-                    "output has {} elements, expected {}×{}",
-                    v.len(),
-                    r,
-                    c
-                )));
-            }
-            out.push(Matrix::from_f32(*r, *c, &v));
-        }
-        Ok(out)
-    }
+/// Whether this build carries a real PJRT client (the `pjrt` feature).
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 /// Default artifact directory (repo-root relative).
@@ -140,20 +54,194 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::RuntimeError;
+    use crate::tensor::Matrix;
+    use std::path::Path;
 
-    #[test]
-    fn cpu_client_starts() {
-        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
-        assert!(!rt.platform().is_empty());
+    /// A compiled artifact ready to execute.
+    pub struct CompiledModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Human-readable identity (artifact path).
+        pub name: String,
     }
 
-    #[test]
-    fn missing_artifact_is_io_error() {
-        let mut rt = PjrtRuntime::cpu().unwrap();
-        let err = rt.load(Path::new("/nonexistent/foo.hlo.txt")).err().unwrap();
-        assert!(matches!(err, RuntimeError::Io(_)));
+    impl From<xla::Error> for RuntimeError {
+        fn from(e: xla::Error) -> Self {
+            RuntimeError::Xla(e.to_string())
+        }
+    }
+
+    /// PJRT CPU client wrapper. One per process; compiled executables are
+    /// cached by artifact path.
+    ///
+    /// `Rc`, not `Arc`: the xla crate's executables are neither `Send` nor
+    /// `Sync`, so a runtime is owned by one thread (the coordinator gives
+    /// each worker that needs PJRT its own runtime).
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        compiled: std::collections::HashMap<String, std::rc::Rc<CompiledModel>>,
+    }
+
+    impl PjrtRuntime {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<Self, RuntimeError> {
+            Ok(PjrtRuntime { client: xla::PjRtClient::cpu()?, compiled: Default::default() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact (cached).
+        pub fn load(&mut self, path: &Path) -> Result<std::rc::Rc<CompiledModel>, RuntimeError> {
+            let key = path.display().to_string();
+            if let Some(m) = self.compiled.get(&key) {
+                return Ok(m.clone());
+            }
+            if !path.exists() {
+                return Err(RuntimeError::Io(format!(
+                    "artifact {key} not found — run `make artifacts` first"
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&key)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let model = std::rc::Rc::new(CompiledModel { exe, name: key.clone() });
+            self.compiled.insert(key, model.clone());
+            Ok(model)
+        }
+    }
+
+    impl CompiledModel {
+        /// Execute with f32 matrix inputs; returns the tuple of f32 matrix
+        /// outputs (shapes supplied by the caller — HLO text carries them,
+        /// but the xla crate's literal API is easiest with explicit dims).
+        pub fn run(
+            &self,
+            inputs: &[(&Matrix, (usize, usize))],
+            out_shapes: &[(usize, usize)],
+        ) -> Result<Vec<Matrix>, RuntimeError> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (m, (r, c)) in inputs {
+                if m.shape() != (*r, *c) {
+                    return Err(RuntimeError::Shape(format!(
+                        "input shape {:?} != declared {:?}",
+                        m.shape(),
+                        (r, c)
+                    )));
+                }
+                let lit = xla::Literal::vec1(&m.to_f32())
+                    .reshape(&[*r as i64, *c as i64])?;
+                literals.push(lit);
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True.
+            let mut result = result;
+            let tuple = result.decompose_tuple()?;
+            if tuple.len() != out_shapes.len() {
+                return Err(RuntimeError::Shape(format!(
+                    "artifact returned {} outputs, caller expected {}",
+                    tuple.len(),
+                    out_shapes.len()
+                )));
+            }
+            let mut out = Vec::with_capacity(tuple.len());
+            for (lit, (r, c)) in tuple.into_iter().zip(out_shapes) {
+                let v = lit.to_vec::<f32>()?;
+                if v.len() != r * c {
+                    return Err(RuntimeError::Shape(format!(
+                        "output has {} elements, expected {}×{}",
+                        v.len(),
+                        r,
+                        c
+                    )));
+                }
+                out.push(Matrix::from_f32(*r, *c, &v));
+            }
+            Ok(out)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn cpu_client_starts() {
+            let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+            assert!(!rt.platform().is_empty());
+        }
+
+        #[test]
+        fn missing_artifact_is_io_error() {
+            let mut rt = PjrtRuntime::cpu().unwrap();
+            let err = rt.load(Path::new("/nonexistent/foo.hlo.txt")).err().unwrap();
+            assert!(matches!(err, RuntimeError::Io(_)));
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{CompiledModel, PjrtRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use super::RuntimeError;
+    use crate::tensor::Matrix;
+    use std::path::Path;
+
+    const MSG: &str =
+        "built without the `pjrt` feature — rebuild with `--features pjrt` and a vendored `xla` crate";
+
+    /// Stub compiled artifact (API-compatible with the `pjrt` build).
+    pub struct CompiledModel {
+        /// Human-readable identity (artifact path).
+        pub name: String,
+    }
+
+    /// Stub PJRT client: construction reports [`RuntimeError::Unavailable`].
+    pub struct PjrtRuntime {
+        _private: (),
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self, RuntimeError> {
+            Err(RuntimeError::Unavailable(MSG.into()))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn load(&mut self, _path: &Path) -> Result<std::rc::Rc<CompiledModel>, RuntimeError> {
+            Err(RuntimeError::Unavailable(MSG.into()))
+        }
+    }
+
+    impl CompiledModel {
+        pub fn run(
+            &self,
+            _inputs: &[(&Matrix, (usize, usize))],
+            _out_shapes: &[(usize, usize)],
+        ) -> Result<Vec<Matrix>, RuntimeError> {
+            Err(RuntimeError::Unavailable(MSG.into()))
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_reports_unavailable() {
+            assert!(!super::super::pjrt_available());
+            let err = PjrtRuntime::cpu().err().unwrap();
+            assert!(matches!(err, RuntimeError::Unavailable(_)));
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::{CompiledModel, PjrtRuntime};

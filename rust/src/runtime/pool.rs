@@ -1,0 +1,195 @@
+//! Fixed worker pool for the batched attention engine.
+//!
+//! Dispatcher-style (cf. the rplay dispatcher pattern): a bounded set of
+//! `std::thread` workers drain one shared job queue; callers fan work
+//! out with [`WorkerPool::map`] and get results back in **input order**
+//! regardless of which worker finished first — the determinism contract
+//! the batched engine's tests pin down (thread counts 1/2/8 must give
+//! bit-identical outputs, which holds because jobs are pure and ordering
+//! is restored by index).
+//!
+//! Plain std threads + mpsc: the workload is CPU-bound attention math
+//! and this image vendors no async runtime or rayon.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing boxed jobs.
+pub struct WorkerPool {
+    /// Mutex-wrapped so the pool is `Sync` (shared via `Arc` by the
+    /// coordinator's server workers) on every toolchain vintage.
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // Hold the receiver lock only for the dequeue, not
+                    // while running the job.
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        // Contain panicking jobs: the worker must
+                        // survive (a shared engine would otherwise lose
+                        // a thread forever per bad job). The panic
+                        // resurfaces in the caller's `map` when the
+                        // job's result never arrives.
+                        Ok(job) => {
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                        }
+                        Err(_) => break, // queue closed: pool dropped
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { tx: Some(Mutex::new(tx)), handles, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn submit(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("pool running")
+            .lock()
+            .unwrap()
+            .send(job)
+            .expect("worker threads alive");
+    }
+
+    /// Run `f` over every item on the pool and return the results in
+    /// input order. Blocks the calling thread until all items finish.
+    ///
+    /// Must not be called from inside a pool job (the caller would wait
+    /// on workers that may all be occupied by callers).
+    pub fn map<I, O, F>(&self, items: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send + 'static,
+        O: Send + 'static,
+        F: Fn(usize, I) -> O + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        let (otx, orx) = mpsc::channel::<(usize, O)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let otx = otx.clone();
+            let f = Arc::clone(&f);
+            self.submit(Box::new(move || {
+                let _ = otx.send((i, f(i, item)));
+            }));
+        }
+        drop(otx);
+        let mut slots: Vec<Option<O>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            // A send is only missing if a job panicked; surface that as
+            // a panic here rather than hanging.
+            let (i, o) = orx.recv().expect("a pool job panicked before returning its result");
+            slots[i] = Some(o);
+        }
+        slots.into_iter().map(|s| s.expect("result index delivered exactly once")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_input_order() {
+        let pool = WorkerPool::new(4);
+        let items: Vec<usize> = (0..64).collect();
+        let out = pool.map(items, |_, x| {
+            // Stagger completion so arrival order differs from input order.
+            if x % 3 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            x * 2
+        });
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_results_independent_of_worker_count() {
+        let items: Vec<u64> = (0..40).collect();
+        let f = |_: usize, x: u64| x.wrapping_mul(0x9E3779B97F4A7C15);
+        let a = WorkerPool::new(1).map(items.clone(), f);
+        let b = WorkerPool::new(2).map(items.clone(), f);
+        let c = WorkerPool::new(8).map(items, f);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn empty_map_is_empty() {
+        let pool = WorkerPool::new(2);
+        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn concurrent_maps_do_not_interleave_results() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let pool = pool.clone();
+            joins.push(std::thread::spawn(move || {
+                let items: Vec<u64> = (0..20).map(|i| t * 1000 + i).collect();
+                let out = pool.map(items.clone(), |_, x| x + 1);
+                assert_eq!(out, items.iter().map(|x| x + 1).collect::<Vec<_>>());
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(2);
+        let _ = pool.map(vec![1, 2, 3], |_, x| x);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn workers_survive_panicking_jobs() {
+        let pool = WorkerPool::new(2);
+        // A map containing a panicking job panics the caller...
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(vec![0u32, 1, 2], |_, x| {
+                if x == 1 {
+                    panic!("bad job");
+                }
+                x
+            })
+        }));
+        assert!(result.is_err());
+        // ...but the pool keeps all its workers and serves later maps.
+        let out = pool.map(vec![10u32, 20, 30, 40], |_, x| x + 1);
+        assert_eq!(out, vec![11, 21, 31, 41]);
+    }
+}

@@ -1,9 +1,12 @@
-//! Integration tests across modules: PJRT artifacts vs the native Rust
-//! path, and the full recover→transform→apply pipeline end-to-end.
+//! Integration tests across modules: the batched engine's cache reuse,
+//! PJRT artifacts vs the native Rust path, and the full
+//! recover→transform→apply pipeline end-to-end.
 //!
 //! Artifact-dependent tests skip (with a notice) when `artifacts/` has
-//! not been built; `make test` builds them first.
+//! not been built or the crate was built without the `pjrt` feature;
+//! `make test` builds artifacts first.
 
+use conv_basis::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, EngineConfig};
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::attention::{conv_attention, exact_attention, Mask};
 use conv_basis::basis::{ConvBasis, KConvBasis, RecoverConfig};
@@ -17,7 +20,8 @@ fn artifacts_root() -> std::path::PathBuf {
 }
 
 fn have_artifacts() -> bool {
-    artifacts_root().join("conv_attention.hlo.txt").exists()
+    conv_basis::runtime::pjrt_available()
+        && artifacts_root().join("conv_attention.hlo.txt").exists()
 }
 
 /// The default AOT variant baked by `make artifacts` (python/compile/aot.py).
@@ -25,6 +29,76 @@ const ART_N: usize = 256;
 const ART_D: usize = 32;
 const ART_K: usize = 4;
 const ART_MS: [usize; 4] = [256, 128, 64, 32];
+
+#[test]
+fn batched_engine_second_call_hits_basis_cache() {
+    // The serving reuse contract: a second batched call with identical
+    // (layer, head, seq_len) jobs is served from the basis cache, and
+    // the hit counter is visible through coordinator::metrics.
+    let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 64 });
+    let mut rng = Rng::seeded(310);
+    let (n, d) = (64, 8);
+    let mut jobs = Vec::new();
+    for h in 0..4u32 {
+        let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        jobs.push(AttnJob::causal(1, h, q, k, v, BatchedBackend::Strided(4)));
+    }
+    let first = engine.attend_batch(jobs.clone());
+    let snap1 = engine.metrics().snapshot();
+    assert!(snap1.cache_misses >= 4, "first call must recover: {snap1:?}");
+
+    let second = engine.attend_batch(jobs);
+    let snap2 = engine.metrics().snapshot();
+    assert!(
+        snap2.cache_hits >= snap1.cache_hits + 4,
+        "second call must hit the cache for every job: {snap2:?}"
+    );
+    assert_eq!(snap2.cache_misses, snap1.cache_misses, "no re-recovery on the second call");
+    for (a, b) in first.iter().zip(&second) {
+        assert!(b.cache_hit);
+        assert_eq!(max_abs_diff(&a.y, &b.y), 0.0, "cached apply must be bit-identical");
+    }
+    // And the cached payload is the O(kn) basis, not an n×n matrix.
+    let (hits, _, len) = engine.cache().stats();
+    assert!(hits >= 4);
+    assert_eq!(len, 4, "one cache entry per (layer, head, seq_len, content)");
+}
+
+#[test]
+fn server_conv_batches_reuse_engine_cache() {
+    // Same repeated synthetic payload through the whole coordinator:
+    // the engine-backed workers must hit the server's shared cache.
+    use conv_basis::coordinator::{
+        AttnRequest, BatcherConfig, Payload, RouterConfig, Server, ServerConfig,
+    };
+    use std::time::Instant;
+    let server = Server::start(ServerConfig {
+        router: RouterConfig { exact_below: 64, ..Default::default() },
+        batcher: BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+        workers: 2,
+        cache_capacity: 16,
+        lowrank_degree: 2,
+    });
+    for i in 0..8u64 {
+        server.submit(AttnRequest {
+            id: i,
+            seq_len: 96,
+            d_model: 8,
+            bounded_entries: false,
+            payload: Payload::Synthetic { seed: 42 },
+            submitted_at: Instant::now(),
+        });
+    }
+    let resps = server.collect(8);
+    assert_eq!(resps.len(), 8);
+    let metrics = server.shutdown();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.conv_requests, 8);
+    assert!(snap.cache_hits >= 1, "repeated payloads must hit: {snap:?}");
+    assert!(snap.batched_calls >= 1, "batches must go through the engine");
+    assert_eq!(snap.batched_jobs, 8);
+}
 
 #[test]
 fn pjrt_conv_attention_artifact_matches_native() {

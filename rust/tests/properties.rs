@@ -5,7 +5,11 @@
 //! independently-seeded random instances with shrink-free reporting
 //! (the failing seed is printed — re-run with that seed to reproduce).
 
-use conv_basis::attention::{conv_attention, exact_attention, merge_bases, Mask};
+use conv_basis::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, EngineConfig};
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::{
+    conv_attention, conv_attention_masked, exact_attention, merge_bases, Mask,
+};
 use conv_basis::basis::{
     decompose_exact, exp_transform, recover_from_oracle, ConvBasis, DenseColumnOracle,
     KConvBasis, RecoverConfig,
@@ -300,6 +304,97 @@ fn prop_gradient_fast_matches_naive() {
             conv_basis::gradient::grad_fast(&p, &x, &RecoverConfig::exact(n)).unwrap();
         assert!(max_abs_diff(&g_naive, &g_fast) < 1e-7);
     });
+}
+
+#[test]
+fn prop_batched_matches_single() {
+    // The batched engine must reproduce the per-sequence
+    // `conv_attention_masked` output to 1e-10 across random seeds,
+    // masks, and head counts (it runs the identical operator, so the
+    // agreement is in fact bit-exact; 1e-10 is the contract).
+    let engine = BatchedEngine::new(EngineConfig { workers: 3, cache_capacity: 128 });
+    for_all("batched_matches_single", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 8 + rng.below(24); // 8..32
+        let d = 2 + rng.below(5); // 2..7
+        let heads = 1 + rng.below(4); // 1..4
+        let mask = match rng.below(3) {
+            0 => Mask::causal(n),
+            1 => Mask::sliding_window(n, 1 + rng.below(n), rng.below(3)),
+            _ => {
+                // Random lower-triangular mask with a full diagonal (so
+                // every row keeps a non-empty softmax support).
+                let mut bits = vec![false; n * n];
+                for i in 0..n {
+                    for j in 0..=i {
+                        bits[i * n + j] = j == i || rng.below(4) != 0;
+                    }
+                }
+                Mask::dense(n, bits)
+            }
+        };
+        let cfg = RecoverConfig::exact(n);
+        let mut jobs = Vec::new();
+        let mut singles = Vec::new();
+        for h in 0..heads {
+            let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+            let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+            let v = Matrix::randn(n, d, &mut rng);
+            singles.push(conv_attention_masked(&q, &k, &v, &mask, &cfg).unwrap().y);
+            jobs.push(AttnJob {
+                layer: 0,
+                head: h as u32,
+                q,
+                k,
+                v,
+                mask: Some(mask.clone()),
+                backend: BatchedBackend::Conv(cfg),
+            });
+        }
+        let outs = engine.attend_batch(jobs);
+        assert_eq!(outs.len(), singles.len());
+        for (out, want) in outs.iter().zip(&singles) {
+            assert!(!out.fell_back, "exact-config recovery cannot fail");
+            let err = max_abs_diff(&out.y, want);
+            assert!(err < 1e-10, "batched vs single err = {err}");
+        }
+    });
+}
+
+#[test]
+fn prop_batched_deterministic_across_thread_counts() {
+    // Same jobs on pools of 1, 2 and 8 workers must give bit-identical
+    // results: jobs are pure and the pool restores input order.
+    let engines: Vec<BatchedEngine> = [1usize, 2, 8]
+        .iter()
+        .map(|&w| BatchedEngine::new(EngineConfig { workers: w, cache_capacity: 128 }))
+        .collect();
+    for seed in [11u64, 22, 33] {
+        let mut rng = Rng::seeded(seed);
+        let (n, d) = (48, 8);
+        let mut jobs = Vec::new();
+        for h in 0..4u32 {
+            let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+            let v = Matrix::randn(n, d, &mut rng);
+            let backend = match h % 3 {
+                0 => BatchedBackend::Exact,
+                1 => BatchedBackend::Strided(4),
+                _ => BatchedBackend::Conv(RecoverConfig::exact(n)),
+            };
+            jobs.push(AttnJob { layer: 0, head: h, q, k, v, mask: None, backend });
+        }
+        let base = engines[0].attend_batch(jobs.clone());
+        for e in &engines[1..] {
+            let outs = e.attend_batch(jobs.clone());
+            for (a, b) in outs.iter().zip(&base) {
+                assert_eq!(
+                    max_abs_diff(&a.y, &b.y),
+                    0.0,
+                    "thread count changed the output (seed {seed})"
+                );
+            }
+        }
+    }
 }
 
 #[test]
