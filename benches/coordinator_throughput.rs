@@ -20,6 +20,7 @@ fn run(label: &str, exact_below: usize, cache_capacity: usize, table: &mut Table
         workers: 4,
         cache_capacity,
         lowrank_degree: 2,
+        gen: None,
     });
     let trace = WorkloadTrace::generate(
         120,

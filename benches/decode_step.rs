@@ -1,0 +1,95 @@
+//! Decode-step bench: what one generated token costs per (layer, head)
+//! under each serving strategy, at n ∈ {256, 1024, 4096}.
+//!
+//! Four variants per n (structured Q/K so the conv path is exact):
+//!   * `conv step`     — `DecodeState::append_token` + `attend_last`
+//!                       from a cached basis: `O(k·n + n·d)`, the
+//!                       engine's `DecodeOp::Conv` path;
+//!   * `exact row`     — `exact_decode_last_row` from the pre-exp
+//!                       logits row: `O(n·d)`, the `DecodeOp::Exact` /
+//!                       KV-cache cost (logits-row cost included);
+//!   * `conv reprefill`— full `conv_attention_strided` at n+1: what a
+//!                       stack without decode state pays per token,
+//!                       `O(k·n·d·log n)` recovery + FFT apply;
+//!   * `exact reprefill`— full `exact_attention` at n+1: the quadratic
+//!                       `O(n²·d)` tax the paper exists to remove.
+//!
+//! The conv-step timing includes cloning the state each iteration
+//! (append mutates it); the clone is `O(k·n)`, the same order as the
+//! step itself, so the reported time is a conservative upper bound.
+//!
+//! Numbers land in EXPERIMENTS.md §PR 2.
+
+use conv_basis::attention::decode::{exact_decode_last_row, DecodeState};
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::{conv_attention_strided, exact_attention, Mask};
+use conv_basis::tensor::{dot, Matrix, Rng};
+use conv_basis::util::{fmt_dur, sink, time_median, Table};
+
+const D: usize = 16;
+const K_BASES: usize = 8;
+
+fn main() {
+    println!("# Decode step vs full re-prefill (d={D}, strided k={K_BASES}, structured Q/K)");
+    println!("(per (sequence, head); conv step includes the O(k·n) state clone)");
+    let mut table = Table::new(&[
+        "n",
+        "conv step",
+        "exact row",
+        "conv reprefill",
+        "exact reprefill",
+        "step ÷ conv-reprefill",
+        "step ÷ exact-reprefill",
+    ]);
+    for &n in &[256usize, 1024, 4096] {
+        let mut rng = Rng::seeded(n as u64);
+        let (q_full, k_full) = rope_structured_qk(n + 1, D, 3, &mut rng);
+        let q = q_full.slice(0, n, 0, D);
+        let k = k_full.slice(0, n, 0, D);
+        let v_full = Matrix::randn(n + 1, D, &mut rng);
+        let v = v_full.slice(0, n, 0, D);
+
+        // Prefill once: the cached basis decode grows from.
+        let prefill = conv_attention_strided(&q, &k, &v, K_BASES).unwrap();
+        let state0 = DecodeState::new(prefill.post_basis, prefill.d_tilde);
+        let new_row: Vec<f64> =
+            (0..=n).map(|j| dot(q_full.row(n), k_full.row(j))).collect();
+
+        let iters = if n >= 4096 { 3 } else { 7 };
+
+        let t_step = time_median(iters, || {
+            let mut s = state0.clone();
+            s.append_token(&new_row);
+            sink(s.attend_last(&v_full))
+        });
+        let t_exact_row = time_median(iters, || {
+            // A KV-cache stack recomputes the logits row, then the
+            // weighted sum.
+            let row: Vec<f64> =
+                (0..=n).map(|j| dot(q_full.row(n), k_full.row(j))).collect();
+            sink(exact_decode_last_row(&row, &v_full))
+        });
+        let t_conv_reprefill = time_median(iters, || {
+            sink(conv_attention_strided(&q_full, &k_full, &v_full, K_BASES).unwrap().y)
+        });
+        let t_exact_reprefill = time_median(iters.min(3), || {
+            sink(exact_attention(&q_full, &k_full, &v_full, &Mask::causal(n + 1)))
+        });
+
+        table.row(&[
+            n.to_string(),
+            fmt_dur(t_step),
+            fmt_dur(t_exact_row),
+            fmt_dur(t_conv_reprefill),
+            fmt_dur(t_exact_reprefill),
+            format!("{:.1}×", t_conv_reprefill.as_secs_f64() / t_step.as_secs_f64()),
+            format!("{:.1}×", t_exact_reprefill.as_secs_f64() / t_step.as_secs_f64()),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check: conv step and exact row grow ~linearly in n; the re-prefill \
+         columns grow ~n·log n (conv) and ~n² (exact) — the decode path removes the \
+         per-token re-prefill tax entirely."
+    );
+}

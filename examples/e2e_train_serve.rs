@@ -117,6 +117,7 @@ fn main() {
         workers: 4,
         cache_capacity: 64,
         lowrank_degree: 2,
+        gen: None,
     });
     let trace = WorkloadTrace::generate(
         n_requests,

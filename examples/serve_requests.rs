@@ -1,19 +1,29 @@
-//! Serving demo that exercises the **PJRT runtime** alongside the
-//! native path: loads the AOT artifacts (`make artifacts`), serves a
-//! short burst through the coordinator, then cross-checks one response
-//! against the artifact execution.
+//! Serving demo, end to end:
+//!
+//! 1. **Generation requests** (prompt in, tokens out) through the
+//!    coordinator's decode scheduler: batched prefill seeds per-head
+//!    decode states from the basis cache, then every generated token is
+//!    one `BatchedEngine::decode_batch` step per layer — no per-token
+//!    re-prefill. The decode metrics line shows seed hits and drift
+//!    re-recoveries.
+//! 2. A **native attention burst** through the router/batcher path.
+//! 3. The **PJRT cross-check** against the AOT artifacts, when built
+//!    with `--features pjrt` (`make artifacts` first).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_requests
+//! cargo run --release --example serve_requests
 //! ```
 
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::basis::{ConvBasis, KConvBasis};
 use conv_basis::coordinator::{
-    AttnRequest, BatcherConfig, Payload, RouterConfig, Server, ServerConfig,
+    AttnRequest, BatcherConfig, GenConfig, GenRequest, Payload, RouterConfig, Server, ServerConfig,
 };
+use conv_basis::data::ByteTokenizer;
+use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
 use conv_basis::runtime::PjrtRuntime;
 use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
+use std::sync::Arc;
 use std::time::Instant;
 
 const ART_N: usize = 256;
@@ -22,6 +32,45 @@ const ART_K: usize = 4;
 const ART_MS: [usize; 4] = [256, 128, 64, 32];
 
 fn main() {
+    // --- generation through the decode path -----------------------------
+    let mut rng = Rng::seeded(7);
+    let model = Arc::new(Transformer::new(&ModelConfig::tiny(96), &mut rng));
+    let gen_server = Server::start(ServerConfig {
+        gen: Some(GenConfig {
+            model: model.clone(),
+            // Conv decode: cached-basis steps, drift-tracked.
+            backend: AttentionBackend::ConvStrided(4),
+            max_concurrent: 4,
+        }),
+        cache_capacity: 512,
+        ..Default::default()
+    });
+    let tok = ByteTokenizer::new();
+    let prompts = ["the conv basis ", "attention is ", "fast decode "];
+    for (i, p) in prompts.iter().enumerate() {
+        gen_server.submit_generate(GenRequest {
+            id: i as u64,
+            prompt: tok.encode(p),
+            max_new_tokens: 24,
+            submitted_at: Instant::now(),
+        });
+    }
+    let mut gens = gen_server.collect_generations(prompts.len());
+    gens.sort_by_key(|g| g.id);
+    for (p, g) in prompts.iter().zip(&gens) {
+        // The model is untrained — the continuation is noise; the point
+        // is the serving path: prompt in, N tokens out, decode-priced.
+        println!(
+            "prompt {:?} → {} tokens in {} decode steps: {:?}",
+            p,
+            g.tokens.len(),
+            g.decode_steps,
+            tok.decode(&g.tokens),
+        );
+    }
+    let gen_metrics = gen_server.shutdown();
+    println!("generation: {}", gen_metrics.snapshot().decode_report());
+
     // --- native serving burst -------------------------------------------
     let server = Server::start(ServerConfig {
         router: RouterConfig { exact_below: 128, ..Default::default() },
@@ -29,6 +78,7 @@ fn main() {
         workers: 2,
         cache_capacity: 32,
         lowrank_degree: 2,
+        gen: None,
     });
     let mut rng = Rng::seeded(55);
     let (q, k) = rope_structured_qk(ART_N, ART_D, 3, &mut rng);

@@ -1,0 +1,107 @@
+"""NumPy mirror of ``benches/decode_step.rs``.
+
+The Rust bench is the source of truth, but some build images carry no
+Rust toolchain; this mirror reproduces the *same four strategies* with
+the same asymptotics so decode-vs-reprefill scaling can be measured
+anywhere NumPy exists. Costs mirrored per generated token, per
+(sequence, head), on Toeplitz-structured logits (the conv-exact case):
+
+* ``conv step``       — grow cached basis + banded weighted sum,
+                        O(k*n + n*d)   (DecodeOp::Conv)
+* ``exact row``       — logits row + softmax + weighted sum,
+                        O(n*d)         (DecodeOp::Exact / KV cache)
+* ``conv reprefill``  — k column probes + FFT apply of the basis,
+                        O(k*n*d + k*n*log n*d)
+* ``exact reprefill`` — full masked softmax attention, O(n^2*d)
+
+Run: ``python3 python/bench_decode_mirror.py`` (prints a markdown
+table; numbers land in EXPERIMENTS.md, clearly labelled as the mirror,
+not the Rust bench).
+"""
+
+import time
+
+import numpy as np
+
+D = 16
+K = 8
+
+
+def timeit(f, iters):
+    f()  # warmup
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        f()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fmt(seconds):
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:.0f}us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:.2f}ms"
+    return f"{seconds:.2f}s"
+
+
+def bench(n, d=D, k=K):
+    rng = np.random.default_rng(n)
+    # Toeplitz pre-exp logits H[i, j] = g[i-j] (causal), grown to n+1.
+    g = rng.normal(scale=0.5, size=n + 1)
+    q = rng.normal(size=(n + 1, d))
+    kk = rng.normal(size=(n + 1, d))
+    v = rng.normal(size=(n + 1, d))
+    b = np.exp(g[:n])  # cached post-exp basis (k=1, full window)
+    new_row = g[n::-1]  # pre-exp row n: H[n, j] = g[n-j]
+
+    def conv_step():
+        # append_token + attend_last: O(k*n) basis work + O(n*d) sum.
+        b1 = np.concatenate([b, [np.exp(new_row[0])]])
+        d_new = np.exp(new_row).sum()
+        w = b1[::-1]  # weight at column j is b1[n-j]
+        return (w @ v) / d_new
+
+    def exact_row():
+        row = kk @ q[n]  # O(n*d) logits row
+        wr = np.exp(row - row.max())
+        return (wr @ v) / wr.sum()
+
+    def conv_reprefill():
+        # Strided recovery probes (k columns of Q·k_s)…
+        for s in [j * (n + 1) // k for j in range(k)]:
+            _ = q[s:] @ kk[s]
+        # …then the FFT apply of the recovered basis per V column.
+        bb = np.exp(g)
+        fb = np.fft.rfft(bb, 2 * (n + 1))
+        out = np.empty_like(v)
+        for c in range(d):
+            out[:, c] = np.fft.irfft(fb * np.fft.rfft(v[:, c], 2 * (n + 1)))[: n + 1]
+        return out / np.cumsum(bb)[:, None]
+
+    def exact_reprefill():
+        h = q @ kk.T
+        a = np.exp(h - h.max(axis=1, keepdims=True)) * np.tri(n + 1)
+        return (a @ v) / a.sum(axis=1, keepdims=True)
+
+    iters = 3 if n >= 4096 else 7
+    return [timeit(f, iters) for f in (conv_step, exact_row, conv_reprefill, exact_reprefill)]
+
+
+def main():
+    print(f"# decode step vs re-prefill — NumPy mirror (d={D}, k={K})")
+    header = ["n", "conv step", "exact row", "conv reprefill", "exact reprefill",
+              "step/conv-rp", "step/exact-rp"]
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for n in (256, 1024, 4096):
+        ts = bench(n)
+        row = [str(n)] + [fmt(t) for t in ts] + [
+            f"{ts[2] / ts[0]:.0f}x",
+            f"{ts[3] / ts[0]:.0f}x",
+        ]
+        print("| " + " | ".join(row) + " |")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,12 +26,91 @@
 //! ([`BatchedEngine::with_shared`] over the server's cache and metrics),
 //! and the model layer batches all heads of a forward pass through
 //! `Transformer::forward_batch`.
+//!
+//! # Decode path (autoregressive serving)
+//!
+//! Besides whole-prefix jobs the engine executes **decode steps**: one
+//! appended token per (sequence, layer, head), each a [`DecodeJob`]
+//! fanned over the same pool by [`BatchedEngine::decode_batch`] with
+//! the same input-order determinism. The lifecycle:
+//!
+//! 1. **Prefill** recovers bases through [`BatchedEngine::attend_batch`]
+//!    (strided conv jobs cache their post-exp basis in the
+//!    [`BasisCache`]);
+//! 2. [`BatchedEngine::seed_decode`] turns a cached basis into a
+//!    [`DecodeState`] — a cache *hit* means decode starts without any
+//!    recovery work (`decode_seed_hits`);
+//! 3. each [`DecodeOp::Conv`] step appends one token in
+//!    `O(k·n + n·d)` — no FFT, no `n×n` matrix — and reports a drift
+//!    score; past `drift_tol` the engine re-recovers from the full
+//!    per-head Q/K and re-caches (`decode_rerecoveries`);
+//! 4. [`DecodeOp::Exact`] steps run the bit-stable exact last-row
+//!    kernel (`O(n·d)`, the KV-cache cost), bit-matching a fresh full
+//!    prefill — `tests/decode.rs` pins that property end-to-end
+//!    through `Transformer::decode_step`.
+//!
+//! # Determinism & cache-key invariants
+//!
+//! * Jobs (prefill and decode) are **pure**: outputs depend only on
+//!   job inputs, never on worker identity or timing. Results are
+//!   re-ordered by input index, so any worker count is bit-identical
+//!   (`tests/properties.rs` pins 1/2/8 for both paths).
+//! * A [`CacheKey`] commits to (model, layer, head, seq_len) *and* a
+//!   bitwise content fingerprint of (Q, K, mask) *and* a backend tag
+//!   (recovery schedule) — two jobs share a basis **iff** they would
+//!   recover the identical basis. `seed_decode` reuses the exact key a
+//!   strided prefill job wrote, which is why decode seeding is free
+//!   right after prefill.
+//!
+//! # Worked example
+//!
+//! ```
+//! use conv_basis::attention::batched::{
+//!     AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig,
+//! };
+//! use conv_basis::attention::rope::rope_structured_qk;
+//! use conv_basis::tensor::{dot, Matrix, Rng};
+//!
+//! let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
+//! let mut rng = Rng::seeded(3);
+//! let (n, d) = (24, 4);
+//! let (q_full, k_full) = rope_structured_qk(n + 1, d, 2, &mut rng);
+//! let (q, k) = (q_full.slice(0, n, 0, d), k_full.slice(0, n, 0, d));
+//! let v = Matrix::randn(n, d, &mut rng);
+//!
+//! // Prefill: recover + cache the basis for (layer 0, head 0).
+//! let out = engine.attend_batch(vec![AttnJob::causal(
+//!     0, 0, q.clone(), k.clone(), v.clone(), BatchedBackend::Strided(2),
+//! )]);
+//! assert!(!out[0].fell_back);
+//!
+//! // Decode: seed from the cache (free), append one token.
+//! let (state, hit) = engine.seed_decode(0, 0, &q, &k, 2);
+//! assert!(hit, "prefill already recovered this basis");
+//! let new_row: Vec<f64> =
+//!     (0..=n).map(|j| dot(q_full.row(n), k_full.row(j))).collect();
+//! let mut v_grown = v.clone();
+//! v_grown.push_row(&vec![0.5; d]);
+//! let outs = engine.decode_batch(vec![DecodeJob {
+//!     layer: 0,
+//!     head: 0,
+//!     state: Some(state),
+//!     new_row,
+//!     v: v_grown,
+//!     q: Some(q_full.clone()),
+//!     k: Some(k_full.clone()),
+//!     op: DecodeOp::conv(2),
+//! }]);
+//! assert_eq!(outs[0].y_last.len(), d);
+//! assert!(!outs[0].rerecovered, "structured growth stays drift-free");
+//! ```
 
+use super::decode::{exact_decode_last_row, DecodeState};
 use super::{
     apply_cached_basis, conv_attention_masked_with, conv_attention_strided_with, exact_attention,
     Mask, MaskKind,
 };
-use crate::basis::RecoverConfig;
+use crate::basis::{exp_transform, recover_strided, QkColumnOracle, RecoverConfig};
 use crate::coordinator::{fingerprint, BasisCache, CacheKey, CachedBasis, Metrics};
 use crate::fft::{FftPlanner, SharedFftPlanner};
 use crate::lowrank::{LowRankAttention, LowRankConfig};
@@ -180,6 +259,60 @@ impl BatchedEngine {
         let model_id = self.model_id;
         self.pool
             .map(jobs, move |_, job| execute_job(job, &planner, &cache, &metrics, model_id))
+    }
+
+    /// Seed a [`DecodeState`] for one (layer, head) from the engine's
+    /// [`BasisCache`] — *the prefill already recovered this basis*: a
+    /// strided prefill job caches its post-exp basis under the
+    /// (layer, head, seq_len, QK-fingerprint ⊕ k-tag) key, and this
+    /// lookup turns that entry into decode-ready state for free. On a
+    /// miss (evicted, or the prefill ran a different operator) the
+    /// basis is recovered here and cached for the next session.
+    ///
+    /// `q` must be the **pre-scaled** per-head query block and `k` the
+    /// per-head key block, exactly as the prefill job carried them —
+    /// the content fingerprint is bitwise, so any deviation misses.
+    /// Returns the state and whether it was served from the cache
+    /// (also counted in `Metrics::decode_seed_hits/_misses`).
+    pub fn seed_decode(
+        &self,
+        layer: u32,
+        head: u32,
+        q: &Matrix,
+        k: &Matrix,
+        k_bases: usize,
+    ) -> (DecodeState, bool) {
+        let (state, hit) = seed_or_recover(
+            &self.cache,
+            self.model_id,
+            (layer, head),
+            q,
+            k,
+            k_bases,
+        );
+        if hit {
+            Metrics::incr(&self.metrics.decode_seed_hits);
+        } else {
+            Metrics::incr(&self.metrics.decode_seed_misses);
+        }
+        (state, hit)
+    }
+
+    /// Execute one decode step for every job — one appended token per
+    /// (sequence, layer, head) — fanned over the worker pool with the
+    /// same deterministic input-order results as [`Self::attend_batch`].
+    /// Conv jobs grow their [`DecodeState`] in `O(k·n + n·d)` and
+    /// re-recover on drift; exact jobs run the bit-stable last-row
+    /// kernel. Step counts, drift re-recoveries and per-job latency
+    /// land in this engine's [`Metrics`].
+    pub fn decode_batch(&self, jobs: Vec<DecodeJob>) -> Vec<DecodeOutput> {
+        Metrics::incr(&self.metrics.decode_calls);
+        Metrics::add(&self.metrics.decode_steps, jobs.len() as u64);
+        let cache = Arc::clone(&self.cache);
+        let metrics = Arc::clone(&self.metrics);
+        let model_id = self.model_id;
+        self.pool
+            .map(jobs, move |_, job| execute_decode_job(job, &cache, &metrics, model_id))
     }
 }
 
@@ -346,6 +479,177 @@ fn execute_job_inner(
     }
 }
 
+/// Per-job decode operator (the decode-time mirror of
+/// [`BatchedBackend`]; jobs in one decode batch may mix operators).
+#[derive(Clone, Debug)]
+pub enum DecodeOp {
+    /// Exact last-row attention from the precomputed pre-exp logits
+    /// row (`O(n·d)` — what a KV-cache stack pays per step), with the
+    /// same float-op order as a full-prefill forward, so exact decode
+    /// **bit-matches** re-prefill.
+    Exact,
+    /// Cached-basis banded dot product (`O(k·n + n·d)`), growing the
+    /// state per token and re-recovering a fresh strided basis (at
+    /// `k_bases` onsets) from the full per-head Q/K when the append's
+    /// drift exceeds `drift_tol`.
+    Conv { k_bases: usize, drift_tol: f64 },
+}
+
+impl DecodeOp {
+    /// Default drift tolerance: far above float noise (~1e-15 on exact
+    /// conv growth), far below a structural break (≥1e-3 observed).
+    pub const DEFAULT_DRIFT_TOL: f64 = 1e-8;
+
+    /// A conv decode op with the default drift tolerance.
+    pub fn conv(k_bases: usize) -> Self {
+        DecodeOp::Conv { k_bases: k_bases.max(1), drift_tol: Self::DEFAULT_DRIFT_TOL }
+    }
+}
+
+/// One (sequence, layer, head) decode step: append one token, attend
+/// it against the prefix.
+#[derive(Clone, Debug)]
+pub struct DecodeJob {
+    /// Layer index (cache key component for re-recovery).
+    pub layer: u32,
+    /// Head index within the layer (cache key component).
+    pub head: u32,
+    /// The state grown so far — required for [`DecodeOp::Conv`]
+    /// (seeded via [`BatchedEngine::seed_decode`]), ignored by
+    /// [`DecodeOp::Exact`]. Moved in; handed back in [`DecodeOutput`].
+    pub state: Option<DecodeState>,
+    /// Pre-exp logits row of the new token: `q_new · k_j` for `j ≤ n`
+    /// (pre-scaled q), length `n+1`.
+    pub new_row: Vec<f64>,
+    /// Per-head V cache *including* the new token's row (`(n+1) × d_h`).
+    pub v: Matrix,
+    /// Full per-head pre-scaled Q cache including the new row — only
+    /// consulted for drift re-recovery, so conv jobs must supply it.
+    pub q: Option<Matrix>,
+    /// Full per-head K cache including the new row (conv jobs only).
+    pub k: Option<Matrix>,
+    pub op: DecodeOp,
+}
+
+/// Result of one decode step.
+#[derive(Clone, Debug)]
+pub struct DecodeOutput {
+    /// Attention output for the appended token (`d_h` values).
+    pub y_last: Vec<f64>,
+    /// The grown (possibly re-recovered) state, handed back for the
+    /// next step. `None` for exact jobs.
+    pub state: Option<DecodeState>,
+    /// Drift reported by the append (0 for exact jobs).
+    pub drift: f64,
+    /// Whether drift forced a basis re-recovery this step.
+    pub rerecovered: bool,
+    /// Whether the conv path fell back to the exact last-row kernel
+    /// (degenerate normalizer even after re-recovery).
+    pub fell_back: bool,
+    /// Wall time this step spent executing on its worker.
+    pub exec: std::time::Duration,
+}
+
+/// Strided-recovery decode seeding: cache lookup first, recover on
+/// miss, always leave the basis cached. Returns (state, was_hit).
+/// Shared by prefill-time seeding and drift re-recovery — both go
+/// through the same `BasisCache` key the prefill jobs use.
+fn seed_or_recover(
+    cache: &BasisCache,
+    model_id: u64,
+    (layer, head): (u32, u32),
+    q: &Matrix,
+    k: &Matrix,
+    k_bases: usize,
+) -> (DecodeState, bool) {
+    let n = q.rows();
+    let mask = Mask::causal(n);
+    let key = CacheKey {
+        model_id,
+        layer,
+        head,
+        seq_len: n,
+        qk_fingerprint: conv_fingerprint(q, k, &mask) ^ strided_tag(k_bases),
+    };
+    if let Some(hit) = cache.get(&key) {
+        return (DecodeState::new(hit.post_basis, hit.d_tilde), true);
+    }
+    let oracle = QkColumnOracle::new(q, k, &mask);
+    let (pre_basis, _stats) = recover_strided(&oracle, k_bases);
+    let post_basis = exp_transform(&pre_basis, true);
+    let d_tilde = post_basis.row_sums();
+    // Cache only sound bases: the prefill path refuses to cache when
+    // the normalizer degenerates (exp over/underflow), and a poisoned
+    // entry here would be served to future *prefill* cache hits, which
+    // have no finiteness check. The decode job itself still gets the
+    // state — its attend_last output is finiteness-checked and falls
+    // back to the exact row.
+    if d_tilde.iter().all(|&x| x > 0.0 && x.is_finite()) {
+        cache.put(key, CachedBasis { post_basis: post_basis.clone(), d_tilde: d_tilde.clone() });
+    }
+    (DecodeState::new(post_basis, d_tilde), false)
+}
+
+fn execute_decode_job(
+    job: DecodeJob,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    model_id: u64,
+) -> DecodeOutput {
+    let t0 = std::time::Instant::now();
+    let DecodeJob { layer, head, state, new_row, v, q, k, op } = job;
+    let mut out = match op {
+        DecodeOp::Exact => DecodeOutput {
+            y_last: exact_decode_last_row(&new_row, &v),
+            state: None,
+            drift: 0.0,
+            rerecovered: false,
+            fell_back: false,
+            exec: std::time::Duration::ZERO,
+        },
+        DecodeOp::Conv { k_bases, drift_tol } => {
+            let mut state = state.expect("conv decode job requires a seeded DecodeState");
+            let drift = state.append_token(&new_row);
+            let mut rerecovered = false;
+            let mut drifted_blind = false;
+            if drift > drift_tol {
+                if let (Some(q), Some(k)) = (q.as_ref(), k.as_ref()) {
+                    Metrics::incr(&metrics.decode_rerecoveries);
+                    let (fresh, _hit) =
+                        seed_or_recover(cache, model_id, (layer, head), q, k, k_bases);
+                    state = fresh;
+                    rerecovered = true;
+                } else {
+                    // The job carried no Q/K to re-recover from: don't
+                    // serve the structurally broken basis — fall back
+                    // to the exact row (new_row is always available).
+                    drifted_blind = true;
+                }
+            }
+            let mut y_last = state.attend_last(&v);
+            let mut fell_back = false;
+            if drifted_blind || !y_last.iter().all(|x| x.is_finite()) {
+                // Degenerate normalizer (recovery too inaccurate for a
+                // stable softmax): serve the exact last row instead.
+                Metrics::incr(&metrics.decode_fallbacks);
+                y_last = exact_decode_last_row(&new_row, &v);
+                fell_back = true;
+            }
+            DecodeOutput {
+                y_last,
+                state: Some(state),
+                drift,
+                rerecovered,
+                fell_back,
+                exec: std::time::Duration::ZERO,
+            }
+        }
+    };
+    out.exec = t0.elapsed();
+    metrics.record_decode(out.exec);
+    out
+}
+
 /// FNV-1a step over one u64.
 fn fnv_u64(mut h: u64, x: u64) -> u64 {
     for b in x.to_le_bytes() {
@@ -494,6 +798,143 @@ mod tests {
         let jobs = vec![AttnJob::causal(0, 0, q, k, v, BatchedBackend::Strided(2))];
         let outs = e.attend_batch(jobs);
         assert!(outs[0].y.is_finite());
+    }
+
+    #[test]
+    fn decode_exact_bitmatches_full_attention_row() {
+        // One exact decode step must equal the last row of the full
+        // exact attention at the grown length — bitwise.
+        let e = engine(2);
+        let mut rng = Rng::seeded(1100);
+        let (n, d) = (24, 4);
+        let q = Matrix::randn(n + 1, d, &mut rng).scale(0.3);
+        let k = Matrix::randn(n + 1, d, &mut rng).scale(0.3);
+        let v = Matrix::randn(n + 1, d, &mut rng);
+        // Pre-exp logits row in matmul accumulation order.
+        let mut new_row = vec![0.0; n + 1];
+        for (c, &qc) in q.row(n).iter().enumerate() {
+            if qc == 0.0 {
+                continue;
+            }
+            for (j, slot) in new_row.iter_mut().enumerate() {
+                *slot += qc * k[(j, c)];
+            }
+        }
+        let outs = e.decode_batch(vec![DecodeJob {
+            layer: 0,
+            head: 0,
+            state: None,
+            new_row,
+            v: v.clone(),
+            q: None,
+            k: None,
+            op: DecodeOp::Exact,
+        }]);
+        let full = exact_attention(&q, &k, &v, &Mask::causal(n + 1));
+        for (a, b) in outs[0].y_last.iter().zip(full.row(n)) {
+            assert_eq!(*a, *b, "exact decode must be bit-identical to re-prefill");
+        }
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.decode_calls, 1);
+        assert_eq!(snap.decode_steps, 1);
+    }
+
+    #[test]
+    fn seed_decode_hits_cache_after_strided_prefill() {
+        let e = engine(2);
+        let job = structured_job(3, 1, 40, 8, 1200);
+        let (q, k) = (job.q.clone(), job.k.clone());
+        let _ = e.attend_batch(vec![job]);
+        let (state, hit) = e.seed_decode(3, 1, &q, &k, 4);
+        assert!(hit, "prefill must have cached the basis");
+        assert_eq!(state.n(), 40);
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.decode_seed_hits, 1);
+        assert_eq!(snap.decode_seed_misses, 0);
+        // A never-prefetched (layer, head) misses and recovers.
+        let (_, hit2) = e.seed_decode(9, 0, &q, &k, 4);
+        assert!(!hit2);
+        assert_eq!(e.metrics().snapshot().decode_seed_misses, 1);
+    }
+
+    #[test]
+    fn drift_triggers_rerecovery_and_matches_scratch() {
+        // Grow a structured prefix with a structure-breaking token: the
+        // append must report drift, the engine must re-recover, and the
+        // result must equal strided-recovery-from-scratch at the grown
+        // length (that is exactly what re-recovery computes).
+        let e = engine(1);
+        let mut rng = Rng::seeded(1300);
+        let (n, d, kb) = (32, 8, 4);
+        let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+        let (state, _) = e.seed_decode(0, 0, &q, &k, kb);
+        // Grown Q/K: random new rows (breaks the Toeplitz generator).
+        let mut q_full = q.clone();
+        let mut k_full = k.clone();
+        q_full.push_row(&rng.randn_vec(d));
+        k_full.push_row(&rng.randn_vec(d));
+        let new_row: Vec<f64> = (0..=n)
+            .map(|j| crate::tensor::dot(q_full.row(n), k_full.row(j)))
+            .collect();
+        let v = Matrix::randn(n + 1, d, &mut rng);
+        let outs = e.decode_batch(vec![DecodeJob {
+            layer: 0,
+            head: 0,
+            state: Some(state),
+            new_row,
+            v: v.clone(),
+            q: Some(q_full.clone()),
+            k: Some(k_full.clone()),
+            op: DecodeOp::conv(kb),
+        }]);
+        let out = &outs[0];
+        assert!(out.drift > DecodeOp::DEFAULT_DRIFT_TOL, "drift = {}", out.drift);
+        assert!(out.rerecovered);
+        assert!(e.metrics().snapshot().decode_rerecoveries >= 1);
+        // Re-recovered state ≡ scratch recovery at n+1 ⇒ attend_last
+        // agrees with the scratch strided forward's last row.
+        let scratch = conv_attention_strided(&q_full, &k_full, &v, kb).unwrap();
+        for (a, b) in out.y_last.iter().zip(scratch.y.row(n)) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_batch_is_deterministic_across_worker_counts() {
+        let mk_jobs = || -> Vec<DecodeJob> {
+            let mut rng = Rng::seeded(1400);
+            let (n, d) = (28, 4);
+            (0..6u32)
+                .map(|h| {
+                    let (q_full, k_full) = rope_structured_qk(n + 1, d, 2, &mut rng);
+                    let q = q_full.slice(0, n, 0, d);
+                    let k = k_full.slice(0, n, 0, d);
+                    let out = conv_attention_strided(&q, &k, &Matrix::zeros(n, d), 1).unwrap();
+                    let state =
+                        crate::attention::decode::DecodeState::new(out.post_basis, out.d_tilde);
+                    let new_row: Vec<f64> = (0..=n)
+                        .map(|j| crate::tensor::dot(q_full.row(n), k_full.row(j)))
+                        .collect();
+                    DecodeJob {
+                        layer: 0,
+                        head: h,
+                        state: Some(state),
+                        new_row,
+                        v: Matrix::randn(n + 1, d, &mut rng),
+                        q: Some(q_full),
+                        k: Some(k_full),
+                        op: DecodeOp::conv(1),
+                    }
+                })
+                .collect()
+        };
+        let base = engine(1).decode_batch(mk_jobs());
+        for workers in [2usize, 8] {
+            let outs = engine(workers).decode_batch(mk_jobs());
+            for (a, b) in outs.iter().zip(&base) {
+                assert_eq!(a.y_last, b.y_last, "decode must not depend on worker count");
+            }
+        }
     }
 
     #[test]

@@ -12,6 +12,57 @@
 //! *growth*: appending a token extends every `b̃_r` by one tail entry
 //! probed from the new K row (exact when the underlying structure is
 //! conv; the serving layer re-recovers on drift).
+//!
+//! # Worked example
+//!
+//! Recover a basis once (prefill), then decode a grown sequence one
+//! token at a time. [`DecodeState::append_token`] reports a *drift*
+//! score — ~0 while the grown matrix keeps its conv structure, large
+//! when it breaks (the batched engine re-recovers past a threshold):
+//!
+//! ```
+//! use conv_basis::attention::conv_attention_strided;
+//! use conv_basis::attention::decode::{exact_attend_last, DecodeState};
+//! use conv_basis::attention::rope::rope_structured_qk;
+//! use conv_basis::tensor::{dot, Matrix, Rng};
+//!
+//! let mut rng = Rng::seeded(7);
+//! let (n, d) = (16, 4);
+//! // Toeplitz-structured Q, K at the *grown* length n+1; prefill on
+//! // the length-n prefix.
+//! let (q_full, k_full) = rope_structured_qk(n + 1, d, 2, &mut rng);
+//! let (q, k) = (q_full.slice(0, n, 0, d), k_full.slice(0, n, 0, d));
+//! let out = conv_attention_strided(&q, &k, &Matrix::zeros(n, d), 1).unwrap();
+//! let mut state = DecodeState::new(out.post_basis, out.d_tilde);
+//!
+//! // One decode step: the new pre-exp logits row q_new · k_j, j ≤ n.
+//! let new_row: Vec<f64> =
+//!     (0..=n).map(|j| dot(q_full.row(n), k_full.row(j))).collect();
+//! let drift = state.append_token(&new_row);
+//! assert!(drift < 1e-8, "conv growth is drift-free");
+//!
+//! // Attend the newest token in O(k·n + n·d) — no n×n matrix.
+//! let v = Matrix::randn(n + 1, d, &mut rng);
+//! let fast = state.attend_last(&v);
+//! let want = exact_attend_last(&q_full, &k_full, &v);
+//! for (a, b) in fast.iter().zip(&want) {
+//!     assert!((a - b).abs() < 1e-9);
+//! }
+//! ```
+//!
+//! Three last-row kernels live here; pick by caller:
+//!
+//! * [`DecodeState::attend_last`] — `O(k·n + n·d)` from a cached basis
+//!   (the conv decode path);
+//! * [`exact_decode_last_row`] — exact, from a precomputed pre-exp
+//!   logits row, with the **same floating-point operation order** as
+//!   [`exact_attention`](crate::attention::exact_attention)'s last row,
+//!   so a decode step bit-matches a full prefill (the engine's
+//!   [`DecodeOp::Exact`](crate::attention::batched::DecodeOp) path and
+//!   the `tests/decode.rs` bit-match property rely on this);
+//! * [`exact_attend_last_row_only`] — exact with a *stabilized*
+//!   softmax, the fair standalone KV-cache baseline for benches (not
+//!   bit-compatible with the unstabilized full forward).
 
 use super::Mask;
 use crate::basis::{ConvBasis, KConvBasis};
@@ -39,13 +90,16 @@ impl DecodeState {
         &self.post_basis
     }
 
-    /// Attention output for the **last** row only — `O(k·n + n·d)`.
-    pub fn attend_last(&self, v: &Matrix) -> Vec<f64> {
+    /// Normalizer diagonal `D̃` over the current prefix.
+    pub fn d_tilde(&self) -> &[f64] {
+        &self.d_tilde
+    }
+
+    /// Basis-implied attention weights of the **last** row (post-exp,
+    /// pre-normalization): entry `j` is `Σ_r b̃_r[n−1−j]` over the
+    /// windows covering column `j`.
+    pub fn last_weight_row(&self) -> Vec<f64> {
         let n = self.n();
-        assert_eq!(v.rows(), n);
-        let d = v.cols();
-        // Row n−1 attention weights from the basis vectors.
-        let mut y = vec![0.0; d];
         let mut weight_row = vec![0.0; n];
         for t in self.post_basis.terms() {
             let off = n - t.m;
@@ -54,6 +108,16 @@ impl DecodeState {
                 weight_row[j] += t.b[n - 1 - j];
             }
         }
+        weight_row
+    }
+
+    /// Attention output for the **last** row only — `O(k·n + n·d)`.
+    pub fn attend_last(&self, v: &Matrix) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(v.rows(), n);
+        let d = v.cols();
+        let mut y = vec![0.0; d];
+        let weight_row = self.last_weight_row();
         for (j, &w) in weight_row.iter().enumerate() {
             if w != 0.0 {
                 crate::tensor::axpy(w, v.row(j), &mut y);
@@ -76,7 +140,17 @@ impl DecodeState {
     /// fingerprint check forces re-recovery. For the common k = 1
     /// (Toeplitz) case the update is exact whenever the new row extends
     /// the same generator.
-    pub fn append_token(&mut self, new_row_of_h: &[f64]) {
+    ///
+    /// Returns the **drift** of the grown state: the maximum deviation
+    /// between the basis-implied last-row weights and the exact
+    /// `exp(new_row_of_h)` weights, normalized by the exact softmax
+    /// denominator. ~0 (float noise) while the structure holds; `O(1)`
+    /// when it breaks. The batched engine re-recovers when this exceeds
+    /// the job's tolerance ([`DecodeOp::Conv`]'s `drift_tol`, tracked
+    /// per-state and surfaced through `coordinator::metrics`).
+    ///
+    /// [`DecodeOp::Conv`]: crate::attention::batched::DecodeOp
+    pub fn append_token(&mut self, new_row_of_h: &[f64]) -> f64 {
         let n = self.n();
         assert_eq!(new_row_of_h.len(), n + 1);
         // Pre-exp cumulative generator value at each diagonal offset is
@@ -107,7 +181,51 @@ impl DecodeState {
         d.push(new_d);
         self.post_basis = grown;
         self.d_tilde = d;
+        // Drift: basis-implied last-row weights vs the exact exp row.
+        let weight_row = self.last_weight_row();
+        let mut dev: f64 = 0.0;
+        for (w, &h) in weight_row.iter().zip(new_row_of_h) {
+            dev = dev.max((w - h.exp()).abs());
+        }
+        dev / new_d
     }
+}
+
+/// Exact last-row attention from a precomputed pre-exp logits row
+/// (`new_row_of_h[j] = q_last · k_j`, causal, length `n`), replicating
+/// [`exact_attention`](crate::attention::exact_attention)'s exact
+/// floating-point operation order on its last row — unstabilized
+/// `exp`, ascending-`j` accumulation, multiply-by-reciprocal — so an
+/// exact decode step **bit-matches** a fresh full prefill. This is the
+/// kernel behind the batched engine's
+/// [`DecodeOp::Exact`](crate::attention::batched::DecodeOp) and the
+/// fallback for degenerate conv decode states.
+pub fn exact_decode_last_row(new_row_of_h: &[f64], v: &Matrix) -> Vec<f64> {
+    let n = new_row_of_h.len();
+    assert_eq!(v.rows(), n);
+    let d = v.cols();
+    // Mirrors `exact_attention`: A[n−1, j] = exp(H[n−1, j]) …
+    let w: Vec<f64> = new_row_of_h.iter().map(|&h| h.exp()).collect();
+    // … D[n−1] via `Matrix::row_sums` (sequential iterator sum) …
+    let den: f64 = w.iter().sum();
+    // … (A·V)[n−1] via `Matrix::matmul`'s i-k-j accumulation (skip on
+    // exact zeros included) …
+    let mut y = vec![0.0; d];
+    for (j, &wj) in w.iter().enumerate() {
+        if wj == 0.0 {
+            continue;
+        }
+        let vr = v.row(j);
+        for (c, yv) in y.iter_mut().enumerate() {
+            *yv += wj * vr[c];
+        }
+    }
+    // … and `scale_rows` by the reciprocal (not a division).
+    let inv = 1.0 / den;
+    for x in y.iter_mut() {
+        *x *= inv;
+    }
+    y
 }
 
 
@@ -167,6 +285,62 @@ mod tests {
         for (a, b) in fast.iter().zip(&full) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn exact_decode_last_row_bitmatches_exact_attention() {
+        // The decode kernel must replicate `exact_attention`'s float op
+        // order exactly — equality below is bitwise, not approximate.
+        let mut rng = Rng::seeded(506);
+        let (n, d) = (20, 6);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.4);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.4);
+        let v = Matrix::randn(n, d, &mut rng);
+        // Pre-exp logits row in matmul's i-k-j accumulation order.
+        let mut new_row = vec![0.0; n];
+        for (c, &qc) in q.row(n - 1).iter().enumerate() {
+            if qc == 0.0 {
+                continue;
+            }
+            for (j, slot) in new_row.iter_mut().enumerate() {
+                *slot += qc * k[(j, c)];
+            }
+        }
+        let fast = exact_decode_last_row(&new_row, &v);
+        let full = crate::attention::exact_attention(&q, &k, &v, &Mask::causal(n));
+        for (a, b) in fast.iter().zip(full.row(n - 1)) {
+            assert_eq!(*a, *b, "decode last row must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn append_token_drift_is_tiny_on_structured_growth() {
+        let mut rng = Rng::seeded(507);
+        let (n, d) = (24, 6);
+        let (q_full, k_full) = rope_structured_qk(n + 1, d, 2, &mut rng);
+        let q = q_full.slice(0, n, 0, d);
+        let k = k_full.slice(0, n, 0, d);
+        let out = conv_attention_strided(&q, &k, &Matrix::zeros(n, d), 1).unwrap();
+        let mut state = DecodeState::new(out.post_basis, out.d_tilde);
+        let qn = q_full.row(n);
+        let new_row: Vec<f64> =
+            (0..=n).map(|j| crate::tensor::dot(qn, k_full.row(j))).collect();
+        let drift = state.append_token(&new_row);
+        assert!(drift < 1e-10, "structured growth must not drift: {drift}");
+    }
+
+    #[test]
+    fn append_token_drift_is_large_on_broken_structure() {
+        let mut rng = Rng::seeded(508);
+        let (n, d) = (24, 6);
+        let (q, k) = rope_structured_qk(n, d, 2, &mut rng);
+        let out = conv_attention_strided(&q, &k, &Matrix::zeros(n, d), 1).unwrap();
+        let mut state = DecodeState::new(out.post_basis, out.d_tilde);
+        // A random (non-Toeplitz-extending) new row breaks the
+        // generator; the append must report it.
+        let new_row: Vec<f64> = (0..=n).map(|_| rng.randn()).collect();
+        let drift = state.append_token(&new_row);
+        assert!(drift > 1e-3, "broken structure must register drift: {drift}");
     }
 
     #[test]

@@ -2,6 +2,10 @@
 //! the conv-basis fast path (Algorithm 1, Theorem 4.4), the masked
 //! variants (Appendix A), and the full (bidirectional) self-attention
 //! split (Appendix A “Extend to full self-attention”).
+//!
+//! Serving entry points: [`batched`] (the multi-head engine — prefill
+//! `attend_batch` and autoregressive `decode_batch`) and [`decode`]
+//! (the incremental per-token state those decode jobs grow).
 
 pub mod batched;
 pub mod decode;

@@ -49,9 +49,31 @@ pub struct Metrics {
     pub batched_calls: AtomicU64,
     /// Total (sequence, head) jobs executed by the batched engine.
     pub batched_jobs: AtomicU64,
+    /// Decode-engine calls (one per `decode_batch`).
+    pub decode_calls: AtomicU64,
+    /// Total (sequence, layer, head) decode jobs executed.
+    pub decode_steps: AtomicU64,
+    /// Decode states seeded straight from a `BasisCache` hit (the
+    /// prefill recovered the basis; decode reuses it for free).
+    pub decode_seed_hits: AtomicU64,
+    /// Decode states that had to recover a basis at seed time.
+    pub decode_seed_misses: AtomicU64,
+    /// Drift-triggered basis re-recoveries during decode.
+    pub decode_rerecoveries: AtomicU64,
+    /// Conv decode jobs that fell back to the exact last-row kernel
+    /// (degenerate normalizer after growth/re-recovery).
+    pub decode_fallbacks: AtomicU64,
+    /// Generation requests admitted by the server's decode scheduler.
+    pub gen_requests: AtomicU64,
+    /// Generation requests completed (response sent).
+    pub gen_completed: AtomicU64,
+    /// Tokens emitted across all generation requests.
+    pub gen_tokens: AtomicU64,
     queue_lat: Mutex<Vec<f64>>,
     exec_lat: Mutex<Vec<f64>>,
     e2e_lat: Mutex<Vec<f64>>,
+    decode_lat: Mutex<Vec<f64>>,
+    gen_lat: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
@@ -81,6 +103,20 @@ impl Metrics {
         self.e2e_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
     }
 
+    /// Per-job decode-step execution time (kept separate from the
+    /// prefill `exec` series so the two latency regimes don't mix).
+    pub fn record_decode(&self, d: Duration) {
+        self.decode_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
+    /// Whole-generation end-to-end time (submit → response, all
+    /// tokens). Its own series for the same reason: one multi-token
+    /// generation is orders of magnitude above one attention request,
+    /// and mixing them would corrupt the e2e percentiles.
+    pub fn record_gen_e2e(&self, d: Duration) {
+        self.gen_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
@@ -94,9 +130,20 @@ impl Metrics {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             batched_calls: self.batched_calls.load(Ordering::Relaxed),
             batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            decode_calls: self.decode_calls.load(Ordering::Relaxed),
+            decode_steps: self.decode_steps.load(Ordering::Relaxed),
+            decode_seed_hits: self.decode_seed_hits.load(Ordering::Relaxed),
+            decode_seed_misses: self.decode_seed_misses.load(Ordering::Relaxed),
+            decode_rerecoveries: self.decode_rerecoveries.load(Ordering::Relaxed),
+            decode_fallbacks: self.decode_fallbacks.load(Ordering::Relaxed),
+            gen_requests: self.gen_requests.load(Ordering::Relaxed),
+            gen_completed: self.gen_completed.load(Ordering::Relaxed),
+            gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
             queue: summarize(&mut self.queue_lat.lock().unwrap()),
             exec: summarize(&mut self.exec_lat.lock().unwrap()),
             e2e: summarize(&mut self.e2e_lat.lock().unwrap()),
+            decode: summarize(&mut self.decode_lat.lock().unwrap()),
+            gen_e2e: summarize(&mut self.gen_lat.lock().unwrap()),
         }
     }
 }
@@ -115,9 +162,20 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     pub batched_calls: u64,
     pub batched_jobs: u64,
+    pub decode_calls: u64,
+    pub decode_steps: u64,
+    pub decode_seed_hits: u64,
+    pub decode_seed_misses: u64,
+    pub decode_rerecoveries: u64,
+    pub decode_fallbacks: u64,
+    pub gen_requests: u64,
+    pub gen_completed: u64,
+    pub gen_tokens: u64,
     pub queue: LatencyStats,
     pub exec: LatencyStats,
     pub e2e: LatencyStats,
+    pub decode: LatencyStats,
+    pub gen_e2e: LatencyStats,
 }
 
 impl MetricsSnapshot {
@@ -146,6 +204,31 @@ impl MetricsSnapshot {
             self.e2e.max_us,
             self.exec.mean_us,
             self.queue.mean_us,
+        )
+    }
+
+    /// Render the decode/generation counters (the autoregressive path's
+    /// dashboard line — seed hits say how often prefill bases were
+    /// reused, re-recoveries how often drift forced a fresh recovery).
+    pub fn decode_report(&self) -> String {
+        format!(
+            "generation: {} requests / {} completed / {} tokens | \
+             decode: {} calls/{} steps | seeds: {}h/{}m | \
+             drift re-recoveries: {} | fallbacks: {} | \
+             step exec mean={:.0}µs p95={:.0}µs | gen e2e p50={:.0}µs p95={:.0}µs",
+            self.gen_requests,
+            self.gen_completed,
+            self.gen_tokens,
+            self.decode_calls,
+            self.decode_steps,
+            self.decode_seed_hits,
+            self.decode_seed_misses,
+            self.decode_rerecoveries,
+            self.decode_fallbacks,
+            self.decode.mean_us,
+            self.decode.p95_us,
+            self.gen_e2e.p50_us,
+            self.gen_e2e.p95_us,
         )
     }
 }
@@ -189,5 +272,18 @@ mod tests {
         Metrics::incr(&m.conv_requests);
         let r = m.snapshot().report();
         assert!(r.contains("conv=1"));
+    }
+
+    #[test]
+    fn decode_report_renders() {
+        let m = Metrics::new();
+        Metrics::incr(&m.gen_requests);
+        Metrics::incr(&m.decode_seed_hits);
+        m.record_decode(Duration::from_micros(10));
+        let s = m.snapshot();
+        assert_eq!(s.decode.count, 1);
+        let r = s.decode_report();
+        assert!(r.contains("1 requests"));
+        assert!(r.contains("seeds: 1h/0m"));
     }
 }

@@ -14,11 +14,17 @@
 //!   apply.
 //! * [`Server`] — worker threads draining the batch queue (std::thread
 //!   + mpsc; this image vendors no async runtime, and the workload is
-//!   CPU-bound anyway).
-//! * [`Metrics`] — lock-free counters + latency recording.
+//!   CPU-bound anyway). With a [`GenConfig`] it also runs the
+//!   generation scheduler: [`GenRequest`] (prompt → N tokens) served
+//!   by interleaving batched prefill of new arrivals with one engine
+//!   decode step per loop for every in-flight sequence — autoregressive
+//!   serving with no per-token re-prefill.
+//! * [`Metrics`] — lock-free counters + latency recording, including
+//!   the decode path (`decode_seed_hits`, `decode_rerecoveries`, …).
 //!
 //! The runtime is deliberately deterministic given a trace and a seed —
-//! every number in EXPERIMENTS.md §coordinator is reproducible.
+//! every number in EXPERIMENTS.md §coordinator is reproducible. See
+//! `ARCHITECTURE.md` at the repo root for the full request flow.
 
 mod batcher;
 mod cache;
@@ -30,4 +36,7 @@ pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use cache::{fingerprint, BasisCache, CacheKey, CachedBasis};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use router::{Backend, Router, RouterConfig};
-pub use server::{run_trace, AttnRequest, AttnResponse, Payload, Server, ServerConfig};
+pub use server::{
+    run_trace, AttnRequest, AttnResponse, GenConfig, GenRequest, GenResponse, Payload, Server,
+    ServerConfig,
+};

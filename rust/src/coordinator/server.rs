@@ -5,6 +5,19 @@
 //! layer as batches, not loops of singles). Plain std threads — the
 //! workload is CPU-bound attention math, so an async runtime would only
 //! add scheduling noise (and this image vendors none).
+//!
+//! With a [`GenConfig`] the server additionally runs a **generation
+//! scheduler** thread for autoregressive requests ([`GenRequest`]:
+//! prompt in, N tokens out). The scheduler keeps a set of in-flight
+//! [`DecodeSession`]s and loops: admit new arrivals (batched prefill
+//! through the engine), run **one decode step for every in-flight
+//! sequence** (one `decode_batch` per layer via
+//! `Transformer::decode_step`), retire finished sequences. New
+//! arrivals therefore merge into the running decode loop after at most
+//! one step — the first slice of cross-request continuous batching.
+//! Every generated token costs `O(k·n + n·d)` (conv) or `O(n·d)`
+//! (exact) per head, never a re-prefill; seed hits, drift
+//! re-recoveries and per-step latency land in [`Metrics`].
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::cache::BasisCache;
@@ -13,6 +26,7 @@ use super::router::{Backend, Router, RouterConfig};
 use crate::attention::batched::{AttnJob, BatchedBackend, BatchedEngine};
 use crate::attention::rope::rope_structured_qk;
 use crate::lowrank::LowRankConfig;
+use crate::model::{AttentionBackend, DecodeSession, Transformer};
 use crate::tensor::{Matrix, Rng};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -48,6 +62,53 @@ pub struct AttnResponse {
     pub basis_k: usize,
 }
 
+/// Autoregressive-generation configuration: which model decodes, with
+/// which attention backend, and how many sequences may be in flight at
+/// once (arrivals beyond that wait in the channel).
+#[derive(Clone)]
+pub struct GenConfig {
+    pub model: Arc<Transformer>,
+    /// Attention backend for prefill *and* decode (conv backends
+    /// decode through cached bases, exact through the KV-cache row).
+    pub backend: AttentionBackend,
+    /// Max concurrently decoding sequences (≥ 1).
+    pub max_concurrent: usize,
+}
+
+impl std::fmt::Debug for GenConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GenConfig")
+            .field("backend", &self.backend)
+            .field("max_concurrent", &self.max_concurrent)
+            .field("model_params", &self.model.num_params())
+            .finish()
+    }
+}
+
+/// One generation request: a prompt and a token budget.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    /// Tokens to generate (greedy argmax decoding — deterministic).
+    pub max_new_tokens: usize,
+    pub submitted_at: Instant,
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated tokens (length ≤ `max_new_tokens`; shorter only when
+    /// the model's `max_seq` cut generation off, zero when the prompt
+    /// was empty or over `max_seq` — the request is rejected whole).
+    pub tokens: Vec<usize>,
+    /// Decode steps this sequence ran through the engine (prefill not
+    /// counted: the first token comes from the prefill logits).
+    pub decode_steps: usize,
+}
+
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -57,6 +118,8 @@ pub struct ServerConfig {
     pub cache_capacity: usize,
     /// Low-rank degree when the router picks LowRank.
     pub lowrank_degree: usize,
+    /// Enable the generation scheduler (None = attention-only server).
+    pub gen: Option<GenConfig>,
 }
 
 impl Default for ServerConfig {
@@ -67,12 +130,18 @@ impl Default for ServerConfig {
             workers: 2,
             cache_capacity: 64,
             lowrank_degree: 2,
+            gen: None,
         }
     }
 }
 
 enum DispatchMsg {
     Request(AttnRequest),
+    Shutdown,
+}
+
+enum GenMsg {
+    Request(GenRequest),
     Shutdown,
 }
 
@@ -86,6 +155,9 @@ pub struct Server {
     pub engine: Arc<BatchedEngine>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    gen_tx: Option<mpsc::Sender<GenMsg>>,
+    gen_resp_rx: Option<mpsc::Receiver<GenResponse>>,
+    gen_scheduler: Option<std::thread::JoinHandle<()>>,
     running: Arc<AtomicBool>,
 }
 
@@ -204,6 +276,23 @@ impl Server {
         }
         drop(resp_tx);
 
+        // Generation scheduler: in-flight decode sessions stepped in
+        // lockstep through the engine, interleaved with batched prefill
+        // of new arrivals.
+        let (gen_tx, gen_resp_rx, gen_scheduler) = match cfg.gen {
+            Some(gen_cfg) => {
+                let (gtx, grx) = mpsc::channel::<GenMsg>();
+                let (rtx, rrx) = mpsc::channel::<GenResponse>();
+                let engine_g = engine.clone();
+                let metrics_g = metrics.clone();
+                let handle = std::thread::spawn(move || {
+                    generation_loop(gen_cfg, grx, rtx, &engine_g, &metrics_g);
+                });
+                (Some(gtx), Some(rrx), Some(handle))
+            }
+            None => (None, None, None),
+        };
+
         Server {
             dispatch_tx,
             resp_rx,
@@ -212,6 +301,9 @@ impl Server {
             engine,
             dispatcher: Some(dispatcher),
             workers,
+            gen_tx,
+            gen_resp_rx,
+            gen_scheduler,
             running,
         }
     }
@@ -226,10 +318,28 @@ impl Server {
         (0..n).filter_map(|_| self.resp_rx.recv().ok()).collect()
     }
 
-    /// Graceful shutdown: flush, join.
+    /// Submit a generation request (non-blocking). Panics if the
+    /// server was started without a [`GenConfig`].
+    pub fn submit_generate(&self, req: GenRequest) {
+        let tx = self.gen_tx.as_ref().expect("ServerConfig.gen required for generation");
+        Metrics::incr(&self.metrics.gen_requests);
+        let _ = tx.send(GenMsg::Request(req));
+    }
+
+    /// Collect `n` completed generations (blocking). Panics if the
+    /// server was started without a [`GenConfig`].
+    pub fn collect_generations(&self, n: usize) -> Vec<GenResponse> {
+        let rx = self.gen_resp_rx.as_ref().expect("ServerConfig.gen required for generation");
+        (0..n).filter_map(|_| rx.recv().ok()).collect()
+    }
+
+    /// Graceful shutdown: flush, finish in-flight generations, join.
     pub fn shutdown(mut self) -> Arc<Metrics> {
         self.running.store(false, Ordering::Relaxed);
         let _ = self.dispatch_tx.send(DispatchMsg::Shutdown);
+        if let Some(tx) = self.gen_tx.take() {
+            let _ = tx.send(GenMsg::Shutdown);
+        }
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
@@ -237,7 +347,164 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // The scheduler drains its in-flight sequences before exiting.
+        if let Some(g) = self.gen_scheduler.take() {
+            let _ = g.join();
+        }
         self.metrics.clone()
+    }
+}
+
+/// One in-flight generation, tracked next to its [`DecodeSession`]
+/// (parallel vectors: `Transformer::decode_step` wants the sessions as
+/// one contiguous `&mut [DecodeSession]`).
+struct GenFlight {
+    id: u64,
+    prompt_len: usize,
+    max_new: usize,
+    generated: Vec<usize>,
+    decode_steps: usize,
+    submitted_at: Instant,
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The generation scheduler body: admit → prefill (batched) → one
+/// decode step for all in-flight sessions → retire finished; repeat.
+/// On shutdown it stops admitting and decodes the remaining sequences
+/// to completion (flush semantics, like the attention path).
+fn generation_loop(
+    cfg: GenConfig,
+    gen_rx: mpsc::Receiver<GenMsg>,
+    resp_tx: mpsc::Sender<GenResponse>,
+    engine: &BatchedEngine,
+    metrics: &Metrics,
+) {
+    let model = cfg.model;
+    let backend = cfg.backend;
+    let max_concurrent = cfg.max_concurrent.max(1);
+    let max_seq = model.cfg.max_seq;
+    let mut sessions: Vec<DecodeSession> = Vec::new();
+    let mut flights: Vec<GenFlight> = Vec::new();
+    let mut shutting = false;
+
+    let respond = |flight: &GenFlight, resp_tx: &mpsc::Sender<GenResponse>| {
+        Metrics::incr(&metrics.gen_completed);
+        metrics.record_gen_e2e(flight.submitted_at.elapsed());
+        let _ = resp_tx.send(GenResponse {
+            id: flight.id,
+            prompt_len: flight.prompt_len,
+            tokens: flight.generated.clone(),
+            decode_steps: flight.decode_steps,
+        });
+    };
+
+    loop {
+        // Admit new arrivals. Block only when idle (nothing to decode);
+        // otherwise drain without waiting so in-flight sequences keep
+        // stepping — this is what interleaves prefill with decode.
+        let mut arrivals: Vec<GenRequest> = Vec::new();
+        if sessions.is_empty() && !shutting {
+            match gen_rx.recv() {
+                Ok(GenMsg::Request(r)) => arrivals.push(r),
+                Ok(GenMsg::Shutdown) | Err(_) => shutting = true,
+            }
+        }
+        while sessions.len() + arrivals.len() < max_concurrent {
+            match gen_rx.try_recv() {
+                Ok(GenMsg::Request(r)) => arrivals.push(r),
+                Ok(GenMsg::Shutdown) => {
+                    shutting = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+
+        if !arrivals.is_empty() {
+            // Reject invalid prompts whole; batch-prefill the rest
+            // through the engine (one attend_batch per layer for ALL
+            // new arrivals together).
+            let mut admitted: Vec<GenRequest> = Vec::new();
+            for r in arrivals {
+                if r.prompt.is_empty() || r.prompt.len() > max_seq {
+                    respond(
+                        &GenFlight {
+                            id: r.id,
+                            prompt_len: r.prompt.len(),
+                            max_new: 0,
+                            generated: Vec::new(),
+                            decode_steps: 0,
+                            submitted_at: r.submitted_at,
+                        },
+                        &resp_tx,
+                    );
+                    continue;
+                }
+                admitted.push(r);
+            }
+            if !admitted.is_empty() {
+                let prompts: Vec<Vec<usize>> =
+                    admitted.iter().map(|r| r.prompt.clone()).collect();
+                let prefilled = model.prefill_batch(&prompts, &backend, engine);
+                for (r, (mut sess, last_logits)) in admitted.into_iter().zip(prefilled) {
+                    sess.id = r.id;
+                    let mut flight = GenFlight {
+                        id: r.id,
+                        prompt_len: r.prompt.len(),
+                        max_new: r.max_new_tokens,
+                        generated: Vec::new(),
+                        decode_steps: 0,
+                        submitted_at: r.submitted_at,
+                    };
+                    if flight.max_new >= 1 {
+                        // The first token falls out of the prefill
+                        // logits — no decode step needed for it.
+                        flight.generated.push(argmax(&last_logits));
+                        Metrics::incr(&metrics.gen_tokens);
+                    }
+                    if flight.generated.len() >= flight.max_new || sess.len() >= max_seq {
+                        respond(&flight, &resp_tx);
+                    } else {
+                        sessions.push(sess);
+                        flights.push(flight);
+                    }
+                }
+            }
+        }
+
+        if sessions.is_empty() {
+            if shutting {
+                break;
+            }
+            continue;
+        }
+
+        // One decode step for every in-flight sequence: feed each its
+        // latest generated token, get the next token's logits.
+        let next: Vec<usize> = flights.iter().map(|f| *f.generated.last().unwrap()).collect();
+        let logits = model.decode_step(&mut sessions, &next, engine);
+        // Retire finished sequences (walk backwards so swap_remove is
+        // index-stable).
+        for i in (0..flights.len()).rev() {
+            let f = &mut flights[i];
+            f.decode_steps += 1;
+            f.generated.push(argmax(&logits[i]));
+            Metrics::incr(&metrics.gen_tokens);
+            if f.generated.len() >= f.max_new || sessions[i].len() >= max_seq {
+                respond(&flights[i], &resp_tx);
+                flights.swap_remove(i);
+                sessions.swap_remove(i);
+            }
+        }
     }
 }
 
@@ -293,7 +560,49 @@ mod tests {
             workers: 2,
             cache_capacity: 16,
             lowrank_degree: 2,
+            gen: None,
         })
+    }
+
+    fn gen_server(backend: AttentionBackend, model: Arc<Transformer>) -> Server {
+        Server::start(ServerConfig {
+            gen: Some(GenConfig { model, backend, max_concurrent: 4 }),
+            cache_capacity: 256,
+            ..Default::default()
+        })
+    }
+
+    fn tiny_model(seed: u64) -> Arc<Transformer> {
+        let mut rng = Rng::seeded(seed);
+        Arc::new(Transformer::new(&crate::model::ModelConfig::tiny(64), &mut rng))
+    }
+
+    /// Greedy-generation oracle: full re-prefill per token through
+    /// `Transformer::forward` (what the decode path must reproduce).
+    fn generate_by_reprefill(
+        model: &Transformer,
+        prompt: &[usize],
+        max_new: usize,
+        backend: &AttentionBackend,
+    ) -> Vec<usize> {
+        let mut toks = prompt.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let rec = model.forward(&toks, backend, false);
+            let row = rec.logits.row(toks.len() - 1);
+            let mut best = 0;
+            for (i, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = i;
+                }
+            }
+            out.push(best);
+            if toks.len() == model.cfg.max_seq {
+                break;
+            }
+            toks.push(best);
+        }
+        out
     }
 
     #[test]
@@ -381,6 +690,126 @@ mod tests {
         let err = crate::tensor::max_abs_diff(&resp.y, &want);
         assert!(err < 1e-6, "err = {err}");
         server.shutdown();
+    }
+
+    #[test]
+    fn generation_matches_reprefill_oracle_without_reprefilling() {
+        // The server must produce exactly the tokens a per-token
+        // re-prefill loop produces (exact decode bit-matches prefill),
+        // while the metrics prove it never re-prefilled.
+        let model = tiny_model(41);
+        let server = gen_server(AttentionBackend::Exact, model.clone());
+        let prompts: [&[usize]; 3] = [&[1, 2, 3, 4], &[9, 8, 7], &[5, 5, 5, 5, 5, 5]];
+        let max_new = 6;
+        for (i, p) in prompts.iter().enumerate() {
+            server.submit_generate(GenRequest {
+                id: i as u64,
+                prompt: p.to_vec(),
+                max_new_tokens: max_new,
+                submitted_at: Instant::now(),
+            });
+        }
+        let mut resps = server.collect_generations(prompts.len());
+        resps.sort_by_key(|r| r.id);
+        let metrics = server.shutdown();
+        for (i, p) in prompts.iter().enumerate() {
+            let want = generate_by_reprefill(&model, p, max_new, &AttentionBackend::Exact);
+            assert_eq!(resps[i].tokens, want, "prompt {i}");
+            assert_eq!(resps[i].prompt_len, p.len());
+            assert_eq!(resps[i].decode_steps, max_new - 1);
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.gen_requests, 3);
+        assert_eq!(s.gen_completed, 3);
+        assert_eq!(s.gen_tokens, 3 * max_new as u64);
+        // Decode really went through the engine's decode path…
+        let n_layers = model.cfg.n_layers as u64;
+        let n_heads = model.cfg.n_heads as u64;
+        assert_eq!(s.decode_steps, 3 * (max_new as u64 - 1) * n_layers * n_heads);
+        // …and prefill cost was paid at most once per admission wave
+        // per layer (≤ 3 waves × layers calls), not once per token.
+        assert!(
+            s.batched_calls <= 3 * n_layers,
+            "per-token re-prefill detected: {} attend_batch calls",
+            s.batched_calls
+        );
+    }
+
+    #[test]
+    fn conv_generation_decodes_through_cached_bases() {
+        let model = tiny_model(42);
+        let server = gen_server(AttentionBackend::ConvStrided(4), model.clone());
+        server.submit_generate(GenRequest {
+            id: 0,
+            prompt: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            max_new_tokens: 5,
+            submitted_at: Instant::now(),
+        });
+        let resps = server.collect_generations(1);
+        assert_eq!(resps[0].tokens.len(), 5);
+        let s = server.shutdown().snapshot();
+        let per_step = (model.cfg.n_layers * model.cfg.n_heads) as u64;
+        // Prefill seeded every (layer, head) state from the cache the
+        // prefill jobs had just filled — zero extra recoveries.
+        assert_eq!(s.decode_seed_hits, per_step, "seeding must hit the prefill's bases");
+        assert_eq!(s.decode_seed_misses, 0);
+        assert_eq!(s.decode_steps, 4 * per_step);
+        assert_eq!(s.gen_tokens, 5);
+    }
+
+    #[test]
+    fn generation_truncates_at_max_seq_and_rejects_invalid() {
+        let model = tiny_model(43);
+        let max_seq = model.cfg.max_seq; // 64
+        let server = gen_server(AttentionBackend::Exact, model.clone());
+        // Asks for more tokens than max_seq leaves room for.
+        let prompt: Vec<usize> = (0..60).map(|i| (i % 11) + 1).collect();
+        server.submit_generate(GenRequest {
+            id: 0,
+            prompt: prompt.clone(),
+            max_new_tokens: 50,
+            submitted_at: Instant::now(),
+        });
+        // Empty and over-long prompts are rejected whole.
+        server.submit_generate(GenRequest {
+            id: 1,
+            prompt: vec![],
+            max_new_tokens: 4,
+            submitted_at: Instant::now(),
+        });
+        server.submit_generate(GenRequest {
+            id: 2,
+            prompt: vec![1; max_seq + 1],
+            max_new_tokens: 4,
+            submitted_at: Instant::now(),
+        });
+        let mut resps = server.collect_generations(3);
+        resps.sort_by_key(|r| r.id);
+        server.shutdown();
+        // 60-token prompt: 1 prefill token + (64−60) steps = 5 tokens.
+        assert_eq!(resps[0].tokens.len(), max_seq - prompt.len() + 1);
+        assert!(resps[1].tokens.is_empty());
+        assert!(resps[2].tokens.is_empty());
+    }
+
+    #[test]
+    fn shutdown_finishes_inflight_generations() {
+        // Immediate shutdown after submitting: the scheduler must
+        // drain every queued request to completion before exiting
+        // (flush semantics, mirroring the attention path).
+        let model = tiny_model(44);
+        let server = gen_server(AttentionBackend::Exact, model);
+        for i in 0..5u64 {
+            server.submit_generate(GenRequest {
+                id: i,
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 8,
+                submitted_at: Instant::now(),
+            });
+        }
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.gen_completed, 5);
+        assert_eq!(s.gen_tokens, 5 * 8);
     }
 
     #[test]

@@ -29,9 +29,11 @@
 //! * [`attention`] — exact attention oracle, conv-basis attention
 //!   (Algorithm 1), masks (causal / LongLora / continuous-row /
 //!   distinct-r / row-change), RoPE, the full (non-causal)
-//!   self-attention split of Appendix A, and the **batched multi-head
+//!   self-attention split of Appendix A, the **batched multi-head
 //!   engine** ([`attention::batched`]) that evaluates all heads of a
-//!   batch of sequences in one call.
+//!   batch of sequences in one call, and the **incremental decode
+//!   path** ([`attention::decode`]) that attends one appended token in
+//!   `O(k·n + n·d)` from a cached basis.
 //! * [`lowrank`] — the [AS23] `(ε,k)`-approximation via polynomial
 //!   features and the mask-aware multiplies of Appendix D
 //!   (prefix-sum, support-delta, segment-tree, distinct-r).
@@ -49,30 +51,31 @@
 //!   engine, plus the (feature-gated) PJRT CPU client loading the AOT
 //!   artifacts produced by `python/compile/aot.py` (HLO text).
 //!
-//! ## Batched engine architecture
+//! ## Architecture
 //!
-//! The serving hot path routes through
-//! [`attention::batched::BatchedEngine`]:
+//! The full request flow — prefill *and* decode — is documented in
+//! `ARCHITECTURE.md` at the repository root; the short version:
 //!
-//! ```text
-//!   requests ─▶ Router ─▶ DynamicBatcher ─▶ server workers
-//!                                              │ one attend_batch per batch
-//!                                              ▼
-//!                                        BatchedEngine
-//!                       ┌───────────────────┼────────────────────┐
-//!                       ▼                   ▼                    ▼
-//!                 WorkerPool         SharedFftPlanner        BasisCache
-//!            (std::thread fan-out,  (one plan per length   ((layer, head,
-//!             deterministic result    for the whole          seq_len, QK-fp)
-//!             ordering by index)      engine)                → post-exp basis)
-//! ```
+//! * **Prefill / one-shot attention**: requests → `Router` →
+//!   `DynamicBatcher` → server workers → one
+//!   [`attention::batched::BatchedEngine::attend_batch`] per batch.
+//!   Every (sequence, head) pair is one
+//!   [`attention::batched::AttnJob`]; jobs are pure, so results are
+//!   bit-identical for any worker count. *Recover once, apply per V*
+//!   happens engine-wide through the shared
+//!   [`coordinator::BasisCache`].
+//! * **Autoregressive decode**: generation requests
+//!   ([`coordinator::GenRequest`]) → the server's decode scheduler →
+//!   `model::Transformer::prefill_batch` (seeds per-head
+//!   [`attention::decode::DecodeState`]s from the basis cache) → one
+//!   [`attention::batched::BatchedEngine::decode_batch`] per layer per
+//!   generated token — `O(k·n + n·d)` per (layer, head) step, never a
+//!   re-prefill, with drift-triggered re-recovery surfaced in
+//!   [`coordinator::Metrics`].
 //!
-//! Every (sequence, head) pair is one [`attention::batched::AttnJob`];
-//! jobs are pure, so results are bit-identical for any worker count.
-//! `Transformer::forward_batch` batches all heads of all sequences of a
-//! layer into one engine call; the coordinator's server does the same
-//! per request batch. *Recover once, apply per V* happens engine-wide
-//! through the shared basis cache.
+//! `examples/serve_requests.rs` drives both paths end-to-end (prompt
+//! in, tokens out, metrics report); `benches/decode_step.rs` prices a
+//! decode step against full re-prefill (numbers in `EXPERIMENTS.md`).
 //!
 //! ## Verifying
 //!
@@ -83,8 +86,12 @@
 //! ```
 //!
 //! Benches (plain `main()` harnesses) run with
-//! `cargo bench --bench batched_engine` etc.; the PJRT integration
-//! tests self-skip unless artifacts exist and the `pjrt` feature is on.
+//! `cargo bench --bench batched_engine`,
+//! `cargo bench --bench decode_step`, etc.; record their tables in
+//! `EXPERIMENTS.md` per PR. The PJRT integration tests self-skip
+//! unless artifacts exist and the `pjrt` feature is on. Docs are kept
+//! warning-free by CI (`cargo doc --no-deps` with `-D warnings` plus
+//! the doctest suite).
 
 pub mod attention;
 pub mod basis;
@@ -102,8 +109,11 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::attention::batched::{
-        AttnJob, BatchedBackend, BatchedEngine, EngineConfig, JobOutput,
+        AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, DecodeOutput, EngineConfig,
+        JobOutput,
     };
+    pub use crate::attention::decode::DecodeState;
+    pub use crate::model::{AttentionBackend, DecodeSession, ModelConfig, Transformer};
     pub use crate::attention::rope::{rope_structured_qk, Rope};
     pub use crate::attention::{
         conv_attention, exact_attention, exact_attention_unmasked, ConvAttentionOutput, Mask,

@@ -55,6 +55,7 @@ fn cmd_serve(args: &[String]) {
         workers,
         cache_capacity: 128,
         lowrank_degree: 2,
+        gen: None,
     });
     let trace = WorkloadTrace::generate(
         n_requests,

@@ -4,7 +4,7 @@
 //! they replace the attention operator of an already-trained model with
 //! no parameter updates, exactly the paper's protocol.
 
-use crate::attention::batched::BatchedBackend;
+use crate::attention::batched::{BatchedBackend, DecodeOp};
 use crate::attention::{conv_attention, exact_attention, Mask};
 use crate::basis::RecoverConfig;
 use crate::lowrank::{LowRankAttention, LowRankConfig};
@@ -49,6 +49,29 @@ impl AttentionBackend {
             AttentionBackend::LowRank(cfg) => {
                 BatchedBackend::LowRank(LowRankConfig::new(cfg.degree, 1.0))
             }
+        }
+    }
+
+    /// The decode-time operator matching this backend, used by
+    /// `Transformer::decode_step` to drive one-token-at-a-time serving
+    /// through the engine:
+    ///
+    /// * `Exact` and `LowRank` decode through the exact last-row kernel
+    ///   (`O(n·d_h)` per step — the KV-cache cost; low-rank has no
+    ///   incremental form, and the exact row is both cheaper than its
+    ///   feature construction and bit-stable);
+    /// * the conv backends decode through a cached-basis
+    ///   [`DecodeState`](crate::attention::decode::DecodeState) in
+    ///   `O(k·n + n·d_h)`, seeded from the prefill's `BasisCache` entry
+    ///   and re-recovered on drift. `ConvBasis` maps its `k_max` onto
+    ///   the strided decode schedule (adaptive recovery has no
+    ///   incremental analogue; the strided schedule is the serving
+    ///   protocol).
+    pub fn to_decode(&self) -> DecodeOp {
+        match self {
+            AttentionBackend::Exact | AttentionBackend::LowRank(_) => DecodeOp::Exact,
+            AttentionBackend::ConvBasis(cfg) => DecodeOp::conv(cfg.k_max),
+            AttentionBackend::ConvStrided(k) => DecodeOp::conv(*k),
         }
     }
 

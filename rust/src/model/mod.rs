@@ -13,6 +13,13 @@
 //! with standard attention, then replace the attention mechanism at
 //! inference with the conv approximation for varying k — **no parameter
 //! updates**.
+//!
+//! For serving, the model also exposes the autoregressive decode path:
+//! [`Transformer::prefill_batch`] builds a [`DecodeSession`] (KV caches
+//! + per-head conv decode states seeded from the engine's basis cache)
+//! and [`Transformer::decode_step`] advances a batch of sessions one
+//! token per call through `BatchedEngine::decode_batch` — no per-token
+//! re-prefill.
 
 mod backend;
 mod optim;
@@ -22,7 +29,7 @@ mod transformer;
 pub use backend::AttentionBackend;
 pub use optim::Adam;
 pub use train::{eval_classifier, train_classifier, train_lm, TrainConfig, TrainLog};
-pub use transformer::{ForwardRecord, ModelConfig, Transformer};
+pub use transformer::{DecodeSession, ForwardRecord, ModelConfig, Transformer};
 
 #[cfg(test)]
 mod tests {

@@ -6,7 +6,7 @@
 //! for the sentiment task).
 
 use super::backend::AttentionBackend;
-use crate::attention::batched::{AttnJob, BatchedEngine};
+use crate::attention::batched::{AttnJob, BatchedEngine, DecodeJob, DecodeOp};
 use crate::attention::rope::Rope;
 use crate::tensor::{Matrix, Rng};
 
@@ -126,7 +126,80 @@ pub struct Gradients {
     pub cls_head: Matrix,
 }
 
+/// Per-(layer) KV cache of one decode session; grows one row per step.
+struct LayerKv {
+    /// Post-RoPE key rows (`n × d_model`).
+    k_rot: Matrix,
+    /// Value rows (`n × d_model`).
+    v: Matrix,
+    /// Post-RoPE *unscaled* query rows — retained only for conv decode
+    /// (drift re-recovery probes the full Q); empty (0-row) otherwise.
+    q_rot: Matrix,
+    /// Per-head conv decode state (`None` for exact decode).
+    states: Vec<Option<crate::attention::decode::DecodeState>>,
+}
+
+/// Autoregressive decode state of one in-flight sequence: the tokens
+/// so far, per-layer KV caches, and per-(layer, head) conv decode
+/// states. Created by [`Transformer::prefill_batch`]; grown one token
+/// per [`Transformer::decode_step`].
+pub struct DecodeSession {
+    /// Caller-assigned id (the serving layer uses the request id).
+    pub id: u64,
+    tokens: Vec<usize>,
+    op: DecodeOp,
+    layers: Vec<LayerKv>,
+}
+
+impl DecodeSession {
+    /// Tokens consumed so far (prompt + fed generations).
+    pub fn tokens(&self) -> &[usize] {
+        &self.tokens
+    }
+
+    /// Current sequence length.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// The decode operator this session runs under.
+    pub fn op(&self) -> &DecodeOp {
+        &self.op
+    }
+}
+
 const RMS_EPS: f64 = 1e-6;
+
+/// One row of `row · m` with **exactly** [`Matrix::matmul`]'s i-k-j
+/// accumulation order (including its skip on exact zeros), so a decode
+/// step's row arithmetic is bit-identical to the full-matrix forward.
+fn row_matmul(row: &[f64], m: &Matrix) -> Vec<f64> {
+    assert_eq!(row.len(), m.rows());
+    let n = m.cols();
+    let mut out = vec![0.0; n];
+    for (k, &aik) in row.iter().enumerate() {
+        if aik == 0.0 {
+            continue;
+        }
+        let b_row = m.row(k);
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot += aik * b_row[j];
+        }
+    }
+    out
+}
+
+/// One row of RMSNorm with exactly [`rmsnorm_fwd`]'s float-op order.
+fn rmsnorm_row(row: &[f64], g: &[f64]) -> Vec<f64> {
+    let d = row.len();
+    let ms: f64 = row.iter().map(|v| v * v).sum::<f64>() / d as f64;
+    let r = (ms + RMS_EPS).sqrt();
+    row.iter().zip(g).map(|(&x, &gj)| x * gj / r).collect()
+}
 
 fn rmsnorm_fwd(x: &Matrix, g: &[f64]) -> (Matrix, Vec<f64>) {
     let (n, d) = x.shape();
@@ -448,6 +521,284 @@ impl Transformer {
                     lnf_in,
                     tokens: tokens.clone(),
                 }
+            })
+            .collect()
+    }
+
+    /// Prefill a batch of prompts for autoregressive decoding: run the
+    /// batched-engine forward (one `attend_batch` per layer, exactly
+    /// like [`Self::forward_batch`]) while **retaining** per-layer KV
+    /// caches, and — for conv backends — seed every (layer, head)
+    /// [`DecodeState`](crate::attention::decode::DecodeState) straight
+    /// from the engine's `BasisCache` (the prefill jobs just recovered
+    /// and cached those bases, so seeding is a cache hit, counted in
+    /// `Metrics::decode_seed_hits`).
+    ///
+    /// Returns, per prompt, the [`DecodeSession`] plus the last
+    /// position's LM logits (what the first sampled token comes from).
+    /// The logits are bit-identical to [`Self::forward`]'s last row
+    /// under the same backend.
+    pub fn prefill_batch(
+        &self,
+        seqs: &[Vec<usize>],
+        backend: &AttentionBackend,
+        engine: &BatchedEngine,
+    ) -> Vec<(DecodeSession, Vec<f64>)> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+        let spec = backend.to_batched();
+        let op = backend.to_decode();
+        let conv = matches!(op, DecodeOp::Conv { .. });
+
+        let mut xs: Vec<Matrix> = seqs
+            .iter()
+            .map(|tokens| {
+                assert!(!tokens.is_empty(), "cannot prefill an empty prompt");
+                let n = tokens.len();
+                assert!(n <= self.cfg.max_seq, "sequence too long");
+                let mut x = Matrix::zeros(n, d);
+                for (i, &t) in tokens.iter().enumerate() {
+                    x.row_mut(i).copy_from_slice(self.embed.row(t));
+                }
+                x
+            })
+            .collect();
+        let mut sessions: Vec<DecodeSession> = seqs
+            .iter()
+            .map(|tokens| DecodeSession {
+                id: 0,
+                tokens: tokens.clone(),
+                op: op.clone(),
+                layers: Vec::with_capacity(self.layers.len()),
+            })
+            .collect();
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // Gather: identical math to `forward_batch`, plus KV-cache
+            // retention per session.
+            let mut jobs = Vec::with_capacity(seqs.len() * nh);
+            for (s, x) in xs.iter().enumerate() {
+                let n = x.rows();
+                let (ln1_out, _) = rmsnorm_fwd(x, &layer.ln1_g);
+                let q = ln1_out.matmul(&layer.wq);
+                let k = ln1_out.matmul(&layer.wk);
+                let v = ln1_out.matmul(&layer.wv);
+                let mut q_rot = q;
+                let mut k_rot = k;
+                for h in 0..nh {
+                    for i in 0..n {
+                        let qs = &mut q_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                        self.rope.rotate_row(qs, i);
+                    }
+                    for i in 0..n {
+                        let ks = &mut k_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                        self.rope.rotate_row(ks, i);
+                    }
+                }
+                for h in 0..nh {
+                    let qh = Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale);
+                    let kh = Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]);
+                    let vh = Matrix::from_fn(n, dh, |i, j| v[(i, h * dh + j)]);
+                    jobs.push(AttnJob::causal(li as u32, h as u32, qh, kh, vh, spec.clone()));
+                }
+                sessions[s].layers.push(LayerKv {
+                    k_rot,
+                    v,
+                    q_rot: if conv { q_rot } else { Matrix::zeros(0, d) },
+                    states: (0..nh).map(|_| None).collect(),
+                });
+            }
+            let outs = engine.attend_batch(jobs);
+            // Seed conv decode states from the bases the jobs above
+            // just recovered and cached.
+            if let DecodeOp::Conv { k_bases, .. } = &op {
+                for s in 0..seqs.len() {
+                    for h in 0..nh {
+                        let (qh, kh) = {
+                            let kv = &sessions[s].layers[li];
+                            let n = kv.k_rot.rows();
+                            (
+                                Matrix::from_fn(n, dh, |i, j| kv.q_rot[(i, h * dh + j)] * scale),
+                                Matrix::from_fn(n, dh, |i, j| kv.k_rot[(i, h * dh + j)]),
+                            )
+                        };
+                        let (state, _hit) =
+                            engine.seed_decode(li as u32, h as u32, &qh, &kh, *k_bases);
+                        sessions[s].layers[li].states[h] = Some(state);
+                    }
+                }
+            }
+            // Scatter: finish the layer per sequence.
+            for (s, x) in xs.iter_mut().enumerate() {
+                let n = x.rows();
+                let mut attn_concat = Matrix::zeros(n, d);
+                for h in 0..nh {
+                    let out_h = &outs[s * nh + h].y;
+                    for i in 0..n {
+                        for j in 0..dh {
+                            attn_concat[(i, h * dh + j)] = out_h[(i, j)];
+                        }
+                    }
+                }
+                let attn_out = attn_concat.matmul(&layer.wo);
+                let x_mid = x.add(&attn_out);
+                let (ln2_out, _) = rmsnorm_fwd(&x_mid, &layer.ln2_g);
+                let ff_out = ln2_out.matmul(&layer.w1).map(gelu).matmul(&layer.w2);
+                *x = x_mid.add(&ff_out);
+            }
+        }
+
+        xs.into_iter()
+            .zip(sessions)
+            .map(|(x, sess)| {
+                let n = x.rows();
+                let (final_hidden, _) = rmsnorm_fwd(&x, &self.lnf_g);
+                let logits = final_hidden.matmul(&self.head);
+                let last = logits.row(n - 1).to_vec();
+                (sess, last)
+            })
+            .collect()
+    }
+
+    /// Prefill a single prompt (see [`Self::prefill_batch`]).
+    pub fn prefill(
+        &self,
+        tokens: &[usize],
+        backend: &AttentionBackend,
+        engine: &BatchedEngine,
+    ) -> (DecodeSession, Vec<f64>) {
+        let seqs = [tokens.to_vec()];
+        self.prefill_batch(&seqs, backend, engine).pop().expect("one prompt in, one session out")
+    }
+
+    /// One autoregressive decode step for a batch of in-flight
+    /// sessions: feed `next_tokens[i]` to `sessions[i]`, run every
+    /// (session, head) attention as **one [`BatchedEngine::decode_batch`]
+    /// call per layer** — no per-token re-prefill anywhere — and return
+    /// each session's next-token LM logits.
+    ///
+    /// All non-attention arithmetic is row-local and replicates the
+    /// full forward's float-op order exactly (see the private
+    /// `row_matmul` / `rmsnorm_row` helpers), so with the exact
+    /// backend the returned logits
+    /// **bit-match** `forward(&tokens_so_far)` at the grown length —
+    /// the `tests/decode.rs` property pins this for thread counts
+    /// 1/2/8. Conv sessions grow their cached bases in `O(k·n + n·d)`
+    /// per (layer, head) and re-recover on drift (counters in the
+    /// engine's `Metrics`).
+    pub fn decode_step(
+        &self,
+        sessions: &mut [DecodeSession],
+        next_tokens: &[usize],
+        engine: &BatchedEngine,
+    ) -> Vec<Vec<f64>> {
+        assert_eq!(sessions.len(), next_tokens.len());
+        if sessions.is_empty() {
+            return Vec::new();
+        }
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+
+        // The new token's hidden row per session.
+        let mut xs: Vec<Vec<f64>> = sessions
+            .iter()
+            .zip(next_tokens)
+            .map(|(sess, &t)| {
+                assert!(sess.len() < self.cfg.max_seq, "sequence at max_seq");
+                assert!(t < self.cfg.vocab_size, "token out of vocab");
+                self.embed.row(t).to_vec()
+            })
+            .collect();
+        let positions: Vec<usize> = sessions.iter().map(|s| s.len()).collect();
+
+        for li in 0..self.layers.len() {
+            let layer = &self.layers[li];
+            // Gather: one DecodeJob per (session, head).
+            let mut jobs = Vec::with_capacity(sessions.len() * nh);
+            for (si, sess) in sessions.iter_mut().enumerate() {
+                let conv = matches!(sess.op, DecodeOp::Conv { .. });
+                let ln1 = rmsnorm_row(&xs[si], &layer.ln1_g);
+                let mut q = row_matmul(&ln1, &layer.wq);
+                let mut k = row_matmul(&ln1, &layer.wk);
+                let v = row_matmul(&ln1, &layer.wv);
+                let pos = positions[si];
+                for h in 0..nh {
+                    self.rope.rotate_row(&mut q[h * dh..(h + 1) * dh], pos);
+                    self.rope.rotate_row(&mut k[h * dh..(h + 1) * dh], pos);
+                }
+                let kv = &mut sess.layers[li];
+                kv.k_rot.push_row(&k);
+                kv.v.push_row(&v);
+                if conv {
+                    kv.q_rot.push_row(&q);
+                }
+                let n1 = kv.k_rot.rows();
+                for h in 0..nh {
+                    // Pre-exp logits row of the new token against the
+                    // grown prefix, in matmul's accumulation order.
+                    let mut new_row = vec![0.0; n1];
+                    for (c, &qraw) in q[h * dh..(h + 1) * dh].iter().enumerate() {
+                        let qc = qraw * scale;
+                        if qc == 0.0 {
+                            continue;
+                        }
+                        for (i, slot) in new_row.iter_mut().enumerate() {
+                            *slot += qc * kv.k_rot[(i, h * dh + c)];
+                        }
+                    }
+                    let vh = Matrix::from_fn(n1, dh, |i, j| kv.v[(i, h * dh + j)]);
+                    let (qm, km, state) = if conv {
+                        (
+                            Some(Matrix::from_fn(n1, dh, |i, j| {
+                                kv.q_rot[(i, h * dh + j)] * scale
+                            })),
+                            Some(Matrix::from_fn(n1, dh, |i, j| kv.k_rot[(i, h * dh + j)])),
+                            kv.states[h].take(),
+                        )
+                    } else {
+                        (None, None, None)
+                    };
+                    jobs.push(DecodeJob {
+                        layer: li as u32,
+                        head: h as u32,
+                        state,
+                        new_row,
+                        v: vh,
+                        q: qm,
+                        k: km,
+                        op: sess.op.clone(),
+                    });
+                }
+            }
+            let mut outs = engine.decode_batch(jobs);
+            // Scatter: finish the layer per session, hand states back.
+            for (si, sess) in sessions.iter_mut().enumerate() {
+                let mut attn_row = vec![0.0; d];
+                for h in 0..nh {
+                    let out = &mut outs[si * nh + h];
+                    attn_row[h * dh..(h + 1) * dh].copy_from_slice(&out.y_last);
+                    sess.layers[li].states[h] = out.state.take();
+                }
+                let attn_out = row_matmul(&attn_row, &layer.wo);
+                let x_mid: Vec<f64> = xs[si].iter().zip(&attn_out).map(|(a, b)| a + b).collect();
+                let ln2 = rmsnorm_row(&x_mid, &layer.ln2_g);
+                let ff_pre = row_matmul(&ln2, &layer.w1);
+                let ff_act: Vec<f64> = ff_pre.iter().map(|&x| gelu(x)).collect();
+                let ff_out = row_matmul(&ff_act, &layer.w2);
+                xs[si] = x_mid.iter().zip(&ff_out).map(|(a, b)| a + b).collect();
+            }
+        }
+        for (sess, &t) in sessions.iter_mut().zip(next_tokens) {
+            sess.tokens.push(t);
+        }
+        xs.into_iter()
+            .map(|x| {
+                let hid = rmsnorm_row(&x, &self.lnf_g);
+                row_matmul(&hid, &self.head)
             })
             .collect()
     }
@@ -824,6 +1175,67 @@ mod tests {
         let a = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
         let b = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
         assert!(max_abs_diff(&a.logits, &b.logits) == 0.0);
+    }
+
+    #[test]
+    fn prefill_logits_bitmatch_forward() {
+        use crate::attention::batched::{BatchedEngine, EngineConfig};
+        let m = tiny_model(208);
+        let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
+        for backend in [AttentionBackend::Exact, AttentionBackend::ConvStrided(4)] {
+            let prompt = vec![1usize, 2, 3, 4, 5];
+            let (sess, last) = m.prefill(&prompt, &backend, &engine);
+            assert_eq!(sess.len(), prompt.len());
+            let want = m.forward(&prompt, &backend, false);
+            assert_eq!(
+                last,
+                want.logits.row(prompt.len() - 1).to_vec(),
+                "prefill logits must be bit-identical to forward"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_steps_bitmatch_full_forward() {
+        // T exact decode steps from a length-n prefill must reproduce a
+        // fresh length-(n+t) forward bit-for-bit at every step.
+        use crate::attention::batched::{BatchedEngine, EngineConfig};
+        let m = tiny_model(209);
+        let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
+        let prompt = vec![3usize, 1, 4, 1];
+        let feed = [5usize, 9, 2, 6];
+        let (mut sess, _) = m.prefill(&prompt, &AttentionBackend::Exact, &engine);
+        let mut toks = prompt.clone();
+        for &t in &feed {
+            let logits = m.decode_step(std::slice::from_mut(&mut sess), &[t], &engine);
+            toks.push(t);
+            let want = m.forward(&toks, &AttentionBackend::Exact, false);
+            assert_eq!(
+                logits[0],
+                want.logits.row(toks.len() - 1).to_vec(),
+                "decode step must bit-match full re-prefill at n={}",
+                toks.len()
+            );
+        }
+        assert_eq!(sess.tokens(), &toks[..]);
+    }
+
+    #[test]
+    fn conv_decode_steps_are_finite_and_seeded() {
+        use crate::attention::batched::{BatchedEngine, EngineConfig};
+        let m = tiny_model(210);
+        let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 64 });
+        let backend = AttentionBackend::ConvStrided(4);
+        let (mut sess, last) = m.prefill(&[1, 2, 3, 4, 5, 6], &backend, &engine);
+        assert!(last.iter().all(|x| x.is_finite()));
+        // Prefill seeded every (layer, head) straight from the cache.
+        let snap = engine.metrics().snapshot();
+        assert_eq!(snap.decode_seed_hits + snap.decode_seed_misses, 4, "2 layers × 2 heads");
+        assert_eq!(snap.decode_seed_hits, 4, "strided prefill must have cached all bases");
+        let logits = m.decode_step(std::slice::from_mut(&mut sess), &[7], &engine);
+        assert!(logits[0].iter().all(|x| x.is_finite()));
+        let snap = engine.metrics().snapshot();
+        assert_eq!(snap.decode_steps, 4, "2 layers × 2 heads");
     }
 
     #[test]

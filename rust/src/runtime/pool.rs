@@ -10,6 +10,34 @@
 //!
 //! Plain std threads + mpsc: the workload is CPU-bound attention math
 //! and this image vendors no async runtime or rayon.
+//!
+//! # Worked example
+//!
+//! ```
+//! use conv_basis::runtime::pool::WorkerPool;
+//!
+//! let pool = WorkerPool::new(4);
+//! // `map` blocks until every item is done and restores input order,
+//! // whatever order the workers finished in.
+//! let out = pool.map((0..16u64).collect(), |idx, x| (idx as u64) + x * 10);
+//! assert_eq!(out[3], 3 + 30);
+//! // Identical inputs on any pool size give identical outputs — the
+//! // invariant `tests/properties.rs` pins for the attention engine.
+//! let again = WorkerPool::new(1).map((0..16u64).collect(), |idx, x| (idx as u64) + x * 10);
+//! assert_eq!(out, again);
+//! ```
+//!
+//! # Invariants callers rely on
+//!
+//! * **Input-order results**: `map(items, f)[i] == f(i, items[i])`.
+//! * **Purity is the caller's contract**: `f` must not read mutable
+//!   shared state keyed on timing or worker identity, or the
+//!   bit-determinism guarantee above evaporates.
+//! * **No nested maps**: a job must not call `map` on the same pool
+//!   (all workers may be busy running callers — deadlock).
+//! * **Panic containment**: a panicking job panics the *caller* of
+//!   `map`, not the worker thread; the pool stays fully operational
+//!   for subsequent maps (see `workers_survive_panicking_jobs`).
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

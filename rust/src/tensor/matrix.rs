@@ -278,6 +278,14 @@ impl Matrix {
         out
     }
 
+    /// Append one row (the decode-path KV caches grow one token per
+    /// step; row-major storage makes this a plain `Vec` extend).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     /// Extract a contiguous sub-matrix (rows `r0..r1`, cols `c0..c1`).
     pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
         assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
@@ -423,6 +431,15 @@ mod tests {
         let a = Matrix::randn(8, 8, &mut rng);
         let recon = a.tril().add(&a.triu_strict());
         assert_eq!(recon, a);
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut m = Matrix::zeros(0, 3);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
     }
 
     #[test]

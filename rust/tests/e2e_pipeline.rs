@@ -76,6 +76,7 @@ fn coordinator_serves_mixed_trace_with_conv_speedup_metrics() {
         workers: 3,
         cache_capacity: 32,
         lowrank_degree: 2,
+        gen: None,
     });
     let trace = WorkloadTrace::generate(
         60,

@@ -79,6 +79,7 @@ fn server_conv_batches_reuse_engine_cache() {
         workers: 2,
         cache_capacity: 16,
         lowrank_degree: 2,
+        gen: None,
     });
     for i in 0..8u64 {
         server.submit(AttnRequest {

@@ -5,7 +5,10 @@
 //! independently-seeded random instances with shrink-free reporting
 //! (the failing seed is printed — re-run with that seed to reproduce).
 
-use conv_basis::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, EngineConfig};
+use conv_basis::attention::batched::{
+    AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig,
+};
+use conv_basis::attention::decode::DecodeState;
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::attention::{
     conv_attention, conv_attention_masked, exact_attention, merge_bases, Mask,
@@ -392,6 +395,68 @@ fn prop_batched_deterministic_across_thread_counts() {
                     0.0,
                     "thread count changed the output (seed {seed})"
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_decode_batch_deterministic() {
+    // Decode jobs (mixed exact + conv, several heads) on pools of 1, 2
+    // and 8 workers must give bit-identical outputs — decode steps are
+    // pure and the pool restores input order, exactly like the prefill
+    // path.
+    let engines: Vec<BatchedEngine> = [1usize, 2, 8]
+        .iter()
+        .map(|&w| BatchedEngine::new(EngineConfig { workers: w, cache_capacity: 128 }))
+        .collect();
+    for seed in [51u64, 52, 53] {
+        let mk_jobs = || -> Vec<DecodeJob> {
+            let mut rng = conv_basis::tensor::Rng::seeded(seed);
+            let (n, d) = (24, 4);
+            (0..6u32)
+                .map(|h| {
+                    let (q_full, k_full) = rope_structured_qk(n + 1, d, 2, &mut rng);
+                    let q = q_full.slice(0, n, 0, d);
+                    let k = k_full.slice(0, n, 0, d);
+                    let new_row: Vec<f64> = (0..=n)
+                        .map(|j| conv_basis::tensor::dot(q_full.row(n), k_full.row(j)))
+                        .collect();
+                    let v = Matrix::randn(n + 1, d, &mut rng);
+                    if h % 2 == 0 {
+                        DecodeJob {
+                            layer: 0,
+                            head: h,
+                            state: None,
+                            new_row,
+                            v,
+                            q: None,
+                            k: None,
+                            op: DecodeOp::Exact,
+                        }
+                    } else {
+                        let zeros = Matrix::zeros(n, d);
+                        let out = conv_basis::attention::conv_attention_strided(&q, &k, &zeros, 1)
+                            .unwrap();
+                        DecodeJob {
+                            layer: 0,
+                            head: h,
+                            state: Some(DecodeState::new(out.post_basis, out.d_tilde)),
+                            new_row,
+                            v,
+                            q: Some(q_full),
+                            k: Some(k_full),
+                            op: DecodeOp::conv(1),
+                        }
+                    }
+                })
+                .collect()
+        };
+        let base = engines[0].decode_batch(mk_jobs());
+        for e in &engines[1..] {
+            let outs = e.decode_batch(mk_jobs());
+            for (a, b) in outs.iter().zip(&base) {
+                assert_eq!(a.y_last, b.y_last, "worker count changed decode (seed {seed})");
             }
         }
     }
