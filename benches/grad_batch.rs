@@ -1,0 +1,123 @@
+//! Gradient-lane bench: single-threaded `grad_fast` loop vs the
+//! engine's batched gradient lane (`EngineOp::Gradient` through
+//! `BatchedEngine::submit`), at n ∈ {256, 1024} over a 4-layer ×
+//! 4-head problem set.
+//!
+//! Three variants per n:
+//!   * `single`       — sequential `grad_fast` per (layer, head), fresh
+//!                      FFT planner and fresh recovery every call: the
+//!                      pre-engine training path;
+//!   * `batched cold` — a fresh engine per iteration (pool spawn +
+//!                      empty plan/basis caches): pure fan-out +
+//!                      shared-plan win;
+//!   * `batched warm` — a persistent engine: steady state, where the
+//!                      basis cache turns the repeat (layer, head, X)
+//!                      evaluations of this bench into recovery-free
+//!                      `f·w` applies (`recover_probes = 0`).
+//!
+//! The batched lane is bit-identical to `single` (pinned by
+//! `prop_batched_grad_matches_single`), so the columns are directly
+//! comparable. Numbers land in EXPERIMENTS.md §PR 3.
+
+use conv_basis::attention::batched::{BatchedEngine, EngineConfig, EngineJob};
+use conv_basis::basis::RecoverConfig;
+use conv_basis::gradient::batched::{FastGradConfig, GradJob};
+use conv_basis::gradient::{grad_fast, AttentionLossProblem};
+use conv_basis::tensor::{Matrix, Rng};
+use conv_basis::util::{fmt_dur, sink, time_median, Table};
+use std::sync::Arc;
+
+const LAYERS: u32 = 4;
+const HEADS: u32 = 4;
+const D: usize = 8;
+
+fn make_jobs(n: usize, cfg: &RecoverConfig) -> Vec<GradJob> {
+    let mut jobs = Vec::with_capacity((LAYERS * HEADS) as usize);
+    for layer in 0..LAYERS {
+        for head in 0..HEADS {
+            let mut rng = Rng::seeded(n as u64 * 1000 + (layer * HEADS + head) as u64);
+            let problem = Arc::new(AttentionLossProblem::random_structured(n, D, &mut rng));
+            // Symmetric-ish X keeps A₁XA₂ᵀ near-Toeplitz ⇒ small k.
+            let x = Matrix::eye(D).scale(0.5);
+            jobs.push(GradJob {
+                layer,
+                head,
+                problem,
+                x,
+                cfg: FastGradConfig { recover: *cfg, use_cache: true },
+            });
+        }
+    }
+    jobs
+}
+
+fn submit_grads(engine: &BatchedEngine, jobs: &[GradJob]) -> usize {
+    engine
+        .submit(
+            jobs.iter()
+                .cloned()
+                .enumerate()
+                .map(|(i, j)| EngineJob::gradient(i as u64, j))
+                .collect(),
+        )
+        .len()
+}
+
+fn main() {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+    println!("# Batched gradient lane vs single-problem grad_fast loop");
+    println!(
+        "(d={D}, {LAYERS} layers × {HEADS} heads = {} jobs per step, {workers} pool workers)",
+        LAYERS * HEADS
+    );
+    let mut table = Table::new(&[
+        "n", "jobs", "single", "batched cold", "batched warm", "cold ×", "warm ×",
+    ]);
+    for &n in &[256usize, 1024] {
+        let cfg = RecoverConfig { k_max: 8, t: 2, delta: 1e-6, eps: 1e-12 };
+        let jobs = make_jobs(n, &cfg);
+        let n_jobs = jobs.len();
+        let iters = if n >= 1024 { 3 } else { 5 };
+
+        // Single-problem loop: the pre-engine training path.
+        let t_single = time_median(iters, || {
+            let mut acc = 0.0;
+            for j in &jobs {
+                let (g, _) = grad_fast(&j.problem, &j.x, &j.cfg.recover).unwrap();
+                acc += g[(0, 0)];
+            }
+            acc
+        });
+
+        // Cold engine per iteration.
+        let ecfg = EngineConfig { workers, cache_capacity: 2 * n_jobs };
+        let t_cold = time_median(iters, || {
+            let engine = BatchedEngine::new(ecfg);
+            sink(submit_grads(&engine, &jobs))
+        });
+
+        // Warm engine: the warmup call fills the basis cache, timed
+        // iterations evaluate the same (problem, X) set recovery-free.
+        let engine = BatchedEngine::new(ecfg);
+        let t_warm = time_median(iters, || sink(submit_grads(&engine, &jobs)));
+
+        let cold_x = t_single.as_secs_f64() / t_cold.as_secs_f64();
+        let warm_x = t_single.as_secs_f64() / t_warm.as_secs_f64();
+        table.row(&[
+            n.to_string(),
+            n_jobs.to_string(),
+            fmt_dur(t_single),
+            fmt_dur(t_cold),
+            fmt_dur(t_warm),
+            format!("{cold_x:.2}×"),
+            format!("{warm_x:.2}×"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check: cold isolates worker fan-out + shared FFT plans on the \
+         d(d+2) f·w applies per job; warm adds recover-once basis reuse (a repeat \
+         (layer, head, X) evaluation skips recovery entirely). The lane is \
+         bit-identical to `single` — prop_batched_grad_matches_single pins it."
+    );
+}

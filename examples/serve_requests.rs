@@ -3,7 +3,7 @@
 //! 1. **Generation requests** (prompt in, tokens out) through the
 //!    coordinator's decode scheduler: batched prefill seeds per-head
 //!    decode states from the basis cache, then every generated token is
-//!    one `BatchedEngine::decode_batch` step per layer — no per-token
+//!    one decode-lane `BatchedEngine::submit` per layer — no per-token
 //!    re-prefill. The decode metrics line shows seed hits and drift
 //!    re-recoveries.
 //! 2. A **native attention burst** through the router/batcher path.

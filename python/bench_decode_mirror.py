@@ -1,10 +1,10 @@
-"""NumPy mirror of ``benches/decode_step.rs``.
+"""NumPy mirror of ``benches/decode_step.rs`` and ``benches/grad_batch.rs``.
 
-The Rust bench is the source of truth, but some build images carry no
-Rust toolchain; this mirror reproduces the *same four strategies* with
-the same asymptotics so decode-vs-reprefill scaling can be measured
-anywhere NumPy exists. Costs mirrored per generated token, per
-(sequence, head), on Toeplitz-structured logits (the conv-exact case):
+The Rust benches are the source of truth, but some build images carry
+no Rust toolchain; this mirror reproduces the *same strategies* with
+the same asymptotics so scaling claims stay measured anywhere NumPy
+exists. Costs mirrored per generated token, per (sequence, head), on
+Toeplitz-structured logits (the conv-exact case):
 
 * ``conv step``       — grow cached basis + banded weighted sum,
                         O(k*n + n*d)   (DecodeOp::Conv)
@@ -14,9 +14,18 @@ anywhere NumPy exists. Costs mirrored per generated token, per
                         O(k*n*d + k*n*log n*d)
 * ``exact reprefill`` — full masked softmax attention, O(n^2*d)
 
-Run: ``python3 python/bench_decode_mirror.py`` (prints a markdown
-table; numbers land in EXPERIMENTS.md, clearly labelled as the mirror,
-not the Rust bench).
+Gradient mirror (``benches/grad_batch.rs`` strategies, per (layer,
+head) Definition 5.1 backward at the point X — d applies for f·h plus
+d*(d+1) applies for the tensor-trick columns):
+
+* ``grad conv``  — every ``f·w`` through the k=1 conv basis via FFT,
+                   O(d^2 * n log n)   (the engine's Gradient lane)
+* ``grad dense`` — materialize f (n x n) once, dense matvecs,
+                   O(n^2 * d^2)       (the pre-Theorem-C.17 cost)
+
+Run: ``python3 python/bench_decode_mirror.py`` (prints markdown
+tables; numbers land in EXPERIMENTS.md, clearly labelled as the
+mirror, not the Rust bench).
 """
 
 import time
@@ -88,6 +97,54 @@ def bench(n, d=D, k=K):
     return [timeit(f, iters) for f in (conv_step, exact_row, conv_reprefill, exact_reprefill)]
 
 
+GRAD_D = 8
+
+
+def bench_grad(n, d=GRAD_D):
+    rng = np.random.default_rng(n + 1)
+    # Toeplitz pre-exp logits H[i, j] = g[i-j] (causal): the k=1
+    # conv-exact case, mirroring GradJob on a structured problem.
+    g = rng.normal(scale=0.5, size=n)
+    b = np.exp(g)              # post-exp basis (k=1, full window)
+    dvec = np.cumsum(b)        # row sums of the lower-triangular conv
+    h = rng.normal(size=(n, d))    # h(y) = A3·Y
+    e = rng.normal(size=(n, d))    # target E
+    a2 = rng.normal(size=(n, d))
+    fb = np.fft.rfft(b, 2 * n)
+
+    def f_apply(w):
+        # One f·w: k-conv FFT apply + diagonal normalizer.
+        return np.fft.irfft(fb * np.fft.rfft(w, 2 * n))[:n] / dvec
+
+    def tensor_trick(apply_f):
+        # Lemmas C.10–C.16 with a pluggable f·w (d + d*(d+1) applies).
+        fh = np.stack([apply_f(h[:, i]) for i in range(d)], axis=1)
+        c = fh - e
+        r = np.einsum("ij,ij->i", fh, c)
+        pa2 = np.empty((n, d))
+        for col in range(d):
+            w = a2[:, col]
+            acc = np.zeros(n)
+            for i in range(d):
+                acc += c[:, i] * apply_f(h[:, i] * w)
+            acc -= r * apply_f(w)
+            pa2[:, col] = acc
+        return pa2
+
+    def grad_conv():
+        return tensor_trick(f_apply)
+
+    def grad_dense():
+        # Materialize f once (part of the cost), then dense matvecs.
+        idx = np.subtract.outer(np.arange(n), np.arange(n))
+        f = np.where(idx >= 0, b[np.clip(idx, 0, n - 1)], 0.0) / dvec[:, None]
+        return tensor_trick(lambda w: f @ w)
+
+    assert np.allclose(grad_conv(), grad_dense(), atol=1e-8)
+    iters = 2 if n >= 4096 else 5
+    return [timeit(f, iters) for f in (grad_conv, grad_dense)]
+
+
 def main():
     print(f"# decode step vs re-prefill — NumPy mirror (d={D}, k={K})")
     header = ["n", "conv step", "exact row", "conv reprefill", "exact reprefill",
@@ -101,6 +158,15 @@ def main():
             f"{ts[3] / ts[0]:.0f}x",
         ]
         print("| " + " | ".join(row) + " |")
+
+    print()
+    print(f"# fast gradient vs dense-f gradient — NumPy mirror (d={GRAD_D}, k=1)")
+    header = ["n", "grad conv", "grad dense", "dense/conv"]
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for n in (256, 1024, 4096):
+        tc, td = bench_grad(n)
+        print(f"| {n} | {fmt(tc)} | {fmt(td)} | {td / tc:.0f}x |")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,25 @@
-//! Batched multi-head conv-attention engine.
+//! Batched multi-head conv-attention engine — **one typed door** for
+//! prefill, decode and gradient work.
 //!
 //! The paper's `O(k·n·d·log n)` bound only pays off in serving when its
 //! fixed costs are amortized: FFT plan tables, recovered conv bases, and
 //! thread startup. The seed code evaluated one head of one sequence at a
-//! time, re-planning and re-recovering per call. This engine evaluates
-//! **all heads of a batch of sequences in one call**:
+//! time, re-planning and re-recovering per call. This engine executes
+//! **a whole batch of typed jobs in one call** —
+//! [`BatchedEngine::submit`] takes `Vec<EngineJob>` where each job is a
+//! caller key plus an [`EngineOp`]:
+//!
+//! * [`EngineOp::Prefill`] — one (sequence, head) whole-prefix
+//!   attention job ([`AttnJob`]);
+//! * [`EngineOp::Decode`] — one (sequence, layer, head) autoregressive
+//!   decode step ([`DecodeJob`]);
+//! * [`EngineOp::Gradient`] — one (layer, head) Definition 5.1 backward
+//!   pass ([`GradJob`](crate::gradient::batched::GradJob)).
+//!
+//! Lanes mix freely in one batch (the server's generation scheduler
+//! merges non-generation attention arrivals into in-flight decode
+//! submits; `model::train` steps every head's gradient in one call).
+//! All three share:
 //!
 //! * one [`SharedFftPlanner`] plan cache for the whole engine — a plan
 //!   per transform length is built once (off-lock) and shared by every
@@ -12,29 +27,33 @@
 //!   lock-free ([`FftPlanner::with_shared`]);
 //! * a per-(model, layer, head, seq_len) recovered-basis cache
 //!   ([`BasisCache`], keyed by [`CacheKey`] with a (Q, K, backend)
-//!   content fingerprint) — *recover once, apply per V*, now shared
-//!   across heads, sequences and callers;
-//! * a fixed [`WorkerPool`] of `std::thread` workers fanning the
-//!   (sequence, head) jobs out with **deterministic result ordering**:
-//!   jobs are pure and results are re-ordered by input index, so thread
-//!   counts 1/2/8 produce bit-identical outputs (pinned by
-//!   `tests/properties.rs`).
+//!   content fingerprint, **lock-striped by (layer, head)** so hot
+//!   heads don't serialize on one mutex) — *recover once, apply per V*,
+//!   shared across heads, sequences, callers, and now across the
+//!   forward/backward boundary: a causal gradient job's operator is
+//!   keyed identically to the matching `Conv` prefill job;
+//! * a fixed [`WorkerPool`] of `std::thread` workers fanning jobs out
+//!   with **deterministic result ordering**: jobs are pure and results
+//!   are re-ordered by input index, so thread counts 1/2/8 produce
+//!   bit-identical outputs (pinned by `tests/properties.rs` for every
+//!   lane, mixed batches included).
 //!
 //! Cache-hit/miss counts surface through [`Metrics`]
-//! (`cache_hits`/`cache_misses`, plus `batched_calls`/`batched_jobs`).
+//! (`cache_hits`/`cache_misses`, plus per-lane call/job counters).
 //! The coordinator's server routes whole batches through one engine
 //! ([`BatchedEngine::with_shared`] over the server's cache and metrics),
 //! and the model layer batches all heads of a forward pass through
 //! `Transformer::forward_batch`.
 //!
+//! The pre-redesign entry points [`BatchedEngine::attend_batch`] and
+//! [`BatchedEngine::decode_batch`] survive as thin deprecated wrappers
+//! over `submit`.
+//!
 //! # Decode path (autoregressive serving)
 //!
-//! Besides whole-prefix jobs the engine executes **decode steps**: one
-//! appended token per (sequence, layer, head), each a [`DecodeJob`]
-//! fanned over the same pool by [`BatchedEngine::decode_batch`] with
-//! the same input-order determinism. The lifecycle:
+//! The decode lifecycle:
 //!
-//! 1. **Prefill** recovers bases through [`BatchedEngine::attend_batch`]
+//! 1. **Prefill** recovers bases through [`EngineOp::Prefill`] jobs
 //!    (strided conv jobs cache their post-exp basis in the
 //!    [`BasisCache`]);
 //! 2. [`BatchedEngine::seed_decode`] turns a cached basis into a
@@ -51,22 +70,25 @@
 //!
 //! # Determinism & cache-key invariants
 //!
-//! * Jobs (prefill and decode) are **pure**: outputs depend only on
-//!   job inputs, never on worker identity or timing. Results are
-//!   re-ordered by input index, so any worker count is bit-identical
-//!   (`tests/properties.rs` pins 1/2/8 for both paths).
+//! * Jobs — prefill, decode and gradient — are **pure**: outputs depend
+//!   only on job inputs, never on worker identity, timing, or what
+//!   other ops share the batch. Results are re-ordered by input index,
+//!   so any worker count is bit-identical (`tests/properties.rs` pins
+//!   1/2/8 for all lanes).
 //! * A [`CacheKey`] commits to (model, layer, head, seq_len) *and* a
 //!   bitwise content fingerprint of (Q, K, mask) *and* a backend tag
 //!   (recovery schedule) — two jobs share a basis **iff** they would
 //!   recover the identical basis. `seed_decode` reuses the exact key a
-//!   strided prefill job wrote, which is why decode seeding is free
-//!   right after prefill.
+//!   strided prefill job wrote (decode seeding is free right after
+//!   prefill), and a causal gradient job reuses the key of the
+//!   equivalent `Conv` prefill job (backward starts recovery-free after
+//!   a forward).
 //!
 //! # Worked example
 //!
 //! ```
 //! use conv_basis::attention::batched::{
-//!     AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig,
+//!     AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig, EngineJob,
 //! };
 //! use conv_basis::attention::rope::rope_structured_qk;
 //! use conv_basis::tensor::{dot, Matrix, Rng};
@@ -79,10 +101,11 @@
 //! let v = Matrix::randn(n, d, &mut rng);
 //!
 //! // Prefill: recover + cache the basis for (layer 0, head 0).
-//! let out = engine.attend_batch(vec![AttnJob::causal(
-//!     0, 0, q.clone(), k.clone(), v.clone(), BatchedBackend::Strided(2),
+//! let out = engine.submit(vec![EngineJob::prefill(
+//!     0,
+//!     AttnJob::causal(0, 0, q.clone(), k.clone(), v.clone(), BatchedBackend::Strided(2)),
 //! )]);
-//! assert!(!out[0].fell_back);
+//! assert!(!out[0].result.clone().into_prefill().fell_back);
 //!
 //! // Decode: seed from the cache (free), append one token.
 //! let (state, hit) = engine.seed_decode(0, 0, &q, &k, 2);
@@ -91,18 +114,22 @@
 //!     (0..=n).map(|j| dot(q_full.row(n), k_full.row(j))).collect();
 //! let mut v_grown = v.clone();
 //! v_grown.push_row(&vec![0.5; d]);
-//! let outs = engine.decode_batch(vec![DecodeJob {
-//!     layer: 0,
-//!     head: 0,
-//!     state: Some(state),
-//!     new_row,
-//!     v: v_grown,
-//!     q: Some(q_full.clone()),
-//!     k: Some(k_full.clone()),
-//!     op: DecodeOp::conv(2),
-//! }]);
-//! assert_eq!(outs[0].y_last.len(), d);
-//! assert!(!outs[0].rerecovered, "structured growth stays drift-free");
+//! let outs = engine.submit(vec![EngineJob::decode(
+//!     1,
+//!     DecodeJob {
+//!         layer: 0,
+//!         head: 0,
+//!         state: Some(state),
+//!         new_row,
+//!         v: v_grown,
+//!         q: Some(q_full.clone()),
+//!         k: Some(k_full.clone()),
+//!         op: DecodeOp::conv(2),
+//!     },
+//! )]);
+//! let step = outs[0].result.clone().into_decode();
+//! assert_eq!(step.y_last.len(), d);
+//! assert!(!step.rerecovered, "structured growth stays drift-free");
 //! ```
 
 use super::decode::{exact_decode_last_row, DecodeState};
@@ -113,6 +140,7 @@ use super::{
 use crate::basis::{exp_transform, recover_strided, QkColumnOracle, RecoverConfig};
 use crate::coordinator::{fingerprint, BasisCache, CacheKey, CachedBasis, Metrics};
 use crate::fft::{FftPlanner, SharedFftPlanner};
+use crate::gradient::batched::{execute_grad_job, GradJob, GradOutput};
 use crate::lowrank::{LowRankAttention, LowRankConfig};
 use crate::runtime::pool::WorkerPool;
 use crate::tensor::Matrix;
@@ -179,12 +207,153 @@ pub struct JobOutput {
     pub exec: std::time::Duration,
 }
 
+/// One typed unit of engine work: a caller-chosen correlation key plus
+/// the operation. [`BatchedEngine::submit`] echoes the key back in the
+/// matching [`EngineOutput`] (results are input-ordered regardless, so
+/// the key is for the caller's bookkeeping, not for matching).
+#[derive(Clone, Debug)]
+pub struct EngineJob {
+    /// Caller-assigned key, echoed in [`EngineOutput::key`].
+    pub key: u64,
+    pub op: EngineOp,
+}
+
+impl EngineJob {
+    /// A prefill-lane job.
+    pub fn prefill(key: u64, job: AttnJob) -> Self {
+        EngineJob { key, op: EngineOp::Prefill(job) }
+    }
+
+    /// A decode-lane job.
+    pub fn decode(key: u64, job: DecodeJob) -> Self {
+        EngineJob { key, op: EngineOp::Decode(job) }
+    }
+
+    /// A gradient-lane job.
+    pub fn gradient(key: u64, job: GradJob) -> Self {
+        EngineJob { key, op: EngineOp::Gradient(job) }
+    }
+}
+
+/// The three operation lanes the engine executes through one door.
+/// Lanes mix freely within a batch; every job is pure, so a mixed
+/// batch's outputs are bit-identical to running each lane alone.
+///
+/// ```
+/// use conv_basis::attention::batched::{
+///     AttnJob, BatchedBackend, BatchedEngine, EngineConfig, EngineJob,
+/// };
+/// use conv_basis::gradient::batched::{FastGradConfig, GradJob};
+/// use conv_basis::gradient::AttentionLossProblem;
+/// use conv_basis::tensor::{Matrix, Rng};
+/// use std::sync::Arc;
+///
+/// let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
+/// let mut rng = Rng::seeded(5);
+/// let (n, d) = (16, 3);
+/// // One mixed batch: an exact prefill job and a gradient job.
+/// let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+/// let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+/// let v = Matrix::randn(n, d, &mut rng);
+/// let problem = Arc::new(AttentionLossProblem::random_structured(n, d, &mut rng));
+/// let outs = engine.submit(vec![
+///     EngineJob::prefill(10, AttnJob::causal(0, 0, q, k, v, BatchedBackend::Exact)),
+///     EngineJob::gradient(
+///         11,
+///         GradJob {
+///             layer: 0,
+///             head: 0,
+///             problem,
+///             x: Matrix::zeros(d, d),
+///             cfg: FastGradConfig::exact(n),
+///         },
+///     ),
+/// ]);
+/// // Input-ordered, key-echoed, typed results.
+/// assert_eq!([outs[0].key, outs[1].key], [10, 11]);
+/// assert_eq!(outs[0].result.clone().into_prefill().y.shape(), (n, d));
+/// assert_eq!(outs[1].result.clone().into_gradient().grad.shape(), (d, d));
+/// ```
+#[derive(Clone, Debug)]
+pub enum EngineOp {
+    /// Whole-prefix attention for one (sequence, head).
+    Prefill(AttnJob),
+    /// One autoregressive decode step for one (sequence, layer, head).
+    Decode(DecodeJob),
+    /// One Definition 5.1 backward pass for one (layer, head).
+    Gradient(GradJob),
+}
+
+impl EngineOp {
+    /// The lane's name (diagnostics / mismatch panics).
+    pub fn lane(&self) -> &'static str {
+        match self {
+            EngineOp::Prefill(_) => "prefill",
+            EngineOp::Decode(_) => "decode",
+            EngineOp::Gradient(_) => "gradient",
+        }
+    }
+}
+
+/// One result from [`BatchedEngine::submit`], in input order.
+#[derive(Clone, Debug)]
+pub struct EngineOutput {
+    /// The submitting job's key, echoed.
+    pub key: u64,
+    pub result: EngineResult,
+}
+
+/// Typed result, mirroring [`EngineOp`].
+#[derive(Clone, Debug)]
+pub enum EngineResult {
+    Prefill(JobOutput),
+    Decode(DecodeOutput),
+    Gradient(GradOutput),
+}
+
+impl EngineResult {
+    /// The lane's name (diagnostics / mismatch panics).
+    pub fn lane(&self) -> &'static str {
+        match self {
+            EngineResult::Prefill(_) => "prefill",
+            EngineResult::Decode(_) => "decode",
+            EngineResult::Gradient(_) => "gradient",
+        }
+    }
+
+    /// Unwrap a prefill result; panics if this job ran another lane.
+    pub fn into_prefill(self) -> JobOutput {
+        match self {
+            EngineResult::Prefill(o) => o,
+            other => panic!("expected a prefill result, got {}", other.lane()),
+        }
+    }
+
+    /// Unwrap a decode result; panics if this job ran another lane.
+    pub fn into_decode(self) -> DecodeOutput {
+        match self {
+            EngineResult::Decode(o) => o,
+            other => panic!("expected a decode result, got {}", other.lane()),
+        }
+    }
+
+    /// Unwrap a gradient result; panics if this job ran another lane.
+    pub fn into_gradient(self) -> GradOutput {
+        match self {
+            EngineResult::Gradient(o) => o,
+            other => panic!("expected a gradient result, got {}", other.lane()),
+        }
+    }
+}
+
 /// Engine sizing.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
     /// Worker threads in the pool (clamped to ≥ 1).
     pub workers: usize,
-    /// Recovered-basis cache capacity (entries).
+    /// Recovered-basis cache capacity — entries **per shard** of the
+    /// lock-striped [`BasisCache`] (entries of one (layer, head) always
+    /// share a shard, so this bounds each slot's working set).
     pub cache_capacity: usize,
 }
 
@@ -247,18 +416,76 @@ impl BatchedEngine {
         self.planner.cached_plans()
     }
 
-    /// Evaluate every job; results come back in job order. Blocks until
-    /// the whole batch is done. Safe to call concurrently from several
-    /// threads (the server's workers share one engine).
-    pub fn attend_batch(&self, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
-        Metrics::incr(&self.metrics.batched_calls);
-        Metrics::add(&self.metrics.batched_jobs, jobs.len() as u64);
+    /// Execute every job — prefill, decode and gradient ops mixed
+    /// freely — over the worker pool; results come back **in job
+    /// order** with each job's key echoed. Blocks until the whole batch
+    /// is done. Safe to call concurrently from several threads (the
+    /// server's workers and its generation scheduler share one engine).
+    ///
+    /// Jobs are pure, so the outputs are bit-identical for any worker
+    /// count and any batch composition: a decode step returns the same
+    /// bits whether it ran alone or with prefill/gradient jobs riding
+    /// along (`tests/properties.rs` pins this for 1/2/8 workers).
+    ///
+    /// Per-lane counters land in [`Metrics`]: a call increments
+    /// `submit_calls` once, plus `batched_calls`/`decode_calls`/
+    /// `grad_calls` for each lane that is non-empty, plus the per-job
+    /// `batched_jobs`/`decode_steps`/`grad_jobs` totals.
+    pub fn submit(&self, jobs: Vec<EngineJob>) -> Vec<EngineOutput> {
+        Metrics::incr(&self.metrics.submit_calls);
+        let (mut n_prefill, mut n_decode, mut n_grad) = (0u64, 0u64, 0u64);
+        for job in &jobs {
+            match &job.op {
+                EngineOp::Prefill(_) => n_prefill += 1,
+                EngineOp::Decode(_) => n_decode += 1,
+                EngineOp::Gradient(_) => n_grad += 1,
+            }
+        }
+        if n_prefill > 0 {
+            Metrics::incr(&self.metrics.batched_calls);
+            Metrics::add(&self.metrics.batched_jobs, n_prefill);
+        }
+        if n_decode > 0 {
+            Metrics::incr(&self.metrics.decode_calls);
+            Metrics::add(&self.metrics.decode_steps, n_decode);
+        }
+        if n_grad > 0 {
+            Metrics::incr(&self.metrics.grad_calls);
+            Metrics::add(&self.metrics.grad_jobs, n_grad);
+        }
         let planner = Arc::clone(&self.planner);
         let cache = Arc::clone(&self.cache);
         let metrics = Arc::clone(&self.metrics);
         let model_id = self.model_id;
-        self.pool
-            .map(jobs, move |_, job| execute_job(job, &planner, &cache, &metrics, model_id))
+        self.pool.map(jobs, move |_, job| {
+            let EngineJob { key, op } = job;
+            let result = match op {
+                EngineOp::Prefill(j) => {
+                    EngineResult::Prefill(execute_job(j, &planner, &cache, &metrics, model_id))
+                }
+                EngineOp::Decode(j) => {
+                    EngineResult::Decode(execute_decode_job(j, &cache, &metrics, model_id))
+                }
+                EngineOp::Gradient(j) => {
+                    EngineResult::Gradient(execute_grad_job(j, &planner, &cache, &metrics, model_id))
+                }
+            };
+            EngineOutput { key, result }
+        })
+    }
+
+    /// Evaluate every prefill job; results come back in job order.
+    #[deprecated(
+        note = "use `BatchedEngine::submit` with `EngineOp::Prefill` — the engine has one \
+                typed door for prefill, decode and gradient work"
+    )]
+    pub fn attend_batch(&self, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
+        self.submit(
+            jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect(),
+        )
+        .into_iter()
+        .map(|o| o.result.into_prefill())
+        .collect()
     }
 
     /// Seed a [`DecodeState`] for one (layer, head) from the engine's
@@ -299,20 +526,18 @@ impl BatchedEngine {
     }
 
     /// Execute one decode step for every job — one appended token per
-    /// (sequence, layer, head) — fanned over the worker pool with the
-    /// same deterministic input-order results as [`Self::attend_batch`].
-    /// Conv jobs grow their [`DecodeState`] in `O(k·n + n·d)` and
-    /// re-recover on drift; exact jobs run the bit-stable last-row
-    /// kernel. Step counts, drift re-recoveries and per-job latency
-    /// land in this engine's [`Metrics`].
+    /// (sequence, layer, head).
+    #[deprecated(
+        note = "use `BatchedEngine::submit` with `EngineOp::Decode` — the engine has one \
+                typed door for prefill, decode and gradient work"
+    )]
     pub fn decode_batch(&self, jobs: Vec<DecodeJob>) -> Vec<DecodeOutput> {
-        Metrics::incr(&self.metrics.decode_calls);
-        Metrics::add(&self.metrics.decode_steps, jobs.len() as u64);
-        let cache = Arc::clone(&self.cache);
-        let metrics = Arc::clone(&self.metrics);
-        let model_id = self.model_id;
-        self.pool
-            .map(jobs, move |_, job| execute_decode_job(job, &cache, &metrics, model_id))
+        self.submit(
+            jobs.into_iter().enumerate().map(|(i, j)| EngineJob::decode(i as u64, j)).collect(),
+        )
+        .into_iter()
+        .map(|o| o.result.into_decode())
+        .collect()
     }
 }
 
@@ -651,7 +876,7 @@ fn execute_decode_job(
 }
 
 /// FNV-1a step over one u64.
-fn fnv_u64(mut h: u64, x: u64) -> u64 {
+pub(crate) fn fnv_u64(mut h: u64, x: u64) -> u64 {
     for b in x.to_le_bytes() {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
@@ -659,12 +884,15 @@ fn fnv_u64(mut h: u64, x: u64) -> u64 {
     h
 }
 
-const FNV_SEED: u64 = 0xcbf29ce484222325;
+pub(crate) const FNV_SEED: u64 = 0xcbf29ce484222325;
 
 /// Content fingerprint of a (Q, K, mask) triple. A cached basis is only
 /// valid for identical content *and* an identical recovery schedule, so
-/// callers xor in a backend tag as well.
-fn conv_fingerprint(q: &Matrix, k: &Matrix, mask: &Mask) -> u64 {
+/// callers xor in a backend tag as well. `pub(crate)`: the gradient
+/// lane keys its `f`-operator with the same fingerprint over
+/// `(A₁X, A₂, mask)`, which is what lets forward and backward share
+/// recovered bases.
+pub(crate) fn conv_fingerprint(q: &Matrix, k: &Matrix, mask: &Mask) -> u64 {
     fingerprint(q.data()) ^ fingerprint(k.data()).rotate_left(1) ^ mask_tag(mask).rotate_left(2)
 }
 
@@ -688,7 +916,7 @@ fn mask_tag(mask: &Mask) -> u64 {
     }
 }
 
-fn recover_cfg_tag(cfg: &RecoverConfig) -> u64 {
+pub(crate) fn recover_cfg_tag(cfg: &RecoverConfig) -> u64 {
     let mut h = fnv_u64(FNV_SEED, 3);
     h = fnv_u64(h, cfg.k_max as u64);
     h = fnv_u64(h, cfg.t as u64);
@@ -709,6 +937,22 @@ mod tests {
 
     fn engine(workers: usize) -> BatchedEngine {
         BatchedEngine::new(EngineConfig { workers, cache_capacity: 64 })
+    }
+
+    /// Prefill-lane submit (what the deprecated `attend_batch` wraps).
+    fn attend(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
+        e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
+            .into_iter()
+            .map(|o| o.result.into_prefill())
+            .collect()
+    }
+
+    /// Decode-lane submit (what the deprecated `decode_batch` wraps).
+    fn decode(e: &BatchedEngine, jobs: Vec<DecodeJob>) -> Vec<DecodeOutput> {
+        e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::decode(i as u64, j)).collect())
+            .into_iter()
+            .map(|o| o.result.into_decode())
+            .collect()
     }
 
     fn structured_job(layer: u32, head: u32, n: usize, d: usize, seed: u64) -> AttnJob {
@@ -732,7 +976,7 @@ mod tests {
             want.push(exact_attention(&q, &k, &v, &Mask::causal(n)));
             jobs.push(AttnJob::causal(0, h, q, k, v, BatchedBackend::Exact));
         }
-        let outs = e.attend_batch(jobs);
+        let outs = attend(&e, jobs);
         assert_eq!(outs.len(), 6);
         for (out, w) in outs.iter().zip(&want) {
             assert_eq!(max_abs_diff(&out.y, w), 0.0);
@@ -750,7 +994,7 @@ mod tests {
             .iter()
             .map(|j| conv_attention_strided(&j.q, &j.k, &j.v, 4).unwrap().y)
             .collect();
-        let outs = e.attend_batch(jobs);
+        let outs = attend(&e, jobs);
         for (out, w) in outs.iter().zip(&singles) {
             assert!(!out.fell_back);
             assert!(out.basis_k >= 1);
@@ -763,8 +1007,8 @@ mod tests {
         let e = engine(2);
         let jobs: Vec<AttnJob> =
             (0..3).map(|h| structured_job(2, h, 32, 4, 800 + h as u64)).collect();
-        let first = e.attend_batch(jobs.clone());
-        let second = e.attend_batch(jobs);
+        let first = attend(&e, jobs.clone());
+        let second = attend(&e, jobs);
         let snap = e.metrics().snapshot();
         assert!(snap.cache_hits >= 3, "hits = {}", snap.cache_hits);
         for (a, b) in first.iter().zip(&second) {
@@ -781,8 +1025,8 @@ mod tests {
         let j4 = structured_job(0, 0, 40, 8, 900);
         let mut j2 = j4.clone();
         j2.backend = BatchedBackend::Strided(2);
-        let out4 = e.attend_batch(vec![j4]);
-        let out2 = e.attend_batch(vec![j2]);
+        let out4 = attend(&e, vec![j4]);
+        let out2 = attend(&e, vec![j2]);
         assert!(!out2[0].cache_hit, "k=2 must not hit the k=4 entry");
         assert!(out4[0].basis_k >= out2[0].basis_k);
     }
@@ -796,7 +1040,7 @@ mod tests {
         let k = Matrix::randn(n, d, &mut rng).scale(5.0);
         let v = Matrix::randn(n, d, &mut rng);
         let jobs = vec![AttnJob::causal(0, 0, q, k, v, BatchedBackend::Strided(2))];
-        let outs = e.attend_batch(jobs);
+        let outs = attend(&e, jobs);
         assert!(outs[0].y.is_finite());
     }
 
@@ -820,7 +1064,7 @@ mod tests {
                 *slot += qc * k[(j, c)];
             }
         }
-        let outs = e.decode_batch(vec![DecodeJob {
+        let outs = decode(&e, vec![DecodeJob {
             layer: 0,
             head: 0,
             state: None,
@@ -844,7 +1088,7 @@ mod tests {
         let e = engine(2);
         let job = structured_job(3, 1, 40, 8, 1200);
         let (q, k) = (job.q.clone(), job.k.clone());
-        let _ = e.attend_batch(vec![job]);
+        let _ = attend(&e, vec![job]);
         let (state, hit) = e.seed_decode(3, 1, &q, &k, 4);
         assert!(hit, "prefill must have cached the basis");
         assert_eq!(state.n(), 40);
@@ -877,7 +1121,7 @@ mod tests {
             .map(|j| crate::tensor::dot(q_full.row(n), k_full.row(j)))
             .collect();
         let v = Matrix::randn(n + 1, d, &mut rng);
-        let outs = e.decode_batch(vec![DecodeJob {
+        let outs = decode(&e, vec![DecodeJob {
             layer: 0,
             head: 0,
             state: Some(state),
@@ -928,9 +1172,9 @@ mod tests {
                 })
                 .collect()
         };
-        let base = engine(1).decode_batch(mk_jobs());
+        let base = decode(&engine(1), mk_jobs());
         for workers in [2usize, 8] {
-            let outs = engine(workers).decode_batch(mk_jobs());
+            let outs = decode(&engine(workers), mk_jobs());
             for (a, b) in outs.iter().zip(&base) {
                 assert_eq!(a.y_last, b.y_last, "decode must not depend on worker count");
             }
@@ -942,10 +1186,78 @@ mod tests {
         let e = engine(4);
         let jobs: Vec<AttnJob> =
             (0..8).map(|h| structured_job(0, h, 64, 8, 1000 + h as u64)).collect();
-        let _ = e.attend_batch(jobs);
+        let _ = attend(&e, jobs);
         // All jobs have the same n ⇒ a handful of distinct transform
         // lengths, not 8× duplicates.
         assert!(e.cached_plans() >= 1);
         assert!(e.cached_plans() <= 8, "plans = {}", e.cached_plans());
+    }
+
+    #[test]
+    fn submit_mixed_lanes_echoes_keys_in_input_order() {
+        use crate::gradient::batched::{FastGradConfig, GradJob};
+        use crate::gradient::AttentionLossProblem;
+        let e = engine(3);
+        let mut rng = Rng::seeded(1500);
+        let (n, d) = (20, 4);
+        let pre = structured_job(0, 0, 32, 4, 1501);
+        let (q_full, k_full) = rope_structured_qk(n + 1, d, 2, &mut rng);
+        let new_row: Vec<f64> = (0..=n)
+            .map(|j| crate::tensor::dot(q_full.row(n), k_full.row(j)))
+            .collect();
+        let dec = DecodeJob {
+            layer: 0,
+            head: 1,
+            state: None,
+            new_row,
+            v: Matrix::randn(n + 1, d, &mut rng),
+            q: None,
+            k: None,
+            op: DecodeOp::Exact,
+        };
+        let problem = Arc::new(AttentionLossProblem::random_structured(16, 3, &mut rng));
+        let grad = GradJob {
+            layer: 1,
+            head: 0,
+            problem,
+            x: Matrix::zeros(3, 3),
+            cfg: FastGradConfig::exact(16),
+        };
+        let outs = e.submit(vec![
+            EngineJob::gradient(70, grad),
+            EngineJob::prefill(71, pre),
+            EngineJob::decode(72, dec),
+        ]);
+        assert_eq!(outs.len(), 3);
+        assert_eq!(
+            outs.iter().map(|o| o.key).collect::<Vec<_>>(),
+            vec![70, 71, 72],
+            "results must be input-ordered with keys echoed"
+        );
+        assert_eq!(outs[0].result.lane(), "gradient");
+        assert_eq!(outs[1].result.lane(), "prefill");
+        assert_eq!(outs[2].result.lane(), "decode");
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.submit_calls, 1);
+        assert_eq!(
+            (snap.batched_calls, snap.decode_calls, snap.grad_calls),
+            (1, 1, 1),
+            "each non-empty lane counts one call"
+        );
+        assert_eq!((snap.batched_jobs, snap.decode_steps, snap.grad_jobs), (1, 1, 1));
+    }
+
+    #[test]
+    fn deprecated_wrappers_route_through_submit() {
+        #![allow(deprecated)]
+        let e = engine(2);
+        let jobs: Vec<AttnJob> =
+            (0..3).map(|h| structured_job(5, h, 32, 4, 1600 + h as u64)).collect();
+        let via_wrapper = e.attend_batch(jobs.clone());
+        let via_submit = attend(&e, jobs);
+        for (a, b) in via_wrapper.iter().zip(&via_submit) {
+            assert_eq!(max_abs_diff(&a.y, &b.y), 0.0);
+        }
+        assert_eq!(e.metrics().snapshot().submit_calls, 2, "the wrapper is a submit call");
     }
 }

@@ -95,6 +95,13 @@ impl DecodeState {
         &self.d_tilde
     }
 
+    /// Floats resident in this state (`Σ_r |b̃_r| + |D̃|`) — the decode
+    /// path's contribution to KV-cache memory accounting
+    /// (`Metrics::decode_resident_bytes`).
+    pub fn memory_floats(&self) -> usize {
+        self.post_basis.memory_floats() + self.d_tilde.len()
+    }
+
     /// Basis-implied attention weights of the **last** row (post-exp,
     /// pre-normalization): entry `j` is `Σ_r b̃_r[n−1−j]` over the
     /// windows covering column `j`.

@@ -3,9 +3,10 @@
 //! variants (Appendix A), and the full (bidirectional) self-attention
 //! split (Appendix A “Extend to full self-attention”).
 //!
-//! Serving entry points: [`batched`] (the multi-head engine — prefill
-//! `attend_batch` and autoregressive `decode_batch`) and [`decode`]
-//! (the incremental per-token state those decode jobs grow).
+//! Serving entry points: [`batched`] (the multi-head engine — one
+//! typed `submit` door fanning prefill, decode *and* gradient jobs
+//! over a shared worker pool) and [`decode`] (the incremental
+//! per-token state the decode jobs grow).
 
 pub mod batched;
 pub mod decode;

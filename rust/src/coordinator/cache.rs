@@ -1,14 +1,36 @@
-//! Conv-basis cache: *recover once, apply many*.
+//! Conv-basis cache: *recover once, apply many* — lock-striped.
 //!
 //! The expensive half of Algorithm 1 is Recover (`O(knd log n)` probe
 //! work); the apply is cheap per V. In decode-style serving the same
 //! (layer, prefix) pair recurs, so the coordinator caches the
 //! exp-transformed basis and its normalizer, keyed by a fingerprint of
 //! (model id, layer, Q/K content hash).
+//!
+//! # Lock striping
+//!
+//! One global mutex serialized every worker of the batched engine on
+//! the cache, even when they touched unrelated heads. The cache is now
+//! split into [`N_SHARDS`] independently locked partitions; a key's
+//! shard is a pure function of its **(layer, head)** slot
+//! ([`shard_of`]), so
+//!
+//! * all entries of one (layer, head) — every seq_len, every content
+//!   fingerprint — share a shard, preserving the old single-mutex
+//!   semantics (LRU order, capacity) *within* a slot, while
+//! * different heads hash to different stripes and stop contending.
+//!
+//! `capacity` is enforced **per shard**. Hit/miss/len accounting
+//! aggregates across shards ([`BasisCache::stats`]), so callers observe
+//! one logical cache.
 
 use crate::basis::KConvBasis;
 use std::collections::HashMap;
 use std::sync::Mutex;
+
+/// Number of lock stripes. Eight covers the worker counts this crate's
+/// determinism tests pin (1/2/8) without making per-shard LRU state
+/// degenerate for small capacities.
+pub const N_SHARDS: usize = 8;
 
 /// Cache key: (model, layer, head, seq_len) plus a content fingerprint
 /// of (Q, K) — the batched engine's *recover once per (layer, head,
@@ -23,6 +45,13 @@ pub struct CacheKey {
     /// Sequence length the basis was recovered at.
     pub seq_len: usize,
     pub qk_fingerprint: u64,
+}
+
+/// The stripe a key lives in — a pure function of (layer, head), so
+/// every entry of one attention head shares a lock and distinct heads
+/// spread across stripes.
+pub fn shard_of(key: &CacheKey) -> usize {
+    (key.layer as usize).wrapping_mul(31).wrapping_add(key.head as usize) % N_SHARDS
 }
 
 /// FNV-1a over the f64 bit patterns — cheap, deterministic fingerprint.
@@ -44,12 +73,17 @@ pub struct CachedBasis {
 }
 
 /// Bounded LRU (timestamp-based eviction; sizes are small — the value
-/// payload is `O(kn)` floats, the Appendix A memory claim).
+/// payload is `O(kn)` floats, the Appendix A memory claim), striped
+/// into [`N_SHARDS`] independently locked partitions keyed by
+/// (layer, head).
 pub struct BasisCache {
-    inner: Mutex<Inner>,
+    shards: Vec<Mutex<Inner>>,
+    /// Max entries **per shard** (entries of one (layer, head) always
+    /// share a shard, so this is the per-slot working-set bound).
     capacity: usize,
 }
 
+#[derive(Default)]
 struct Inner {
     map: HashMap<CacheKey, (CachedBasis, u64)>,
     clock: u64,
@@ -61,13 +95,13 @@ impl BasisCache {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1);
         BasisCache {
-            inner: Mutex::new(Inner { map: HashMap::new(), clock: 0, hits: 0, misses: 0 }),
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Inner::default())).collect(),
             capacity,
         }
     }
 
     pub fn get(&self, key: &CacheKey) -> Option<CachedBasis> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shards[shard_of(key)].lock().unwrap();
         g.clock += 1;
         let clock = g.clock;
         match g.map.get_mut(key) {
@@ -85,11 +119,11 @@ impl BasisCache {
     }
 
     pub fn put(&self, key: CacheKey, value: CachedBasis) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shards[shard_of(&key)].lock().unwrap();
         g.clock += 1;
         let clock = g.clock;
         if g.map.len() >= self.capacity && !g.map.contains_key(&key) {
-            // Evict the least-recently used entry.
+            // Evict the least-recently used entry of this shard.
             if let Some(victim) = g
                 .map
                 .iter()
@@ -102,18 +136,35 @@ impl BasisCache {
         g.map.insert(key, (value, clock));
     }
 
-    /// (hits, misses, len).
+    /// (hits, misses, len), aggregated across every shard.
     pub fn stats(&self) -> (u64, u64, usize) {
-        let g = self.inner.lock().unwrap();
-        (g.hits, g.misses, g.map.len())
+        let mut agg = (0u64, 0u64, 0usize);
+        for s in &self.shards {
+            let g = s.lock().unwrap();
+            agg.0 += g.hits;
+            agg.1 += g.misses;
+            agg.2 += g.map.len();
+        }
+        agg
     }
 
-    /// Approximate resident floats (memory accounting: `Σ k·n + n`).
+    /// Entries currently resident in one shard (observability / tests).
+    pub fn shard_len(&self, shard: usize) -> usize {
+        self.shards[shard].lock().unwrap().map.len()
+    }
+
+    /// Approximate resident floats (memory accounting: `Σ k·n + n`),
+    /// aggregated across every shard.
     pub fn resident_floats(&self) -> usize {
-        let g = self.inner.lock().unwrap();
-        g.map
-            .values()
-            .map(|(v, _)| v.post_basis.memory_floats() + v.d_tilde.len())
+        self.shards
+            .iter()
+            .map(|s| {
+                let g = s.lock().unwrap();
+                g.map
+                    .values()
+                    .map(|(v, _)| v.post_basis.memory_floats() + v.d_tilde.len())
+                    .sum::<usize>()
+            })
             .sum()
     }
 }
@@ -132,6 +183,10 @@ mod tests {
 
     fn key(i: u64) -> CacheKey {
         CacheKey { model_id: 1, layer: 0, head: 0, seq_len: 8, qk_fingerprint: i }
+    }
+
+    fn slot_key(layer: u32, head: u32, i: u64) -> CacheKey {
+        CacheKey { model_id: 1, layer, head, seq_len: 8, qk_fingerprint: i }
     }
 
     #[test]
@@ -170,6 +225,69 @@ mod tests {
         let c = BasisCache::new(4);
         c.put(key(1), dummy_basis(16));
         assert_eq!(c.resident_floats(), 16 + 16);
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        // Eight consecutive layers at head 0 must not all collapse into
+        // one stripe (the whole point of striping).
+        let mut seen = std::collections::HashSet::new();
+        for layer in 0..8u32 {
+            seen.insert(shard_of(&slot_key(layer, 0, 0)));
+        }
+        assert!(seen.len() >= 4, "layers landed on {} shard(s)", seen.len());
+        // And every (seq_len, fingerprint) variant of one slot stays on
+        // that slot's shard.
+        let base = shard_of(&slot_key(3, 1, 0));
+        for i in 0..16u64 {
+            let mut k = slot_key(3, 1, i);
+            k.seq_len = 8 + i as usize;
+            assert_eq!(shard_of(&k), base, "same (layer, head) must share a shard");
+        }
+    }
+
+    #[test]
+    fn cross_shard_hit_accounting_aggregates() {
+        // Entries for distinct (layer, head) slots live in distinct
+        // shards; stats() must still report one logical cache.
+        let c = BasisCache::new(4);
+        let slots: Vec<CacheKey> =
+            (0..6u32).map(|layer| slot_key(layer, layer % 2, layer as u64)).collect();
+        let distinct: std::collections::HashSet<usize> = slots.iter().map(shard_of).collect();
+        assert!(distinct.len() >= 2, "test must span shards, got {distinct:?}");
+        for k in &slots {
+            assert!(c.get(k).is_none()); // one miss each
+            c.put(k.clone(), dummy_basis(4));
+        }
+        for _ in 0..2 {
+            for k in &slots {
+                assert!(c.get(k).is_some()); // two hits each
+            }
+        }
+        let (hits, misses, len) = c.stats();
+        assert_eq!(hits, 2 * slots.len() as u64);
+        assert_eq!(misses, slots.len() as u64);
+        assert_eq!(len, slots.len());
+        // Per-shard occupancy sums to the logical len.
+        let by_shard: usize = (0..N_SHARDS).map(|s| c.shard_len(s)).sum();
+        assert_eq!(by_shard, len);
+    }
+
+    #[test]
+    fn eviction_is_per_shard() {
+        // Filling one slot far past capacity must not evict another
+        // slot's entries (they live on a different stripe).
+        let a = slot_key(0, 0, 999);
+        let b_layer = (1..8u32)
+            .find(|&l| shard_of(&slot_key(l, 0, 0)) != shard_of(&a))
+            .expect("some layer maps to a different shard");
+        let c = BasisCache::new(2);
+        c.put(a.clone(), dummy_basis(4));
+        for i in 0..8u64 {
+            c.put(slot_key(b_layer, 0, i), dummy_basis(4));
+        }
+        assert!(c.get(&a).is_some(), "cross-shard churn must not evict slot A");
+        assert_eq!(c.shard_len(shard_of(&slot_key(b_layer, 0, 0))), 2);
     }
 
     #[test]

@@ -45,11 +45,18 @@ pub struct Metrics {
     pub fallbacks: AtomicU64,
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
-    /// Batched-engine calls (one per `attend_batch`).
+    /// Unified-door engine calls (one per [`BatchedEngine::submit`]).
+    ///
+    /// [`BatchedEngine::submit`]: crate::attention::batched::BatchedEngine::submit
+    pub submit_calls: AtomicU64,
+    /// Engine calls that carried ≥ 1 prefill job (one per `submit`
+    /// with a prefill lane; the deprecated `attend_batch` wrapper maps
+    /// 1:1 onto this).
     pub batched_calls: AtomicU64,
-    /// Total (sequence, head) jobs executed by the batched engine.
+    /// Total (sequence, head) prefill jobs executed by the engine.
     pub batched_jobs: AtomicU64,
-    /// Decode-engine calls (one per `decode_batch`).
+    /// Engine calls that carried ≥ 1 decode job (the deprecated
+    /// `decode_batch` wrapper maps 1:1 onto this).
     pub decode_calls: AtomicU64,
     /// Total (sequence, layer, head) decode jobs executed.
     pub decode_steps: AtomicU64,
@@ -63,17 +70,44 @@ pub struct Metrics {
     /// Conv decode jobs that fell back to the exact last-row kernel
     /// (degenerate normalizer after growth/re-recovery).
     pub decode_fallbacks: AtomicU64,
+    /// Engine calls that carried ≥ 1 gradient job.
+    pub grad_calls: AtomicU64,
+    /// Total gradient jobs executed by the engine.
+    pub grad_jobs: AtomicU64,
+    /// Gradient jobs whose fast path failed (recovery error or
+    /// degenerate normalizer) and were served by the dense
+    /// `grad_naive` oracle instead.
+    pub grad_fallbacks: AtomicU64,
+    /// Gradient jobs whose `f`-operator basis came from the shared
+    /// `BasisCache` (also counted in the engine-wide `cache_hits`;
+    /// these lane-local counters keep the training dashboard honest
+    /// when one engine serves inference and training together).
+    pub grad_cache_hits: AtomicU64,
+    /// Gradient jobs that recovered their operator fresh.
+    pub grad_cache_misses: AtomicU64,
     /// Generation requests admitted by the server's decode scheduler.
     pub gen_requests: AtomicU64,
     /// Generation requests completed (response sent).
     pub gen_completed: AtomicU64,
     /// Tokens emitted across all generation requests.
     pub gen_tokens: AtomicU64,
+    /// Non-generation attention requests served by the generation
+    /// scheduler's lane (merged into a decode submit or executed
+    /// standalone between decode steps) instead of a server worker.
+    pub gen_lane_attn_requests: AtomicU64,
+    /// Subset of `gen_lane_attn_requests` that rode an in-flight decode
+    /// step's engine submit (true continuous batching across op kinds).
+    pub merged_attn_requests: AtomicU64,
+    /// Gauge: bytes resident in live `DecodeSession` KV caches + conv
+    /// decode states. Raised by `Transformer::{prefill_batch,
+    /// decode_step}`, lowered by `DecodeSession::retire`.
+    pub decode_resident_bytes: AtomicU64,
     queue_lat: Mutex<Vec<f64>>,
     exec_lat: Mutex<Vec<f64>>,
     e2e_lat: Mutex<Vec<f64>>,
     decode_lat: Mutex<Vec<f64>>,
     gen_lat: Mutex<Vec<f64>>,
+    grad_lat: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
@@ -89,6 +123,12 @@ impl Metrics {
     #[inline]
     pub fn add(counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lower a gauge (e.g. `decode_resident_bytes` on session retire).
+    #[inline]
+    pub fn sub(counter: &AtomicU64, n: u64) {
+        counter.fetch_sub(n, Ordering::Relaxed);
     }
 
     pub fn record_queue(&self, d: Duration) {
@@ -117,6 +157,13 @@ impl Metrics {
         self.gen_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
     }
 
+    /// Per-job gradient execution time (its own series — one gradient
+    /// job is `O(k·n·d²·log n)`, far above a prefill job, and mixing
+    /// the regimes would corrupt the exec percentiles).
+    pub fn record_grad(&self, d: Duration) {
+        self.grad_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
@@ -128,6 +175,7 @@ impl Metrics {
             fallbacks: self.fallbacks.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            submit_calls: self.submit_calls.load(Ordering::Relaxed),
             batched_calls: self.batched_calls.load(Ordering::Relaxed),
             batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
             decode_calls: self.decode_calls.load(Ordering::Relaxed),
@@ -136,14 +184,23 @@ impl Metrics {
             decode_seed_misses: self.decode_seed_misses.load(Ordering::Relaxed),
             decode_rerecoveries: self.decode_rerecoveries.load(Ordering::Relaxed),
             decode_fallbacks: self.decode_fallbacks.load(Ordering::Relaxed),
+            grad_calls: self.grad_calls.load(Ordering::Relaxed),
+            grad_jobs: self.grad_jobs.load(Ordering::Relaxed),
+            grad_fallbacks: self.grad_fallbacks.load(Ordering::Relaxed),
+            grad_cache_hits: self.grad_cache_hits.load(Ordering::Relaxed),
+            grad_cache_misses: self.grad_cache_misses.load(Ordering::Relaxed),
             gen_requests: self.gen_requests.load(Ordering::Relaxed),
             gen_completed: self.gen_completed.load(Ordering::Relaxed),
             gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
+            gen_lane_attn_requests: self.gen_lane_attn_requests.load(Ordering::Relaxed),
+            merged_attn_requests: self.merged_attn_requests.load(Ordering::Relaxed),
+            decode_resident_bytes: self.decode_resident_bytes.load(Ordering::Relaxed),
             queue: summarize(&mut self.queue_lat.lock().unwrap()),
             exec: summarize(&mut self.exec_lat.lock().unwrap()),
             e2e: summarize(&mut self.e2e_lat.lock().unwrap()),
             decode: summarize(&mut self.decode_lat.lock().unwrap()),
             gen_e2e: summarize(&mut self.gen_lat.lock().unwrap()),
+            grad: summarize(&mut self.grad_lat.lock().unwrap()),
         }
     }
 }
@@ -160,6 +217,7 @@ pub struct MetricsSnapshot {
     pub fallbacks: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub submit_calls: u64,
     pub batched_calls: u64,
     pub batched_jobs: u64,
     pub decode_calls: u64,
@@ -168,14 +226,23 @@ pub struct MetricsSnapshot {
     pub decode_seed_misses: u64,
     pub decode_rerecoveries: u64,
     pub decode_fallbacks: u64,
+    pub grad_calls: u64,
+    pub grad_jobs: u64,
+    pub grad_fallbacks: u64,
+    pub grad_cache_hits: u64,
+    pub grad_cache_misses: u64,
     pub gen_requests: u64,
     pub gen_completed: u64,
     pub gen_tokens: u64,
+    pub gen_lane_attn_requests: u64,
+    pub merged_attn_requests: u64,
+    pub decode_resident_bytes: u64,
     pub queue: LatencyStats,
     pub exec: LatencyStats,
     pub e2e: LatencyStats,
     pub decode: LatencyStats,
     pub gen_e2e: LatencyStats,
+    pub grad: LatencyStats,
 }
 
 impl MetricsSnapshot {
@@ -215,6 +282,7 @@ impl MetricsSnapshot {
             "generation: {} requests / {} completed / {} tokens | \
              decode: {} calls/{} steps | seeds: {}h/{}m | \
              drift re-recoveries: {} | fallbacks: {} | \
+             kv resident: {} B | merged attn: {} (lane {}) | \
              step exec mean={:.0}µs p95={:.0}µs | gen e2e p50={:.0}µs p95={:.0}µs",
             self.gen_requests,
             self.gen_completed,
@@ -225,10 +293,30 @@ impl MetricsSnapshot {
             self.decode_seed_misses,
             self.decode_rerecoveries,
             self.decode_fallbacks,
+            self.decode_resident_bytes,
+            self.merged_attn_requests,
+            self.gen_lane_attn_requests,
             self.decode.mean_us,
             self.decode.p95_us,
             self.gen_e2e.p50_us,
             self.gen_e2e.p95_us,
+        )
+    }
+
+    /// Render the gradient-lane counters (the training dashboard
+    /// line; the cache numbers are the lane's own, not the engine-wide
+    /// totals a co-located serving workload would drown them in).
+    pub fn grad_report(&self) -> String {
+        format!(
+            "gradient: {} calls/{} jobs | fallbacks: {} | cache: {}h/{}m | \
+             job exec mean={:.0}µs p95={:.0}µs",
+            self.grad_calls,
+            self.grad_jobs,
+            self.grad_fallbacks,
+            self.grad_cache_hits,
+            self.grad_cache_misses,
+            self.grad.mean_us,
+            self.grad.p95_us,
         )
     }
 }
@@ -272,6 +360,29 @@ mod tests {
         Metrics::incr(&m.conv_requests);
         let r = m.snapshot().report();
         assert!(r.contains("conv=1"));
+    }
+
+    #[test]
+    fn gauge_add_sub_roundtrips() {
+        let m = Metrics::new();
+        Metrics::add(&m.decode_resident_bytes, 4096);
+        Metrics::add(&m.decode_resident_bytes, 1024);
+        Metrics::sub(&m.decode_resident_bytes, 4096);
+        assert_eq!(m.snapshot().decode_resident_bytes, 1024);
+        Metrics::sub(&m.decode_resident_bytes, 1024);
+        assert_eq!(m.snapshot().decode_resident_bytes, 0);
+    }
+
+    #[test]
+    fn grad_report_renders() {
+        let m = Metrics::new();
+        Metrics::incr(&m.grad_calls);
+        Metrics::add(&m.grad_jobs, 8);
+        m.record_grad(Duration::from_micros(25));
+        let s = m.snapshot();
+        assert_eq!(s.grad.count, 1);
+        let r = s.grad_report();
+        assert!(r.contains("1 calls/8 jobs"));
     }
 
     #[test]

@@ -1,36 +1,48 @@
 //! The serving loop: dispatcher thread (router + batcher) feeding
 //! worker threads over mpsc channels; workers execute **whole batches**
-//! through the shared [`BatchedEngine`] (one `attend_batch` call per
-//! batch — the dynamic batcher's groups finally reach the attention
-//! layer as batches, not loops of singles). Plain std threads — the
-//! workload is CPU-bound attention math, so an async runtime would only
-//! add scheduling noise (and this image vendors none).
+//! through the shared [`BatchedEngine`]'s unified `submit` door (one
+//! prefill-lane call per batch — the dynamic batcher's groups finally
+//! reach the attention layer as batches, not loops of singles). Plain
+//! std threads — the workload is CPU-bound attention math, so an async
+//! runtime would only add scheduling noise (and this image vendors
+//! none).
 //!
 //! With a [`GenConfig`] the server additionally runs a **generation
 //! scheduler** thread for autoregressive requests ([`GenRequest`]:
 //! prompt in, N tokens out). The scheduler keeps a set of in-flight
 //! [`DecodeSession`]s and loops: admit new arrivals (batched prefill
 //! through the engine), run **one decode step for every in-flight
-//! sequence** (one `decode_batch` per layer via
+//! sequence** (one decode-lane submit per layer via
 //! `Transformer::decode_step`), retire finished sequences. New
 //! arrivals therefore merge into the running decode loop after at most
-//! one step — the first slice of cross-request continuous batching.
-//! Every generated token costs `O(k·n + n·d)` (conv) or `O(n·d)`
-//! (exact) per head, never a re-prefill; seed hits, drift
-//! re-recoveries and per-step latency land in [`Metrics`].
+//! one step. Every generated token costs `O(k·n + n·d)` (conv) or
+//! `O(n·d)` (exact) per head, never a re-prefill; seed hits, drift
+//! re-recoveries, per-step latency and live-session KV bytes
+//! (`decode_resident_bytes`) land in [`Metrics`].
+//!
+//! **Continuous batching across op kinds.** The scheduler also drains
+//! the dispatcher's flushed attention batches: while decoding it
+//! converts them to prefill jobs and merges them into the *same*
+//! engine submit as the decode step
+//! (`Transformer::decode_step_with_jobs` — counted in
+//! `merged_attn_requests`); while idle it executes them standalone.
+//! Non-generation arrivals therefore stop waiting for a worker when
+//! the decode loop already has the engine hot. With `workers: 0` (and
+//! `gen` set) the scheduler's lane is the *only* attention executor —
+//! the fully unified single-door configuration.
 
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::cache::BasisCache;
 use super::metrics::Metrics;
 use super::router::{Backend, Router, RouterConfig};
-use crate::attention::batched::{AttnJob, BatchedBackend, BatchedEngine};
+use crate::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, EngineJob, JobOutput};
 use crate::attention::rope::rope_structured_qk;
 use crate::lowrank::LowRankConfig;
 use crate::model::{AttentionBackend, DecodeSession, Transformer};
 use crate::tensor::{Matrix, Rng};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Request payload: explicit tensors, or a synthetic structured
 /// workload generated from a seed (trace-driven benching).
@@ -114,6 +126,11 @@ pub struct GenResponse {
 pub struct ServerConfig {
     pub router: RouterConfig,
     pub batcher: BatcherConfig,
+    /// Attention worker threads. Clamped to ≥ 1 — except that `0` with
+    /// `gen` set spawns **no** worker threads: every attention batch is
+    /// then served by the generation scheduler's merge lane (merged
+    /// into decode submits while sequences are in flight, standalone
+    /// otherwise).
     pub workers: usize,
     pub cache_capacity: usize,
     /// Low-rank degree when the router picks LowRank.
@@ -222,9 +239,13 @@ impl Server {
 
         // Workers: drain the batch queue and execute each batch as ONE
         // engine call (all requests of the batch fan out across the
-        // engine pool together).
+        // engine pool together). `workers: 0` with a generation
+        // scheduler spawns none — the scheduler's lane serves
+        // attention batches instead.
+        let worker_count =
+            if cfg.workers == 0 && cfg.gen.is_some() { 0 } else { cfg.workers.max(1) };
         let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
+        for _ in 0..worker_count {
             let rx = batch_rx.clone();
             let tx = resp_tx.clone();
             let metrics_w = metrics.clone();
@@ -237,61 +258,35 @@ impl Server {
                     guard.recv()
                 };
                 let Ok(batch) = batch else { break };
-                let t0 = Instant::now();
-                let n_reqs = batch.requests.len();
-                if n_reqs == 0 {
-                    continue;
-                }
-                let mut jobs = Vec::with_capacity(n_reqs);
-                let mut meta = Vec::with_capacity(n_reqs);
-                for req in batch.requests {
-                    metrics_w.record_queue(t0.duration_since(req.submitted_at));
-                    let (q, k, v) = match req.payload {
-                        Payload::Explicit { q, k, v } => (q, k, v),
-                        Payload::Synthetic { seed } => synthesize(req.seq_len, req.d_model, seed),
-                    };
-                    let spec = match batch.backend {
-                        Backend::Exact => BatchedBackend::Exact,
-                        Backend::ConvBasis => BatchedBackend::Strided(router_w.k_budget(q.rows())),
-                        Backend::LowRank => BatchedBackend::LowRank(LowRankConfig::new(
-                            lowrank_degree,
-                            q.cols() as f64,
-                        )),
-                    };
-                    jobs.push(AttnJob::causal(0, 0, q, k, v, spec));
-                    meta.push((req.id, req.submitted_at));
-                }
-                let outs = engine_w.attend_batch(jobs);
-                for ((id, submitted_at), out) in meta.into_iter().zip(outs) {
-                    // Per-job wall time from the engine: exec latency
-                    // percentiles stay per-request under batching.
-                    metrics_w.record_exec(out.exec);
-                    metrics_w.record_e2e(submitted_at.elapsed());
-                    Metrics::incr(&metrics_w.requests_completed);
-                    let backend = if out.fell_back { Backend::Exact } else { batch.backend };
-                    let _ = tx.send(AttnResponse { id, y: out.y, backend, basis_k: out.basis_k });
-                }
-                Metrics::incr(&metrics_w.batches_executed);
+                execute_attn_batch(batch, &router_w, lowrank_degree, &engine_w, &metrics_w, &tx);
             }));
         }
-        drop(resp_tx);
 
         // Generation scheduler: in-flight decode sessions stepped in
         // lockstep through the engine, interleaved with batched prefill
-        // of new arrivals.
+        // of new arrivals — and, via the merge lane, with flushed
+        // attention batches.
         let (gen_tx, gen_resp_rx, gen_scheduler) = match cfg.gen {
             Some(gen_cfg) => {
                 let (gtx, grx) = mpsc::channel::<GenMsg>();
                 let (rtx, rrx) = mpsc::channel::<GenResponse>();
                 let engine_g = engine.clone();
                 let metrics_g = metrics.clone();
+                let lane = GenLane {
+                    batch_rx: batch_rx.clone(),
+                    attn_tx: resp_tx.clone(),
+                    router: Router::new(cfg.router),
+                    lowrank_degree: cfg.lowrank_degree,
+                    workers_present: worker_count > 0,
+                };
                 let handle = std::thread::spawn(move || {
-                    generation_loop(gen_cfg, grx, rtx, &engine_g, &metrics_g);
+                    generation_loop(gen_cfg, grx, rtx, &engine_g, &metrics_g, lane);
                 });
                 (Some(gtx), Some(rrx), Some(handle))
             }
             None => (None, None, None),
         };
+        drop(resp_tx);
 
         Server {
             dispatch_tx,
@@ -355,6 +350,119 @@ impl Server {
     }
 }
 
+/// Convert one flushed batch into engine prefill jobs plus the
+/// response metadata, recording queue latency. Shared by the worker
+/// threads and the generation scheduler's merge lane — both must
+/// produce bit-identical jobs for a given batch.
+fn batch_to_jobs(
+    batch: Batch,
+    router: &Router,
+    lowrank_degree: usize,
+    metrics: &Metrics,
+) -> (Vec<AttnJob>, Vec<(u64, Instant)>, Backend) {
+    let t0 = Instant::now();
+    let n_reqs = batch.requests.len();
+    let mut jobs = Vec::with_capacity(n_reqs);
+    let mut meta = Vec::with_capacity(n_reqs);
+    for req in batch.requests {
+        metrics.record_queue(t0.duration_since(req.submitted_at));
+        let (q, k, v) = match req.payload {
+            Payload::Explicit { q, k, v } => (q, k, v),
+            Payload::Synthetic { seed } => synthesize(req.seq_len, req.d_model, seed),
+        };
+        let spec = match batch.backend {
+            Backend::Exact => BatchedBackend::Exact,
+            Backend::ConvBasis => BatchedBackend::Strided(router.k_budget(q.rows())),
+            Backend::LowRank => {
+                BatchedBackend::LowRank(LowRankConfig::new(lowrank_degree, q.cols() as f64))
+            }
+        };
+        jobs.push(AttnJob::causal(0, 0, q, k, v, spec));
+        meta.push((req.id, req.submitted_at));
+    }
+    (jobs, meta, batch.backend)
+}
+
+/// Deliver one executed batch's outputs: per-request latency metrics,
+/// completion counters, responses.
+fn deliver_attn_outputs(
+    outs: Vec<JobOutput>,
+    meta: Vec<(u64, Instant)>,
+    backend: Backend,
+    metrics: &Metrics,
+    tx: &mpsc::Sender<AttnResponse>,
+) {
+    for ((id, submitted_at), out) in meta.into_iter().zip(outs) {
+        // Per-job wall time from the engine: exec latency percentiles
+        // stay per-request under batching.
+        metrics.record_exec(out.exec);
+        metrics.record_e2e(submitted_at.elapsed());
+        Metrics::incr(&metrics.requests_completed);
+        let b = if out.fell_back { Backend::Exact } else { backend };
+        let _ = tx.send(AttnResponse { id, y: out.y, backend: b, basis_k: out.basis_k });
+    }
+    Metrics::incr(&metrics.batches_executed);
+}
+
+/// Execute one batch standalone as a prefill-lane submit (worker
+/// threads, and the generation scheduler when no decode is in flight).
+fn execute_attn_batch(
+    batch: Batch,
+    router: &Router,
+    lowrank_degree: usize,
+    engine: &BatchedEngine,
+    metrics: &Metrics,
+    tx: &mpsc::Sender<AttnResponse>,
+) {
+    if batch.requests.is_empty() {
+        return;
+    }
+    let (jobs, meta, backend) = batch_to_jobs(batch, router, lowrank_degree, metrics);
+    let outs: Vec<JobOutput> = engine
+        .submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_prefill())
+        .collect();
+    deliver_attn_outputs(outs, meta, backend, metrics, tx);
+}
+
+/// The generation scheduler's handle on the attention path: where to
+/// drain flushed batches from, how to convert them (router policy),
+/// and where their responses go.
+struct GenLane {
+    batch_rx: Arc<Mutex<mpsc::Receiver<Batch>>>,
+    attn_tx: mpsc::Sender<AttnResponse>,
+    router: Router,
+    lowrank_degree: usize,
+    /// Whether attention worker threads exist. With workers the idle
+    /// scheduler blocks on `gen_rx` (workers own the attention queue);
+    /// without them it polls so attention traffic is never starved.
+    workers_present: bool,
+}
+
+impl GenLane {
+    /// Non-blocking drain of every currently flushed batch. Uses
+    /// `try_lock`: an attention worker parks *holding* the receiver
+    /// mutex while it waits for traffic, so a blocking lock here would
+    /// stall the decode loop — and a held lock means a worker is
+    /// already covering the queue. With `workers: 0` the lock is
+    /// always free and this lane sees every batch.
+    fn drain_pending(&self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        if let Ok(rx) = self.batch_rx.try_lock() {
+            while let Ok(b) = rx.try_recv() {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+/// How long the idle scheduler waits for generation work before
+/// polling the attention queue (only matters when `workers: 0` — with
+/// workers present they drain the queue themselves).
+const GEN_IDLE_POLL: Duration = Duration::from_millis(2);
+
 /// One in-flight generation, tracked next to its [`DecodeSession`]
 /// (parallel vectors: `Transformer::decode_step` wants the sessions as
 /// one contiguous `&mut [DecodeSession]`).
@@ -378,15 +486,18 @@ fn argmax(xs: &[f64]) -> usize {
 }
 
 /// The generation scheduler body: admit → prefill (batched) → one
-/// decode step for all in-flight sessions → retire finished; repeat.
-/// On shutdown it stops admitting and decodes the remaining sequences
-/// to completion (flush semantics, like the attention path).
+/// decode step for all in-flight sessions (merging any flushed
+/// attention batches into the same engine submit) → retire finished;
+/// repeat. On shutdown it stops admitting, decodes the remaining
+/// sequences to completion, and drains the attention queue (flush
+/// semantics, like the worker path).
 fn generation_loop(
     cfg: GenConfig,
     gen_rx: mpsc::Receiver<GenMsg>,
     resp_tx: mpsc::Sender<GenResponse>,
     engine: &BatchedEngine,
     metrics: &Metrics,
+    lane: GenLane,
 ) {
     let model = cfg.model;
     let backend = cfg.backend;
@@ -408,14 +519,47 @@ fn generation_loop(
     };
 
     loop {
-        // Admit new arrivals. Block only when idle (nothing to decode);
-        // otherwise drain without waiting so in-flight sequences keep
-        // stepping — this is what interleaves prefill with decode.
+        // Admit new arrivals. When idle (nothing to decode) wait
+        // briefly, serving any attention batches the dispatcher flushes
+        // meanwhile; while decoding, drain without waiting so in-flight
+        // sequences keep stepping — this is what interleaves prefill
+        // with decode.
         let mut arrivals: Vec<GenRequest> = Vec::new();
         if sessions.is_empty() && !shutting {
-            match gen_rx.recv() {
-                Ok(GenMsg::Request(r)) => arrivals.push(r),
-                Ok(GenMsg::Shutdown) | Err(_) => shutting = true,
+            if lane.workers_present {
+                // Workers own the attention queue; sleep until there is
+                // generation work (no idle polling).
+                match gen_rx.recv() {
+                    Ok(GenMsg::Request(r)) => arrivals.push(r),
+                    Ok(GenMsg::Shutdown) | Err(_) => shutting = true,
+                }
+            } else {
+                match gen_rx.recv_timeout(GEN_IDLE_POLL) {
+                    Ok(GenMsg::Request(r)) => arrivals.push(r),
+                    Ok(GenMsg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        shutting = true
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // Idle lane: execute any flushed attention
+                        // batches standalone (this lane is the only
+                        // executor when workers: 0).
+                        for batch in lane.drain_pending() {
+                            Metrics::add(
+                                &metrics.gen_lane_attn_requests,
+                                batch.requests.len() as u64,
+                            );
+                            execute_attn_batch(
+                                batch,
+                                &lane.router,
+                                lane.lowrank_degree,
+                                engine,
+                                metrics,
+                                &lane.attn_tx,
+                            );
+                        }
+                        continue;
+                    }
+                }
             }
         }
         while sessions.len() + arrivals.len() < max_concurrent {
@@ -431,8 +575,8 @@ fn generation_loop(
 
         if !arrivals.is_empty() {
             // Reject invalid prompts whole; batch-prefill the rest
-            // through the engine (one attend_batch per layer for ALL
-            // new arrivals together).
+            // through the engine (one prefill-lane submit per layer
+            // for ALL new arrivals together).
             let mut admitted: Vec<GenRequest> = Vec::new();
             for r in arrivals {
                 if r.prompt.is_empty() || r.prompt.len() > max_seq {
@@ -472,6 +616,9 @@ fn generation_loop(
                         Metrics::incr(&metrics.gen_tokens);
                     }
                     if flight.generated.len() >= flight.max_new || sess.len() >= max_seq {
+                        // Done straight out of prefill: release the KV
+                        // bytes the prefill just accounted.
+                        sess.retire(metrics);
                         respond(&flight, &resp_tx);
                     } else {
                         sessions.push(sess);
@@ -488,10 +635,34 @@ fn generation_loop(
             continue;
         }
 
+        // Merge lane: any attention batches the dispatcher has flushed
+        // ride this decode step's engine submit instead of waiting for
+        // a worker. Jobs are pure, so riders never change decode bits.
+        let mut rider_jobs: Vec<AttnJob> = Vec::new();
+        let mut rider_meta: Vec<(Vec<(u64, Instant)>, Backend, usize)> = Vec::new();
+        for batch in lane.drain_pending() {
+            let n_reqs = batch.requests.len();
+            if n_reqs == 0 {
+                continue;
+            }
+            Metrics::add(&metrics.gen_lane_attn_requests, n_reqs as u64);
+            Metrics::add(&metrics.merged_attn_requests, n_reqs as u64);
+            let (jobs, meta, b) = batch_to_jobs(batch, &lane.router, lane.lowrank_degree, metrics);
+            rider_jobs.extend(jobs);
+            rider_meta.push((meta, b, n_reqs));
+        }
+
         // One decode step for every in-flight sequence: feed each its
         // latest generated token, get the next token's logits.
         let next: Vec<usize> = flights.iter().map(|f| *f.generated.last().unwrap()).collect();
-        let logits = model.decode_step(&mut sessions, &next, engine);
+        let (logits, rider_outs) =
+            model.decode_step_with_jobs(&mut sessions, &next, engine, rider_jobs);
+        // Deliver rider responses batch by batch (input order holds).
+        let mut rest = rider_outs.into_iter();
+        for (meta, b, n_reqs) in rider_meta {
+            let outs: Vec<JobOutput> = rest.by_ref().take(n_reqs).collect();
+            deliver_attn_outputs(outs, meta, b, metrics, &lane.attn_tx);
+        }
         // Retire finished sequences (walk backwards so swap_remove is
         // index-stable).
         for i in (0..flights.len()).rev() {
@@ -500,10 +671,36 @@ fn generation_loop(
             f.generated.push(argmax(&logits[i]));
             Metrics::incr(&metrics.gen_tokens);
             if f.generated.len() >= f.max_new || sessions[i].len() >= max_seq {
+                sessions[i].retire(metrics);
                 respond(&flights[i], &resp_tx);
                 flights.swap_remove(i);
                 sessions.swap_remove(i);
             }
+        }
+    }
+
+    // Shutdown drain: serve whatever the dispatcher still flushes until
+    // it closes the queue. With worker threads present they compete for
+    // the same receiver — either executor is correct; with workers: 0
+    // this is the only path that honours flush semantics.
+    loop {
+        let batch = {
+            let rx = lane.batch_rx.lock().unwrap();
+            rx.recv()
+        };
+        match batch {
+            Ok(batch) => {
+                Metrics::add(&metrics.gen_lane_attn_requests, batch.requests.len() as u64);
+                execute_attn_batch(
+                    batch,
+                    &lane.router,
+                    lane.lowrank_degree,
+                    engine,
+                    metrics,
+                    &lane.attn_tx,
+                );
+            }
+            Err(_) => break,
         }
     }
 }
@@ -730,7 +927,7 @@ mod tests {
         // per layer (≤ 3 waves × layers calls), not once per token.
         assert!(
             s.batched_calls <= 3 * n_layers,
-            "per-token re-prefill detected: {} attend_batch calls",
+            "per-token re-prefill detected: {} prefill-lane submits",
             s.batched_calls
         );
     }
@@ -755,6 +952,69 @@ mod tests {
         assert_eq!(s.decode_seed_misses, 0);
         assert_eq!(s.decode_steps, 4 * per_step);
         assert_eq!(s.gen_tokens, 5);
+    }
+
+    #[test]
+    fn zero_workers_serves_attention_through_gen_lane() {
+        // workers: 0 + gen spawns no attention workers: every attention
+        // batch must flow through the generation scheduler's lane —
+        // merged into a decode submit while sequences are in flight,
+        // standalone otherwise — and the responses must stay exact.
+        let model = tiny_model(45);
+        let server = Server::start(ServerConfig {
+            router: RouterConfig { exact_below: 64, ..Default::default() },
+            batcher: BatcherConfig {
+                max_batch: 1, // flush every request immediately
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            workers: 0,
+            cache_capacity: 16,
+            lowrank_degree: 2,
+            gen: Some(GenConfig { model: model.clone(), backend: AttentionBackend::Exact, max_concurrent: 2 }),
+        });
+        // A long-ish generation keeps the decode loop hot while the
+        // attention requests arrive.
+        server.submit_generate(GenRequest {
+            id: 99,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 12,
+            submitted_at: Instant::now(),
+        });
+        let mut rng = Rng::seeded(451);
+        let (n, d) = (24, 8);
+        let mut oracles = Vec::new();
+        for i in 0..4u64 {
+            let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+            let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+            let v = Matrix::randn(n, d, &mut rng);
+            oracles.push(exact_attention(&q, &k, &v, &Mask::causal(n)));
+            server.submit(AttnRequest {
+                id: i,
+                seq_len: n,
+                d_model: d,
+                bounded_entries: false,
+                payload: Payload::Explicit { q, k, v },
+                submitted_at: Instant::now(),
+            });
+        }
+        let mut resps = server.collect(4);
+        resps.sort_by_key(|r| r.id);
+        for (resp, want) in resps.iter().zip(&oracles) {
+            assert_eq!(resp.backend, Backend::Exact);
+            assert!(crate::tensor::max_abs_diff(&resp.y, want) < 1e-10);
+        }
+        let gens = server.collect_generations(1);
+        assert_eq!(gens[0].tokens.len(), 12);
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.requests_completed, 4);
+        assert_eq!(
+            s.gen_lane_attn_requests, 4,
+            "with zero workers every attention request must ride the gen lane \
+             (merged: {})",
+            s.merged_attn_requests
+        );
+        // All sessions retired ⇒ the KV gauge must return to zero.
+        assert_eq!(s.decode_resident_bytes, 0);
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! The engine-side gradient lane: batched Definition 5.1 backward
+//! passes through [`BatchedEngine::submit`].
+//!
+//! The paper's efficiency claim is symmetric — attention *inference*
+//! and the training *gradient* both run in almost linear time through
+//! the same recovered conv basis (Theorem 5.6 / C.17) — but until this
+//! lane existed only the forward paths enjoyed the engine's worker
+//! pool, shared FFT plans, and `BasisCache`. A [`GradJob`] wraps one
+//! attention-loss problem (one (layer, head) in multi-head training)
+//! plus a [`FastGradConfig`]; the engine fans a batch of them over the
+//! same pool as prefill/decode work, with the same input-order
+//! determinism.
+//!
+//! **What the engine shares with this lane:**
+//!
+//! * the [`SharedFftPlanner`] — the gradient's `f·w` applies reuse the
+//!   engine-wide plan tables;
+//! * the [`BasisCache`] — the operator `f = D̃⁻¹ (M ∘ exp(A₁XA₂ᵀ))` is
+//!   keyed exactly like a prefill `BatchedBackend::Conv` job over
+//!   `Q = A₁X`, `K = A₂` (same content fingerprint, same
+//!   recovery-schedule tag), so a causal-mask gradient job reuses a
+//!   basis the forward pass recovered — and vice versa. Non-causal
+//!   masks skip the cache: the prefill path stores a
+//!   mask-complement-corrected basis there which the gradient pipeline
+//!   does not use, and sharing would break bit-equality with
+//!   [`grad_fast`](super::grad_fast).
+//!
+//! **Determinism.** A batched gradient is bit-identical to
+//! single-problem [`grad_fast`](super::grad_fast): recovery is a pure
+//! function of (Q, K, mask, config), FFT plans are pure functions of
+//! the transform length, and a cache hit replays a byte-identical
+//! basis. `tests/properties.rs` pins this for worker counts 1/2/8.
+//!
+//! **Fallback.** When recovery fails or the normalizer degenerates, the
+//! job is served by the dense [`grad_naive`](super::grad_naive) oracle
+//! (`O(n²d)`), flagged `fell_back` and counted in
+//! `Metrics::grad_fallbacks` — mirroring the prefill lane's
+//! exact-attention fallback.
+//!
+//! [`BatchedEngine::submit`]: crate::attention::batched::BatchedEngine::submit
+//! [`BatchedEngine`]: crate::attention::batched::BatchedEngine
+//! [`BatchedBackend::Conv`]: crate::attention::batched::BatchedBackend
+
+use super::fast::{grad_core, FOperator, FastGradientReport};
+use super::naive::{grad_naive, loss_naive};
+use super::AttentionLossProblem;
+use crate::attention::batched::{conv_fingerprint, recover_cfg_tag};
+use crate::attention::MaskKind;
+use crate::basis::RecoverConfig;
+use crate::coordinator::{BasisCache, CacheKey, CachedBasis, Metrics};
+use crate::fft::{FftPlanner, SharedFftPlanner};
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// Configuration of one fast-gradient evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct FastGradConfig {
+    /// Recovery budget for the conv basis of `M ∘ (A₁XA₂ᵀ)`.
+    pub recover: RecoverConfig,
+    /// Consult/populate the engine's `BasisCache` (causal masks only;
+    /// non-causal jobs always recover fresh). On by default — a repeat
+    /// evaluation at the same `X`, or a gradient following a forward
+    /// that already recovered this operator, then skips recovery.
+    pub use_cache: bool,
+}
+
+impl FastGradConfig {
+    pub fn new(recover: RecoverConfig) -> Self {
+        FastGradConfig { recover, use_cache: true }
+    }
+
+    /// Exact recovery at sequence length `n` (the oracle-grade config
+    /// the property tests use).
+    pub fn exact(n: usize) -> Self {
+        Self::new(RecoverConfig::exact(n))
+    }
+}
+
+/// One (layer, head) unit of gradient work: evaluate
+/// `∇_X L(X)` for an [`AttentionLossProblem`] at the point `x`.
+#[derive(Clone, Debug)]
+pub struct GradJob {
+    /// Layer index (cache key component).
+    pub layer: u32,
+    /// Head index within the layer (cache key component).
+    pub head: u32,
+    /// The Definition 5.1 instance (for self-attention training,
+    /// `A₁ = A₂ = A₃ =` the head's input block — Remark 5.2).
+    /// `Arc`-shared: the problem data is immutable across a training
+    /// run, so re-submitting it every GD step (as
+    /// `model::train_attention_heads` does) costs a pointer clone, not
+    /// a copy of the `n×d` matrices.
+    pub problem: Arc<AttentionLossProblem>,
+    /// The point `X ∈ R^{d×d}` the gradient is taken at.
+    pub x: Matrix,
+    pub cfg: FastGradConfig,
+}
+
+/// Result of one gradient job.
+#[derive(Clone, Debug)]
+pub struct GradOutput {
+    /// `∇_X L` (`d×d`).
+    pub grad: Matrix,
+    /// `L(X)` at the evaluation point (from the backward's residual —
+    /// no separate forward pass).
+    pub loss: f64,
+    /// Complexity/observability report (`basis_k`, probe and apply
+    /// counts, loss).
+    pub report: FastGradientReport,
+    /// Whether the `f`-operator basis came from the engine's cache.
+    pub cache_hit: bool,
+    /// Whether the fast path failed and the dense `grad_naive` oracle
+    /// served this job.
+    pub fell_back: bool,
+    /// Wall time this job spent executing on its worker.
+    pub exec: std::time::Duration,
+}
+
+/// Execute one gradient job (called by the engine's workers from
+/// `BatchedEngine::submit`).
+pub(crate) fn execute_grad_job(
+    job: GradJob,
+    planner: &Arc<SharedFftPlanner>,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    model_id: u64,
+) -> GradOutput {
+    let t0 = std::time::Instant::now();
+    let mut out = execute_grad_job_inner(job, planner, cache, metrics, model_id);
+    out.exec = t0.elapsed();
+    metrics.record_grad(out.exec);
+    out
+}
+
+fn execute_grad_job_inner(
+    job: GradJob,
+    planner: &Arc<SharedFftPlanner>,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    model_id: u64,
+) -> GradOutput {
+    let GradJob { layer, head, problem: p, x, cfg } = job;
+    let n = p.n();
+    // Q = A₁X — needed for both the cache fingerprint and recovery.
+    let q = p.a1.matmul(&x);
+    // Cache only causal-mask operators: a non-causal prefill entry
+    // carries a mask-complement correction the gradient pipeline does
+    // not apply, so the namespaces must not mix (see module docs).
+    let key = if cfg.use_cache && matches!(p.mask.kind(), MaskKind::Causal) {
+        Some(CacheKey {
+            model_id,
+            layer,
+            head,
+            seq_len: n,
+            qk_fingerprint: conv_fingerprint(&q, &p.a2, &p.mask) ^ recover_cfg_tag(&cfg.recover),
+        })
+    } else {
+        None
+    };
+    if let Some(key) = &key {
+        if let Some(hit) = cache.get(key) {
+            // Cached entries are guaranteed sound (positive finite D̃ —
+            // both writers below and the prefill path check), so this
+            // reconstruction cannot fail.
+            let local = FftPlanner::with_shared(Arc::clone(planner));
+            if let Ok((mut f_op, mut report)) = FOperator::from_cached(hit.post_basis, hit.d_tilde, local)
+            {
+                Metrics::incr(&metrics.cache_hits);
+                Metrics::incr(&metrics.grad_cache_hits);
+                let (grad, loss) = grad_core(&p, &mut f_op);
+                report.f_applies = f_op.applies();
+                report.loss = loss;
+                return GradOutput {
+                    grad,
+                    loss,
+                    report,
+                    cache_hit: true,
+                    fell_back: false,
+                    exec: std::time::Duration::ZERO,
+                };
+            }
+        }
+        Metrics::incr(&metrics.cache_misses);
+        Metrics::incr(&metrics.grad_cache_misses);
+    }
+    let local = FftPlanner::with_shared(Arc::clone(planner));
+    match FOperator::build_from_q(&q, &p, &cfg.recover, local) {
+        Ok((mut f_op, mut report)) => {
+            if let Some(key) = key {
+                let (basis, d_tilde) = f_op.cacheable_parts();
+                // Same soundness guard as the decode seeding path: only
+                // finite, positive normalizers may be served to future
+                // cache hits.
+                if d_tilde.iter().all(|&v| v > 0.0 && v.is_finite()) {
+                    cache.put(
+                        key,
+                        CachedBasis { post_basis: basis.clone(), d_tilde: d_tilde.to_vec() },
+                    );
+                }
+            }
+            let (grad, loss) = grad_core(&p, &mut f_op);
+            report.f_applies = f_op.applies();
+            report.loss = loss;
+            GradOutput {
+                grad,
+                loss,
+                report,
+                cache_hit: false,
+                fell_back: false,
+                exec: std::time::Duration::ZERO,
+            }
+        }
+        Err(_) => {
+            // Recovery failed (degenerate normalizer / no usable
+            // structure): the dense analytic oracle is total.
+            Metrics::incr(&metrics.grad_fallbacks);
+            let loss = loss_naive(&p, &x);
+            GradOutput {
+                grad: grad_naive(&p, &x),
+                loss,
+                // basis_k/probes/applies are genuinely 0 (no basis was
+                // used), but the loss invariant — report.loss == L(X)
+                // — must hold on every path.
+                report: FastGradientReport { loss, ..Default::default() },
+                cache_hit: false,
+                fell_back: true,
+                exec: std::time::Duration::ZERO,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::batched::{
+        AttnJob, BatchedBackend, BatchedEngine, EngineConfig, EngineJob,
+    };
+    use crate::gradient::grad_fast;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    fn engine(workers: usize) -> BatchedEngine {
+        BatchedEngine::new(EngineConfig { workers, cache_capacity: 64 })
+    }
+
+    fn grad_jobs(seed: u64, count: u32) -> Vec<GradJob> {
+        let mut rng = Rng::seeded(seed);
+        (0..count)
+            .map(|i| {
+                let n = 12 + 4 * i as usize;
+                let d = 3;
+                let problem = Arc::new(AttentionLossProblem::random_structured(n, d, &mut rng));
+                let x = Matrix::randn(d, d, &mut rng).scale(0.3);
+                GradJob { layer: i, head: 0, problem, x, cfg: FastGradConfig::exact(n) }
+            })
+            .collect()
+    }
+
+    fn submit_grads(e: &BatchedEngine, jobs: Vec<GradJob>) -> Vec<GradOutput> {
+        e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::gradient(i as u64, j)).collect())
+            .into_iter()
+            .map(|o| o.result.into_gradient())
+            .collect()
+    }
+
+    #[test]
+    fn batched_grad_bitmatches_grad_fast() {
+        let e = engine(2);
+        let jobs = grad_jobs(900, 4);
+        let singles: Vec<(Matrix, f64)> = jobs
+            .iter()
+            .map(|j| {
+                let (g, r) = grad_fast(&j.problem, &j.x, &j.cfg.recover).unwrap();
+                (g, r.loss)
+            })
+            .collect();
+        let outs = submit_grads(&e, jobs);
+        for (out, (g, loss)) in outs.iter().zip(&singles) {
+            assert!(!out.fell_back);
+            assert!(!out.cache_hit, "fresh engine: first evaluation recovers");
+            assert_eq!(max_abs_diff(&out.grad, g), 0.0, "batched grad must bit-match grad_fast");
+            assert_eq!(out.loss, *loss);
+        }
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.grad_calls, 1);
+        assert_eq!(snap.grad_jobs, 4);
+        assert_eq!(snap.grad_fallbacks, 0);
+        assert_eq!(snap.grad.count, 4, "per-job latency recorded");
+    }
+
+    #[test]
+    fn repeat_evaluation_hits_basis_cache() {
+        // Same (problem, X) twice: the second submit reuses the cached
+        // operator basis — zero recovery probes — and stays bitwise
+        // identical.
+        let e = engine(2);
+        let first = submit_grads(&e, grad_jobs(901, 3));
+        let second = submit_grads(&e, grad_jobs(901, 3));
+        for (a, b) in first.iter().zip(&second) {
+            assert!(b.cache_hit, "second evaluation must hit the cache");
+            assert_eq!(b.report.recover_probes, 0);
+            assert_eq!(max_abs_diff(&a.grad, &b.grad), 0.0, "cache hit must be bit-identical");
+            assert_eq!(a.loss, b.loss);
+        }
+        let snap = e.metrics().snapshot();
+        assert!(snap.cache_hits >= 3);
+        assert_eq!(snap.grad_cache_hits, 3, "lane-local hit accounting");
+        assert_eq!(snap.grad_cache_misses, 3, "first evaluation recovered fresh");
+    }
+
+    #[test]
+    fn gradient_reuses_basis_a_prefill_conv_job_recovered() {
+        // Forward then backward over the same operator content: the
+        // prefill `Conv` job and the gradient job share a cache key by
+        // construction, so training's backward starts recovery-free.
+        let mut rng = Rng::seeded(902);
+        let (n, d) = (20, 3);
+        let problem = Arc::new(AttentionLossProblem::random_structured(n, d, &mut rng));
+        let x = Matrix::eye(d);
+        let cfg = FastGradConfig::exact(n);
+        let e = engine(2);
+        // Prefill with Q = A₁X, K = A₂ under the same recovery config.
+        let q = problem.a1.matmul(&x);
+        let v = Matrix::randn(n, d, &mut rng);
+        let pre = e.submit(vec![EngineJob::prefill(
+            0,
+            AttnJob {
+                layer: 7,
+                head: 1,
+                q,
+                k: problem.a2.clone(),
+                v,
+                mask: Some(problem.mask.clone()),
+                backend: BatchedBackend::Conv(cfg.recover),
+            },
+        )]);
+        assert!(!pre[0].result.clone().into_prefill().fell_back);
+        let outs = submit_grads(
+            &e,
+            vec![GradJob { layer: 7, head: 1, problem: Arc::clone(&problem), x: x.clone(), cfg }],
+        );
+        assert!(outs[0].cache_hit, "gradient must reuse the forward's recovered basis");
+        let (want, _) = grad_fast(&problem, &x, &cfg.recover).unwrap();
+        assert_eq!(max_abs_diff(&outs[0].grad, &want), 0.0);
+    }
+
+    #[test]
+    fn failed_recovery_falls_back_to_dense_oracle() {
+        // A zero recovery budget fails deterministically; the lane must
+        // serve the dense gradient instead of erroring, and flag it.
+        let mut rng = Rng::seeded(903);
+        let (n, d) = (12, 3);
+        let problem = Arc::new(AttentionLossProblem::random_structured(n, d, &mut rng));
+        let x = Matrix::randn(d, d, &mut rng).scale(0.3);
+        let cfg = FastGradConfig {
+            recover: RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 },
+            use_cache: true,
+        };
+        let e = engine(1);
+        let outs = submit_grads(
+            &e,
+            vec![GradJob { layer: 0, head: 0, problem: Arc::clone(&problem), x: x.clone(), cfg }],
+        );
+        assert!(outs[0].fell_back);
+        assert!(!outs[0].cache_hit);
+        let want = grad_naive(&problem, &x);
+        assert_eq!(max_abs_diff(&outs[0].grad, &want), 0.0);
+        assert_eq!(outs[0].loss, loss_naive(&problem, &x));
+        assert_eq!(outs[0].report.loss, outs[0].loss, "report.loss holds on the fallback path");
+        assert!(outs[0].grad.is_finite());
+        assert_eq!(e.metrics().snapshot().grad_fallbacks, 1);
+    }
+}

@@ -21,15 +21,27 @@ use crate::tensor::Matrix;
 pub struct FastGradientReport {
     /// Recovered basis size `k`.
     pub basis_k: usize,
-    /// Column probes used by recovery.
+    /// Column probes used by recovery (0 when the basis came from a
+    /// cache).
     pub recover_probes: usize,
     /// Number of `f·w` basis applications performed.
     pub f_applies: usize,
+    /// The Definition 5.1 objective `L(X)` at this point — computed for
+    /// free from the residual `c = f·h − E` the backward pass already
+    /// materializes (so batched training reads per-head losses without
+    /// a second forward).
+    pub loss: f64,
 }
 
 /// The conv-backed normalized-attention operator `f(x)·w`.
-struct FOperator {
+///
+/// `pub(crate)` so the engine's batched gradient lane
+/// ([`crate::gradient::batched`]) can build it from a cached basis and
+/// a shared FFT planner while this module keeps the single-problem
+/// entry points.
+pub(crate) struct FOperator {
     post_basis: KConvBasis,
+    d_tilde: Vec<f64>,
     d_inv: Vec<f64>,
     planner: FftPlanner,
     applies: usize,
@@ -39,13 +51,27 @@ impl FOperator {
     /// Build from the problem: recover the basis of `M ∘ (A₁XA₂ᵀ)` using
     /// `Q = A₁X`, `K = A₂` (so `QKᵀ = A₁XA₂ᵀ`), exp-transform, and take
     /// row sums as the normalizer.
-    fn build(
+    pub(crate) fn build(
         p: &AttentionLossProblem,
         x: &Matrix,
         cfg: &RecoverConfig,
     ) -> Result<(Self, FastGradientReport), AttentionError> {
         let q = p.a1.matmul(x);
-        let (pre, stats) = recover(&q, &p.a2, &p.mask, cfg)?;
+        Self::build_from_q(&q, p, cfg, FftPlanner::new())
+    }
+
+    /// [`Self::build`] with a precomputed `Q = A₁X` and a caller-owned
+    /// planner (the batched lane fingerprints `Q` for its cache key, so
+    /// it already paid the `T_mat(n,d,d)`, and threads the engine's
+    /// shared plan cache through). Bit-identical to [`Self::build`]:
+    /// FFT plans are pure functions of the transform length.
+    pub(crate) fn build_from_q(
+        q: &Matrix,
+        p: &AttentionLossProblem,
+        cfg: &RecoverConfig,
+        planner: FftPlanner,
+    ) -> Result<(Self, FastGradientReport), AttentionError> {
+        let (pre, stats) = recover(q, &p.a2, &p.mask, cfg)?;
         let post = exp_transform(&pre, true);
         let d = post.row_sums();
         for (row, &val) in d.iter().enumerate() {
@@ -57,12 +83,46 @@ impl FOperator {
             basis_k: post.k(),
             recover_probes: stats.columns_probed,
             f_applies: 0,
+            loss: 0.0,
         };
         let d_inv = d.iter().map(|&v| 1.0 / v).collect();
-        Ok((
-            FOperator { post_basis: post, d_inv, planner: FftPlanner::new(), applies: 0 },
-            report,
-        ))
+        Ok((FOperator { post_basis: post, d_tilde: d, d_inv, planner, applies: 0 }, report))
+    }
+
+    /// Rebuild the operator from a cached `(post_basis, d̃)` pair —
+    /// what a prefill job or an earlier gradient job left in the
+    /// engine's `BasisCache`. Skips recovery entirely; the normalizer
+    /// inverse is recomputed with the same float ops as
+    /// [`Self::build_from_q`], so a cache hit is bit-identical to a
+    /// fresh recovery of identical content.
+    pub(crate) fn from_cached(
+        post_basis: KConvBasis,
+        d_tilde: Vec<f64>,
+        planner: FftPlanner,
+    ) -> Result<(Self, FastGradientReport), AttentionError> {
+        for (row, &val) in d_tilde.iter().enumerate() {
+            if !(val > 0.0) {
+                return Err(AttentionError::DegenerateNormalizer { row, value: val });
+            }
+        }
+        let report = FastGradientReport {
+            basis_k: post_basis.k(),
+            recover_probes: 0,
+            f_applies: 0,
+            loss: 0.0,
+        };
+        let d_inv = d_tilde.iter().map(|&v| 1.0 / v).collect();
+        Ok((FOperator { post_basis, d_tilde, d_inv, planner, applies: 0 }, report))
+    }
+
+    /// The cacheable halves: (post-exp basis, normalizer diagonal `D̃`).
+    pub(crate) fn cacheable_parts(&self) -> (&KConvBasis, &[f64]) {
+        (&self.post_basis, &self.d_tilde)
+    }
+
+    /// `f·w` applications performed so far.
+    pub(crate) fn applies(&self) -> usize {
+        self.applies
     }
 
     /// `f·w` — one k-conv FFT apply plus a diagonal scale:
@@ -107,15 +167,27 @@ pub fn grad_fast(
     x: &Matrix,
     cfg: &RecoverConfig,
 ) -> Result<(Matrix, FastGradientReport), AttentionError> {
+    let (mut f_op, mut report) = FOperator::build(p, x, cfg)?;
+    let (g, loss) = grad_core(p, &mut f_op);
+    report.f_applies = f_op.applies;
+    report.loss = loss;
+    Ok((g, report))
+}
+
+/// The backward body, generic over how the `f`-operator was obtained
+/// (fresh recovery or a cache hit): the tensor-trick pipeline of
+/// Lemmas C.10–C.16. Returns `(∇L, L(X))` — the loss falls out of the
+/// residual `c` for free.
+pub(crate) fn grad_core(p: &AttentionLossProblem, f_op: &mut FOperator) -> (Matrix, f64) {
     let n = p.n();
     let d = p.d();
-    let (mut f_op, mut report) = FOperator::build(p, x, cfg)?;
 
     // h(y) = A₃Y — T_mat(n,d,d) (Lemma C.10 part 2).
     let h = p.h();
     // c = f·h − E — d basis applies (Lemma C.11).
     let fh = f_op.apply_matrix(&h);
     let c = fh.sub(&p.e);
+    let loss = 0.5 * c.data().iter().map(|v| v * v).sum::<f64>();
     // q = c·hᵀ, kept factored (Lemma C.12): U_a = c, U_b = h.
 
     // r_j = ⟨f_j, q_j⟩ = ⟨(f·h)_j, c_j⟩ (Lemma C.14, using q = c hᵀ ⇒
@@ -148,10 +220,9 @@ pub fn grad_fast(
         }
         pa2.set_col(col, &acc);
     }
-    report.f_applies = f_op.applies;
 
     // ∇L = A₁ᵀ (p·A₂) — T_mat(d,n,d) (Lemma C.16).
-    Ok((p.a1.transpose().matmul(&pa2), report))
+    (p.a1.transpose().matmul(&pa2), loss)
 }
 
 /// Dense-f variant of the fast pipeline (ablation: same factored-q /
@@ -220,6 +291,33 @@ mod tests {
         for (a, b) in fast.iter().zip(&dense) {
             assert!((a - b).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn report_loss_matches_loss_fast() {
+        let mut rng = Rng::seeded(174);
+        let p = AttentionLossProblem::random_structured(16, 3, &mut rng);
+        let x = Matrix::randn(3, 3, &mut rng).scale(0.2);
+        let cfg = RecoverConfig::exact(16);
+        let (_, report) = grad_fast(&p, &x, &cfg).unwrap();
+        let l = loss_fast(&p, &x, &cfg).unwrap();
+        assert_eq!(report.loss, l, "the backward's residual is the forward's loss");
+    }
+
+    #[test]
+    fn from_cached_operator_is_bit_identical() {
+        let mut rng = Rng::seeded(175);
+        let p = AttentionLossProblem::random_structured(18, 3, &mut rng);
+        let x = Matrix::randn(3, 3, &mut rng).scale(0.3);
+        let cfg = RecoverConfig::exact(18);
+        let (mut fresh, _) = FOperator::build(&p, &x, &cfg).unwrap();
+        let (basis, d_tilde) = fresh.cacheable_parts();
+        let (mut cached, _) =
+            FOperator::from_cached(basis.clone(), d_tilde.to_vec(), FftPlanner::new()).unwrap();
+        let (g_fresh, l_fresh) = grad_core(&p, &mut fresh);
+        let (g_cached, l_cached) = grad_core(&p, &mut cached);
+        assert_eq!(max_abs_diff(&g_fresh, &g_cached), 0.0);
+        assert_eq!(l_fresh, l_cached);
     }
 
     #[test]

@@ -21,15 +21,25 @@
 //!   (Lemma C.12), `p₁` via the diag-sandwich identity (Lemma C.13),
 //!   `p₂ = diag(r)·f` (Lemmas C.14–C.15).
 //!
+//! Batched execution: [`batched::GradJob`] wraps one problem for the
+//! engine's unified [`submit`] door — all (layer, head) gradients of a
+//! training step fan over the worker pool in one call, sharing the
+//! engine's FFT plans and recovered-basis cache (bit-identical to
+//! per-problem [`grad_fast`]; see `tests/properties.rs`).
+//!
+//! [`submit`]: crate::attention::batched::BatchedEngine::submit
+//!
 //! Note: Definition C.7 in the paper writes `p = p₁ + p₂` while defining
 //! `p₂ := f fᵀ q`; the softmax Jacobian (and the finite-difference
 //! oracle) require `p = p₁ − p₂`. We implement the minus and verify it
 //! against finite differences in the tests.
 
+pub mod batched;
 pub mod fast;
 pub mod naive;
 pub mod optimize;
 
+pub use batched::{FastGradConfig, GradJob, GradOutput};
 pub use fast::{grad_fast, loss_fast, FastGradientReport};
 pub use naive::{grad_finite_diff, grad_naive, loss_naive};
 pub use optimize::{solve, SolveTrace, SolverConfig};

@@ -29,17 +29,20 @@
 //! * [`attention`] — exact attention oracle, conv-basis attention
 //!   (Algorithm 1), masks (causal / LongLora / continuous-row /
 //!   distinct-r / row-change), RoPE, the full (non-causal)
-//!   self-attention split of Appendix A, the **batched multi-head
-//!   engine** ([`attention::batched`]) that evaluates all heads of a
-//!   batch of sequences in one call, and the **incremental decode
-//!   path** ([`attention::decode`]) that attends one appended token in
-//!   `O(k·n + n·d)` from a cached basis.
+//!   self-attention split of Appendix A, the **batched engine**
+//!   ([`attention::batched`]) whose single typed
+//!   [`submit`](attention::batched::BatchedEngine::submit) door fans
+//!   prefill, decode *and* gradient jobs over one worker pool, and the
+//!   **incremental decode path** ([`attention::decode`]) that attends
+//!   one appended token in `O(k·n + n·d)` from a cached basis.
 //! * [`lowrank`] — the [AS23] `(ε,k)`-approximation via polynomial
 //!   features and the mask-aware multiplies of Appendix D
 //!   (prefix-sum, support-delta, segment-tree, distinct-r).
 //! * [`gradient`] — attention-loss gradient (Definition 5.1): dense
-//!   oracle, finite differences, and the fast conv+low-rank path of
-//!   Appendix C.
+//!   oracle, finite differences, the fast conv+low-rank path of
+//!   Appendix C, and the engine's batched lane
+//!   ([`gradient::batched`]) that evaluates every (layer, head)
+//!   gradient of a training step in one `submit` call.
 //! * [`model`] — a small decoder-only transformer with a pluggable
 //!   attention backend, Adam, and a training loop (used by the Figure 4
 //!   and end-to-end experiments).
@@ -53,25 +56,34 @@
 //!
 //! ## Architecture
 //!
-//! The full request flow — prefill *and* decode — is documented in
-//! `ARCHITECTURE.md` at the repository root; the short version:
+//! The full request flow — prefill, decode *and* gradient — is
+//! documented in `ARCHITECTURE.md` at the repository root; the short
+//! version: everything reaches one door,
+//! [`attention::batched::BatchedEngine::submit`], as a typed
+//! [`attention::batched::EngineJob`].
 //!
 //! * **Prefill / one-shot attention**: requests → `Router` →
-//!   `DynamicBatcher` → server workers → one
-//!   [`attention::batched::BatchedEngine::attend_batch`] per batch.
-//!   Every (sequence, head) pair is one
+//!   `DynamicBatcher` → server workers → one prefill-lane `submit` per
+//!   batch. Every (sequence, head) pair is one
 //!   [`attention::batched::AttnJob`]; jobs are pure, so results are
 //!   bit-identical for any worker count. *Recover once, apply per V*
-//!   happens engine-wide through the shared
+//!   happens engine-wide through the shared lock-striped
 //!   [`coordinator::BasisCache`].
 //! * **Autoregressive decode**: generation requests
 //!   ([`coordinator::GenRequest`]) → the server's decode scheduler →
 //!   `model::Transformer::prefill_batch` (seeds per-head
 //!   [`attention::decode::DecodeState`]s from the basis cache) → one
-//!   [`attention::batched::BatchedEngine::decode_batch`] per layer per
-//!   generated token — `O(k·n + n·d)` per (layer, head) step, never a
-//!   re-prefill, with drift-triggered re-recovery surfaced in
-//!   [`coordinator::Metrics`].
+//!   decode-lane `submit` per layer per generated token — `O(k·n + n·d)`
+//!   per (layer, head) step, never a re-prefill, with drift-triggered
+//!   re-recovery and live-session KV bytes surfaced in
+//!   [`coordinator::Metrics`]. The scheduler's merge lane lets flushed
+//!   attention batches ride an in-flight decode submit (continuous
+//!   batching across op kinds).
+//! * **Training gradients**: [`gradient::batched::GradJob`]s — one per
+//!   (layer, head) Definition 5.1 problem — fan through the gradient
+//!   lane in one `submit` per step (`model::train_attention_heads`),
+//!   bit-identical to single-problem [`gradient::grad_fast`] and
+//!   sharing recovered bases with the forward paths.
 //!
 //! `examples/serve_requests.rs` drives both paths end-to-end (prompt
 //! in, tokens out, metrics report); `benches/decode_step.rs` prices a
@@ -110,9 +122,10 @@ pub mod util;
 pub mod prelude {
     pub use crate::attention::batched::{
         AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, DecodeOutput, EngineConfig,
-        JobOutput,
+        EngineJob, EngineOp, EngineOutput, EngineResult, JobOutput,
     };
     pub use crate::attention::decode::DecodeState;
+    pub use crate::gradient::batched::{FastGradConfig, GradJob, GradOutput};
     pub use crate::model::{AttentionBackend, DecodeSession, ModelConfig, Transformer};
     pub use crate::attention::rope::{rope_structured_qk, Rope};
     pub use crate::attention::{

@@ -18,8 +18,15 @@
 //! [`Transformer::prefill_batch`] builds a [`DecodeSession`] (KV caches
 //! + per-head conv decode states seeded from the engine's basis cache)
 //! and [`Transformer::decode_step`] advances a batch of sessions one
-//! token per call through `BatchedEngine::decode_batch` — no per-token
-//! re-prefill.
+//! token per call through decode-lane `BatchedEngine::submit` calls —
+//! no per-token re-prefill. `decode_step_with_jobs` additionally lets
+//! prefill jobs ride a decode step's submit (the server's
+//! continuous-batching merge lane), and live sessions report their KV
+//! memory through `Metrics::decode_resident_bytes`
+//! ([`DecodeSession::resident_bytes`] / [`DecodeSession::retire`]).
+//!
+//! For training, [`train_attention_heads`] steps every (layer, head)
+//! Definition 5.1 problem with **one gradient-lane submit per step**.
 
 mod backend;
 mod optim;
@@ -28,7 +35,10 @@ mod transformer;
 
 pub use backend::AttentionBackend;
 pub use optim::Adam;
-pub use train::{eval_classifier, train_classifier, train_lm, TrainConfig, TrainLog};
+pub use train::{
+    eval_classifier, train_attention_heads, train_classifier, train_lm, HeadProblem,
+    HeadTrainConfig, HeadTrainResult, TrainConfig, TrainLog,
+};
 pub use transformer::{DecodeSession, ForwardRecord, ModelConfig, Transformer};
 
 #[cfg(test)]

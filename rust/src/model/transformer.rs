@@ -6,9 +6,23 @@
 //! for the sentiment task).
 
 use super::backend::AttentionBackend;
-use crate::attention::batched::{AttnJob, BatchedEngine, DecodeJob, DecodeOp};
+use crate::attention::batched::{
+    AttnJob, BatchedEngine, DecodeJob, DecodeOp, DecodeOutput, EngineJob, JobOutput,
+};
 use crate::attention::rope::Rope;
+use crate::coordinator::Metrics;
 use crate::tensor::{Matrix, Rng};
+
+/// Fan a prefill-only batch through the engine's unified door and
+/// unwrap the lane (the model layer's jobs are index-keyed; results
+/// are input-ordered by contract).
+fn submit_prefill(engine: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
+    engine
+        .submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_prefill())
+        .collect()
+}
 
 /// Model hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -155,6 +169,32 @@ impl DecodeSession {
     /// Tokens consumed so far (prompt + fed generations).
     pub fn tokens(&self) -> &[usize] {
         &self.tokens
+    }
+
+    /// Bytes resident in this session: per-layer KV caches (K, V and —
+    /// for conv decode — Q rows) plus per-head conv decode states, plus
+    /// the token buffer. This is what the serving layer's
+    /// `decode_resident_bytes` gauge sums over live sessions.
+    pub fn resident_bytes(&self) -> usize {
+        let mut floats = 0usize;
+        for l in &self.layers {
+            floats += l.k_rot.rows() * l.k_rot.cols()
+                + l.v.rows() * l.v.cols()
+                + l.q_rot.rows() * l.q_rot.cols();
+            for s in l.states.iter().flatten() {
+                floats += s.memory_floats();
+            }
+        }
+        floats * std::mem::size_of::<f64>() + self.tokens.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Release this session's memory from the `decode_resident_bytes`
+    /// gauge. Call exactly once when a session leaves service (the
+    /// generation scheduler does this on retirement); the session's
+    /// bytes were added by `Transformer::prefill_batch` and grown by
+    /// `Transformer::decode_step`.
+    pub fn retire(&self, metrics: &Metrics) {
+        Metrics::sub(&metrics.decode_resident_bytes, self.resident_bytes() as u64);
     }
 
     /// Current sequence length.
@@ -486,7 +526,7 @@ impl Transformer {
                     jobs.push(AttnJob::causal(li as u32, h as u32, qh, kh, vh, spec.clone()));
                 }
             }
-            let outs = engine.attend_batch(jobs);
+            let outs = submit_prefill(engine, jobs);
             // Scatter: finish the layer per sequence.
             for (s, x) in xs.iter_mut().enumerate() {
                 let n = x.rows();
@@ -526,8 +566,8 @@ impl Transformer {
     }
 
     /// Prefill a batch of prompts for autoregressive decoding: run the
-    /// batched-engine forward (one `attend_batch` per layer, exactly
-    /// like [`Self::forward_batch`]) while **retaining** per-layer KV
+    /// batched-engine forward (one prefill-lane `submit` per layer,
+    /// exactly like [`Self::forward_batch`]) while **retaining** per-layer KV
     /// caches, and — for conv backends — seed every (layer, head)
     /// [`DecodeState`](crate::attention::decode::DecodeState) straight
     /// from the engine's `BasisCache` (the prefill jobs just recovered
@@ -610,7 +650,7 @@ impl Transformer {
                     states: (0..nh).map(|_| None).collect(),
                 });
             }
-            let outs = engine.attend_batch(jobs);
+            let outs = submit_prefill(engine, jobs);
             // Seed conv decode states from the bases the jobs above
             // just recovered and cached.
             if let DecodeOp::Conv { k_bases, .. } = &op {
@@ -650,6 +690,10 @@ impl Transformer {
             }
         }
 
+        // KV-cache memory accounting: the new sessions are now live.
+        let resident: usize = sessions.iter().map(|s| s.resident_bytes()).sum();
+        Metrics::add(&engine.metrics().decode_resident_bytes, resident as u64);
+
         xs.into_iter()
             .zip(sessions)
             .map(|(x, sess)| {
@@ -675,9 +719,9 @@ impl Transformer {
 
     /// One autoregressive decode step for a batch of in-flight
     /// sessions: feed `next_tokens[i]` to `sessions[i]`, run every
-    /// (session, head) attention as **one [`BatchedEngine::decode_batch`]
-    /// call per layer** — no per-token re-prefill anywhere — and return
-    /// each session's next-token LM logits.
+    /// (session, head) attention as **one [`BatchedEngine::submit`]
+    /// call of decode jobs per layer** — no per-token re-prefill
+    /// anywhere — and return each session's next-token LM logits.
     ///
     /// All non-attention arithmetic is row-local and replicates the
     /// full forward's float-op order exactly (see the private
@@ -694,10 +738,35 @@ impl Transformer {
         next_tokens: &[usize],
         engine: &BatchedEngine,
     ) -> Vec<Vec<f64>> {
+        self.decode_step_with_jobs(sessions, next_tokens, engine, Vec::new()).0
+    }
+
+    /// [`Self::decode_step`] with **extra prefill jobs merged into the
+    /// first layer's engine submit** — the continuous-batching hook the
+    /// server's generation scheduler uses to let non-generation
+    /// attention arrivals ride an in-flight decode step instead of
+    /// waiting for the next batcher flush. Returns the decode logits
+    /// plus the extra jobs' outputs (in the order given).
+    ///
+    /// Merging never changes decode results: every engine job is pure
+    /// and results are input-indexed, so the logits are bit-identical
+    /// to a plain [`Self::decode_step`] call with the same sessions.
+    pub fn decode_step_with_jobs(
+        &self,
+        sessions: &mut [DecodeSession],
+        next_tokens: &[usize],
+        engine: &BatchedEngine,
+        mut extra: Vec<AttnJob>,
+    ) -> (Vec<Vec<f64>>, Vec<JobOutput>) {
         assert_eq!(sessions.len(), next_tokens.len());
         if sessions.is_empty() {
-            return Vec::new();
+            if extra.is_empty() {
+                return (Vec::new(), Vec::new());
+            }
+            return (Vec::new(), submit_prefill(engine, extra));
         }
+        let resident_before: usize = sessions.iter().map(|s| s.resident_bytes()).sum();
+        let mut extra_outs: Vec<JobOutput> = Vec::new();
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
@@ -774,7 +843,33 @@ impl Transformer {
                     });
                 }
             }
-            let mut outs = engine.decode_batch(jobs);
+            // One unified submit per layer: all (session, head) decode
+            // jobs, plus — on the first layer only — any merged
+            // prefill riders.
+            let n_decode = jobs.len();
+            let mut engine_jobs: Vec<EngineJob> = jobs
+                .into_iter()
+                .enumerate()
+                .map(|(i, j)| EngineJob::decode(i as u64, j))
+                .collect();
+            if li == 0 && !extra.is_empty() {
+                engine_jobs.extend(
+                    extra
+                        .drain(..)
+                        .enumerate()
+                        .map(|(i, j)| EngineJob::prefill((n_decode + i) as u64, j)),
+                );
+            }
+            let mut all_outs = engine.submit(engine_jobs);
+            if all_outs.len() > n_decode {
+                extra_outs = all_outs
+                    .split_off(n_decode)
+                    .into_iter()
+                    .map(|o| o.result.into_prefill())
+                    .collect();
+            }
+            let mut outs: Vec<DecodeOutput> =
+                all_outs.into_iter().map(|o| o.result.into_decode()).collect();
             // Scatter: finish the layer per session, hand states back.
             for (si, sess) in sessions.iter_mut().enumerate() {
                 let mut attn_row = vec![0.0; d];
@@ -795,12 +890,24 @@ impl Transformer {
         for (sess, &t) in sessions.iter_mut().zip(next_tokens) {
             sess.tokens.push(t);
         }
-        xs.into_iter()
+        // KV growth accounting (signed: a drift re-recovery may swap a
+        // state for a smaller basis).
+        let resident_after: usize = sessions.iter().map(|s| s.resident_bytes()).sum();
+        let delta = resident_after as i64 - resident_before as i64;
+        let gauge = &engine.metrics().decode_resident_bytes;
+        if delta >= 0 {
+            Metrics::add(gauge, delta as u64);
+        } else {
+            Metrics::sub(gauge, (-delta) as u64);
+        }
+        let logits = xs
+            .into_iter()
             .map(|x| {
                 let hid = rmsnorm_row(&x, &self.lnf_g);
                 row_matmul(&hid, &self.head)
             })
-            .collect()
+            .collect();
+        (logits, extra_outs)
     }
 
     /// Classification logits from the last position's hidden state.
@@ -1236,6 +1343,60 @@ mod tests {
         assert!(logits[0].iter().all(|x| x.is_finite()));
         let snap = engine.metrics().snapshot();
         assert_eq!(snap.decode_steps, 4, "2 layers × 2 heads");
+    }
+
+    #[test]
+    fn decode_step_with_jobs_merges_prefill_without_changing_decode() {
+        // A decode step with prefill riders must give bit-identical
+        // logits to a plain decode step, and the riders' outputs must
+        // bit-match standalone execution.
+        use crate::attention::batched::{BatchedBackend, BatchedEngine, EngineConfig};
+        use crate::attention::{exact_attention, Mask};
+        let m = tiny_model(212);
+        let prompt = vec![2usize, 4, 6, 8, 10];
+        let engine_a = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
+        let engine_b = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
+        let (mut sess_a, _) = m.prefill(&prompt, &AttentionBackend::Exact, &engine_a);
+        let (mut sess_b, _) = m.prefill(&prompt, &AttentionBackend::Exact, &engine_b);
+
+        let mut rng = Rng::seeded(213);
+        let (n, d) = (12, 4);
+        let riders: Vec<crate::attention::batched::AttnJob> = (0..3)
+            .map(|h| {
+                let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+                let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+                let v = Matrix::randn(n, d, &mut rng);
+                crate::attention::batched::AttnJob::causal(
+                    9,
+                    h,
+                    q,
+                    k,
+                    v,
+                    BatchedBackend::Exact,
+                )
+            })
+            .collect();
+        let want_riders: Vec<Matrix> = riders
+            .iter()
+            .map(|j| exact_attention(&j.q, &j.k, &j.v, &Mask::causal(n)))
+            .collect();
+
+        let plain = m.decode_step(std::slice::from_mut(&mut sess_a), &[3], &engine_a);
+        let (merged, rider_outs) = m.decode_step_with_jobs(
+            std::slice::from_mut(&mut sess_b),
+            &[3],
+            &engine_b,
+            riders,
+        );
+        assert_eq!(plain, merged, "riders must not change decode logits");
+        assert_eq!(rider_outs.len(), 3);
+        for (out, want) in rider_outs.iter().zip(&want_riders) {
+            assert_eq!(max_abs_diff(&out.y, want), 0.0, "rider output must be exact");
+        }
+        // And with no sessions at all, extra jobs still execute.
+        let (none, outs) =
+            m.decode_step_with_jobs(&mut [], &[], &engine_a, vec![]);
+        assert!(none.is_empty() && outs.is_empty());
     }
 
     #[test]

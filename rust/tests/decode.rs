@@ -4,7 +4,7 @@
 //! identically for any worker count.
 
 use conv_basis::attention::batched::{
-    AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig,
+    AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig, EngineJob,
 };
 use conv_basis::attention::decode::exact_attend_last;
 use conv_basis::attention::rope::rope_structured_qk;
@@ -13,6 +13,23 @@ use conv_basis::tensor::{dot, Matrix, Rng};
 
 fn engine(workers: usize) -> BatchedEngine {
     BatchedEngine::new(EngineConfig { workers, cache_capacity: 256 })
+}
+
+fn attend(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<conv_basis::attention::batched::JobOutput> {
+    e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_prefill())
+        .collect()
+}
+
+fn decode(
+    e: &BatchedEngine,
+    jobs: Vec<DecodeJob>,
+) -> Vec<conv_basis::attention::batched::DecodeOutput> {
+    e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::decode(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_decode())
+        .collect()
 }
 
 /// The ISSUE-2 acceptance property: T decode steps from a length-n
@@ -85,7 +102,7 @@ fn conv_decode_loop_stays_exact_and_seeds_from_prefill_cache() {
     let v0 = Matrix::randn(n0, d, &mut rng);
 
     // Prefill through the engine: recovers + caches the basis.
-    let outs = e.attend_batch(vec![AttnJob::causal(
+    let outs = attend(&e, vec![AttnJob::causal(
         0,
         0,
         q0.clone(),
@@ -106,7 +123,7 @@ fn conv_decode_loop_stays_exact_and_seeds_from_prefill_cache() {
         let new_row: Vec<f64> =
             (0..=ncur).map(|j| dot(q_full.row(ncur), k_full.row(j))).collect();
         let v = v_full.slice(0, ncur + 1, 0, d);
-        let outs = e.decode_batch(vec![DecodeJob {
+        let outs = decode(&e, vec![DecodeJob {
             layer: 0,
             head: 0,
             state: state.take(),
@@ -134,6 +151,44 @@ fn conv_decode_loop_stays_exact_and_seeds_from_prefill_cache() {
     assert_eq!(snap.decode_seed_misses, 0);
     assert_eq!(snap.decode_rerecoveries, 0);
     assert_eq!(snap.decode_steps, grow as u64);
+}
+
+/// KV-cache memory accounting (first ROADMAP slice): the
+/// `decode_resident_bytes` gauge must equal the live sessions' resident
+/// bytes after prefill, grow with every decode step, and return to zero
+/// on retirement.
+#[test]
+fn decode_resident_bytes_gauge_tracks_session_lifecycle() {
+    let mut rng = Rng::seeded(123);
+    let model = Transformer::new(&ModelConfig::tiny(32), &mut rng);
+    let e = engine(2);
+    assert_eq!(e.metrics().snapshot().decode_resident_bytes, 0);
+
+    let backend = AttentionBackend::ConvStrided(4);
+    let (mut sess, _) = model.prefill(&[1, 2, 3, 4, 5, 6], &backend, &e);
+    let after_prefill = e.metrics().snapshot().decode_resident_bytes;
+    assert_eq!(after_prefill, sess.resident_bytes() as u64, "gauge == live session bytes");
+    assert!(after_prefill > 0);
+
+    let mut prev = after_prefill;
+    for t in [7usize, 8, 9] {
+        let _ = model.decode_step(std::slice::from_mut(&mut sess), &[t], &e);
+        let now = e.metrics().snapshot().decode_resident_bytes;
+        assert_eq!(now, sess.resident_bytes() as u64, "gauge tracks KV growth exactly");
+        assert!(now > prev, "each appended token must add resident bytes");
+        prev = now;
+    }
+
+    // A second session stacks on top…
+    let (sess2, _) = model.prefill(&[9, 8, 7, 6], &backend, &e);
+    let with_two = e.metrics().snapshot().decode_resident_bytes;
+    assert_eq!(with_two, (sess.resident_bytes() + sess2.resident_bytes()) as u64);
+
+    // …and retirement releases exactly each session's share.
+    sess2.retire(e.metrics());
+    assert_eq!(e.metrics().snapshot().decode_resident_bytes, sess.resident_bytes() as u64);
+    sess.retire(e.metrics());
+    assert_eq!(e.metrics().snapshot().decode_resident_bytes, 0, "all sessions retired");
 }
 
 /// Drift-triggered re-recovery, end-to-end through the model layer:

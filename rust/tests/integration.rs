@@ -6,13 +6,22 @@
 //! not been built or the crate was built without the `pjrt` feature;
 //! `make test` builds artifacts first.
 
-use conv_basis::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, EngineConfig};
+use conv_basis::attention::batched::{
+    AttnJob, BatchedBackend, BatchedEngine, EngineConfig, EngineJob, JobOutput,
+};
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::attention::{conv_attention, exact_attention, Mask};
 use conv_basis::basis::{ConvBasis, KConvBasis, RecoverConfig};
 use conv_basis::runtime::PjrtRuntime;
 use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
 use std::path::Path;
+
+fn attend(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
+    e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_prefill())
+        .collect()
+}
 
 fn artifacts_root() -> std::path::PathBuf {
     // Tests run from the crate root.
@@ -44,11 +53,11 @@ fn batched_engine_second_call_hits_basis_cache() {
         let v = Matrix::randn(n, d, &mut rng);
         jobs.push(AttnJob::causal(1, h, q, k, v, BatchedBackend::Strided(4)));
     }
-    let first = engine.attend_batch(jobs.clone());
+    let first = attend(&engine, jobs.clone());
     let snap1 = engine.metrics().snapshot();
     assert!(snap1.cache_misses >= 4, "first call must recover: {snap1:?}");
 
-    let second = engine.attend_batch(jobs);
+    let second = attend(&engine, jobs);
     let snap2 = engine.metrics().snapshot();
     assert!(
         snap2.cache_hits >= snap1.cache_hits + 4,

@@ -6,7 +6,8 @@
 //! (the failing seed is printed — re-run with that seed to reproduce).
 
 use conv_basis::attention::batched::{
-    AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig,
+    AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, DecodeOutput, EngineConfig,
+    EngineJob, EngineResult, JobOutput,
 };
 use conv_basis::attention::decode::DecodeState;
 use conv_basis::attention::rope::rope_structured_qk;
@@ -23,6 +24,22 @@ use conv_basis::lowrank::masked;
 use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
 
 const CASES: u64 = 40;
+
+/// Prefill-lane submit (the migrated `attend_batch` call shape).
+fn attend(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
+    e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_prefill())
+        .collect()
+}
+
+/// Decode-lane submit (the migrated `decode_batch` call shape).
+fn decode(e: &BatchedEngine, jobs: Vec<DecodeJob>) -> Vec<DecodeOutput> {
+    e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::decode(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_decode())
+        .collect()
+}
 
 /// Run `prop(seed)` for many seeds; panic with the seed on failure.
 fn for_all(name: &str, prop: impl Fn(u64)) {
@@ -354,7 +371,7 @@ fn prop_batched_matches_single() {
                 backend: BatchedBackend::Conv(cfg),
             });
         }
-        let outs = engine.attend_batch(jobs);
+        let outs = attend(&engine, jobs);
         assert_eq!(outs.len(), singles.len());
         for (out, want) in outs.iter().zip(&singles) {
             assert!(!out.fell_back, "exact-config recovery cannot fail");
@@ -386,9 +403,9 @@ fn prop_batched_deterministic_across_thread_counts() {
             };
             jobs.push(AttnJob { layer: 0, head: h, q, k, v, mask: None, backend });
         }
-        let base = engines[0].attend_batch(jobs.clone());
+        let base = attend(&engines[0], jobs.clone());
         for e in &engines[1..] {
-            let outs = e.attend_batch(jobs.clone());
+            let outs = attend(e, jobs.clone());
             for (a, b) in outs.iter().zip(&base) {
                 assert_eq!(
                     max_abs_diff(&a.y, &b.y),
@@ -452,13 +469,174 @@ fn prop_decode_batch_deterministic() {
                 })
                 .collect()
         };
-        let base = engines[0].decode_batch(mk_jobs());
+        let base = decode(&engines[0], mk_jobs());
         for e in &engines[1..] {
-            let outs = e.decode_batch(mk_jobs());
+            let outs = decode(e, mk_jobs());
             for (a, b) in outs.iter().zip(&base) {
                 assert_eq!(a.y_last, b.y_last, "worker count changed decode (seed {seed})");
             }
         }
+    }
+}
+
+#[test]
+fn prop_batched_grad_matches_single() {
+    // The engine's gradient lane must be bit-identical to per-problem
+    // `grad_fast`, for worker counts 1, 2 and 8 — the training-side
+    // mirror of `prop_batched_matches_single`.
+    use conv_basis::gradient::batched::{FastGradConfig, GradJob};
+    use conv_basis::gradient::{grad_fast, AttentionLossProblem};
+    let engines: Vec<BatchedEngine> = [1usize, 2, 8]
+        .iter()
+        .map(|&w| BatchedEngine::new(EngineConfig { workers: w, cache_capacity: 128 }))
+        .collect();
+    for seed in [61u64, 62, 63] {
+        let mk_jobs = || -> Vec<GradJob> {
+            let mut rng = Rng::seeded(seed);
+            (0..5u32)
+                .map(|i| {
+                    let n = 12 + 4 * i as usize;
+                    let d = 3;
+                    let problem =
+                        std::sync::Arc::new(AttentionLossProblem::random_structured(n, d, &mut rng));
+                    let x = Matrix::randn(d, d, &mut rng).scale(0.3);
+                    GradJob { layer: i, head: 0, problem, x, cfg: FastGradConfig::exact(n) }
+                })
+                .collect()
+        };
+        let singles: Vec<(Matrix, f64)> = mk_jobs()
+            .iter()
+            .map(|j| {
+                let (g, r) = grad_fast(&j.problem, &j.x, &j.cfg.recover).unwrap();
+                (g, r.loss)
+            })
+            .collect();
+        for e in &engines {
+            let outs = e.submit(
+                mk_jobs()
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, j)| EngineJob::gradient(i as u64, j))
+                    .collect(),
+            );
+            for (out, (g, loss)) in outs.iter().zip(&singles) {
+                let EngineResult::Gradient(got) = &out.result else {
+                    panic!("gradient job must return a gradient result")
+                };
+                assert!(!got.fell_back, "exact-config recovery cannot fail (seed {seed})");
+                assert_eq!(
+                    max_abs_diff(&got.grad, g),
+                    0.0,
+                    "batched grad must bit-match grad_fast (seed {seed}, {} workers)",
+                    e.workers()
+                );
+                assert_eq!(got.loss, *loss, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_submit_mixed_lanes_deterministic() {
+    // The ISSUE 3 acceptance property: ONE submit carrying prefill,
+    // decode AND gradient jobs returns input-ordered, key-echoed
+    // results that are bit-identical across worker counts 1/2/8 and
+    // bit-identical to each lane's single-problem oracle.
+    use conv_basis::gradient::batched::{FastGradConfig, GradJob};
+    use conv_basis::gradient::{grad_fast, AttentionLossProblem};
+    let mk_jobs = || -> Vec<EngineJob> {
+        let mut rng = Rng::seeded(0x3155);
+        let mut jobs = Vec::new();
+        for i in 0..2u32 {
+            // Prefill lane: strided conv over structured Q/K.
+            let (n, d) = (40, 8);
+            let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+            let v = Matrix::randn(n, d, &mut rng);
+            jobs.push(EngineJob::prefill(
+                (100 + i) as u64,
+                AttnJob::causal(0, i, q, k, v, BatchedBackend::Strided(4)),
+            ));
+            // Decode lane: one exact step on a grown sequence.
+            let (nd, dd) = (24, 4);
+            let (q_full, k_full) = rope_structured_qk(nd + 1, dd, 2, &mut rng);
+            let new_row: Vec<f64> = (0..=nd)
+                .map(|j| conv_basis::tensor::dot(q_full.row(nd), k_full.row(j)))
+                .collect();
+            jobs.push(EngineJob::decode(
+                (200 + i) as u64,
+                DecodeJob {
+                    layer: 1,
+                    head: i,
+                    state: None,
+                    new_row,
+                    v: Matrix::randn(nd + 1, dd, &mut rng),
+                    q: None,
+                    k: None,
+                    op: DecodeOp::Exact,
+                },
+            ));
+            // Gradient lane: Definition 5.1 backward.
+            let ng = 16;
+            let problem =
+                std::sync::Arc::new(AttentionLossProblem::random_structured(ng, 3, &mut rng));
+            let x = Matrix::randn(3, 3, &mut rng).scale(0.3);
+            jobs.push(EngineJob::gradient(
+                (300 + i) as u64,
+                GradJob { layer: 2, head: i, problem, x, cfg: FastGradConfig::exact(ng) },
+            ));
+        }
+        jobs
+    };
+    let keys: Vec<u64> = vec![100, 200, 300, 101, 201, 301];
+    // Lane oracles from the single-problem paths.
+    let oracle_jobs = mk_jobs();
+    let mut oracle_y = Vec::new();
+    let mut oracle_rows = Vec::new();
+    let mut oracle_grads = Vec::new();
+    for j in &oracle_jobs {
+        match &j.op {
+            conv_basis::attention::batched::EngineOp::Prefill(a) => oracle_y.push(
+                conv_basis::attention::conv_attention_strided(&a.q, &a.k, &a.v, 4).unwrap().y,
+            ),
+            conv_basis::attention::batched::EngineOp::Decode(dj) => oracle_rows.push(
+                conv_basis::attention::decode::exact_decode_last_row(&dj.new_row, &dj.v),
+            ),
+            conv_basis::attention::batched::EngineOp::Gradient(g) => {
+                oracle_grads.push(grad_fast(&g.problem, &g.x, &g.cfg.recover).unwrap().0)
+            }
+        }
+    }
+    let mut per_worker: Vec<Vec<conv_basis::attention::batched::EngineOutput>> = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let e = BatchedEngine::new(EngineConfig { workers, cache_capacity: 64 });
+        let outs = e.submit(mk_jobs());
+        assert_eq!(outs.iter().map(|o| o.key).collect::<Vec<_>>(), keys, "key echo + order");
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.submit_calls, 1);
+        assert_eq!((snap.batched_jobs, snap.decode_steps, snap.grad_jobs), (2, 2, 2));
+        per_worker.push(outs);
+    }
+    // Bit-identical across worker counts and vs the lane oracles.
+    for outs in &per_worker {
+        let (mut iy, mut ir, mut ig) = (0usize, 0usize, 0usize);
+        for out in outs {
+            match &out.result {
+                EngineResult::Prefill(p) => {
+                    assert!(!p.fell_back);
+                    assert_eq!(max_abs_diff(&p.y, &oracle_y[iy]), 0.0, "prefill lane");
+                    iy += 1;
+                }
+                EngineResult::Decode(dv) => {
+                    assert_eq!(dv.y_last, oracle_rows[ir], "decode lane");
+                    ir += 1;
+                }
+                EngineResult::Gradient(g) => {
+                    assert_eq!(max_abs_diff(&g.grad, &oracle_grads[ig]), 0.0, "gradient lane");
+                    ig += 1;
+                }
+            }
+        }
+        assert_eq!((iy, ir, ig), (2, 2, 2), "every lane fully represented");
     }
 }
 
