@@ -23,6 +23,19 @@ d*(d+1) applies for the tensor-trick columns):
 * ``grad dense`` — materialize f (n x n) once, dense matvecs,
                    O(n^2 * d^2)       (the pre-Theorem-C.17 cost)
 
+LM attention-backward mirror (``benches/lm_backward.rs`` strategies,
+one (layer, head) d(Q,K,V) backward given upstream ``dout`` — uses both
+``f·w`` and the transposed ``f^T·w`` applies, the conv structure
+surviving transposition as a reversed-window correlation):
+
+* ``bwd conv``  — d applies for f·V plus d transposed applies for dV
+                  plus d*(d+1) of each for dQ/dK through the
+                  diag-sandwich identity, O(d^2 * n log n)
+                  (the engine's AttnBackward lane, fast mode)
+* ``bwd dense`` — materialize f (n x n), matrix-form softmax backward
+                  with three n x n temporaries, O(n^2 * d)
+                  (the pre-PR-4 ``Transformer::backward`` inner loop)
+
 Run: ``python3 python/bench_decode_mirror.py`` (prints markdown
 tables; numbers land in EXPERIMENTS.md, clearly labelled as the
 mirror, not the Rust bench).
@@ -145,6 +158,63 @@ def bench_grad(n, d=GRAD_D):
     return [timeit(f, iters) for f in (grad_conv, grad_dense)]
 
 
+def bench_lm_backward(n, d=GRAD_D):
+    rng = np.random.default_rng(n + 2)
+    # Toeplitz post-exp operator (the k=1 conv-exact softmax surrogate):
+    # f = conv(b) lower-triangular, row-normalized.
+    g = rng.normal(scale=0.5, size=n)
+    b = np.exp(g)
+    dvec = np.cumsum(b)
+    q = rng.normal(size=(n, d))
+    k = rng.normal(size=(n, d))
+    v = rng.normal(size=(n, d))
+    dout = rng.normal(size=(n, d))
+    fb = np.fft.rfft(b, 2 * n)
+
+    def f_apply(w):
+        return np.fft.irfft(fb * np.fft.rfft(w, 2 * n))[:n] / dvec
+
+    def ft_apply(w):
+        # f^T·w = B^T·(w / dvec): a correlation = reversed convolution,
+        # same FFT cost (mirrors KConvBasis::apply_transpose).
+        s = (w / dvec)[::-1]
+        return np.fft.irfft(fb * np.fft.rfft(s, 2 * n))[:n][::-1]
+
+    def bwd_conv():
+        y = np.stack([f_apply(v[:, c]) for c in range(d)], axis=1)
+        r = np.einsum("ij,ij->i", dout, y)
+        dv = np.stack([ft_apply(dout[:, c]) for c in range(d)], axis=1)
+        dq = np.empty((n, d))
+        dk = np.empty((n, d))
+        for col in range(d):
+            acc = np.zeros(n)
+            for c in range(d):
+                acc += dout[:, c] * f_apply(v[:, c] * k[:, col])
+            dq[:, col] = acc - r * f_apply(k[:, col])
+            acc = np.zeros(n)
+            for c in range(d):
+                acc += v[:, c] * ft_apply(dout[:, c] * q[:, col])
+            dk[:, col] = acc - ft_apply(r * q[:, col])
+        return dq, dk, dv
+
+    def bwd_dense():
+        # Materialize f once (part of the cost), then the matrix-form
+        # backward with its n x n temporaries.
+        idx = np.subtract.outer(np.arange(n), np.arange(n))
+        f = np.where(idx >= 0, b[np.clip(idx, 0, n - 1)], 0.0) / dvec[:, None]
+        y = f @ v
+        r = np.einsum("ij,ij->i", dout, y)
+        dv = f.T @ dout
+        dp = dout @ v.T
+        ds = f * dp - r[:, None] * f
+        return ds @ k, ds.T @ q, dv
+
+    for a, bb in zip(bwd_conv(), bwd_dense()):
+        assert np.allclose(a, bb, atol=1e-8)
+    iters = 2 if n >= 4096 else 5
+    return [timeit(lambda: bwd_conv()[0], iters), timeit(lambda: bwd_dense()[0], iters)]
+
+
 def main():
     print(f"# decode step vs re-prefill — NumPy mirror (d={D}, k={K})")
     header = ["n", "conv step", "exact row", "conv reprefill", "exact reprefill",
@@ -167,6 +237,15 @@ def main():
     for n in (256, 1024, 4096):
         tc, td = bench_grad(n)
         print(f"| {n} | {fmt(tc)} | {fmt(td)} | {td / tc:.0f}x |")
+
+    print()
+    print(f"# LM attention backward conv vs dense — NumPy mirror (d={GRAD_D}, k=1)")
+    header = ["n", "bwd conv", "bwd dense", "dense/conv"]
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for n in (256, 1024, 4096):
+        tc, td = bench_lm_backward(n)
+        print(f"| {n} | {fmt(tc)} | {fmt(td)} | {td / tc:.1f}x |")
 
 
 if __name__ == "__main__":

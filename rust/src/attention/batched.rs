@@ -1,5 +1,5 @@
 //! Batched multi-head conv-attention engine — **one typed door** for
-//! prefill, decode and gradient work.
+//! prefill, decode, gradient and LM-backward work.
 //!
 //! The paper's `O(k·n·d·log n)` bound only pays off in serving when its
 //! fixed costs are amortized: FFT plan tables, recovered conv bases, and
@@ -14,12 +14,17 @@
 //! * [`EngineOp::Decode`] — one (sequence, layer, head) autoregressive
 //!   decode step ([`DecodeJob`]);
 //! * [`EngineOp::Gradient`] — one (layer, head) Definition 5.1 backward
-//!   pass ([`GradJob`](crate::gradient::batched::GradJob)).
+//!   pass ([`GradJob`](crate::gradient::batched::GradJob));
+//! * [`EngineOp::AttnBackward`] — one (sequence, layer, head) LM
+//!   attention backward producing `(dQ, dK, dV)`
+//!   ([`AttnBackwardJob`](crate::gradient::batched::AttnBackwardJob)),
+//!   the lane `Transformer::backward_batch_with_engine` fans the full
+//!   transformer backward through.
 //!
 //! Lanes mix freely in one batch (the server's generation scheduler
 //! merges non-generation attention arrivals into in-flight decode
 //! submits; `model::train` steps every head's gradient in one call).
-//! All three share:
+//! All four share:
 //!
 //! * one [`SharedFftPlanner`] plan cache for the whole engine — a plan
 //!   per transform length is built once (off-lock) and shared by every
@@ -43,11 +48,8 @@
 //! The coordinator's server routes whole batches through one engine
 //! ([`BatchedEngine::with_shared`] over the server's cache and metrics),
 //! and the model layer batches all heads of a forward pass through
-//! `Transformer::forward_batch`.
-//!
-//! The pre-redesign entry points [`BatchedEngine::attend_batch`] and
-//! [`BatchedEngine::decode_batch`] survive as thin deprecated wrappers
-//! over `submit`.
+//! `Transformer::forward_batch` — and all heads of a backward pass
+//! through `Transformer::backward_batch_with_engine`.
 //!
 //! # Decode path (autoregressive serving)
 //!
@@ -70,11 +72,11 @@
 //!
 //! # Determinism & cache-key invariants
 //!
-//! * Jobs — prefill, decode and gradient — are **pure**: outputs depend
-//!   only on job inputs, never on worker identity, timing, or what
-//!   other ops share the batch. Results are re-ordered by input index,
-//!   so any worker count is bit-identical (`tests/properties.rs` pins
-//!   1/2/8 for all lanes).
+//! * Jobs — prefill, decode, gradient and LM-backward — are **pure**:
+//!   outputs depend only on job inputs, never on worker identity,
+//!   timing, or what other ops share the batch. Results are re-ordered
+//!   by input index, so any worker count is bit-identical
+//!   (`tests/properties.rs` pins 1/2/8 for all lanes).
 //! * A [`CacheKey`] commits to (model, layer, head, seq_len) *and* a
 //!   bitwise content fingerprint of (Q, K, mask) *and* a backend tag
 //!   (recovery schedule) — two jobs share a basis **iff** they would
@@ -140,7 +142,10 @@ use super::{
 use crate::basis::{exp_transform, recover_strided, QkColumnOracle, RecoverConfig};
 use crate::coordinator::{fingerprint, BasisCache, CacheKey, CachedBasis, Metrics};
 use crate::fft::{FftPlanner, SharedFftPlanner};
-use crate::gradient::batched::{execute_grad_job, GradJob, GradOutput};
+use crate::gradient::batched::{
+    execute_attn_backward_job, execute_grad_job, AttnBackwardJob, AttnBackwardOutput, GradJob,
+    GradOutput,
+};
 use crate::lowrank::{LowRankAttention, LowRankConfig};
 use crate::runtime::pool::WorkerPool;
 use crate::tensor::Matrix;
@@ -233,9 +238,14 @@ impl EngineJob {
     pub fn gradient(key: u64, job: GradJob) -> Self {
         EngineJob { key, op: EngineOp::Gradient(job) }
     }
+
+    /// An LM-backward-lane job.
+    pub fn attn_backward(key: u64, job: AttnBackwardJob) -> Self {
+        EngineJob { key, op: EngineOp::AttnBackward(job) }
+    }
 }
 
-/// The three operation lanes the engine executes through one door.
+/// The four operation lanes the engine executes through one door.
 /// Lanes mix freely within a batch; every job is pure, so a mixed
 /// batch's outputs are bit-identical to running each lane alone.
 ///
@@ -282,6 +292,9 @@ pub enum EngineOp {
     Decode(DecodeJob),
     /// One Definition 5.1 backward pass for one (layer, head).
     Gradient(GradJob),
+    /// One per-head LM attention backward for one (sequence, layer,
+    /// head), producing `(dQ, dK, dV)`.
+    AttnBackward(AttnBackwardJob),
 }
 
 impl EngineOp {
@@ -291,6 +304,7 @@ impl EngineOp {
             EngineOp::Prefill(_) => "prefill",
             EngineOp::Decode(_) => "decode",
             EngineOp::Gradient(_) => "gradient",
+            EngineOp::AttnBackward(_) => "lm-backward",
         }
     }
 }
@@ -309,6 +323,7 @@ pub enum EngineResult {
     Prefill(JobOutput),
     Decode(DecodeOutput),
     Gradient(GradOutput),
+    AttnBackward(AttnBackwardOutput),
 }
 
 impl EngineResult {
@@ -318,6 +333,7 @@ impl EngineResult {
             EngineResult::Prefill(_) => "prefill",
             EngineResult::Decode(_) => "decode",
             EngineResult::Gradient(_) => "gradient",
+            EngineResult::AttnBackward(_) => "lm-backward",
         }
     }
 
@@ -342,6 +358,15 @@ impl EngineResult {
         match self {
             EngineResult::Gradient(o) => o,
             other => panic!("expected a gradient result, got {}", other.lane()),
+        }
+    }
+
+    /// Unwrap an LM-backward result; panics if this job ran another
+    /// lane.
+    pub fn into_attn_backward(self) -> AttnBackwardOutput {
+        match self {
+            EngineResult::AttnBackward(o) => o,
+            other => panic!("expected an lm-backward result, got {}", other.lane()),
         }
     }
 }
@@ -429,16 +454,18 @@ impl BatchedEngine {
     ///
     /// Per-lane counters land in [`Metrics`]: a call increments
     /// `submit_calls` once, plus `batched_calls`/`decode_calls`/
-    /// `grad_calls` for each lane that is non-empty, plus the per-job
-    /// `batched_jobs`/`decode_steps`/`grad_jobs` totals.
+    /// `grad_calls`/`lm_backward_calls` for each lane that is
+    /// non-empty, plus the per-job `batched_jobs`/`decode_steps`/
+    /// `grad_jobs`/`lm_backward_jobs` totals.
     pub fn submit(&self, jobs: Vec<EngineJob>) -> Vec<EngineOutput> {
         Metrics::incr(&self.metrics.submit_calls);
-        let (mut n_prefill, mut n_decode, mut n_grad) = (0u64, 0u64, 0u64);
+        let (mut n_prefill, mut n_decode, mut n_grad, mut n_bwd) = (0u64, 0u64, 0u64, 0u64);
         for job in &jobs {
             match &job.op {
                 EngineOp::Prefill(_) => n_prefill += 1,
                 EngineOp::Decode(_) => n_decode += 1,
                 EngineOp::Gradient(_) => n_grad += 1,
+                EngineOp::AttnBackward(_) => n_bwd += 1,
             }
         }
         if n_prefill > 0 {
@@ -452,6 +479,10 @@ impl BatchedEngine {
         if n_grad > 0 {
             Metrics::incr(&self.metrics.grad_calls);
             Metrics::add(&self.metrics.grad_jobs, n_grad);
+        }
+        if n_bwd > 0 {
+            Metrics::incr(&self.metrics.lm_backward_calls);
+            Metrics::add(&self.metrics.lm_backward_jobs, n_bwd);
         }
         let planner = Arc::clone(&self.planner);
         let cache = Arc::clone(&self.cache);
@@ -469,23 +500,12 @@ impl BatchedEngine {
                 EngineOp::Gradient(j) => {
                     EngineResult::Gradient(execute_grad_job(j, &planner, &cache, &metrics, model_id))
                 }
+                EngineOp::AttnBackward(j) => EngineResult::AttnBackward(
+                    execute_attn_backward_job(j, &planner, &cache, &metrics, model_id),
+                ),
             };
             EngineOutput { key, result }
         })
-    }
-
-    /// Evaluate every prefill job; results come back in job order.
-    #[deprecated(
-        note = "use `BatchedEngine::submit` with `EngineOp::Prefill` — the engine has one \
-                typed door for prefill, decode and gradient work"
-    )]
-    pub fn attend_batch(&self, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
-        self.submit(
-            jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect(),
-        )
-        .into_iter()
-        .map(|o| o.result.into_prefill())
-        .collect()
     }
 
     /// Seed a [`DecodeState`] for one (layer, head) from the engine's
@@ -523,21 +543,6 @@ impl BatchedEngine {
             Metrics::incr(&self.metrics.decode_seed_misses);
         }
         (state, hit)
-    }
-
-    /// Execute one decode step for every job — one appended token per
-    /// (sequence, layer, head).
-    #[deprecated(
-        note = "use `BatchedEngine::submit` with `EngineOp::Decode` — the engine has one \
-                typed door for prefill, decode and gradient work"
-    )]
-    pub fn decode_batch(&self, jobs: Vec<DecodeJob>) -> Vec<DecodeOutput> {
-        self.submit(
-            jobs.into_iter().enumerate().map(|(i, j)| EngineJob::decode(i as u64, j)).collect(),
-        )
-        .into_iter()
-        .map(|o| o.result.into_decode())
-        .collect()
     }
 }
 
@@ -939,7 +944,7 @@ mod tests {
         BatchedEngine::new(EngineConfig { workers, cache_capacity: 64 })
     }
 
-    /// Prefill-lane submit (what the deprecated `attend_batch` wraps).
+    /// Prefill-lane submit helper.
     fn attend(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
         e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
             .into_iter()
@@ -947,7 +952,7 @@ mod tests {
             .collect()
     }
 
-    /// Decode-lane submit (what the deprecated `decode_batch` wraps).
+    /// Decode-lane submit helper.
     fn decode(e: &BatchedEngine, jobs: Vec<DecodeJob>) -> Vec<DecodeOutput> {
         e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::decode(i as u64, j)).collect())
             .into_iter()
@@ -1195,7 +1200,9 @@ mod tests {
 
     #[test]
     fn submit_mixed_lanes_echoes_keys_in_input_order() {
-        use crate::gradient::batched::{FastGradConfig, GradJob};
+        use crate::gradient::batched::{
+            dense_causal_probs, AttnBackwardJob, AttnBackwardMode, FastGradConfig, GradJob,
+        };
         use crate::gradient::AttentionLossProblem;
         let e = engine(3);
         let mut rng = Rng::seeded(1500);
@@ -1223,41 +1230,84 @@ mod tests {
             x: Matrix::zeros(3, 3),
             cfg: FastGradConfig::exact(16),
         };
+        let bq = Matrix::randn(12, 3, &mut rng).scale(0.3);
+        let bk = Matrix::randn(12, 3, &mut rng).scale(0.3);
+        let probs = Arc::new(dense_causal_probs(&bq, &bk));
+        let bwd = AttnBackwardJob {
+            layer: 1,
+            head: 1,
+            q: bq,
+            k: bk,
+            v: Matrix::randn(12, 3, &mut rng),
+            dout: Matrix::randn(12, 3, &mut rng),
+            probs: Some(probs),
+            mode: AttnBackwardMode::Exact,
+        };
         let outs = e.submit(vec![
             EngineJob::gradient(70, grad),
             EngineJob::prefill(71, pre),
             EngineJob::decode(72, dec),
+            EngineJob::attn_backward(73, bwd),
         ]);
-        assert_eq!(outs.len(), 3);
+        assert_eq!(outs.len(), 4);
         assert_eq!(
             outs.iter().map(|o| o.key).collect::<Vec<_>>(),
-            vec![70, 71, 72],
+            vec![70, 71, 72, 73],
             "results must be input-ordered with keys echoed"
         );
         assert_eq!(outs[0].result.lane(), "gradient");
         assert_eq!(outs[1].result.lane(), "prefill");
         assert_eq!(outs[2].result.lane(), "decode");
+        assert_eq!(outs[3].result.lane(), "lm-backward");
         let snap = e.metrics().snapshot();
         assert_eq!(snap.submit_calls, 1);
         assert_eq!(
-            (snap.batched_calls, snap.decode_calls, snap.grad_calls),
-            (1, 1, 1),
+            (snap.batched_calls, snap.decode_calls, snap.grad_calls, snap.lm_backward_calls),
+            (1, 1, 1, 1),
             "each non-empty lane counts one call"
         );
-        assert_eq!((snap.batched_jobs, snap.decode_steps, snap.grad_jobs), (1, 1, 1));
+        assert_eq!(
+            (snap.batched_jobs, snap.decode_steps, snap.grad_jobs, snap.lm_backward_jobs),
+            (1, 1, 1, 1)
+        );
     }
 
     #[test]
-    fn deprecated_wrappers_route_through_submit() {
-        #![allow(deprecated)]
+    fn attn_backward_lane_routes_through_submit() {
+        // An LM-backward job through the door: exact mode must equal
+        // the row-streamed kernel run directly, and the lane counters
+        // must tick.
+        use crate::gradient::batched::{AttnBackwardJob, AttnBackwardMode};
         let e = engine(2);
-        let jobs: Vec<AttnJob> =
-            (0..3).map(|h| structured_job(5, h, 32, 4, 1600 + h as u64)).collect();
-        let via_wrapper = e.attend_batch(jobs.clone());
-        let via_submit = attend(&e, jobs);
-        for (a, b) in via_wrapper.iter().zip(&via_submit) {
-            assert_eq!(max_abs_diff(&a.y, &b.y), 0.0);
-        }
-        assert_eq!(e.metrics().snapshot().submit_calls, 2, "the wrapper is a submit call");
+        let mut rng = Rng::seeded(1700);
+        let (n, d) = (20, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let v = Matrix::randn(n, d, &mut rng);
+        let dout = Matrix::randn(n, d, &mut rng);
+        let probs = Arc::new(crate::gradient::batched::dense_causal_probs(&q, &k));
+        let outs = e.submit(vec![EngineJob::attn_backward(
+            42,
+            AttnBackwardJob {
+                layer: 0,
+                head: 0,
+                q: q.clone(),
+                k: k.clone(),
+                v: v.clone(),
+                dout: dout.clone(),
+                probs: Some(Arc::clone(&probs)),
+                mode: AttnBackwardMode::Exact,
+            },
+        )]);
+        assert_eq!(outs[0].key, 42);
+        assert_eq!(outs[0].result.lane(), "lm-backward");
+        let got = outs[0].result.clone().into_attn_backward();
+        let (dq, dk, dv) = crate::gradient::batched::attn_backward_exact(&probs, &q, &k, &v, &dout);
+        assert_eq!(max_abs_diff(&got.dq, &dq), 0.0);
+        assert_eq!(max_abs_diff(&got.dk, &dk), 0.0);
+        assert_eq!(max_abs_diff(&got.dv, &dv), 0.0);
+        let snap = e.metrics().snapshot();
+        assert_eq!((snap.lm_backward_calls, snap.lm_backward_jobs), (1, 1));
+        assert_eq!(snap.lm_backward.count, 1, "per-job latency recorded");
     }
 }

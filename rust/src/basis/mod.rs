@@ -19,7 +19,7 @@ pub use recover_impl::{
     QkColumnOracle, RecoverConfig, RecoverError, RecoverStats,
 };
 
-use crate::conv::sub_conv_apply_into;
+use crate::conv::{sub_conv_apply_into, sub_conv_transpose_apply_into};
 use crate::fft::FftPlanner;
 use crate::tensor::{exp_vec, sub_vec, Matrix};
 
@@ -109,6 +109,21 @@ impl KConvBasis {
         let mut out = vec![0.0; self.n];
         for t in &self.terms {
             sub_conv_apply_into(planner, &t.b, t.m, x, &mut out);
+        }
+        out
+    }
+
+    /// `(Σ_r conv(b_r, m_r))ᵀ · x` via FFT — the **transpose** apply,
+    /// same `O(k n log n)` cost and plan lengths as [`Self::apply`] (a
+    /// transposed sub-convolution is a reversed-window correlation; see
+    /// [`sub_conv_transpose_apply_into`]). This is what keeps the LM
+    /// attention backward almost-linear: `dV = fᵀ·dout` and the `dK`
+    /// chain apply the transposed operator through the same basis.
+    pub fn apply_transpose(&self, planner: &mut FftPlanner, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut out = vec![0.0; self.n];
+        for t in &self.terms {
+            sub_conv_transpose_apply_into(planner, &t.b, t.m, x, &mut out);
         }
         out
     }
@@ -289,6 +304,19 @@ mod tests {
         let x = rng.randn_vec(31);
         let fast = basis.apply(&mut p, &x);
         let dense = basis.to_dense().matvec(&x);
+        for (u, v) in fast.iter().zip(&dense) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn apply_transpose_matches_dense_transpose_matvec() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(68);
+        let basis = random_basis(29, &[29, 13, 4], &mut rng);
+        let x = rng.randn_vec(29);
+        let fast = basis.apply_transpose(&mut p, &x);
+        let dense = basis.to_dense().transpose().matvec(&x);
         for (u, v) in fast.iter().zip(&dense) {
             assert!((u - v).abs() < 1e-8);
         }

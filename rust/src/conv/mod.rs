@@ -200,6 +200,52 @@ pub fn sub_conv_apply_into(
     }
 }
 
+/// `conv(a, m)ᵀ·x` via FFT — the transpose of the sub-convolution
+/// matrix, `O(m log m)` like the forward apply.
+///
+/// `(conv(a,m)ᵀ·x)_j = Σ_{i ≥ j} a[i−j]·x_i` for `j ≥ n−m` (zero
+/// elsewhere): a cross-correlation, computed as the **reversed**
+/// convolution of `a[0..m]` with the reversed tail of `x`, so it hits
+/// the same FFT plan lengths as [`sub_conv_apply`]. The LM attention
+/// backward needs this operator (`dV = fᵀ·(…)`, `dK = dSᵀ·Q`) — the
+/// conv structure survives transposition, which is what keeps the
+/// backward almost-linear.
+pub fn sub_conv_transpose_apply(
+    planner: &mut FftPlanner,
+    a: &[f64],
+    m: usize,
+    x: &[f64],
+) -> Vec<f64> {
+    let n = x.len();
+    assert!(m >= 1 && m <= n && a.len() >= m);
+    let mut out = vec![0.0; n];
+    sub_conv_transpose_apply_into(planner, a, m, x, &mut out);
+    out
+}
+
+/// Accumulating variant: `out[n−m+j] += (conv(a,m)ᵀ·x)[n−m+j]` — the
+/// transpose mirror of [`sub_conv_apply_into`], one call per basis term
+/// of a k-conv transpose apply.
+pub fn sub_conv_transpose_apply_into(
+    planner: &mut FftPlanner,
+    a: &[f64],
+    m: usize,
+    x: &[f64],
+    out: &mut [f64],
+) {
+    let n = x.len();
+    assert!(m >= 1 && m <= n && a.len() >= m && out.len() == n);
+    let off = n - m;
+    // rev(conv(a, rev(x_tail)))[j] = Σ_{i ≥ j} a[i−j]·x_tail[i]: the
+    // convolution coefficient at index m−1−j collects exactly the
+    // correlation terms of output position j.
+    let rev_tail: Vec<f64> = x[off..].iter().rev().copied().collect();
+    let full = linear_convolution(planner, &a[..m], &rev_tail);
+    for j in 0..m {
+        out[off + j] += full[m - 1 - j];
+    }
+}
+
 /// Claim 3.8: conv is additive — `conv(a)x + conv(b)x = conv(a+b)x`.
 /// (Provided as a named helper so property tests read like the claim.)
 pub fn conv_additivity_lhs(planner: &mut FftPlanner, a: &[f64], b: &[f64], x: &[f64]) -> Vec<f64> {
@@ -288,6 +334,26 @@ mod tests {
             for i in 0..n {
                 assert!((fast[i] - dense[i]).abs() < 1e-8, "n={n} m={m} i={i}");
                 assert!((naive[i] - dense[i]).abs() < 1e-10, "n={n} m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_conv_transpose_apply_matches_dense_transpose() {
+        let mut p = FftPlanner::new();
+        let mut rng = Rng::seeded(46);
+        for &(n, m) in &[(5usize, 3usize), (8, 8), (16, 1), (47, 20), (64, 33)] {
+            let a = rng.randn_vec(n);
+            let x = rng.randn_vec(n);
+            let s = SubConvMatrix::new(a.clone(), m);
+            let dense = s.to_dense().transpose().matvec(&x);
+            let fast = sub_conv_transpose_apply(&mut p, &a, m, &x);
+            for i in 0..n {
+                assert!((fast[i] - dense[i]).abs() < 1e-8, "n={n} m={m} i={i}");
+            }
+            // Leading n−m coordinates are structurally zero.
+            for (i, v) in fast.iter().enumerate().take(n - m) {
+                assert_eq!(*v, 0.0, "leading zero at {i}");
             }
         }
     }

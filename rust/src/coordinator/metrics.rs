@@ -50,13 +50,11 @@ pub struct Metrics {
     /// [`BatchedEngine::submit`]: crate::attention::batched::BatchedEngine::submit
     pub submit_calls: AtomicU64,
     /// Engine calls that carried ≥ 1 prefill job (one per `submit`
-    /// with a prefill lane; the deprecated `attend_batch` wrapper maps
-    /// 1:1 onto this).
+    /// with a prefill lane).
     pub batched_calls: AtomicU64,
     /// Total (sequence, head) prefill jobs executed by the engine.
     pub batched_jobs: AtomicU64,
-    /// Engine calls that carried ≥ 1 decode job (the deprecated
-    /// `decode_batch` wrapper maps 1:1 onto this).
+    /// Engine calls that carried ≥ 1 decode job.
     pub decode_calls: AtomicU64,
     /// Total (sequence, layer, head) decode jobs executed.
     pub decode_steps: AtomicU64,
@@ -85,6 +83,23 @@ pub struct Metrics {
     pub grad_cache_hits: AtomicU64,
     /// Gradient jobs that recovered their operator fresh.
     pub grad_cache_misses: AtomicU64,
+    /// Engine calls that carried ≥ 1 LM-backward (`AttnBackwardJob`)
+    /// job — `Transformer::backward_batch_with_engine` issues one per
+    /// layer per backward pass.
+    pub lm_backward_calls: AtomicU64,
+    /// Total (sequence, layer, head) LM-backward jobs executed.
+    pub lm_backward_jobs: AtomicU64,
+    /// Fast-path LM-backward jobs whose recovery failed and that were
+    /// served by the dense exact kernel instead (also counted in
+    /// `grad_fallbacks` — the gradient lane's shared alarm counter —
+    /// so "recovery failed during training" is one number to watch).
+    pub lm_backward_fallbacks: AtomicU64,
+    /// Fast-path LM-backward jobs whose `f`-operator basis came from
+    /// the shared `BasisCache` (the forward's conv prefill recovered
+    /// it; backward reuses it for free).
+    pub lm_backward_cache_hits: AtomicU64,
+    /// Fast-path LM-backward jobs that recovered their operator fresh.
+    pub lm_backward_cache_misses: AtomicU64,
     /// Generation requests admitted by the server's decode scheduler.
     pub gen_requests: AtomicU64,
     /// Generation requests completed (response sent).
@@ -108,6 +123,7 @@ pub struct Metrics {
     decode_lat: Mutex<Vec<f64>>,
     gen_lat: Mutex<Vec<f64>>,
     grad_lat: Mutex<Vec<f64>>,
+    lm_backward_lat: Mutex<Vec<f64>>,
 }
 
 impl Metrics {
@@ -164,6 +180,13 @@ impl Metrics {
         self.grad_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
     }
 
+    /// Per-job LM-backward execution time (its own series — an
+    /// attention backward is a different cost regime from both a
+    /// prefill job and a Definition 5.1 gradient job).
+    pub fn record_lm_backward(&self, d: Duration) {
+        self.lm_backward_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
@@ -189,6 +212,11 @@ impl Metrics {
             grad_fallbacks: self.grad_fallbacks.load(Ordering::Relaxed),
             grad_cache_hits: self.grad_cache_hits.load(Ordering::Relaxed),
             grad_cache_misses: self.grad_cache_misses.load(Ordering::Relaxed),
+            lm_backward_calls: self.lm_backward_calls.load(Ordering::Relaxed),
+            lm_backward_jobs: self.lm_backward_jobs.load(Ordering::Relaxed),
+            lm_backward_fallbacks: self.lm_backward_fallbacks.load(Ordering::Relaxed),
+            lm_backward_cache_hits: self.lm_backward_cache_hits.load(Ordering::Relaxed),
+            lm_backward_cache_misses: self.lm_backward_cache_misses.load(Ordering::Relaxed),
             gen_requests: self.gen_requests.load(Ordering::Relaxed),
             gen_completed: self.gen_completed.load(Ordering::Relaxed),
             gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
@@ -201,6 +229,7 @@ impl Metrics {
             decode: summarize(&mut self.decode_lat.lock().unwrap()),
             gen_e2e: summarize(&mut self.gen_lat.lock().unwrap()),
             grad: summarize(&mut self.grad_lat.lock().unwrap()),
+            lm_backward: summarize(&mut self.lm_backward_lat.lock().unwrap()),
         }
     }
 }
@@ -231,6 +260,11 @@ pub struct MetricsSnapshot {
     pub grad_fallbacks: u64,
     pub grad_cache_hits: u64,
     pub grad_cache_misses: u64,
+    pub lm_backward_calls: u64,
+    pub lm_backward_jobs: u64,
+    pub lm_backward_fallbacks: u64,
+    pub lm_backward_cache_hits: u64,
+    pub lm_backward_cache_misses: u64,
     pub gen_requests: u64,
     pub gen_completed: u64,
     pub gen_tokens: u64,
@@ -243,6 +277,7 @@ pub struct MetricsSnapshot {
     pub decode: LatencyStats,
     pub gen_e2e: LatencyStats,
     pub grad: LatencyStats,
+    pub lm_backward: LatencyStats,
 }
 
 impl MetricsSnapshot {
@@ -304,11 +339,13 @@ impl MetricsSnapshot {
     }
 
     /// Render the gradient-lane counters (the training dashboard
-    /// line; the cache numbers are the lane's own, not the engine-wide
+    /// line; the cache numbers are each lane's own, not the engine-wide
     /// totals a co-located serving workload would drown them in).
     pub fn grad_report(&self) -> String {
         format!(
             "gradient: {} calls/{} jobs | fallbacks: {} | cache: {}h/{}m | \
+             job exec mean={:.0}µs p95={:.0}µs | \
+             lm-backward: {} calls/{} jobs | fallbacks: {} | cache: {}h/{}m | \
              job exec mean={:.0}µs p95={:.0}µs",
             self.grad_calls,
             self.grad_jobs,
@@ -317,6 +354,13 @@ impl MetricsSnapshot {
             self.grad_cache_misses,
             self.grad.mean_us,
             self.grad.p95_us,
+            self.lm_backward_calls,
+            self.lm_backward_jobs,
+            self.lm_backward_fallbacks,
+            self.lm_backward_cache_hits,
+            self.lm_backward_cache_misses,
+            self.lm_backward.mean_us,
+            self.lm_backward.p95_us,
         )
     }
 }
@@ -383,6 +427,20 @@ mod tests {
         assert_eq!(s.grad.count, 1);
         let r = s.grad_report();
         assert!(r.contains("1 calls/8 jobs"));
+    }
+
+    #[test]
+    fn lm_backward_counters_and_report() {
+        let m = Metrics::new();
+        Metrics::incr(&m.lm_backward_calls);
+        Metrics::add(&m.lm_backward_jobs, 4);
+        Metrics::incr(&m.lm_backward_fallbacks);
+        m.record_lm_backward(Duration::from_micros(12));
+        let s = m.snapshot();
+        assert_eq!((s.lm_backward_calls, s.lm_backward_jobs, s.lm_backward_fallbacks), (1, 4, 1));
+        assert_eq!(s.lm_backward.count, 1);
+        let r = s.grad_report();
+        assert!(r.contains("lm-backward: 1 calls/4 jobs"));
     }
 
     #[test]

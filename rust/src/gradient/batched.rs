@@ -1,5 +1,6 @@
-//! The engine-side gradient lane: batched Definition 5.1 backward
-//! passes through [`BatchedEngine::submit`].
+//! The engine-side gradient lanes: batched Definition 5.1 backward
+//! passes ([`GradJob`]) **and per-head LM attention backwards**
+//! ([`AttnBackwardJob`]) through [`BatchedEngine::submit`].
 //!
 //! The paper's efficiency claim is symmetric — attention *inference*
 //! and the training *gradient* both run in almost linear time through
@@ -37,15 +38,27 @@
 //! `Metrics::grad_fallbacks` — mirroring the prefill lane's
 //! exact-attention fallback.
 //!
+//! **LM backward.** [`AttnBackwardJob`] is the d(Q,K,V)-producing
+//! sibling: one (sequence, layer, head) of a transformer LM backward,
+//! executed either [`AttnBackwardMode::Exact`] (row-streamed dense
+//! softmax backward, bit-matching the pre-engine
+//! `Transformer::backward` float-op order with `O(n + n·d_h)` scratch)
+//! or [`AttnBackwardMode::Fast`] (conv-basis, `O(k·n·d_h²·log n)`,
+//! sharing the prefill `Conv` cache namespace so a conv forward's
+//! recovered basis makes the backward recovery-free). The model layer
+//! fans all (sequence, head) jobs of a layer through one submit
+//! (`Transformer::backward_batch_with_engine`); `train_lm` /
+//! `train_classifier` ride it by default.
+//!
 //! [`BatchedEngine::submit`]: crate::attention::batched::BatchedEngine::submit
 //! [`BatchedEngine`]: crate::attention::batched::BatchedEngine
 //! [`BatchedBackend::Conv`]: crate::attention::batched::BatchedBackend
 
-use super::fast::{grad_core, FOperator, FastGradientReport};
+use super::fast::{attn_backward_core, grad_core, FOperator, FastGradientReport};
 use super::naive::{grad_naive, loss_naive};
 use super::AttentionLossProblem;
 use crate::attention::batched::{conv_fingerprint, recover_cfg_tag};
-use crate::attention::MaskKind;
+use crate::attention::{Mask, MaskKind};
 use crate::basis::RecoverConfig;
 use crate::coordinator::{BasisCache, CacheKey, CachedBasis, Metrics};
 use crate::fft::{FftPlanner, SharedFftPlanner};
@@ -230,6 +243,304 @@ fn execute_grad_job_inner(
     }
 }
 
+/// How an [`AttnBackwardJob`] computes its `(dQ, dK, dV)`.
+#[derive(Clone, Debug)]
+pub enum AttnBackwardMode {
+    /// Replay the dense softmax backward with **exactly** the float-op
+    /// order of the pre-engine `Transformer::backward` per-head loop —
+    /// bit-identical to that dense oracle (pinned by
+    /// `tests/gradient_oracle.rs`), `O(n²·d_h)`, but row-streamed:
+    /// `O(n + n·d_h)` scratch instead of three `n×n` temporaries.
+    /// Requires [`AttnBackwardJob::probs`]. The training default.
+    Exact,
+    /// Conv-basis fast path through the `f`-operator of
+    /// `gradient::fast`: `O(k·n·d_h²·log n)`, within recovery
+    /// tolerance of exact.
+    /// Consults/populates the engine's `BasisCache` under the **same
+    /// key as an equivalent `Conv` prefill job** over this (Q, K), so
+    /// backward recovery is free right after a conv forward. Falls
+    /// back to the dense exact kernel on recovery failure (counted in
+    /// both `grad_fallbacks` and `lm_backward_fallbacks`).
+    Fast(FastGradConfig),
+}
+
+/// One (sequence, layer, head) unit of LM-backward work: given the
+/// head's forward tensors and the upstream gradient `dout` w.r.t. the
+/// head's attention output, produce `(dQ, dK, dV)` — the
+/// d(Q,K,V)-producing sibling of the Definition 5.1 [`GradJob`], riding
+/// the same engine lane (`EngineOp::AttnBackward`).
+#[derive(Clone, Debug)]
+pub struct AttnBackwardJob {
+    /// Layer index (cache key component for the fast path).
+    pub layer: u32,
+    /// Head index within the layer (cache key component).
+    pub head: u32,
+    /// Pre-scaled per-head query block (`n × d_h`, `1/√d_h` folded in —
+    /// exactly as prefill jobs carry it, which is what makes the fast
+    /// path's cache key collide with the forward's).
+    pub q: Matrix,
+    /// Per-head key block (`n × d_h`).
+    pub k: Matrix,
+    /// Per-head value block (`n × d_h`).
+    pub v: Matrix,
+    /// Upstream gradient w.r.t. this head's attention output
+    /// (`n × d_h`).
+    pub dout: Matrix,
+    /// The forward's softmax rows (`Arc`-shared with the forward's
+    /// activation cache — no copy). Required by
+    /// [`AttnBackwardMode::Exact`]; the fast path only reads it on its
+    /// dense fallback (recomputing probs from (Q, K) when absent).
+    pub probs: Option<Arc<Matrix>>,
+    pub mode: AttnBackwardMode,
+}
+
+/// Result of one LM-backward job. All three gradients are w.r.t. the
+/// job's inputs (`dq` w.r.t. the *pre-scaled* q — the model layer
+/// applies the `1/√d_h` chain factor when scattering, exactly like the
+/// dense path did).
+#[derive(Clone, Debug)]
+pub struct AttnBackwardOutput {
+    pub dq: Matrix,
+    pub dk: Matrix,
+    pub dv: Matrix,
+    /// Basis size the fast path used (0 for exact / fallback).
+    pub basis_k: usize,
+    /// Whether the fast path's `f`-operator came from the `BasisCache`.
+    pub cache_hit: bool,
+    /// Whether the fast path failed recovery and the dense exact kernel
+    /// served this job.
+    pub fell_back: bool,
+    /// Wall time this job spent executing on its worker.
+    pub exec: std::time::Duration,
+}
+
+/// Execute one LM-backward job (called by the engine's workers from
+/// `BatchedEngine::submit`).
+pub(crate) fn execute_attn_backward_job(
+    job: AttnBackwardJob,
+    planner: &Arc<SharedFftPlanner>,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    model_id: u64,
+) -> AttnBackwardOutput {
+    let t0 = std::time::Instant::now();
+    let mut out = execute_attn_backward_inner(job, planner, cache, metrics, model_id);
+    out.exec = t0.elapsed();
+    metrics.record_lm_backward(out.exec);
+    out
+}
+
+fn execute_attn_backward_inner(
+    job: AttnBackwardJob,
+    planner: &Arc<SharedFftPlanner>,
+    cache: &BasisCache,
+    metrics: &Metrics,
+    model_id: u64,
+) -> AttnBackwardOutput {
+    let AttnBackwardJob { layer, head, q, k, v, dout, probs, mode } = job;
+    let cfg = match mode {
+        AttnBackwardMode::Exact => {
+            let probs = probs.expect("exact attention backward requires the forward's probs");
+            let (dq, dk, dv) = attn_backward_exact(&probs, &q, &k, &v, &dout);
+            return AttnBackwardOutput {
+                dq,
+                dk,
+                dv,
+                basis_k: 0,
+                cache_hit: false,
+                fell_back: false,
+                exec: std::time::Duration::ZERO,
+            };
+        }
+        AttnBackwardMode::Fast(cfg) => cfg,
+    };
+    // Fast path. LM heads are always causal, so the cache namespace is
+    // exactly the prefill `Conv` namespace over the same (Q, K).
+    let n = q.rows();
+    let mask = Mask::causal(n);
+    let key = if cfg.use_cache {
+        Some(CacheKey {
+            model_id,
+            layer,
+            head,
+            seq_len: n,
+            qk_fingerprint: conv_fingerprint(&q, &k, &mask) ^ recover_cfg_tag(&cfg.recover),
+        })
+    } else {
+        None
+    };
+    if let Some(key) = &key {
+        if let Some(hit) = cache.get(key) {
+            let local = FftPlanner::with_shared(Arc::clone(planner));
+            if let Ok((mut f_op, report)) = FOperator::from_cached(hit.post_basis, hit.d_tilde, local)
+            {
+                Metrics::incr(&metrics.cache_hits);
+                Metrics::incr(&metrics.lm_backward_cache_hits);
+                let (dq, dk, dv) = attn_backward_core(&mut f_op, &q, &k, &v, &dout);
+                return AttnBackwardOutput {
+                    dq,
+                    dk,
+                    dv,
+                    basis_k: report.basis_k,
+                    cache_hit: true,
+                    fell_back: false,
+                    exec: std::time::Duration::ZERO,
+                };
+            }
+        }
+        Metrics::incr(&metrics.cache_misses);
+        Metrics::incr(&metrics.lm_backward_cache_misses);
+    }
+    let local = FftPlanner::with_shared(Arc::clone(planner));
+    match FOperator::build_qk(&q, &k, &mask, &cfg.recover, local) {
+        Ok((mut f_op, report)) => {
+            if let Some(key) = key {
+                let (basis, d_tilde) = f_op.cacheable_parts();
+                // Same soundness guard as every other cache writer:
+                // only finite, positive normalizers may be served to
+                // future hits.
+                if d_tilde.iter().all(|&x| x > 0.0 && x.is_finite()) {
+                    cache.put(
+                        key,
+                        CachedBasis { post_basis: basis.clone(), d_tilde: d_tilde.to_vec() },
+                    );
+                }
+            }
+            let (dq, dk, dv) = attn_backward_core(&mut f_op, &q, &k, &v, &dout);
+            AttnBackwardOutput {
+                dq,
+                dk,
+                dv,
+                basis_k: report.basis_k,
+                cache_hit: false,
+                fell_back: false,
+                exec: std::time::Duration::ZERO,
+            }
+        }
+        Err(_) => {
+            // Recovery failed: the dense exact kernel is total. Counted
+            // in the gradient lane's shared fallback counter (what
+            // training dashboards alarm on) *and* the lane-local one.
+            Metrics::incr(&metrics.grad_fallbacks);
+            Metrics::incr(&metrics.lm_backward_fallbacks);
+            let probs = probs.unwrap_or_else(|| Arc::new(dense_causal_probs(&q, &k)));
+            let (dq, dk, dv) = attn_backward_exact(&probs, &q, &k, &v, &dout);
+            AttnBackwardOutput {
+                dq,
+                dk,
+                dv,
+                basis_k: 0,
+                cache_hit: false,
+                fell_back: true,
+                exec: std::time::Duration::ZERO,
+            }
+        }
+    }
+}
+
+/// Dense causal softmax rows from the pre-scaled per-head (Q, K), with
+/// exactly the float-op order of the exact backend's training forward
+/// (`AttentionBackend::attend` with `keep_probs`) — so a fast-path
+/// fallback that had to recompute probs is still bit-identical to
+/// [`AttnBackwardMode::Exact`] on the same inputs.
+pub(crate) fn dense_causal_probs(q: &Matrix, k: &Matrix) -> Matrix {
+    let n = q.rows();
+    let logits = q.matmul(&k.transpose());
+    let mut probs = Matrix::zeros(n, n);
+    for i in 0..n {
+        let row = crate::tensor::softmax(&logits.row(i)[..=i]);
+        probs.row_mut(i)[..=i].copy_from_slice(&row);
+    }
+    probs
+}
+
+/// One row of `row · m` with exactly `Matrix::matmul`'s k-ascending
+/// accumulation order — including its skip on exact zeros — written
+/// into `out` (zeroed first). The float-op-order contract that makes
+/// [`attn_backward_exact`] bit-identical to the matrix-form backward.
+fn row_matmul_into(row: &[f64], m: &Matrix, out: &mut [f64]) {
+    debug_assert_eq!(row.len(), m.rows());
+    debug_assert_eq!(out.len(), m.cols());
+    out.fill(0.0);
+    for (kidx, &aik) in row.iter().enumerate() {
+        if aik == 0.0 {
+            continue;
+        }
+        let b_row = m.row(kidx);
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot += aik * b_row[j];
+        }
+    }
+}
+
+/// The dense per-head softmax-attention backward, **row-streamed**:
+///
+/// ```text
+/// dV = Pᵀ·dout
+/// dP = dout·Vᵀ
+/// dS = P ∘ (dP − rowdot(P, dP))
+/// dQ = dS·K,   dK = dSᵀ·Q
+/// ```
+///
+/// Bit-identical to the matrix form above (the pre-engine
+/// `Transformer::backward` per-head loop): every output element's
+/// accumulation chain replays `Matrix::matmul`'s k-ascending order with
+/// the same zero skips — the streamed outer loop over rows `i` is
+/// matmul's `k` loop for the transposed products and its row loop for
+/// the direct ones. But the scratch is `O(n + n·d_h)` (one `dP` row,
+/// one `dS` row, `Vᵀ`) instead of three `n×n` temporaries — the last
+/// `O(n²)`-memory allocation of the training backward, gone.
+pub(crate) fn attn_backward_exact(
+    probs: &Matrix,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    dout: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let n = probs.rows();
+    let dh = q.cols();
+    let mut dq = Matrix::zeros(n, dh);
+    let mut dk = Matrix::zeros(n, dh);
+    let mut dv = Matrix::zeros(n, dh);
+    // Vᵀ (d_h × n) so dP rows replay matmul(dout, Vᵀ) rows verbatim.
+    let vt = v.transpose();
+    let mut dprow = vec![0.0; n];
+    let mut dsrow = vec![0.0; n];
+    for i in 0..n {
+        let prow = probs.row(i);
+        let dorow = dout.row(i);
+        // dV[j] += P[i][j]·dout[i] — replays Pᵀ·dout's k-loop (k = i
+        // ascending per output element, skip on exact zero).
+        for (j, &pij) in prow.iter().enumerate() {
+            if pij == 0.0 {
+                continue;
+            }
+            for (slot, &d) in dv.row_mut(j).iter_mut().zip(dorow) {
+                *slot += pij * d;
+            }
+        }
+        // dP row i = dout_i · Vᵀ, then the softmax-Jacobian row.
+        row_matmul_into(dorow, &vt, &mut dprow);
+        let dot = crate::tensor::dot(prow, &dprow);
+        for j in 0..n {
+            dsrow[j] = prow[j] * (dprow[j] - dot);
+        }
+        // dQ row i = dS_i · K.
+        row_matmul_into(&dsrow, k, dq.row_mut(i));
+        // dK[j] += dS[i][j]·q[i] — replays dSᵀ·Q's k-loop.
+        let qrow = q.row(i);
+        for (j, &sij) in dsrow.iter().enumerate() {
+            if sij == 0.0 {
+                continue;
+            }
+            for (slot, &qv) in dk.row_mut(j).iter_mut().zip(qrow) {
+                *slot += sij * qv;
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,6 +653,131 @@ mod tests {
         assert!(outs[0].cache_hit, "gradient must reuse the forward's recovered basis");
         let (want, _) = grad_fast(&problem, &x, &cfg.recover).unwrap();
         assert_eq!(max_abs_diff(&outs[0].grad, &want), 0.0);
+    }
+
+    #[test]
+    fn attn_backward_exact_streams_bit_identical_to_matrix_form() {
+        // The row-streamed kernel vs the literal matrix-form backward
+        // (what `Transformer::backward` materializes densely).
+        let mut rng = Rng::seeded(910);
+        let (n, dh) = (24, 4);
+        let q = Matrix::randn(n, dh, &mut rng).scale(0.3);
+        let k = Matrix::randn(n, dh, &mut rng).scale(0.3);
+        let v = Matrix::randn(n, dh, &mut rng);
+        let dout = Matrix::randn(n, dh, &mut rng);
+        let probs = dense_causal_probs(&q, &k);
+        let (dq, dk, dv) = attn_backward_exact(&probs, &q, &k, &v, &dout);
+
+        let dv_want = probs.transpose().matmul(&dout);
+        let dprobs = dout.matmul(&v.transpose());
+        let mut dscores = Matrix::zeros(n, n);
+        for i in 0..n {
+            let dot = crate::tensor::dot(probs.row(i), dprobs.row(i));
+            for j in 0..n {
+                dscores[(i, j)] = probs[(i, j)] * (dprobs[(i, j)] - dot);
+            }
+        }
+        let dq_want = dscores.matmul(&k);
+        let dk_want = dscores.transpose().matmul(&q);
+        assert_eq!(max_abs_diff(&dv, &dv_want), 0.0, "dv must be bit-identical");
+        assert_eq!(max_abs_diff(&dq, &dq_want), 0.0, "dq must be bit-identical");
+        assert_eq!(max_abs_diff(&dk, &dk_want), 0.0, "dk must be bit-identical");
+    }
+
+    fn backward_job(seed: u64, mode: AttnBackwardMode) -> AttnBackwardJob {
+        let mut rng = Rng::seeded(seed);
+        let (n, dh) = (20, 3);
+        let q = Matrix::randn(n, dh, &mut rng).scale(0.3);
+        let k = Matrix::randn(n, dh, &mut rng).scale(0.3);
+        let probs = Arc::new(dense_causal_probs(&q, &k));
+        AttnBackwardJob {
+            layer: 0,
+            head: 0,
+            q,
+            k,
+            v: Matrix::randn(n, dh, &mut rng),
+            dout: Matrix::randn(n, dh, &mut rng),
+            probs: Some(probs),
+            mode,
+        }
+    }
+
+    fn submit_backward(e: &BatchedEngine, job: AttnBackwardJob) -> AttnBackwardOutput {
+        e.submit(vec![EngineJob::attn_backward(0, job)])
+            .pop()
+            .unwrap()
+            .result
+            .into_attn_backward()
+    }
+
+    #[test]
+    fn fast_attn_backward_close_to_exact() {
+        // Exact-config recovery ⇒ the conv f-operator is the softmax
+        // matrix to FFT rounding, so the fast backward tracks the exact
+        // one to ~1e-8.
+        let e = engine(2);
+        let exact = submit_backward(&e, backward_job(911, AttnBackwardMode::Exact));
+        let fast = submit_backward(
+            &e,
+            backward_job(911, AttnBackwardMode::Fast(FastGradConfig::exact(20))),
+        );
+        assert!(!fast.fell_back);
+        assert!(fast.basis_k >= 1);
+        for (got, want, name) in [
+            (&fast.dq, &exact.dq, "dq"),
+            (&fast.dk, &exact.dk, "dk"),
+            (&fast.dv, &exact.dv, "dv"),
+        ] {
+            let err = max_abs_diff(got, want);
+            assert!(err < 1e-8, "{name} err = {err}");
+        }
+    }
+
+    #[test]
+    fn fast_attn_backward_reuses_prefill_conv_basis() {
+        // A conv prefill over the same pre-scaled (Q, K) caches the
+        // operator basis; the fast LM backward must hit it — "forward
+        // recovers, backward reuses" across the forward/backward
+        // boundary of a *transformer* head, not just Definition 5.1.
+        let e = engine(2);
+        let job = backward_job(912, AttnBackwardMode::Fast(FastGradConfig::exact(20)));
+        let pre = e.submit(vec![EngineJob::prefill(
+            0,
+            AttnJob::causal(
+                0,
+                0,
+                job.q.clone(),
+                job.k.clone(),
+                job.v.clone(),
+                BatchedBackend::Conv(RecoverConfig::exact(20)),
+            ),
+        )]);
+        assert!(!pre[0].result.clone().into_prefill().fell_back);
+        let out = submit_backward(&e, job);
+        assert!(out.cache_hit, "backward must reuse the forward's recovered basis");
+        assert_eq!(e.metrics().snapshot().lm_backward_cache_hits, 1);
+    }
+
+    #[test]
+    fn fast_attn_backward_fallback_is_dense_exact_and_counted() {
+        // Zero recovery budget fails deterministically: the job must be
+        // served by the dense kernel (bit-identical to exact mode,
+        // since the fallback reuses the forward's probs) and flagged in
+        // BOTH grad_fallbacks and lm_backward_fallbacks.
+        let e = engine(1);
+        let bad = FastGradConfig {
+            recover: RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 },
+            use_cache: false,
+        };
+        let exact = submit_backward(&e, backward_job(913, AttnBackwardMode::Exact));
+        let fb = submit_backward(&e, backward_job(913, AttnBackwardMode::Fast(bad)));
+        assert!(fb.fell_back);
+        assert_eq!(max_abs_diff(&fb.dq, &exact.dq), 0.0);
+        assert_eq!(max_abs_diff(&fb.dk, &exact.dk), 0.0);
+        assert_eq!(max_abs_diff(&fb.dv, &exact.dv), 0.0);
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.lm_backward_fallbacks, 1);
+        assert_eq!(snap.grad_fallbacks, 1, "shared gradient-lane alarm counter");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use super::naive::f_dense;
 use super::AttentionLossProblem;
-use crate::attention::AttentionError;
+use crate::attention::{AttentionError, Mask};
 use crate::basis::{exp_transform, recover, KConvBasis, RecoverConfig};
 use crate::fft::FftPlanner;
 use crate::tensor::Matrix;
@@ -71,7 +71,23 @@ impl FOperator {
         cfg: &RecoverConfig,
         planner: FftPlanner,
     ) -> Result<(Self, FastGradientReport), AttentionError> {
-        let (pre, stats) = recover(q, &p.a2, &p.mask, cfg)?;
+        Self::build_qk(q, &p.a2, &p.mask, cfg, planner)
+    }
+
+    /// Build the normalized operator `f = D̃⁻¹(M ∘ exp(QKᵀ))` straight
+    /// from a (Q, K, mask) triple — no [`AttentionLossProblem`]
+    /// required. This is the LM-backward entry: a transformer head's
+    /// softmax matrix *is* this operator over the head's pre-scaled
+    /// (Q, K), so the attention backward reuses the whole recovery /
+    /// cache / apply stack of the Definition 5.1 pipeline.
+    pub(crate) fn build_qk(
+        q: &Matrix,
+        k: &Matrix,
+        mask: &Mask,
+        cfg: &RecoverConfig,
+        planner: FftPlanner,
+    ) -> Result<(Self, FastGradientReport), AttentionError> {
+        let (pre, stats) = recover(q, k, mask, cfg)?;
         let post = exp_transform(&pre, true);
         let d = post.row_sums();
         for (row, &val) in d.iter().enumerate() {
@@ -134,6 +150,16 @@ impl FOperator {
             *yi *= di;
         }
         y
+    }
+
+    /// `fᵀ·w = Bᵀ·(D̃⁻¹ ∘ w)` — the transposed operator through the
+    /// same conv basis, `O(k·n·log n)` per apply (the diagonal
+    /// normalizer moves to the *input* side under transposition).
+    /// Counted in [`Self::applies`].
+    fn apply_transpose(&mut self, w: &[f64]) -> Vec<f64> {
+        self.applies += 1;
+        let scaled: Vec<f64> = w.iter().zip(&self.d_inv).map(|(x, di)| x * di).collect();
+        self.post_basis.apply_transpose(&mut self.planner, &scaled)
     }
 
     /// `f·W` column-wise.
@@ -223,6 +249,98 @@ pub(crate) fn grad_core(p: &AttentionLossProblem, f_op: &mut FOperator) -> (Matr
 
     // ∇L = A₁ᵀ (p·A₂) — T_mat(d,n,d) (Lemma C.16).
     (p.a1.transpose().matmul(&pa2), loss)
+}
+
+/// Conv-basis **LM attention backward** for one head: given the
+/// operator `f = softmax(QKᵀ)` (causal, as an [`FOperator`]) and the
+/// upstream gradient `dout` w.r.t. the head's output `Y = f·V`, return
+/// `(dQ, dK, dV)` in `O(k·n·d_h²·log n)` — the per-layer gradient chain
+/// of "Multi-Layer Transformers Gradient Can be Approximated in Almost
+/// Linear Time" instantiated on our conv basis.
+///
+/// Derivation (P = f, S = pre-softmax scores):
+///
+/// ```text
+/// dV = Pᵀ·dout                                       (d_h fᵀ-applies)
+/// dS = P ∘ (dout·Vᵀ) − diag(r)·P,   r_i = ⟨dout_i, Y_i⟩
+/// dQ = dS·K = Σ_c dout_c ∘ f·(V_c ∘ K_col) − r ∘ (f·K_col)
+/// dK = dSᵀ·Q = Σ_c V_c ∘ fᵀ·(dout_c ∘ Q_col) − fᵀ·(r ∘ Q_col)
+/// ```
+///
+/// The rank-`d_h` Hadamard products multiply through the diag-sandwich
+/// identity (Lemma C.13), exactly like the Definition 5.1 pipeline; the
+/// softmax-Jacobian row dots collapse to `r = rowdot(dout, f·V)` — the
+/// forward output the backward recomputes in `d_h` applies — so no
+/// `n×n` matrix is ever materialized. The transposed applies go through
+/// [`KConvBasis::apply_transpose`] (same cost, same FFT plan lengths).
+pub(crate) fn attn_backward_core(
+    f_op: &mut FOperator,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    dout: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let n = q.rows();
+    let dh = q.cols();
+    // Y = f·V — recovers the forward output; r_i = ⟨dout_i, Y_i⟩ is the
+    // softmax-Jacobian row-dot term.
+    let y = f_op.apply_matrix(v);
+    let r: Vec<f64> = (0..n).map(|i| crate::tensor::dot(dout.row(i), y.row(i))).collect();
+
+    // dV = fᵀ·dout, column-wise.
+    let mut dv = Matrix::zeros(n, dh);
+    for c in 0..dh {
+        let col = dout.col(c);
+        dv.set_col(c, &f_op.apply_transpose(&col));
+    }
+
+    let mut scratch = vec![0.0; n];
+    // dQ (w.r.t. the pre-scaled Q the operator was built from).
+    let mut dq = Matrix::zeros(n, dh);
+    for col in 0..dh {
+        let kcol = k.col(col);
+        let mut acc = vec![0.0; n];
+        for c in 0..dh {
+            for (row, s) in scratch.iter_mut().enumerate() {
+                *s = v[(row, c)] * kcol[row];
+            }
+            let fw = f_op.apply(&scratch);
+            for row in 0..n {
+                acc[row] += dout[(row, c)] * fw[row];
+            }
+        }
+        let fk = f_op.apply(&kcol);
+        for row in 0..n {
+            acc[row] -= r[row] * fk[row];
+        }
+        dq.set_col(col, &acc);
+    }
+
+    // dK — the transposed chain.
+    let mut dk = Matrix::zeros(n, dh);
+    for col in 0..dh {
+        let qcol = q.col(col);
+        let mut acc = vec![0.0; n];
+        for c in 0..dh {
+            for (row, s) in scratch.iter_mut().enumerate() {
+                *s = dout[(row, c)] * qcol[row];
+            }
+            let ftw = f_op.apply_transpose(&scratch);
+            for row in 0..n {
+                acc[row] += v[(row, c)] * ftw[row];
+            }
+        }
+        for (row, s) in scratch.iter_mut().enumerate() {
+            *s = r[row] * qcol[row];
+        }
+        let ftr = f_op.apply_transpose(&scratch);
+        for row in 0..n {
+            acc[row] -= ftr[row];
+        }
+        dk.set_col(col, &acc);
+    }
+
+    (dq, dk, dv)
 }
 
 /// Dense-f variant of the fast pipeline (ablation: same factored-q /
@@ -318,6 +436,50 @@ mod tests {
         let (g_cached, l_cached) = grad_core(&p, &mut cached);
         assert_eq!(max_abs_diff(&g_fresh, &g_cached), 0.0);
         assert_eq!(l_fresh, l_cached);
+    }
+
+    #[test]
+    fn attn_backward_core_matches_dense_softmax_backward() {
+        // Dense oracle: P = row-normalized masked exp(QKᵀ), then the
+        // textbook matrix-form softmax-attention backward.
+        let mut rng = Rng::seeded(176);
+        let (n, dh) = (18, 3);
+        let q = Matrix::randn(n, dh, &mut rng).scale(0.3);
+        let k = Matrix::randn(n, dh, &mut rng).scale(0.3);
+        let v = Matrix::randn(n, dh, &mut rng);
+        let dout = Matrix::randn(n, dh, &mut rng);
+        let mask = Mask::causal(n);
+        let cfg = RecoverConfig::exact(n);
+        let (mut f_op, _) =
+            FOperator::build_qk(&q, &k, &mask, &cfg, FftPlanner::new()).unwrap();
+        let (dq, dk, dv) = attn_backward_core(&mut f_op, &q, &k, &v, &dout);
+
+        let scores = q.matmul(&k.transpose());
+        let mut p = Matrix::zeros(n, n);
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..=i {
+                p[(i, j)] = scores[(i, j)].exp();
+                s += p[(i, j)];
+            }
+            for j in 0..=i {
+                p[(i, j)] /= s;
+            }
+        }
+        let dv_want = p.transpose().matmul(&dout);
+        let dprobs = dout.matmul(&v.transpose());
+        let mut ds = Matrix::zeros(n, n);
+        for i in 0..n {
+            let dot = crate::tensor::dot(p.row(i), dprobs.row(i));
+            for j in 0..n {
+                ds[(i, j)] = p[(i, j)] * (dprobs[(i, j)] - dot);
+            }
+        }
+        let dq_want = ds.matmul(&k);
+        let dk_want = ds.transpose().matmul(&q);
+        assert!(max_abs_diff(&dv, &dv_want) < 1e-8, "dv err {}", max_abs_diff(&dv, &dv_want));
+        assert!(max_abs_diff(&dq, &dq_want) < 1e-8, "dq err {}", max_abs_diff(&dq, &dq_want));
+        assert!(max_abs_diff(&dk, &dk_want) < 1e-8, "dk err {}", max_abs_diff(&dk, &dk_want));
     }
 
     #[test]

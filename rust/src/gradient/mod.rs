@@ -39,7 +39,9 @@ pub mod fast;
 pub mod naive;
 pub mod optimize;
 
-pub use batched::{FastGradConfig, GradJob, GradOutput};
+pub use batched::{
+    AttnBackwardJob, AttnBackwardMode, AttnBackwardOutput, FastGradConfig, GradJob, GradOutput,
+};
 pub use fast::{grad_fast, loss_fast, FastGradientReport};
 pub use naive::{grad_finite_diff, grad_naive, loss_naive};
 pub use optimize::{solve, SolveTrace, SolverConfig};

@@ -32,17 +32,22 @@
 //!   self-attention split of Appendix A, the **batched engine**
 //!   ([`attention::batched`]) whose single typed
 //!   [`submit`](attention::batched::BatchedEngine::submit) door fans
-//!   prefill, decode *and* gradient jobs over one worker pool, and the
-//!   **incremental decode path** ([`attention::decode`]) that attends
-//!   one appended token in `O(k·n + n·d)` from a cached basis.
+//!   prefill, decode, gradient *and* LM-backward jobs over one worker
+//!   pool, and the **incremental decode path** ([`attention::decode`])
+//!   that attends one appended token in `O(k·n + n·d)` from a cached
+//!   basis.
 //! * [`lowrank`] — the [AS23] `(ε,k)`-approximation via polynomial
 //!   features and the mask-aware multiplies of Appendix D
 //!   (prefix-sum, support-delta, segment-tree, distinct-r).
 //! * [`gradient`] — attention-loss gradient (Definition 5.1): dense
 //!   oracle, finite differences, the fast conv+low-rank path of
-//!   Appendix C, and the engine's batched lane
-//!   ([`gradient::batched`]) that evaluates every (layer, head)
-//!   gradient of a training step in one `submit` call.
+//!   Appendix C, and the engine's batched lanes
+//!   ([`gradient::batched`]): every (layer, head) Definition 5.1
+//!   gradient of a training step in one `submit` call, plus the
+//!   per-head LM attention backward
+//!   ([`gradient::batched::AttnBackwardJob`] — exact mode bit-matches
+//!   the dense backward with no `n×n` scratch; fast mode runs the
+//!   conv-basis backward through [`basis`]' transpose apply).
 //! * [`model`] — a small decoder-only transformer with a pluggable
 //!   attention backend, Adam, and a training loop (used by the Figure 4
 //!   and end-to-end experiments).
@@ -84,6 +89,13 @@
 //!   lane in one `submit` per step (`model::train_attention_heads`),
 //!   bit-identical to single-problem [`gradient::grad_fast`] and
 //!   sharing recovered bases with the forward paths.
+//! * **Full LM backward**: `model::train_lm`/`train_classifier` route
+//!   `Transformer::backward_batch_with_engine`, which fans every
+//!   (sequence, layer, head) attention backward as
+//!   [`gradient::batched::AttnBackwardJob`]s — one submit per layer
+//!   over the whole micro-batch, bit-identical to the dense backward
+//!   oracle in exact mode (`tests/gradient_oracle.rs`) and
+//!   almost-linear in fast mode.
 //!
 //! `examples/serve_requests.rs` drives both paths end-to-end (prompt
 //! in, tokens out, metrics report); `benches/decode_step.rs` prices a

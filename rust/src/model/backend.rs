@@ -90,12 +90,11 @@ impl AttentionBackend {
         match self {
             AttentionBackend::Exact => {
                 if keep_probs {
-                    let logits = q.matmul(&k.transpose());
-                    let mut probs = Matrix::zeros(n, n);
-                    for i in 0..n {
-                        let row = crate::tensor::softmax(&logits.row(i)[..=i]);
-                        probs.row_mut(i)[..=i].copy_from_slice(&row);
-                    }
+                    // The one source of truth for training-forward
+                    // softmax rows: the LM-backward fallback replays
+                    // the same helper, so its "bit-identical to exact
+                    // mode" contract can't drift out of sync.
+                    let probs = crate::gradient::batched::dense_causal_probs(q, k);
                     (probs.matmul(v), Some(probs))
                 } else {
                     (exact_attention(q, k, v, &mask), None)

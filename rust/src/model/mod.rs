@@ -26,7 +26,12 @@
 //! ([`DecodeSession::resident_bytes`] / [`DecodeSession::retire`]).
 //!
 //! For training, [`train_attention_heads`] steps every (layer, head)
-//! Definition 5.1 problem with **one gradient-lane submit per step**.
+//! Definition 5.1 problem with **one gradient-lane submit per step**,
+//! and the full LM/classifier backward is engine-routed too:
+//! [`Transformer::backward_batch_with_engine`] fans every (sequence,
+//! head) attention backward of a layer through the engine's
+//! LM-backward lane (exact mode bit-matches the dense oracle with no
+//! `n×n` allocation; fast mode runs the conv-basis backward).
 
 mod backend;
 mod optim;
@@ -36,10 +41,11 @@ mod transformer;
 pub use backend::AttentionBackend;
 pub use optim::Adam;
 pub use train::{
-    eval_classifier, train_attention_heads, train_classifier, train_lm, HeadProblem,
-    HeadTrainConfig, HeadTrainResult, TrainConfig, TrainLog,
+    eval_classifier, train_attention_heads, train_classifier, train_classifier_with_engine,
+    train_lm, train_lm_with_engine, HeadProblem, HeadTrainConfig, HeadTrainResult, TrainConfig,
+    TrainLog,
 };
-pub use transformer::{DecodeSession, ForwardRecord, ModelConfig, Transformer};
+pub use transformer::{DecodeSession, ForwardRecord, Gradients, ModelConfig, Transformer};
 
 #[cfg(test)]
 mod tests {

@@ -7,14 +7,23 @@
 //! recovered-basis cache — the Theorem 5.6 training path, finally
 //! pooled like the forward paths.
 //!
+//! The full-transformer loops ([`train_lm`] / [`train_classifier`])
+//! route their backward the same way: per optimizer step, the whole
+//! micro-batch's per-head attention backwards fan through the engine's
+//! LM-backward lane (`Transformer::backward_batch_with_engine` — one
+//! submit per layer spanning all (sequence, head) pairs), so **no
+//! training path materializes an `n×n` matrix in backward** and the
+//! conv-basis fast backward is one
+//! [`AttnBackwardMode`] switch away.
+//!
 //! [`BatchedEngine::submit`]: crate::attention::batched::BatchedEngine::submit
 
 use super::backend::AttentionBackend;
 use super::optim::Adam;
-use super::transformer::{ModelConfig, Transformer};
-use crate::attention::batched::{BatchedEngine, EngineJob};
+use super::transformer::{ForwardRecord, ModelConfig, Transformer};
+use crate::attention::batched::{BatchedEngine, EngineConfig, EngineJob};
 use crate::data::{ByteTokenizer, SentimentDataset, SyntheticCorpus};
-use crate::gradient::batched::{FastGradConfig, GradJob};
+use crate::gradient::batched::{AttnBackwardMode, FastGradConfig, GradJob};
 use crate::gradient::AttentionLossProblem;
 use crate::tensor::{Matrix, Rng};
 use std::sync::Arc;
@@ -47,7 +56,45 @@ pub struct TrainLog {
 
 /// Train a language model on the synthetic corpus. Returns the trained
 /// model and the loss curve (the e2e deliverable's loss log).
-pub fn train_lm(model_cfg: &ModelConfig, cfg: &TrainConfig, corpus_bytes: usize) -> (Transformer, TrainLog) {
+///
+/// Routes the backward through a private [`BatchedEngine`] in
+/// [`AttnBackwardMode::Exact`] — bit-identical weights to the
+/// pre-engine dense loop (see [`train_lm_with_engine`] to share an
+/// engine or select the conv-basis backward).
+pub fn train_lm(
+    model_cfg: &ModelConfig,
+    cfg: &TrainConfig,
+    corpus_bytes: usize,
+) -> (Transformer, TrainLog) {
+    let engine = BatchedEngine::new(EngineConfig::default());
+    train_lm_with_engine(model_cfg, cfg, corpus_bytes, &engine, &AttnBackwardMode::Exact)
+}
+
+/// [`train_lm`] over a caller-owned engine: each optimizer step runs
+/// the micro-batch's forwards, then **one
+/// [`Transformer::backward_batch_with_engine`] call** — every
+/// (sequence, layer, head) attention backward of the step flows
+/// through the engine's LM-backward lane, one mixed submit per layer
+/// spanning the whole micro-batch. `mode` selects the exact
+/// (bit-stable, the test default) or conv-basis fast backward; a fast
+/// mode's `use_cache` is forced off inside the loop — weights change
+/// every step, so caching each step's operator basis could only evict
+/// live serving entries from a shared engine (same policy as
+/// [`train_attention_heads`]).
+///
+/// Memory note: batching the backward per layer means the whole
+/// micro-batch's forward activations (incl. per-head softmax rows) are
+/// live at once — peak activation memory scales with `cfg.batch`,
+/// where the old per-record dense loop peaked at one record. Shrink
+/// `batch` (trading submit width) if that matters at long `seq_len`.
+pub fn train_lm_with_engine(
+    model_cfg: &ModelConfig,
+    cfg: &TrainConfig,
+    corpus_bytes: usize,
+    engine: &BatchedEngine,
+    mode: &AttnBackwardMode,
+) -> (Transformer, TrainLog) {
+    let mode = &no_dead_cache_writes(mode);
     let mut rng = Rng::seeded(cfg.seed);
     let mut model = Transformer::new(model_cfg, &mut rng);
     let mut opt = Adam::new(cfg.lr);
@@ -62,13 +109,22 @@ pub fn train_lm(model_cfg: &ModelConfig, cfg: &TrainConfig, corpus_bytes: usize)
     for step in 0..cfg.steps {
         let mut grads = model.zero_grads();
         let mut batch_loss = 0.0;
+        // Forward the whole micro-batch (retaining activations), then
+        // backward it in one engine-routed call.
+        let mut recs: Vec<ForwardRecord> = Vec::with_capacity(cfg.batch);
+        let mut dls: Vec<Matrix> = Vec::with_capacity(cfg.batch);
         for b in 0..cfg.batch {
             let (x, y) = &windows[(step * cfg.batch + b) % windows.len()];
             let rec = model.forward(x, &AttentionBackend::Exact, true);
             let (loss, dlogits) = model.lm_loss(&rec, y, ByteTokenizer::PAD);
             batch_loss += loss;
-            model.backward(&rec, &dlogits, None, &mut grads);
+            recs.push(rec);
+            dls.push(dlogits);
         }
+        let batch: Vec<(&ForwardRecord, &Matrix, Option<[f64; 2]>)> =
+            recs.iter().zip(&dls).map(|(r, dl)| (r, dl, None)).collect();
+        model.backward_batch_with_engine(&batch, &mut grads, engine, mode);
+        drop(batch);
         scale_grads(&mut grads, 1.0 / cfg.batch as f64);
         opt.step(&mut model, &grads);
         batch_loss /= cfg.batch as f64;
@@ -85,12 +141,28 @@ pub fn train_lm(model_cfg: &ModelConfig, cfg: &TrainConfig, corpus_bytes: usize)
 }
 
 /// Train the sentiment classifier (LM-style init, classification loss
-/// only — enough signal for the synthetic task).
+/// only — enough signal for the synthetic task). Backward is
+/// engine-routed exactly like [`train_lm`].
 pub fn train_classifier(
     model_cfg: &ModelConfig,
     cfg: &TrainConfig,
     dataset: &SentimentDataset,
 ) -> (Transformer, TrainLog) {
+    let engine = BatchedEngine::new(EngineConfig::default());
+    train_classifier_with_engine(model_cfg, cfg, dataset, &engine, &AttnBackwardMode::Exact)
+}
+
+/// [`train_classifier`] over a caller-owned engine — see
+/// [`train_lm_with_engine`] for the batching/bit-identity contract
+/// (and the forced `use_cache: false` / peak-memory notes).
+pub fn train_classifier_with_engine(
+    model_cfg: &ModelConfig,
+    cfg: &TrainConfig,
+    dataset: &SentimentDataset,
+    engine: &BatchedEngine,
+    mode: &AttnBackwardMode,
+) -> (Transformer, TrainLog) {
+    let mode = &no_dead_cache_writes(mode);
     let mut rng = Rng::seeded(cfg.seed);
     let mut model = Transformer::new(model_cfg, &mut rng);
     let mut opt = Adam::new(cfg.lr);
@@ -101,6 +173,8 @@ pub fn train_classifier(
     for step in 0..cfg.steps {
         let mut grads = model.zero_grads();
         let mut batch_loss = 0.0;
+        let mut recs: Vec<ForwardRecord> = Vec::with_capacity(cfg.batch);
+        let mut items: Vec<(Matrix, [f64; 2])> = Vec::with_capacity(cfg.batch);
         for b in 0..cfg.batch {
             let ex = &dataset.train[(step * cfg.batch + b) % dataset.train.len()];
             let tokens = tok.encode_for_classification(&ex.text, cfg.seq_len);
@@ -108,8 +182,16 @@ pub fn train_classifier(
             let (loss, _, dcls) = model.cls_loss(&rec, ex.label);
             batch_loss += loss;
             let zero = crate::tensor::Matrix::zeros(tokens.len(), model_cfg.vocab_size);
-            model.backward(&rec, &zero, Some(dcls), &mut grads);
+            recs.push(rec);
+            items.push((zero, dcls));
         }
+        let batch: Vec<(&ForwardRecord, &Matrix, Option<[f64; 2]>)> = recs
+            .iter()
+            .zip(&items)
+            .map(|(r, (zero, dcls))| (r, zero, Some(*dcls)))
+            .collect();
+        model.backward_batch_with_engine(&batch, &mut grads, engine, mode);
+        drop(batch);
         scale_grads(&mut grads, 1.0 / cfg.batch as f64);
         opt.step(&mut model, &grads);
         batch_loss /= cfg.batch as f64;
@@ -251,6 +333,20 @@ pub fn train_attention_heads(
     results
 }
 
+/// Training never revisits a (Q, K) — weights change every optimizer
+/// step — so a fast backward's basis-cache writes are dead entries
+/// whose only effect is evicting live serving bases from a shared
+/// engine's (layer, head) shards. Force `use_cache` off (the
+/// [`train_attention_heads`] policy, applied to the LM loops).
+fn no_dead_cache_writes(mode: &AttnBackwardMode) -> AttnBackwardMode {
+    match mode {
+        AttnBackwardMode::Exact => AttnBackwardMode::Exact,
+        AttnBackwardMode::Fast(cfg) => {
+            AttnBackwardMode::Fast(FastGradConfig { use_cache: false, ..*cfg })
+        }
+    }
+}
+
 fn scale_grads(g: &mut super::transformer::Gradients, s: f64) {
     for x in g.embed.data_mut() {
         *x *= s;
@@ -332,6 +428,33 @@ mod tests {
         assert_eq!(snap.grad_calls, steps as u64);
         assert_eq!(snap.submit_calls, steps as u64);
         assert_eq!(snap.grad_jobs, (steps * heads.len()) as u64);
+    }
+
+    #[test]
+    fn train_lm_routes_backward_through_engine_lane() {
+        use crate::attention::batched::{BatchedEngine, EngineConfig};
+        let mcfg = ModelConfig {
+            vocab_size: 260,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            max_seq: 16,
+        };
+        let tcfg = TrainConfig { steps: 3, lr: 3e-3, seq_len: 16, batch: 2, log_every: 1, seed: 7 };
+        let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
+        let (_, log) =
+            train_lm_with_engine(&mcfg, &tcfg, 2000, &engine, &AttnBackwardMode::Exact);
+        assert!(log.final_loss.is_finite());
+        let snap = engine.metrics().snapshot();
+        // One submit per layer per step, each carrying every
+        // (sequence, head) job of the micro-batch.
+        assert_eq!(snap.lm_backward_calls, (tcfg.steps * mcfg.n_layers) as u64);
+        assert_eq!(
+            snap.lm_backward_jobs,
+            (tcfg.steps * tcfg.batch * mcfg.n_layers * mcfg.n_heads) as u64
+        );
+        assert_eq!(snap.lm_backward_fallbacks, 0, "exact mode never falls back");
     }
 
     #[test]

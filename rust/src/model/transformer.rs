@@ -11,7 +11,9 @@ use crate::attention::batched::{
 };
 use crate::attention::rope::Rope;
 use crate::coordinator::Metrics;
+use crate::gradient::batched::{AttnBackwardJob, AttnBackwardMode};
 use crate::tensor::{Matrix, Rng};
+use std::sync::Arc;
 
 /// Fan a prefill-only batch through the engine's unified door and
 /// unwrap the lane (the model layer's jobs are index-keyed; results
@@ -109,7 +111,9 @@ struct LayerCache {
     q_rot: Matrix,
     k_rot: Matrix,
     v: Matrix,
-    probs: Vec<Matrix>, // per head, n×n
+    /// Per head, n×n softmax rows. `Arc`-shared so the engine-routed
+    /// backward's jobs borrow them without copying.
+    probs: Vec<Arc<Matrix>>,
     attn_concat: Matrix,
     x_mid: Matrix,
     ln2_out: Matrix,
@@ -407,7 +411,7 @@ impl Transformer {
             }
             // Per-head attention through the selected backend.
             let mut attn_concat = Matrix::zeros(n, d);
-            let mut probs_cache: Vec<Matrix> = Vec::new();
+            let mut probs_cache: Vec<Arc<Matrix>> = Vec::new();
             for h in 0..nh {
                 let qh = Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale);
                 let kh = Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]);
@@ -419,7 +423,7 @@ impl Transformer {
                     }
                 }
                 if keep_cache {
-                    probs_cache.push(probs.expect("exact backend caches probs"));
+                    probs_cache.push(Arc::new(probs.expect("exact backend caches probs")));
                 }
             }
             let attn_out = attn_concat.matmul(&layer.wo);
@@ -964,6 +968,14 @@ impl Transformer {
     /// Backward from LM-loss logit gradients (and optionally a
     /// classification gradient on the last position). Accumulates into
     /// `grads`.
+    ///
+    /// This is the **dense oracle**: the per-head attention backward
+    /// materializes `n×n` temporaries in matrix form. The training
+    /// loops route through [`Self::backward_with_engine`] instead,
+    /// which executes the identical math as engine jobs (bit-identical
+    /// in exact mode — `tests/gradient_oracle.rs` pins it — without
+    /// the `n×n` allocations); this form is kept as the comparison
+    /// oracle and for engine-free callers.
     pub fn backward(
         &self,
         record: &ForwardRecord,
@@ -1089,6 +1101,220 @@ impl Transformer {
             let drow = dx.row(i);
             for j in 0..d {
                 grads.embed[(t, j)] += drow[j];
+            }
+        }
+    }
+
+    /// [`Self::backward`] with the per-head attention backward routed
+    /// through the engine's LM-backward lane
+    /// ([`EngineOp::AttnBackward`](crate::attention::batched::EngineOp))
+    /// — one job per head, one `submit` per layer. See
+    /// [`Self::backward_batch_with_engine`] for the batched form (and
+    /// the bit-identity contract).
+    pub fn backward_with_engine(
+        &self,
+        record: &ForwardRecord,
+        dlogits: &Matrix,
+        dcls: Option<[f64; 2]>,
+        grads: &mut Gradients,
+        engine: &BatchedEngine,
+        mode: &AttnBackwardMode,
+    ) {
+        self.backward_batch_with_engine(&[(record, dlogits, dcls)], grads, engine, mode);
+    }
+
+    /// Backward for a micro-batch of forward records through the
+    /// engine: all non-attention chain arithmetic stays inline (it is
+    /// `O(n·d²)` and layer-sequential), while every (sequence, head)
+    /// attention backward of a layer fans out as **one
+    /// [`BatchedEngine::submit`] of `AttnBackwardJob`s** — the last
+    /// dense `O(n²)`-memory training path, converted to the one-door
+    /// architecture. Layers are inherently sequential in a backward
+    /// pass (layer `ℓ`'s upstream gradient depends on `ℓ+1`'s output),
+    /// so per-layer submits spanning the whole micro-batch are the
+    /// widest possible batching.
+    ///
+    /// With [`AttnBackwardMode::Exact`] the accumulated `grads` are
+    /// **bit-identical** to calling the dense [`Self::backward`] per
+    /// record in order, for any engine worker count: the streamed
+    /// kernel replays the dense float-op order per output element, jobs
+    /// are pure, results are input-ordered, and every parameter's
+    /// accumulation chain visits records in the same order as the
+    /// sequential dense loop (`tests/gradient_oracle.rs` pins 1/2/8).
+    /// Unlike the dense oracle it allocates no `n×n` matrix — the
+    /// jobs borrow the forward's softmax rows (`Arc`) and stream them.
+    ///
+    /// [`AttnBackwardMode::Fast`] swaps the per-head kernel for the
+    /// conv-basis path (`O(k·n·d_h²·log n)` per head), within recovery
+    /// tolerance of exact; recovery failures fall back densely and are
+    /// counted in `grad_fallbacks`/`lm_backward_fallbacks`.
+    pub fn backward_batch_with_engine(
+        &self,
+        batch: &[(&ForwardRecord, &Matrix, Option<[f64; 2]>)],
+        grads: &mut Gradients,
+        engine: &BatchedEngine,
+        mode: &AttnBackwardMode,
+    ) {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+
+        // Output head(s) + final RMSNorm, per record in order (the
+        // same per-parameter accumulation order as sequential dense
+        // backwards).
+        let mut dxs: Vec<Matrix> = Vec::with_capacity(batch.len());
+        for (record, dlogits, dcls) in batch {
+            record.caches.as_ref().expect("forward(keep_cache=true) required");
+            let n = record.logits.rows();
+            grads.head.axpy_mat(1.0, &record.final_hidden.transpose().matmul(dlogits));
+            let mut dfinal = dlogits.matmul(&self.head.transpose());
+            if let Some(dc) = dcls {
+                let h_last = record.final_hidden.row(n - 1);
+                for c in 0..2 {
+                    for j in 0..d {
+                        grads.cls_head[(j, c)] += dc[c] * h_last[j];
+                    }
+                }
+                let drow = dfinal.row_mut(n - 1);
+                for j in 0..d {
+                    drow[j] += dc[0] * self.cls_head[(j, 0)] + dc[1] * self.cls_head[(j, 1)];
+                }
+            }
+            dxs.push(rmsnorm_bwd(
+                &record.lnf_in,
+                &self.lnf_g,
+                &record.lnf_rms,
+                &dfinal,
+                &mut grads.lnf_g,
+            ));
+        }
+
+        // Layers in reverse; one engine submit per layer covering every
+        // (record, head) attention backward.
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let mut jobs: Vec<EngineJob> = Vec::with_capacity(batch.len() * nh);
+            let mut dx_mids: Vec<Matrix> = Vec::with_capacity(batch.len());
+            for (bi, (record, _, _)) in batch.iter().enumerate() {
+                let cache = &record.caches.as_ref().unwrap()[li];
+                let g = &mut grads.layers[li];
+                let n = cache.x_in.rows();
+                let dx = &dxs[bi];
+
+                // x = x_mid + ff_act·w2  (ff path)
+                let dff_out = dx.clone();
+                let dff_act = dff_out.matmul(&layer.w2.transpose());
+                g.w2.axpy_mat(1.0, &cache.ff_act.transpose().matmul(&dff_out));
+                let dff_pre = Matrix::from_fn(n, self.cfg.d_ff, |i, j| {
+                    dff_act[(i, j)] * gelu_grad(cache.ff_pre[(i, j)])
+                });
+                g.w1.axpy_mat(1.0, &cache.ln2_out.transpose().matmul(&dff_pre));
+                let dln2_out = dff_pre.matmul(&layer.w1.transpose());
+                let dx_mid_from_ff = rmsnorm_bwd(
+                    &cache.x_mid,
+                    &layer.ln2_g,
+                    &cache.ln2_rms,
+                    &dln2_out,
+                    &mut g.ln2_g,
+                );
+                let mut dx_mid = dx.clone(); // residual
+                dx_mid.axpy_mat(1.0, &dx_mid_from_ff);
+
+                // x_mid = x_in + attn_concat·wo
+                let dattn_out = dx_mid.clone();
+                g.wo.axpy_mat(1.0, &cache.attn_concat.transpose().matmul(&dattn_out));
+                let dattn_concat = dattn_out.matmul(&layer.wo.transpose());
+
+                // Gather: one LM-backward job per head. Inputs are the
+                // identical `from_fn` extractions the dense loop does,
+                // so exact mode reproduces its bits.
+                for h in 0..nh {
+                    let dout_h = Matrix::from_fn(n, dh, |i, j| dattn_concat[(i, h * dh + j)]);
+                    let qh =
+                        Matrix::from_fn(n, dh, |i, j| cache.q_rot[(i, h * dh + j)] * scale);
+                    let kh = Matrix::from_fn(n, dh, |i, j| cache.k_rot[(i, h * dh + j)]);
+                    let vh = Matrix::from_fn(n, dh, |i, j| cache.v[(i, h * dh + j)]);
+                    jobs.push(EngineJob::attn_backward(
+                        (bi * nh + h) as u64,
+                        AttnBackwardJob {
+                            layer: li as u32,
+                            head: h as u32,
+                            q: qh,
+                            k: kh,
+                            v: vh,
+                            dout: dout_h,
+                            probs: Some(Arc::clone(&cache.probs[h])),
+                            mode: mode.clone(),
+                        },
+                    ));
+                }
+                dx_mids.push(dx_mid);
+            }
+
+            // The one door: all (record, head) attention backwards of
+            // this layer in a single engine call.
+            let mut outs = engine.submit(jobs).into_iter();
+
+            // Scatter: finish the layer per record, in order.
+            for (bi, (record, _, _)) in batch.iter().enumerate() {
+                let cache = &record.caches.as_ref().unwrap()[li];
+                let g = &mut grads.layers[li];
+                let n = cache.x_in.rows();
+                let mut dq_rot = Matrix::zeros(n, d);
+                let mut dk_rot = Matrix::zeros(n, d);
+                let mut dv_full = Matrix::zeros(n, d);
+                for h in 0..nh {
+                    let out = outs
+                        .next()
+                        .expect("one output per job")
+                        .result
+                        .into_attn_backward();
+                    for i in 0..n {
+                        for j in 0..dh {
+                            dq_rot[(i, h * dh + j)] += out.dq[(i, j)] * scale;
+                            dk_rot[(i, h * dh + j)] += out.dk[(i, j)];
+                            dv_full[(i, h * dh + j)] += out.dv[(i, j)];
+                        }
+                    }
+                }
+                // RoPE backward: inverse rotation (orthogonal).
+                let mut dq = dq_rot;
+                let mut dk = dk_rot;
+                for h in 0..nh {
+                    for i in 0..n {
+                        let qs = &mut dq.row_mut(i)[h * dh..(h + 1) * dh];
+                        rotate_inverse(&self.rope, qs, i);
+                        let ks = &mut dk.row_mut(i)[h * dh..(h + 1) * dh];
+                        rotate_inverse(&self.rope, ks, i);
+                    }
+                }
+                // q = ln1_out·wq etc.
+                g.wq.axpy_mat(1.0, &cache.ln1_out.transpose().matmul(&dq));
+                g.wk.axpy_mat(1.0, &cache.ln1_out.transpose().matmul(&dk));
+                g.wv.axpy_mat(1.0, &cache.ln1_out.transpose().matmul(&dv_full));
+                let mut dln1_out = dq.matmul(&layer.wq.transpose());
+                dln1_out.axpy_mat(1.0, &dk.matmul(&layer.wk.transpose()));
+                dln1_out.axpy_mat(1.0, &dv_full.matmul(&layer.wv.transpose()));
+                let dx_in_from_attn = rmsnorm_bwd(
+                    &cache.x_in,
+                    &layer.ln1_g,
+                    &cache.ln1_rms,
+                    &dln1_out,
+                    &mut g.ln1_g,
+                );
+                let mut dx_in = std::mem::replace(&mut dx_mids[bi], Matrix::zeros(0, 0));
+                dx_in.axpy_mat(1.0, &dx_in_from_attn);
+                dxs[bi] = dx_in;
+            }
+        }
+
+        // Embedding scatter, per record in order.
+        for (bi, (record, _, _)) in batch.iter().enumerate() {
+            for (i, &t) in record.tokens.iter().enumerate() {
+                let drow = dxs[bi].row(i);
+                for j in 0..d {
+                    grads.embed[(t, j)] += drow[j];
+                }
             }
         }
     }

@@ -7,12 +7,15 @@
 //!
 //! The PJRT path needs the external `xla` crate, which the offline build
 //! image cannot vendor through the registry; it is therefore behind the
-//! `pjrt` cargo feature (supply the crate via a `[patch]`/path
-//! dependency when enabling it). The default build ships a stub with the
-//! identical API whose constructors return
-//! [`RuntimeError::Unavailable`], so every caller — the CLI `verify`
-//! subcommand, `examples/serve_requests.rs`, the integration tests —
-//! compiles unchanged and degrades gracefully.
+//! `pjrt` cargo feature. The feature build compiles against the in-tree
+//! `xla` **API-surface stub** (`rust/xla-stub`, an optional path
+//! dependency whose entry points fail at runtime) — CI checks it with
+//! `cargo check --features pjrt` so this module cannot rot; point the
+//! path dependency at a vendored real crate to actually execute. The
+//! default (feature-off) build ships a runtime stub with the identical
+//! API whose constructors return [`RuntimeError::Unavailable`], so every
+//! caller — the CLI `verify` subcommand, `examples/serve_requests.rs`,
+//! the integration tests — compiles unchanged and degrades gracefully.
 //!
 //! Python never runs at request time: `make artifacts` is the only
 //! python invocation, and it is a no-op when artifacts are fresh.

@@ -25,7 +25,7 @@ use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
 
 const CASES: u64 = 40;
 
-/// Prefill-lane submit (the migrated `attend_batch` call shape).
+/// Prefill-lane submit helper.
 fn attend(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
     e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
         .into_iter()
@@ -33,7 +33,7 @@ fn attend(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<JobOutput> {
         .collect()
 }
 
-/// Decode-lane submit (the migrated `decode_batch` call shape).
+/// Decode-lane submit helper.
 fn decode(e: &BatchedEngine, jobs: Vec<DecodeJob>) -> Vec<DecodeOutput> {
     e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::decode(i as u64, j)).collect())
         .into_iter()
@@ -604,6 +604,7 @@ fn prop_submit_mixed_lanes_deterministic() {
             conv_basis::attention::batched::EngineOp::Gradient(g) => {
                 oracle_grads.push(grad_fast(&g.problem, &g.x, &g.cfg.recover).unwrap().0)
             }
+            other => panic!("unexpected lane in this batch: {}", other.lane()),
         }
     }
     let mut per_worker: Vec<Vec<conv_basis::attention::batched::EngineOutput>> = Vec::new();
@@ -634,9 +635,192 @@ fn prop_submit_mixed_lanes_deterministic() {
                     assert_eq!(max_abs_diff(&g.grad, &oracle_grads[ig]), 0.0, "gradient lane");
                     ig += 1;
                 }
+                other => panic!("unexpected lane in this batch: {}", other.lane()),
             }
         }
         assert_eq!((iy, ir, ig), (2, 2, 2), "every lane fully represented");
+    }
+}
+
+#[test]
+fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
+    // The ISSUE 4 fuzz pin: a deterministic-seed generator builds
+    // random batches mixing ALL FOUR lanes — Prefill + Decode +
+    // Gradient + the LM-backward jobs — with random sizes and modes,
+    // and every seed must produce input-ordered, key-echoed results
+    // that are bit-identical across worker counts 1/2/8.
+    use conv_basis::gradient::batched::{
+        AttnBackwardJob, AttnBackwardMode, FastGradConfig, GradJob,
+    };
+    use conv_basis::gradient::AttentionLossProblem;
+    use conv_basis::tensor::softmax;
+
+    /// Dense causal softmax rows with the training forward's float-op
+    /// order (what the exact LM-backward mode consumes).
+    fn causal_probs(q: &Matrix, k: &Matrix) -> Matrix {
+        let n = q.rows();
+        let logits = q.matmul(&k.transpose());
+        let mut probs = Matrix::zeros(n, n);
+        for i in 0..n {
+            let row = softmax(&logits.row(i)[..=i]);
+            probs.row_mut(i)[..=i].copy_from_slice(&row);
+        }
+        probs
+    }
+
+    let mk_jobs = |seed: u64| -> Vec<EngineJob> {
+        let mut rng = Rng::seeded(seed);
+        let count = 6 + rng.below(8); // 6..14 jobs
+        let mut jobs = Vec::with_capacity(count);
+        for idx in 0..count {
+            let key = 1000 + idx as u64;
+            match rng.below(4) {
+                0 => {
+                    // Prefill: random size, exact or strided operator.
+                    let n = 12 + rng.below(28);
+                    let d = 2 + 2 * rng.below(3);
+                    let (q, k) = rope_structured_qk(n, d, 2, &mut rng);
+                    let v = Matrix::randn(n, d, &mut rng);
+                    let backend = if rng.below(2) == 0 {
+                        BatchedBackend::Exact
+                    } else {
+                        BatchedBackend::Strided(1 + rng.below(4))
+                    };
+                    jobs.push(EngineJob::prefill(
+                        key,
+                        AttnJob::causal(0, idx as u32, q, k, v, backend),
+                    ));
+                }
+                1 => {
+                    // Decode: one exact step on a random-length prefix.
+                    let n = 8 + rng.below(24);
+                    let d = 2 + rng.below(4);
+                    let q = Matrix::randn(n + 1, d, &mut rng).scale(0.3);
+                    let k = Matrix::randn(n + 1, d, &mut rng).scale(0.3);
+                    let new_row: Vec<f64> = (0..=n)
+                        .map(|j| conv_basis::tensor::dot(q.row(n), k.row(j)))
+                        .collect();
+                    jobs.push(EngineJob::decode(
+                        key,
+                        DecodeJob {
+                            layer: 1,
+                            head: idx as u32,
+                            state: None,
+                            new_row,
+                            v: Matrix::randn(n + 1, d, &mut rng),
+                            q: None,
+                            k: None,
+                            op: DecodeOp::Exact,
+                        },
+                    ));
+                }
+                2 => {
+                    // Gradient: Definition 5.1 backward, random size.
+                    let n = 10 + rng.below(14);
+                    let problem = std::sync::Arc::new(AttentionLossProblem::random_structured(
+                        n, 3, &mut rng,
+                    ));
+                    let x = Matrix::randn(3, 3, &mut rng).scale(0.3);
+                    jobs.push(EngineJob::gradient(
+                        key,
+                        GradJob {
+                            layer: 2,
+                            head: idx as u32,
+                            problem,
+                            x,
+                            cfg: FastGradConfig::exact(n),
+                        },
+                    ));
+                }
+                _ => {
+                    // LM backward: exact and fast modes both in the mix.
+                    let n = 8 + rng.below(20);
+                    let dh = 2 + rng.below(3);
+                    let q = Matrix::randn(n, dh, &mut rng).scale(0.3);
+                    let k = Matrix::randn(n, dh, &mut rng).scale(0.3);
+                    let probs = std::sync::Arc::new(causal_probs(&q, &k));
+                    let mode = if rng.below(2) == 0 {
+                        AttnBackwardMode::Exact
+                    } else {
+                        AttnBackwardMode::Fast(FastGradConfig::exact(n))
+                    };
+                    jobs.push(EngineJob::attn_backward(
+                        key,
+                        AttnBackwardJob {
+                            layer: 3,
+                            head: idx as u32,
+                            q,
+                            k,
+                            v: Matrix::randn(n, dh, &mut rng),
+                            dout: Matrix::randn(n, dh, &mut rng),
+                            probs: Some(probs),
+                            mode,
+                        },
+                    ));
+                }
+            }
+        }
+        jobs
+    };
+
+    for seed in [0x51u64, 0x52, 0x53, 0x54, 0x55] {
+        let keys: Vec<u64> = mk_jobs(seed).iter().map(|j| j.key).collect();
+        let mut per_worker: Vec<Vec<conv_basis::attention::batched::EngineOutput>> = Vec::new();
+        for workers in [1usize, 2, 8] {
+            let e = BatchedEngine::new(EngineConfig { workers, cache_capacity: 64 });
+            let outs = e.submit(mk_jobs(seed));
+            assert_eq!(
+                outs.iter().map(|o| o.key).collect::<Vec<_>>(),
+                keys,
+                "seed {seed}: input order + key echo ({workers} workers)"
+            );
+            per_worker.push(outs);
+        }
+        let base = &per_worker[0];
+        for (outs, workers) in per_worker[1..].iter().zip([2usize, 8]) {
+            for (a, b) in outs.iter().zip(base) {
+                match (&a.result, &b.result) {
+                    (EngineResult::Prefill(x), EngineResult::Prefill(y)) => {
+                        assert_eq!(
+                            max_abs_diff(&x.y, &y.y),
+                            0.0,
+                            "seed {seed}: prefill bits ({workers} workers)"
+                        );
+                    }
+                    (EngineResult::Decode(x), EngineResult::Decode(y)) => {
+                        assert_eq!(
+                            x.y_last, y.y_last,
+                            "seed {seed}: decode bits ({workers} workers)"
+                        );
+                    }
+                    (EngineResult::Gradient(x), EngineResult::Gradient(y)) => {
+                        assert_eq!(
+                            max_abs_diff(&x.grad, &y.grad),
+                            0.0,
+                            "seed {seed}: gradient bits ({workers} workers)"
+                        );
+                        assert_eq!(x.loss, y.loss, "seed {seed}");
+                    }
+                    (EngineResult::AttnBackward(x), EngineResult::AttnBackward(y)) => {
+                        assert!(!x.fell_back, "seed {seed}: exact-config recovery cannot fail");
+                        for (gx, gy, name) in
+                            [(&x.dq, &y.dq, "dq"), (&x.dk, &y.dk, "dk"), (&x.dv, &y.dv, "dv")]
+                        {
+                            assert_eq!(
+                                max_abs_diff(gx, gy),
+                                0.0,
+                                "seed {seed}: lm-backward {name} bits ({workers} workers)"
+                            );
+                        }
+                    }
+                    (a, b) => panic!(
+                        "seed {seed}: lane flip — {} vs {} ({workers} workers)",
+                        a.lane(),
+                        b.lane()
+                    ),
+                }
+            }
+        }
     }
 }
 
