@@ -11,7 +11,7 @@ use conv_basis::basis::{recover_from_oracle, ConvBasis, DenseColumnOracle, KConv
 use conv_basis::fft::FftPlanner;
 use conv_basis::lowrank::masked;
 use conv_basis::tensor::{Matrix, Rng};
-use conv_basis::util::{fmt_dur, time_median, Table};
+use conv_basis::util::{fmt_dur, smoke, time_median, Table};
 
 fn synthetic_basis(n: usize, k: usize, rng: &mut Rng) -> KConvBasis {
     let mut terms = Vec::new();
@@ -32,11 +32,13 @@ fn synthetic_basis(n: usize, k: usize, rng: &mut Rng) -> KConvBasis {
 
 fn main() {
     println!("# Ablations");
+    // `--smoke` (CI): tiny sizes, just enough to execute every section.
+    let ns: &[usize] = if smoke() { &[96] } else { &[512, 2048, 8192] };
     let mut rng = Rng::seeded(4242);
 
     println!("\n## 1. normalizer D̃: prefix-sum row_sums vs FFT·1ₙ (n sweep, k=8)");
     let mut t1 = Table::new(&["n", "prefix", "fft", "speedup"]);
-    for &n in &[512usize, 2048, 8192] {
+    for &n in ns {
         let basis = synthetic_basis(n, 8, &mut rng);
         let ones = vec![1.0; n];
         let mut planner = FftPlanner::new();
@@ -53,7 +55,7 @@ fn main() {
 
     println!("\n## 2. continuous-row mask: segment tree (paper Alg 6) vs prefix sums");
     let mut t2 = Table::new(&["n", "segtree", "prefix", "segtree/prefix"]);
-    for &n in &[512usize, 2048, 8192] {
+    for &n in ns {
         let k = 16;
         let u1 = Matrix::randn(n, k, &mut rng);
         let u2 = Matrix::randn(n, k, &mut rng);
@@ -76,7 +78,7 @@ fn main() {
     println!("\n## 3. FFT plan cache: shared planner vs rebuilt per apply (n=2048, k=8, 16 applies)");
     let mut t3 = Table::new(&["variant", "time"]);
     {
-        let n = 2048;
+        let n = if smoke() { 96 } else { 2048 };
         let basis = synthetic_basis(n, 8, &mut rng);
         let x = rng.randn_vec(n);
         let mut shared = FftPlanner::new();
@@ -106,7 +108,7 @@ fn main() {
 
     println!("\n## 4. row-change deltas: analytic vs O(n) scan (sliding window, n sweep)");
     let mut t4 = Table::new(&["n", "analytic", "scan", "speedup"]);
-    for &n in &[512usize, 2048, 8192] {
+    for &n in ns {
         let k = 16;
         let u1 = Matrix::randn(n, k, &mut rng);
         let u2 = Matrix::randn(n, k, &mut rng);
@@ -127,7 +129,7 @@ fn main() {
 
     println!("\n## 5. recovery: binary search (Alg 3) vs linear scan of onsets (n sweep, k=4)");
     let mut t5 = Table::new(&["n", "probes (binary)", "probes (linear bound)", "saving"]);
-    for &n in &[512usize, 2048, 8192] {
+    for &n in ns {
         let t_win = 4;
         let mut terms = Vec::new();
         let mut m = n;
@@ -163,7 +165,9 @@ fn main() {
 
     println!("\n## 6. apply_matrix: spectrum-cached pair-packed (§Perf L3-1) vs per-column");
     let mut t6 = Table::new(&["n", "d", "per-column", "spectrum+pair", "speedup"]);
-    for &(n, d) in &[(2048usize, 64usize), (4096, 64), (4096, 128)] {
+    let nds: &[(usize, usize)] =
+        if smoke() { &[(128, 8)] } else { &[(2048, 64), (4096, 64), (4096, 128)] };
+    for &(n, d) in nds {
         let basis = synthetic_basis(n, 8, &mut rng);
         let v = Matrix::randn(n, d, &mut rng);
         let mut planner = FftPlanner::new();

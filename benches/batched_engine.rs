@@ -17,7 +17,7 @@ use conv_basis::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, Eng
 use conv_basis::attention::conv_attention_strided;
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::tensor::{Matrix, Rng};
-use conv_basis::util::{fmt_dur, sink, time_median, Table};
+use conv_basis::util::{fmt_dur, sink, smoke, time_median, Table};
 
 /// Prefill-lane submit of a cloned job set.
 fn submit_prefill(engine: &BatchedEngine, jobs: &[AttnJob]) -> usize {
@@ -65,8 +65,12 @@ fn main() {
         "n", "batch", "single", "batched cold", "batched warm", "cold ×", "warm ×", "warm req/s",
     ]);
     let mut accept_line = String::new();
-    for &n in &[256usize, 1024, 4096] {
-        for &batch in &[1usize, 8, 32] {
+    // `--smoke` (CI): one tiny cell per axis, enough to execute the
+    // three variants end to end.
+    let ns: &[usize] = if smoke() { &[64] } else { &[256, 1024, 4096] };
+    let batches: &[usize] = if smoke() { &[2] } else { &[1, 8, 32] };
+    for &n in ns {
+        for &batch in batches {
             let jobs = make_jobs(n, batch, n as u64 * 1000 + batch as u64);
             let n_jobs = jobs.len();
             let iters = if n >= 4096 { 3 } else { 5 };

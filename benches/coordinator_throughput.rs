@@ -10,7 +10,7 @@ use conv_basis::attention::decode::DecodeState;
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::data::{WorkloadConfig, WorkloadTrace};
 use conv_basis::tensor::{Matrix, Rng};
-use conv_basis::util::{fmt_dur, time_median, Table};
+use conv_basis::util::{fmt_dur, smoke, time_median, Table};
 use std::time::Instant;
 
 fn run(label: &str, exact_below: usize, cache_capacity: usize, table: &mut Table) {
@@ -22,11 +22,14 @@ fn run(label: &str, exact_below: usize, cache_capacity: usize, table: &mut Table
         lowrank_degree: 2,
         gen: None,
     });
+    // `--smoke` (CI): a handful of short requests, same pipeline.
+    let (requests, len_buckets) =
+        if smoke() { (10, [32, 64, 128, 256]) } else { (120, [256, 512, 1024, 2048]) };
     let trace = WorkloadTrace::generate(
-        120,
+        requests,
         &WorkloadConfig {
             rate_per_s: 1e9, // saturate: measure capacity, not arrival
-            len_buckets: [256, 512, 1024, 2048],
+            len_buckets,
             len_weights: [0.4, 0.3, 0.2, 0.1],
             d_model: 32,
         },
@@ -71,7 +74,8 @@ fn main() {
     println!("\n# Decode (last-token) attention per step");
     println!("(kv-style = recompute only row n−1 exactly, O(nd); cached-basis = O(kn+nd) without touching K)");
     let mut t2 = Table::new(&["n", "full recompute", "kv-style exact row", "cached-basis row", "vs kv-style"]);
-    for &n in &[512usize, 2048, 8192] {
+    let ns: &[usize] = if smoke() { &[128] } else { &[512, 2048, 8192] };
+    for &n in ns {
         let d = 64;
         let mut rng = Rng::seeded(n as u64);
         let (q, k) = rope_structured_qk(n, d, 3, &mut rng);

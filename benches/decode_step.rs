@@ -24,7 +24,7 @@ use conv_basis::attention::decode::{exact_decode_last_row, DecodeState};
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::attention::{conv_attention_strided, exact_attention, Mask};
 use conv_basis::tensor::{dot, Matrix, Rng};
-use conv_basis::util::{fmt_dur, sink, time_median, Table};
+use conv_basis::util::{fmt_dur, sink, smoke, time_median, Table};
 
 const D: usize = 16;
 const K_BASES: usize = 8;
@@ -41,7 +41,9 @@ fn main() {
         "step ÷ conv-reprefill",
         "step ÷ exact-reprefill",
     ]);
-    for &n in &[256usize, 1024, 4096] {
+    // `--smoke` (CI): a single tiny n executes all four strategies.
+    let ns: &[usize] = if smoke() { &[64] } else { &[256, 1024, 4096] };
+    for &n in ns {
         let mut rng = Rng::seeded(n as u64);
         let (q_full, k_full) = rope_structured_qk(n + 1, D, 3, &mut rng);
         let q = q_full.slice(0, n, 0, D);

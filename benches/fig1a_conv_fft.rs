@@ -5,7 +5,7 @@
 use conv_basis::conv::{conv_apply, conv_apply_naive};
 use conv_basis::fft::{fft_conv_flops, naive_conv_flops, FftPlanner};
 use conv_basis::tensor::Rng;
-use conv_basis::util::{fmt_dur, time_median, Table};
+use conv_basis::util::{fmt_dur, smoke, time_median, Table};
 
 fn main() {
     println!("# Figure 1a — conv(a)·w: naive O(n²) vs FFT O(n log n)");
@@ -21,7 +21,9 @@ fn main() {
     ]);
     let mut rng = Rng::seeded(1);
     let mut planner = FftPlanner::new();
-    for &n in &[256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+    let ns: &[usize] =
+        if smoke() { &[128, 256] } else { &[256, 512, 1024, 2048, 4096, 8192, 16384] };
+    for &n in ns {
         let a = rng.randn_vec(n);
         let w = rng.randn_vec(n);
         let iters = if n <= 2048 { 21 } else { 7 };

@@ -9,7 +9,7 @@ use conv_basis::model::{
     eval_classifier, train_classifier, AttentionBackend, ModelConfig, TrainConfig,
 };
 use conv_basis::tensor::rel_fro_error;
-use conv_basis::util::Table;
+use conv_basis::util::{smoke, Table};
 
 fn main() {
     println!("# Figure 4 (bench scale) — error and accuracy vs k");
@@ -22,9 +22,12 @@ fn main() {
         d_ff: 64,
         max_seq: seq,
     };
-    let ds = SentimentDataset::generate(160, 50, 2024);
+    // `--smoke` (CI): a few steps over a small dataset — enough to
+    // execute train + the k sweep end to end.
+    let (n_train, n_test, steps) = if smoke() { (24, 8, 8) } else { (160, 50, 150) };
+    let ds = SentimentDataset::generate(n_train, n_test, 2024);
     let tcfg =
-        TrainConfig { steps: 150, lr: 3e-3, seq_len: seq, batch: 4, log_every: 50, seed: 3 };
+        TrainConfig { steps, lr: 3e-3, seq_len: seq, batch: 4, log_every: steps, seed: 3 };
     let (model, log) = train_classifier(&mcfg, &tcfg, &ds);
     println!(
         "trained {} params, loss {:.3} → {:.3}",
@@ -48,7 +51,8 @@ fn main() {
     let acc_exact = eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact);
 
     let mut table = Table::new(&["k", "rel ‖Y−Ỹ‖²_F/‖Y‖²_F", "accuracy", "exact acc"]);
-    for k in [1usize, 2, 4, 8, 16, 32, seq] {
+    let ks: Vec<usize> = if smoke() { vec![1, 4, seq] } else { vec![1, 2, 4, 8, 16, 32, seq] };
+    for k in ks {
         let backend = if k >= seq {
             AttentionBackend::ConvBasis(conv_basis::basis::RecoverConfig::exact(seq))
         } else {

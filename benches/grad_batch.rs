@@ -24,7 +24,7 @@ use conv_basis::basis::RecoverConfig;
 use conv_basis::gradient::batched::{FastGradConfig, GradJob};
 use conv_basis::gradient::{grad_fast, AttentionLossProblem};
 use conv_basis::tensor::{Matrix, Rng};
-use conv_basis::util::{fmt_dur, sink, time_median, Table};
+use conv_basis::util::{fmt_dur, sink, smoke, time_median, Table};
 use std::sync::Arc;
 
 const LAYERS: u32 = 4;
@@ -73,7 +73,9 @@ fn main() {
     let mut table = Table::new(&[
         "n", "jobs", "single", "batched cold", "batched warm", "cold ×", "warm ×",
     ]);
-    for &n in &[256usize, 1024] {
+    // `--smoke` (CI): one tiny n executes all three variants.
+    let ns: &[usize] = if smoke() { &[48] } else { &[256, 1024] };
+    for &n in ns {
         let cfg = RecoverConfig { k_max: 8, t: 2, delta: 1e-6, eps: 1e-12 };
         let jobs = make_jobs(n, &cfg);
         let n_jobs = jobs.len();

@@ -6,16 +6,23 @@ use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::attention::{conv_attention, exact_attention, Mask};
 use conv_basis::basis::RecoverConfig;
 use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
-use conv_basis::util::{fmt_dur, time_median, Table};
+use conv_basis::util::{fmt_dur, smoke, time_median, Table};
 
 fn main() {
     println!("# Theorem 4.4 — attention inference: exact vs conv-basis");
-    let quick = std::env::args().any(|a| a == "--quick");
+    // `--smoke` (CI) is a stronger `--quick`: tiny sizes only.
+    let quick = smoke() || std::env::args().any(|a| a == "--quick");
 
     // Sweep n at fixed d, k budget.
     println!("\n## sweep n (d = 64, k_max = 8, structured QKᵀ)");
     let mut t1 = Table::new(&["n", "exact", "conv", "speedup", "recovered k", "max err"]);
-    let ns: &[usize] = if quick { &[256, 512, 1024] } else { &[256, 512, 1024, 2048, 4096] };
+    let ns: &[usize] = if smoke() {
+        &[128]
+    } else if quick {
+        &[256, 512, 1024]
+    } else {
+        &[256, 512, 1024, 2048, 4096]
+    };
     for &n in ns {
         let mut rng = Rng::seeded(n as u64);
         let d = 64;
@@ -42,7 +49,7 @@ fn main() {
     // Sweep k_max at fixed n: cost should grow ~linearly in k.
     println!("\n## sweep k (n = 2048, d = 64; k-conv synthetic target)");
     let mut t2 = Table::new(&["k", "conv time", "time/k"]);
-    let n = if quick { 1024 } else { 2048 };
+    let n = if smoke() { 128 } else if quick { 1024 } else { 2048 };
     for &k_target in &[1usize, 2, 4, 8, 16] {
         let mut rng = Rng::seeded(900 + k_target as u64);
         let v = Matrix::randn(n, 64, &mut rng);
@@ -77,8 +84,9 @@ fn main() {
     // Sweep d at fixed n, k.
     println!("\n## sweep d (n = 1024, k_max = 8)");
     let mut t3 = Table::new(&["d", "exact", "conv", "speedup"]);
-    for &d in &[16usize, 32, 64, 128] {
-        let n = 1024;
+    let ds: &[usize] = if smoke() { &[16] } else { &[16, 32, 64, 128] };
+    for &d in ds {
+        let n = if smoke() { 128 } else { 1024 };
         let mut rng = Rng::seeded(7000 + d as u64);
         let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
         let v = Matrix::randn(n, d, &mut rng);

@@ -27,7 +27,7 @@ use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::basis::RecoverConfig;
 use conv_basis::gradient::batched::{AttnBackwardJob, AttnBackwardMode, FastGradConfig};
 use conv_basis::tensor::{dot, softmax, Matrix, Rng};
-use conv_basis::util::{fmt_dur, sink, time_median, Table};
+use conv_basis::util::{fmt_dur, sink, smoke, time_median, Table};
 use std::sync::Arc;
 
 const DH: usize = 8;
@@ -95,6 +95,7 @@ fn submit_backward(engine: &BatchedEngine, cases: &[HeadCase], mode: &AttnBackwa
                     v: c.v.clone(),
                     dout: c.dout.clone(),
                     probs: Some(Arc::clone(&c.probs)),
+                    basis: None,
                     mode: mode.clone(),
                 },
             )
@@ -114,7 +115,9 @@ fn main() {
     let mut table = Table::new(&[
         "n", "heads", "dense", "engine exact", "conv fast", "exact ×", "fast ×",
     ]);
-    for &n in &[256usize, 1024, 4096] {
+    // `--smoke` (CI): one tiny n executes all three strategies.
+    let ns: &[usize] = if smoke() { &[48] } else { &[256, 1024, 4096] };
+    for &n in ns {
         // The n×n probs cache dominates memory at 4096 — halve the job
         // set there (printed, not silent).
         let heads = if n >= 4096 { 2 } else { 4 };

@@ -6,13 +6,20 @@
 use conv_basis::attention::Mask;
 use conv_basis::lowrank::masked;
 use conv_basis::tensor::{Matrix, Rng};
-use conv_basis::util::{fmt_dur, time_median, Table};
+use conv_basis::util::{fmt_dur, smoke, time_median, Table};
 
 fn main() {
     println!("# Theorem 6.5 — masked low-rank attention kernels");
-    let quick = std::env::args().any(|a| a == "--quick");
+    // `--smoke` (CI) is a stronger `--quick`: one tiny n.
+    let quick = smoke() || std::env::args().any(|a| a == "--quick");
     let k = 16;
-    let ns: &[usize] = if quick { &[256, 512] } else { &[256, 512, 1024, 2048, 4096] };
+    let ns: &[usize] = if smoke() {
+        &[128]
+    } else if quick {
+        &[256, 512]
+    } else {
+        &[256, 512, 1024, 2048, 4096]
+    };
 
     println!("\n## per-mask timing (k = {k}; dense baseline materializes W∘U₁U₂ᵀ)");
     let mut table = Table::new(&["mask", "n", "dense", "fast", "speedup"]);

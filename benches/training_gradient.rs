@@ -8,11 +8,12 @@ use conv_basis::gradient::{
     AttentionLossProblem,
 };
 use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
-use conv_basis::util::{fmt_dur, time_median, Table};
+use conv_basis::util::{fmt_dur, smoke, time_median, Table};
 
 fn main() {
     println!("# Theorem 5.6 — attention training gradient");
-    let quick = std::env::args().any(|a| a == "--quick");
+    // `--smoke` (CI) is a stronger `--quick`: tiny sizes only.
+    let quick = smoke() || std::env::args().any(|a| a == "--quick");
 
     println!("\n## backward gradient, sweep n (d = 8, structured instance)");
     let mut t1 = Table::new(&[
@@ -24,7 +25,13 @@ fn main() {
         "k",
         "max err",
     ]);
-    let ns: &[usize] = if quick { &[128, 256, 512] } else { &[128, 256, 512, 1024, 2048] };
+    let ns: &[usize] = if smoke() {
+        &[64]
+    } else if quick {
+        &[128, 256, 512]
+    } else {
+        &[128, 256, 512, 1024, 2048]
+    };
     for &n in ns {
         let d = 8;
         let mut rng = Rng::seeded(n as u64);
@@ -76,8 +83,9 @@ fn main() {
 
     println!("\n## backward, sweep d (n = 512): cost should scale ~d²");
     let mut t3 = Table::new(&["d", "conv-fast", "time/d²(µs)"]);
-    for &d in &[4usize, 8, 16] {
-        let n = 512;
+    let ds: &[usize] = if smoke() { &[4] } else { &[4, 8, 16] };
+    for &d in ds {
+        let n = if smoke() { 64 } else { 512 };
         let mut rng = Rng::seeded(77 + d as u64);
         let p = AttentionLossProblem::random_structured(n, d, &mut rng);
         let x = Matrix::eye(d).scale(0.5);

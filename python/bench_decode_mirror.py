@@ -215,6 +215,68 @@ def bench_lm_backward(n, d=GRAD_D):
     return [timeit(lambda: bwd_conv()[0], iters), timeit(lambda: bwd_dense()[0], iters)]
 
 
+def bench_lm_step(n, d=GRAD_D):
+    """Mirror of ``benches/lm_step.rs`` at the head level: one training
+    step's attention work — forward apply THEN the d(Q,K,V) backward
+    *reusing the same operator* (the step-scoped basis handoff) — conv
+    vs dense, k=1 Toeplitz (the conv-exact case). The conv step builds
+    the basis once (recovery surrogate: the FFT spectrum) and both
+    halves consume it; the dense step materializes f once and both
+    halves consume that — the fair mirror of "recover/materialize once
+    per step"."""
+    rng = np.random.default_rng(n + 3)
+    g = rng.normal(scale=0.5, size=n)
+    b = np.exp(g)
+    dvec = np.cumsum(b)
+    q = rng.normal(size=(n, d))
+    k = rng.normal(size=(n, d))
+    v = rng.normal(size=(n, d))
+    dout = rng.normal(size=(n, d))
+
+    def conv_step():
+        fb = np.fft.rfft(b, 2 * n)  # the once-per-step recovery product
+
+        def f_apply(w):
+            return np.fft.irfft(fb * np.fft.rfft(w, 2 * n))[:n] / dvec
+
+        def ft_apply(w):
+            s = (w / dvec)[::-1]
+            return np.fft.irfft(fb * np.fft.rfft(s, 2 * n))[:n][::-1]
+
+        # Forward: Y = f·V (what the training forward returns).
+        y = np.stack([f_apply(v[:, c]) for c in range(d)], axis=1)
+        # Backward: the diag-sandwich chains over the SAME operator.
+        r = np.einsum("ij,ij->i", dout, y)
+        dv = np.stack([ft_apply(dout[:, c]) for c in range(d)], axis=1)
+        dq = np.empty((n, d))
+        dk = np.empty((n, d))
+        for col in range(d):
+            acc = np.zeros(n)
+            for c in range(d):
+                acc += dout[:, c] * f_apply(v[:, c] * k[:, col])
+            dq[:, col] = acc - r * f_apply(k[:, col])
+            acc = np.zeros(n)
+            for c in range(d):
+                acc += v[:, c] * ft_apply(dout[:, c] * q[:, col])
+            dk[:, col] = acc - ft_apply(r * q[:, col])
+        return y, dq, dk, dv
+
+    def dense_step():
+        idx = np.subtract.outer(np.arange(n), np.arange(n))
+        f = np.where(idx >= 0, b[np.clip(idx, 0, n - 1)], 0.0) / dvec[:, None]
+        y = f @ v
+        r = np.einsum("ij,ij->i", dout, y)
+        dv = f.T @ dout
+        dp = dout @ v.T
+        ds = f * dp - r[:, None] * f
+        return y, ds @ k, ds.T @ q, dv
+
+    for a, bb in zip(conv_step(), dense_step()):
+        assert np.allclose(a, bb, atol=1e-8)
+    iters = 2 if n >= 4096 else 5
+    return [timeit(lambda: conv_step()[1], iters), timeit(lambda: dense_step()[1], iters)]
+
+
 def main():
     print(f"# decode step vs re-prefill — NumPy mirror (d={D}, k={K})")
     header = ["n", "conv step", "exact row", "conv reprefill", "exact reprefill",
@@ -245,6 +307,16 @@ def main():
     print("|" + "---|" * len(header))
     for n in (256, 1024, 4096):
         tc, td = bench_lm_backward(n)
+        print(f"| {n} | {fmt(tc)} | {fmt(td)} | {td / tc:.1f}x |")
+
+    print()
+    print(f"# full training step (fwd+bwd, shared basis) conv vs dense — "
+          f"NumPy mirror (d={GRAD_D}, k=1)")
+    header = ["n", "step conv", "step dense", "dense/conv"]
+    print("| " + " | ".join(header) + " |")
+    print("|" + "---|" * len(header))
+    for n in (256, 1024, 4096):
+        tc, td = bench_lm_step(n)
         print(f"| {n} | {fmt(tc)} | {fmt(td)} | {td / tc:.1f}x |")
 
 

@@ -10,7 +10,11 @@
 //! caller key plus an [`EngineOp`]:
 //!
 //! * [`EngineOp::Prefill`] — one (sequence, head) whole-prefix
-//!   attention job ([`AttnJob`]);
+//!   attention job ([`AttnJob`]); its **training-forward** flavor
+//!   ([`AttnJob::for_training`]) additionally returns the backward's
+//!   artifact — softmax rows (exact) or the recovered basis as a
+//!   step-scoped handle (conv) — and keeps training out of the serving
+//!   `BasisCache` entirely;
 //! * [`EngineOp::Decode`] — one (sequence, layer, head) autoregressive
 //!   decode step ([`DecodeJob`]);
 //! * [`EngineOp::Gradient`] — one (layer, head) Definition 5.1 backward
@@ -140,7 +144,7 @@ use super::{
     Mask, MaskKind,
 };
 use crate::basis::{exp_transform, recover_strided, QkColumnOracle, RecoverConfig};
-use crate::coordinator::{fingerprint, BasisCache, CacheKey, CachedBasis, Metrics};
+use crate::coordinator::{fingerprint, BasisCache, CacheKey, CachedBasis, Metrics, StepBasis};
 use crate::fft::{FftPlanner, SharedFftPlanner};
 use crate::gradient::batched::{
     execute_attn_backward_job, execute_grad_job, AttnBackwardJob, AttnBackwardOutput, GradJob,
@@ -180,6 +184,15 @@ pub struct AttnJob {
     /// `None` means causal.
     pub mask: Option<Mask>,
     pub backend: BatchedBackend,
+    /// **Training-forward** job (`false` for serving jobs, the
+    /// default): the job keeps what the backward needs — the exact
+    /// kernel's softmax rows, or the conv kernel's recovered basis as
+    /// a step-scoped handle — in the [`JobOutput`], and conv recovery
+    /// **never touches the serving [`BasisCache`]** (training bases are
+    /// dead after one optimizer step; a shard write could only evict
+    /// live serving entries). Supported backends: `Exact` and `Conv`,
+    /// causal mask only.
+    pub training: bool,
 }
 
 impl AttnJob {
@@ -192,7 +205,15 @@ impl AttnJob {
         v: Matrix,
         backend: BatchedBackend,
     ) -> Self {
-        AttnJob { layer, head, q, k, v, mask: None, backend }
+        AttnJob { layer, head, q, k, v, mask: None, backend, training: false }
+    }
+
+    /// Mark this job as a training-forward job (see
+    /// [`AttnJob::training`]). `Transformer::forward_train_batch` is
+    /// the canonical submitter.
+    pub fn for_training(mut self) -> Self {
+        self.training = true;
+        self
     }
 }
 
@@ -207,9 +228,35 @@ pub struct JobOutput {
     pub fell_back: bool,
     /// Whether the basis came from the cache (conv paths only).
     pub cache_hit: bool,
+    /// Training-forward artifact: the recovered conv basis as a
+    /// step-scoped handle (conv training jobs whose recovery
+    /// succeeded). The backward consumes it via
+    /// `AttnBackwardJob::basis` — one recovery per (record, layer,
+    /// head) per step, shared forward→backward. `None` for serving
+    /// jobs.
+    pub basis: Option<StepBasis>,
+    /// Training-forward artifact: the softmax rows (exact training
+    /// jobs, and conv training jobs that fell back) — what the exact
+    /// backward mode and the fast backward's dense fallback consume.
+    /// `None` for serving jobs.
+    pub probs: Option<Arc<Matrix>>,
     /// Wall time this job spent executing on its worker (per-job, so
     /// latency percentiles stay meaningful under batching).
     pub exec: std::time::Duration,
+}
+
+/// A serving-path [`JobOutput`] (no training artifacts, exec stamped
+/// by the caller).
+fn serving_output(y: Matrix, basis_k: usize, fell_back: bool, cache_hit: bool) -> JobOutput {
+    JobOutput {
+        y,
+        basis_k,
+        fell_back,
+        cache_hit,
+        basis: None,
+        probs: None,
+        exec: std::time::Duration::ZERO,
+    }
 }
 
 /// One typed unit of engine work: a caller-chosen correlation key plus
@@ -460,9 +507,15 @@ impl BatchedEngine {
     pub fn submit(&self, jobs: Vec<EngineJob>) -> Vec<EngineOutput> {
         Metrics::incr(&self.metrics.submit_calls);
         let (mut n_prefill, mut n_decode, mut n_grad, mut n_bwd) = (0u64, 0u64, 0u64, 0u64);
+        let mut n_train_conv = 0u64;
         for job in &jobs {
             match &job.op {
-                EngineOp::Prefill(_) => n_prefill += 1,
+                EngineOp::Prefill(j) => {
+                    n_prefill += 1;
+                    if j.training && matches!(j.backend, BatchedBackend::Conv(_)) {
+                        n_train_conv += 1;
+                    }
+                }
                 EngineOp::Decode(_) => n_decode += 1,
                 EngineOp::Gradient(_) => n_grad += 1,
                 EngineOp::AttnBackward(_) => n_bwd += 1,
@@ -471,6 +524,10 @@ impl BatchedEngine {
         if n_prefill > 0 {
             Metrics::incr(&self.metrics.batched_calls);
             Metrics::add(&self.metrics.batched_jobs, n_prefill);
+        }
+        if n_train_conv > 0 {
+            Metrics::incr(&self.metrics.train_fwd_conv_calls);
+            Metrics::add(&self.metrics.train_fwd_conv_jobs, n_train_conv);
         }
         if n_decode > 0 {
             Metrics::incr(&self.metrics.decode_calls);
@@ -566,7 +623,11 @@ fn execute_job_inner(
     metrics: &Metrics,
     model_id: u64,
 ) -> JobOutput {
-    let AttnJob { layer, head, q, k, v, mask, backend } = job;
+    if job.training {
+        // Training jobs never touch the serving cache — separate path.
+        return execute_training_job(job, planner, metrics);
+    }
+    let AttnJob { layer, head, q, k, v, mask, backend, .. } = job;
     let n = q.rows();
     let mask = mask.unwrap_or_else(|| Mask::causal(n));
     // Local planner view over the engine-wide plan cache.
@@ -574,24 +635,12 @@ fn execute_job_inner(
     match backend {
         BatchedBackend::Exact => {
             Metrics::incr(&metrics.exact_requests);
-            JobOutput {
-                y: exact_attention(&q, &k, &v, &mask),
-                basis_k: 0,
-                fell_back: false,
-                cache_hit: false,
-                exec: std::time::Duration::ZERO,
-            }
+            serving_output(exact_attention(&q, &k, &v, &mask), 0, false, false)
         }
         BatchedBackend::LowRank(cfg) => {
             Metrics::incr(&metrics.lowrank_requests);
             let lr = LowRankAttention::new(&q, &k, mask, &cfg);
-            JobOutput {
-                y: lr.forward(&v),
-                basis_k: 0,
-                fell_back: false,
-                cache_hit: false,
-                exec: std::time::Duration::ZERO,
-            }
+            serving_output(lr.forward(&v), 0, false, false)
         }
         BatchedBackend::Conv(cfg) => {
             Metrics::incr(&metrics.conv_requests);
@@ -606,13 +655,7 @@ fn execute_job_inner(
                 Metrics::incr(&metrics.cache_hits);
                 let basis_k = hit.post_basis.k();
                 let y = apply_cached_basis(&mut local, &hit.post_basis, &hit.d_tilde, &v);
-                return JobOutput {
-                    y,
-                    basis_k,
-                    fell_back: false,
-                    cache_hit: true,
-                    exec: std::time::Duration::ZERO,
-                };
+                return serving_output(y, basis_k, false, true);
             }
             Metrics::incr(&metrics.cache_misses);
             match conv_attention_masked_with(&mut local, &q, &k, &v, &mask, &cfg) {
@@ -624,23 +667,11 @@ fn execute_job_inner(
                             d_tilde: out.d_tilde.clone(),
                         },
                     );
-                    JobOutput {
-                        y: out.y,
-                        basis_k: out.post_basis.k(),
-                        fell_back: false,
-                        cache_hit: false,
-                        exec: std::time::Duration::ZERO,
-                    }
+                    serving_output(out.y, out.post_basis.k(), false, false)
                 }
                 Err(_) => {
                     Metrics::incr(&metrics.fallbacks);
-                    JobOutput {
-                        y: exact_attention(&q, &k, &v, &mask),
-                        basis_k: 0,
-                        fell_back: true,
-                        cache_hit: false,
-                        exec: std::time::Duration::ZERO,
-                    }
+                    serving_output(exact_attention(&q, &k, &v, &mask), 0, true, false)
                 }
             }
         }
@@ -649,13 +680,7 @@ fn execute_job_inner(
             if !matches!(mask.kind(), MaskKind::Causal) {
                 // Strided recovery assumes the causal mask.
                 Metrics::incr(&metrics.fallbacks);
-                return JobOutput {
-                    y: exact_attention(&q, &k, &v, &mask),
-                    basis_k: 0,
-                    fell_back: true,
-                    cache_hit: false,
-                    exec: std::time::Duration::ZERO,
-                };
+                return serving_output(exact_attention(&q, &k, &v, &mask), 0, true, false);
             }
             let key = CacheKey {
                 model_id,
@@ -668,13 +693,7 @@ fn execute_job_inner(
                 Metrics::incr(&metrics.cache_hits);
                 let basis_k = hit.post_basis.k();
                 let y = apply_cached_basis(&mut local, &hit.post_basis, &hit.d_tilde, &v);
-                return JobOutput {
-                    y,
-                    basis_k,
-                    fell_back: false,
-                    cache_hit: true,
-                    exec: std::time::Duration::ZERO,
-                };
+                return serving_output(y, basis_k, false, true);
             }
             Metrics::incr(&metrics.cache_misses);
             match conv_attention_strided_with(&mut local, &q, &k, &v, k_bases) {
@@ -686,26 +705,98 @@ fn execute_job_inner(
                             d_tilde: out.d_tilde.clone(),
                         },
                     );
-                    JobOutput {
-                        y: out.y,
-                        basis_k: out.post_basis.k(),
-                        fell_back: false,
-                        cache_hit: false,
-                        exec: std::time::Duration::ZERO,
-                    }
+                    serving_output(out.y, out.post_basis.k(), false, false)
                 }
                 Err(_) => {
                     Metrics::incr(&metrics.fallbacks);
-                    JobOutput {
-                        y: exact_attention(&q, &k, &v, &mask),
-                        basis_k: 0,
-                        fell_back: true,
-                        cache_hit: false,
-                        exec: std::time::Duration::ZERO,
-                    }
+                    serving_output(exact_attention(&q, &k, &v, &mask), 0, true, false)
                 }
             }
         }
+    }
+}
+
+/// Execute one **training-forward** job (see [`AttnJob::training`]):
+/// the job's output carries the artifact the matching backward
+/// consumes, and the serving [`BasisCache`] is never consulted or
+/// written.
+///
+/// * `Exact` — softmax rows via the training-forward helper
+///   (`dense_causal_probs`, the same float-op order as
+///   `AttentionBackend::attend(keep_probs)`), `y = P·V`; the rows ride
+///   the output for the exact backward.
+/// * `Conv` — recover once via the identical float-op path a serving
+///   conv job uses, return the basis as a step-scoped handle
+///   ([`StepBasis`], counted in `Metrics::step_recoveries`). Recovery
+///   failure (or a non-finite normalizer) falls back to the exact
+///   kernel above — **bit-equal** to the exact training forward, so a
+///   failed recovery degrades cost, never the loss curve (counted in
+///   `fallbacks` *and* `train_fwd_fallbacks`).
+fn execute_training_job(
+    job: AttnJob,
+    planner: &Arc<SharedFftPlanner>,
+    metrics: &Metrics,
+) -> JobOutput {
+    let AttnJob { q, k, v, mask, backend, .. } = job;
+    let n = q.rows();
+    assert!(
+        mask.as_ref().is_none_or(|m| matches!(m.kind(), MaskKind::Causal)),
+        "training-forward jobs are causal"
+    );
+    let exact_train = |q: &Matrix, k: &Matrix, v: &Matrix, fell_back: bool| {
+        // One source of truth for training softmax rows: bit-identical
+        // to `AttentionBackend::attend(keep_probs)` and to the fast
+        // backward's dense fallback.
+        let probs = crate::gradient::batched::dense_causal_probs(q, k);
+        let y = probs.matmul(v);
+        JobOutput {
+            y,
+            basis_k: 0,
+            fell_back,
+            cache_hit: false,
+            basis: None,
+            probs: Some(Arc::new(probs)),
+            exec: std::time::Duration::ZERO,
+        }
+    };
+    match backend {
+        BatchedBackend::Exact => {
+            Metrics::incr(&metrics.exact_requests);
+            exact_train(&q, &k, &v, false)
+        }
+        BatchedBackend::Conv(cfg) => {
+            Metrics::incr(&metrics.conv_requests);
+            let mut local = FftPlanner::with_shared(Arc::clone(planner));
+            let mask = Mask::causal(n);
+            match conv_attention_masked_with(&mut local, &q, &k, &v, &mask, &cfg) {
+                // Same soundness guard as every serving cache writer:
+                // only finite, positive normalizers may be handed to
+                // the backward's `FOperator::from_cached`.
+                Ok(out) if out.d_tilde.iter().all(|&x| x > 0.0 && x.is_finite()) => {
+                    Metrics::incr(&metrics.step_recoveries);
+                    let basis_k = out.post_basis.k();
+                    let handle: StepBasis =
+                        Arc::new(CachedBasis { post_basis: out.post_basis, d_tilde: out.d_tilde });
+                    JobOutput {
+                        y: out.y,
+                        basis_k,
+                        fell_back: false,
+                        cache_hit: false,
+                        basis: Some(handle),
+                        probs: None,
+                        exec: std::time::Duration::ZERO,
+                    }
+                }
+                _ => {
+                    Metrics::incr(&metrics.fallbacks);
+                    Metrics::incr(&metrics.train_fwd_fallbacks);
+                    exact_train(&q, &k, &v, true)
+                }
+            }
+        }
+        other => panic!(
+            "training-forward jobs support the Exact and Conv backends, got {other:?}"
+        ),
     }
 }
 
@@ -1241,6 +1332,7 @@ mod tests {
             v: Matrix::randn(12, 3, &mut rng),
             dout: Matrix::randn(12, 3, &mut rng),
             probs: Some(probs),
+            basis: None,
             mode: AttnBackwardMode::Exact,
         };
         let outs = e.submit(vec![
@@ -1273,6 +1365,72 @@ mod tests {
     }
 
     #[test]
+    fn training_forward_jobs_return_artifacts_and_skip_serving_cache() {
+        use crate::basis::RecoverConfig;
+        let e = engine(2);
+        let mut rng = Rng::seeded(1800);
+        let (n, d) = (20, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let v = Matrix::randn(n, d, &mut rng);
+
+        // Exact training job: probs ride the output, bit-identical to
+        // the model layer's training forward helper.
+        let outs = e.submit(vec![EngineJob::prefill(
+            0,
+            AttnJob::causal(0, 0, q.clone(), k.clone(), v.clone(), BatchedBackend::Exact)
+                .for_training(),
+        )]);
+        let out = outs[0].result.clone().into_prefill();
+        let want_probs = crate::gradient::batched::dense_causal_probs(&q, &k);
+        let probs = out.probs.expect("exact training job returns probs");
+        assert_eq!(max_abs_diff(&probs, &want_probs), 0.0);
+        assert_eq!(max_abs_diff(&out.y, &want_probs.matmul(&v)), 0.0);
+        assert!(out.basis.is_none());
+
+        // Conv training job: the basis rides the output as a
+        // step-scoped handle, y matches the serving conv path bitwise,
+        // and the serving cache sees zero traffic.
+        let cfg = RecoverConfig::exact(n);
+        let outs = e.submit(vec![EngineJob::prefill(
+            1,
+            AttnJob::causal(0, 1, q.clone(), k.clone(), v.clone(), BatchedBackend::Conv(cfg))
+                .for_training(),
+        )]);
+        let out = outs[0].result.clone().into_prefill();
+        assert!(!out.fell_back);
+        let handle = out.basis.expect("conv training job returns its basis");
+        assert!(handle.post_basis.k() >= 1);
+        let want = crate::attention::conv_attention(&q, &k, &v, &cfg).unwrap();
+        assert_eq!(max_abs_diff(&out.y, &want.y), 0.0);
+        assert_eq!(handle.d_tilde, want.d_tilde, "handle carries the recovered normalizer");
+        let snap = e.metrics().snapshot();
+        assert_eq!((snap.cache_hits, snap.cache_misses), (0, 0));
+        assert_eq!(e.cache().stats(), (0, 0, 0), "no serving-shard traffic");
+        assert_eq!(snap.step_recoveries, 1);
+        assert_eq!((snap.train_fwd_conv_calls, snap.train_fwd_conv_jobs), (1, 1));
+        assert_eq!(snap.train_fwd_fallbacks, 0);
+
+        // Hostile budget: the conv training job falls back to the exact
+        // kernel — same bits as the exact training job — and is counted.
+        let bad = RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 };
+        let outs = e.submit(vec![EngineJob::prefill(
+            2,
+            AttnJob::causal(0, 2, q.clone(), k.clone(), v.clone(), BatchedBackend::Conv(bad))
+                .for_training(),
+        )]);
+        let out = outs[0].result.clone().into_prefill();
+        assert!(out.fell_back);
+        assert!(out.basis.is_none());
+        let probs = out.probs.expect("fallback returns probs for the exact backward");
+        assert_eq!(max_abs_diff(&probs, &want_probs), 0.0);
+        assert_eq!(max_abs_diff(&out.y, &want_probs.matmul(&v)), 0.0);
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.train_fwd_fallbacks, 1);
+        assert_eq!(e.cache().stats(), (0, 0, 0));
+    }
+
+    #[test]
     fn attn_backward_lane_routes_through_submit() {
         // An LM-backward job through the door: exact mode must equal
         // the row-streamed kernel run directly, and the lane counters
@@ -1296,6 +1454,7 @@ mod tests {
                 v: v.clone(),
                 dout: dout.clone(),
                 probs: Some(Arc::clone(&probs)),
+                basis: None,
                 mode: AttnBackwardMode::Exact,
             },
         )]);

@@ -72,6 +72,23 @@ pub struct CachedBasis {
     pub d_tilde: Vec<f64>,
 }
 
+/// A **step-scoped** basis handle: the conv training forward recovers
+/// each (record, layer, head) operator exactly once per optimizer step
+/// and hands the backward this shared reference, so no basis is ever
+/// recovered twice within a step and *nothing* is written to the
+/// serving [`BasisCache`] shards (training bases die with the step —
+/// weights change before they could ever be reused, so a shard write
+/// could only evict live serving entries).
+///
+/// Step scoping is ownership, not a mutable store: the handle lives in
+/// the forward record's activation cache
+/// (`model::Transformer`'s per-layer cache), rides the
+/// `AttnBackwardJob` that consumes it
+/// (`Metrics::step_basis_hits`), and is dropped with the records when
+/// the step ends — no eviction policy, no lock, no interaction with
+/// serving traffic.
+pub type StepBasis = std::sync::Arc<CachedBasis>;
+
 /// Bounded LRU (timestamp-based eviction; sizes are small — the value
 /// payload is `O(kn)` floats, the Appendix A memory claim), striped
 /// into [`N_SHARDS`] independently locked partitions keyed by

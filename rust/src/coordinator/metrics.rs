@@ -100,6 +100,35 @@ pub struct Metrics {
     pub lm_backward_cache_hits: AtomicU64,
     /// Fast-path LM-backward jobs that recovered their operator fresh.
     pub lm_backward_cache_misses: AtomicU64,
+    /// Engine submits that carried ≥ 1 conv-backend **training-forward**
+    /// prefill job (`Transformer::forward_train_batch` in
+    /// `TrainAttentionMode::Conv` issues one per layer per optimizer
+    /// step, spanning the whole micro-batch).
+    pub train_fwd_conv_calls: AtomicU64,
+    /// Total conv-backend training-forward prefill jobs executed.
+    pub train_fwd_conv_jobs: AtomicU64,
+    /// Training-forward conv jobs whose recovery failed and that were
+    /// served by the exact kernel instead — **bit-equal** to the exact
+    /// training forward (the fallback replays the training softmax
+    /// helper), so a fallback degrades cost, never the curve. Also
+    /// counted in the engine-wide `fallbacks`.
+    pub train_fwd_fallbacks: AtomicU64,
+    /// Fresh basis recoveries performed by training-forward conv jobs —
+    /// the *recoveries-per-step* number. Conv training recovers each
+    /// (record, layer, head) operator exactly **once** per optimizer
+    /// step (the backward consumes the forward's handle instead of
+    /// re-recovering), so over a step this advances by
+    /// `batch × layers × heads` minus fallbacks, never 2×.
+    pub step_recoveries: AtomicU64,
+    /// Fast LM-backward jobs served by a **step-scoped basis handle**
+    /// the training forward recovered (`AttnBackwardJob::basis`) — the
+    /// forward→backward handoff: one recovery, two consumers, zero
+    /// serving-cache traffic.
+    pub step_basis_hits: AtomicU64,
+    /// Cache-less fast LM-backward jobs that had **no** forward handle
+    /// to consume (the forward ran exact, or its recovery fell back) and
+    /// had to build their operator themselves.
+    pub step_basis_misses: AtomicU64,
     /// Generation requests admitted by the server's decode scheduler.
     pub gen_requests: AtomicU64,
     /// Generation requests completed (response sent).
@@ -217,6 +246,12 @@ impl Metrics {
             lm_backward_fallbacks: self.lm_backward_fallbacks.load(Ordering::Relaxed),
             lm_backward_cache_hits: self.lm_backward_cache_hits.load(Ordering::Relaxed),
             lm_backward_cache_misses: self.lm_backward_cache_misses.load(Ordering::Relaxed),
+            train_fwd_conv_calls: self.train_fwd_conv_calls.load(Ordering::Relaxed),
+            train_fwd_conv_jobs: self.train_fwd_conv_jobs.load(Ordering::Relaxed),
+            train_fwd_fallbacks: self.train_fwd_fallbacks.load(Ordering::Relaxed),
+            step_recoveries: self.step_recoveries.load(Ordering::Relaxed),
+            step_basis_hits: self.step_basis_hits.load(Ordering::Relaxed),
+            step_basis_misses: self.step_basis_misses.load(Ordering::Relaxed),
             gen_requests: self.gen_requests.load(Ordering::Relaxed),
             gen_completed: self.gen_completed.load(Ordering::Relaxed),
             gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
@@ -265,6 +300,12 @@ pub struct MetricsSnapshot {
     pub lm_backward_fallbacks: u64,
     pub lm_backward_cache_hits: u64,
     pub lm_backward_cache_misses: u64,
+    pub train_fwd_conv_calls: u64,
+    pub train_fwd_conv_jobs: u64,
+    pub train_fwd_fallbacks: u64,
+    pub step_recoveries: u64,
+    pub step_basis_hits: u64,
+    pub step_basis_misses: u64,
     pub gen_requests: u64,
     pub gen_completed: u64,
     pub gen_tokens: u64,
@@ -363,6 +404,26 @@ impl MetricsSnapshot {
             self.lm_backward.p95_us,
         )
     }
+
+    /// Render the end-to-end conv-training counters (the
+    /// forward→backward basis-sharing dashboard line): how many
+    /// training-forward conv submits/jobs ran, how often recovery fell
+    /// back to the exact kernel, and the single-recovery invariant —
+    /// `step_recoveries` fresh recoveries, each consumed once by a
+    /// backward (`step_basis_hits`); `step_basis_misses` counts
+    /// backward jobs that had no handle to consume.
+    pub fn train_report(&self) -> String {
+        format!(
+            "train-fwd conv: {} calls/{} jobs | fallbacks: {} | \
+             step basis: {} recoveries, {}h/{}m",
+            self.train_fwd_conv_calls,
+            self.train_fwd_conv_jobs,
+            self.train_fwd_fallbacks,
+            self.step_recoveries,
+            self.step_basis_hits,
+            self.step_basis_misses,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -441,6 +502,23 @@ mod tests {
         assert_eq!(s.lm_backward.count, 1);
         let r = s.grad_report();
         assert!(r.contains("lm-backward: 1 calls/4 jobs"));
+    }
+
+    #[test]
+    fn train_counters_and_report() {
+        let m = Metrics::new();
+        Metrics::incr(&m.train_fwd_conv_calls);
+        Metrics::add(&m.train_fwd_conv_jobs, 4);
+        Metrics::add(&m.step_recoveries, 4);
+        Metrics::add(&m.step_basis_hits, 4);
+        Metrics::incr(&m.step_basis_misses);
+        let s = m.snapshot();
+        assert_eq!((s.train_fwd_conv_calls, s.train_fwd_conv_jobs), (1, 4));
+        assert_eq!((s.step_recoveries, s.step_basis_hits, s.step_basis_misses), (4, 4, 1));
+        assert_eq!(s.train_fwd_fallbacks, 0);
+        let r = s.train_report();
+        assert!(r.contains("1 calls/4 jobs"));
+        assert!(r.contains("4 recoveries, 4h/1m"));
     }
 
     #[test]

@@ -33,7 +33,7 @@ mod router;
 mod server;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use cache::{fingerprint, shard_of, BasisCache, CacheKey, CachedBasis, N_SHARDS};
+pub use cache::{fingerprint, shard_of, BasisCache, CacheKey, CachedBasis, StepBasis, N_SHARDS};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use router::{Backend, Router, RouterConfig};
 pub use server::{

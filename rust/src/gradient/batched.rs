@@ -45,8 +45,13 @@
 //! `Transformer::backward` float-op order with `O(n + n·d_h)` scratch)
 //! or [`AttnBackwardMode::Fast`] (conv-basis, `O(k·n·d_h²·log n)`,
 //! sharing the prefill `Conv` cache namespace so a conv forward's
-//! recovered basis makes the backward recovery-free). The model layer
-//! fans all (sequence, head) jobs of a layer through one submit
+//! recovered basis makes the backward recovery-free). In **conv
+//! training** the job instead carries the forward's step-scoped basis
+//! handle directly ([`AttnBackwardJob::basis`], a [`StepBasis`]): the
+//! backward consumes it without re-recovering *and* without touching
+//! the serving cache — one recovery per (record, layer, head) per
+//! optimizer step, counted in `Metrics::step_basis_hits`. The model
+//! layer fans all (sequence, head) jobs of a layer through one submit
 //! (`Transformer::backward_batch_with_engine`); `train_lm` /
 //! `train_classifier` ride it by default.
 //!
@@ -60,7 +65,7 @@ use super::AttentionLossProblem;
 use crate::attention::batched::{conv_fingerprint, recover_cfg_tag};
 use crate::attention::{Mask, MaskKind};
 use crate::basis::RecoverConfig;
-use crate::coordinator::{BasisCache, CacheKey, CachedBasis, Metrics};
+use crate::coordinator::{BasisCache, CacheKey, CachedBasis, Metrics, StepBasis};
 use crate::fft::{FftPlanner, SharedFftPlanner};
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -291,6 +296,14 @@ pub struct AttnBackwardJob {
     /// [`AttnBackwardMode::Exact`]; the fast path only reads it on its
     /// dense fallback (recomputing probs from (Q, K) when absent).
     pub probs: Option<Arc<Matrix>>,
+    /// The **step-scoped basis handle** the conv training forward
+    /// recovered for this (record, layer, head) — when present, a
+    /// [`AttnBackwardMode::Fast`] job rebuilds its `f`-operator from it
+    /// directly (`Metrics::step_basis_hits`) instead of re-recovering
+    /// from raw (Q, K) or consulting the serving `BasisCache`: one
+    /// recovery per step, shared forward→backward, zero serving-shard
+    /// traffic. `None` outside conv training (the PR-4 behavior).
+    pub basis: Option<StepBasis>,
     pub mode: AttnBackwardMode,
 }
 
@@ -337,7 +350,7 @@ fn execute_attn_backward_inner(
     metrics: &Metrics,
     model_id: u64,
 ) -> AttnBackwardOutput {
-    let AttnBackwardJob { layer, head, q, k, v, dout, probs, mode } = job;
+    let AttnBackwardJob { layer, head, q, k, v, dout, probs, basis, mode } = job;
     let cfg = match mode {
         AttnBackwardMode::Exact => {
             let probs = probs.expect("exact attention backward requires the forward's probs");
@@ -354,6 +367,38 @@ fn execute_attn_backward_inner(
         }
         AttnBackwardMode::Fast(cfg) => cfg,
     };
+    // Step-scoped handle: the conv training forward already recovered
+    // this operator this step — consume it and skip recovery AND the
+    // serving cache entirely (the forward→backward half of "recover
+    // once per (record, layer, head) per step").
+    if let Some(handle) = &basis {
+        let local = FftPlanner::with_shared(Arc::clone(planner));
+        if let Ok((mut f_op, report)) =
+            FOperator::from_cached(handle.post_basis.clone(), handle.d_tilde.clone(), local)
+        {
+            Metrics::incr(&metrics.step_basis_hits);
+            let (dq, dk, dv) = attn_backward_core(&mut f_op, &q, &k, &v, &dout);
+            return AttnBackwardOutput {
+                dq,
+                dk,
+                dv,
+                basis_k: report.basis_k,
+                cache_hit: true,
+                fell_back: false,
+                exec: std::time::Duration::ZERO,
+            };
+        }
+        // A degenerate handle never comes from the training forward
+        // (it checks soundness before handing one over); a hostile
+        // direct submitter falls through to the self-recovery path.
+    }
+    if !cfg.use_cache && basis.is_none() {
+        // A cache-less fast backward with no forward handle: the
+        // training loops land here when the forward ran exact or its
+        // recovery fell back — the step-scoped store had nothing for
+        // this head.
+        Metrics::incr(&metrics.step_basis_misses);
+    }
     // Fast path. LM heads are always causal, so the cache namespace is
     // exactly the prefill `Conv` namespace over the same (Q, K).
     let n = q.rows();
@@ -643,6 +688,7 @@ mod tests {
                 v,
                 mask: Some(problem.mask.clone()),
                 backend: BatchedBackend::Conv(cfg.recover),
+                training: false,
             },
         )]);
         assert!(!pre[0].result.clone().into_prefill().fell_back);
@@ -698,6 +744,7 @@ mod tests {
             v: Matrix::randn(n, dh, &mut rng),
             dout: Matrix::randn(n, dh, &mut rng),
             probs: Some(probs),
+            basis: None,
             mode,
         }
     }
@@ -756,6 +803,59 @@ mod tests {
         let out = submit_backward(&e, job);
         assert!(out.cache_hit, "backward must reuse the forward's recovered basis");
         assert_eq!(e.metrics().snapshot().lm_backward_cache_hits, 1);
+    }
+
+    #[test]
+    fn fast_attn_backward_consumes_step_basis_handle() {
+        // A conv *training* forward returns its basis as a step-scoped
+        // handle; a Fast backward carrying that handle must (a) produce
+        // bits identical to self-recovery over the same content — the
+        // handle is the same basis — (b) tick step_basis_hits, and
+        // (c) generate zero serving-cache traffic.
+        let e = engine(2);
+        let job = backward_job(
+            914,
+            AttnBackwardMode::Fast(FastGradConfig {
+                recover: RecoverConfig::exact(20),
+                use_cache: false,
+            }),
+        );
+        // Self-recovered reference (cache-less: no forward ran).
+        let want = submit_backward(&e, job.clone());
+        assert!(!want.fell_back);
+        assert_eq!(e.metrics().snapshot().step_basis_misses, 1, "no handle, cache-less");
+        // Training forward over the same (Q, K) hands back the basis.
+        let fwd = e.submit(vec![EngineJob::prefill(
+            0,
+            AttnJob::causal(
+                0,
+                0,
+                job.q.clone(),
+                job.k.clone(),
+                job.v.clone(),
+                BatchedBackend::Conv(RecoverConfig::exact(20)),
+            )
+            .for_training(),
+        )]);
+        let fwd = fwd[0].result.clone().into_prefill();
+        let handle = fwd.basis.expect("conv training forward returns its basis");
+        let mut with_handle = job;
+        with_handle.basis = Some(handle);
+        let got = submit_backward(&e, with_handle);
+        assert!(got.cache_hit, "handle consumption reports as a (step) cache hit");
+        assert_eq!(max_abs_diff(&got.dq, &want.dq), 0.0);
+        assert_eq!(max_abs_diff(&got.dk, &want.dk), 0.0);
+        assert_eq!(max_abs_diff(&got.dv, &want.dv), 0.0);
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.step_basis_hits, 1);
+        assert_eq!(snap.step_recoveries, 1, "the forward recovered once");
+        assert_eq!(snap.step_basis_misses, 1, "only the reference run missed");
+        assert_eq!(
+            (snap.cache_hits, snap.cache_misses),
+            (0, 0),
+            "conv training never touches the serving BasisCache"
+        );
+        assert_eq!(e.cache().stats(), (0, 0, 0), "zero writes to the serving shards");
     }
 
     #[test]

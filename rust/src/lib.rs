@@ -89,13 +89,20 @@
 //!   lane in one `submit` per step (`model::train_attention_heads`),
 //!   bit-identical to single-problem [`gradient::grad_fast`] and
 //!   sharing recovered bases with the forward paths.
-//! * **Full LM backward**: `model::train_lm`/`train_classifier` route
-//!   `Transformer::backward_batch_with_engine`, which fans every
+//! * **Full LM training step**: `model::train_lm`/`train_classifier`
+//!   route both halves through the engine —
+//!   `Transformer::forward_train_batch` submits *training-flavored*
+//!   prefill jobs (exact or conv per [`model::TrainAttentionMode`]),
+//!   then `Transformer::backward_batch_with_engine` fans every
 //!   (sequence, layer, head) attention backward as
 //!   [`gradient::batched::AttnBackwardJob`]s — one submit per layer
 //!   over the whole micro-batch, bit-identical to the dense backward
-//!   oracle in exact mode (`tests/gradient_oracle.rs`) and
-//!   almost-linear in fast mode.
+//!   oracle in exact mode (`tests/gradient_oracle.rs`). In conv mode
+//!   forward and backward share one basis recovery per (record, layer,
+//!   head) per step — the forward's step-scoped handle
+//!   ([`coordinator::StepBasis`]) rides the backward job, the serving
+//!   `BasisCache` shards see zero training traffic, and the whole step
+//!   is almost-linear end to end (`tests/train_conv.rs`).
 //!
 //! `examples/serve_requests.rs` drives both paths end-to-end (prompt
 //! in, tokens out, metrics report); `benches/decode_step.rs` prices a
@@ -138,7 +145,9 @@ pub mod prelude {
     };
     pub use crate::attention::decode::DecodeState;
     pub use crate::gradient::batched::{FastGradConfig, GradJob, GradOutput};
-    pub use crate::model::{AttentionBackend, DecodeSession, ModelConfig, Transformer};
+    pub use crate::model::{
+        AttentionBackend, DecodeSession, ModelConfig, TrainAttentionMode, Transformer,
+    };
     pub use crate::attention::rope::{rope_structured_qk, Rope};
     pub use crate::attention::{
         conv_attention, exact_attention, exact_attention_unmasked, ConvAttentionOutput, Mask,

@@ -27,11 +27,16 @@
 //!
 //! For training, [`train_attention_heads`] steps every (layer, head)
 //! Definition 5.1 problem with **one gradient-lane submit per step**,
-//! and the full LM/classifier backward is engine-routed too:
+//! and the full LM/classifier step is engine-routed end to end:
+//! [`Transformer::forward_train_batch`] runs the training forward
+//! through prefill-lane training jobs (exact or conv-basis per
+//! [`TrainAttentionMode`]) and
 //! [`Transformer::backward_batch_with_engine`] fans every (sequence,
 //! head) attention backward of a layer through the engine's
 //! LM-backward lane (exact mode bit-matches the dense oracle with no
-//! `n×n` allocation; fast mode runs the conv-basis backward).
+//! `n×n` allocation; fast mode runs the conv-basis backward, consuming
+//! the forward's step-scoped basis handle in conv training so each
+//! operator is recovered exactly once per step).
 
 mod backend;
 mod optim;
@@ -42,8 +47,8 @@ pub use backend::AttentionBackend;
 pub use optim::Adam;
 pub use train::{
     eval_classifier, train_attention_heads, train_classifier, train_classifier_with_engine,
-    train_lm, train_lm_with_engine, HeadProblem, HeadTrainConfig, HeadTrainResult, TrainConfig,
-    TrainLog,
+    train_lm, train_lm_with_engine, HeadProblem, HeadTrainConfig, HeadTrainResult,
+    TrainAttentionMode, TrainConfig, TrainLog,
 };
 pub use transformer::{DecodeSession, ForwardRecord, Gradients, ModelConfig, Transformer};
 

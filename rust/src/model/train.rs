@@ -8,13 +8,17 @@
 //! pooled like the forward paths.
 //!
 //! The full-transformer loops ([`train_lm`] / [`train_classifier`])
-//! route their backward the same way: per optimizer step, the whole
-//! micro-batch's per-head attention backwards fan through the engine's
-//! LM-backward lane (`Transformer::backward_batch_with_engine` — one
-//! submit per layer spanning all (sequence, head) pairs), so **no
-//! training path materializes an `n×n` matrix in backward** and the
-//! conv-basis fast backward is one
-//! [`AttnBackwardMode`] switch away.
+//! route **both halves of every optimizer step** the same way: the
+//! forward through one prefill-lane submit of training jobs per layer
+//! (`Transformer::forward_train_batch`, exact or conv per
+//! [`TrainAttentionMode`]) and the backward through the LM-backward
+//! lane (`Transformer::backward_batch_with_engine` — one submit per
+//! layer spanning all (sequence, head) pairs). In conv mode the two
+//! halves share one basis recovery per (record, layer, head) per step
+//! — the forward recovers, the backward consumes the step-scoped
+//! handle — so training runs end-to-end in almost linear time with
+//! **no `n×n` matrix anywhere** and zero writes to the serving
+//! `BasisCache`.
 //!
 //! [`BatchedEngine::submit`]: crate::attention::batched::BatchedEngine::submit
 
@@ -22,11 +26,38 @@ use super::backend::AttentionBackend;
 use super::optim::Adam;
 use super::transformer::{ForwardRecord, ModelConfig, Transformer};
 use crate::attention::batched::{BatchedEngine, EngineConfig, EngineJob};
+use crate::basis::RecoverConfig;
 use crate::data::{ByteTokenizer, SentimentDataset, SyntheticCorpus};
 use crate::gradient::batched::{AttnBackwardMode, FastGradConfig, GradJob};
 use crate::gradient::AttentionLossProblem;
 use crate::tensor::{Matrix, Rng};
 use std::sync::Arc;
+
+/// Which attention operator the **training forward** runs — the knob
+/// that makes training end-to-end conv-capable (the paper's Theorem 5.6
+/// / arXiv:2408.13233 claim: forward *and* backward in almost linear
+/// time, through one shared low-complexity structure).
+///
+/// * [`Exact`](TrainAttentionMode::Exact) — the `O(n²)` softmax kernel;
+///   softmax rows are retained for the backward (the PR-4 behavior).
+/// * [`Conv`](TrainAttentionMode::Conv) — Algorithm 1 with the given
+///   recovery budget: each (record, layer, head) operator basis is
+///   recovered **once per optimizer step** by the forward and consumed
+///   for free by the conv backward (the step-scoped handle — see
+///   `Transformer::forward_train_batch`), so no basis is recovered
+///   twice in a step and nothing is written to the serving
+///   `BasisCache` shards. Requires the [`AttnBackwardMode::Fast`]
+///   backward: the conv forward never materializes the softmax rows
+///   the exact backward needs (fallback heads still carry them, which
+///   is what keeps a failed recovery bit-equal to exact training).
+#[derive(Clone, Copy, Debug)]
+pub enum TrainAttentionMode {
+    /// Exact `O(n²)` training forward.
+    Exact,
+    /// Conv-basis training forward with this recovery budget, sharing
+    /// each recovered basis with the backward.
+    Conv(RecoverConfig),
+}
 
 /// Training hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -52,49 +83,79 @@ pub struct TrainLog {
     /// (step, mean loss) pairs at `log_every` cadence.
     pub losses: Vec<(usize, f64)>,
     pub final_loss: f64,
+    /// Per optimizer step: conv-forward jobs whose recovery fell back
+    /// to the exact kernel that step (all zeros in
+    /// [`TrainAttentionMode::Exact`] and when every recovery succeeds).
+    /// A fallback degrades cost, never the curve — the fallback kernel
+    /// is bit-equal to the exact forward — so this is the lever for
+    /// mid-curve alarms: a structural break in the weights shows up
+    /// here steps before it would show in the loss.
+    pub step_fwd_fallbacks: Vec<usize>,
 }
 
 /// Train a language model on the synthetic corpus. Returns the trained
 /// model and the loss curve (the e2e deliverable's loss log).
 ///
-/// Routes the backward through a private [`BatchedEngine`] in
-/// [`AttnBackwardMode::Exact`] — bit-identical weights to the
-/// pre-engine dense loop (see [`train_lm_with_engine`] to share an
-/// engine or select the conv-basis backward).
+/// Routes the whole step through a private [`BatchedEngine`] in
+/// [`TrainAttentionMode::Exact`] / [`AttnBackwardMode::Exact`] —
+/// bit-identical weights to the pre-engine dense loop (see
+/// [`train_lm_with_engine`] to share an engine or select the conv-basis
+/// forward/backward).
 pub fn train_lm(
     model_cfg: &ModelConfig,
     cfg: &TrainConfig,
     corpus_bytes: usize,
 ) -> (Transformer, TrainLog) {
     let engine = BatchedEngine::new(EngineConfig::default());
-    train_lm_with_engine(model_cfg, cfg, corpus_bytes, &engine, &AttnBackwardMode::Exact)
+    train_lm_with_engine(
+        model_cfg,
+        cfg,
+        corpus_bytes,
+        &engine,
+        &TrainAttentionMode::Exact,
+        &AttnBackwardMode::Exact,
+    )
 }
 
 /// [`train_lm`] over a caller-owned engine: each optimizer step runs
-/// the micro-batch's forwards, then **one
+/// **one [`Transformer::forward_train_batch`] call** (every (record,
+/// head) attention of a layer in one prefill-lane submit of training
+/// jobs, activations retained), then **one
 /// [`Transformer::backward_batch_with_engine`] call** — every
 /// (sequence, layer, head) attention backward of the step flows
-/// through the engine's LM-backward lane, one mixed submit per layer
-/// spanning the whole micro-batch. `mode` selects the exact
-/// (bit-stable, the test default) or conv-basis fast backward; a fast
-/// mode's `use_cache` is forced off inside the loop — weights change
-/// every step, so caching each step's operator basis could only evict
-/// live serving entries from a shared engine (same policy as
-/// [`train_attention_heads`]).
+/// through the engine's LM-backward lane, one submit per layer
+/// spanning the whole micro-batch.
 ///
-/// Memory note: batching the backward per layer means the whole
-/// micro-batch's forward activations (incl. per-head softmax rows) are
+/// `fwd` selects the training-forward operator; `bwd` the backward
+/// kernel. The end-to-end conv configuration is
+/// `(TrainAttentionMode::Conv(cfg), AttnBackwardMode::Fast(..))`: the
+/// forward recovers each (record, layer, head) basis once per step and
+/// the backward consumes the shared handle — no double recovery, no
+/// serving-cache writes (`tests/train_conv.rs` pins both with engine
+/// counters). A conv forward with the exact backward is rejected: the
+/// conv path never materializes the softmax rows the exact kernel
+/// needs. A fast `bwd`'s `use_cache` is forced off inside the loop —
+/// weights change every step, so caching each step's operator basis
+/// could only evict live serving entries from a shared engine (same
+/// policy as [`train_attention_heads`]).
+///
+/// Memory note: batching per layer means the whole micro-batch's
+/// forward activations (incl. per-head softmax rows in exact mode) are
 /// live at once — peak activation memory scales with `cfg.batch`,
 /// where the old per-record dense loop peaked at one record. Shrink
 /// `batch` (trading submit width) if that matters at long `seq_len`.
+/// Conv mode replaces each head's `n×n` softmax rows with its `O(k·n)`
+/// basis handle — the training-forward memory win.
 pub fn train_lm_with_engine(
     model_cfg: &ModelConfig,
     cfg: &TrainConfig,
     corpus_bytes: usize,
     engine: &BatchedEngine,
-    mode: &AttnBackwardMode,
+    fwd: &TrainAttentionMode,
+    bwd: &AttnBackwardMode,
 ) -> (Transformer, TrainLog) {
-    let mode = &no_dead_cache_writes(mode);
+    let bwd = &no_dead_cache_writes(bwd);
+    assert_conv_modes_compatible(fwd, bwd);
     let mut rng = Rng::seeded(cfg.seed);
     let mut model = Transformer::new(model_cfg, &mut rng);
     let mut opt = Adam::new(cfg.lr);
@@ -109,21 +170,26 @@ pub fn train_lm_with_engine(
     for step in 0..cfg.steps {
         let mut grads = model.zero_grads();
         let mut batch_loss = 0.0;
-        // Forward the whole micro-batch (retaining activations), then
-        // backward it in one engine-routed call.
-        let mut recs: Vec<ForwardRecord> = Vec::with_capacity(cfg.batch);
-        let mut dls: Vec<Matrix> = Vec::with_capacity(cfg.batch);
+        // Forward the whole micro-batch in one engine-routed call
+        // (retaining activations + per-head backward artifacts), then
+        // backward it in one engine-routed call per layer.
+        let mut seqs: Vec<Vec<usize>> = Vec::with_capacity(cfg.batch);
+        let mut targets: Vec<&Vec<usize>> = Vec::with_capacity(cfg.batch);
         for b in 0..cfg.batch {
             let (x, y) = &windows[(step * cfg.batch + b) % windows.len()];
-            let rec = model.forward(x, &AttentionBackend::Exact, true);
-            let (loss, dlogits) = model.lm_loss(&rec, y, ByteTokenizer::PAD);
+            seqs.push(x.clone());
+            targets.push(y);
+        }
+        let (recs, fwd_fallbacks) = model.forward_train_batch(&seqs, fwd, engine);
+        let mut dls: Vec<Matrix> = Vec::with_capacity(cfg.batch);
+        for (rec, y) in recs.iter().zip(&targets) {
+            let (loss, dlogits) = model.lm_loss(rec, y.as_slice(), ByteTokenizer::PAD);
             batch_loss += loss;
-            recs.push(rec);
             dls.push(dlogits);
         }
         let batch: Vec<(&ForwardRecord, &Matrix, Option<[f64; 2]>)> =
             recs.iter().zip(&dls).map(|(r, dl)| (r, dl, None)).collect();
-        model.backward_batch_with_engine(&batch, &mut grads, engine, mode);
+        model.backward_batch_with_engine(&batch, &mut grads, engine, bwd);
         drop(batch);
         scale_grads(&mut grads, 1.0 / cfg.batch as f64);
         opt.step(&mut model, &grads);
@@ -136,6 +202,7 @@ pub fn train_lm_with_engine(
             running_n = 0;
         }
         log.final_loss = batch_loss;
+        log.step_fwd_fallbacks.push(fwd_fallbacks);
     }
     (model, log)
 }
@@ -149,20 +216,30 @@ pub fn train_classifier(
     dataset: &SentimentDataset,
 ) -> (Transformer, TrainLog) {
     let engine = BatchedEngine::new(EngineConfig::default());
-    train_classifier_with_engine(model_cfg, cfg, dataset, &engine, &AttnBackwardMode::Exact)
+    train_classifier_with_engine(
+        model_cfg,
+        cfg,
+        dataset,
+        &engine,
+        &TrainAttentionMode::Exact,
+        &AttnBackwardMode::Exact,
+    )
 }
 
 /// [`train_classifier`] over a caller-owned engine — see
-/// [`train_lm_with_engine`] for the batching/bit-identity contract
-/// (and the forced `use_cache: false` / peak-memory notes).
+/// [`train_lm_with_engine`] for the mode knobs and the
+/// batching/bit-identity contract (and the forced `use_cache: false` /
+/// peak-memory notes).
 pub fn train_classifier_with_engine(
     model_cfg: &ModelConfig,
     cfg: &TrainConfig,
     dataset: &SentimentDataset,
     engine: &BatchedEngine,
-    mode: &AttnBackwardMode,
+    fwd: &TrainAttentionMode,
+    bwd: &AttnBackwardMode,
 ) -> (Transformer, TrainLog) {
-    let mode = &no_dead_cache_writes(mode);
+    let bwd = &no_dead_cache_writes(bwd);
+    assert_conv_modes_compatible(fwd, bwd);
     let mut rng = Rng::seeded(cfg.seed);
     let mut model = Transformer::new(model_cfg, &mut rng);
     let mut opt = Adam::new(cfg.lr);
@@ -173,16 +250,19 @@ pub fn train_classifier_with_engine(
     for step in 0..cfg.steps {
         let mut grads = model.zero_grads();
         let mut batch_loss = 0.0;
-        let mut recs: Vec<ForwardRecord> = Vec::with_capacity(cfg.batch);
-        let mut items: Vec<(Matrix, [f64; 2])> = Vec::with_capacity(cfg.batch);
+        let mut seqs: Vec<Vec<usize>> = Vec::with_capacity(cfg.batch);
+        let mut labels: Vec<bool> = Vec::with_capacity(cfg.batch);
         for b in 0..cfg.batch {
             let ex = &dataset.train[(step * cfg.batch + b) % dataset.train.len()];
-            let tokens = tok.encode_for_classification(&ex.text, cfg.seq_len);
-            let rec = model.forward(&tokens, &AttentionBackend::Exact, true);
-            let (loss, _, dcls) = model.cls_loss(&rec, ex.label);
+            seqs.push(tok.encode_for_classification(&ex.text, cfg.seq_len));
+            labels.push(ex.label);
+        }
+        let (recs, fwd_fallbacks) = model.forward_train_batch(&seqs, fwd, engine);
+        let mut items: Vec<(Matrix, [f64; 2])> = Vec::with_capacity(cfg.batch);
+        for (rec, (tokens, &label)) in recs.iter().zip(seqs.iter().zip(&labels)) {
+            let (loss, _, dcls) = model.cls_loss(rec, label);
             batch_loss += loss;
             let zero = crate::tensor::Matrix::zeros(tokens.len(), model_cfg.vocab_size);
-            recs.push(rec);
             items.push((zero, dcls));
         }
         let batch: Vec<(&ForwardRecord, &Matrix, Option<[f64; 2]>)> = recs
@@ -190,8 +270,9 @@ pub fn train_classifier_with_engine(
             .zip(&items)
             .map(|(r, (zero, dcls))| (r, zero, Some(*dcls)))
             .collect();
-        model.backward_batch_with_engine(&batch, &mut grads, engine, mode);
+        model.backward_batch_with_engine(&batch, &mut grads, engine, bwd);
         drop(batch);
+        log.step_fwd_fallbacks.push(fwd_fallbacks);
         scale_grads(&mut grads, 1.0 / cfg.batch as f64);
         opt.step(&mut model, &grads);
         batch_loss /= cfg.batch as f64;
@@ -333,6 +414,24 @@ pub fn train_attention_heads(
     results
 }
 
+/// The conv training forward never materializes softmax rows, and the
+/// exact backward kernel consumes nothing else — reject the broken
+/// combination up front instead of panicking per job mid-curve.
+/// (Conv-forward fallback heads *do* retain probs, which is what keeps
+/// a failed recovery bit-equal to exact training under the Fast
+/// backward's dense fallback — but an all-exact backward would still
+/// die on the first head that recovered successfully.)
+fn assert_conv_modes_compatible(fwd: &TrainAttentionMode, bwd: &AttnBackwardMode) {
+    if matches!(fwd, TrainAttentionMode::Conv(_)) {
+        assert!(
+            matches!(bwd, AttnBackwardMode::Fast(_)),
+            "TrainAttentionMode::Conv requires AttnBackwardMode::Fast: the conv forward \
+             shares its recovered basis with the conv backward and never materializes \
+             the softmax rows the exact backward kernel needs"
+        );
+    }
+}
+
 /// Training never revisits a (Q, K) — weights change every optimizer
 /// step — so a fast backward's basis-cache writes are dead entries
 /// whose only effect is evicting live serving bases from a shared
@@ -443,9 +542,16 @@ mod tests {
         };
         let tcfg = TrainConfig { steps: 3, lr: 3e-3, seq_len: 16, batch: 2, log_every: 1, seed: 7 };
         let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
-        let (_, log) =
-            train_lm_with_engine(&mcfg, &tcfg, 2000, &engine, &AttnBackwardMode::Exact);
+        let (_, log) = train_lm_with_engine(
+            &mcfg,
+            &tcfg,
+            2000,
+            &engine,
+            &TrainAttentionMode::Exact,
+            &AttnBackwardMode::Exact,
+        );
         assert!(log.final_loss.is_finite());
+        assert_eq!(log.step_fwd_fallbacks, vec![0; tcfg.steps]);
         let snap = engine.metrics().snapshot();
         // One submit per layer per step, each carrying every
         // (sequence, head) job of the micro-batch.
@@ -455,6 +561,14 @@ mod tests {
             (tcfg.steps * tcfg.batch * mcfg.n_layers * mcfg.n_heads) as u64
         );
         assert_eq!(snap.lm_backward_fallbacks, 0, "exact mode never falls back");
+        // The forward now rides the engine too: one prefill-lane submit
+        // per layer per step (exact training jobs, so no conv counters).
+        assert_eq!(snap.batched_calls, (tcfg.steps * mcfg.n_layers) as u64);
+        assert_eq!(
+            snap.batched_jobs,
+            (tcfg.steps * tcfg.batch * mcfg.n_layers * mcfg.n_heads) as u64
+        );
+        assert_eq!(snap.train_fwd_conv_calls, 0);
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //! for the sentiment task).
 
 use super::backend::AttentionBackend;
+use super::train::TrainAttentionMode;
 use crate::attention::batched::{
-    AttnJob, BatchedEngine, DecodeJob, DecodeOp, DecodeOutput, EngineJob, JobOutput,
+    AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, DecodeOutput, EngineJob,
+    JobOutput,
 };
 use crate::attention::rope::Rope;
-use crate::coordinator::Metrics;
+use crate::coordinator::{Metrics, StepBasis};
 use crate::gradient::batched::{AttnBackwardJob, AttnBackwardMode};
 use crate::tensor::{Matrix, Rng};
 use std::sync::Arc;
@@ -111,9 +113,20 @@ struct LayerCache {
     q_rot: Matrix,
     k_rot: Matrix,
     v: Matrix,
-    /// Per head, n×n softmax rows. `Arc`-shared so the engine-routed
-    /// backward's jobs borrow them without copying.
-    probs: Vec<Arc<Matrix>>,
+    /// Per head, n×n softmax rows — `Some` on the exact training
+    /// forward and on conv heads whose recovery fell back (the exact
+    /// backward and the fast backward's dense fallback consume them);
+    /// `None` on conv heads, which carry [`Self::bases`] instead.
+    /// `Arc`-shared so the engine-routed backward's jobs borrow them
+    /// without copying.
+    probs: Vec<Option<Arc<Matrix>>>,
+    /// Per head, the **step-scoped conv basis handle** the conv
+    /// training forward recovered (`None` on the exact path and on
+    /// fallback heads). The backward's Fast jobs consume it instead of
+    /// re-recovering from raw (Q, K) — this field *is* the step's
+    /// basis store: populated once per (record, layer, head) per
+    /// optimizer step, dropped with the record when the step ends.
+    bases: Vec<Option<StepBasis>>,
     attn_concat: Matrix,
     x_mid: Matrix,
     ln2_out: Matrix,
@@ -299,7 +312,82 @@ fn gelu_grad(x: f64) -> f64 {
     0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
 }
 
+/// The post-attention half of one layer: Wo projection, attention
+/// residual, RMSNorm, GELU MLP, MLP residual. Returns every
+/// intermediate `(x_mid, ln2_out, ln2_rms, ff_pre, ff_act, x_out)` —
+/// training callers retain them all for the backward; inference
+/// callers keep only `x_out`. One body for every forward flavor, so
+/// their float-op order cannot drift apart.
+fn layer_tail(
+    layer: &LayerParams,
+    x_in: &Matrix,
+    attn_concat: &Matrix,
+) -> (Matrix, Matrix, Vec<f64>, Matrix, Matrix, Matrix) {
+    let attn_out = attn_concat.matmul(&layer.wo);
+    let x_mid = x_in.add(&attn_out);
+    let (ln2_out, ln2_rms) = rmsnorm_fwd(&x_mid, &layer.ln2_g);
+    let ff_pre = ln2_out.matmul(&layer.w1);
+    let ff_act = ff_pre.map(gelu);
+    let ff_out = ff_act.matmul(&layer.w2);
+    let x_out = x_mid.add(&ff_out);
+    (x_mid, ln2_out, ln2_rms, ff_pre, ff_act, x_out)
+}
+
 impl Transformer {
+    /// The pre-attention half of one layer for one record: RMSNorm →
+    /// Q/K/V projections → per-head RoPE rotation. Returns
+    /// `(ln1_out, ln1_rms, q_rot, k_rot, v)`. Every forward flavor
+    /// (per-record training, inference-batched, prefill, engine-routed
+    /// training) runs this one body — the bit-identity contracts in
+    /// `tests/{decode,gradient_oracle,train_conv}.rs` lean on the
+    /// flavors never drifting apart in float-op order.
+    fn layer_qkv(
+        &self,
+        x: &Matrix,
+        layer: &LayerParams,
+    ) -> (Matrix, Vec<f64>, Matrix, Matrix, Matrix) {
+        let n = x.rows();
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let (ln1_out, ln1_rms) = rmsnorm_fwd(x, &layer.ln1_g);
+        let q = ln1_out.matmul(&layer.wq);
+        let k = ln1_out.matmul(&layer.wk);
+        let v = ln1_out.matmul(&layer.wv);
+        let mut q_rot = q;
+        let mut k_rot = k;
+        for h in 0..nh {
+            for i in 0..n {
+                let qs = &mut q_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                self.rope.rotate_row(qs, i);
+            }
+            for i in 0..n {
+                let ks = &mut k_rot.row_mut(i)[h * dh..(h + 1) * dh];
+                self.rope.rotate_row(ks, i);
+            }
+        }
+        (ln1_out, ln1_rms, q_rot, k_rot, v)
+    }
+
+    /// One head's `(Q·scale, K, V)` blocks from the full-width rotated
+    /// matrices — exactly the per-head extraction the engine jobs (and
+    /// the engine-routed backward's job construction) perform.
+    fn head_blocks(
+        &self,
+        q_rot: &Matrix,
+        k_rot: &Matrix,
+        v: &Matrix,
+        h: usize,
+    ) -> (Matrix, Matrix, Matrix) {
+        let n = q_rot.rows();
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+        (
+            Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale),
+            Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]),
+            Matrix::from_fn(n, dh, |i, j| v[(i, h * dh + j)]),
+        )
+    }
+
     /// Initialize with scaled-normal weights (deterministic from `rng`).
     pub fn new(cfg: &ModelConfig, rng: &mut Rng) -> Self {
         let d = cfg.d_model;
@@ -382,7 +470,6 @@ impl Transformer {
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
-        let scale = 1.0 / (dh as f64).sqrt();
 
         let mut x = Matrix::zeros(n, d);
         for (i, &t) in tokens.iter().enumerate() {
@@ -392,30 +479,12 @@ impl Transformer {
         let mut caches: Vec<LayerCache> = Vec::new();
         for layer in &self.layers {
             let x_in = x.clone();
-            let (ln1_out, ln1_rms) = rmsnorm_fwd(&x, &layer.ln1_g);
-            let q = ln1_out.matmul(&layer.wq);
-            let k = ln1_out.matmul(&layer.wk);
-            let v = ln1_out.matmul(&layer.wv);
-            // RoPE per head, in place on q,k copies.
-            let mut q_rot = q;
-            let mut k_rot = k;
-            for h in 0..nh {
-                for i in 0..n {
-                    let qs = &mut q_rot.row_mut(i)[h * dh..(h + 1) * dh];
-                    self.rope.rotate_row(qs, i);
-                }
-                for i in 0..n {
-                    let ks = &mut k_rot.row_mut(i)[h * dh..(h + 1) * dh];
-                    self.rope.rotate_row(ks, i);
-                }
-            }
+            let (ln1_out, ln1_rms, q_rot, k_rot, v) = self.layer_qkv(&x, layer);
             // Per-head attention through the selected backend.
             let mut attn_concat = Matrix::zeros(n, d);
-            let mut probs_cache: Vec<Arc<Matrix>> = Vec::new();
+            let mut probs_cache: Vec<Option<Arc<Matrix>>> = Vec::new();
             for h in 0..nh {
-                let qh = Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale);
-                let kh = Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]);
-                let vh = Matrix::from_fn(n, dh, |i, j| v[(i, h * dh + j)]);
+                let (qh, kh, vh) = self.head_blocks(&q_rot, &k_rot, &v, h);
                 let (out_h, probs) = backend.attend(&qh, &kh, &vh, keep_cache);
                 for i in 0..n {
                     for j in 0..dh {
@@ -423,17 +492,12 @@ impl Transformer {
                     }
                 }
                 if keep_cache {
-                    probs_cache.push(Arc::new(probs.expect("exact backend caches probs")));
+                    probs_cache.push(Some(Arc::new(probs.expect("exact backend caches probs"))));
                 }
             }
-            let attn_out = attn_concat.matmul(&layer.wo);
-            let x_mid = x_in.add(&attn_out);
-
-            let (ln2_out, ln2_rms) = rmsnorm_fwd(&x_mid, &layer.ln2_g);
-            let ff_pre = ln2_out.matmul(&layer.w1);
-            let ff_act = ff_pre.map(gelu);
-            let ff_out = ff_act.matmul(&layer.w2);
-            x = x_mid.add(&ff_out);
+            let (x_mid, ln2_out, ln2_rms, ff_pre, ff_act, x_out) =
+                layer_tail(layer, &x_in, &attn_concat);
+            x = x_out;
 
             if keep_cache {
                 caches.push(LayerCache {
@@ -444,6 +508,7 @@ impl Transformer {
                     k_rot,
                     v,
                     probs: probs_cache,
+                    bases: vec![None; nh],
                     attn_concat,
                     x_mid,
                     ln2_out,
@@ -486,7 +551,6 @@ impl Transformer {
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
-        let scale = 1.0 / (dh as f64).sqrt();
         let spec = backend.to_batched();
 
         let mut xs: Vec<Matrix> = seqs
@@ -506,27 +570,9 @@ impl Transformer {
             // Gather: every (sequence, head) attention job of this layer.
             let mut jobs = Vec::with_capacity(seqs.len() * nh);
             for x in &xs {
-                let n = x.rows();
-                let (ln1_out, _) = rmsnorm_fwd(x, &layer.ln1_g);
-                let q = ln1_out.matmul(&layer.wq);
-                let k = ln1_out.matmul(&layer.wk);
-                let v = ln1_out.matmul(&layer.wv);
-                let mut q_rot = q;
-                let mut k_rot = k;
+                let (_, _, q_rot, k_rot, v) = self.layer_qkv(x, layer);
                 for h in 0..nh {
-                    for i in 0..n {
-                        let qs = &mut q_rot.row_mut(i)[h * dh..(h + 1) * dh];
-                        self.rope.rotate_row(qs, i);
-                    }
-                    for i in 0..n {
-                        let ks = &mut k_rot.row_mut(i)[h * dh..(h + 1) * dh];
-                        self.rope.rotate_row(ks, i);
-                    }
-                }
-                for h in 0..nh {
-                    let qh = Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale);
-                    let kh = Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]);
-                    let vh = Matrix::from_fn(n, dh, |i, j| v[(i, h * dh + j)]);
+                    let (qh, kh, vh) = self.head_blocks(&q_rot, &k_rot, &v, h);
                     jobs.push(AttnJob::causal(li as u32, h as u32, qh, kh, vh, spec.clone()));
                 }
             }
@@ -543,11 +589,8 @@ impl Transformer {
                         }
                     }
                 }
-                let attn_out = attn_concat.matmul(&layer.wo);
-                let x_mid = x.add(&attn_out);
-                let (ln2_out, _) = rmsnorm_fwd(&x_mid, &layer.ln2_g);
-                let ff_out = ln2_out.matmul(&layer.w1).map(gelu).matmul(&layer.w2);
-                *x = x_mid.add(&ff_out);
+                let (_, _, _, _, _, x_out) = layer_tail(layer, x, &attn_concat);
+                *x = x_out;
             }
         }
 
@@ -567,6 +610,155 @@ impl Transformer {
                 }
             })
             .collect()
+    }
+
+    /// Engine-routed **training forward** for a micro-batch: every
+    /// (record, head) attention of a layer fans out as one prefill-lane
+    /// submit of *training* jobs ([`AttnJob::for_training`]) — the
+    /// mirror of [`Self::backward_batch_with_engine`] on the way in —
+    /// while retaining the full activation caches the backward needs.
+    /// Returns the forward records plus the number of conv jobs whose
+    /// recovery fell back to the exact kernel (the per-step fallback
+    /// count the training loops log).
+    ///
+    /// The `mode` knob selects the attention operator:
+    ///
+    /// * [`TrainAttentionMode::Exact`] — the `O(n²)` softmax kernel;
+    ///   per record **bit-identical** to
+    ///   `forward(tokens, &AttentionBackend::Exact, true)` (the jobs
+    ///   run the same training-softmax helper, and all non-attention
+    ///   arithmetic is record-local in the same float-op order). The
+    ///   softmax rows land in the cache for the exact backward.
+    /// * [`TrainAttentionMode::Conv`] — Algorithm 1: each (record,
+    ///   layer, head) recovers its conv basis **once**, output within
+    ///   recovery tolerance of exact, and the basis rides the cache as
+    ///   a step-scoped handle ([`StepBasis`]) that the Fast backward
+    ///   consumes for free — forward and backward share one recovery
+    ///   per step, with **zero writes to the serving `BasisCache`**
+    ///   (training jobs never touch it). A head whose recovery fails
+    ///   falls back to the exact kernel bit-exactly (probs retained, so
+    ///   the backward's dense fallback keeps the whole step bit-equal
+    ///   to exact-mode training), counted in
+    ///   `Metrics::train_fwd_fallbacks`.
+    ///
+    /// Results are bit-identical for any engine worker count: training
+    /// jobs are pure and the engine orders results by input index.
+    pub fn forward_train_batch(
+        &self,
+        seqs: &[Vec<usize>],
+        mode: &TrainAttentionMode,
+        engine: &BatchedEngine,
+    ) -> (Vec<ForwardRecord>, usize) {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let backend = match mode {
+            TrainAttentionMode::Exact => BatchedBackend::Exact,
+            TrainAttentionMode::Conv(cfg) => BatchedBackend::Conv(*cfg),
+        };
+
+        let mut xs: Vec<Matrix> = seqs
+            .iter()
+            .map(|tokens| {
+                let n = tokens.len();
+                assert!(n <= self.cfg.max_seq, "sequence too long");
+                let mut x = Matrix::zeros(n, d);
+                for (i, &t) in tokens.iter().enumerate() {
+                    x.row_mut(i).copy_from_slice(self.embed.row(t));
+                }
+                x
+            })
+            .collect();
+        let mut caches: Vec<Vec<LayerCache>> =
+            seqs.iter().map(|_| Vec::with_capacity(self.layers.len())).collect();
+        let mut fallbacks = 0usize;
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // Gather: the shared pre-attention half (`layer_qkv` — the
+            // same body every forward flavor runs), retained for the
+            // caches.
+            struct Pre {
+                x_in: Matrix,
+                ln1_out: Matrix,
+                ln1_rms: Vec<f64>,
+                q_rot: Matrix,
+                k_rot: Matrix,
+                v: Matrix,
+            }
+            let mut jobs = Vec::with_capacity(seqs.len() * nh);
+            let mut pres: Vec<Pre> = Vec::with_capacity(seqs.len());
+            for x in &xs {
+                let x_in = x.clone();
+                let (ln1_out, ln1_rms, q_rot, k_rot, v) = self.layer_qkv(x, layer);
+                for h in 0..nh {
+                    let (qh, kh, vh) = self.head_blocks(&q_rot, &k_rot, &v, h);
+                    jobs.push(
+                        AttnJob::causal(li as u32, h as u32, qh, kh, vh, backend.clone())
+                            .for_training(),
+                    );
+                }
+                pres.push(Pre { x_in, ln1_out, ln1_rms, q_rot, k_rot, v });
+            }
+            let outs = submit_prefill(engine, jobs);
+            // Scatter: finish the layer per record, stashing each
+            // head's backward artifact (probs or basis handle).
+            for ((s, x), pre) in xs.iter_mut().enumerate().zip(pres) {
+                let n = x.rows();
+                let mut attn_concat = Matrix::zeros(n, d);
+                let mut probs_cache: Vec<Option<Arc<Matrix>>> = Vec::with_capacity(nh);
+                let mut bases_cache: Vec<Option<StepBasis>> = Vec::with_capacity(nh);
+                for h in 0..nh {
+                    let out = &outs[s * nh + h];
+                    for i in 0..n {
+                        for j in 0..dh {
+                            attn_concat[(i, h * dh + j)] = out.y[(i, j)];
+                        }
+                    }
+                    fallbacks += out.fell_back as usize;
+                    probs_cache.push(out.probs.clone());
+                    bases_cache.push(out.basis.clone());
+                }
+                let (x_mid, ln2_out, ln2_rms, ff_pre, ff_act, x_out) =
+                    layer_tail(layer, &pre.x_in, &attn_concat);
+                *x = x_out;
+                caches[s].push(LayerCache {
+                    x_in: pre.x_in,
+                    ln1_out: pre.ln1_out,
+                    ln1_rms: pre.ln1_rms,
+                    q_rot: pre.q_rot,
+                    k_rot: pre.k_rot,
+                    v: pre.v,
+                    probs: probs_cache,
+                    bases: bases_cache,
+                    attn_concat,
+                    x_mid,
+                    ln2_out,
+                    ln2_rms,
+                    ff_pre,
+                    ff_act,
+                });
+            }
+        }
+
+        let records = xs
+            .into_iter()
+            .zip(seqs)
+            .zip(caches)
+            .map(|((x, tokens), cache)| {
+                let lnf_in = x.clone();
+                let (final_hidden, lnf_rms) = rmsnorm_fwd(&x, &self.lnf_g);
+                let logits = final_hidden.matmul(&self.head);
+                ForwardRecord {
+                    final_hidden,
+                    logits,
+                    caches: Some(cache),
+                    lnf_rms,
+                    lnf_in,
+                    tokens: tokens.clone(),
+                }
+            })
+            .collect();
+        (records, fallbacks)
     }
 
     /// Prefill a batch of prompts for autoregressive decoding: run the
@@ -620,31 +812,13 @@ impl Transformer {
             .collect();
 
         for (li, layer) in self.layers.iter().enumerate() {
-            // Gather: identical math to `forward_batch`, plus KV-cache
-            // retention per session.
+            // Gather: identical math to `forward_batch` (one shared
+            // `layer_qkv` body), plus KV-cache retention per session.
             let mut jobs = Vec::with_capacity(seqs.len() * nh);
             for (s, x) in xs.iter().enumerate() {
-                let n = x.rows();
-                let (ln1_out, _) = rmsnorm_fwd(x, &layer.ln1_g);
-                let q = ln1_out.matmul(&layer.wq);
-                let k = ln1_out.matmul(&layer.wk);
-                let v = ln1_out.matmul(&layer.wv);
-                let mut q_rot = q;
-                let mut k_rot = k;
+                let (_, _, q_rot, k_rot, v) = self.layer_qkv(x, layer);
                 for h in 0..nh {
-                    for i in 0..n {
-                        let qs = &mut q_rot.row_mut(i)[h * dh..(h + 1) * dh];
-                        self.rope.rotate_row(qs, i);
-                    }
-                    for i in 0..n {
-                        let ks = &mut k_rot.row_mut(i)[h * dh..(h + 1) * dh];
-                        self.rope.rotate_row(ks, i);
-                    }
-                }
-                for h in 0..nh {
-                    let qh = Matrix::from_fn(n, dh, |i, j| q_rot[(i, h * dh + j)] * scale);
-                    let kh = Matrix::from_fn(n, dh, |i, j| k_rot[(i, h * dh + j)]);
-                    let vh = Matrix::from_fn(n, dh, |i, j| v[(i, h * dh + j)]);
+                    let (qh, kh, vh) = self.head_blocks(&q_rot, &k_rot, &v, h);
                     jobs.push(AttnJob::causal(li as u32, h as u32, qh, kh, vh, spec.clone()));
                 }
                 sessions[s].layers.push(LayerKv {
@@ -686,11 +860,8 @@ impl Transformer {
                         }
                     }
                 }
-                let attn_out = attn_concat.matmul(&layer.wo);
-                let x_mid = x.add(&attn_out);
-                let (ln2_out, _) = rmsnorm_fwd(&x_mid, &layer.ln2_g);
-                let ff_out = ln2_out.matmul(&layer.w1).map(gelu).matmul(&layer.w2);
-                *x = x_mid.add(&ff_out);
+                let (_, _, _, _, _, x_out) = layer_tail(layer, x, &attn_concat);
+                *x = x_out;
             }
         }
 
@@ -1038,7 +1209,9 @@ impl Transformer {
             let mut dk_rot = Matrix::zeros(n, d);
             let mut dv_full = Matrix::zeros(n, d);
             for h in 0..nh {
-                let probs = &cache.probs[h];
+                let probs = cache.probs[h]
+                    .as_ref()
+                    .expect("the dense backward requires the exact forward's probs");
                 let dout_h = Matrix::from_fn(n, dh, |i, j| dattn_concat[(i, h * dh + j)]);
                 let vh = Matrix::from_fn(n, dh, |i, j| cache.v[(i, h * dh + j)]);
                 // dV_h = probsᵀ · dout
@@ -1226,14 +1399,20 @@ impl Transformer {
                 let dattn_concat = dattn_out.matmul(&layer.wo.transpose());
 
                 // Gather: one LM-backward job per head. Inputs are the
-                // identical `from_fn` extractions the dense loop does,
-                // so exact mode reproduces its bits.
+                // identical extractions the dense loop and the forward
+                // jobs perform (`head_blocks`), so exact mode
+                // reproduces the dense bits and the fast mode's cache
+                // keys collide with the forward's.
                 for h in 0..nh {
                     let dout_h = Matrix::from_fn(n, dh, |i, j| dattn_concat[(i, h * dh + j)]);
-                    let qh =
-                        Matrix::from_fn(n, dh, |i, j| cache.q_rot[(i, h * dh + j)] * scale);
-                    let kh = Matrix::from_fn(n, dh, |i, j| cache.k_rot[(i, h * dh + j)]);
-                    let vh = Matrix::from_fn(n, dh, |i, j| cache.v[(i, h * dh + j)]);
+                    let (qh, kh, vh) =
+                        self.head_blocks(&cache.q_rot, &cache.k_rot, &cache.v, h);
+                    // The forward's per-head artifact rides the job:
+                    // probs (exact / conv-fallback heads) for the exact
+                    // kernel and the dense fallback, the step-scoped
+                    // basis handle (conv heads) for the fast kernel —
+                    // the forward→backward handoff that makes conv
+                    // training recover each operator once per step.
                     jobs.push(EngineJob::attn_backward(
                         (bi * nh + h) as u64,
                         AttnBackwardJob {
@@ -1243,7 +1422,8 @@ impl Transformer {
                             k: kh,
                             v: vh,
                             dout: dout_h,
-                            probs: Some(Arc::clone(&cache.probs[h])),
+                            probs: cache.probs[h].clone(),
+                            basis: cache.bases[h].clone(),
                             mode: mode.clone(),
                         },
                     ));

@@ -30,6 +30,15 @@ pub fn sink<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// True when the bench binary was invoked with `--smoke`: CI runs every
+/// bench target in this mode (`cargo bench --bench <name> -- --smoke`,
+/// tiny sizes) so a *panicking* bench fails the build —
+/// `cargo bench --no-run` only catches ones that stop compiling.
+/// Full-size tables stay manual.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
 /// Seconds as a human-readable string with 3 significant digits.
 pub fn fmt_dur(d: Duration) -> String {
     let s = d.as_secs_f64();

@@ -18,7 +18,8 @@
 use conv_basis::attention::batched::{BatchedEngine, EngineConfig};
 use conv_basis::gradient::batched::{AttnBackwardMode, FastGradConfig};
 use conv_basis::model::{
-    train_lm_with_engine, AttentionBackend, Gradients, ModelConfig, TrainConfig, Transformer,
+    train_lm_with_engine, AttentionBackend, Gradients, ModelConfig, TrainAttentionMode,
+    TrainConfig, Transformer,
 };
 use conv_basis::tensor::{max_abs_diff, Matrix, Rng};
 
@@ -283,7 +284,14 @@ fn fast_backward_within_documented_tolerance_on_trained_model() {
     };
     let tcfg = TrainConfig { steps: 8, lr: 3e-3, seq_len: 16, batch: 2, log_every: 4, seed: 11 };
     let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 64 });
-    let (m, _) = train_lm_with_engine(&mcfg, &tcfg, 2000, &engine, &AttnBackwardMode::Exact);
+    let (m, _) = train_lm_with_engine(
+        &mcfg,
+        &tcfg,
+        2000,
+        &engine,
+        &TrainAttentionMode::Exact,
+        &AttnBackwardMode::Exact,
+    );
 
     let mut rng = Rng::seeded(4020);
     let tokens = random_tokens(16, 260, &mut rng);
@@ -323,13 +331,21 @@ fn fast_train_lm_loss_curve_tracks_exact() {
     };
     let tcfg = TrainConfig { steps: 24, lr: 3e-3, seq_len: 16, batch: 2, log_every: 6, seed: 5 };
     let e1 = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 64 });
-    let (_, log_exact) = train_lm_with_engine(&mcfg, &tcfg, 2000, &e1, &AttnBackwardMode::Exact);
+    let (_, log_exact) = train_lm_with_engine(
+        &mcfg,
+        &tcfg,
+        2000,
+        &e1,
+        &TrainAttentionMode::Exact,
+        &AttnBackwardMode::Exact,
+    );
     let e2 = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 64 });
     let fast_mode = AttnBackwardMode::Fast(FastGradConfig {
         recover: conv_basis::basis::RecoverConfig::exact(16),
         use_cache: false,
     });
-    let (_, log_fast) = train_lm_with_engine(&mcfg, &tcfg, 2000, &e2, &fast_mode);
+    let (_, log_fast) =
+        train_lm_with_engine(&mcfg, &tcfg, 2000, &e2, &TrainAttentionMode::Exact, &fast_mode);
 
     assert_eq!(log_exact.losses.len(), log_fast.losses.len());
     for ((se, le), (sf, lf)) in log_exact.losses.iter().zip(&log_fast.losses) {

@@ -125,6 +125,54 @@ fn prop_sub_conv_window_consistency() {
 }
 
 #[test]
+fn prop_sub_conv_transpose_is_adjoint() {
+    // ⟨conv(a,m)·x, y⟩ == ⟨x, conv(a,m)ᵀ·y⟩ — the algebraic property
+    // that makes `sub_conv_transpose_apply` the true adjoint of the
+    // forward apply (what the conv LM backward's dV/dK chains lean on;
+    // until now only covered end-to-end through gradient tests).
+    use conv_basis::conv::sub_conv_transpose_apply;
+    for_all("sub_conv_transpose_adjoint", |seed| {
+        let mut rng = Rng::seeded(seed);
+        let n = 2 + rng.below(120);
+        let m = 1 + rng.below(n);
+        let a = rng.randn_vec(n);
+        let x = rng.randn_vec(n);
+        let y = rng.randn_vec(n);
+        let mut p = FftPlanner::new();
+        let fx = sub_conv_apply(&mut p, &a, m, &x);
+        let fty = sub_conv_transpose_apply(&mut p, &a, m, &y);
+        let lhs: f64 = fx.iter().zip(&y).map(|(u, v)| u * v).sum();
+        let rhs: f64 = x.iter().zip(&fty).map(|(u, v)| u * v).sum();
+        // FFT round-off scales with the inner products' magnitude.
+        let scale = 1.0 + lhs.abs().max(rhs.abs());
+        assert!(
+            (lhs - rhs).abs() < 1e-7 * scale,
+            "n={n} m={m}: ⟨f·x, y⟩ = {lhs} vs ⟨x, fᵀ·y⟩ = {rhs}"
+        );
+
+        // The k-conv composite inherits adjointness term by term.
+        let k = 1 + rng.below(3);
+        let mut ms: Vec<usize> = (0..k).map(|_| 1 + rng.below(n)).collect();
+        ms.sort_unstable();
+        ms.dedup();
+        ms.reverse();
+        let basis = KConvBasis::new(
+            n,
+            ms.iter().map(|&m| ConvBasis { b: rng.randn_vec(n), m }).collect(),
+        );
+        let bx = basis.apply(&mut p, &x);
+        let bty = basis.apply_transpose(&mut p, &y);
+        let lhs: f64 = bx.iter().zip(&y).map(|(u, v)| u * v).sum();
+        let rhs: f64 = x.iter().zip(&bty).map(|(u, v)| u * v).sum();
+        let scale = 1.0 + lhs.abs().max(rhs.abs());
+        assert!(
+            (lhs - rhs).abs() < 1e-7 * scale,
+            "k-conv n={n}: ⟨B·x, y⟩ = {lhs} vs ⟨x, Bᵀ·y⟩ = {rhs}"
+        );
+    });
+}
+
+#[test]
 fn prop_decompose_roundtrip() {
     // Lemma 3.12: decompose_exact ∘ to_dense == identity on k-conv
     // matrices, with minimal k.
@@ -369,6 +417,7 @@ fn prop_batched_matches_single() {
                 v,
                 mask: Some(mask.clone()),
                 backend: BatchedBackend::Conv(cfg),
+                training: false,
             });
         }
         let outs = attend(&engine, jobs);
@@ -401,7 +450,7 @@ fn prop_batched_deterministic_across_thread_counts() {
                 1 => BatchedBackend::Strided(4),
                 _ => BatchedBackend::Conv(RecoverConfig::exact(n)),
             };
-            jobs.push(AttnJob { layer: 0, head: h, q, k, v, mask: None, backend });
+            jobs.push(AttnJob { layer: 0, head: h, q, k, v, mask: None, backend, training: false });
         }
         let base = attend(&engines[0], jobs.clone());
         for e in &engines[1..] {
@@ -644,16 +693,21 @@ fn prop_submit_mixed_lanes_deterministic() {
 
 #[test]
 fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
-    // The ISSUE 4 fuzz pin: a deterministic-seed generator builds
-    // random batches mixing ALL FOUR lanes — Prefill + Decode +
-    // Gradient + the LM-backward jobs — with random sizes and modes,
-    // and every seed must produce input-ordered, key-echoed results
-    // that are bit-identical across worker counts 1/2/8.
+    // The ISSUE 4 fuzz pin, extended for ISSUE 5: a deterministic-seed
+    // generator builds random batches mixing ALL FOUR lanes — Prefill
+    // (serving AND conv-forward *training* jobs, i.e. the step-scoped
+    // basis flow active) + Decode + Gradient + the LM-backward jobs
+    // (with and without a forward-provided basis handle) — with random
+    // sizes and modes, and every seed must produce input-ordered,
+    // key-echoed results that are bit-identical across worker counts
+    // 1/2/8, training artifacts (probs / basis handles) included.
+    use conv_basis::coordinator::CachedBasis;
     use conv_basis::gradient::batched::{
         AttnBackwardJob, AttnBackwardMode, FastGradConfig, GradJob,
     };
     use conv_basis::gradient::AttentionLossProblem;
     use conv_basis::tensor::softmax;
+    use std::sync::Arc;
 
     /// Dense causal softmax rows with the training forward's float-op
     /// order (what the exact LM-backward mode consumes).
@@ -674,7 +728,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
         let mut jobs = Vec::with_capacity(count);
         for idx in 0..count {
             let key = 1000 + idx as u64;
-            match rng.below(4) {
+            match rng.below(6) {
                 0 => {
                     // Prefill: random size, exact or strided operator.
                     let n = 12 + rng.below(28);
@@ -732,13 +786,13 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                         },
                     ));
                 }
-                _ => {
+                3 => {
                     // LM backward: exact and fast modes both in the mix.
                     let n = 8 + rng.below(20);
                     let dh = 2 + rng.below(3);
                     let q = Matrix::randn(n, dh, &mut rng).scale(0.3);
                     let k = Matrix::randn(n, dh, &mut rng).scale(0.3);
-                    let probs = std::sync::Arc::new(causal_probs(&q, &k));
+                    let probs = Arc::new(causal_probs(&q, &k));
                     let mode = if rng.below(2) == 0 {
                         AttnBackwardMode::Exact
                     } else {
@@ -754,7 +808,60 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                             v: Matrix::randn(n, dh, &mut rng),
                             dout: Matrix::randn(n, dh, &mut rng),
                             probs: Some(probs),
+                            basis: None,
                             mode,
+                        },
+                    ));
+                }
+                4 => {
+                    // Conv-forward TRAINING prefill (the step-scoped
+                    // basis flow): exact-budget recovery returns a
+                    // basis handle; a 1-in-3 hostile budget exercises
+                    // the bit-exact fallback artifact (probs) instead.
+                    let n = 10 + rng.below(22);
+                    let d = 2 + rng.below(4);
+                    let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+                    let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+                    let v = Matrix::randn(n, d, &mut rng);
+                    let cfg = if rng.below(3) == 0 {
+                        RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 }
+                    } else {
+                        RecoverConfig::exact(n)
+                    };
+                    jobs.push(EngineJob::prefill(
+                        key,
+                        AttnJob::causal(4, idx as u32, q, k, v, BatchedBackend::Conv(cfg))
+                            .for_training(),
+                    ));
+                }
+                _ => {
+                    // Fast LM backward CONSUMING a step-basis handle —
+                    // the forward→backward handoff as a standalone job.
+                    let n = 10 + rng.below(18);
+                    let dh = 2 + rng.below(3);
+                    let (q_full, k_full) = rope_structured_qk(n, dh, 2, &mut rng);
+                    let v = Matrix::randn(n, dh, &mut rng);
+                    let kb = 1 + rng.below(3);
+                    let out =
+                        conv_basis::attention::conv_attention_strided(&q_full, &k_full, &v, kb)
+                            .unwrap();
+                    let handle =
+                        Arc::new(CachedBasis { post_basis: out.post_basis, d_tilde: out.d_tilde });
+                    jobs.push(EngineJob::attn_backward(
+                        key,
+                        AttnBackwardJob {
+                            layer: 5,
+                            head: idx as u32,
+                            q: q_full,
+                            k: k_full,
+                            v,
+                            dout: Matrix::randn(n, dh, &mut rng),
+                            probs: None,
+                            basis: Some(handle),
+                            mode: AttnBackwardMode::Fast(FastGradConfig {
+                                recover: RecoverConfig::exact(n),
+                                use_cache: false,
+                            }),
                         },
                     ));
                 }
@@ -786,6 +893,35 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                             0.0,
                             "seed {seed}: prefill bits ({workers} workers)"
                         );
+                        // Training artifacts are part of the contract:
+                        // same presence, same bits, per worker count.
+                        assert_eq!(x.fell_back, y.fell_back, "seed {seed}: fallback flip");
+                        match (&x.probs, &y.probs) {
+                            (None, None) => {}
+                            (Some(px), Some(py)) => assert_eq!(
+                                max_abs_diff(px, py),
+                                0.0,
+                                "seed {seed}: training probs bits ({workers} workers)"
+                            ),
+                            _ => panic!("seed {seed}: probs presence flip ({workers} workers)"),
+                        }
+                        match (&x.basis, &y.basis) {
+                            (None, None) => {}
+                            (Some(bx), Some(by)) => {
+                                assert_eq!(
+                                    bx.d_tilde, by.d_tilde,
+                                    "seed {seed}: handle normalizer bits ({workers} workers)"
+                                );
+                                let (da, db) =
+                                    (bx.post_basis.to_dense(), by.post_basis.to_dense());
+                                assert_eq!(
+                                    max_abs_diff(&da, &db),
+                                    0.0,
+                                    "seed {seed}: handle basis bits ({workers} workers)"
+                                );
+                            }
+                            _ => panic!("seed {seed}: basis presence flip ({workers} workers)"),
+                        }
                     }
                     (EngineResult::Decode(x), EngineResult::Decode(y)) => {
                         assert_eq!(
