@@ -17,7 +17,8 @@
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::basis::{ConvBasis, KConvBasis};
 use conv_basis::coordinator::{
-    AttnRequest, BatcherConfig, GenConfig, GenRequest, Payload, RouterConfig, Server, ServerConfig,
+    AdmissionConfig, AttnRequest, BatcherConfig, GenConfig, GenRequest, GenSink, Payload,
+    RouterConfig, Server, ServerConfig,
 };
 use conv_basis::data::ByteTokenizer;
 use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
@@ -41,25 +42,42 @@ fn main() {
             // Conv decode: cached-basis steps, drift-tracked.
             backend: AttentionBackend::ConvStrided(4),
             max_concurrent: 4,
+            admission: AdmissionConfig::default(),
         }),
         cache_capacity: 512,
         ..Default::default()
     });
     let tok = ByteTokenizer::new();
     let prompts = ["the conv basis ", "attention is ", "fast decode "];
+    // The first prompt streams: its sink fires on every decode step.
+    let streamed = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let sink_tokens = streamed.clone();
+    let sink = GenSink::new(move |ev| {
+        if let conv_basis::coordinator::GenEvent::Token { token, .. } = ev {
+            sink_tokens.lock().unwrap().push(*token);
+        }
+    });
     for (i, p) in prompts.iter().enumerate() {
-        gen_server.submit_generate(GenRequest {
-            id: i as u64,
-            prompt: tok.encode(p),
-            max_new_tokens: 24,
-            submitted_at: Instant::now(),
-        });
+        let mut req = GenRequest::new(i as u64, tok.encode(p), 24);
+        if i == 0 {
+            req = req.with_stream(sink.clone());
+        }
+        gen_server.submit_generate(req);
     }
-    let mut gens = gen_server.collect_generations(prompts.len());
+    // Streamed requests answer through their sink, channel ones through
+    // collect_generations — so collect only the two unstreamed prompts.
+    let mut gens = gen_server.collect_generations(prompts.len() - 1);
     gens.sort_by_key(|g| g.id);
-    for (p, g) in prompts.iter().zip(&gens) {
-        // The model is untrained — the continuation is noise; the point
-        // is the serving path: prompt in, N tokens out, decode-priced.
+    let streamed = streamed.lock().unwrap();
+    // The model is untrained — the continuations are noise; the point
+    // is the serving path: prompt in, N tokens out, decode-priced.
+    println!(
+        "prompt {:?} → {} streamed tokens: {:?}",
+        prompts[0],
+        streamed.len(),
+        tok.decode(&streamed),
+    );
+    for (p, g) in prompts[1..].iter().zip(&gens) {
         println!(
             "prompt {:?} → {} tokens in {} decode steps: {:?}",
             p,

@@ -1,0 +1,332 @@
+"""NumPy mirror of ``rust/src/bin/loadgen.rs`` (the serving sweep).
+
+The Rust loadgen is the source of truth, but some build images carry no
+Rust toolchain; this mirror reproduces the *same serving shape* —
+a TCP front-end with newline-delimited flat-JSON framing, a scheduler
+thread running token-budget admission (the TGI trio:
+``max_batch_prefill_tokens`` / ``max_batch_total_tokens`` /
+``waiting_served_ratio`` with a ``max_waiting_steps`` starvation
+valve), bounded queueing with busy shedding, and per-step token
+streaming — over a NumPy stand-in for the model: per (layer, head) the
+k=1 conv decode-step cost (cached-basis grow + banded weighted sum,
+``O(k*n + n*d)``) and the conv FFT prefill apply, mirroring
+``ModelConfig::tiny`` (d_model 32, 2 layers, 2 heads).
+
+Closed-loop clients per cell of the sweep (batch x prompt_len x
+decode_len) connect over real sockets, stream their tokens, and
+measure TTFT and end-to-end latency off the wire — the same protocol
+and measurement points as the Rust binary.
+
+Run: ``python3 python/bench_net_mirror.py [--smoke] [--out PATH]``
+(default out: ``BENCH_PR6.json``, schema ``bench_pr6/v1`` with
+``"source": "numpy-mirror"`` so readers know which harness produced
+the numbers).
+"""
+
+import json
+import socket
+import socketserver
+import sys
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+D_MODEL = 32
+N_LAYERS = 2
+N_HEADS = 2
+D_HEAD = D_MODEL // N_HEADS
+
+ADMISSION = {
+    "max_batch_prefill_tokens": 4096,
+    "max_batch_total_tokens": 16384,
+    "waiting_served_ratio": 1.2,
+    "max_waiting_steps": 4,
+    "max_queue": 256,
+}
+
+
+class Session:
+    """One in-flight generation: per-(layer, head) cached conv basis."""
+
+    def __init__(self, req, wfile, lock):
+        self.req = req
+        self.wfile = wfile
+        self.wlock = lock
+        self.generated = []
+        rng = np.random.default_rng(req["id"] + 1)
+        n = len(req["prompt"])
+        self.n = n
+        # Per (layer, head): Toeplitz generator g, post-exp basis b, V.
+        self.heads = []
+        for _ in range(N_LAYERS * N_HEADS):
+            g = rng.normal(scale=0.5, size=n)
+            self.heads.append(
+                {"g": g, "b": np.exp(g), "v": rng.normal(size=(n, D_HEAD))}
+            )
+
+    def prefill(self):
+        # Conv FFT apply per (layer, head): the Algorithm-1 "apply" half.
+        for h in self.heads:
+            n = self.n
+            fb = np.fft.rfft(h["b"], 2 * n)
+            for c in range(D_HEAD):
+                np.fft.irfft(fb * np.fft.rfft(h["v"][:, c], 2 * n))[:n]
+
+    def decode_step(self, rng):
+        # Cached-basis conv step per (layer, head): O(k*n + n*d).
+        for h in self.heads:
+            gnew = rng.normal(scale=0.5)
+            h["g"] = np.append(h["g"], gnew)
+            h["b"] = np.append(h["b"], np.exp(gnew))
+            h["v"] = np.vstack([h["v"], rng.normal(size=(1, D_HEAD))])
+            w = h["b"][::-1]
+            (w @ h["v"]) / h["b"].sum()
+        self.n += 1
+        tok = int(rng.integers(1, 256))
+        self.generated.append(tok)
+        return tok
+
+
+def write_line(wfile, wlock, obj):
+    try:
+        with wlock:
+            wfile.write((json.dumps(obj, separators=(",", ":")) + "\n").encode())
+            wfile.flush()
+    except (OSError, ValueError):
+        pass  # dead/closed client: it just stops receiving
+
+
+class Scheduler:
+    """Mirror of the generation scheduler + AdmissionQueue pair."""
+
+    def __init__(self):
+        self.cv = threading.Condition()
+        self.waiting = deque()
+        self.shutting = False
+        self.shed = 0
+        self.thread = threading.Thread(target=self.run, daemon=True)
+        self.thread.start()
+
+    def submit(self, req, wfile, wlock):
+        with self.cv:
+            if self.shutting or len(self.waiting) >= ADMISSION["max_queue"]:
+                self.shed += 1
+                write_line(wfile, wlock, {"ev": "busy", "id": req["id"]})
+                return
+            self.waiting.append((req, wfile, wlock))
+            self.cv.notify_all()
+
+    def shutdown(self):
+        with self.cv:
+            self.shutting = True
+            self.cv.notify_all()
+        self.thread.join()
+
+    def admit(self, sessions, steps_since_admit):
+        with self.cv:
+            if not self.waiting:
+                return []
+            if sessions and steps_since_admit < ADMISSION["max_waiting_steps"]:
+                need = int(
+                    np.ceil(ADMISSION["waiting_served_ratio"] * len(sessions))
+                )
+                if len(self.waiting) < need:
+                    return []
+            out, prefill = [], 0
+            total = sum(
+                s.n + s.req["max_new_tokens"] - len(s.generated) for s in sessions
+            )
+            while self.waiting:
+                req, wfile, wlock = self.waiting[0]
+                p = len(req["prompt"])
+                if sessions or out:
+                    if prefill + p > ADMISSION["max_batch_prefill_tokens"]:
+                        break
+                    if (
+                        total + p + req["max_new_tokens"]
+                        > ADMISSION["max_batch_total_tokens"]
+                    ):
+                        break
+                prefill += p
+                total += p + req["max_new_tokens"]
+                out.append(self.waiting.popleft())
+            return out
+
+    def run(self):
+        rng = np.random.default_rng(7)
+        sessions = []
+        steps_since_admit = 0
+        while True:
+            if not sessions:
+                with self.cv:
+                    while not self.waiting and not self.shutting:
+                        self.cv.wait()  # event-driven: no idle polling
+                    if self.shutting and not self.waiting:
+                        return
+            for req, wfile, wlock in self.admit(sessions, steps_since_admit):
+                s = Session(req, wfile, wlock)
+                s.prefill()
+                tok = s.decode_step(rng)  # first token rides the prefill
+                write_line(wfile, wlock, {"ev": "token", "id": req["id"], "index": 0, "token": tok})
+                sessions.append(s)
+                steps_since_admit = 0
+            retired = []
+            for s in sessions:
+                tok = s.decode_step(rng)
+                write_line(
+                    s.wfile,
+                    s.wlock,
+                    {"ev": "token", "id": s.req["id"], "index": len(s.generated) - 1, "token": tok},
+                )
+                if len(s.generated) >= s.req["max_new_tokens"]:
+                    retired.append(s)
+            steps_since_admit += 1
+            for s in retired:
+                sessions.remove(s)
+                write_line(
+                    s.wfile,
+                    s.wlock,
+                    {
+                        "ev": "done",
+                        "id": s.req["id"],
+                        "prompt_len": len(s.req["prompt"]),
+                        "decode_steps": len(s.generated),
+                        "tokens": s.generated,
+                    },
+                )
+
+
+class Handler(socketserver.StreamRequestHandler):
+    disable_nagle_algorithm = True  # streamed token lines must not sit in Nagle
+
+    def handle(self):
+        wlock = threading.Lock()
+        for raw in self.rfile:
+            line = raw.decode().strip()
+            if not line:
+                continue
+            req = json.loads(line)
+            if req.get("op") == "generate":
+                self.server.scheduler.submit(req, self.wfile, wlock)
+            else:
+                write_line(self.wfile, wlock, {"ev": "error", "msg": "unknown op"})
+
+
+def client_loop(addr, conn_id, prompt_len, decode_len, iters, out):
+    sock = socket.create_connection(addr)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    rfile = sock.makefile("rb")
+    prompt = [((conn_id * 131 + j * 17) % 255) + 1 for j in range(prompt_len)]
+    lats, tokens, shed = [], 0, 0
+    for i in range(iters):
+        t0 = time.perf_counter()
+        sock.sendall(
+            (
+                json.dumps(
+                    {"op": "generate", "id": i, "prompt": prompt, "max_new_tokens": decode_len},
+                    separators=(",", ":"),
+                )
+                + "\n"
+            ).encode()
+        )
+        ttft = None
+        for raw in rfile:
+            ev = json.loads(raw)
+            if ev["ev"] == "token":
+                tokens += 1
+                if ttft is None:
+                    ttft = (time.perf_counter() - t0) * 1e6
+            elif ev["ev"] == "done":
+                lats.append((ttft, (time.perf_counter() - t0) * 1e6))
+                break
+            elif ev["ev"] == "busy":
+                shed += 1
+                break
+    sock.close()
+    out.append((lats, tokens, shed))
+
+
+def pct(xs, q):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, round(q * (len(xs) - 1)))]
+
+
+def run_cell(batch, prompt_len, decode_len, iters):
+    server = socketserver.ThreadingTCPServer(("127.0.0.1", 0), Handler)
+    server.daemon_threads = True
+    server.scheduler = Scheduler()
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    addr = server.server_address
+
+    t0 = time.perf_counter()
+    out = []
+    threads = [
+        threading.Thread(target=client_loop, args=(addr, c, prompt_len, decode_len, iters, out))
+        for c in range(batch)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    server.scheduler.shutdown()
+    server.shutdown()
+    server.server_close()
+
+    lats = [l for ls, _, _ in out for l in ls]
+    tokens = sum(t for _, t, _ in out)
+    shed = sum(s for _, _, s in out)
+    return {
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "decode_len": decode_len,
+        "requests": len(lats),
+        "tokens": tokens,
+        "wall_s": round(wall, 6),
+        "tokens_per_s": round(tokens / wall, 3),
+        "ttft_p50_us": round(pct([l[0] for l in lats], 0.5), 1),
+        "e2e_p50_us": round(pct([l[1] for l in lats], 0.5), 1),
+        "e2e_p95_us": round(pct([l[1] for l in lats], 0.95), 1),
+        "shed": shed,
+    }
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    out_path = "BENCH_PR6.json"
+    if "--out" in sys.argv:
+        out_path = sys.argv[sys.argv.index("--out") + 1]
+    if smoke:
+        batches, prompts, decodes, iters = [1, 2], [8, 16], [4], 2
+    else:
+        batches, prompts, decodes, iters = [1, 4, 8], [16, 64, 256], [8, 32], 3
+
+    cells = []
+    print("# Closed-loop TCP load sweep — NumPy mirror (k=1 conv decode, streaming)")
+    print("| batch | prompt | decode | req | tok/s | ttft p50 µs | e2e p50 µs | e2e p95 µs | shed |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for b in batches:
+        for p in prompts:
+            for d in decodes:
+                c = run_cell(b, p, d, iters)
+                cells.append(c)
+                print(
+                    f"| {b} | {p} | {d} | {c['requests']} | {c['tokens_per_s']:.1f} "
+                    f"| {c['ttft_p50_us']:.0f} | {c['e2e_p50_us']:.0f} "
+                    f"| {c['e2e_p95_us']:.0f} | {c['shed']} |"
+                )
+
+    doc = {"schema": "bench_pr6/v1", "source": "numpy-mirror", "smoke": smoke, "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, separators=(",", ":"))
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

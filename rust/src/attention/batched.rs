@@ -893,7 +893,11 @@ fn seed_or_recover(
         qk_fingerprint: conv_fingerprint(q, k, &mask) ^ strided_tag(k_bases),
     };
     if let Some(hit) = cache.get(&key) {
-        return (DecodeState::new(hit.post_basis, hit.d_tilde), true);
+        // The decode state grows its basis in place, so it needs owned
+        // copies — cloned out of the shared entry here (same cost as
+        // the old deep-copying `get`; the zero-copy win is the apply
+        // and backward paths, which read through the `Arc`).
+        return (DecodeState::new(hit.post_basis.clone(), hit.d_tilde.clone()), true);
     }
     let oracle = QkColumnOracle::new(q, k, &mask);
     let (pre_basis, _stats) = recover_strided(&oracle, k_bases);

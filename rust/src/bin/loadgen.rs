@@ -1,0 +1,231 @@
+//! Closed-loop load generator for the TCP serving door.
+//!
+//! Spins an in-process [`NetServer`] on an ephemeral port, then drives
+//! it the way a fleet of clients would: per cell of the sweep,
+//! `batch` connections each run a closed loop of generation requests
+//! (send one, stream its tokens to the terminal event, send the next)
+//! over real sockets — measuring time-to-first-token and end-to-end
+//! latency off the wire, not in-process.
+//!
+//! Sweep: batch × prompt_len × decode_len. Results land in
+//! `BENCH_PR6.json` (repo root; `--out <path>` overrides) with schema
+//! `bench_pr6/v1`:
+//!
+//! ```text
+//! {"schema":"bench_pr6/v1","source":"rust-loadgen","smoke":false,
+//!  "cells":[{"batch":4,"prompt_len":64,"decode_len":32,"requests":12,
+//!            "tokens":384,"wall_s":1.2,"tokens_per_s":320.0,
+//!            "ttft_p50_us":900.0,"e2e_p50_us":..,"e2e_p95_us":..,
+//!            "shed":0}, ...]}
+//! ```
+//!
+//! `--smoke` (CI) shrinks the grid to seconds. Shed (busy) responses
+//! are counted, never retried — the cell reports them so a saturated
+//! configuration is visible instead of silently under-counting.
+
+use conv_basis::coordinator::{AdmissionConfig, GenConfig, NetConfig, NetServer, ServerConfig};
+use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
+use conv_basis::tensor::Rng;
+use conv_basis::util::{smoke, Table};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Cell {
+    batch: usize,
+    prompt_len: usize,
+    decode_len: usize,
+    requests: usize,
+    tokens: usize,
+    wall_s: f64,
+    ttft_p50_us: f64,
+    e2e_p50_us: f64,
+    e2e_p95_us: f64,
+    shed: usize,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)]
+}
+
+/// One client connection's closed loop: `iters` generations, streamed.
+/// Returns (ttft_us, e2e_us) per completed request, tokens seen, sheds.
+fn client_loop(
+    addr: SocketAddr,
+    conn_id: usize,
+    prompt_len: usize,
+    decode_len: usize,
+    iters: usize,
+) -> std::io::Result<(Vec<(f64, f64)>, usize, usize)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut lats = Vec::with_capacity(iters);
+    let mut tokens = 0usize;
+    let mut shed = 0usize;
+    let prompt: Vec<String> =
+        (0..prompt_len).map(|j| (((conn_id * 131 + j * 17) % 255) + 1).to_string()).collect();
+    let prompt = prompt.join(",");
+    let mut line = String::new();
+    for i in 0..iters {
+        let t0 = Instant::now();
+        writeln!(
+            writer,
+            "{{\"op\":\"generate\",\"id\":{i},\"prompt\":[{prompt}],\"max_new_tokens\":{decode_len}}}"
+        )?;
+        let mut ttft: Option<f64> = None;
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok((lats, tokens, shed)); // server went away
+            }
+            if line.contains("\"ev\":\"token\"") {
+                tokens += 1;
+                ttft.get_or_insert_with(|| t0.elapsed().as_secs_f64() * 1e6);
+            } else if line.contains("\"ev\":\"done\"") {
+                lats.push((ttft.unwrap_or(0.0), t0.elapsed().as_secs_f64() * 1e6));
+                break;
+            } else if line.contains("\"ev\":\"busy\"") {
+                shed += 1;
+                break;
+            } else if line.contains("\"ev\":\"rejected\"") || line.contains("\"ev\":\"error\"") {
+                panic!("loadgen sent an invalid request: {line}");
+            }
+        }
+    }
+    Ok((lats, tokens, shed))
+}
+
+fn run_cell(batch: usize, prompt_len: usize, decode_len: usize, iters: usize) -> Cell {
+    // Fresh server per cell: no cache warmth bleeding across cells.
+    let max_seq = (prompt_len + decode_len + 8).next_power_of_two();
+    let mut rng = Rng::seeded(6);
+    let model = Arc::new(Transformer::new(&ModelConfig::tiny(max_seq), &mut rng));
+    let net = NetServer::start(
+        ServerConfig {
+            workers: 2,
+            gen: Some(GenConfig {
+                model,
+                backend: AttentionBackend::ConvStrided(4),
+                max_concurrent: 16,
+                admission: AdmissionConfig::default(),
+            }),
+            ..Default::default()
+        },
+        NetConfig::default(),
+    )
+    .expect("bind loadgen server");
+    let addr = net.addr();
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..batch {
+        joins.push(std::thread::spawn(move || {
+            client_loop(addr, c, prompt_len, decode_len, iters).expect("client io")
+        }));
+    }
+    let mut lats: Vec<(f64, f64)> = Vec::new();
+    let mut tokens = 0;
+    let mut shed = 0;
+    for j in joins {
+        let (l, t, s) = j.join().expect("client thread");
+        lats.extend(l);
+        tokens += t;
+        shed += s;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    net.shutdown();
+
+    let mut ttft: Vec<f64> = lats.iter().map(|l| l.0).collect();
+    let mut e2e: Vec<f64> = lats.iter().map(|l| l.1).collect();
+    ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Cell {
+        batch,
+        prompt_len,
+        decode_len,
+        requests: lats.len(),
+        tokens,
+        wall_s,
+        ttft_p50_us: percentile(&ttft, 0.5),
+        e2e_p50_us: percentile(&e2e, 0.5),
+        e2e_p95_us: percentile(&e2e, 0.95),
+        shed,
+    }
+}
+
+fn arg_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let smoke = smoke();
+    let out = arg_value("--out").unwrap_or_else(|| "BENCH_PR6.json".to_string());
+    let (batches, prompts, decodes, iters): (&[usize], &[usize], &[usize], usize) = if smoke {
+        (&[1, 2], &[8, 16], &[4], 2)
+    } else {
+        (&[1, 4, 8], &[16, 64, 256], &[8, 32], 3)
+    };
+
+    println!("# Closed-loop TCP load sweep (conv-strided decode, streaming)");
+    let mut table = Table::new(&[
+        "batch", "prompt", "decode", "req", "tok/s", "ttft p50 µs", "e2e p50 µs", "e2e p95 µs",
+        "shed",
+    ]);
+    let mut cells = Vec::new();
+    for &b in batches {
+        for &p in prompts {
+            for &d in decodes {
+                let cell = run_cell(b, p, d, iters);
+                table.row(&[
+                    b.to_string(),
+                    p.to_string(),
+                    d.to_string(),
+                    cell.requests.to_string(),
+                    format!("{:.1}", cell.tokens as f64 / cell.wall_s),
+                    format!("{:.0}", cell.ttft_p50_us),
+                    format!("{:.0}", cell.e2e_p50_us),
+                    format!("{:.0}", cell.e2e_p95_us),
+                    cell.shed.to_string(),
+                ]);
+                cells.push(cell);
+            }
+        }
+    }
+    table.print();
+
+    let cells_json: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"batch\":{},\"prompt_len\":{},\"decode_len\":{},\"requests\":{},\
+                 \"tokens\":{},\"wall_s\":{:.6},\"tokens_per_s\":{:.3},\
+                 \"ttft_p50_us\":{:.1},\"e2e_p50_us\":{:.1},\"e2e_p95_us\":{:.1},\"shed\":{}}}",
+                c.batch,
+                c.prompt_len,
+                c.decode_len,
+                c.requests,
+                c.tokens,
+                c.wall_s,
+                c.tokens as f64 / c.wall_s,
+                c.ttft_p50_us,
+                c.e2e_p50_us,
+                c.e2e_p95_us,
+                c.shed,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\"schema\":\"bench_pr6/v1\",\"source\":\"rust-loadgen\",\"smoke\":{},\"cells\":[{}]}}\n",
+        smoke,
+        cells_json.join(",")
+    );
+    std::fs::write(&out, json).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -1,0 +1,302 @@
+//! Token-budget admission control for the generation scheduler.
+//!
+//! The queue sits between [`Server::submit_generate`] (and the TCP
+//! front-end) and the generation scheduler thread. It does three jobs:
+//!
+//! 1. **Bounded queueing with load shedding.** Submissions past
+//!    `max_queue` are refused (`shed_requests`) so the caller can send
+//!    an explicit busy response — the server never silently drops a
+//!    request and never lets the waiting line grow without bound.
+//! 2. **Token-budget admission** (the policy trio popularized by
+//!    text-generation-inference): a prefill wave is admitted only when
+//!    its Σ prompt tokens fit `max_batch_prefill_tokens` and the whole
+//!    batch — tokens already resident plus tokens every sequence may
+//!    still decode — fits `max_batch_total_tokens`. A prefill wave
+//!    pauses every running sequence for a step, so admission into a
+//!    *running* batch additionally waits for `waiting ≥ ceil(ratio ×
+//!    running)` (`waiting_served_ratio`), with `max_waiting_steps`
+//!    decode steps as the starvation valve: the ratio can defer a
+//!    wave, never deny it.
+//! 3. **Event-driven wakeup.** The scheduler parks on the queue's
+//!    condvar when idle; arrivals, shutdown, and dispatcher *kicks*
+//!    (attention batches were flushed — the scheduler's lane may be
+//!    their only executor) all wake it. This replaces the old
+//!    fixed-interval idle poll: zero wakeups when nothing happens,
+//!    immediate wakeup when something does.
+//!
+//! [`Server::submit_generate`]: super::Server::submit_generate
+
+use super::metrics::Metrics;
+use super::server::GenRequest;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Admission policy for the generation scheduler (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Max Σ prompt tokens admitted in one prefill wave.
+    pub max_batch_prefill_tokens: usize,
+    /// Max Σ (resident + still-to-decode) tokens across the running
+    /// batch plus a candidate wave.
+    pub max_batch_total_tokens: usize,
+    /// Admit into a running batch only when `waiting ≥ ceil(ratio ×
+    /// running)` — the prefill pause must pay for itself.
+    pub waiting_served_ratio: f64,
+    /// …unless the queue head has already waited this many decode
+    /// steps (starvation valve; `0` disables the ratio gate).
+    pub max_waiting_steps: usize,
+    /// Queue bound: submissions past this are shed with an explicit
+    /// busy response.
+    pub max_queue: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_batch_prefill_tokens: 4096,
+            max_batch_total_tokens: 16384,
+            waiting_served_ratio: 1.2,
+            max_waiting_steps: 4,
+            max_queue: 256,
+        }
+    }
+}
+
+/// Why [`AdmissionQueue::wait_for_work`] woke.
+pub(crate) enum Wake {
+    /// Waiting requests and/or a dispatcher kick — there is work.
+    Work,
+    /// Shutdown requested and the waiting line is drained.
+    Shutdown,
+}
+
+struct QueueInner {
+    waiting: VecDeque<GenRequest>,
+    shutting: bool,
+    /// Dispatcher kick counter. A counter (not a flag) so a kick that
+    /// lands while the scheduler is mid-decode is seen on its next
+    /// wait — no missed wakeups.
+    kicks: u64,
+}
+
+/// Condvar-fronted admission queue (see module docs).
+pub struct AdmissionQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    cfg: AdmissionConfig,
+    metrics: Arc<Metrics>,
+}
+
+impl AdmissionQueue {
+    pub fn new(cfg: AdmissionConfig, metrics: Arc<Metrics>) -> Self {
+        AdmissionQueue {
+            inner: Mutex::new(QueueInner { waiting: VecDeque::new(), shutting: false, kicks: 0 }),
+            cv: Condvar::new(),
+            cfg,
+            metrics,
+        }
+    }
+
+    /// Enqueue a request, or shed it (`Err(req)` hands it back so the
+    /// caller can answer busy). Counts `shed_requests` and maintains
+    /// the `queue_depth` gauge.
+    pub fn submit(&self, req: GenRequest) -> Result<(), GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutting || g.waiting.len() >= self.cfg.max_queue {
+            Metrics::incr(&self.metrics.shed_requests);
+            return Err(req);
+        }
+        g.waiting.push_back(req);
+        Metrics::add(&self.metrics.queue_depth, 1);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Dispatcher ping: attention batches were flushed; wake the
+    /// scheduler in case its lane is their executor.
+    pub fn kick(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.kicks += 1;
+        self.cv.notify_all();
+    }
+
+    /// Stop accepting new work and wake every waiter. Requests already
+    /// queued still drain ([`Self::wait_for_work`] only reports
+    /// [`Wake::Shutdown`] once the line is empty).
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutting = true;
+        self.cv.notify_all();
+    }
+
+    /// Park until there is work (arrivals or an unseen kick) or until
+    /// shutdown with a drained queue. `kick_seen` is the caller's kick
+    /// cursor; it advances past any kick this call consumes.
+    pub(crate) fn wait_for_work(&self, kick_seen: &mut u64) -> Wake {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.kicks != *kick_seen {
+                *kick_seen = g.kicks;
+                return Wake::Work;
+            }
+            if !g.waiting.is_empty() {
+                return Wake::Work;
+            }
+            if g.shutting {
+                return Wake::Shutdown;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Pop the wave of requests the policy admits right now (possibly
+    /// empty). `running`/`running_tokens` describe the in-flight batch
+    /// (count, Σ resident + still-to-decode tokens), `steps_since_admit`
+    /// the decode steps since the last admitted wave, `slots` the free
+    /// concurrency. When nothing is running the head request is always
+    /// admitted — an oversized request degrades to a batch of one
+    /// instead of deadlocking the queue.
+    pub(crate) fn admit(
+        &self,
+        running: usize,
+        running_tokens: usize,
+        steps_since_admit: usize,
+        slots: usize,
+    ) -> Vec<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.waiting.is_empty() || slots == 0 {
+            return Vec::new();
+        }
+        if running > 0 && !g.shutting && steps_since_admit < self.cfg.max_waiting_steps {
+            let need = (self.cfg.waiting_served_ratio * running as f64).ceil() as usize;
+            if g.waiting.len() < need {
+                return Vec::new();
+            }
+        }
+        let mut out = Vec::new();
+        let mut prefill = 0usize;
+        let mut total = running_tokens;
+        while out.len() < slots {
+            let Some(front) = g.waiting.front() else { break };
+            let p = front.prompt.len();
+            let budget = p + front.max_new_tokens;
+            if running > 0 || !out.is_empty() {
+                if prefill + p > self.cfg.max_batch_prefill_tokens {
+                    break;
+                }
+                if total + budget > self.cfg.max_batch_total_tokens {
+                    break;
+                }
+            }
+            prefill += p;
+            total += budget;
+            out.push(g.waiting.pop_front().unwrap());
+        }
+        Metrics::sub(&self.metrics.queue_depth, out.len() as u64);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue(cfg: AdmissionConfig) -> (AdmissionQueue, Arc<Metrics>) {
+        let m = Arc::new(Metrics::new());
+        (AdmissionQueue::new(cfg, m.clone()), m)
+    }
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> GenRequest {
+        GenRequest::new(id, vec![1; prompt_len], max_new)
+    }
+
+    #[test]
+    fn sheds_when_full_and_tracks_depth() {
+        let (q, m) = queue(AdmissionConfig { max_queue: 2, ..Default::default() });
+        assert!(q.submit(req(0, 4, 4)).is_ok());
+        assert!(q.submit(req(1, 4, 4)).is_ok());
+        let back = q.submit(req(2, 4, 4));
+        assert_eq!(back.unwrap_err().id, 2, "shed hands the request back");
+        let s = m.snapshot();
+        assert_eq!((s.shed_requests, s.queue_depth), (1, 2));
+        let wave = q.admit(0, 0, 0, 8);
+        assert_eq!(wave.len(), 2);
+        assert_eq!(m.snapshot().queue_depth, 0);
+    }
+
+    #[test]
+    fn prefill_budget_caps_the_wave() {
+        let cfg = AdmissionConfig {
+            max_batch_prefill_tokens: 8,
+            max_batch_total_tokens: 1000,
+            ..Default::default()
+        };
+        let (q, _m) = queue(cfg);
+        for i in 0..5 {
+            q.submit(req(i, 4, 4)).unwrap();
+        }
+        // 4 + 4 = 8 fits; a third prompt would blow the prefill budget.
+        assert_eq!(q.admit(0, 0, 0, 8).len(), 2);
+    }
+
+    #[test]
+    fn total_budget_counts_running_tokens() {
+        let cfg = AdmissionConfig {
+            max_batch_prefill_tokens: 1000,
+            max_batch_total_tokens: 20,
+            waiting_served_ratio: 0.0,
+            ..Default::default()
+        };
+        let (q, _m) = queue(cfg);
+        q.submit(req(0, 4, 4)).unwrap();
+        q.submit(req(1, 4, 4)).unwrap();
+        // 14 running tokens + one 8-token candidate = 22 > 20: with a
+        // running batch, nothing is force-admitted.
+        assert!(q.admit(2, 14, 0, 8).is_empty());
+        // 4 running tokens: one candidate fits (12), two would be 20 —
+        // exactly the cap, so both go.
+        assert_eq!(q.admit(2, 4, 0, 8).len(), 2);
+    }
+
+    #[test]
+    fn oversized_request_admits_alone_when_idle() {
+        let cfg = AdmissionConfig {
+            max_batch_prefill_tokens: 8,
+            max_batch_total_tokens: 8,
+            ..Default::default()
+        };
+        let (q, _m) = queue(cfg);
+        q.submit(req(0, 100, 10)).unwrap();
+        q.submit(req(1, 4, 4)).unwrap();
+        // Head exceeds every budget but nothing is running: admit it
+        // alone rather than deadlock. The next request must wait.
+        let wave = q.admit(0, 0, 0, 8);
+        assert_eq!(wave.len(), 1);
+        assert_eq!(wave[0].id, 0);
+    }
+
+    #[test]
+    fn ratio_defers_then_waiting_steps_force() {
+        let cfg = AdmissionConfig { waiting_served_ratio: 1.2, max_waiting_steps: 4, ..Default::default() };
+        let (q, _m) = queue(cfg);
+        q.submit(req(0, 4, 4)).unwrap();
+        // 4 running, 1 waiting < ceil(1.2 × 4) = 5: deferred…
+        assert!(q.admit(4, 32, 0, 8).is_empty());
+        assert!(q.admit(4, 32, 3, 8).is_empty());
+        // …until the head has waited max_waiting_steps decode steps.
+        assert_eq!(q.admit(4, 32, 4, 8).len(), 1);
+    }
+
+    #[test]
+    fn kick_wakes_exactly_once_then_shutdown() {
+        let (q, _m) = queue(AdmissionConfig::default());
+        q.kick();
+        let mut seen = 0u64;
+        assert!(matches!(q.wait_for_work(&mut seen), Wake::Work));
+        assert_eq!(seen, 1, "the kick cursor advances");
+        q.shutdown();
+        assert!(matches!(q.wait_for_work(&mut seen), Wake::Shutdown));
+        // Post-shutdown submissions shed.
+        assert!(q.submit(req(9, 4, 4)).is_err());
+    }
+}

@@ -25,7 +25,7 @@
 
 use crate::basis::KConvBasis;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Number of lock stripes. Eight covers the worker counts this crate's
 /// determinism tests pin (1/2/8) without making per-shard LRU state
@@ -102,7 +102,11 @@ pub struct BasisCache {
 
 #[derive(Default)]
 struct Inner {
-    map: HashMap<CacheKey, (CachedBasis, u64)>,
+    /// Values are `Arc`-shared: a hit hands the caller a reference to
+    /// the resident entry (O(1)), never a deep copy of the `O(k·n)`
+    /// basis floats. Entries are immutable once inserted, so sharing
+    /// is sound; eviction only drops the shard's reference.
+    map: HashMap<CacheKey, (Arc<CachedBasis>, u64)>,
     clock: u64,
     hits: u64,
     misses: u64,
@@ -117,14 +121,19 @@ impl BasisCache {
         }
     }
 
-    pub fn get(&self, key: &CacheKey) -> Option<CachedBasis> {
+    /// Look up an entry. A hit returns a shared handle to the resident
+    /// basis — an `Arc` clone, **not** a deep copy of the `O(k·n)`
+    /// payload — so consumers (prefill applies, gradient
+    /// `FOperator::from_cached`, decode seeding) read through the
+    /// cache's own allocation.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<CachedBasis>> {
         let mut g = self.shards[shard_of(key)].lock().unwrap();
         g.clock += 1;
         let clock = g.clock;
         match g.map.get_mut(key) {
             Some((v, stamp)) => {
                 *stamp = clock;
-                let out = v.clone();
+                let out = Arc::clone(v);
                 g.hits += 1;
                 Some(out)
             }
@@ -136,6 +145,7 @@ impl BasisCache {
     }
 
     pub fn put(&self, key: CacheKey, value: CachedBasis) {
+        let value = Arc::new(value);
         let mut g = self.shards[shard_of(&key)].lock().unwrap();
         g.clock += 1;
         let clock = g.clock;
@@ -226,6 +236,18 @@ mod tests {
         assert!(c.get(&key(1)).is_some());
         assert!(c.get(&key(2)).is_none());
         assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn hits_share_one_allocation() {
+        // Two hits on the same key must hand back the SAME resident
+        // basis (Arc identity), not deep copies — the zero-copy
+        // contract consumers like `FOperator::from_cached` rely on.
+        let c = BasisCache::new(4);
+        c.put(key(1), dummy_basis(8));
+        let a = c.get(&key(1)).unwrap();
+        let b = c.get(&key(1)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "cache hits must share the resident allocation");
     }
 
     #[test]

@@ -1,9 +1,28 @@
-//! Lock-free serving metrics: counters on atomics, latency samples in a
-//! striped mutex (recording is off the execution hot loop).
+//! Lock-free serving metrics: counters on atomics, latency samples in
+//! bounded per-series reservoirs behind mutexes (recording is off the
+//! execution hot loop).
+//!
+//! # Bounded latency memory
+//!
+//! Each latency series is a **reservoir** of at most
+//! [`LATENCY_RESERVOIR_CAP`] samples (Algorithm R: once full, the
+//! `i`-th observation replaces a uniformly random resident slot with
+//! probability `cap/i`). A long-lived server therefore holds `O(1)`
+//! latency memory per series regardless of request count, and
+//! `snapshot()`'s percentile sort is `O(cap·log cap)`, not
+//! `O(total·log total)`. `count`, `mean_us` and `max_us` stay **exact**
+//! (running total/sum/max); the percentiles are estimates over the
+//! uniform sample once `count > cap` — unbiased, and below the cap the
+//! reservoir is the full series, so small-run tests see exact values.
+//! Replacement uses a fixed-seed xorshift so identical recording
+//! sequences produce identical snapshots (determinism contract).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Max resident samples per latency series (see module docs).
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
 
 /// Latency summary (microseconds).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -16,20 +35,68 @@ pub struct LatencyStats {
     pub max_us: f64,
 }
 
-fn summarize(samples: &mut Vec<f64>) -> LatencyStats {
-    if samples.is_empty() {
-        return LatencyStats::default();
+/// Bounded latency series: Algorithm R reservoir with exact running
+/// count/sum/max and a deterministic (fixed-seed xorshift64*)
+/// replacement stream.
+#[derive(Debug)]
+struct Reservoir {
+    /// Total observations ever recorded (exact).
+    seen: u64,
+    /// Running sum of every observation (exact mean).
+    sum: f64,
+    /// Running max of every observation (exact).
+    max: f64,
+    /// The resident sample, `len() ≤ LATENCY_RESERVOIR_CAP`.
+    samples: Vec<f64>,
+    /// xorshift64* state — fixed seed, so two identically-fed
+    /// reservoirs hold identical samples.
+    rng: u64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir { seen: 0, sum: 0.0, max: 0.0, samples: Vec::new(), rng: 0x9e3779b97f4a7c15 }
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let count = samples.len();
-    let pick = |q: f64| samples[((q * (count - 1) as f64).round() as usize).min(count - 1)];
-    LatencyStats {
-        count,
-        mean_us: samples.iter().sum::<f64>() / count as f64,
-        p50_us: pick(0.50),
-        p95_us: pick(0.95),
-        p99_us: pick(0.99),
-        max_us: *samples.last().unwrap(),
+}
+
+impl Reservoir {
+    fn record(&mut self, x: f64) {
+        self.seen += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if self.samples.len() < LATENCY_RESERVOIR_CAP {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: keep x with probability cap/seen, in a
+            // uniformly random resident slot.
+            self.rng ^= self.rng << 13;
+            self.rng ^= self.rng >> 7;
+            self.rng ^= self.rng << 17;
+            let j = (self.rng.wrapping_mul(0x2545f4914f6cdd1d) % self.seen) as usize;
+            if j < LATENCY_RESERVOIR_CAP {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    fn summarize(&self) -> LatencyStats {
+        if self.seen == 0 {
+            return LatencyStats::default();
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let resident = s.len();
+        let pick = |q: f64| s[((q * (resident - 1) as f64).round() as usize).min(resident - 1)];
+        LatencyStats {
+            count: self.seen as usize,
+            mean_us: self.sum / self.seen as f64,
+            p50_us: pick(0.50),
+            p95_us: pick(0.95),
+            p99_us: pick(0.99),
+            max_us: self.max,
+        }
     }
 }
 
@@ -131,10 +198,22 @@ pub struct Metrics {
     pub step_basis_misses: AtomicU64,
     /// Generation requests admitted by the server's decode scheduler.
     pub gen_requests: AtomicU64,
-    /// Generation requests completed (response sent).
+    /// Generation requests completed (response sent). Rejected requests
+    /// are **not** counted here — see `gen_rejected`.
     pub gen_completed: AtomicU64,
+    /// Generation requests rejected at the door (empty prompt or prompt
+    /// ≥ `max_seq`). Kept out of `gen_completed` and the `gen_e2e`
+    /// latency series so completion throughput and latency percentiles
+    /// describe real generations only.
+    pub gen_rejected: AtomicU64,
     /// Tokens emitted across all generation requests.
     pub gen_tokens: AtomicU64,
+    /// Requests the admission queue refused because it was full (the
+    /// caller got an explicit busy response, never a silent drop).
+    pub shed_requests: AtomicU64,
+    /// Gauge: generation requests currently waiting in the admission
+    /// queue (raised on enqueue, lowered on admit/shed-drain).
+    pub queue_depth: AtomicU64,
     /// Non-generation attention requests served by the generation
     /// scheduler's lane (merged into a decode submit or executed
     /// standalone between decode steps) instead of a server worker.
@@ -146,13 +225,13 @@ pub struct Metrics {
     /// decode states. Raised by `Transformer::{prefill_batch,
     /// decode_step}`, lowered by `DecodeSession::retire`.
     pub decode_resident_bytes: AtomicU64,
-    queue_lat: Mutex<Vec<f64>>,
-    exec_lat: Mutex<Vec<f64>>,
-    e2e_lat: Mutex<Vec<f64>>,
-    decode_lat: Mutex<Vec<f64>>,
-    gen_lat: Mutex<Vec<f64>>,
-    grad_lat: Mutex<Vec<f64>>,
-    lm_backward_lat: Mutex<Vec<f64>>,
+    queue_lat: Mutex<Reservoir>,
+    exec_lat: Mutex<Reservoir>,
+    e2e_lat: Mutex<Reservoir>,
+    decode_lat: Mutex<Reservoir>,
+    gen_lat: Mutex<Reservoir>,
+    grad_lat: Mutex<Reservoir>,
+    lm_backward_lat: Mutex<Reservoir>,
 }
 
 impl Metrics {
@@ -177,21 +256,21 @@ impl Metrics {
     }
 
     pub fn record_queue(&self, d: Duration) {
-        self.queue_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.queue_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
     }
 
     pub fn record_exec(&self, d: Duration) {
-        self.exec_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.exec_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
     }
 
     pub fn record_e2e(&self, d: Duration) {
-        self.e2e_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.e2e_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
     }
 
     /// Per-job decode-step execution time (kept separate from the
     /// prefill `exec` series so the two latency regimes don't mix).
     pub fn record_decode(&self, d: Duration) {
-        self.decode_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.decode_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
     }
 
     /// Whole-generation end-to-end time (submit → response, all
@@ -199,21 +278,28 @@ impl Metrics {
     /// generation is orders of magnitude above one attention request,
     /// and mixing them would corrupt the e2e percentiles.
     pub fn record_gen_e2e(&self, d: Duration) {
-        self.gen_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.gen_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
     }
 
     /// Per-job gradient execution time (its own series — one gradient
     /// job is `O(k·n·d²·log n)`, far above a prefill job, and mixing
     /// the regimes would corrupt the exec percentiles).
     pub fn record_grad(&self, d: Duration) {
-        self.grad_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.grad_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
     }
 
     /// Per-job LM-backward execution time (its own series — an
     /// attention backward is a different cost regime from both a
     /// prefill job and a Definition 5.1 gradient job).
     pub fn record_lm_backward(&self, d: Duration) {
-        self.lm_backward_lat.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.lm_backward_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+    }
+
+    /// Resident sample count of the e2e series (reservoir bound proof
+    /// for tests; the exact observation count lives in the snapshot).
+    #[cfg(test)]
+    fn e2e_resident_samples(&self) -> usize {
+        self.e2e_lat.lock().unwrap().samples.len()
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -254,17 +340,20 @@ impl Metrics {
             step_basis_misses: self.step_basis_misses.load(Ordering::Relaxed),
             gen_requests: self.gen_requests.load(Ordering::Relaxed),
             gen_completed: self.gen_completed.load(Ordering::Relaxed),
+            gen_rejected: self.gen_rejected.load(Ordering::Relaxed),
             gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
+            shed_requests: self.shed_requests.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
             gen_lane_attn_requests: self.gen_lane_attn_requests.load(Ordering::Relaxed),
             merged_attn_requests: self.merged_attn_requests.load(Ordering::Relaxed),
             decode_resident_bytes: self.decode_resident_bytes.load(Ordering::Relaxed),
-            queue: summarize(&mut self.queue_lat.lock().unwrap()),
-            exec: summarize(&mut self.exec_lat.lock().unwrap()),
-            e2e: summarize(&mut self.e2e_lat.lock().unwrap()),
-            decode: summarize(&mut self.decode_lat.lock().unwrap()),
-            gen_e2e: summarize(&mut self.gen_lat.lock().unwrap()),
-            grad: summarize(&mut self.grad_lat.lock().unwrap()),
-            lm_backward: summarize(&mut self.lm_backward_lat.lock().unwrap()),
+            queue: self.queue_lat.lock().unwrap().summarize(),
+            exec: self.exec_lat.lock().unwrap().summarize(),
+            e2e: self.e2e_lat.lock().unwrap().summarize(),
+            decode: self.decode_lat.lock().unwrap().summarize(),
+            gen_e2e: self.gen_lat.lock().unwrap().summarize(),
+            grad: self.grad_lat.lock().unwrap().summarize(),
+            lm_backward: self.lm_backward_lat.lock().unwrap().summarize(),
         }
     }
 }
@@ -308,7 +397,10 @@ pub struct MetricsSnapshot {
     pub step_basis_misses: u64,
     pub gen_requests: u64,
     pub gen_completed: u64,
+    pub gen_rejected: u64,
     pub gen_tokens: u64,
+    pub shed_requests: u64,
+    pub queue_depth: u64,
     pub gen_lane_attn_requests: u64,
     pub merged_attn_requests: u64,
     pub decode_resident_bytes: u64,
@@ -355,14 +447,18 @@ impl MetricsSnapshot {
     /// reused, re-recoveries how often drift forced a fresh recovery).
     pub fn decode_report(&self) -> String {
         format!(
-            "generation: {} requests / {} completed / {} tokens | \
+            "generation: {} requests / {} completed / {} rejected / {} tokens | \
+             admission: {} shed, {} queued | \
              decode: {} calls/{} steps | seeds: {}h/{}m | \
              drift re-recoveries: {} | fallbacks: {} | \
              kv resident: {} B | merged attn: {} (lane {}) | \
              step exec mean={:.0}µs p95={:.0}µs | gen e2e p50={:.0}µs p95={:.0}µs",
             self.gen_requests,
             self.gen_completed,
+            self.gen_rejected,
             self.gen_tokens,
+            self.shed_requests,
+            self.queue_depth,
             self.decode_calls,
             self.decode_steps,
             self.decode_seed_hits,
@@ -532,5 +628,69 @@ mod tests {
         let r = s.decode_report();
         assert!(r.contains("1 requests"));
         assert!(r.contains("seeds: 1h/0m"));
+    }
+
+    #[test]
+    fn admission_counters_render() {
+        let m = Metrics::new();
+        Metrics::incr(&m.gen_rejected);
+        Metrics::add(&m.shed_requests, 3);
+        Metrics::add(&m.queue_depth, 2);
+        let s = m.snapshot();
+        assert_eq!((s.gen_rejected, s.shed_requests, s.queue_depth), (1, 3, 2));
+        let r = s.decode_report();
+        assert!(r.contains("1 rejected"));
+        assert!(r.contains("admission: 3 shed, 2 queued"));
+    }
+
+    // Regression (unbounded latency memory): pre-reservoir, every
+    // `record_*` pushed onto an ever-growing Vec, so a long-lived
+    // server leaked a float per request forever. The reservoir must
+    // hold at most LATENCY_RESERVOIR_CAP residents no matter how many
+    // observations arrive, while count/mean/max stay exact.
+    #[test]
+    fn reservoir_bounds_resident_samples() {
+        let m = Metrics::new();
+        let total = 3 * LATENCY_RESERVOIR_CAP;
+        for i in 1..=total {
+            m.record_e2e(Duration::from_micros(i as u64));
+        }
+        assert_eq!(m.e2e_resident_samples(), LATENCY_RESERVOIR_CAP);
+        let s = m.snapshot();
+        assert_eq!(s.e2e.count, total);
+        assert_eq!(s.e2e.max_us, total as f64);
+        let exact_mean = (total + 1) as f64 / 2.0;
+        assert!((s.e2e.mean_us - exact_mean).abs() < 1e-6 * exact_mean);
+    }
+
+    #[test]
+    fn reservoir_percentiles_stay_sane_past_cap() {
+        // Uniform ramp 1..=3·cap: the sampled percentiles should land
+        // within a few percent of the true quantiles.
+        let m = Metrics::new();
+        let total = 3 * LATENCY_RESERVOIR_CAP;
+        for i in 1..=total {
+            m.record_e2e(Duration::from_micros(i as u64));
+        }
+        let s = m.snapshot();
+        let tol = 0.10 * total as f64;
+        assert!((s.e2e.p50_us - 0.50 * total as f64).abs() < tol, "p50={}", s.e2e.p50_us);
+        assert!((s.e2e.p95_us - 0.95 * total as f64).abs() < tol, "p95={}", s.e2e.p95_us);
+        assert!(s.e2e.p50_us <= s.e2e.p95_us && s.e2e.p95_us <= s.e2e.p99_us);
+        assert!(s.e2e.p99_us <= s.e2e.max_us);
+    }
+
+    #[test]
+    fn reservoir_replacement_is_deterministic() {
+        let feed = |m: &Metrics| {
+            for i in 1..=(2 * LATENCY_RESERVOIR_CAP) {
+                m.record_e2e(Duration::from_micros((i % 977 + 1) as u64));
+            }
+        };
+        let (a, b) = (Metrics::new(), Metrics::new());
+        feed(&a);
+        feed(&b);
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        assert_eq!(sa.e2e, sb.e2e, "identically-fed reservoirs must summarize identically");
     }
 }

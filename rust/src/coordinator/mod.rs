@@ -19,24 +19,39 @@
 //!   by interleaving batched prefill of new arrivals with one engine
 //!   decode step per loop for every in-flight sequence — autoregressive
 //!   serving with no per-token re-prefill.
-//! * [`Metrics`] — lock-free counters + latency recording, including
-//!   the decode path (`decode_seed_hits`, `decode_rerecoveries`, …).
+//! * [`AdmissionQueue`] — token-budget admission control for the
+//!   generation lane ([`AdmissionConfig`]: per-wave prefill budget,
+//!   whole-batch total-token budget, waiting/served ratio) with
+//!   bounded queueing, explicit load shedding, and the condvar the
+//!   event-driven scheduler parks on.
+//! * [`NetServer`] — the TCP front-end: newline-delimited JSON-ish
+//!   framing over `std::net`, per-connection reader threads, token
+//!   streaming per decode step ([`GenSink`]/[`GenEvent`] under the
+//!   hood). No new dependencies — the framing is hand-rolled.
+//! * [`Metrics`] — lock-free counters + bounded-reservoir latency
+//!   recording, including the decode path (`decode_seed_hits`,
+//!   `decode_rerecoveries`, …) and the admission door (`gen_rejected`,
+//!   `shed_requests`, `queue_depth`).
 //!
 //! The runtime is deliberately deterministic given a trace and a seed —
 //! every number in EXPERIMENTS.md §coordinator is reproducible. See
 //! `ARCHITECTURE.md` at the repo root for the full request flow.
 
+mod admission;
 mod batcher;
 mod cache;
 mod metrics;
+mod net;
 mod router;
 mod server;
 
+pub use admission::{AdmissionConfig, AdmissionQueue};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use cache::{fingerprint, shard_of, BasisCache, CacheKey, CachedBasis, StepBasis, N_SHARDS};
-pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, LATENCY_RESERVOIR_CAP};
+pub use net::{NetConfig, NetServer};
 pub use router::{Backend, Router, RouterConfig};
 pub use server::{
-    run_trace, AttnRequest, AttnResponse, GenConfig, GenRequest, GenResponse, Payload, Server,
-    ServerConfig,
+    run_trace, AttnRequest, AttnResponse, GenConfig, GenEvent, GenRequest, GenResponse, GenSink,
+    GenStatus, Payload, Server, ServerConfig,
 };

@@ -1,0 +1,371 @@
+//! The network door: a TCP front-end over [`Server`].
+//!
+//! Plain `std::net` — this image vendors no async runtime and no JSON
+//! crate, so the framing is hand-rolled: **one flat JSON object per
+//! newline-terminated line**, both directions. The parser handles
+//! exactly that shape (unsigned integer fields, one flat array of
+//! unsigned integers, no string escapes, no nesting) — it is a wire
+//! format for this server, not a general JSON implementation.
+//!
+//! ## Requests (client → server)
+//!
+//! ```text
+//! {"op":"generate","id":1,"prompt":[1,2,3],"max_new_tokens":8}
+//! {"op":"attn","id":2,"seq_len":128,"d_model":8,"seed":7}
+//! ```
+//!
+//! Attention requests are trace-style: the payload is synthesized from
+//! `seed` server-side (same [`Payload::Synthetic`] path the bench
+//! traces use) — explicit tensors stay on the in-process API.
+//!
+//! ## Responses (server → client)
+//!
+//! Generation **streams**: one `token` line per decode step the moment
+//! the scheduler produces it, then a terminal line:
+//!
+//! ```text
+//! {"ev":"token","id":1,"index":0,"token":17}
+//! {"ev":"done","id":1,"prompt_len":3,"decode_steps":7,"tokens":[17,...]}
+//! {"ev":"rejected","id":1}            (invalid prompt)
+//! {"ev":"busy","id":1}                (admission queue full — retry)
+//! {"ev":"attn","id":2,"backend":"conv","basis_k":4,"y_fp":"1a2b..."}
+//! {"ev":"error","msg":"..."}          (unparseable request line)
+//! ```
+//!
+//! `y_fp` is the FNV-1a [`fingerprint`] of the output matrix — enough
+//! for a client to assert bit-identity against an in-process oracle
+//! without shipping `n × d` floats through the wire format.
+//!
+//! `id`s are client-scoped: each connection may number its requests
+//! 0,1,2,… — the front-end rewrites them onto a server-global id space
+//! and maps responses back before writing.
+
+use super::cache::fingerprint;
+use super::metrics::Metrics;
+use super::router::Backend;
+use super::server::{AttnRequest, GenEvent, GenRequest, GenSink, Payload, Server, ServerConfig};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Network front-end configuration.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address, e.g. `"127.0.0.1:0"` (port 0 = ephemeral; read
+    /// the bound port back from [`NetServer::addr`]).
+    pub addr: String,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { addr: "127.0.0.1:0".to_string() }
+    }
+}
+
+/// How often the accept loop re-checks the shutdown flag while no
+/// connection is arriving (the listener is non-blocking).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+type SharedStream = Arc<Mutex<TcpStream>>;
+
+/// Routes one submitted attention request's response back to its
+/// connection: internal id → (client id, connection writer).
+type AttnRoutes = Arc<Mutex<HashMap<u64, (u64, SharedStream)>>>;
+
+/// A running TCP front-end wrapping a [`Server`].
+pub struct NetServer {
+    server: Arc<Server>,
+    addr: SocketAddr,
+    running: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pump_thread: Option<std::thread::JoinHandle<()>>,
+    pump_stop: mpsc::Sender<()>,
+    /// Writer halves of every accepted connection (for shutdown).
+    conns: Arc<Mutex<Vec<SharedStream>>>,
+    /// Reader threads (joined on shutdown).
+    readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Start the server and bind the listener.
+    pub fn start(server_cfg: ServerConfig, net_cfg: NetConfig) -> std::io::Result<NetServer> {
+        let server = Arc::new(Server::start(server_cfg));
+        let listener = TcpListener::bind(&net_cfg.addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let running = Arc::new(AtomicBool::new(true));
+        let conns: Arc<Mutex<Vec<SharedStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let routes: AttnRoutes = Arc::new(Mutex::new(HashMap::new()));
+        let next_id = Arc::new(AtomicU64::new(1));
+
+        // Response pump: drains the server's attention responses and
+        // routes each back to the connection that submitted it.
+        let (pump_stop, pump_stop_rx) = mpsc::channel::<()>();
+        let pump_thread = {
+            let server = server.clone();
+            let routes = routes.clone();
+            Some(std::thread::spawn(move || loop {
+                if let Some(resp) = server.recv_attn_timeout(Duration::from_millis(20)) {
+                    let dest = routes.lock().unwrap().remove(&resp.id);
+                    if let Some((client_id, writer)) = dest {
+                        let backend = match resp.backend {
+                            Backend::Exact => "exact",
+                            Backend::ConvBasis => "conv",
+                            Backend::LowRank => "lowrank",
+                        };
+                        write_line(
+                            &writer,
+                            &format!(
+                                "{{\"ev\":\"attn\",\"id\":{},\"backend\":\"{}\",\"basis_k\":{},\"y_fp\":\"{:016x}\"}}",
+                                client_id,
+                                backend,
+                                resp.basis_k,
+                                fingerprint(resp.y.data()),
+                            ),
+                        );
+                    }
+                } else if pump_stop_rx.try_recv().is_ok() {
+                    break;
+                }
+            }))
+        };
+
+        // Accept loop: non-blocking accept + shutdown-flag poll; one
+        // reader thread per connection.
+        let accept_thread = {
+            let server = server.clone();
+            let running = running.clone();
+            let conns = conns.clone();
+            let readers = readers.clone();
+            Some(std::thread::spawn(move || {
+                while running.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let writer: SharedStream = match stream.try_clone() {
+                                Ok(w) => Arc::new(Mutex::new(w)),
+                                Err(_) => continue,
+                            };
+                            conns.lock().unwrap().push(writer.clone());
+                            let server = server.clone();
+                            let routes = routes.clone();
+                            let next_id = next_id.clone();
+                            let handle = std::thread::spawn(move || {
+                                serve_connection(stream, writer, &server, &routes, &next_id);
+                            });
+                            readers.lock().unwrap().push(handle);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }))
+        };
+
+        Ok(NetServer { server, addr, running, accept_thread, pump_thread, pump_stop, conns, readers })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The wrapped server's metrics.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.server.metrics.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, close every connection
+    /// (in-flight generations keep decoding — their streamed writes to
+    /// dead sockets are discarded), drain the server, join all
+    /// threads. Safe to call mid-stream.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.running.store(false, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Closing the sockets unblocks every reader's `read_line`.
+        for conn in self.conns.lock().unwrap().drain(..) {
+            if let Ok(s) = conn.lock() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        let reader_handles: Vec<_> = self.readers.lock().unwrap().drain(..).collect();
+        for r in reader_handles {
+            let _ = r.join();
+        }
+        // No clients remain: stop the pump, then drain the server.
+        let _ = self.pump_stop.send(());
+        if let Some(t) = self.pump_thread.take() {
+            let _ = t.join();
+        }
+        let server = Arc::try_unwrap(self.server)
+            .unwrap_or_else(|_| panic!("net server threads must release the server on shutdown"));
+        server.shutdown()
+    }
+}
+
+/// One connection's read loop: parse request lines, rewrite ids into
+/// the server-global space, submit. Exits on EOF / socket close.
+fn serve_connection(
+    stream: TcpStream,
+    writer: SharedStream,
+    server: &Server,
+    routes: &AttnRoutes,
+    next_id: &AtomicU64,
+) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break, // EOF or dead socket
+            Ok(_) => {}
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match json_str(line, "op") {
+            Some("generate") => {
+                let (Some(client_id), Some(prompt), Some(max_new)) = (
+                    json_u64(line, "id"),
+                    json_usize_array(line, "prompt"),
+                    json_u64(line, "max_new_tokens"),
+                ) else {
+                    write_error(&writer, "generate needs id, prompt, max_new_tokens");
+                    continue;
+                };
+                let internal = next_id.fetch_add(1, Ordering::Relaxed);
+                let sink_writer = writer.clone();
+                let sink = GenSink::new(move |ev| {
+                    // Map the server-global id back to the client's.
+                    let msg = match ev {
+                        GenEvent::Token { index, token, .. } => format!(
+                            "{{\"ev\":\"token\",\"id\":{client_id},\"index\":{index},\"token\":{token}}}"
+                        ),
+                        GenEvent::Done { prompt_len, tokens, decode_steps, .. } => format!(
+                            "{{\"ev\":\"done\",\"id\":{client_id},\"prompt_len\":{prompt_len},\"decode_steps\":{decode_steps},\"tokens\":[{}]}}",
+                            join_usizes(tokens),
+                        ),
+                        GenEvent::Rejected { .. } => {
+                            format!("{{\"ev\":\"rejected\",\"id\":{client_id}}}")
+                        }
+                        GenEvent::Busy { .. } => {
+                            format!("{{\"ev\":\"busy\",\"id\":{client_id}}}")
+                        }
+                    };
+                    write_line(&sink_writer, &msg);
+                });
+                server.submit_generate(
+                    GenRequest::new(internal, prompt, max_new as usize).with_stream(sink),
+                );
+            }
+            Some("attn") => {
+                let (Some(client_id), Some(seq_len), Some(d_model), Some(seed)) = (
+                    json_u64(line, "id"),
+                    json_u64(line, "seq_len"),
+                    json_u64(line, "d_model"),
+                    json_u64(line, "seed"),
+                ) else {
+                    write_error(&writer, "attn needs id, seq_len, d_model, seed");
+                    continue;
+                };
+                let internal = next_id.fetch_add(1, Ordering::Relaxed);
+                routes.lock().unwrap().insert(internal, (client_id, writer.clone()));
+                server.submit(AttnRequest {
+                    id: internal,
+                    seq_len: seq_len as usize,
+                    d_model: d_model as usize,
+                    bounded_entries: false,
+                    payload: Payload::Synthetic { seed },
+                    submitted_at: Instant::now(),
+                });
+            }
+            _ => write_error(&writer, "unknown op (want generate|attn)"),
+        }
+    }
+}
+
+/// Write one whole line under the connection mutex (lines from the
+/// pump, the streaming sinks, and the reader never interleave). Errors
+/// are discarded: a dead client just stops receiving.
+fn write_line(writer: &SharedStream, line: &str) {
+    if let Ok(mut s) = writer.lock() {
+        let _ = s.write_all(line.as_bytes());
+        let _ = s.write_all(b"\n");
+        let _ = s.flush();
+    }
+}
+
+fn write_error(writer: &SharedStream, msg: &str) {
+    write_line(writer, &format!("{{\"ev\":\"error\",\"msg\":\"{msg}\"}}"));
+}
+
+fn join_usizes(xs: &[usize]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Extract an unsigned integer field from a flat JSON line.
+fn json_u64(line: &str, key: &str) -> Option<u64> {
+    let rest = field(line, key)?;
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    if end == 0 {
+        return None;
+    }
+    rest[..end].parse().ok()
+}
+
+/// Extract a string field (no escape handling — wire format only).
+fn json_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let rest = field(line, key)?.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(&rest[..end])
+}
+
+/// Extract a flat array of unsigned integers.
+fn json_usize_array(line: &str, key: &str) -> Option<Vec<usize>> {
+    let rest = field(line, key)?.strip_prefix('[')?;
+    let body = &rest[..rest.find(']')?];
+    if body.trim().is_empty() {
+        return Some(Vec::new());
+    }
+    body.split(',').map(|t| t.trim().parse::<usize>().ok()).collect()
+}
+
+/// Position just past `"key":` in a flat JSON line.
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat)? + pat.len();
+    Some(line[i..].trim_start())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_json_fields() {
+        let line = r#"{"op":"generate","id":7,"prompt":[1, 2,3],"max_new_tokens":8}"#;
+        assert_eq!(json_str(line, "op"), Some("generate"));
+        assert_eq!(json_u64(line, "id"), Some(7));
+        assert_eq!(json_usize_array(line, "prompt"), Some(vec![1, 2, 3]));
+        assert_eq!(json_u64(line, "max_new_tokens"), Some(8));
+        assert_eq!(json_u64(line, "missing"), None);
+        assert_eq!(json_usize_array(r#"{"prompt":[]}"#, "prompt"), Some(vec![]));
+        assert_eq!(json_usize_array(r#"{"prompt":[1,x]}"#, "prompt"), None);
+    }
+
+    #[test]
+    fn renders_token_arrays() {
+        assert_eq!(join_usizes(&[1, 22, 3]), "1,22,3");
+        assert_eq!(join_usizes(&[]), "");
+    }
+}

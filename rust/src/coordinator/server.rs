@@ -30,7 +30,24 @@
 //! the decode loop already has the engine hot. With `workers: 0` (and
 //! `gen` set) the scheduler's lane is the *only* attention executor —
 //! the fully unified single-door configuration.
+//!
+//! **Admission and streaming.** Generation arrivals are validated at
+//! the door (empty / over-`max_seq` prompts are rejected immediately —
+//! counted in `gen_rejected`, never against concurrency or the
+//! completion metrics) and then pass a token-budget admission queue
+//! ([`AdmissionQueue`], policy in [`AdmissionConfig`]): a prefill wave
+//! is admitted only when its Σ prompt tokens fit the prefill budget,
+//! the whole batch fits the total-token budget, and pausing the
+//! running batch pays for itself (`waiting_served_ratio`, with
+//! `max_waiting_steps` as the starvation valve). A full queue sheds
+//! with an explicit busy response (`shed_requests`). Requests carrying
+//! a [`GenSink`] stream every token as a [`GenEvent`] the step it
+//! decodes — the TCP front-end ([`super::net`]) rides this. The
+//! scheduler is event-driven: idle it parks on the queue's condvar,
+//! and the dispatcher *kicks* it whenever it flushes attention batches
+//! (no timer polling anywhere in the loop).
 
+use super::admission::{AdmissionConfig, AdmissionQueue, Wake};
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::cache::BasisCache;
 use super::metrics::Metrics;
@@ -85,6 +102,8 @@ pub struct GenConfig {
     pub backend: AttentionBackend,
     /// Max concurrently decoding sequences (≥ 1).
     pub max_concurrent: usize,
+    /// Token-budget admission policy for the waiting line.
+    pub admission: AdmissionConfig,
 }
 
 impl std::fmt::Debug for GenConfig {
@@ -92,9 +111,47 @@ impl std::fmt::Debug for GenConfig {
         f.debug_struct("GenConfig")
             .field("backend", &self.backend)
             .field("max_concurrent", &self.max_concurrent)
+            .field("admission", &self.admission)
             .field("model_params", &self.model.num_params())
             .finish()
     }
+}
+
+/// Per-request streaming sink: invoked on the scheduler thread for
+/// every [`GenEvent`] of one generation, in order. Keep it cheap — a
+/// slow sink stalls every in-flight sequence's decode step.
+#[derive(Clone)]
+pub struct GenSink(Arc<dyn Fn(&GenEvent) + Send + Sync>);
+
+impl GenSink {
+    pub fn new(f: impl Fn(&GenEvent) + Send + Sync + 'static) -> Self {
+        GenSink(Arc::new(f))
+    }
+
+    pub fn emit(&self, ev: &GenEvent) {
+        (self.0)(ev)
+    }
+}
+
+impl std::fmt::Debug for GenSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("GenSink(..)")
+    }
+}
+
+/// One streamed generation event. Every request ends in exactly one
+/// terminal event (`Done`, `Rejected`, or `Busy`); `Token` events
+/// precede `Done` with consecutive `index`es from 0.
+#[derive(Clone, Debug)]
+pub enum GenEvent {
+    /// One generated token, emitted the step it decodes.
+    Token { id: u64, index: usize, token: usize },
+    /// Terminal: generation complete (tokens repeats the full stream).
+    Done { id: u64, prompt_len: usize, tokens: Vec<usize>, decode_steps: usize },
+    /// Terminal: invalid prompt (empty or over `max_seq`).
+    Rejected { id: u64 },
+    /// Terminal: admission queue full — retry later.
+    Busy { id: u64 },
 }
 
 /// One generation request: a prompt and a token budget.
@@ -105,6 +162,33 @@ pub struct GenRequest {
     /// Tokens to generate (greedy argmax decoding — deterministic).
     pub max_new_tokens: usize,
     pub submitted_at: Instant,
+    /// Streaming sink. When set, tokens are emitted as they decode and
+    /// the terminal event **replaces** the channel response —
+    /// [`Server::collect_generations`] never sees sinked requests.
+    pub stream: Option<GenSink>,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> Self {
+        GenRequest { id, prompt, max_new_tokens, submitted_at: Instant::now(), stream: None }
+    }
+
+    pub fn with_stream(mut self, sink: GenSink) -> Self {
+        self.stream = Some(sink);
+        self
+    }
+}
+
+/// How a generation request ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GenStatus {
+    /// Decoded to its token budget (or the model's `max_seq`).
+    Complete,
+    /// Invalid prompt (empty or over `max_seq`) — rejected at the
+    /// door, excluded from completion/latency metrics.
+    Rejected,
+    /// Shed by the admission queue (queue full) — retry later.
+    Busy,
 }
 
 /// Completed generation.
@@ -112,9 +196,10 @@ pub struct GenRequest {
 pub struct GenResponse {
     pub id: u64,
     pub prompt_len: usize,
+    pub status: GenStatus,
     /// Generated tokens (length ≤ `max_new_tokens`; shorter only when
-    /// the model's `max_seq` cut generation off, zero when the prompt
-    /// was empty or over `max_seq` — the request is rejected whole).
+    /// the model's `max_seq` cut generation off, empty on `Rejected`
+    /// and `Busy`).
     pub tokens: Vec<usize>,
     /// Decode steps this sequence ran through the engine (prefill not
     /// counted: the first token comes from the prefill logits).
@@ -157,24 +242,25 @@ enum DispatchMsg {
     Shutdown,
 }
 
-enum GenMsg {
-    Request(GenRequest),
-    Shutdown,
-}
-
-/// The coordinator server.
+/// The coordinator server. `Sync`: the submit side is lock-free mpsc
+/// and the response receivers sit behind mutexes, so one `Server` can
+/// be shared across connection-handler threads (the TCP front-end
+/// does exactly that).
 pub struct Server {
     dispatch_tx: mpsc::Sender<DispatchMsg>,
-    resp_rx: mpsc::Receiver<AttnResponse>,
+    resp_rx: Mutex<mpsc::Receiver<AttnResponse>>,
     pub metrics: Arc<Metrics>,
     pub cache: Arc<BasisCache>,
     /// The shared batched attention engine all workers execute through.
     pub engine: Arc<BatchedEngine>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    gen_tx: Option<mpsc::Sender<GenMsg>>,
-    gen_resp_rx: Option<mpsc::Receiver<GenResponse>>,
+    gen_queue: Option<Arc<AdmissionQueue>>,
+    gen_resp_tx: Option<mpsc::Sender<GenResponse>>,
+    gen_resp_rx: Option<Mutex<mpsc::Receiver<GenResponse>>>,
     gen_scheduler: Option<std::thread::JoinHandle<()>>,
+    /// The generation model's `max_seq` (door validation bound).
+    gen_max_seq: usize,
     running: Arc<AtomicBool>,
 }
 
@@ -189,41 +275,44 @@ impl Server {
         let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
         let (resp_tx, resp_rx) = mpsc::channel::<AttnResponse>();
 
+        // The generation admission queue is created before the
+        // dispatcher so the dispatcher can kick it whenever batches
+        // are flushed (event-driven wakeup for the scheduler's lane).
+        let gen_queue: Option<Arc<AdmissionQueue>> =
+            cfg.gen.as_ref().map(|g| Arc::new(AdmissionQueue::new(g.admission, metrics.clone())));
+
         // Dispatcher: route + batch.
         let router = Router::new(cfg.router);
         let bcfg = cfg.batcher;
         let running_d = running.clone();
         let metrics_d = metrics.clone();
+        let queue_d = gen_queue.clone();
         let dispatcher = std::thread::spawn(move || {
             let mut batcher = DynamicBatcher::new(bcfg);
+            let kick = |n: usize| {
+                if n > 0 {
+                    if let Some(q) = &queue_d {
+                        q.kick();
+                    }
+                }
+            };
             loop {
                 let timeout = batcher.next_deadline().unwrap_or(bcfg.max_wait);
                 match dispatch_rx.recv_timeout(timeout) {
                     Ok(DispatchMsg::Request(req)) => {
-                        Metrics::incr(&metrics_d.requests_submitted);
-                        let backend = router.route(req.seq_len, req.bounded_entries);
-                        let bucket = router.bucket(req.seq_len);
-                        if let Some(batch) = batcher.push(backend, bucket, req) {
-                            let _ = batch_tx.send(batch);
-                        }
+                        kick(handle_request(&mut batcher, &router, &metrics_d, req, &batch_tx));
                     }
                     Ok(DispatchMsg::Shutdown) => {
-                        for b in batcher.flush(true) {
-                            let _ = batch_tx.send(b);
-                        }
+                        kick(send_batches(batcher.flush(true), &batch_tx));
                         break;
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {
-                        for b in batcher.flush(false) {
-                            let _ = batch_tx.send(b);
-                        }
+                        kick(send_batches(batcher.flush(false), &batch_tx));
                     }
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
                 if !running_d.load(Ordering::Relaxed) {
-                    for b in batcher.flush(true) {
-                        let _ = batch_tx.send(b);
-                    }
+                    kick(send_batches(batcher.flush(true), &batch_tx));
                     break;
                 }
             }
@@ -266,23 +355,24 @@ impl Server {
         // lockstep through the engine, interleaved with batched prefill
         // of new arrivals — and, via the merge lane, with flushed
         // attention batches.
-        let (gen_tx, gen_resp_rx, gen_scheduler) = match cfg.gen {
+        let gen_max_seq = cfg.gen.as_ref().map(|g| g.model.cfg.max_seq).unwrap_or(0);
+        let (gen_resp_tx, gen_resp_rx, gen_scheduler) = match cfg.gen {
             Some(gen_cfg) => {
-                let (gtx, grx) = mpsc::channel::<GenMsg>();
                 let (rtx, rrx) = mpsc::channel::<GenResponse>();
                 let engine_g = engine.clone();
                 let metrics_g = metrics.clone();
+                let queue_g = gen_queue.clone().unwrap();
                 let lane = GenLane {
                     batch_rx: batch_rx.clone(),
                     attn_tx: resp_tx.clone(),
                     router: Router::new(cfg.router),
                     lowrank_degree: cfg.lowrank_degree,
-                    workers_present: worker_count > 0,
                 };
+                let rtx_sched = rtx.clone();
                 let handle = std::thread::spawn(move || {
-                    generation_loop(gen_cfg, grx, rtx, &engine_g, &metrics_g, lane);
+                    generation_loop(gen_cfg, &queue_g, rtx_sched, &engine_g, &metrics_g, lane);
                 });
-                (Some(gtx), Some(rrx), Some(handle))
+                (Some(rtx), Some(Mutex::new(rrx)), Some(handle))
             }
             None => (None, None, None),
         };
@@ -290,15 +380,17 @@ impl Server {
 
         Server {
             dispatch_tx,
-            resp_rx,
+            resp_rx: Mutex::new(resp_rx),
             metrics,
             cache,
             engine,
             dispatcher: Some(dispatcher),
             workers,
-            gen_tx,
+            gen_queue,
+            gen_resp_tx,
             gen_resp_rx,
             gen_scheduler,
+            gen_max_seq,
             running,
         }
     }
@@ -310,30 +402,84 @@ impl Server {
 
     /// Collect `n` responses (blocking).
     pub fn collect(&self, n: usize) -> Vec<AttnResponse> {
-        (0..n).filter_map(|_| self.resp_rx.recv().ok()).collect()
+        let rx = self.resp_rx.lock().unwrap();
+        (0..n).filter_map(|_| rx.recv().ok()).collect()
     }
 
-    /// Submit a generation request (non-blocking). Panics if the
-    /// server was started without a [`GenConfig`].
+    /// Receive one attention response, waiting at most `timeout` (the
+    /// network front-end's response pump).
+    pub fn recv_attn_timeout(&self, timeout: Duration) -> Option<AttnResponse> {
+        self.resp_rx.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    /// Submit a generation request (non-blocking). Invalid prompts are
+    /// rejected at the door and a full admission queue sheds with
+    /// busy — in both cases the terminal answer (channel response, or
+    /// event for sinked requests) is produced here, immediately; the
+    /// request never occupies a concurrency slot and never touches the
+    /// completion or latency metrics. Panics if the server was started
+    /// without a [`GenConfig`].
     pub fn submit_generate(&self, req: GenRequest) {
-        let tx = self.gen_tx.as_ref().expect("ServerConfig.gen required for generation");
+        let queue = self.gen_queue.as_ref().expect("ServerConfig.gen required for generation");
         Metrics::incr(&self.metrics.gen_requests);
-        let _ = tx.send(GenMsg::Request(req));
+        if req.prompt.is_empty() || req.prompt.len() > self.gen_max_seq {
+            Metrics::incr(&self.metrics.gen_rejected);
+            self.answer_terminal(&req, GenStatus::Rejected);
+            return;
+        }
+        if let Err(req) = queue.submit(req) {
+            // Shed (queue full): explicit busy, never a silent drop.
+            // `shed_requests` was counted by the queue.
+            self.answer_terminal(&req, GenStatus::Busy);
+        }
     }
 
-    /// Collect `n` completed generations (blocking). Panics if the
-    /// server was started without a [`GenConfig`].
+    /// Deliver a door-side terminal answer (rejected / busy).
+    fn answer_terminal(&self, req: &GenRequest, status: GenStatus) {
+        match (&req.stream, status) {
+            (Some(sink), GenStatus::Rejected) => sink.emit(&GenEvent::Rejected { id: req.id }),
+            (Some(sink), _) => sink.emit(&GenEvent::Busy { id: req.id }),
+            (None, status) => {
+                if let Some(tx) = &self.gen_resp_tx {
+                    let _ = tx.send(GenResponse {
+                        id: req.id,
+                        prompt_len: req.prompt.len(),
+                        status,
+                        tokens: Vec::new(),
+                        decode_steps: 0,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Collect `n` completed generations (blocking). Sinked requests
+    /// answer through their [`GenSink`] and never appear here. Panics
+    /// if the server was started without a [`GenConfig`].
     pub fn collect_generations(&self, n: usize) -> Vec<GenResponse> {
         let rx = self.gen_resp_rx.as_ref().expect("ServerConfig.gen required for generation");
+        let rx = rx.lock().unwrap();
         (0..n).filter_map(|_| rx.recv().ok()).collect()
     }
 
     /// Graceful shutdown: flush, finish in-flight generations, join.
-    pub fn shutdown(mut self) -> Arc<Metrics> {
+    pub fn shutdown(self) -> Arc<Metrics> {
+        let metrics = self.metrics.clone();
+        drop(self); // Drop does the actual teardown (idempotent).
+        metrics
+    }
+}
+
+impl Drop for Server {
+    /// Graceful teardown (also the body of [`Server::shutdown`]):
+    /// flush pending batches, let the scheduler drain queued and
+    /// in-flight generations, join every thread. Safe to run on an
+    /// already-shut-down server — all steps are idempotent.
+    fn drop(&mut self) {
         self.running.store(false, Ordering::Relaxed);
         let _ = self.dispatch_tx.send(DispatchMsg::Shutdown);
-        if let Some(tx) = self.gen_tx.take() {
-            let _ = tx.send(GenMsg::Shutdown);
+        if let Some(q) = &self.gen_queue {
+            q.shutdown();
         }
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -346,8 +492,40 @@ impl Server {
         if let Some(g) = self.gen_scheduler.take() {
             let _ = g.join();
         }
-        self.metrics.clone()
     }
+}
+
+/// Route, batch, and flush one request; returns the number of batches
+/// sent downstream. Flushing **here** — after every push — is the fix
+/// for the dispatcher's flush-starvation bug: the old loop flushed due
+/// groups only when `recv_timeout` timed out, so a steady request
+/// stream (which never lets the recv time out) held a due batch in
+/// another bucket hostage until the stream stopped. Now a due group is
+/// emitted as soon as any request arrives past its deadline.
+fn handle_request(
+    batcher: &mut DynamicBatcher,
+    router: &Router,
+    metrics: &Metrics,
+    req: AttnRequest,
+    batch_tx: &mpsc::Sender<Batch>,
+) -> usize {
+    Metrics::incr(&metrics.requests_submitted);
+    let backend = router.route(req.seq_len, req.bounded_entries);
+    let bucket = router.bucket(req.seq_len);
+    let mut sent = 0;
+    if let Some(batch) = batcher.push(backend, bucket, req) {
+        let _ = batch_tx.send(batch);
+        sent += 1;
+    }
+    sent + send_batches(batcher.flush(false), batch_tx)
+}
+
+fn send_batches(batches: Vec<Batch>, batch_tx: &mpsc::Sender<Batch>) -> usize {
+    let n = batches.len();
+    for b in batches {
+        let _ = batch_tx.send(b);
+    }
+    n
 }
 
 /// Convert one flushed batch into engine prefill jobs plus the
@@ -434,10 +612,6 @@ struct GenLane {
     attn_tx: mpsc::Sender<AttnResponse>,
     router: Router,
     lowrank_degree: usize,
-    /// Whether attention worker threads exist. With workers the idle
-    /// scheduler blocks on `gen_rx` (workers own the attention queue);
-    /// without them it polls so attention traffic is never starved.
-    workers_present: bool,
 }
 
 impl GenLane {
@@ -458,11 +632,6 @@ impl GenLane {
     }
 }
 
-/// How long the idle scheduler waits for generation work before
-/// polling the attention queue (only matters when `workers: 0` — with
-/// workers present they drain the queue themselves).
-const GEN_IDLE_POLL: Duration = Duration::from_millis(2);
-
 /// One in-flight generation, tracked next to its [`DecodeSession`]
 /// (parallel vectors: `Transformer::decode_step` wants the sessions as
 /// one contiguous `&mut [DecodeSession]`).
@@ -473,6 +642,18 @@ struct GenFlight {
     generated: Vec<usize>,
     decode_steps: usize,
     submitted_at: Instant,
+    stream: Option<GenSink>,
+}
+
+impl GenFlight {
+    /// Record one generated token (+ stream it when sinked).
+    fn push_token(&mut self, token: usize, metrics: &Metrics) {
+        if let Some(sink) = &self.stream {
+            sink.emit(&GenEvent::Token { id: self.id, index: self.generated.len(), token });
+        }
+        self.generated.push(token);
+        Metrics::incr(&metrics.gen_tokens);
+    }
 }
 
 fn argmax(xs: &[f64]) -> usize {
@@ -485,15 +666,17 @@ fn argmax(xs: &[f64]) -> usize {
     best
 }
 
-/// The generation scheduler body: admit → prefill (batched) → one
-/// decode step for all in-flight sessions (merging any flushed
-/// attention batches into the same engine submit) → retire finished;
-/// repeat. On shutdown it stops admitting, decodes the remaining
-/// sequences to completion, and drains the attention queue (flush
-/// semantics, like the worker path).
+/// The generation scheduler body: admit (token-budget policy) →
+/// prefill (batched) → one decode step for all in-flight sessions
+/// (merging any flushed attention batches into the same engine
+/// submit) → retire finished; repeat. Idle, it parks on the admission
+/// queue's condvar — arrivals, dispatcher kicks (flushed attention
+/// batches), and shutdown wake it. On shutdown it drains the waiting
+/// line, decodes the remaining sequences to completion, and drains
+/// the attention queue (flush semantics, like the worker path).
 fn generation_loop(
     cfg: GenConfig,
-    gen_rx: mpsc::Receiver<GenMsg>,
+    queue: &AdmissionQueue,
     resp_tx: mpsc::Sender<GenResponse>,
     engine: &BatchedEngine,
     metrics: &Metrics,
@@ -505,133 +688,98 @@ fn generation_loop(
     let max_seq = model.cfg.max_seq;
     let mut sessions: Vec<DecodeSession> = Vec::new();
     let mut flights: Vec<GenFlight> = Vec::new();
-    let mut shutting = false;
+    let mut kick_seen = 0u64;
+    let mut steps_since_admit = 0usize;
 
     let respond = |flight: &GenFlight, resp_tx: &mpsc::Sender<GenResponse>| {
         Metrics::incr(&metrics.gen_completed);
         metrics.record_gen_e2e(flight.submitted_at.elapsed());
-        let _ = resp_tx.send(GenResponse {
-            id: flight.id,
-            prompt_len: flight.prompt_len,
-            tokens: flight.generated.clone(),
-            decode_steps: flight.decode_steps,
-        });
+        match &flight.stream {
+            Some(sink) => sink.emit(&GenEvent::Done {
+                id: flight.id,
+                prompt_len: flight.prompt_len,
+                tokens: flight.generated.clone(),
+                decode_steps: flight.decode_steps,
+            }),
+            None => {
+                let _ = resp_tx.send(GenResponse {
+                    id: flight.id,
+                    prompt_len: flight.prompt_len,
+                    status: GenStatus::Complete,
+                    tokens: flight.generated.clone(),
+                    decode_steps: flight.decode_steps,
+                });
+            }
+        }
     };
 
     loop {
-        // Admit new arrivals. When idle (nothing to decode) wait
-        // briefly, serving any attention batches the dispatcher flushes
-        // meanwhile; while decoding, drain without waiting so in-flight
-        // sequences keep stepping — this is what interleaves prefill
-        // with decode.
-        let mut arrivals: Vec<GenRequest> = Vec::new();
-        if sessions.is_empty() && !shutting {
-            if lane.workers_present {
-                // Workers own the attention queue; sleep until there is
-                // generation work (no idle polling).
-                match gen_rx.recv() {
-                    Ok(GenMsg::Request(r)) => arrivals.push(r),
-                    Ok(GenMsg::Shutdown) | Err(_) => shutting = true,
-                }
-            } else {
-                match gen_rx.recv_timeout(GEN_IDLE_POLL) {
-                    Ok(GenMsg::Request(r)) => arrivals.push(r),
-                    Ok(GenMsg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        shutting = true
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        // Idle lane: execute any flushed attention
-                        // batches standalone (this lane is the only
-                        // executor when workers: 0).
-                        for batch in lane.drain_pending() {
-                            Metrics::add(
-                                &metrics.gen_lane_attn_requests,
-                                batch.requests.len() as u64,
-                            );
-                            execute_attn_batch(
-                                batch,
-                                &lane.router,
-                                lane.lowrank_degree,
-                                engine,
-                                metrics,
-                                &lane.attn_tx,
-                            );
-                        }
-                        continue;
-                    }
-                }
+        // Idle: park until there is work (no timer polling). A kick
+        // with no generation work means the dispatcher flushed
+        // attention batches — serve them standalone (this lane is the
+        // only executor when workers: 0; with workers the try_lock in
+        // drain_pending defers to them).
+        if sessions.is_empty() {
+            match queue.wait_for_work(&mut kick_seen) {
+                Wake::Shutdown => break,
+                Wake::Work => {}
             }
-        }
-        while sessions.len() + arrivals.len() < max_concurrent {
-            match gen_rx.try_recv() {
-                Ok(GenMsg::Request(r)) => arrivals.push(r),
-                Ok(GenMsg::Shutdown) => {
-                    shutting = true;
-                    break;
-                }
-                Err(_) => break,
+            for batch in lane.drain_pending() {
+                Metrics::add(&metrics.gen_lane_attn_requests, batch.requests.len() as u64);
+                execute_attn_batch(
+                    batch,
+                    &lane.router,
+                    lane.lowrank_degree,
+                    engine,
+                    metrics,
+                    &lane.attn_tx,
+                );
             }
         }
 
+        // Admission: the token-budget policy decides how many waiting
+        // requests join this wave (prompts were validated at the door,
+        // so every admitted request prefills cleanly).
+        let running_tokens: usize = sessions.iter().map(|s| s.len()).sum::<usize>()
+            + flights.iter().map(|f| f.max_new.saturating_sub(f.generated.len())).sum::<usize>();
+        let slots = max_concurrent.saturating_sub(sessions.len());
+        let arrivals = queue.admit(sessions.len(), running_tokens, steps_since_admit, slots);
+
         if !arrivals.is_empty() {
-            // Reject invalid prompts whole; batch-prefill the rest
-            // through the engine (one prefill-lane submit per layer
-            // for ALL new arrivals together).
-            let mut admitted: Vec<GenRequest> = Vec::new();
-            for r in arrivals {
-                if r.prompt.is_empty() || r.prompt.len() > max_seq {
-                    respond(
-                        &GenFlight {
-                            id: r.id,
-                            prompt_len: r.prompt.len(),
-                            max_new: 0,
-                            generated: Vec::new(),
-                            decode_steps: 0,
-                            submitted_at: r.submitted_at,
-                        },
-                        &resp_tx,
-                    );
-                    continue;
+            steps_since_admit = 0;
+            // Batch-prefill the wave through the engine (one
+            // prefill-lane submit per layer for ALL arrivals together).
+            let prompts: Vec<Vec<usize>> = arrivals.iter().map(|r| r.prompt.clone()).collect();
+            let prefilled = model.prefill_batch(&prompts, &backend, engine);
+            for (r, (mut sess, last_logits)) in arrivals.into_iter().zip(prefilled) {
+                sess.id = r.id;
+                let mut flight = GenFlight {
+                    id: r.id,
+                    prompt_len: r.prompt.len(),
+                    max_new: r.max_new_tokens,
+                    generated: Vec::new(),
+                    decode_steps: 0,
+                    submitted_at: r.submitted_at,
+                    stream: r.stream,
+                };
+                if flight.max_new >= 1 {
+                    // The first token falls out of the prefill
+                    // logits — no decode step needed for it.
+                    flight.push_token(argmax(&last_logits), metrics);
                 }
-                admitted.push(r);
-            }
-            if !admitted.is_empty() {
-                let prompts: Vec<Vec<usize>> =
-                    admitted.iter().map(|r| r.prompt.clone()).collect();
-                let prefilled = model.prefill_batch(&prompts, &backend, engine);
-                for (r, (mut sess, last_logits)) in admitted.into_iter().zip(prefilled) {
-                    sess.id = r.id;
-                    let mut flight = GenFlight {
-                        id: r.id,
-                        prompt_len: r.prompt.len(),
-                        max_new: r.max_new_tokens,
-                        generated: Vec::new(),
-                        decode_steps: 0,
-                        submitted_at: r.submitted_at,
-                    };
-                    if flight.max_new >= 1 {
-                        // The first token falls out of the prefill
-                        // logits — no decode step needed for it.
-                        flight.generated.push(argmax(&last_logits));
-                        Metrics::incr(&metrics.gen_tokens);
-                    }
-                    if flight.generated.len() >= flight.max_new || sess.len() >= max_seq {
-                        // Done straight out of prefill: release the KV
-                        // bytes the prefill just accounted.
-                        sess.retire(metrics);
-                        respond(&flight, &resp_tx);
-                    } else {
-                        sessions.push(sess);
-                        flights.push(flight);
-                    }
+                if flight.generated.len() >= flight.max_new || sess.len() >= max_seq {
+                    // Done straight out of prefill: release the KV
+                    // bytes the prefill just accounted.
+                    sess.retire(metrics);
+                    respond(&flight, &resp_tx);
+                } else {
+                    sessions.push(sess);
+                    flights.push(flight);
                 }
             }
         }
 
         if sessions.is_empty() {
-            if shutting {
-                break;
-            }
             continue;
         }
 
@@ -654,6 +802,7 @@ fn generation_loop(
 
         // One decode step for every in-flight sequence: feed each its
         // latest generated token, get the next token's logits.
+        steps_since_admit += 1;
         let next: Vec<usize> = flights.iter().map(|f| *f.generated.last().unwrap()).collect();
         let (logits, rider_outs) =
             model.decode_step_with_jobs(&mut sessions, &next, engine, rider_jobs);
@@ -668,8 +817,7 @@ fn generation_loop(
         for i in (0..flights.len()).rev() {
             let f = &mut flights[i];
             f.decode_steps += 1;
-            f.generated.push(argmax(&logits[i]));
-            Metrics::incr(&metrics.gen_tokens);
+            f.push_token(argmax(&logits[i]), metrics);
             if f.generated.len() >= f.max_new || sessions[i].len() >= max_seq {
                 sessions[i].retire(metrics);
                 respond(&flights[i], &resp_tx);
@@ -763,10 +911,26 @@ mod tests {
 
     fn gen_server(backend: AttentionBackend, model: Arc<Transformer>) -> Server {
         Server::start(ServerConfig {
-            gen: Some(GenConfig { model, backend, max_concurrent: 4 }),
+            gen: Some(GenConfig {
+                model,
+                backend,
+                max_concurrent: 4,
+                admission: AdmissionConfig::default(),
+            }),
             cache_capacity: 256,
             ..Default::default()
         })
+    }
+
+    fn req(id: u64, n: usize) -> AttnRequest {
+        AttnRequest {
+            id,
+            seq_len: n,
+            d_model: 8,
+            bounded_entries: false,
+            payload: Payload::Synthetic { seed: id },
+            submitted_at: Instant::now(),
+        }
     }
 
     fn tiny_model(seed: u64) -> Arc<Transformer> {
@@ -899,12 +1063,7 @@ mod tests {
         let prompts: [&[usize]; 3] = [&[1, 2, 3, 4], &[9, 8, 7], &[5, 5, 5, 5, 5, 5]];
         let max_new = 6;
         for (i, p) in prompts.iter().enumerate() {
-            server.submit_generate(GenRequest {
-                id: i as u64,
-                prompt: p.to_vec(),
-                max_new_tokens: max_new,
-                submitted_at: Instant::now(),
-            });
+            server.submit_generate(GenRequest::new(i as u64, p.to_vec(), max_new));
         }
         let mut resps = server.collect_generations(prompts.len());
         resps.sort_by_key(|r| r.id);
@@ -936,12 +1095,7 @@ mod tests {
     fn conv_generation_decodes_through_cached_bases() {
         let model = tiny_model(42);
         let server = gen_server(AttentionBackend::ConvStrided(4), model.clone());
-        server.submit_generate(GenRequest {
-            id: 0,
-            prompt: vec![1, 2, 3, 4, 5, 6, 7, 8],
-            max_new_tokens: 5,
-            submitted_at: Instant::now(),
-        });
+        server.submit_generate(GenRequest::new(0, vec![1, 2, 3, 4, 5, 6, 7, 8], 5));
         let resps = server.collect_generations(1);
         assert_eq!(resps[0].tokens.len(), 5);
         let s = server.shutdown().snapshot();
@@ -970,16 +1124,16 @@ mod tests {
             workers: 0,
             cache_capacity: 16,
             lowrank_degree: 2,
-            gen: Some(GenConfig { model: model.clone(), backend: AttentionBackend::Exact, max_concurrent: 2 }),
+            gen: Some(GenConfig {
+                model: model.clone(),
+                backend: AttentionBackend::Exact,
+                max_concurrent: 2,
+                admission: AdmissionConfig::default(),
+            }),
         });
         // A long-ish generation keeps the decode loop hot while the
         // attention requests arrive.
-        server.submit_generate(GenRequest {
-            id: 99,
-            prompt: vec![1, 2, 3],
-            max_new_tokens: 12,
-            submitted_at: Instant::now(),
-        });
+        server.submit_generate(GenRequest::new(99, vec![1, 2, 3], 12));
         let mut rng = Rng::seeded(451);
         let (n, d) = (24, 8);
         let mut oracles = Vec::new();
@@ -1024,32 +1178,150 @@ mod tests {
         let server = gen_server(AttentionBackend::Exact, model.clone());
         // Asks for more tokens than max_seq leaves room for.
         let prompt: Vec<usize> = (0..60).map(|i| (i % 11) + 1).collect();
-        server.submit_generate(GenRequest {
-            id: 0,
-            prompt: prompt.clone(),
-            max_new_tokens: 50,
-            submitted_at: Instant::now(),
-        });
+        server.submit_generate(GenRequest::new(0, prompt.clone(), 50));
         // Empty and over-long prompts are rejected whole.
-        server.submit_generate(GenRequest {
-            id: 1,
-            prompt: vec![],
-            max_new_tokens: 4,
-            submitted_at: Instant::now(),
-        });
-        server.submit_generate(GenRequest {
-            id: 2,
-            prompt: vec![1; max_seq + 1],
-            max_new_tokens: 4,
-            submitted_at: Instant::now(),
-        });
+        server.submit_generate(GenRequest::new(1, vec![], 4));
+        server.submit_generate(GenRequest::new(2, vec![1; max_seq + 1], 4));
         let mut resps = server.collect_generations(3);
         resps.sort_by_key(|r| r.id);
         server.shutdown();
         // 60-token prompt: 1 prefill token + (64−60) steps = 5 tokens.
         assert_eq!(resps[0].tokens.len(), max_seq - prompt.len() + 1);
+        assert_eq!(resps[0].status, GenStatus::Complete);
         assert!(resps[1].tokens.is_empty());
         assert!(resps[2].tokens.is_empty());
+        assert_eq!(resps[1].status, GenStatus::Rejected);
+        assert_eq!(resps[2].status, GenStatus::Rejected);
+    }
+
+    #[test]
+    fn rejections_stay_out_of_completion_metrics() {
+        // Regression: rejected generations used to flow through the
+        // same respond path as completions, inflating `gen_completed`
+        // and the gen-e2e latency series, and they occupied admission
+        // slots until their (empty) response was built. Now they are
+        // refused at the door: `gen_rejected` counts them, everything
+        // else stays clean.
+        let model = tiny_model(46);
+        let server = gen_server(AttentionBackend::Exact, model);
+        server.submit_generate(GenRequest::new(0, vec![1, 2, 3], 4));
+        server.submit_generate(GenRequest::new(1, vec![], 4)); // reject: empty
+        server.submit_generate(GenRequest::new(2, vec![1; 65], 4)); // reject: > max_seq
+        server.submit_generate(GenRequest::new(3, vec![4, 5], 4));
+        server.submit_generate(GenRequest::new(4, vec![], 4)); // reject: empty
+        let mut resps = server.collect_generations(5);
+        resps.sort_by_key(|r| r.id);
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.gen_requests, 5);
+        assert_eq!(s.gen_completed, 2, "only real generations count as completed");
+        assert_eq!(s.gen_rejected, 3);
+        assert_eq!(s.gen_e2e.count, 2, "rejections must not pollute the latency series");
+        assert_eq!(s.gen_tokens, 2 * 4);
+        for r in &resps {
+            match r.id {
+                1 | 2 | 4 => {
+                    assert_eq!(r.status, GenStatus::Rejected);
+                    assert!(r.tokens.is_empty());
+                }
+                _ => {
+                    assert_eq!(r.status, GenStatus::Complete);
+                    assert_eq!(r.tokens.len(), 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_sink_receives_tokens_then_done() {
+        let model = tiny_model(47);
+        let server = gen_server(AttentionBackend::Exact, model.clone());
+        let events: Arc<Mutex<Vec<GenEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let ev = events.clone();
+        let sink = GenSink::new(move |e| ev.lock().unwrap().push(e.clone()));
+        server.submit_generate(GenRequest::new(5, vec![1, 2, 3], 6).with_stream(sink));
+        // Sinked requests answer through events, not the channel —
+        // shutdown drains the scheduler first.
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.gen_completed, 1);
+        let evs = events.lock().unwrap();
+        let toks: Vec<(usize, usize)> = evs
+            .iter()
+            .filter_map(|e| match e {
+                GenEvent::Token { index, token, .. } => Some((*index, *token)),
+                _ => None,
+            })
+            .collect();
+        let want = generate_by_reprefill(&model, &[1, 2, 3], 6, &AttentionBackend::Exact);
+        assert_eq!(toks.iter().map(|t| t.0).collect::<Vec<_>>(), (0..6).collect::<Vec<_>>());
+        assert_eq!(toks.iter().map(|t| t.1).collect::<Vec<_>>(), want);
+        match evs.last().unwrap() {
+            GenEvent::Done { id, tokens, .. } => {
+                assert_eq!(*id, 5);
+                assert_eq!(tokens, &want, "Done must repeat the streamed tokens");
+            }
+            other => panic!("expected terminal Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn token_budget_admission_serves_all_requests_in_waves() {
+        // Tight budgets force multiple admission waves; every request
+        // must still complete and the queue gauge must drain to zero.
+        let model = tiny_model(48);
+        let server = Server::start(ServerConfig {
+            gen: Some(GenConfig {
+                model,
+                backend: AttentionBackend::Exact,
+                max_concurrent: 8,
+                admission: AdmissionConfig {
+                    max_batch_prefill_tokens: 8,
+                    max_batch_total_tokens: 24,
+                    waiting_served_ratio: 1.0,
+                    max_waiting_steps: 1,
+                    max_queue: 64,
+                },
+            }),
+            cache_capacity: 64,
+            ..Default::default()
+        });
+        for i in 0..10u64 {
+            server.submit_generate(GenRequest::new(i, vec![1, 2, 3, 4], 4));
+        }
+        let resps = server.collect_generations(10);
+        assert_eq!(resps.len(), 10);
+        assert!(resps.iter().all(|r| r.status == GenStatus::Complete && r.tokens.len() == 4));
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.gen_completed, 10);
+        assert_eq!(s.shed_requests, 0);
+        assert_eq!(s.queue_depth, 0, "admission gauge must drain to zero");
+    }
+
+    #[test]
+    fn full_admission_queue_sheds_with_busy() {
+        let model = tiny_model(49);
+        let server = Server::start(ServerConfig {
+            gen: Some(GenConfig {
+                model,
+                backend: AttentionBackend::Exact,
+                max_concurrent: 1,
+                admission: AdmissionConfig { max_queue: 1, ..Default::default() },
+            }),
+            ..Default::default()
+        });
+        // Burst far past queue + concurrency: some must shed, every id
+        // must still get exactly one (terminal) response.
+        let n = 8u64;
+        for i in 0..n {
+            server.submit_generate(GenRequest::new(i, vec![1, 2, 3], 8));
+        }
+        let resps = server.collect_generations(n as usize);
+        let busy = resps.iter().filter(|r| r.status == GenStatus::Busy).count() as u64;
+        let done = resps.iter().filter(|r| r.status == GenStatus::Complete).count() as u64;
+        assert_eq!(busy + done, n, "every request answered, none silently dropped");
+        let s = server.shutdown().snapshot();
+        assert!(s.shed_requests >= 1, "burst of {n} through a 1-deep queue must shed");
+        assert_eq!(s.shed_requests, busy);
+        assert_eq!(s.gen_completed, done);
     }
 
     #[test]
@@ -1060,16 +1332,92 @@ mod tests {
         let model = tiny_model(44);
         let server = gen_server(AttentionBackend::Exact, model);
         for i in 0..5u64 {
-            server.submit_generate(GenRequest {
-                id: i,
-                prompt: vec![1, 2, 3],
-                max_new_tokens: 8,
-                submitted_at: Instant::now(),
-            });
+            server.submit_generate(GenRequest::new(i, vec![1, 2, 3], 8));
         }
         let s = server.shutdown().snapshot();
         assert_eq!(s.gen_completed, 5);
         assert_eq!(s.gen_tokens, 5 * 8);
+    }
+
+    #[test]
+    fn dispatcher_flushes_due_groups_on_push() {
+        // Regression (flush starvation): the old dispatcher flushed due
+        // groups only in the `recv_timeout` Timeout arm, so a steady
+        // request stream — which never lets the recv time out — starved
+        // a lone due batch in another bucket indefinitely. The
+        // per-request body must emit due groups on every push.
+        let router = Router::new(RouterConfig { exact_below: 64, ..Default::default() });
+        let metrics = Metrics::new();
+        let mut batcher = DynamicBatcher::new(BatcherConfig {
+            max_batch: 64, // never fills on this traffic
+            max_wait: Duration::from_millis(5),
+        });
+        let (tx, rx) = mpsc::channel();
+        // Lone conv-bucket request (seq 96)…
+        handle_request(&mut batcher, &router, &metrics, req(1000, 96), &tx);
+        // …then a steady exact-bucket stream (seq 32), each arrival
+        // well inside its own deadline, running past the lone
+        // request's max_wait.
+        for i in 0..5 {
+            std::thread::sleep(Duration::from_millis(2));
+            handle_request(&mut batcher, &router, &metrics, req(i, 32), &tx);
+        }
+        let batches: Vec<Batch> = rx.try_iter().collect();
+        assert!(
+            batches.iter().any(|b| b.requests.iter().any(|r| r.id == 1000)),
+            "due conv-bucket batch was starved by the exact-bucket stream"
+        );
+    }
+
+    #[test]
+    fn steady_stream_does_not_starve_other_bucket() {
+        // Server-level version of the starvation regression: a lone
+        // conv-bucket request under a continuous exact-bucket stream
+        // must complete within its max_wait (plus slack), not when the
+        // stream stops.
+        let server = Server::start(ServerConfig {
+            router: RouterConfig { exact_below: 64, ..Default::default() },
+            batcher: BatcherConfig {
+                max_batch: 1000, // never fills: only flushing can emit
+                max_wait: Duration::from_millis(3),
+            },
+            workers: 2,
+            cache_capacity: 16,
+            lowrank_degree: 2,
+            gen: None,
+        });
+        let t0 = Instant::now();
+        server.submit(req(9999, 96)); // lone conv-bucket request
+        let stream_for = Duration::from_millis(60);
+        let mut streamed = 0u64;
+        let mut lone_done_at: Option<Duration> = None;
+        while t0.elapsed() < stream_for {
+            server.submit(req(streamed, 32));
+            streamed += 1;
+            std::thread::sleep(Duration::from_micros(200));
+            while let Ok(r) = server.resp_rx.lock().unwrap().try_recv() {
+                if r.id == 9999 && lone_done_at.is_none() {
+                    lone_done_at = Some(t0.elapsed());
+                }
+            }
+        }
+        let done_at = match lone_done_at {
+            Some(d) => d,
+            None => {
+                // Starved case: it only completes after the stream.
+                loop {
+                    let r = server.collect(1);
+                    if r.is_empty() || r[0].id == 9999 {
+                        break t0.elapsed();
+                    }
+                }
+            }
+        };
+        assert!(
+            done_at < Duration::from_millis(30),
+            "lone bucket starved: served after {done_at:?} under a {stream_for:?} stream"
+        );
+        server.shutdown();
     }
 
     #[test]

@@ -181,8 +181,7 @@ fn execute_grad_job_inner(
             // both writers below and the prefill path check), so this
             // reconstruction cannot fail.
             let local = FftPlanner::with_shared(Arc::clone(planner));
-            if let Ok((mut f_op, mut report)) = FOperator::from_cached(hit.post_basis, hit.d_tilde, local)
-            {
+            if let Ok((mut f_op, mut report)) = FOperator::from_cached(hit, local) {
                 Metrics::incr(&metrics.cache_hits);
                 Metrics::incr(&metrics.grad_cache_hits);
                 let (grad, loss) = grad_core(&p, &mut f_op);
@@ -373,9 +372,9 @@ fn execute_attn_backward_inner(
     // once per (record, layer, head) per step").
     if let Some(handle) = &basis {
         let local = FftPlanner::with_shared(Arc::clone(planner));
-        if let Ok((mut f_op, report)) =
-            FOperator::from_cached(handle.post_basis.clone(), handle.d_tilde.clone(), local)
-        {
+        // Hand the operator the handle itself (`Arc` clone) — zero
+        // copies of the O(k·n) basis floats per backward job.
+        if let Ok((mut f_op, report)) = FOperator::from_cached(Arc::clone(handle), local) {
             Metrics::incr(&metrics.step_basis_hits);
             let (dq, dk, dv) = attn_backward_core(&mut f_op, &q, &k, &v, &dout);
             return AttnBackwardOutput {
@@ -417,8 +416,7 @@ fn execute_attn_backward_inner(
     if let Some(key) = &key {
         if let Some(hit) = cache.get(key) {
             let local = FftPlanner::with_shared(Arc::clone(planner));
-            if let Ok((mut f_op, report)) = FOperator::from_cached(hit.post_basis, hit.d_tilde, local)
-            {
+            if let Ok((mut f_op, report)) = FOperator::from_cached(hit, local) {
                 Metrics::incr(&metrics.cache_hits);
                 Metrics::incr(&metrics.lm_backward_cache_hits);
                 let (dq, dk, dv) = attn_backward_core(&mut f_op, &q, &k, &v, &dout);

@@ -13,8 +13,10 @@ use super::naive::f_dense;
 use super::AttentionLossProblem;
 use crate::attention::{AttentionError, Mask};
 use crate::basis::{exp_transform, recover, KConvBasis, RecoverConfig};
+use crate::coordinator::CachedBasis;
 use crate::fft::FftPlanner;
 use crate::tensor::Matrix;
+use std::sync::Arc;
 
 /// Run report for observability / complexity accounting.
 #[derive(Clone, Copy, Debug, Default)]
@@ -40,11 +42,39 @@ pub struct FastGradientReport {
 /// a shared FFT planner while this module keeps the single-problem
 /// entry points.
 pub(crate) struct FOperator {
-    post_basis: KConvBasis,
-    d_tilde: Vec<f64>,
+    hold: BasisHold,
     d_inv: Vec<f64>,
     planner: FftPlanner,
     applies: usize,
+}
+
+/// How the operator owns its `(post_basis, d̃)` pair.
+///
+/// A fresh recovery owns its basis outright; a cache hit or a
+/// step-scoped training handle holds the **shared** resident entry
+/// (`Arc<CachedBasis>`) — zero copies of the `O(k·n)` basis floats per
+/// backward job, the serving cache and every consumer reading one
+/// allocation. Both variants are immutable after construction, so the
+/// apply paths are identical.
+enum BasisHold {
+    Owned(CachedBasis),
+    Shared(Arc<CachedBasis>),
+}
+
+impl BasisHold {
+    fn post_basis(&self) -> &KConvBasis {
+        match self {
+            BasisHold::Owned(c) => &c.post_basis,
+            BasisHold::Shared(c) => &c.post_basis,
+        }
+    }
+
+    fn d_tilde(&self) -> &[f64] {
+        match self {
+            BasisHold::Owned(c) => &c.d_tilde,
+            BasisHold::Shared(c) => &c.d_tilde,
+        }
+    }
 }
 
 impl FOperator {
@@ -102,38 +132,40 @@ impl FOperator {
             loss: 0.0,
         };
         let d_inv = d.iter().map(|&v| 1.0 / v).collect();
-        Ok((FOperator { post_basis: post, d_tilde: d, d_inv, planner, applies: 0 }, report))
+        let hold = BasisHold::Owned(CachedBasis { post_basis: post, d_tilde: d });
+        Ok((FOperator { hold, d_inv, planner, applies: 0 }, report))
     }
 
-    /// Rebuild the operator from a cached `(post_basis, d̃)` pair —
-    /// what a prefill job or an earlier gradient job left in the
-    /// engine's `BasisCache`. Skips recovery entirely; the normalizer
-    /// inverse is recomputed with the same float ops as
+    /// Rebuild the operator from a **shared** cached `(post_basis, d̃)`
+    /// entry — what a prefill job or an earlier gradient job left in
+    /// the engine's `BasisCache`, or the step-scoped handle a conv
+    /// training forward handed over. Skips recovery entirely and holds
+    /// the `Arc` itself (no copy of the `O(k·n)` basis floats); the
+    /// normalizer inverse is recomputed with the same float ops as
     /// [`Self::build_from_q`], so a cache hit is bit-identical to a
     /// fresh recovery of identical content.
     pub(crate) fn from_cached(
-        post_basis: KConvBasis,
-        d_tilde: Vec<f64>,
+        cached: Arc<CachedBasis>,
         planner: FftPlanner,
     ) -> Result<(Self, FastGradientReport), AttentionError> {
-        for (row, &val) in d_tilde.iter().enumerate() {
+        for (row, &val) in cached.d_tilde.iter().enumerate() {
             if !(val > 0.0) {
                 return Err(AttentionError::DegenerateNormalizer { row, value: val });
             }
         }
         let report = FastGradientReport {
-            basis_k: post_basis.k(),
+            basis_k: cached.post_basis.k(),
             recover_probes: 0,
             f_applies: 0,
             loss: 0.0,
         };
-        let d_inv = d_tilde.iter().map(|&v| 1.0 / v).collect();
-        Ok((FOperator { post_basis, d_tilde, d_inv, planner, applies: 0 }, report))
+        let d_inv = cached.d_tilde.iter().map(|&v| 1.0 / v).collect();
+        Ok((FOperator { hold: BasisHold::Shared(cached), d_inv, planner, applies: 0 }, report))
     }
 
     /// The cacheable halves: (post-exp basis, normalizer diagonal `D̃`).
     pub(crate) fn cacheable_parts(&self) -> (&KConvBasis, &[f64]) {
-        (&self.post_basis, &self.d_tilde)
+        (self.hold.post_basis(), self.hold.d_tilde())
     }
 
     /// `f·w` applications performed so far.
@@ -145,7 +177,7 @@ impl FOperator {
     /// `O(k·n·log n)` (Lemma C.10).
     fn apply(&mut self, w: &[f64]) -> Vec<f64> {
         self.applies += 1;
-        let mut y = self.post_basis.apply(&mut self.planner, w);
+        let mut y = self.hold.post_basis().apply(&mut self.planner, w);
         for (yi, di) in y.iter_mut().zip(&self.d_inv) {
             *yi *= di;
         }
@@ -159,7 +191,7 @@ impl FOperator {
     fn apply_transpose(&mut self, w: &[f64]) -> Vec<f64> {
         self.applies += 1;
         let scaled: Vec<f64> = w.iter().zip(&self.d_inv).map(|(x, di)| x * di).collect();
-        self.post_basis.apply_transpose(&mut self.planner, &scaled)
+        self.hold.post_basis().apply_transpose(&mut self.planner, &scaled)
     }
 
     /// `f·W` column-wise.
@@ -430,8 +462,9 @@ mod tests {
         let cfg = RecoverConfig::exact(18);
         let (mut fresh, _) = FOperator::build(&p, &x, &cfg).unwrap();
         let (basis, d_tilde) = fresh.cacheable_parts();
-        let (mut cached, _) =
-            FOperator::from_cached(basis.clone(), d_tilde.to_vec(), FftPlanner::new()).unwrap();
+        let shared =
+            Arc::new(CachedBasis { post_basis: basis.clone(), d_tilde: d_tilde.to_vec() });
+        let (mut cached, _) = FOperator::from_cached(shared, FftPlanner::new()).unwrap();
         let (g_fresh, l_fresh) = grad_core(&p, &mut fresh);
         let (g_cached, l_cached) = grad_core(&p, &mut cached);
         assert_eq!(max_abs_diff(&g_fresh, &g_cached), 0.0);

@@ -364,6 +364,47 @@ fn fast_train_lm_loss_curve_tracks_exact() {
 }
 
 #[test]
+fn cached_handle_backward_bitmatches_self_recovery() {
+    // Zero-copy cache handles: a backward served from a cached
+    // `Arc<CachedBasis>` (the `FOperator::from_cached` path — no copy
+    // of the O(k·n) basis floats) must be **bit-identical** to the
+    // cache-less backward that recovers the same operator from scratch.
+    // Three passes over one engine: cache-less reference, a cold
+    // `use_cache: true` pass that populates the cache, then a warm pass
+    // that must hit on every (layer, head) — all three bit-equal.
+    let m = oracle_model(4040, 16);
+    let mut rng = Rng::seeded(4041);
+    let tokens = random_tokens(16, 16, &mut rng);
+    let targets = random_tokens(16, 16, &mut rng);
+    let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+    let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
+    let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
+
+    let nocache = AttnBackwardMode::Fast(FastGradConfig {
+        recover: conv_basis::basis::RecoverConfig::exact(16),
+        use_cache: false,
+    });
+    let mut reference = m.zero_grads();
+    m.backward_with_engine(&rec, &dlogits, None, &mut reference, &engine, &nocache);
+
+    let cached = AttnBackwardMode::Fast(FastGradConfig::exact(16)); // use_cache: true
+    let mut cold = m.zero_grads();
+    m.backward_with_engine(&rec, &dlogits, None, &mut cold, &engine, &cached);
+    let snap = engine.metrics().snapshot();
+    assert_eq!(snap.lm_backward_cache_misses, 4, "cold pass recovers 2 layers × 2 heads");
+    assert_eq!(snap.lm_backward_cache_hits, 0);
+
+    let mut warm = m.zero_grads();
+    m.backward_with_engine(&rec, &dlogits, None, &mut warm, &engine, &cached);
+    let snap = engine.metrics().snapshot();
+    assert_eq!(snap.lm_backward_cache_hits, 4, "warm pass reuses every cached handle");
+    assert_eq!(snap.lm_backward_fallbacks, 0);
+
+    assert_grads_bit_identical(&reference, &cold, "cold-vs-selfrecovery");
+    assert_grads_bit_identical(&reference, &warm, "cached-handle-vs-selfrecovery");
+}
+
+#[test]
 fn fast_backward_recovery_failure_reports_grad_fallbacks() {
     // A hostile recovery budget (k_max = 0) fails on every head: the
     // backward must be served by the dense fallback — bit-identical to

@@ -1,0 +1,235 @@
+//! TCP front-end, end to end over real sockets: concurrent connections
+//! mixing streamed generation with attention requests must see exactly
+//! the bytes the in-process API would produce — token streams bit-match
+//! an in-process oracle server, attention fingerprints match oracle
+//! outputs, load shedding answers busy over the wire, and shutdown
+//! mid-stream is clean.
+
+use conv_basis::coordinator::{
+    fingerprint, AdmissionConfig, AttnRequest, Backend, GenConfig, GenRequest, NetConfig,
+    NetServer, Payload, Server, ServerConfig,
+};
+use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
+use conv_basis::tensor::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn model() -> Arc<Transformer> {
+    let mut rng = Rng::seeded(42);
+    Arc::new(Transformer::new(&ModelConfig::tiny(64), &mut rng))
+}
+
+fn cfg(model: Arc<Transformer>, admission: AdmissionConfig) -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        gen: Some(GenConfig {
+            model,
+            backend: AttentionBackend::ConvStrided(4),
+            max_concurrent: 4,
+            admission,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Minimal flat-JSON field reader for the wire format under test.
+fn jfield<'a>(line: &'a str, key: &str) -> &'a str {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat).unwrap_or_else(|| panic!("no {key:?} in {line:?}")) + pat.len();
+    let rest = &line[i..];
+    let end = rest
+        .char_indices()
+        .find(|(_, c)| *c == ',' || *c == '}')
+        .map(|(j, _)| j)
+        .unwrap_or(rest.len());
+    rest[..end].trim_matches('"')
+}
+
+fn ju(line: &str, key: &str) -> u64 {
+    jfield(line, key).parse().unwrap_or_else(|_| panic!("bad uint {key:?} in {line:?}"))
+}
+
+/// What one client connection observed for its generation request.
+struct ClientView {
+    tokens: Vec<usize>,
+    done_tokens: Vec<usize>,
+    attn_line: String,
+}
+
+/// Drive one connection: a generate and an attn request, concurrently
+/// outstanding, reading interleaved lines until both terminate.
+fn run_client(addr: std::net::SocketAddr, c: usize) -> ClientView {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        "{{\"op\":\"generate\",\"id\":{c},\"prompt\":[{},{},{}],\"max_new_tokens\":6}}",
+        1 + c,
+        2 + c,
+        3 + c,
+    )
+    .unwrap();
+    writeln!(writer, "{{\"op\":\"attn\",\"id\":{},\"seq_len\":128,\"d_model\":8,\"seed\":{c}}}", 100 + c)
+        .unwrap();
+
+    let mut view =
+        ClientView { tokens: Vec::new(), done_tokens: Vec::new(), attn_line: String::new() };
+    let (mut done, mut attn_done) = (false, false);
+    let mut line = String::new();
+    while !(done && attn_done) {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("read") > 0, "server closed early");
+        let l = line.trim();
+        match jfield(l, "ev") {
+            "token" => {
+                assert_eq!(ju(l, "id") as usize, c, "token routed to the wrong client id");
+                assert_eq!(ju(l, "index") as usize, view.tokens.len(), "indices must be consecutive");
+                view.tokens.push(ju(l, "token") as usize);
+            }
+            "done" => {
+                assert_eq!(ju(l, "id") as usize, c);
+                let arr = &l[l.find("\"tokens\":[").unwrap() + 10..];
+                let arr = &arr[..arr.find(']').unwrap()];
+                view.done_tokens =
+                    arr.split(',').filter(|t| !t.is_empty()).map(|t| t.parse().unwrap()).collect();
+                done = true;
+            }
+            "attn" => {
+                assert_eq!(ju(l, "id") as usize, 100 + c);
+                view.attn_line = l.to_string();
+                attn_done = true;
+            }
+            other => panic!("unexpected event {other:?}: {l}"),
+        }
+    }
+    view
+}
+
+#[test]
+fn concurrent_connections_stream_bit_identical_tokens() {
+    let model = model();
+    let net = NetServer::start(cfg(model.clone(), AdmissionConfig::default()), NetConfig::default())
+        .expect("bind");
+    let addr = net.addr();
+
+    let clients: Vec<ClientView> = (0..4usize)
+        .map(|c| std::thread::spawn(move || run_client(addr, c)))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|j| j.join().expect("client thread"))
+        .collect();
+    let net_metrics = net.shutdown();
+
+    // Oracle: the same requests through the in-process API on an
+    // identically configured server sharing the same model weights.
+    let oracle = Server::start(cfg(model, AdmissionConfig::default()));
+    for c in 0..4usize {
+        oracle.submit_generate(GenRequest::new(c as u64, vec![1 + c, 2 + c, 3 + c], 6));
+        oracle.submit(AttnRequest {
+            id: 100 + c as u64,
+            seq_len: 128,
+            d_model: 8,
+            bounded_entries: false,
+            payload: Payload::Synthetic { seed: c as u64 },
+            submitted_at: Instant::now(),
+        });
+    }
+    let mut gens = oracle.collect_generations(4);
+    gens.sort_by_key(|g| g.id);
+    let mut attns = oracle.collect(4);
+    attns.sort_by_key(|r| r.id);
+    oracle.shutdown();
+
+    for (c, view) in clients.iter().enumerate() {
+        assert_eq!(view.tokens.len(), 6, "client {c} streamed token count");
+        assert_eq!(view.done_tokens, view.tokens, "done must repeat the stream");
+        assert_eq!(view.tokens, gens[c].tokens, "client {c} tokens vs in-process oracle");
+
+        let want_backend = match attns[c].backend {
+            Backend::Exact => "exact",
+            Backend::ConvBasis => "conv",
+            Backend::LowRank => "lowrank",
+        };
+        assert_eq!(jfield(&view.attn_line, "backend"), want_backend);
+        assert_eq!(ju(&view.attn_line, "basis_k") as usize, attns[c].basis_k);
+        let want_fp = format!("{:016x}", fingerprint(attns[c].y.data()));
+        assert_eq!(jfield(&view.attn_line, "y_fp"), want_fp, "client {c} attn fingerprint");
+    }
+    let s = net_metrics.snapshot();
+    assert_eq!((s.gen_requests, s.gen_completed, s.gen_rejected), (4, 4, 0));
+    assert_eq!(s.requests_submitted, 4);
+}
+
+#[test]
+fn full_queue_sheds_busy_over_the_wire() {
+    let model = model();
+    let admission = AdmissionConfig { max_queue: 1, ..Default::default() };
+    let mut cfg = cfg(model, admission);
+    cfg.gen.as_mut().unwrap().max_concurrent = 1;
+    let net = NetServer::start(cfg, NetConfig::default()).expect("bind");
+
+    let stream = TcpStream::connect(net.addr()).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // 8 back-to-back submissions: with one decode slot and a queue of
+    // one, most of the burst must shed.
+    let mut burst = String::new();
+    for i in 0..8 {
+        burst.push_str(&format!(
+            "{{\"op\":\"generate\",\"id\":{i},\"prompt\":[1,2,3],\"max_new_tokens\":8}}\n"
+        ));
+    }
+    writer.write_all(burst.as_bytes()).unwrap();
+    writer.flush().unwrap();
+
+    let (mut done, mut busy) = (0usize, 0usize);
+    let mut line = String::new();
+    while done + busy < 8 {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("read") > 0, "server closed early");
+        match jfield(line.trim(), "ev") {
+            "done" => done += 1,
+            "busy" => busy += 1,
+            "token" => {}
+            other => panic!("unexpected event {other:?}: {line}"),
+        }
+    }
+    let s = net.shutdown().snapshot();
+    assert!(busy >= 1, "a burst of 8 through a queue of 1 must shed");
+    assert_eq!(busy as u64, s.shed_requests);
+    assert_eq!(done as u64, s.gen_completed);
+    assert_eq!(s.gen_requests, 8, "every submission is counted at the door");
+}
+
+#[test]
+fn shutdown_mid_stream_is_clean() {
+    let model = model();
+    let net =
+        NetServer::start(cfg(model, AdmissionConfig::default()), NetConfig::default()).expect("bind");
+
+    let stream = TcpStream::connect(net.addr()).expect("connect");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(writer, "{{\"op\":\"generate\",\"id\":1,\"prompt\":[5,6,7],\"max_new_tokens\":40}}")
+        .unwrap();
+    // Wait for the stream to actually start, then pull the plug.
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).expect("read") > 0);
+    assert_eq!(jfield(line.trim(), "ev"), "token");
+
+    let s = net.shutdown().snapshot();
+    assert_eq!(s.gen_requests, 1);
+    assert!(s.gen_tokens >= 1, "at least the streamed token decoded");
+    // The client's socket is closed: reads drain to EOF without hanging.
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
