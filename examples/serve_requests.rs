@@ -43,6 +43,7 @@ fn main() {
             backend: AttentionBackend::ConvStrided(4),
             max_concurrent: 4,
             admission: AdmissionConfig::default(),
+            speculate: 0,
         }),
         cache_capacity: 512,
         ..Default::default()

@@ -1,0 +1,370 @@
+"""NumPy mirror of the speculative-decoding serving sweep (PR 7).
+
+The Rust loadgen (``rust/src/bin/loadgen.rs``) is the source of truth,
+but some build images carry no Rust toolchain; this mirror reproduces
+the same serving shape as ``bench_net_mirror.py`` — TCP front-end,
+newline-delimited flat-JSON framing, a scheduler thread, per-step
+token streaming — and adds the PR 7 round structure on top:
+
+* **draft**: γ_eff cheap decode steps per round through the k=1 conv
+  stand-in (cached-basis banded weighted sum, ``O(k*n + n*d)`` per
+  (layer, head)), plus one more append so the verifier sees every
+  draft's KV row;
+* **verify**: one exact pass over the γ_eff+1 trailing positions
+  (softmax-weighted sums over the true, non-Toeplitz scores —
+  ``O((γ+1)*n*d)`` per head), accept the longest draft prefix whose
+  argmax matches, emit the bonus token, and roll the session back by
+  pure truncation.
+
+The drafter diverges from the verifier exactly the way the Rust conv
+drafter does: the conv stand-in sees only the Toeplitz part of the
+scores, the verifier sees scores plus the per-position perturbation
+the conv basis cannot represent — so the acceptance rate is a real
+measurement of "how often does a k=1 conv argmax match exact", not a
+dialed-in constant. γ = 0 cells run the plain PR 6 decode loop.
+
+Run: ``python3 python/bench_spec_mirror.py [--smoke] [--out PATH]``
+(default out: ``BENCH_PR7.json``, schema ``bench_pr7/v1`` with
+``"source": "numpy-mirror"`` so readers know which harness produced
+the numbers).
+"""
+
+import json
+import socket
+import socketserver
+import sys
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+D_MODEL = 32
+N_LAYERS = 2
+N_HEADS = 2
+D_HEAD = D_MODEL // N_HEADS
+VOCAB = 256
+MAX_QUEUE = 256
+# Scale of the non-Toeplitz score component the k=1 conv drafter
+# cannot see — the knob that makes acceptance < 1 without rigging it.
+EPS_SCALE = 0.05
+
+
+class Session:
+    """One in-flight generation: per-(layer, head) cached conv basis
+    plus the exact (perturbed) scores the verifier uses."""
+
+    def __init__(self, req, wfile, lock):
+        self.req = req
+        self.wfile = wfile
+        self.wlock = lock
+        self.generated = []
+        rng = np.random.default_rng(req["id"] + 1)
+        self.rng = rng
+        n = len(req["prompt"])
+        self.n = n
+        self.heads = []
+        for _ in range(N_LAYERS * N_HEADS):
+            g = rng.normal(scale=0.5, size=n)
+            eps = rng.normal(scale=EPS_SCALE, size=n)
+            self.heads.append(
+                {"g": g, "eps": eps, "v": rng.normal(size=(n, D_HEAD))}
+            )
+        # Fixed token projection: argmax(W @ attention_row) is the
+        # "logits" stand-in, shared by drafter and verifier.
+        self.w_tok = rng.normal(size=(VOCAB, D_HEAD))
+
+    def prefill(self):
+        for h in self.heads:
+            n = self.n
+            fb = np.fft.rfft(np.exp(h["g"]), 2 * n)
+            for c in range(D_HEAD):
+                np.fft.irfft(fb * np.fft.rfft(h["v"][:, c], 2 * n))[:n]
+        return self._exact_token(self.n - 1)
+
+    def _append_row(self):
+        """Grow every head by one position (draft-priced, conv path)."""
+        for h in self.heads:
+            h["g"] = np.append(h["g"], self.rng.normal(scale=0.5))
+            h["eps"] = np.append(h["eps"], self.rng.normal(scale=EPS_SCALE))
+            h["v"] = np.vstack([h["v"], self.rng.normal(size=(1, D_HEAD))])
+        self.n += 1
+
+    def _cheap_row(self, head):
+        # k=1 conv stand-in: Toeplitz-only weights, O(k*n + n*d).
+        b = np.exp(head["g"])
+        w = b[::-1]
+        return (w @ head["v"]) / b.sum()
+
+    def _exact_row(self, head, p):
+        # Exact verify row at position p: true (perturbed) scores.
+        w = np.exp(head["g"][: p + 1] + head["eps"][: p + 1])[::-1]
+        return (w @ head["v"][: p + 1]) / w.sum()
+
+    def _cheap_token(self):
+        rows = [self._cheap_row(h) for h in self.heads]
+        return int(np.argmax(self.w_tok @ rows[0])), rows
+
+    def _exact_token(self, p):
+        rows = [self._exact_row(h, p) for h in self.heads]
+        return int(np.argmax(self.w_tok @ rows[0]))
+
+    def truncate(self, n):
+        for h in self.heads:
+            h["g"] = h["g"][:n]
+            h["eps"] = h["eps"][:n]
+            h["v"] = h["v"][:n]
+        self.n = n
+
+    def decode_plain(self):
+        """γ = 0: one cheap append + cheap argmax (the PR 6 loop)."""
+        self._append_row()
+        tok, _ = self._cheap_token()
+        self.generated.append(tok)
+        return [tok]
+
+    def decode_speculative(self, gamma):
+        """One draft-γ/verify/rollback round; returns emitted tokens."""
+        remaining = self.req["max_new_tokens"] - len(self.generated)
+        g_eff = min(gamma, remaining - 1)
+        if g_eff == 0:
+            return self.decode_plain(), 0, 0
+        base = self.n - 1
+        drafts = []
+        for _ in range(g_eff):
+            self._append_row()
+            tok, _ = self._cheap_token()
+            drafts.append(tok)
+        self._append_row()  # last draft's KV row, logits discarded
+        accepted = 0
+        while accepted < g_eff and self._exact_token(base + accepted) == drafts[accepted]:
+            accepted += 1
+        bonus = self._exact_token(base + accepted)
+        self.truncate(base + 1 + accepted)
+        emitted = drafts[:accepted] + [bonus]
+        self.generated.extend(emitted)
+        return emitted, g_eff, accepted
+
+
+def write_line(wfile, wlock, obj):
+    try:
+        with wlock:
+            wfile.write((json.dumps(obj, separators=(",", ":")) + "\n").encode())
+            wfile.flush()
+    except (OSError, ValueError):
+        pass  # dead/closed client: it just stops receiving
+
+
+class Scheduler:
+    """Generation scheduler with a speculative round per iteration."""
+
+    def __init__(self, gamma):
+        self.gamma = gamma
+        self.cv = threading.Condition()
+        self.waiting = deque()
+        self.shutting = False
+        self.shed = 0
+        self.drafted = 0
+        self.accepted = 0
+        self.thread = threading.Thread(target=self.run, daemon=True)
+        self.thread.start()
+
+    def submit(self, req, wfile, wlock):
+        with self.cv:
+            if self.shutting or len(self.waiting) >= MAX_QUEUE:
+                self.shed += 1
+                write_line(wfile, wlock, {"ev": "busy", "id": req["id"]})
+                return
+            self.waiting.append((req, wfile, wlock))
+            self.cv.notify_all()
+
+    def shutdown(self):
+        with self.cv:
+            self.shutting = True
+            self.cv.notify_all()
+        self.thread.join()
+
+    def run(self):
+        sessions = []
+        while True:
+            if not sessions:
+                with self.cv:
+                    while not self.waiting and not self.shutting:
+                        self.cv.wait()
+                    if self.shutting and not self.waiting:
+                        return
+            with self.cv:
+                arrivals = list(self.waiting)
+                self.waiting.clear()
+            for req, wfile, wlock in arrivals:
+                s = Session(req, wfile, wlock)
+                tok = s.prefill()  # first token rides the prefill, exact
+                s.generated.append(tok)
+                write_line(wfile, wlock, {"ev": "token", "id": req["id"], "index": 0, "token": tok})
+                sessions.append(s)
+            retired = []
+            for s in sessions:
+                if self.gamma == 0:
+                    emitted = s.decode_plain()
+                else:
+                    emitted, drafted, accepted = s.decode_speculative(self.gamma)
+                    self.drafted += drafted
+                    self.accepted += accepted
+                start = len(s.generated) - len(emitted)
+                for off, tok in enumerate(emitted):
+                    write_line(
+                        s.wfile,
+                        s.wlock,
+                        {"ev": "token", "id": s.req["id"], "index": start + off, "token": tok},
+                    )
+                if len(s.generated) >= s.req["max_new_tokens"]:
+                    retired.append(s)
+            for s in retired:
+                sessions.remove(s)
+                write_line(
+                    s.wfile,
+                    s.wlock,
+                    {"ev": "done", "id": s.req["id"],
+                     "prompt_len": len(s.req["prompt"]),
+                     "decode_steps": len(s.generated),
+                     "tokens": s.generated},
+                )
+
+
+class Handler(socketserver.StreamRequestHandler):
+    disable_nagle_algorithm = True
+
+    def handle(self):
+        wlock = threading.Lock()
+        for raw in self.rfile:
+            line = raw.decode().strip()
+            if not line:
+                continue
+            req = json.loads(line)
+            if req.get("op") == "generate":
+                self.server.scheduler.submit(req, self.wfile, wlock)
+            else:
+                write_line(self.wfile, wlock, {"ev": "error", "msg": "unknown op"})
+
+
+def client_loop(addr, conn_id, prompt_len, decode_len, iters, out):
+    sock = socket.create_connection(addr)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    rfile = sock.makefile("rb")
+    prompt = [((conn_id * 131 + j * 17) % 255) + 1 for j in range(prompt_len)]
+    lats, tokens, shed = [], 0, 0
+    for i in range(iters):
+        t0 = time.perf_counter()
+        sock.sendall(
+            (
+                json.dumps(
+                    {"op": "generate", "id": i, "prompt": prompt, "max_new_tokens": decode_len},
+                    separators=(",", ":"),
+                )
+                + "\n"
+            ).encode()
+        )
+        ttft = None
+        for raw in rfile:
+            ev = json.loads(raw)
+            if ev["ev"] == "token":
+                tokens += 1
+                if ttft is None:
+                    ttft = (time.perf_counter() - t0) * 1e6
+            elif ev["ev"] == "done":
+                lats.append((ttft, (time.perf_counter() - t0) * 1e6))
+                break
+            elif ev["ev"] == "busy":
+                shed += 1
+                break
+    sock.close()
+    out.append((lats, tokens, shed))
+
+
+def pct(xs, q):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, round(q * (len(xs) - 1)))]
+
+
+def run_cell(batch, prompt_len, decode_len, gamma, iters):
+    server = socketserver.ThreadingTCPServer(("127.0.0.1", 0), Handler)
+    server.daemon_threads = True
+    server.scheduler = Scheduler(gamma)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    addr = server.server_address
+
+    t0 = time.perf_counter()
+    out = []
+    threads = [
+        threading.Thread(target=client_loop, args=(addr, c, prompt_len, decode_len, iters, out))
+        for c in range(batch)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    sched = server.scheduler
+    sched.shutdown()
+    server.shutdown()
+    server.server_close()
+
+    lats = [l for ls, _, _ in out for l in ls]
+    tokens = sum(t for _, t, _ in out)
+    shed = sum(s for _, _, s in out)
+    accept_rate = 0.0 if sched.drafted == 0 else sched.accepted / sched.drafted
+    return {
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "decode_len": decode_len,
+        "gamma": gamma,
+        "requests": len(lats),
+        "tokens": tokens,
+        "wall_s": round(wall, 6),
+        "tokens_per_s": round(tokens / wall, 3),
+        "accept_rate": round(accept_rate, 4),
+        "ttft_p50_us": round(pct([l[0] for l in lats], 0.5), 1),
+        "e2e_p50_us": round(pct([l[1] for l in lats], 0.5), 1),
+        "e2e_p95_us": round(pct([l[1] for l in lats], 0.95), 1),
+        "shed": shed,
+    }
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    out_path = "BENCH_PR7.json"
+    if "--out" in sys.argv:
+        out_path = sys.argv[sys.argv.index("--out") + 1]
+    if smoke:
+        batches, prompts, decodes, gammas, iters = [1, 2], [8, 16], [4], [0, 2], 2
+    else:
+        batches, prompts, decodes, gammas, iters = [1, 4, 8], [16, 64, 256], [8, 32], [0, 4], 3
+
+    cells = []
+    print("# Speculative serving sweep — NumPy mirror (k=1 conv draft, exact verify)")
+    print("| batch | prompt | decode | γ | req | tok/s | accept | ttft p50 µs | e2e p50 µs | e2e p95 µs | shed |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for b in batches:
+        for p in prompts:
+            for d in decodes:
+                for g in gammas:
+                    c = run_cell(b, p, d, g, iters)
+                    cells.append(c)
+                    print(
+                        f"| {b} | {p} | {d} | {g} | {c['requests']} | {c['tokens_per_s']:.1f} "
+                        f"| {c['accept_rate']:.2f} | {c['ttft_p50_us']:.0f} "
+                        f"| {c['e2e_p50_us']:.0f} | {c['e2e_p95_us']:.0f} | {c['shed']} |"
+                    )
+
+    doc = {"schema": "bench_pr7/v1", "source": "numpy-mirror", "smoke": smoke, "cells": cells}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, separators=(",", ":"))
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

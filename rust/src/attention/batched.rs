@@ -215,6 +215,19 @@ impl AttnJob {
         self.training = true;
         self
     }
+
+    /// A speculative-**verify** job: causal, always the exact operator
+    /// regardless of the serving backend. The speculative decoder
+    /// drafts tokens through the cheap conv decode lane and verifies
+    /// all drafted positions in one prefill-lane submit of these jobs
+    /// (`Transformer::forward_batch` with the exact backend builds
+    /// them); row `i` of an exact causal prefill is bit-identical to
+    /// the last row of the length-`i+1` prefix's prefill (rows are
+    /// independent under the causal mask), so one verify job yields
+    /// the greedy-oracle logits for every drafted position at once.
+    pub fn verify(layer: u32, head: u32, q: Matrix, k: Matrix, v: Matrix) -> Self {
+        AttnJob::causal(layer, head, q, k, v, BatchedBackend::Exact)
+    }
 }
 
 /// Result of one job, with the provenance the serving layer reports.

@@ -196,6 +196,47 @@ impl DecodeState {
         }
         dev / new_d
     }
+
+    /// Roll the state back to a length-`n` prefix — the exact inverse
+    /// of [`Self::append_token`] for the dropped rows. The speculative
+    /// decoder drafts ahead with `append_token` and truncates back to
+    /// the verifier-accepted prefix with this: each basis vector drops
+    /// its appended tail slots (`b̃_r[n..]` — the retained entries are
+    /// untouched bytes, so truncate ∘ append is bitwise identity) and
+    /// every window shrinks by the same `delta`, preserving the
+    /// strictly-decreasing window invariant.
+    ///
+    /// Returns `false` without modifying the state when the rollback is
+    /// infeasible: a state re-recovered from scratch mid-draft (drift
+    /// fallback) may hold windows shorter than `delta`, and a window
+    /// cannot shrink below one column. Callers then re-seed from the
+    /// truncated K/Q instead (`BatchedEngine::seed_decode`).
+    pub fn truncate_to(&mut self, n: usize) -> bool {
+        let n_old = self.n();
+        assert!(n >= 1 && n <= n_old, "truncate_to out of range");
+        if n == n_old {
+            return true;
+        }
+        let delta = n_old - n;
+        if self.post_basis.terms().iter().any(|t| t.m <= delta) {
+            return false;
+        }
+        let terms: Vec<ConvBasis> = self
+            .post_basis
+            .terms()
+            .iter()
+            .map(|t| {
+                let mut b = t.b.clone();
+                b.truncate(n);
+                ConvBasis { b, m: t.m - delta }
+            })
+            .collect();
+        // Windows shrank by one uniformly per dropped row — still
+        // strictly decreasing, and ≥ 1 by the feasibility check above.
+        self.post_basis = KConvBasis::new(n, terms);
+        self.d_tilde.truncate(n);
+        true
+    }
 }
 
 /// Exact last-row attention from a precomputed pre-exp logits row
@@ -403,6 +444,67 @@ mod tests {
         let want = exact_attend_last(&q_full, &k_full, &v_full);
         for (a, b) in fast.iter().zip(&want) {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn truncate_to_is_bitwise_append_inverse() {
+        // Draft γ tokens ahead, then roll all of them back: the state
+        // must be bit-identical to never having appended (the
+        // speculative-decode rollback invariant).
+        let mut rng = Rng::seeded(509);
+        let (n, gamma, d) = (24, 4, 6);
+        let (q_full, k_full) = rope_structured_qk(n + gamma, d, 2, &mut rng);
+        let q = q_full.slice(0, n, 0, d);
+        let k = k_full.slice(0, n, 0, d);
+        let out = conv_attention_strided(&q, &k, &Matrix::zeros(n, d), 1).unwrap();
+        let base = DecodeState::new(out.post_basis, out.d_tilde);
+        let mut state = base.clone();
+        for step in 0..gamma {
+            let n_cur = n + step;
+            let qn = q_full.row(n_cur);
+            let new_row: Vec<f64> =
+                (0..=n_cur).map(|j| crate::tensor::dot(qn, k_full.row(j))).collect();
+            state.append_token(&new_row);
+        }
+        assert_eq!(state.n(), n + gamma);
+        // Partial rollback (keep 2 of the 4 drafted rows), then full.
+        assert!(state.truncate_to(n + 2));
+        assert_eq!(state.n(), n + 2);
+        assert!(state.truncate_to(n));
+        assert_eq!(state.basis().to_dense().data(), base.basis().to_dense().data());
+        assert_eq!(state.d_tilde(), base.d_tilde(), "normalizer must roll back bitwise");
+        // Truncating to the current length is the identity.
+        assert!(state.truncate_to(n));
+        assert_eq!(state.n(), n);
+    }
+
+    #[test]
+    fn truncate_to_refuses_window_underflow() {
+        // A state recovered from scratch (not grown by append_token) may
+        // hold a window shorter than the rollback distance; truncating
+        // below one column is infeasible and must be refused, leaving
+        // the state untouched.
+        let mut rng = Rng::seeded(510);
+        let (n, d) = (16, 4);
+        let (q, k) = rope_structured_qk(n, d, 2, &mut rng);
+        let out = conv_attention_strided(&q, &k, &Matrix::zeros(n, d), 4).unwrap();
+        let mut state = DecodeState::new(out.post_basis, out.d_tilde);
+        let m_min = state.basis().terms().iter().map(|t| t.m).min().unwrap();
+        if m_min < n {
+            let before = state.clone();
+            assert!(
+                !state.truncate_to(n - m_min),
+                "rollback past the shortest window must be refused"
+            );
+            assert_eq!(state.n(), before.n());
+            assert_eq!(state.d_tilde(), before.d_tilde());
+        }
+        // A one-row rollback of a freshly recovered state is feasible
+        // whenever every window exceeds one column.
+        if m_min > 1 {
+            assert!(state.truncate_to(n - 1));
+            assert_eq!(state.n(), n - 1);
         }
     }
 

@@ -7,14 +7,17 @@
 //! over real sockets — measuring time-to-first-token and end-to-end
 //! latency off the wire, not in-process.
 //!
-//! Sweep: batch × prompt_len × decode_len. Results land in
-//! `BENCH_PR6.json` (repo root; `--out <path>` overrides) with schema
-//! `bench_pr6/v1`:
+//! Sweep: batch × prompt_len × decode_len × γ (speculative-decoding
+//! depth; γ = 0 is the plain decode loop). Results land in
+//! `BENCH_PR7.json` (repo root; `--out <path>` overrides) with schema
+//! `bench_pr7/v1`; each cell carries the server-side draft acceptance
+//! rate for its γ next to the wire-side latency percentiles:
 //!
 //! ```text
-//! {"schema":"bench_pr6/v1","source":"rust-loadgen","smoke":false,
-//!  "cells":[{"batch":4,"prompt_len":64,"decode_len":32,"requests":12,
-//!            "tokens":384,"wall_s":1.2,"tokens_per_s":320.0,
+//! {"schema":"bench_pr7/v1","source":"rust-loadgen","smoke":false,
+//!  "cells":[{"batch":4,"prompt_len":64,"decode_len":32,"gamma":2,
+//!            "requests":12,"tokens":384,"wall_s":1.2,
+//!            "tokens_per_s":320.0,"accept_rate":0.87,
 //!            "ttft_p50_us":900.0,"e2e_p50_us":..,"e2e_p95_us":..,
 //!            "shed":0}, ...]}
 //! ```
@@ -36,12 +39,15 @@ struct Cell {
     batch: usize,
     prompt_len: usize,
     decode_len: usize,
+    gamma: usize,
     requests: usize,
     tokens: usize,
     wall_s: f64,
     ttft_p50_us: f64,
     e2e_p50_us: f64,
     e2e_p95_us: f64,
+    /// Server-side speculative acceptance rate (0.0 when γ = 0).
+    accept_rate: f64,
     shed: usize,
 }
 
@@ -101,7 +107,13 @@ fn client_loop(
     Ok((lats, tokens, shed))
 }
 
-fn run_cell(batch: usize, prompt_len: usize, decode_len: usize, iters: usize) -> Cell {
+fn run_cell(
+    batch: usize,
+    prompt_len: usize,
+    decode_len: usize,
+    gamma: usize,
+    iters: usize,
+) -> Cell {
     // Fresh server per cell: no cache warmth bleeding across cells.
     let max_seq = (prompt_len + decode_len + 8).next_power_of_two();
     let mut rng = Rng::seeded(6);
@@ -114,6 +126,7 @@ fn run_cell(batch: usize, prompt_len: usize, decode_len: usize, iters: usize) ->
                 backend: AttentionBackend::ConvStrided(4),
                 max_concurrent: 16,
                 admission: AdmissionConfig::default(),
+                speculate: gamma,
             }),
             ..Default::default()
         },
@@ -139,7 +152,12 @@ fn run_cell(batch: usize, prompt_len: usize, decode_len: usize, iters: usize) ->
         shed += s;
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    net.shutdown();
+    let snap = net.shutdown().snapshot();
+    let accept_rate = if snap.spec_drafted == 0 {
+        0.0
+    } else {
+        snap.spec_accepted as f64 / snap.spec_drafted as f64
+    };
 
     let mut ttft: Vec<f64> = lats.iter().map(|l| l.0).collect();
     let mut e2e: Vec<f64> = lats.iter().map(|l| l.1).collect();
@@ -149,12 +167,14 @@ fn run_cell(batch: usize, prompt_len: usize, decode_len: usize, iters: usize) ->
         batch,
         prompt_len,
         decode_len,
+        gamma,
         requests: lats.len(),
         tokens,
         wall_s,
         ttft_p50_us: percentile(&ttft, 0.5),
         e2e_p50_us: percentile(&e2e, 0.5),
         e2e_p95_us: percentile(&e2e, 0.95),
+        accept_rate,
         shed,
     }
 }
@@ -166,35 +186,40 @@ fn arg_value(name: &str) -> Option<String> {
 
 fn main() {
     let smoke = smoke();
-    let out = arg_value("--out").unwrap_or_else(|| "BENCH_PR6.json".to_string());
-    let (batches, prompts, decodes, iters): (&[usize], &[usize], &[usize], usize) = if smoke {
-        (&[1, 2], &[8, 16], &[4], 2)
+    let out = arg_value("--out").unwrap_or_else(|| "BENCH_PR7.json".to_string());
+    type Grid<'a> = (&'a [usize], &'a [usize], &'a [usize], &'a [usize], usize);
+    let (batches, prompts, decodes, gammas, iters): Grid = if smoke {
+        (&[1, 2], &[8, 16], &[4], &[0, 2], 2)
     } else {
-        (&[1, 4, 8], &[16, 64, 256], &[8, 32], 3)
+        (&[1, 4, 8], &[16, 64, 256], &[8, 32], &[0, 4], 3)
     };
 
-    println!("# Closed-loop TCP load sweep (conv-strided decode, streaming)");
+    println!("# Closed-loop TCP load sweep (conv-strided decode, streaming, γ sweep)");
     let mut table = Table::new(&[
-        "batch", "prompt", "decode", "req", "tok/s", "ttft p50 µs", "e2e p50 µs", "e2e p95 µs",
-        "shed",
+        "batch", "prompt", "decode", "γ", "req", "tok/s", "accept", "ttft p50 µs", "e2e p50 µs",
+        "e2e p95 µs", "shed",
     ]);
     let mut cells = Vec::new();
     for &b in batches {
         for &p in prompts {
             for &d in decodes {
-                let cell = run_cell(b, p, d, iters);
-                table.row(&[
-                    b.to_string(),
-                    p.to_string(),
-                    d.to_string(),
-                    cell.requests.to_string(),
-                    format!("{:.1}", cell.tokens as f64 / cell.wall_s),
-                    format!("{:.0}", cell.ttft_p50_us),
-                    format!("{:.0}", cell.e2e_p50_us),
-                    format!("{:.0}", cell.e2e_p95_us),
-                    cell.shed.to_string(),
-                ]);
-                cells.push(cell);
+                for &g in gammas {
+                    let cell = run_cell(b, p, d, g, iters);
+                    table.row(&[
+                        b.to_string(),
+                        p.to_string(),
+                        d.to_string(),
+                        g.to_string(),
+                        cell.requests.to_string(),
+                        format!("{:.1}", cell.tokens as f64 / cell.wall_s),
+                        format!("{:.2}", cell.accept_rate),
+                        format!("{:.0}", cell.ttft_p50_us),
+                        format!("{:.0}", cell.e2e_p50_us),
+                        format!("{:.0}", cell.e2e_p95_us),
+                        cell.shed.to_string(),
+                    ]);
+                    cells.push(cell);
+                }
             }
         }
     }
@@ -204,16 +229,18 @@ fn main() {
         .iter()
         .map(|c| {
             format!(
-                "{{\"batch\":{},\"prompt_len\":{},\"decode_len\":{},\"requests\":{},\
-                 \"tokens\":{},\"wall_s\":{:.6},\"tokens_per_s\":{:.3},\
+                "{{\"batch\":{},\"prompt_len\":{},\"decode_len\":{},\"gamma\":{},\"requests\":{},\
+                 \"tokens\":{},\"wall_s\":{:.6},\"tokens_per_s\":{:.3},\"accept_rate\":{:.4},\
                  \"ttft_p50_us\":{:.1},\"e2e_p50_us\":{:.1},\"e2e_p95_us\":{:.1},\"shed\":{}}}",
                 c.batch,
                 c.prompt_len,
                 c.decode_len,
+                c.gamma,
                 c.requests,
                 c.tokens,
                 c.wall_s,
                 c.tokens as f64 / c.wall_s,
+                c.accept_rate,
                 c.ttft_p50_us,
                 c.e2e_p50_us,
                 c.e2e_p95_us,
@@ -222,7 +249,7 @@ fn main() {
         })
         .collect();
     let json = format!(
-        "{{\"schema\":\"bench_pr6/v1\",\"source\":\"rust-loadgen\",\"smoke\":{},\"cells\":[{}]}}\n",
+        "{{\"schema\":\"bench_pr7/v1\",\"source\":\"rust-loadgen\",\"smoke\":{},\"cells\":[{}]}}\n",
         smoke,
         cells_json.join(",")
     );

@@ -149,6 +149,19 @@ impl AdmissionQueue {
         }
     }
 
+    /// Remove a **queued** request by id (the cancellation door's first
+    /// stop). Returns the request so the caller can emit its terminal
+    /// cancelled answer; `None` means the id is not waiting here — it
+    /// was already admitted (cancel it in flight), finished, or never
+    /// existed. Maintains the `queue_depth` gauge like `admit`.
+    pub fn cancel(&self, id: u64) -> Option<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        let pos = g.waiting.iter().position(|r| r.id == id)?;
+        let req = g.waiting.remove(pos).expect("position came from this queue");
+        Metrics::sub(&self.metrics.queue_depth, 1);
+        Some(req)
+    }
+
     /// Pop the wave of requests the policy admits right now (possibly
     /// empty). `running`/`running_tokens` describe the in-flight batch
     /// (count, Σ resident + still-to-decode tokens), `steps_since_admit`
@@ -285,6 +298,24 @@ mod tests {
         assert!(q.admit(4, 32, 3, 8).is_empty());
         // …until the head has waited max_waiting_steps decode steps.
         assert_eq!(q.admit(4, 32, 4, 8).len(), 1);
+    }
+
+    #[test]
+    fn cancel_removes_queued_request_and_lowers_depth() {
+        let (q, m) = queue(AdmissionConfig::default());
+        q.submit(req(0, 4, 4)).unwrap();
+        q.submit(req(1, 4, 4)).unwrap();
+        q.submit(req(2, 4, 4)).unwrap();
+        let got = q.cancel(1).expect("queued request cancels");
+        assert_eq!(got.id, 1);
+        assert_eq!(m.snapshot().queue_depth, 2);
+        // Unknown ids (and double cancels) are a miss, not a panic.
+        assert!(q.cancel(1).is_none());
+        assert!(q.cancel(99).is_none());
+        // The survivors admit in FIFO order with the hole closed.
+        let wave = q.admit(0, 0, 0, 8);
+        assert_eq!(wave.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(m.snapshot().queue_depth, 0);
     }
 
     #[test]

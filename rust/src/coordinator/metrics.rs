@@ -208,6 +208,27 @@ pub struct Metrics {
     pub gen_rejected: AtomicU64,
     /// Tokens emitted across all generation requests.
     pub gen_tokens: AtomicU64,
+    /// Generation requests cancelled (queued or in-flight) before
+    /// completion. Kept out of `gen_completed` and the `gen_e2e`
+    /// latency series, like rejections — a cancelled generation is not
+    /// a served one.
+    pub gen_cancelled: AtomicU64,
+    /// Speculation rounds executed: one per in-flight sequence per
+    /// draft→verify→accept cycle. Every round emits at least one token
+    /// (the verifier's bonus token), so `gen_tokens` advances by ≥
+    /// `spec_rounds` across the speculative path — the no-livelock
+    /// invariant `tests/speculative.rs` pins.
+    pub spec_rounds: AtomicU64,
+    /// Tokens drafted through the cheap decode path by speculation
+    /// rounds (γ_eff per round — the clamped per-round draft length).
+    pub spec_drafted: AtomicU64,
+    /// Drafted tokens the exact verifier accepted. The acceptance rate
+    /// `spec_accepted / spec_drafted` is the speculation dashboard's
+    /// headline number: 1.0 means every drafted token was emitted
+    /// for free, 0.0 means the draft model never agreed with the
+    /// verifier (the output is bit-exact either way — only throughput
+    /// rides on this).
+    pub spec_accepted: AtomicU64,
     /// Requests the admission queue refused because it was full (the
     /// caller got an explicit busy response, never a silent drop).
     pub shed_requests: AtomicU64,
@@ -342,6 +363,10 @@ impl Metrics {
             gen_completed: self.gen_completed.load(Ordering::Relaxed),
             gen_rejected: self.gen_rejected.load(Ordering::Relaxed),
             gen_tokens: self.gen_tokens.load(Ordering::Relaxed),
+            gen_cancelled: self.gen_cancelled.load(Ordering::Relaxed),
+            spec_rounds: self.spec_rounds.load(Ordering::Relaxed),
+            spec_drafted: self.spec_drafted.load(Ordering::Relaxed),
+            spec_accepted: self.spec_accepted.load(Ordering::Relaxed),
             shed_requests: self.shed_requests.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             gen_lane_attn_requests: self.gen_lane_attn_requests.load(Ordering::Relaxed),
@@ -399,6 +424,10 @@ pub struct MetricsSnapshot {
     pub gen_completed: u64,
     pub gen_rejected: u64,
     pub gen_tokens: u64,
+    pub gen_cancelled: u64,
+    pub spec_rounds: u64,
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
     pub shed_requests: u64,
     pub queue_depth: u64,
     pub gen_lane_attn_requests: u64,
@@ -447,7 +476,7 @@ impl MetricsSnapshot {
     /// reused, re-recoveries how often drift forced a fresh recovery).
     pub fn decode_report(&self) -> String {
         format!(
-            "generation: {} requests / {} completed / {} rejected / {} tokens | \
+            "generation: {} requests / {} completed / {} rejected / {} cancelled / {} tokens | \
              admission: {} shed, {} queued | \
              decode: {} calls/{} steps | seeds: {}h/{}m | \
              drift re-recoveries: {} | fallbacks: {} | \
@@ -456,6 +485,7 @@ impl MetricsSnapshot {
             self.gen_requests,
             self.gen_completed,
             self.gen_rejected,
+            self.gen_cancelled,
             self.gen_tokens,
             self.shed_requests,
             self.queue_depth,
@@ -472,6 +502,31 @@ impl MetricsSnapshot {
             self.decode.p95_us,
             self.gen_e2e.p50_us,
             self.gen_e2e.p95_us,
+        )
+    }
+
+    /// Drafted-token acceptance rate of the speculative decoder
+    /// (`spec_accepted / spec_drafted`; 0.0 before any drafting). The
+    /// emitted stream is bit-exact at every rate — this number prices
+    /// the draft model, it never prices correctness.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
+    /// Render the speculative-decoding counters (the draft/verify
+    /// dashboard line): rounds, drafted and accepted tokens, and the
+    /// acceptance rate that prices the draft model.
+    pub fn spec_report(&self) -> String {
+        format!(
+            "speculation: {} rounds | drafted: {} | accepted: {} | acceptance rate: {:.3}",
+            self.spec_rounds,
+            self.spec_drafted,
+            self.spec_accepted,
+            self.spec_acceptance_rate(),
         )
     }
 
@@ -628,6 +683,29 @@ mod tests {
         let r = s.decode_report();
         assert!(r.contains("1 requests"));
         assert!(r.contains("seeds: 1h/0m"));
+    }
+
+    #[test]
+    fn spec_counters_and_report() {
+        let m = Metrics::new();
+        Metrics::add(&m.spec_rounds, 3);
+        Metrics::add(&m.spec_drafted, 12);
+        Metrics::add(&m.spec_accepted, 9);
+        Metrics::incr(&m.gen_cancelled);
+        let s = m.snapshot();
+        assert_eq!((s.spec_rounds, s.spec_drafted, s.spec_accepted), (3, 12, 9));
+        assert_eq!(s.gen_cancelled, 1);
+        assert!((s.spec_acceptance_rate() - 0.75).abs() < 1e-12);
+        let r = s.spec_report();
+        assert!(r.contains("3 rounds"));
+        assert!(r.contains("acceptance rate: 0.750"));
+        assert!(s.decode_report().contains("1 cancelled"));
+    }
+
+    #[test]
+    fn spec_rate_is_zero_before_drafting() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.spec_acceptance_rate(), 0.0);
     }
 
     #[test]

@@ -18,7 +18,13 @@
 //!   generation scheduler: [`GenRequest`] (prompt → N tokens) served
 //!   by interleaving batched prefill of new arrivals with one engine
 //!   decode step per loop for every in-flight sequence — autoregressive
-//!   serving with no per-token re-prefill.
+//!   serving with no per-token re-prefill. With `speculate: γ > 0` each
+//!   round instead drafts γ tokens through the cheap decode path and
+//!   verifies them (plus one bonus position) in a single exact
+//!   prefill-lane submit — the emitted stream stays bit-identical to
+//!   exact greedy decoding while decode-lane work per token drops by
+//!   the acceptance rate. In-flight requests can be dropped via
+//!   `Server::cancel_generate` (wire: `{"op":"cancel","id":…}`).
 //! * [`AdmissionQueue`] — token-budget admission control for the
 //!   generation lane ([`AdmissionConfig`]: per-wave prefill budget,
 //!   whole-batch total-token budget, waiting/served ratio) with

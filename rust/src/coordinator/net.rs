@@ -11,8 +11,17 @@
 //!
 //! ```text
 //! {"op":"generate","id":1,"prompt":[1,2,3],"max_new_tokens":8}
+//! {"op":"generate","id":3,"prompt":[4,5],"max_new_tokens":8,"speculate":4}
 //! {"op":"attn","id":2,"seq_len":128,"d_model":8,"seed":7}
+//! {"op":"cancel","id":1}
 //! ```
+//!
+//! `speculate` is optional: it overrides the server's speculative
+//! decoding depth γ for that one request (`0` opts out). `cancel`
+//! drops a previously submitted generation by its client id — queued
+//! or in flight — freeing its decode session; tokens already streamed
+//! stand and the terminal line is `cancelled`. Cancelling a finished
+//! (or unknown) id is a no-op: the earlier terminal line stands.
 //!
 //! Attention requests are trace-style: the payload is synthesized from
 //! `seed` server-side (same [`Payload::Synthetic`] path the bench
@@ -28,6 +37,7 @@
 //! {"ev":"done","id":1,"prompt_len":3,"decode_steps":7,"tokens":[17,...]}
 //! {"ev":"rejected","id":1}            (invalid prompt)
 //! {"ev":"busy","id":1}                (admission queue full — retry)
+//! {"ev":"cancelled","id":1}           (dropped by {"op":"cancel",...})
 //! {"ev":"attn","id":2,"backend":"conv","basis_k":4,"y_fp":"1a2b..."}
 //! {"ev":"error","msg":"..."}          (unparseable request line)
 //! ```
@@ -223,6 +233,11 @@ fn serve_connection(
 ) {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
+    // Client id → internal id for this connection's generations, so
+    // `cancel` lines can address them (latest submission wins when a
+    // client reuses an id). Connection-scoped: one reader thread owns
+    // it, no lock needed.
+    let mut gen_ids: HashMap<u64, u64> = HashMap::new();
     loop {
         line.clear();
         match reader.read_line(&mut line) {
@@ -244,6 +259,7 @@ fn serve_connection(
                     continue;
                 };
                 let internal = next_id.fetch_add(1, Ordering::Relaxed);
+                gen_ids.insert(client_id, internal);
                 let sink_writer = writer.clone();
                 let sink = GenSink::new(move |ev| {
                     // Map the server-global id back to the client's.
@@ -261,12 +277,27 @@ fn serve_connection(
                         GenEvent::Busy { .. } => {
                             format!("{{\"ev\":\"busy\",\"id\":{client_id}}}")
                         }
+                        GenEvent::Cancelled { .. } => {
+                            format!("{{\"ev\":\"cancelled\",\"id\":{client_id}}}")
+                        }
                     };
                     write_line(&sink_writer, &msg);
                 });
-                server.submit_generate(
-                    GenRequest::new(internal, prompt, max_new as usize).with_stream(sink),
-                );
+                let mut req = GenRequest::new(internal, prompt, max_new as usize).with_stream(sink);
+                if let Some(gamma) = json_u64(line, "speculate") {
+                    req = req.with_speculate(gamma as usize);
+                }
+                server.submit_generate(req);
+            }
+            Some("cancel") => {
+                let Some(client_id) = json_u64(line, "id") else {
+                    write_error(&writer, "cancel needs id");
+                    continue;
+                };
+                match gen_ids.get(&client_id) {
+                    Some(&internal) => server.cancel_generate(internal),
+                    None => write_error(&writer, "cancel: unknown id"),
+                }
             }
             Some("attn") => {
                 let (Some(client_id), Some(seq_len), Some(d_model), Some(seed)) = (
@@ -289,7 +320,7 @@ fn serve_connection(
                     submitted_at: Instant::now(),
                 });
             }
-            _ => write_error(&writer, "unknown op (want generate|attn)"),
+            _ => write_error(&writer, "unknown op (want generate|attn|cancel)"),
         }
     }
 }

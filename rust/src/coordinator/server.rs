@@ -104,6 +104,19 @@ pub struct GenConfig {
     pub max_concurrent: usize,
     /// Token-budget admission policy for the waiting line.
     pub admission: AdmissionConfig,
+    /// Speculative decoding: tokens drafted through the serving decode
+    /// path per round, then verified (plus one bonus position) in a
+    /// single exact prefill-lane engine submit; the longest accepted
+    /// prefix is kept. `0` disables speculation — the scheduler then
+    /// runs the plain one-token-per-step decode loop, the exact same
+    /// code path (counter-asserted by `tests/speculative.rs`). Greedy
+    /// argmax + exact verification make the emitted stream bit-identical
+    /// to non-speculative greedy decoding under the **exact** backend
+    /// for every γ; under conv backends speculation *upgrades* the
+    /// stream to the exact-greedy oracle (exactness rests on the
+    /// verifier, not the drafter). Per-request override:
+    /// [`GenRequest::with_speculate`].
+    pub speculate: usize,
 }
 
 impl std::fmt::Debug for GenConfig {
@@ -112,6 +125,7 @@ impl std::fmt::Debug for GenConfig {
             .field("backend", &self.backend)
             .field("max_concurrent", &self.max_concurrent)
             .field("admission", &self.admission)
+            .field("speculate", &self.speculate)
             .field("model_params", &self.model.num_params())
             .finish()
     }
@@ -140,8 +154,9 @@ impl std::fmt::Debug for GenSink {
 }
 
 /// One streamed generation event. Every request ends in exactly one
-/// terminal event (`Done`, `Rejected`, or `Busy`); `Token` events
-/// precede `Done` with consecutive `index`es from 0.
+/// terminal event (`Done`, `Rejected`, `Busy`, or `Cancelled`);
+/// `Token` events precede the terminal with consecutive `index`es
+/// from 0.
 #[derive(Clone, Debug)]
 pub enum GenEvent {
     /// One generated token, emitted the step it decodes.
@@ -152,6 +167,9 @@ pub enum GenEvent {
     Rejected { id: u64 },
     /// Terminal: admission queue full — retry later.
     Busy { id: u64 },
+    /// Terminal: dropped by [`Server::cancel_generate`] — tokens
+    /// already streamed stand, nothing follows.
+    Cancelled { id: u64 },
 }
 
 /// One generation request: a prompt and a token budget.
@@ -166,15 +184,31 @@ pub struct GenRequest {
     /// the terminal event **replaces** the channel response —
     /// [`Server::collect_generations`] never sees sinked requests.
     pub stream: Option<GenSink>,
+    /// Per-request speculation override: `Some(γ)` drafts γ tokens per
+    /// round regardless of [`GenConfig::speculate`]; `None` inherits
+    /// the server default. `Some(0)` opts a single request out.
+    pub speculate: Option<usize>,
 }
 
 impl GenRequest {
     pub fn new(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> Self {
-        GenRequest { id, prompt, max_new_tokens, submitted_at: Instant::now(), stream: None }
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            submitted_at: Instant::now(),
+            stream: None,
+            speculate: None,
+        }
     }
 
     pub fn with_stream(mut self, sink: GenSink) -> Self {
         self.stream = Some(sink);
+        self
+    }
+
+    pub fn with_speculate(mut self, gamma: usize) -> Self {
+        self.speculate = Some(gamma);
         self
     }
 }
@@ -189,6 +223,9 @@ pub enum GenStatus {
     Rejected,
     /// Shed by the admission queue (queue full) — retry later.
     Busy,
+    /// Dropped by [`Server::cancel_generate`] before completing;
+    /// `tokens` holds whatever was generated before the drop.
+    Cancelled,
 }
 
 /// Completed generation.
@@ -198,8 +235,8 @@ pub struct GenResponse {
     pub prompt_len: usize,
     pub status: GenStatus,
     /// Generated tokens (length ≤ `max_new_tokens`; shorter only when
-    /// the model's `max_seq` cut generation off, empty on `Rejected`
-    /// and `Busy`).
+    /// the model's `max_seq` cut generation off or the request was
+    /// cancelled mid-flight, empty on `Rejected` and `Busy`).
     pub tokens: Vec<usize>,
     /// Decode steps this sequence ran through the engine (prefill not
     /// counted: the first token comes from the prefill logits).
@@ -259,6 +296,10 @@ pub struct Server {
     gen_resp_tx: Option<mpsc::Sender<GenResponse>>,
     gen_resp_rx: Option<Mutex<mpsc::Receiver<GenResponse>>>,
     gen_scheduler: Option<std::thread::JoinHandle<()>>,
+    /// Cancellation requests for in-flight generations; the scheduler
+    /// sweeps this set once per round (queued requests are cancelled
+    /// directly in the admission queue, never through here).
+    gen_cancel: Option<Arc<Mutex<std::collections::HashSet<u64>>>>,
     /// The generation model's `max_seq` (door validation bound).
     gen_max_seq: usize,
     running: Arc<AtomicBool>,
@@ -356,12 +397,14 @@ impl Server {
         // of new arrivals — and, via the merge lane, with flushed
         // attention batches.
         let gen_max_seq = cfg.gen.as_ref().map(|g| g.model.cfg.max_seq).unwrap_or(0);
-        let (gen_resp_tx, gen_resp_rx, gen_scheduler) = match cfg.gen {
+        let (gen_resp_tx, gen_resp_rx, gen_scheduler, gen_cancel) = match cfg.gen {
             Some(gen_cfg) => {
                 let (rtx, rrx) = mpsc::channel::<GenResponse>();
                 let engine_g = engine.clone();
                 let metrics_g = metrics.clone();
                 let queue_g = gen_queue.clone().unwrap();
+                let cancel = Arc::new(Mutex::new(std::collections::HashSet::new()));
+                let cancel_g = cancel.clone();
                 let lane = GenLane {
                     batch_rx: batch_rx.clone(),
                     attn_tx: resp_tx.clone(),
@@ -370,11 +413,13 @@ impl Server {
                 };
                 let rtx_sched = rtx.clone();
                 let handle = std::thread::spawn(move || {
-                    generation_loop(gen_cfg, &queue_g, rtx_sched, &engine_g, &metrics_g, lane);
+                    generation_loop(
+                        gen_cfg, &queue_g, rtx_sched, &engine_g, &metrics_g, lane, &cancel_g,
+                    );
                 });
-                (Some(rtx), Some(Mutex::new(rrx)), Some(handle))
+                (Some(rtx), Some(Mutex::new(rrx)), Some(handle), Some(cancel))
             }
-            None => (None, None, None),
+            None => (None, None, None, None),
         };
         drop(resp_tx);
 
@@ -390,6 +435,7 @@ impl Server {
             gen_resp_tx,
             gen_resp_rx,
             gen_scheduler,
+            gen_cancel,
             gen_max_seq,
             running,
         }
@@ -431,6 +477,46 @@ impl Server {
             // Shed (queue full): explicit busy, never a silent drop.
             // `shed_requests` was counted by the queue.
             self.answer_terminal(&req, GenStatus::Busy);
+        }
+    }
+
+    /// Best-effort cancellation of a generation request. Still queued:
+    /// it is removed from the admission line and answered terminally
+    /// (`Cancelled`) right here. In flight: the scheduler's per-round
+    /// sweep retires its [`DecodeSession`] (the `decode_resident_bytes`
+    /// gauge drops) and emits the terminal `Cancelled` event — tokens
+    /// already streamed stand. Already finished (or unknown id): no-op,
+    /// the terminal `Done` stands — every request ends in exactly one
+    /// terminal event either way. Cancelled requests never count as
+    /// completed and never touch the gen-e2e latency series; they are
+    /// counted in `gen_cancelled`. Panics if the server was started
+    /// without a [`GenConfig`].
+    pub fn cancel_generate(&self, id: u64) {
+        let queue = self.gen_queue.as_ref().expect("ServerConfig.gen required for generation");
+        if let Some(req) = queue.cancel(id) {
+            Metrics::incr(&self.metrics.gen_cancelled);
+            match &req.stream {
+                Some(sink) => sink.emit(&GenEvent::Cancelled { id: req.id }),
+                None => {
+                    if let Some(tx) = &self.gen_resp_tx {
+                        let _ = tx.send(GenResponse {
+                            id: req.id,
+                            prompt_len: req.prompt.len(),
+                            status: GenStatus::Cancelled,
+                            tokens: Vec::new(),
+                            decode_steps: 0,
+                        });
+                    }
+                }
+            }
+            return;
+        }
+        // Not queued: either in flight or already finished. Park the id
+        // for the scheduler's sweep; a kick wakes an idle scheduler so
+        // stale ids don't linger in the set.
+        if let Some(cancel) = &self.gen_cancel {
+            cancel.lock().unwrap().insert(id);
+            queue.kick();
         }
     }
 
@@ -643,6 +729,10 @@ struct GenFlight {
     decode_steps: usize,
     submitted_at: Instant,
     stream: Option<GenSink>,
+    /// Configured speculation depth γ for this request (server default
+    /// unless overridden per request). Clamped per round to the token
+    /// budget and `max_seq` room — see the γ_eff computation.
+    speculate: usize,
 }
 
 impl GenFlight {
@@ -681,6 +771,7 @@ fn generation_loop(
     engine: &BatchedEngine,
     metrics: &Metrics,
     lane: GenLane,
+    cancel: &Mutex<std::collections::HashSet<u64>>,
 ) {
     let model = cfg.model;
     let backend = cfg.backend;
@@ -761,6 +852,7 @@ fn generation_loop(
                     decode_steps: 0,
                     submitted_at: r.submitted_at,
                     stream: r.stream,
+                    speculate: r.speculate.unwrap_or(cfg.speculate),
                 };
                 if flight.max_new >= 1 {
                     // The first token falls out of the prefill
@@ -776,6 +868,40 @@ fn generation_loop(
                     sessions.push(sess);
                     flights.push(flight);
                 }
+            }
+        }
+
+        // Cancellation sweep: drop every in-flight sequence whose id
+        // was parked by `Server::cancel_generate`. The whole set drains
+        // each round — ids that match no flight belong to requests that
+        // already finished (their terminal `Done` stands; cancel-after-
+        // done is a no-op, preserving exactly-one-terminal-event).
+        {
+            let mut pending = cancel.lock().unwrap();
+            if !pending.is_empty() {
+                for i in (0..flights.len()).rev() {
+                    if !pending.remove(&flights[i].id) {
+                        continue;
+                    }
+                    Metrics::incr(&metrics.gen_cancelled);
+                    sessions[i].retire(metrics);
+                    let f = &flights[i];
+                    match &f.stream {
+                        Some(sink) => sink.emit(&GenEvent::Cancelled { id: f.id }),
+                        None => {
+                            let _ = resp_tx.send(GenResponse {
+                                id: f.id,
+                                prompt_len: f.prompt_len,
+                                status: GenStatus::Cancelled,
+                                tokens: f.generated.clone(),
+                                decode_steps: f.decode_steps,
+                            });
+                        }
+                    }
+                    flights.swap_remove(i);
+                    sessions.swap_remove(i);
+                }
+                pending.clear();
             }
         }
 
@@ -800,29 +926,176 @@ fn generation_loop(
             rider_meta.push((meta, b, n_reqs));
         }
 
-        // One decode step for every in-flight sequence: feed each its
-        // latest generated token, get the next token's logits.
         steps_since_admit += 1;
-        let next: Vec<usize> = flights.iter().map(|f| *f.generated.last().unwrap()).collect();
-        let (logits, rider_outs) =
-            model.decode_step_with_jobs(&mut sessions, &next, engine, rider_jobs);
-        // Deliver rider responses batch by batch (input order holds).
-        let mut rest = rider_outs.into_iter();
-        for (meta, b, n_reqs) in rider_meta {
-            let outs: Vec<JobOutput> = rest.by_ref().take(n_reqs).collect();
-            deliver_attn_outputs(outs, meta, b, metrics, &lane.attn_tx);
-        }
-        // Retire finished sequences (walk backwards so swap_remove is
-        // index-stable).
-        for i in (0..flights.len()).rev() {
-            let f = &mut flights[i];
-            f.decode_steps += 1;
-            f.push_token(argmax(&logits[i]), metrics);
-            if f.generated.len() >= f.max_new || sessions[i].len() >= max_seq {
-                sessions[i].retire(metrics);
-                respond(&flights[i], &resp_tx);
-                flights.swap_remove(i);
-                sessions.swap_remove(i);
+
+        // Per-flight draft depth this round: the configured γ clamped
+        // so the round's emissions stay within the token budget
+        // (accepted + bonus ≤ remaining) and the γ_eff + 1 appended KV
+        // rows stay within `max_seq`. Both clamp terms are ≥ 1 for an
+        // in-flight sequence, so γ_eff is well defined (possibly 0).
+        let gammas: Vec<usize> = flights
+            .iter()
+            .zip(&sessions)
+            .map(|(f, s)| {
+                let remaining = f.max_new - f.generated.len();
+                let room = max_seq - s.len();
+                f.speculate.min(remaining - 1).min(room - 1)
+            })
+            .collect();
+
+        if gammas.iter().all(|&g| g == 0) {
+            // γ = 0 everywhere: the identity — this arm is the plain
+            // pre-speculation scheduler step, bit for bit and counter
+            // for counter (no draft, no verify, no spec_* increments).
+            //
+            // One decode step for every in-flight sequence: feed each
+            // its latest generated token, get the next token's logits.
+            let next: Vec<usize> = flights.iter().map(|f| *f.generated.last().unwrap()).collect();
+            let (logits, rider_outs) =
+                model.decode_step_with_jobs(&mut sessions, &next, engine, rider_jobs);
+            // Deliver rider responses batch by batch (input order holds).
+            let mut rest = rider_outs.into_iter();
+            for (meta, b, n_reqs) in rider_meta {
+                let outs: Vec<JobOutput> = rest.by_ref().take(n_reqs).collect();
+                deliver_attn_outputs(outs, meta, b, metrics, &lane.attn_tx);
+            }
+            for i in (0..flights.len()).rev() {
+                let f = &mut flights[i];
+                f.decode_steps += 1;
+                f.push_token(argmax(&logits[i]), metrics);
+                if f.generated.len() >= f.max_new || sessions[i].len() >= max_seq {
+                    sessions[i].retire(metrics);
+                    respond(&flights[i], &resp_tx);
+                    flights.swap_remove(i);
+                    sessions.swap_remove(i);
+                }
+            }
+        } else {
+            // Speculative round: draft γ_eff tokens per flight through
+            // the cheap serving decode path, then verify every drafted
+            // position plus one bonus in a SINGLE exact prefill-lane
+            // forward over all speculating sessions, keep each flight's
+            // longest accepted prefix. Greedy + exact verify ⇒ the
+            // emitted stream is the exact-greedy oracle's, token for
+            // token, regardless of what the drafter produced.
+            //
+            // Sort the parallel vectors by γ_eff descending so every
+            // draft sub-step's active set is a prefix of the batch
+            // (order is not load-bearing: retirement uses swap_remove
+            // and events are per-flight).
+            let mut order: Vec<usize> = (0..flights.len()).collect();
+            order.sort_by_key(|&i| std::cmp::Reverse(gammas[i]));
+            let mut old_sessions: Vec<Option<DecodeSession>> =
+                sessions.drain(..).map(Some).collect();
+            let mut old_flights: Vec<Option<GenFlight>> = flights.drain(..).map(Some).collect();
+            let mut gam: Vec<usize> = Vec::with_capacity(order.len());
+            for &i in &order {
+                sessions.push(old_sessions[i].take().unwrap());
+                flights.push(old_flights[i].take().unwrap());
+                gam.push(gammas[i]);
+            }
+            let gmax = gam[0];
+
+            // Draft: γ_eff + 1 decode sub-steps per speculating flight.
+            // Sub-step 0 feeds the still-unfed latest token (exactly
+            // like a plain step); its logits are draft d_1. Sub-step t
+            // feeds d_t; for t < γ_eff the logits are d_{t+1}, and the
+            // final sub-step's logits are discarded — it exists only to
+            // append d_γ's KV row so the verifier sees every drafted
+            // position. γ_eff = 0 flights ride sub-step 0 as their
+            // plain decode step and take its logits directly. Riders
+            // attach to sub-step 0 only.
+            let mut drafts: Vec<Vec<usize>> = vec![Vec::new(); flights.len()];
+            let mut riders = Some((rider_jobs, rider_meta));
+            for t in 0..=gmax {
+                // Active prefix: flights still inside their own γ_eff+1
+                // draft sub-steps (gam is sorted descending).
+                let m = gam.iter().take_while(|&&g| g >= t).count();
+                if m == 0 {
+                    break;
+                }
+                let next: Vec<usize> = (0..m)
+                    .map(|i| {
+                        if t == 0 {
+                            *flights[i].generated.last().unwrap()
+                        } else {
+                            *drafts[i].last().unwrap()
+                        }
+                    })
+                    .collect();
+                let (rj, rm) = match riders.take() {
+                    Some((jobs, meta)) => (jobs, meta),
+                    None => (Vec::new(), Vec::new()),
+                };
+                let (logits, rider_outs) =
+                    model.decode_step_with_jobs(&mut sessions[..m], &next, engine, rj);
+                let mut rest = rider_outs.into_iter();
+                for (meta, b, n_reqs) in rm {
+                    let outs: Vec<JobOutput> = rest.by_ref().take(n_reqs).collect();
+                    deliver_attn_outputs(outs, meta, b, metrics, &lane.attn_tx);
+                }
+                for i in 0..m {
+                    flights[i].decode_steps += 1;
+                    if gam[i] == 0 {
+                        flights[i].push_token(argmax(&logits[i]), metrics);
+                    } else if t < gam[i] {
+                        drafts[i].push(argmax(&logits[i]));
+                    }
+                }
+            }
+
+            // Verify: one exact batched forward over every speculating
+            // session (one prefill-lane submit per layer for ALL of
+            // them). Row i of an exact causal forward is bit-identical
+            // to the last row of the length-i+1 prefix's forward (rows
+            // are causally independent), so rows base..base+γ are
+            // exactly the greedy oracle's logits at each drafted
+            // position plus the bonus.
+            let spec_n = gam.iter().take_while(|&&g| g > 0).count();
+            let seqs: Vec<Vec<usize>> =
+                sessions[..spec_n].iter().map(|s| s.tokens().to_vec()).collect();
+            let recs = model.forward_batch(&seqs, &AttentionBackend::Exact, engine);
+            for (i, rec) in recs.iter().enumerate() {
+                let g = gam[i];
+                let n_total = sessions[i].len();
+                // Session length before this round was base + 1; the
+                // verified positions start at the row that predicts the
+                // first draft.
+                let base = n_total - g - 1;
+                let mut accepted = 0;
+                while accepted < g
+                    && argmax(rec.logits.row(base + accepted)) == drafts[i][accepted]
+                {
+                    accepted += 1;
+                }
+                let bonus = argmax(rec.logits.row(base + accepted));
+                // Rollback: drop the rejected drafts' KV rows. Always a
+                // pure truncation — drafting only ever appends, so the
+                // "every resident row was fed" invariant is restored
+                // exactly (full acceptance truncates nothing).
+                model.truncate_session(&mut sessions[i], base + 1 + accepted, engine);
+                Metrics::incr(&metrics.spec_rounds);
+                Metrics::add(&metrics.spec_drafted, g as u64);
+                Metrics::add(&metrics.spec_accepted, accepted as u64);
+                for t in 0..accepted {
+                    flights[i].push_token(drafts[i][t], metrics);
+                }
+                // The bonus token is free: the verifier's logits at the
+                // last accepted position are the oracle's next-token
+                // distribution. It also guarantees ≥ 1 emission per
+                // round — no livelock even when every draft rejects.
+                flights[i].push_token(bonus, metrics);
+            }
+
+            for i in (0..flights.len()).rev() {
+                if flights[i].generated.len() >= flights[i].max_new
+                    || sessions[i].len() >= max_seq
+                {
+                    sessions[i].retire(metrics);
+                    respond(&flights[i], &resp_tx);
+                    flights.swap_remove(i);
+                    sessions.swap_remove(i);
+                }
             }
         }
     }
@@ -910,12 +1183,17 @@ mod tests {
     }
 
     fn gen_server(backend: AttentionBackend, model: Arc<Transformer>) -> Server {
+        spec_server(backend, model, 0)
+    }
+
+    fn spec_server(backend: AttentionBackend, model: Arc<Transformer>, speculate: usize) -> Server {
         Server::start(ServerConfig {
             gen: Some(GenConfig {
                 model,
                 backend,
                 max_concurrent: 4,
                 admission: AdmissionConfig::default(),
+                speculate,
             }),
             cache_capacity: 256,
             ..Default::default()
@@ -1129,6 +1407,7 @@ mod tests {
                 backend: AttentionBackend::Exact,
                 max_concurrent: 2,
                 admission: AdmissionConfig::default(),
+                speculate: 0,
             }),
         });
         // A long-ish generation keeps the decode loop hot while the
@@ -1264,6 +1543,114 @@ mod tests {
     }
 
     #[test]
+    fn speculative_generation_matches_oracle_with_fewer_decode_submits() {
+        // Exact backend: exact decode bit-matches re-prefill, so every
+        // draft is accepted and each round emits γ_eff + 1 tokens. The
+        // stream must equal the plain greedy oracle's while the decode
+        // lane runs strictly fewer steps than tokens generated.
+        let model = tiny_model(51);
+        let server = spec_server(AttentionBackend::Exact, model.clone(), 3);
+        let prompts: [&[usize]; 2] = [&[1, 2, 3, 4], &[9, 8, 7]];
+        let max_new = 9;
+        for (i, p) in prompts.iter().enumerate() {
+            server.submit_generate(GenRequest::new(i as u64, p.to_vec(), max_new));
+        }
+        let mut resps = server.collect_generations(prompts.len());
+        resps.sort_by_key(|r| r.id);
+        let s = server.shutdown().snapshot();
+        for (i, p) in prompts.iter().enumerate() {
+            let want = generate_by_reprefill(&model, p, max_new, &AttentionBackend::Exact);
+            assert_eq!(resps[i].tokens, want, "prompt {i}");
+        }
+        assert_eq!(s.gen_tokens, (prompts.len() * max_new) as u64);
+        assert!(s.spec_rounds >= 1, "γ = 3 must speculate");
+        assert_eq!(s.spec_accepted, s.spec_drafted, "exact drafts always verify");
+        // Emission accounting: prefill emits one token per request,
+        // every speculative round emits accepted + 1 (the bonus).
+        assert_eq!(s.gen_tokens, prompts.len() as u64 + s.spec_accepted + s.spec_rounds);
+        let per_step = (model.cfg.n_layers * model.cfg.n_heads) as u64;
+        assert!(
+            s.decode_steps / per_step < s.gen_tokens,
+            "speculation must amortise: {} decode sub-steps for {} tokens",
+            s.decode_steps / per_step,
+            s.gen_tokens
+        );
+    }
+
+    #[test]
+    fn cancel_drops_queued_and_inflight_generations() {
+        let model = tiny_model(50);
+        let server = Server::start(ServerConfig {
+            gen: Some(GenConfig {
+                model,
+                backend: AttentionBackend::Exact,
+                max_concurrent: 1, // forces the second request to queue
+                admission: AdmissionConfig::default(),
+                speculate: 0,
+            }),
+            ..Default::default()
+        });
+        // Request 7 streams through a sink that parks the scheduler
+        // after the first token, giving this thread a deterministic
+        // window to issue cancellations.
+        let events: Arc<Mutex<Vec<GenEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let started = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let (ev, g, st) = (events.clone(), gate.clone(), started.clone());
+        let sink = GenSink::new(move |e| {
+            ev.lock().unwrap().push(e.clone());
+            if matches!(e, GenEvent::Token { index: 0, .. }) {
+                *st.0.lock().unwrap() = true;
+                st.1.notify_all();
+                let mut open = g.0.lock().unwrap();
+                while !*open {
+                    open = g.1.wait(open).unwrap();
+                }
+            }
+        });
+        server.submit_generate(GenRequest::new(7, vec![1, 2, 3], 30).with_stream(sink));
+        {
+            let mut s = started.0.lock().unwrap();
+            while !*s {
+                s = started.1.wait(s).unwrap();
+            }
+        }
+        // Request 8 cannot be admitted while 7 holds the only slot:
+        // cancelling it takes the queued path and answers immediately.
+        server.submit_generate(GenRequest::new(8, vec![4, 5, 6], 30));
+        server.cancel_generate(8);
+        let resp = server.collect_generations(1);
+        assert_eq!(resp[0].id, 8);
+        assert_eq!(resp[0].status, GenStatus::Cancelled);
+        assert!(resp[0].tokens.is_empty());
+        // Cancel in-flight 7 (plus an unknown id — must be a no-op),
+        // then release the scheduler; the next round's sweep retires it
+        // with a terminal Cancelled, never a Done.
+        server.cancel_generate(7);
+        server.cancel_generate(999);
+        *gate.0.lock().unwrap() = true;
+        gate.1.notify_all();
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.gen_cancelled, 2);
+        assert_eq!(s.gen_completed, 0, "cancelled requests are not completions");
+        assert_eq!(s.gen_e2e.count, 0, "cancellations must not pollute latency");
+        assert_eq!(s.decode_resident_bytes, 0, "cancellation must free the session KV");
+        assert_eq!(s.queue_depth, 0);
+        let evs = events.lock().unwrap();
+        assert!(
+            matches!(evs.last().unwrap(), GenEvent::Cancelled { id: 7 }),
+            "terminal must be Cancelled, got {:?}",
+            evs.last().unwrap()
+        );
+        assert!(evs.iter().all(|e| !matches!(e, GenEvent::Done { .. })));
+        assert_eq!(
+            evs.iter().filter(|e| matches!(e, GenEvent::Cancelled { .. })).count(),
+            1,
+            "exactly one terminal event"
+        );
+    }
+
+    #[test]
     fn token_budget_admission_serves_all_requests_in_waves() {
         // Tight budgets force multiple admission waves; every request
         // must still complete and the queue gauge must drain to zero.
@@ -1280,6 +1667,7 @@ mod tests {
                     max_waiting_steps: 1,
                     max_queue: 64,
                 },
+                speculate: 0,
             }),
             cache_capacity: 64,
             ..Default::default()
@@ -1305,6 +1693,7 @@ mod tests {
                 backend: AttentionBackend::Exact,
                 max_concurrent: 1,
                 admission: AdmissionConfig { max_queue: 1, ..Default::default() },
+                speculate: 0,
             }),
             ..Default::default()
         });

@@ -1085,6 +1085,71 @@ impl Transformer {
         (logits, extra_outs)
     }
 
+    /// Roll a decode session back to its length-`n` prefix — the
+    /// speculative decoder's rollback path: drafted KV rows are dropped
+    /// when the exact verifier rejects a suffix. Tokens, per-layer K/V
+    /// (and conv Q) rows, and per-head conv decode states all truncate
+    /// in place; a conv state whose windows cannot shrink that far
+    /// (drift re-recovery replaced it mid-draft) is re-seeded from the
+    /// truncated K/Q through the engine's basis cache instead. The
+    /// `decode_resident_bytes` gauge absorbs the signed size change,
+    /// mirroring [`Self::decode_step`]'s accounting.
+    ///
+    /// Exact sessions roll back bitwise: their per-step attention reads
+    /// only K/V rows, and rows `0..n` are untouched bytes (row-major
+    /// truncation), so a truncated session decodes exactly like one
+    /// that never drafted. Conv states grown purely by `append_token`
+    /// also roll back bitwise ([`DecodeState::truncate_to`]); only the
+    /// re-seed fallback may differ, and the speculative scheduler's
+    /// exact verification makes the emitted stream independent of the
+    /// draft state either way.
+    ///
+    /// [`DecodeState::truncate_to`]: crate::attention::decode::DecodeState::truncate_to
+    pub fn truncate_session(&self, sess: &mut DecodeSession, n: usize, engine: &BatchedEngine) {
+        assert!(n >= 1 && n <= sess.len(), "truncate_session out of range");
+        if n == sess.len() {
+            return;
+        }
+        let resident_before = sess.resident_bytes();
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let scale = 1.0 / (dh as f64).sqrt();
+        let op = sess.op.clone();
+        let conv = matches!(op, DecodeOp::Conv { .. });
+        sess.tokens.truncate(n);
+        for (li, kv) in sess.layers.iter_mut().enumerate() {
+            kv.k_rot.truncate_rows(n);
+            kv.v.truncate_rows(n);
+            if conv {
+                kv.q_rot.truncate_rows(n);
+            }
+            for h in 0..nh {
+                let Some(mut state) = kv.states[h].take() else { continue };
+                if state.truncate_to(n) {
+                    kv.states[h] = Some(state);
+                } else if let DecodeOp::Conv { k_bases, .. } = &op {
+                    // Window underflow: rebuild from the truncated
+                    // prefix (a cache hit when this prefix's basis was
+                    // recovered before).
+                    let qh = Matrix::from_fn(n, dh, |i, j| kv.q_rot[(i, h * dh + j)] * scale);
+                    let kh = Matrix::from_fn(n, dh, |i, j| kv.k_rot[(i, h * dh + j)]);
+                    let (state, _hit) =
+                        engine.seed_decode(li as u32, h as u32, &qh, &kh, *k_bases);
+                    kv.states[h] = Some(state);
+                }
+            }
+        }
+        // Signed gauge delta, like decode_step: a re-seeded basis can
+        // be larger than the truncated state it replaces.
+        let resident_after = sess.resident_bytes();
+        let gauge = &engine.metrics().decode_resident_bytes;
+        if resident_after >= resident_before {
+            Metrics::add(gauge, (resident_after - resident_before) as u64);
+        } else {
+            Metrics::sub(gauge, (resident_before - resident_after) as u64);
+        }
+    }
+
     /// Classification logits from the last position's hidden state.
     pub fn classify(&self, record: &ForwardRecord) -> [f64; 2] {
         let n = record.final_hidden.rows();

@@ -286,6 +286,16 @@ impl Matrix {
         self.rows += 1;
     }
 
+    /// Drop every row past `n` (the exact inverse of [`Self::push_row`]
+    /// for the dropped rows; the speculative-decode rollback truncates
+    /// KV caches with this). Row-major storage makes it a plain `Vec`
+    /// truncate — the surviving rows are untouched bytes.
+    pub fn truncate_rows(&mut self, n: usize) {
+        assert!(n <= self.rows, "truncate_rows past end");
+        self.data.truncate(n * self.cols);
+        self.rows = n;
+    }
+
     /// Extract a contiguous sub-matrix (rows `r0..r1`, cols `c0..c1`).
     pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
         assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
@@ -440,6 +450,19 @@ mod tests {
         m.push_row(&[4.0, 5.0, 6.0]);
         assert_eq!(m.shape(), (2, 3));
         assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn truncate_rows_inverts_push_row() {
+        let mut rng = Rng::seeded(8);
+        let base = Matrix::randn(5, 3, &mut rng);
+        let mut grown = base.clone();
+        grown.push_row(&[1.0, 2.0, 3.0]);
+        grown.push_row(&[4.0, 5.0, 6.0]);
+        grown.truncate_rows(5);
+        assert_eq!(grown, base, "truncate must be bitwise push_row inverse");
+        grown.truncate_rows(0);
+        assert_eq!(grown.shape(), (0, 3));
     }
 
     #[test]

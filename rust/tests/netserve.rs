@@ -29,6 +29,22 @@ fn cfg(model: Arc<Transformer>, admission: AdmissionConfig) -> ServerConfig {
             backend: AttentionBackend::ConvStrided(4),
             max_concurrent: 4,
             admission,
+            speculate: 0,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Exact-backend config with a server-wide speculation depth γ.
+fn exact_cfg(model: Arc<Transformer>, speculate: usize) -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        gen: Some(GenConfig {
+            model,
+            backend: AttentionBackend::Exact,
+            max_concurrent: 4,
+            admission: AdmissionConfig::default(),
+            speculate,
         }),
         ..Default::default()
     }
@@ -203,6 +219,134 @@ fn full_queue_sheds_busy_over_the_wire() {
     assert_eq!(busy as u64, s.shed_requests);
     assert_eq!(done as u64, s.gen_completed);
     assert_eq!(s.gen_requests, 8, "every submission is counted at the door");
+}
+
+#[test]
+fn speculative_streams_bit_match_a_gamma_zero_oracle_server() {
+    // Under speculation tokens arrive in per-round bursts, but each
+    // client must still observe its exact γ = 0 stream: consecutive
+    // indices, same tokens, same count, same terminal line. The
+    // per-request `speculate` knob rides the wire: the server default
+    // here is γ = 0, so any speculation observed in the metrics proves
+    // the knob round-tripped.
+    let model = model();
+    let max_new = 8usize;
+    let net = NetServer::start(exact_cfg(model.clone(), 0), NetConfig::default()).expect("bind");
+    let addr = net.addr();
+    let gammas = [1usize, 4, 8];
+    let handles: Vec<_> = (0..3usize)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_nodelay(true).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                writeln!(
+                    writer,
+                    "{{\"op\":\"generate\",\"id\":{c},\"prompt\":[{},{},{}],\
+                     \"max_new_tokens\":{max_new},\"speculate\":{}}}",
+                    1 + c,
+                    2 + c,
+                    3 + c,
+                    gammas[c],
+                )
+                .unwrap();
+                let mut tokens = Vec::new();
+                let mut done_tokens: Vec<usize> = Vec::new();
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    assert!(reader.read_line(&mut line).expect("read") > 0, "closed early");
+                    let l = line.trim();
+                    match jfield(l, "ev") {
+                        "token" => {
+                            assert_eq!(ju(l, "id") as usize, c);
+                            assert_eq!(
+                                ju(l, "index") as usize,
+                                tokens.len(),
+                                "burst delivery must keep indices consecutive"
+                            );
+                            tokens.push(ju(l, "token") as usize);
+                        }
+                        "done" => {
+                            let arr = &l[l.find("\"tokens\":[").unwrap() + 10..];
+                            let arr = &arr[..arr.find(']').unwrap()];
+                            done_tokens = arr
+                                .split(',')
+                                .filter(|t| !t.is_empty())
+                                .map(|t| t.parse().unwrap())
+                                .collect();
+                            break;
+                        }
+                        other => panic!("unexpected event {other:?}: {l}"),
+                    }
+                }
+                (tokens, done_tokens)
+            })
+        })
+        .collect();
+    let streams: Vec<(Vec<usize>, Vec<usize>)> =
+        handles.into_iter().map(|h| h.join().expect("client")).collect();
+    let s = net.shutdown().snapshot();
+    assert!(s.spec_rounds >= 1, "the wire `speculate` knob must reach the scheduler");
+    assert_eq!(s.spec_accepted, s.spec_drafted, "exact drafts always verify");
+    assert_eq!(s.gen_completed, 3);
+
+    // γ = 0 oracle server, same weights, in-process.
+    let oracle = Server::start(exact_cfg(model, 0));
+    for c in 0..3usize {
+        oracle.submit_generate(GenRequest::new(c as u64, vec![1 + c, 2 + c, 3 + c], max_new));
+    }
+    let mut gens = oracle.collect_generations(3);
+    gens.sort_by_key(|g| g.id);
+    oracle.shutdown();
+    for (c, (tokens, done_tokens)) in streams.iter().enumerate() {
+        assert_eq!(tokens.len(), max_new, "client {c} token count");
+        assert_eq!(done_tokens, tokens, "client {c}: done must repeat the stream");
+        assert_eq!(tokens, &gens[c].tokens, "client {c}: speculative stream vs γ=0 oracle");
+    }
+}
+
+#[test]
+fn cancel_over_the_wire_frees_the_session_and_ends_with_cancelled() {
+    let model = model();
+    let net = NetServer::start(exact_cfg(model, 0), NetConfig::default()).expect("bind");
+    let stream = TcpStream::connect(net.addr()).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // max_new far past max_seq room: ~60 decode rounds — plenty of
+    // runway for the cancel line to land mid-flight.
+    writeln!(writer, "{{\"op\":\"generate\",\"id\":5,\"prompt\":[5,6,7],\"max_new_tokens\":200}}")
+        .unwrap();
+    // Wait until the stream is live, then cancel (plus an unknown id,
+    // which must answer with an error line and change nothing).
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).expect("read") > 0);
+    assert_eq!(jfield(line.trim(), "ev"), "token");
+    writeln!(writer, "{{\"op\":\"cancel\",\"id\":99}}").unwrap();
+    writeln!(writer, "{{\"op\":\"cancel\",\"id\":5}}").unwrap();
+
+    let mut streamed = 1usize;
+    let mut saw_error = false;
+    let terminal = loop {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("read") > 0, "closed early");
+        let l = line.trim();
+        match jfield(l, "ev") {
+            "token" => streamed += 1,
+            "error" => saw_error = true, // the unknown-id cancel
+            ev => break ev.to_string(),
+        }
+    };
+    assert_eq!(terminal, "cancelled", "cancel must end the stream with its own terminal");
+    assert!(saw_error, "cancelling an unknown id answers with an error line");
+    assert!(streamed < 61, "cancellation must cut generation short, saw {streamed} tokens");
+    let s = net.shutdown().snapshot();
+    assert_eq!(s.gen_cancelled, 1);
+    assert_eq!(s.gen_completed, 0, "a cancelled generation is not a completion");
+    assert_eq!(s.decode_resident_bytes, 0, "cancel must free the decode session's KV bytes");
+    assert!(s.gen_tokens as usize >= streamed);
 }
 
 #[test]

@@ -693,14 +693,15 @@ fn prop_submit_mixed_lanes_deterministic() {
 
 #[test]
 fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
-    // The ISSUE 4 fuzz pin, extended for ISSUE 5: a deterministic-seed
-    // generator builds random batches mixing ALL FOUR lanes — Prefill
-    // (serving AND conv-forward *training* jobs, i.e. the step-scoped
-    // basis flow active) + Decode + Gradient + the LM-backward jobs
-    // (with and without a forward-provided basis handle) — with random
-    // sizes and modes, and every seed must produce input-ordered,
-    // key-echoed results that are bit-identical across worker counts
-    // 1/2/8, training artifacts (probs / basis handles) included.
+    // The ISSUE 4 fuzz pin, extended for ISSUEs 5 and 7: a
+    // deterministic-seed generator builds random batches mixing ALL
+    // FOUR lanes — Prefill (serving, conv-forward *training*, AND the
+    // speculative-decoding verify submits built by `AttnJob::verify`)
+    // + Decode + Gradient + the LM-backward jobs (with and without a
+    // forward-provided basis handle) — with random sizes and modes,
+    // and every seed must produce input-ordered, key-echoed results
+    // that are bit-identical across worker counts 1/2/8, training
+    // artifacts (probs / basis handles) included.
     use conv_basis::coordinator::CachedBasis;
     use conv_basis::gradient::batched::{
         AttnBackwardJob, AttnBackwardMode, FastGradConfig, GradJob,
@@ -728,7 +729,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
         let mut jobs = Vec::with_capacity(count);
         for idx in 0..count {
             let key = 1000 + idx as u64;
-            match rng.below(6) {
+            match rng.below(7) {
                 0 => {
                     // Prefill: random size, exact or strided operator.
                     let n = 12 + rng.below(28);
@@ -833,6 +834,20 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                         AttnJob::causal(4, idx as u32, q, k, v, BatchedBackend::Conv(cfg))
                             .for_training(),
                     ));
+                }
+                5 => {
+                    // Speculative-decoding VERIFY submit: the exact
+                    // batched forward the generation scheduler uses to
+                    // check drafted tokens, mixed into a random batch.
+                    // It must stay a plain exact prefill job — pure,
+                    // worker-count-independent, and inert next to every
+                    // other lane (the scheduler relies on row
+                    // independence of exactly this output).
+                    let n = 12 + rng.below(24);
+                    let d = 2 + 2 * rng.below(3);
+                    let (q, k) = rope_structured_qk(n, d, 2, &mut rng);
+                    let v = Matrix::randn(n, d, &mut rng);
+                    jobs.push(EngineJob::prefill(key, AttnJob::verify(6, idx as u32, q, k, v)));
                 }
                 _ => {
                     // Fast LM backward CONSUMING a step-basis handle —

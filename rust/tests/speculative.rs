@@ -1,0 +1,254 @@
+//! Speculative decoding: the greedy-equivalence oracle harness.
+//!
+//! The contract under test (ISSUE PR 7): with `GenConfig::speculate =
+//! γ`, each scheduler round drafts γ tokens per flight through the
+//! cheap serving decode path, verifies all of them plus one bonus
+//! position in a single exact prefill-lane engine submit, and keeps the
+//! longest accepted prefix. Because verification is **exact** and
+//! decoding is greedy argmax, the emitted stream must be bit-identical
+//! to non-speculative exact-greedy decoding — for every γ, every
+//! worker count, and *any* draft backend (a broken drafter costs
+//! acceptance rate, never correctness). γ = 0 must be the identity:
+//! the plain pre-speculation scheduler path, counter for counter.
+
+use conv_basis::coordinator::{
+    AdmissionConfig, GenConfig, GenRequest, GenStatus, Server, ServerConfig,
+};
+use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
+use conv_basis::tensor::Rng;
+use std::sync::Arc;
+
+fn tiny_model(seed: u64) -> Arc<Transformer> {
+    let mut rng = Rng::seeded(seed);
+    Arc::new(Transformer::new(&ModelConfig::tiny(64), &mut rng))
+}
+
+fn spec_server(
+    model: Arc<Transformer>,
+    backend: AttentionBackend,
+    workers: usize,
+    speculate: usize,
+) -> Server {
+    Server::start(ServerConfig {
+        workers,
+        cache_capacity: 256,
+        gen: Some(GenConfig {
+            model,
+            backend,
+            max_concurrent: 4,
+            admission: AdmissionConfig::default(),
+            speculate,
+        }),
+        ..Default::default()
+    })
+}
+
+/// The greedy oracle: one full exact re-prefill per token. Everything
+/// the speculative scheduler emits must match this bit for bit.
+fn oracle(model: &Transformer, prompt: &[usize], max_new: usize) -> Vec<usize> {
+    let mut toks = prompt.to_vec();
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let rec = model.forward(&toks, &AttentionBackend::Exact, false);
+        let row = rec.logits.row(toks.len() - 1);
+        let mut best = 0;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        out.push(best);
+        if toks.len() == model.cfg.max_seq {
+            break;
+        }
+        toks.push(best);
+    }
+    out
+}
+
+/// Mixed-length prompts exercising different session sizes per wave.
+fn prompts() -> Vec<Vec<usize>> {
+    vec![
+        vec![1, 2, 3, 4],
+        vec![9, 8, 7],
+        vec![5; 10],
+        vec![2, 4, 6, 8, 10, 12, 1, 3, 5],
+    ]
+}
+
+fn run_server(server: &Server, prompts: &[Vec<usize>], max_new: usize) -> Vec<Vec<usize>> {
+    for (i, p) in prompts.iter().enumerate() {
+        server.submit_generate(GenRequest::new(i as u64, p.clone(), max_new));
+    }
+    let mut resps = server.collect_generations(prompts.len());
+    resps.sort_by_key(|r| r.id);
+    assert!(resps.iter().all(|r| r.status == GenStatus::Complete));
+    resps.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn speculative_greedy_bit_matches_oracle_for_all_gammas_and_worker_counts() {
+    let model = tiny_model(71);
+    // max_new = 9 keeps every flight clear of the γ_eff = 0 tail on
+    // full acceptance (remaining − 1 never hits 0 mid-flight for these
+    // γ), so the token accounting below is exact, not just bounded:
+    // every token is either the prefill emission (one per request), an
+    // accepted draft, or a round's bonus.
+    let max_new = 9;
+    let want: Vec<Vec<usize>> = prompts().iter().map(|p| oracle(&model, p, max_new)).collect();
+    for gamma in [1usize, 2, 4, 8] {
+        for workers in [1usize, 2, 8] {
+            let server =
+                spec_server(model.clone(), AttentionBackend::Exact, workers, gamma);
+            let got = run_server(&server, &prompts(), max_new);
+            let s = server.shutdown().snapshot();
+            assert_eq!(
+                got, want,
+                "speculative (γ={gamma}, workers={workers}) diverged from greedy oracle"
+            );
+            let n_req = prompts().len() as u64;
+            assert!(s.spec_rounds >= 1, "γ={gamma} must speculate");
+            // Exact drafts bit-match the exact verifier: full acceptance.
+            assert_eq!(s.spec_accepted, s.spec_drafted, "exact drafts must all verify");
+            // ISSUE counter pin (exact form): accepted ≥ tokens −
+            // prefill emissions − rounds; here it holds with equality.
+            assert!(s.spec_accepted >= s.gen_tokens - n_req - s.spec_rounds);
+            assert_eq!(s.gen_tokens, n_req + s.spec_accepted + s.spec_rounds);
+            // Speculation must amortise: strictly fewer decode-lane
+            // sub-steps than tokens generated (the whole point).
+            let per_step = (model.cfg.n_layers * model.cfg.n_heads) as u64;
+            assert_eq!(s.decode_steps % per_step, 0);
+            assert!(
+                s.decode_steps / per_step < s.gen_tokens,
+                "γ={gamma}: {} decode sub-steps for {} tokens",
+                s.decode_steps / per_step,
+                s.gen_tokens
+            );
+            if gamma >= 2 {
+                // Multi-token rounds: far fewer rounds than tokens.
+                assert!(s.spec_rounds < s.gen_tokens - n_req);
+            }
+        }
+    }
+}
+
+#[test]
+fn broken_conv_drafter_still_emits_the_exact_oracle_stream() {
+    // Adversarial arm: ConvStrided(1) is a deliberately crude drafter —
+    // a single conv basis approximating whole attention rows. Its
+    // drafts drift from the exact argmax, so the verifier rejects; the
+    // emitted stream must STILL be the exact-greedy oracle's, bit for
+    // bit (speculation *upgrades* a conv server to exact greedy:
+    // exactness rests on the verifier, not the drafter), and every
+    // round must make progress (the bonus token — no livelock).
+    let model = tiny_model(72);
+    let max_new = 12;
+    let long_prompts: Vec<Vec<usize>> = vec![
+        (1..=20).collect(),
+        (0..16).map(|i| (i * 7) % 13 + 1).collect(),
+        vec![3; 24],
+    ];
+    let want: Vec<Vec<usize>> =
+        long_prompts.iter().map(|p| oracle(&model, p, max_new)).collect();
+    let server = spec_server(model.clone(), AttentionBackend::ConvStrided(1), 2, 4);
+    let got = run_server(&server, &long_prompts, max_new);
+    let s = server.shutdown().snapshot();
+    assert_eq!(got, want, "conv-drafted speculation must emit the exact oracle stream");
+    assert!(s.spec_rounds >= 1);
+    // Every rejected draft is counted (and none leaked into the
+    // stream — the bit-identity above is the leak detector).
+    assert!(
+        s.spec_accepted < s.spec_drafted,
+        "a k=1 conv drafter matching exact argmax on all {} drafts is a bug magnet — \
+         accepted {} of {}",
+        s.spec_drafted,
+        s.spec_accepted,
+        s.spec_drafted
+    );
+    // No livelock: every speculative round emitted at least its bonus.
+    let n_req = long_prompts.len() as u64;
+    assert!(
+        s.gen_tokens - n_req >= s.spec_rounds,
+        "rounds ({}) outnumber decoded tokens ({})",
+        s.spec_rounds,
+        s.gen_tokens - n_req
+    );
+}
+
+#[test]
+fn gamma_zero_is_the_identity_scheduler_path() {
+    // γ = 0 must run the plain one-token-per-step loop — same tokens,
+    // same decode-step count, and not a single speculative counter.
+    let model = tiny_model(73);
+    let max_new = 6;
+    let want: Vec<Vec<usize>> = prompts().iter().map(|p| oracle(&model, p, max_new)).collect();
+    let server = spec_server(model.clone(), AttentionBackend::Exact, 2, 0);
+    let got = run_server(&server, &prompts(), max_new);
+    let s = server.shutdown().snapshot();
+    assert_eq!(got, want);
+    assert_eq!(s.spec_rounds, 0, "γ = 0 must never speculate");
+    assert_eq!(s.spec_drafted, 0);
+    assert_eq!(s.spec_accepted, 0);
+    // Exactly one decode sub-step per non-prefill token — the plain
+    // path's signature (speculation would change this count).
+    let per_step = (model.cfg.n_layers * model.cfg.n_heads) as u64;
+    let n_req = prompts().len() as u64;
+    assert_eq!(s.decode_steps, (max_new as u64 - 1) * n_req * per_step);
+    assert_eq!(s.gen_tokens, n_req * max_new as u64);
+}
+
+#[test]
+fn per_request_speculate_knob_overrides_the_server_default() {
+    let model = tiny_model(74);
+    let max_new = 9;
+    let p = vec![1, 2, 3, 4, 5];
+    let want = oracle(&model, &p, max_new);
+
+    // Opt IN on a γ = 0 server.
+    let server = spec_server(model.clone(), AttentionBackend::Exact, 2, 0);
+    server.submit_generate(GenRequest::new(0, p.clone(), max_new).with_speculate(4));
+    let resp = server.collect_generations(1);
+    let s = server.shutdown().snapshot();
+    assert_eq!(resp[0].tokens, want);
+    assert!(s.spec_rounds >= 1, "per-request speculate must engage on a γ=0 server");
+
+    // Opt OUT on a γ = 4 server.
+    let server = spec_server(model.clone(), AttentionBackend::Exact, 2, 4);
+    server.submit_generate(GenRequest::new(0, p.clone(), max_new).with_speculate(0));
+    let resp = server.collect_generations(1);
+    let s = server.shutdown().snapshot();
+    assert_eq!(resp[0].tokens, want);
+    assert_eq!(s.spec_rounds, 0, "speculate: 0 must opt a request out entirely");
+}
+
+#[test]
+fn mixed_gammas_in_one_wave_all_match_the_oracle() {
+    // Flights with different γ share scheduler rounds: the γ-sorted
+    // prefix sub-steps and the γ_eff = 0 flights riding sub-step 0
+    // must not perturb each other — every stream stays the oracle's.
+    let model = tiny_model(75);
+    let max_new = 9;
+    let ps = prompts();
+    let gammas = [0usize, 1, 8, 3];
+    let want: Vec<Vec<usize>> = ps.iter().map(|p| oracle(&model, p, max_new)).collect();
+    for workers in [1usize, 2, 8] {
+        let server = spec_server(model.clone(), AttentionBackend::Exact, workers, 2);
+        for (i, p) in ps.iter().enumerate() {
+            server.submit_generate(
+                GenRequest::new(i as u64, p.clone(), max_new).with_speculate(gammas[i]),
+            );
+        }
+        let mut resps = server.collect_generations(ps.len());
+        resps.sort_by_key(|r| r.id);
+        let s = server.shutdown().snapshot();
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(
+                r.tokens, want[i],
+                "mixed-γ wave (workers={workers}): request {i} (γ={}) diverged",
+                gammas[i]
+            );
+        }
+        assert!(s.spec_rounds >= 1);
+        assert_eq!(s.spec_accepted, s.spec_drafted);
+    }
+}
