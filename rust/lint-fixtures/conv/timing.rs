@@ -1,0 +1,9 @@
+//! Lint fixture: `wall-clock` — Instant::now in a kernel module.
+//! Kernel results must be pure functions of inputs, never of time.
+// lint-expect: wall-clock@7
+
+#[allow(dead_code)]
+fn timed_apply(xs: &[f64]) -> (f64, std::time::Duration) {
+    let t0 = std::time::Instant::now();
+    (xs.iter().sum(), t0.elapsed())
+}

@@ -1,0 +1,22 @@
+//! Lint fixture: intentionally clean — every banned token below lives
+//! in a comment, a string literal, or a `#[cfg(test)]` item, pinning
+//! the lint's false-positive behavior.
+// lint-expect: none
+
+/// Docs may mention HashMap, Instant::now, std::sync, or .unwrap().
+#[allow(dead_code)]
+fn describe() -> &'static str {
+    "HashMap and std::thread inside a string are payload, not code"
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn helper_uses_test_only_types() {
+        let mut m: HashMap<u32, u32> = HashMap::new();
+        m.insert(1, 2);
+        assert_eq!(m.remove(&1).unwrap(), 2);
+    }
+}

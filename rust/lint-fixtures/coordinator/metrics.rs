@@ -1,0 +1,20 @@
+//! Lint fixture: `metrics-unbounded-push` — a `.push(` with no
+//! LATENCY_RESERVOIR_CAP token within the two lines above it.
+// lint-expect: metrics-unbounded-push@10
+
+#[allow(dead_code)]
+fn record(samples: &mut Vec<f64>, x: f64) {
+    // No cap guard in the two lines above the push: the reservoir
+    // could grow without bound while the metrics mutex is held.
+    let scaled = x * 2.0;
+    samples.push(scaled);
+}
+
+const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+#[allow(dead_code)]
+fn record_guarded(samples: &mut Vec<f64>, x: f64) {
+    if samples.len() < LATENCY_RESERVOIR_CAP {
+        samples.push(x);
+    }
+}

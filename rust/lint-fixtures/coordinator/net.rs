@@ -1,0 +1,13 @@
+//! Lint fixture: `request-path-unwrap` — a bare `.unwrap()` on the
+//! request path; `.expect("…")` and `.unwrap_or` are the audited forms.
+// lint-expect: request-path-unwrap@7
+
+#[allow(dead_code)]
+fn parse_id(line: &str) -> u64 {
+    line.trim().parse::<u64>().unwrap()
+}
+
+#[allow(dead_code)]
+fn parse_id_audited(line: &str) -> u64 {
+    line.trim().parse::<u64>().expect("fixture: the audited form does not trip the rule")
+}

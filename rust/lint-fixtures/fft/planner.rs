@@ -1,0 +1,8 @@
+//! Lint fixture: `sync-facade` — raw `std::sync` in a module that must
+//! import its primitives through `crate::sync` (the loom swap point).
+// lint-expect: sync-facade@6
+
+#[allow(dead_code)]
+fn read_plan_count(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().expect("fixture")
+}

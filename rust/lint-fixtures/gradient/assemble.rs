@@ -1,0 +1,8 @@
+//! Lint fixture: `hash-iter` — a HashMap in a deterministic module.
+//! The self-test asserts exactly the marker below, rule and line.
+// lint-expect: hash-iter@6
+
+#[allow(dead_code)]
+fn assemble(parts: Vec<(usize, f64)>) -> std::collections::HashMap<usize, f64> {
+    parts.into_iter().collect()
+}

@@ -1,0 +1,55 @@
+//! Offline stand-in for the [`loom`](https://docs.rs/loom) model
+//! checker, mirroring the `rust/xla-stub` pattern: the image cannot
+//! vendor crates, so `--cfg loom` builds resolve the `loom` path
+//! dependency to this crate instead.
+//!
+//! The re-exported types are the `std` originals under loom's module
+//! layout, so every model in `rust/tests/loom_models.rs` compiles and
+//! *runs* — but [`model`] degrades from exhaustive interleaving
+//! exploration (loom's DPOR scheduler) to a seedless stress loop: the
+//! closure is re-run [`model::iterations`] times under the OS
+//! scheduler. A lost wakeup therefore shows up as a hang (caught by
+//! the CI job timeout) or an assertion failure, not as a minimal
+//! counterexample trace. Pointing the `[target.'cfg(loom)']` path
+//! dependency in `rust/Cargo.toml` at a vendored real loom upgrades
+//! every model to exhaustive checking with no source changes.
+//!
+//! Surface notes vs real loom:
+//! * `sync::mpsc` and `thread::sleep` are stub extensions — real loom
+//!   models neither. Only the worker-pool model uses mpsc (the pool's
+//!   channel is its protocol); no model calls `sleep`.
+//! * Real loom's atomics lack `Default` and `const fn new`; the
+//!   modules behind `crate::sync` only construct atomics at runtime,
+//!   so this does not bite, but new code should keep it in mind.
+
+pub mod sync {
+    pub use std::sync::{mpsc, Arc, Barrier, Condvar, Mutex, MutexGuard, RwLock};
+
+    pub mod atomic {
+        pub use std::sync::atomic::*;
+    }
+}
+
+pub mod thread {
+    pub use std::thread::{sleep, spawn, yield_now, JoinHandle};
+}
+
+pub mod model {
+    /// How many times [`super::model`] re-runs its closure. Tunable via
+    /// `LOOM_STUB_ITERS` (default 64); the loom CI job raises it.
+    pub fn iterations() -> usize {
+        std::env::var("LOOM_STUB_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+    }
+}
+
+/// Run a concurrency model. Real loom explores every feasible
+/// interleaving; this stub stress-loops the closure under the OS
+/// scheduler (see crate docs for what that weakens).
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    for _ in 0..model::iterations() {
+        f();
+    }
+}

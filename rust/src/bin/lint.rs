@@ -1,0 +1,132 @@
+//! Repo-invariant lint driver — see `src/lintpass.rs` for the engine
+//! and rule rationales, ARCHITECTURE.md §"Determinism invariants &
+//! static analysis" for the contract it enforces.
+//!
+//! ```text
+//! cargo run --release --bin lint                 # lint rust/src with rust/lint.allow
+//! cargo run --release --bin lint -- --self-test  # fixtures must reproduce their markers
+//! cargo run --release --bin lint -- --root DIR --allow FILE
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations (or self-test mismatch), 2 usage
+//! or I/O error. CI runs `--self-test` then the tree pass *before* the
+//! test step, so a determinism regression fails fast.
+
+use conv_basis::lintpass::{self, RULES};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: lint [--root DIR] [--allow FILE] [--self-test]");
+    eprintln!("rules:");
+    for (id, why) in RULES {
+        eprintln!("  {id:<24} {why}");
+    }
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut root = manifest.join("src");
+    let mut allow_path = manifest.join("lint.allow");
+    let mut self_test = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => return usage(),
+            },
+            "--allow" => match args.next() {
+                Some(f) => allow_path = PathBuf::from(f),
+                None => return usage(),
+            },
+            "--self-test" => self_test = true,
+            "--help" | "-h" => {
+                let _ = usage();
+                return ExitCode::SUCCESS;
+            }
+            _ => return usage(),
+        }
+    }
+
+    if self_test {
+        let fixtures = manifest.join("lint-fixtures");
+        return match lintpass::self_test(&fixtures) {
+            Ok(failures) if failures.is_empty() => {
+                println!("lint self-test: all fixtures reproduce their lint-expect markers");
+                ExitCode::SUCCESS
+            }
+            Ok(failures) => {
+                for f in &failures {
+                    eprintln!("lint self-test FAIL: {f}");
+                }
+                ExitCode::from(1)
+            }
+            Err(e) => {
+                eprintln!("lint self-test: io error: {e}");
+                ExitCode::from(2)
+            }
+        };
+    }
+
+    let allow = if allow_path.exists() {
+        let text = match std::fs::read_to_string(&allow_path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("lint: cannot read {}: {e}", allow_path.display());
+                return ExitCode::from(2);
+            }
+        };
+        match lintpass::parse_allowlist(&text) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("lint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        Vec::new()
+    };
+
+    let report = match lintpass::lint_tree(&root, &allow) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: io error walking {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    for &i in &report.unused_allow {
+        let a = &allow[i];
+        eprintln!(
+            "lint: warning: unused allowlist entry `{} | {} | {}` — remove it from {}",
+            a.rule,
+            a.file,
+            a.substring,
+            allow_path.display()
+        );
+    }
+    if report.is_clean() {
+        println!(
+            "lint: {} files clean ({} allowlisted exception{})",
+            report.files_scanned,
+            allow.len(),
+            if allow.len() == 1 { "" } else { "s" }
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &report.violations {
+            println!("{v}");
+        }
+        eprintln!(
+            "lint: {} violation{} in {} files — fix, or add an audited `rule | file | substring | note` line to {}",
+            report.violations.len(),
+            if report.violations.len() == 1 { "" } else { "s" },
+            report.files_scanned,
+            allow_path.display()
+        );
+        ExitCode::from(1)
+    }
+}

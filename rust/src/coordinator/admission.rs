@@ -28,8 +28,8 @@
 
 use super::metrics::Metrics;
 use super::server::GenRequest;
+use crate::sync::{lock, wait, Arc, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
 
 /// Admission policy for the generation scheduler (see module docs).
 #[derive(Clone, Copy, Debug)]
@@ -63,7 +63,13 @@ impl Default for AdmissionConfig {
 }
 
 /// Why [`AdmissionQueue::wait_for_work`] woke.
-pub(crate) enum Wake {
+///
+/// Public (like `wait_for_work`/`admit`) so the loom models in
+/// `tests/loom_models.rs` and the stable shutdown-race twin in
+/// `tests/shutdown_race.rs` can drive the scheduler protocol directly;
+/// production callers are the generation scheduler only.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Wake {
     /// Waiting requests and/or a dispatcher kick — there is work.
     Work,
     /// Shutdown requested and the waiting line is drained.
@@ -101,7 +107,7 @@ impl AdmissionQueue {
     /// caller can answer busy). Counts `shed_requests` and maintains
     /// the `queue_depth` gauge.
     pub fn submit(&self, req: GenRequest) -> Result<(), GenRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         if g.shutting || g.waiting.len() >= self.cfg.max_queue {
             Metrics::incr(&self.metrics.shed_requests);
             return Err(req);
@@ -115,7 +121,7 @@ impl AdmissionQueue {
     /// Dispatcher ping: attention batches were flushed; wake the
     /// scheduler in case its lane is their executor.
     pub fn kick(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         g.kicks += 1;
         self.cv.notify_all();
     }
@@ -124,7 +130,7 @@ impl AdmissionQueue {
     /// queued still drain ([`Self::wait_for_work`] only reports
     /// [`Wake::Shutdown`] once the line is empty).
     pub fn shutdown(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         g.shutting = true;
         self.cv.notify_all();
     }
@@ -132,8 +138,8 @@ impl AdmissionQueue {
     /// Park until there is work (arrivals or an unseen kick) or until
     /// shutdown with a drained queue. `kick_seen` is the caller's kick
     /// cursor; it advances past any kick this call consumes.
-    pub(crate) fn wait_for_work(&self, kick_seen: &mut u64) -> Wake {
-        let mut g = self.inner.lock().unwrap();
+    pub fn wait_for_work(&self, kick_seen: &mut u64) -> Wake {
+        let mut g = lock(&self.inner);
         loop {
             if g.kicks != *kick_seen {
                 *kick_seen = g.kicks;
@@ -145,7 +151,7 @@ impl AdmissionQueue {
             if g.shutting {
                 return Wake::Shutdown;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait(&self.cv, g);
         }
     }
 
@@ -155,7 +161,7 @@ impl AdmissionQueue {
     /// was already admitted (cancel it in flight), finished, or never
     /// existed. Maintains the `queue_depth` gauge like `admit`.
     pub fn cancel(&self, id: u64) -> Option<GenRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         let pos = g.waiting.iter().position(|r| r.id == id)?;
         let req = g.waiting.remove(pos).expect("position came from this queue");
         Metrics::sub(&self.metrics.queue_depth, 1);
@@ -169,14 +175,14 @@ impl AdmissionQueue {
     /// concurrency. When nothing is running the head request is always
     /// admitted — an oversized request degrades to a batch of one
     /// instead of deadlocking the queue.
-    pub(crate) fn admit(
+    pub fn admit(
         &self,
         running: usize,
         running_tokens: usize,
         steps_since_admit: usize,
         slots: usize,
     ) -> Vec<GenRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock(&self.inner);
         if g.waiting.is_empty() || slots == 0 {
             return Vec::new();
         }
@@ -203,7 +209,7 @@ impl AdmissionQueue {
             }
             prefill += p;
             total += budget;
-            out.push(g.waiting.pop_front().unwrap());
+            out.push(g.waiting.pop_front().expect("front() was Some"));
         }
         Metrics::sub(&self.metrics.queue_depth, out.len() as u64);
         out

@@ -4,7 +4,7 @@
 
 use super::router::Backend;
 use super::server::AttnRequest;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -38,12 +38,12 @@ struct Pending {
 /// Accumulates requests; emits batches.
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
-    pending: HashMap<(Backend, usize), Pending>,
+    pending: BTreeMap<(Backend, usize), Pending>,
 }
 
 impl DynamicBatcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        DynamicBatcher { cfg, pending: HashMap::new() }
+        DynamicBatcher { cfg, pending: BTreeMap::new() }
     }
 
     /// Add a request; returns a batch if this push filled one.
@@ -55,7 +55,7 @@ impl DynamicBatcher {
             .or_insert_with(|| Pending { requests: Vec::new(), opened_at: now });
         entry.requests.push(req);
         if entry.requests.len() >= self.cfg.max_batch {
-            let p = self.pending.remove(&(backend, bucket)).unwrap();
+            let p = self.pending.remove(&(backend, bucket)).expect("entry inserted above");
             Some(Batch { backend, bucket, requests: p.requests, opened_at: p.opened_at })
         } else {
             None
@@ -63,7 +63,10 @@ impl DynamicBatcher {
     }
 
     /// Flush every group whose deadline has passed (or all, when
-    /// `force`).
+    /// `force`). Emission order is (backend, bucket)-sorted — the
+    /// pending map is a `BTreeMap` precisely so flush order (and hence
+    /// dispatch order under equal deadlines) never depends on hasher
+    /// state.
     pub fn flush(&mut self, force: bool) -> Vec<Batch> {
         let now = Instant::now();
         let mut out = Vec::new();
@@ -74,7 +77,7 @@ impl DynamicBatcher {
                 force || now.duration_since(p.opened_at) >= self.cfg.max_wait
             };
             if due {
-                let p = self.pending.remove(&key).unwrap();
+                let p = self.pending.remove(&key).expect("key came from this map");
                 if !p.requests.is_empty() {
                     out.push(Batch {
                         backend: key.0,

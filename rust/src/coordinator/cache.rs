@@ -24,8 +24,8 @@
 //! one logical cache.
 
 use crate::basis::KConvBasis;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::sync::{lock, Arc, Mutex};
+use std::collections::BTreeMap;
 
 /// Number of lock stripes. Eight covers the worker counts this crate's
 /// determinism tests pin (1/2/8) without making per-shard LRU state
@@ -36,7 +36,7 @@ pub const N_SHARDS: usize = 8;
 /// of (Q, K) — the batched engine's *recover once per (layer, head,
 /// seq_len)* reuse unit; the fingerprint guards against collisions when
 /// the same slot sees different content.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct CacheKey {
     pub model_id: u64,
     pub layer: u32,
@@ -87,7 +87,7 @@ pub struct CachedBasis {
 /// (`Metrics::step_basis_hits`), and is dropped with the records when
 /// the step ends — no eviction policy, no lock, no interaction with
 /// serving traffic.
-pub type StepBasis = std::sync::Arc<CachedBasis>;
+pub type StepBasis = crate::sync::Arc<CachedBasis>;
 
 /// Bounded LRU (timestamp-based eviction; sizes are small — the value
 /// payload is `O(kn)` floats, the Appendix A memory claim), striped
@@ -106,7 +106,7 @@ struct Inner {
     /// the resident entry (O(1)), never a deep copy of the `O(k·n)`
     /// basis floats. Entries are immutable once inserted, so sharing
     /// is sound; eviction only drops the shard's reference.
-    map: HashMap<CacheKey, (Arc<CachedBasis>, u64)>,
+    map: BTreeMap<CacheKey, (Arc<CachedBasis>, u64)>,
     clock: u64,
     hits: u64,
     misses: u64,
@@ -127,7 +127,7 @@ impl BasisCache {
     /// `FOperator::from_cached`, decode seeding) read through the
     /// cache's own allocation.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<CachedBasis>> {
-        let mut g = self.shards[shard_of(key)].lock().unwrap();
+        let mut g = lock(&self.shards[shard_of(key)]);
         g.clock += 1;
         let clock = g.clock;
         match g.map.get_mut(key) {
@@ -146,11 +146,13 @@ impl BasisCache {
 
     pub fn put(&self, key: CacheKey, value: CachedBasis) {
         let value = Arc::new(value);
-        let mut g = self.shards[shard_of(&key)].lock().unwrap();
+        let mut g = lock(&self.shards[shard_of(&key)]);
         g.clock += 1;
         let clock = g.clock;
         if g.map.len() >= self.capacity && !g.map.contains_key(&key) {
             // Evict the least-recently used entry of this shard.
+            // BTreeMap iteration is key-ordered, so the victim choice
+            // is deterministic even if stamps ever tied.
             if let Some(victim) = g
                 .map
                 .iter()
@@ -167,7 +169,7 @@ impl BasisCache {
     pub fn stats(&self) -> (u64, u64, usize) {
         let mut agg = (0u64, 0u64, 0usize);
         for s in &self.shards {
-            let g = s.lock().unwrap();
+            let g = lock(s);
             agg.0 += g.hits;
             agg.1 += g.misses;
             agg.2 += g.map.len();
@@ -177,7 +179,7 @@ impl BasisCache {
 
     /// Entries currently resident in one shard (observability / tests).
     pub fn shard_len(&self, shard: usize) -> usize {
-        self.shards[shard].lock().unwrap().map.len()
+        lock(&self.shards[shard]).map.len()
     }
 
     /// Approximate resident floats (memory accounting: `Σ k·n + n`),
@@ -186,7 +188,7 @@ impl BasisCache {
         self.shards
             .iter()
             .map(|s| {
-                let g = s.lock().unwrap();
+                let g = lock(s);
                 g.map
                     .values()
                     .map(|(v, _)| v.post_basis.memory_floats() + v.d_tilde.len())

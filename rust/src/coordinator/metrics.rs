@@ -17,8 +17,8 @@
 //! Replacement uses a fixed-seed xorshift so identical recording
 //! sequences produce identical snapshots (determinism contract).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{lock, Mutex};
 use std::time::Duration;
 
 /// Max resident samples per latency series (see module docs).
@@ -86,7 +86,7 @@ impl Reservoir {
             return LatencyStats::default();
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let resident = s.len();
         let pick = |q: f64| s[((q * (resident - 1) as f64).round() as usize).min(resident - 1)];
         LatencyStats {
@@ -277,21 +277,21 @@ impl Metrics {
     }
 
     pub fn record_queue(&self, d: Duration) {
-        self.queue_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+        lock(&self.queue_lat).record(d.as_secs_f64() * 1e6);
     }
 
     pub fn record_exec(&self, d: Duration) {
-        self.exec_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+        lock(&self.exec_lat).record(d.as_secs_f64() * 1e6);
     }
 
     pub fn record_e2e(&self, d: Duration) {
-        self.e2e_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+        lock(&self.e2e_lat).record(d.as_secs_f64() * 1e6);
     }
 
     /// Per-job decode-step execution time (kept separate from the
     /// prefill `exec` series so the two latency regimes don't mix).
     pub fn record_decode(&self, d: Duration) {
-        self.decode_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+        lock(&self.decode_lat).record(d.as_secs_f64() * 1e6);
     }
 
     /// Whole-generation end-to-end time (submit → response, all
@@ -299,28 +299,28 @@ impl Metrics {
     /// generation is orders of magnitude above one attention request,
     /// and mixing them would corrupt the e2e percentiles.
     pub fn record_gen_e2e(&self, d: Duration) {
-        self.gen_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+        lock(&self.gen_lat).record(d.as_secs_f64() * 1e6);
     }
 
     /// Per-job gradient execution time (its own series — one gradient
     /// job is `O(k·n·d²·log n)`, far above a prefill job, and mixing
     /// the regimes would corrupt the exec percentiles).
     pub fn record_grad(&self, d: Duration) {
-        self.grad_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+        lock(&self.grad_lat).record(d.as_secs_f64() * 1e6);
     }
 
     /// Per-job LM-backward execution time (its own series — an
     /// attention backward is a different cost regime from both a
     /// prefill job and a Definition 5.1 gradient job).
     pub fn record_lm_backward(&self, d: Duration) {
-        self.lm_backward_lat.lock().unwrap().record(d.as_secs_f64() * 1e6);
+        lock(&self.lm_backward_lat).record(d.as_secs_f64() * 1e6);
     }
 
     /// Resident sample count of the e2e series (reservoir bound proof
     /// for tests; the exact observation count lives in the snapshot).
     #[cfg(test)]
     fn e2e_resident_samples(&self) -> usize {
-        self.e2e_lat.lock().unwrap().samples.len()
+        lock(&self.e2e_lat).samples.len()
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -372,13 +372,13 @@ impl Metrics {
             gen_lane_attn_requests: self.gen_lane_attn_requests.load(Ordering::Relaxed),
             merged_attn_requests: self.merged_attn_requests.load(Ordering::Relaxed),
             decode_resident_bytes: self.decode_resident_bytes.load(Ordering::Relaxed),
-            queue: self.queue_lat.lock().unwrap().summarize(),
-            exec: self.exec_lat.lock().unwrap().summarize(),
-            e2e: self.e2e_lat.lock().unwrap().summarize(),
-            decode: self.decode_lat.lock().unwrap().summarize(),
-            gen_e2e: self.gen_lat.lock().unwrap().summarize(),
-            grad: self.grad_lat.lock().unwrap().summarize(),
-            lm_backward: self.lm_backward_lat.lock().unwrap().summarize(),
+            queue: lock(&self.queue_lat).summarize(),
+            exec: lock(&self.exec_lat).summarize(),
+            e2e: lock(&self.e2e_lat).summarize(),
+            decode: lock(&self.decode_lat).summarize(),
+            gen_e2e: lock(&self.gen_lat).summarize(),
+            grad: lock(&self.grad_lat).summarize(),
+            lm_backward: lock(&self.lm_backward_lat).summarize(),
         }
     }
 }

@@ -51,7 +51,7 @@ mod net;
 mod router;
 mod server;
 
-pub use admission::{AdmissionConfig, AdmissionQueue};
+pub use admission::{AdmissionConfig, AdmissionQueue, Wake};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use cache::{fingerprint, shard_of, BasisCache, CacheKey, CachedBasis, StepBasis, N_SHARDS};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, LATENCY_RESERVOIR_CAP};

@@ -50,15 +50,17 @@
 //! 0,1,2,… — the front-end rewrites them onto a server-global id space
 //! and maps responses back before writing.
 
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use super::cache::fingerprint;
 use super::metrics::Metrics;
 use super::router::Backend;
 use super::server::{AttnRequest, GenEvent, GenRequest, GenSink, Payload, Server, ServerConfig};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{lock, mpsc, thread, Arc, Mutex};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Network front-end configuration.
@@ -90,13 +92,13 @@ pub struct NetServer {
     server: Arc<Server>,
     addr: SocketAddr,
     running: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    pump_thread: Option<std::thread::JoinHandle<()>>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+    pump_thread: Option<thread::JoinHandle<()>>,
     pump_stop: mpsc::Sender<()>,
     /// Writer halves of every accepted connection (for shutdown).
     conns: Arc<Mutex<Vec<SharedStream>>>,
     /// Reader threads (joined on shutdown).
-    readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    readers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
 }
 
 impl NetServer {
@@ -109,7 +111,7 @@ impl NetServer {
 
         let running = Arc::new(AtomicBool::new(true));
         let conns: Arc<Mutex<Vec<SharedStream>>> = Arc::new(Mutex::new(Vec::new()));
-        let readers: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        let readers: Arc<Mutex<Vec<thread::JoinHandle<()>>>> =
             Arc::new(Mutex::new(Vec::new()));
         let routes: AttnRoutes = Arc::new(Mutex::new(HashMap::new()));
         let next_id = Arc::new(AtomicU64::new(1));
@@ -120,9 +122,9 @@ impl NetServer {
         let pump_thread = {
             let server = server.clone();
             let routes = routes.clone();
-            Some(std::thread::spawn(move || loop {
+            Some(thread::spawn(move || loop {
                 if let Some(resp) = server.recv_attn_timeout(Duration::from_millis(20)) {
-                    let dest = routes.lock().unwrap().remove(&resp.id);
+                    let dest = lock(&routes).remove(&resp.id);
                     if let Some((client_id, writer)) = dest {
                         let backend = match resp.backend {
                             Backend::Exact => "exact",
@@ -153,7 +155,7 @@ impl NetServer {
             let running = running.clone();
             let conns = conns.clone();
             let readers = readers.clone();
-            Some(std::thread::spawn(move || {
+            Some(thread::spawn(move || {
                 while running.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
@@ -161,17 +163,17 @@ impl NetServer {
                                 Ok(w) => Arc::new(Mutex::new(w)),
                                 Err(_) => continue,
                             };
-                            conns.lock().unwrap().push(writer.clone());
+                            lock(&conns).push(writer.clone());
                             let server = server.clone();
                             let routes = routes.clone();
                             let next_id = next_id.clone();
-                            let handle = std::thread::spawn(move || {
+                            let handle = thread::spawn(move || {
                                 serve_connection(stream, writer, &server, &routes, &next_id);
                             });
-                            readers.lock().unwrap().push(handle);
+                            lock(&readers).push(handle);
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(ACCEPT_POLL);
+                            thread::sleep(ACCEPT_POLL);
                         }
                         Err(_) => break,
                     }
@@ -202,12 +204,12 @@ impl NetServer {
             let _ = t.join();
         }
         // Closing the sockets unblocks every reader's `read_line`.
-        for conn in self.conns.lock().unwrap().drain(..) {
+        for conn in lock(&self.conns).drain(..) {
             if let Ok(s) = conn.lock() {
                 let _ = s.shutdown(Shutdown::Both);
             }
         }
-        let reader_handles: Vec<_> = self.readers.lock().unwrap().drain(..).collect();
+        let reader_handles: Vec<_> = lock(&self.readers).drain(..).collect();
         for r in reader_handles {
             let _ = r.join();
         }
@@ -310,7 +312,7 @@ fn serve_connection(
                     continue;
                 };
                 let internal = next_id.fetch_add(1, Ordering::Relaxed);
-                routes.lock().unwrap().insert(internal, (client_id, writer.clone()));
+                lock(routes).insert(internal, (client_id, writer.clone()));
                 server.submit(AttnRequest {
                     id: internal,
                     seq_len: seq_len as usize,
@@ -329,11 +331,10 @@ fn serve_connection(
 /// pump, the streaming sinks, and the reader never interleave). Errors
 /// are discarded: a dead client just stops receiving.
 fn write_line(writer: &SharedStream, line: &str) {
-    if let Ok(mut s) = writer.lock() {
-        let _ = s.write_all(line.as_bytes());
-        let _ = s.write_all(b"\n");
-        let _ = s.flush();
-    }
+    let mut s = lock(writer);
+    let _ = s.write_all(line.as_bytes());
+    let _ = s.write_all(b"\n");
+    let _ = s.flush();
 }
 
 fn write_error(writer: &SharedStream, msg: &str) {

@@ -6,7 +6,7 @@
 //! apply. Thresholds are configurable and benchable (ablations bench).
 
 /// The backend chosen for a request.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Backend {
     Exact,
     ConvBasis,

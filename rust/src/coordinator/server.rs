@@ -47,6 +47,8 @@
 //! and the dispatcher *kicks* it whenever it flushes attention batches
 //! (no timer polling anywhere in the loop).
 
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use super::admission::{AdmissionConfig, AdmissionQueue, Wake};
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::cache::BasisCache;
@@ -57,8 +59,9 @@ use crate::attention::rope::rope_structured_qk;
 use crate::lowrank::LowRankConfig;
 use crate::model::{AttentionBackend, DecodeSession, Transformer};
 use crate::tensor::{Matrix, Rng};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{lock, mpsc, thread, Arc, Mutex};
+use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
 
 /// Request payload: explicit tensors, or a synthetic structured
@@ -290,18 +293,22 @@ pub struct Server {
     pub cache: Arc<BasisCache>,
     /// The shared batched attention engine all workers execute through.
     pub engine: Arc<BatchedEngine>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     gen_queue: Option<Arc<AdmissionQueue>>,
     gen_resp_tx: Option<mpsc::Sender<GenResponse>>,
     gen_resp_rx: Option<Mutex<mpsc::Receiver<GenResponse>>>,
-    gen_scheduler: Option<std::thread::JoinHandle<()>>,
+    gen_scheduler: Option<thread::JoinHandle<()>>,
     /// Cancellation requests for in-flight generations; the scheduler
     /// sweeps this set once per round (queued requests are cancelled
     /// directly in the admission queue, never through here).
-    gen_cancel: Option<Arc<Mutex<std::collections::HashSet<u64>>>>,
+    gen_cancel: Option<Arc<Mutex<BTreeSet<u64>>>>,
     /// The generation model's `max_seq` (door validation bound).
     gen_max_seq: usize,
+    /// The generation model's vocabulary size (door validation bound:
+    /// an out-of-vocab prompt token would panic the embedding lookup
+    /// deep inside the scheduler thread, so it is rejected here).
+    gen_vocab: usize,
     running: Arc<AtomicBool>,
 }
 
@@ -313,7 +320,7 @@ impl Server {
         let running = Arc::new(AtomicBool::new(true));
         let (dispatch_tx, dispatch_rx) = mpsc::channel::<DispatchMsg>();
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
-        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let (resp_tx, resp_rx) = mpsc::channel::<AttnResponse>();
 
         // The generation admission queue is created before the
@@ -328,7 +335,7 @@ impl Server {
         let running_d = running.clone();
         let metrics_d = metrics.clone();
         let queue_d = gen_queue.clone();
-        let dispatcher = std::thread::spawn(move || {
+        let dispatcher = thread::spawn(move || {
             let mut batcher = DynamicBatcher::new(bcfg);
             let kick = |n: usize| {
                 if n > 0 {
@@ -382,11 +389,8 @@ impl Server {
             let router_w = Router::new(cfg.router);
             let engine_w = engine.clone();
             let lowrank_degree = cfg.lowrank_degree;
-            workers.push(std::thread::spawn(move || loop {
-                let batch = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
+            workers.push(thread::spawn(move || loop {
+                let batch = { lock(&rx).recv() };
                 let Ok(batch) = batch else { break };
                 execute_attn_batch(batch, &router_w, lowrank_degree, &engine_w, &metrics_w, &tx);
             }));
@@ -397,13 +401,15 @@ impl Server {
         // of new arrivals — and, via the merge lane, with flushed
         // attention batches.
         let gen_max_seq = cfg.gen.as_ref().map(|g| g.model.cfg.max_seq).unwrap_or(0);
+        let gen_vocab = cfg.gen.as_ref().map(|g| g.model.cfg.vocab_size).unwrap_or(0);
         let (gen_resp_tx, gen_resp_rx, gen_scheduler, gen_cancel) = match cfg.gen {
             Some(gen_cfg) => {
                 let (rtx, rrx) = mpsc::channel::<GenResponse>();
                 let engine_g = engine.clone();
                 let metrics_g = metrics.clone();
-                let queue_g = gen_queue.clone().unwrap();
-                let cancel = Arc::new(Mutex::new(std::collections::HashSet::new()));
+                let queue_g =
+                    gen_queue.clone().expect("queue was created above whenever cfg.gen is set");
+                let cancel = Arc::new(Mutex::new(BTreeSet::new()));
                 let cancel_g = cancel.clone();
                 let lane = GenLane {
                     batch_rx: batch_rx.clone(),
@@ -412,7 +418,7 @@ impl Server {
                     lowrank_degree: cfg.lowrank_degree,
                 };
                 let rtx_sched = rtx.clone();
-                let handle = std::thread::spawn(move || {
+                let handle = thread::spawn(move || {
                     generation_loop(
                         gen_cfg, &queue_g, rtx_sched, &engine_g, &metrics_g, lane, &cancel_g,
                     );
@@ -437,6 +443,7 @@ impl Server {
             gen_scheduler,
             gen_cancel,
             gen_max_seq,
+            gen_vocab,
             running,
         }
     }
@@ -448,18 +455,21 @@ impl Server {
 
     /// Collect `n` responses (blocking).
     pub fn collect(&self, n: usize) -> Vec<AttnResponse> {
-        let rx = self.resp_rx.lock().unwrap();
+        let rx = lock(&self.resp_rx);
         (0..n).filter_map(|_| rx.recv().ok()).collect()
     }
 
     /// Receive one attention response, waiting at most `timeout` (the
     /// network front-end's response pump).
     pub fn recv_attn_timeout(&self, timeout: Duration) -> Option<AttnResponse> {
-        self.resp_rx.lock().unwrap().recv_timeout(timeout).ok()
+        lock(&self.resp_rx).recv_timeout(timeout).ok()
     }
 
-    /// Submit a generation request (non-blocking). Invalid prompts are
-    /// rejected at the door and a full admission queue sheds with
+    /// Submit a generation request (non-blocking). Invalid prompts
+    /// (empty, longer than the model's `max_seq`, or containing an
+    /// out-of-vocab token id — which would otherwise panic the
+    /// embedding lookup inside the scheduler thread) are rejected at
+    /// the door and a full admission queue sheds with
     /// busy — in both cases the terminal answer (channel response, or
     /// event for sinked requests) is produced here, immediately; the
     /// request never occupies a concurrency slot and never touches the
@@ -468,7 +478,10 @@ impl Server {
     pub fn submit_generate(&self, req: GenRequest) {
         let queue = self.gen_queue.as_ref().expect("ServerConfig.gen required for generation");
         Metrics::incr(&self.metrics.gen_requests);
-        if req.prompt.is_empty() || req.prompt.len() > self.gen_max_seq {
+        if req.prompt.is_empty()
+            || req.prompt.len() > self.gen_max_seq
+            || req.prompt.iter().any(|&t| t >= self.gen_vocab)
+        {
             Metrics::incr(&self.metrics.gen_rejected);
             self.answer_terminal(&req, GenStatus::Rejected);
             return;
@@ -515,7 +528,7 @@ impl Server {
         // for the scheduler's sweep; a kick wakes an idle scheduler so
         // stale ids don't linger in the set.
         if let Some(cancel) = &self.gen_cancel {
-            cancel.lock().unwrap().insert(id);
+            lock(cancel).insert(id);
             queue.kick();
         }
     }
@@ -544,7 +557,7 @@ impl Server {
     /// if the server was started without a [`GenConfig`].
     pub fn collect_generations(&self, n: usize) -> Vec<GenResponse> {
         let rx = self.gen_resp_rx.as_ref().expect("ServerConfig.gen required for generation");
-        let rx = rx.lock().unwrap();
+        let rx = lock(rx);
         (0..n).filter_map(|_| rx.recv().ok()).collect()
     }
 
@@ -771,7 +784,7 @@ fn generation_loop(
     engine: &BatchedEngine,
     metrics: &Metrics,
     lane: GenLane,
-    cancel: &Mutex<std::collections::HashSet<u64>>,
+    cancel: &Mutex<BTreeSet<u64>>,
 ) {
     let model = cfg.model;
     let backend = cfg.backend;
@@ -877,7 +890,7 @@ fn generation_loop(
         // already finished (their terminal `Done` stands; cancel-after-
         // done is a no-op, preserving exactly-one-terminal-event).
         {
-            let mut pending = cancel.lock().unwrap();
+            let mut pending = lock(cancel);
             if !pending.is_empty() {
                 for i in (0..flights.len()).rev() {
                     if !pending.remove(&flights[i].id) {
@@ -950,7 +963,10 @@ fn generation_loop(
             //
             // One decode step for every in-flight sequence: feed each
             // its latest generated token, get the next token's logits.
-            let next: Vec<usize> = flights.iter().map(|f| *f.generated.last().unwrap()).collect();
+            let next: Vec<usize> = flights
+                .iter()
+                .map(|f| *f.generated.last().expect("prefill seeded every flight with a token"))
+                .collect();
             let (logits, rider_outs) =
                 model.decode_step_with_jobs(&mut sessions, &next, engine, rider_jobs);
             // Deliver rider responses batch by batch (input order holds).
@@ -990,8 +1006,8 @@ fn generation_loop(
             let mut old_flights: Vec<Option<GenFlight>> = flights.drain(..).map(Some).collect();
             let mut gam: Vec<usize> = Vec::with_capacity(order.len());
             for &i in &order {
-                sessions.push(old_sessions[i].take().unwrap());
-                flights.push(old_flights[i].take().unwrap());
+                sessions.push(old_sessions[i].take().expect("order permutes each index once"));
+                flights.push(old_flights[i].take().expect("order permutes each index once"));
                 gam.push(gammas[i]);
             }
             let gmax = gam[0];
@@ -1017,9 +1033,12 @@ fn generation_loop(
                 let next: Vec<usize> = (0..m)
                     .map(|i| {
                         if t == 0 {
-                            *flights[i].generated.last().unwrap()
+                            *flights[i]
+                                .generated
+                                .last()
+                                .expect("prefill seeded every flight with a token")
                         } else {
-                            *drafts[i].last().unwrap()
+                            *drafts[i].last().expect("sub-step t > 0 pushed a draft for i < m")
                         }
                     })
                     .collect();
@@ -1105,10 +1124,7 @@ fn generation_loop(
     // the same receiver — either executor is correct; with workers: 0
     // this is the only path that honours flush semantics.
     loop {
-        let batch = {
-            let rx = lane.batch_rx.lock().unwrap();
-            rx.recv()
-        };
+        let batch = { lock(&lane.batch_rx).recv() };
         match batch {
             Ok(batch) => {
                 Metrics::add(&metrics.gen_lane_attn_requests, batch.requests.len() as u64);
@@ -1148,7 +1164,7 @@ pub fn run_trace(
             let due = std::time::Duration::from_micros((r.arrival_us as f64 * time_scale) as u64);
             let elapsed = t0.elapsed();
             if due > elapsed {
-                std::thread::sleep(due - elapsed);
+                thread::sleep(due - elapsed);
             }
         }
         server.submit(AttnRequest {
@@ -1502,6 +1518,37 @@ mod tests {
                     assert_eq!(r.status, GenStatus::Rejected);
                     assert!(r.tokens.is_empty());
                 }
+                _ => {
+                    assert_eq!(r.status, GenStatus::Complete);
+                    assert_eq!(r.tokens.len(), 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_vocab_prompt_is_rejected_not_panicked() {
+        // Regression: a prompt token ≥ vocab_size passed the old door
+        // validation (length-only) and panicked the embedding lookup
+        // inside the scheduler thread — a wire-reachable crash via
+        // {"op":"generate","prompt":[999999],...}. The door now rejects
+        // it and the scheduler keeps serving valid requests.
+        let model = tiny_model(47);
+        let vocab = model.cfg.vocab_size;
+        let server = gen_server(AttentionBackend::Exact, model);
+        server.submit_generate(GenRequest::new(0, vec![1, 2, 3], 4));
+        server.submit_generate(GenRequest::new(1, vec![1, vocab, 2], 4)); // reject
+        server.submit_generate(GenRequest::new(2, vec![999_999], 4)); // reject
+        server.submit_generate(GenRequest::new(3, vec![vocab - 1], 4)); // max valid id
+        let mut resps = server.collect_generations(4);
+        resps.sort_by_key(|r| r.id);
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.gen_requests, 4);
+        assert_eq!(s.gen_completed, 2, "scheduler survived and served the valid requests");
+        assert_eq!(s.gen_rejected, 2);
+        for r in &resps {
+            match r.id {
+                1 | 2 => assert_eq!(r.status, GenStatus::Rejected),
                 _ => {
                     assert_eq!(r.status, GenStatus::Complete);
                     assert_eq!(r.tokens.len(), 4);

@@ -5,8 +5,8 @@
 use super::bluestein::BluesteinPlan;
 use super::radix2::Radix2Plan;
 use super::Complex;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::sync::{lock, Arc, Mutex};
+use std::collections::BTreeMap;
 
 /// A length-specific FFT (radix-2 when possible, Bluestein otherwise).
 #[derive(Debug, Clone)]
@@ -56,7 +56,7 @@ fn build_plan(n: usize) -> Fft {
 /// [`Fft`] clones (plans are immutable after construction).
 #[derive(Debug, Default)]
 pub struct SharedFftPlanner {
-    plans: Mutex<HashMap<usize, Fft>>,
+    plans: Mutex<BTreeMap<usize, Fft>>,
 }
 
 impl SharedFftPlanner {
@@ -70,17 +70,17 @@ impl SharedFftPlanner {
     /// racing duplicate build is discarded (plans are pure functions of
     /// `n`, so whichever insert wins is numerically identical).
     pub fn plan(&self, n: usize) -> Fft {
-        if let Some(f) = self.plans.lock().unwrap().get(&n) {
+        if let Some(f) = lock(&self.plans).get(&n) {
             return f.clone();
         }
         let built = build_plan(n);
-        let mut g = self.plans.lock().unwrap();
+        let mut g = lock(&self.plans);
         g.entry(n).or_insert(built).clone()
     }
 
     /// Number of cached plans (observability for the engine metrics).
     pub fn cached_plans(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        lock(&self.plans).len()
     }
 }
 
@@ -90,18 +90,18 @@ impl SharedFftPlanner {
 /// keeps repeat lookups lock-free.
 #[derive(Debug, Default)]
 pub struct FftPlanner {
-    plans: HashMap<usize, Fft>,
+    plans: BTreeMap<usize, Fft>,
     shared: Option<Arc<SharedFftPlanner>>,
 }
 
 impl FftPlanner {
     pub fn new() -> Self {
-        FftPlanner { plans: HashMap::new(), shared: None }
+        FftPlanner { plans: BTreeMap::new(), shared: None }
     }
 
     /// A planner whose cache misses are served by `shared`.
     pub fn with_shared(shared: Arc<SharedFftPlanner>) -> Self {
-        FftPlanner { plans: HashMap::new(), shared: Some(shared) }
+        FftPlanner { plans: BTreeMap::new(), shared: Some(shared) }
     }
 
     /// Get (or build) a plan for length `n`.

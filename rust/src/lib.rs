@@ -58,6 +58,14 @@
 //! * [`runtime`] — the worker [`runtime::pool`] behind the batched
 //!   engine, plus the (feature-gated) PJRT CPU client loading the AOT
 //!   artifacts produced by `python/compile/aot.py` (HLO text).
+//! * [`sync`] — the std/loom facade every concurrency-bearing module
+//!   imports its primitives through (`RUSTFLAGS="--cfg loom"` flips it
+//!   to the in-tree loom stub for `tests/loom_models.rs`), including
+//!   the poison-recovering `lock`/`wait` helpers.
+//! * [`lintpass`] — the repo-invariant determinism lint engine
+//!   (`cargo run --bin lint`; rules, allowlist, fixture self-test) —
+//!   see `ARCHITECTURE.md` §"Determinism invariants & static
+//!   analysis".
 //!
 //! ## Architecture
 //!
@@ -116,6 +124,12 @@
 //! cargo build --release && cargo test -q
 //! ```
 //!
+//! The static-analysis layer runs alongside: `cargo run --bin lint`
+//! (determinism lint, CI runs it before the tests) and
+//! `RUSTFLAGS="--cfg loom" cargo test --release --test loom_models`
+//! (scheduler protocol models; CI job `loom`), with ThreadSanitizer
+//! and Miri lanes in CI.
+//!
 //! Benches (plain `main()` harnesses) run with
 //! `cargo bench --bench batched_engine`,
 //! `cargo bench --bench decode_step`, etc.; record their tables in
@@ -131,9 +145,11 @@ pub mod coordinator;
 pub mod data;
 pub mod fft;
 pub mod gradient;
+pub mod lintpass;
 pub mod lowrank;
 pub mod model;
 pub mod runtime;
+pub mod sync;
 pub mod tensor;
 pub mod util;
 

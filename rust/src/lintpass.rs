@@ -1,0 +1,598 @@
+//! Repo-invariant lint engine — the static half of the determinism
+//! contract (see ARCHITECTURE.md §"Determinism invariants & static
+//! analysis"). `cargo run --bin lint` drives this over `rust/src`; CI
+//! runs it before the test step so a violation fails the build before
+//! any test burns time.
+//!
+//! This is a *text/syntax-level* pass, not a type-checked one — the
+//! image vendors no syn/rustc libraries, and the forbidden patterns
+//! are all textual by design (that is what makes them reviewable in a
+//! diff). Three pieces of real parsing keep it honest:
+//!
+//! * **String/comment stripping** ([`strip_code`]): rule patterns are
+//!   matched against a copy of the source whose string literals
+//!   (including raw strings and char literals) and comments are
+//!   blanked — a doc comment *mentioning* `HashMap`, or a test
+//!   fixture's `r#"{"op":…}"#` payload, can never trip a rule.
+//! * **`#[cfg(test)]` masking** ([`test_mask`]): items under a
+//!   `#[cfg(test)]` attribute are exempt, tracked by brace balance so
+//!   a mid-file test helper (e.g. the one inside
+//!   `coordinator/metrics.rs`) masks exactly its own item, not the
+//!   rest of the file.
+//! * **An allowlist** ([`parse_allowlist`], `rust/lint.allow`): every
+//!   audited exception is a visible, greppable line with a rationale —
+//!   and [`lint_tree`] reports entries that no longer match anything,
+//!   so stale exemptions rot loudly.
+//!
+//! The rules themselves ([`RULES`]) encode the invariants the dynamic
+//! suites pin by sampling:
+//!
+//! | rule id | forbids | where |
+//! |---|---|---|
+//! | `hash-iter` | any `HashMap`/`HashSet` (hasher-ordered iteration is one `.iter()` away) | deterministic modules |
+//! | `wall-clock` | `Instant::now` / `SystemTime` (results keyed on time) | kernel modules + the worker pool |
+//! | `metrics-unbounded-push` | `.push(` without a reservoir-cap guard | `coordinator/metrics.rs` |
+//! | `request-path-unwrap` | `.unwrap()` on per-connection request paths | `coordinator/net.rs`, `coordinator/server.rs` |
+//! | `sync-facade` | raw `std::sync` / `std::thread` bypassing `crate::sync` | the facade-scoped modules |
+//!
+//! `lintpass.rs`, `sync.rs` and `bin/` are outside every scope by
+//! construction (they define the facade and the patterns).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One rule violation, anchored to a file and 1-based line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Stable rule id (see [`RULES`]).
+    pub rule: &'static str,
+    /// Path relative to the linted root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending source line, trimmed (allowlist substrings match
+    /// against this).
+    pub excerpt: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}:{} {}", self.rule, self.file, self.line, self.excerpt)
+    }
+}
+
+/// Rule ids with one-line rationales (`lint --help` prints these).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "hash-iter",
+        "HashMap/HashSet in a deterministic module: hasher-ordered iteration breaks \
+         bit-identity; use BTreeMap/BTreeSet or allowlist a lookup-only use",
+    ),
+    (
+        "wall-clock",
+        "Instant::now/SystemTime in a kernel module: results must be pure functions of \
+         inputs, never of time",
+    ),
+    (
+        "metrics-unbounded-push",
+        "unguarded .push( under the metrics mutex: latency series must stay bounded by \
+         LATENCY_RESERVOIR_CAP",
+    ),
+    (
+        "request-path-unwrap",
+        ".unwrap() on a per-connection request path: a malformed frame must produce an \
+         error event, not a dead thread",
+    ),
+    (
+        "sync-facade",
+        "raw std::sync/std::thread in a facade-scoped module: import crate::sync so \
+         --cfg loom can swap the primitives",
+    ),
+];
+
+/// Modules whose lock/thread primitives must come from `crate::sync`.
+const FACADE_FILES: &[&str] = &[
+    "runtime/pool.rs",
+    "coordinator/server.rs",
+    "coordinator/admission.rs",
+    "coordinator/net.rs",
+    "coordinator/metrics.rs",
+    "coordinator/cache.rs",
+    "fft/planner.rs",
+];
+
+/// Deterministic fan-out / result-assembly scope for `hash-iter`.
+const HASH_SCOPE_DIRS: &[&str] = &[
+    "attention/",
+    "basis/",
+    "conv/",
+    "coordinator/",
+    "fft/",
+    "gradient/",
+    "lowrank/",
+    "model/",
+    "runtime/",
+    "tensor/",
+];
+
+/// Kernel scope for `wall-clock` (the coordinator is a serving layer —
+/// deadline batching and latency metrics legitimately read the clock).
+const CLOCK_SCOPE_DIRS: &[&str] =
+    &["attention/", "basis/", "conv/", "fft/", "gradient/", "lowrank/", "model/", "tensor/"];
+const CLOCK_SCOPE_FILES: &[&str] = &["runtime/pool.rs"];
+
+/// Per-connection request-path scope for `request-path-unwrap`.
+/// `.expect("invariant")` stays legal as the audited form.
+const UNWRAP_FILES: &[&str] = &["coordinator/net.rs", "coordinator/server.rs"];
+
+const METRICS_FILE: &str = "coordinator/metrics.rs";
+/// A `.push(` within this many lines after the cap token is guarded.
+const METRICS_GUARD_WINDOW: usize = 2;
+
+/// Blank out comments, string/char literals (including raw strings)
+/// with spaces, preserving line structure, so rule patterns never
+/// match prose or payload text.
+pub fn strip_code(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = vec![0u8; 0];
+    let mut i = 0;
+    let n = b.len();
+    let blank = |out: &mut Vec<u8>, seg: &[u8]| {
+        out.extend(seg.iter().map(|&c| if c == b'\n' { b'\n' } else { b' ' }));
+    };
+    while i < n {
+        // Line comment.
+        if b[i] == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let j = src[i..].find('\n').map(|k| i + k).unwrap_or(n);
+            blank(&mut out, &b[i..j]);
+            i = j;
+            continue;
+        }
+        // Block comment (nesting tracked — Rust block comments nest).
+        if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &b[i..j]);
+            i = j;
+            continue;
+        }
+        // Raw string r"…" / r#"…"# (also br"…").
+        if b[i] == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            let mut hashes = 0;
+            while i + 1 + hashes < n && b[i + 1 + hashes] == b'#' {
+                hashes += 1;
+            }
+            if i + 1 + hashes < n && b[i + 1 + hashes] == b'"' {
+                let close: String = format!("\"{}", "#".repeat(hashes));
+                let start = i + 2 + hashes;
+                let j = src[start..].find(&close).map(|k| start + k + close.len()).unwrap_or(n);
+                blank(&mut out, &b[i..j]);
+                i = j;
+                continue;
+            }
+        }
+        // Plain string literal with escapes.
+        if b[i] == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j = (j + 2).min(n);
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &b[i..j]);
+            i = j;
+            continue;
+        }
+        // Char literal — only when it closes ('a', '\n', '\u{1f600}');
+        // lifetimes ('a in generics) never close with a quote.
+        if b[i] == b'\'' {
+            let rest = &src[i + 1..];
+            let lit_len = if let Some(r) = rest.strip_prefix('\\') {
+                // Escape: the char after the backslash is consumed
+                // unconditionally (it may itself be a quote, as in
+                // '\''), then scan to the closing quote.
+                r.get(1..).and_then(|t| t.find('\'')).map(|k| k + 4)
+            } else {
+                let mut ch = rest.chars();
+                match (ch.next(), ch.next()) {
+                    (Some(c0), Some('\'')) => Some(1 + c0.len_utf8() + 1),
+                    _ => None,
+                }
+            };
+            if let Some(l) = lit_len {
+                blank(&mut out, &b[i..(i + l).min(n)]);
+                i = (i + l).min(n);
+                continue;
+            }
+        }
+        out.push(b[i]);
+        i += 1;
+    }
+    String::from_utf8(out).expect("blanking is ascii-space substitution on utf8 boundaries")
+}
+
+/// Per-line mask: `true` where the line belongs to a `#[cfg(test)]`
+/// item. Brace-tracked from the attribute so a mid-file test helper
+/// masks exactly its own item (attribute → first `{` → matching `}`,
+/// or the first `;` for braceless items).
+pub fn test_mask(stripped_lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; stripped_lines.len()];
+    let mut i = 0;
+    while i < stripped_lines.len() {
+        let l = stripped_lines[i];
+        if !(l.contains("#[cfg(test)]") || l.contains("#[cfg(all(test")) {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < stripped_lines.len() {
+            mask[j] = true;
+            for c in stripped_lines[j].chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            if !opened && stripped_lines[j].contains(';') {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// One audited exception from the allowlist file.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    /// Substring the violating line must contain, or `"*"` to exempt
+    /// the whole (rule, file) pair.
+    pub substring: String,
+    pub note: String,
+}
+
+impl AllowEntry {
+    fn matches(&self, v: &Violation) -> bool {
+        self.rule == v.rule
+            && self.file == v.file
+            && (self.substring == "*" || v.excerpt.contains(&self.substring))
+    }
+}
+
+/// Parse the `rule | file | substring-or-* | note` allowlist format
+/// (`#` comments and blank lines skipped). Every entry must carry a
+/// non-empty note — an exception without a rationale is an error.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, '|').map(str::trim).collect();
+        let [rule, file, substring, note] = parts[..] else {
+            return Err(format!("lint.allow:{}: want `rule | file | substring | note`", i + 1));
+        };
+        if !RULES.iter().any(|(id, _)| *id == rule) {
+            return Err(format!("lint.allow:{}: unknown rule id `{rule}`", i + 1));
+        }
+        if note.is_empty() {
+            return Err(format!("lint.allow:{}: an exception needs a rationale note", i + 1));
+        }
+        out.push(AllowEntry {
+            rule: rule.to_string(),
+            file: file.to_string(),
+            substring: substring.to_string(),
+            note: note.to_string(),
+        });
+    }
+    Ok(out)
+}
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}
+
+/// Lint one file's source. `rel` is the `/`-separated path relative to
+/// the linted root (scopes key off it). Returns raw violations — the
+/// allowlist is applied by [`lint_tree`].
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let stripped = strip_code(src);
+    let stripped_lines: Vec<&str> = stripped.lines().collect();
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let mask = test_mask(&stripped_lines);
+    let mut out = Vec::new();
+    let mut push = |rule: &'static str, idx: usize| {
+        out.push(Violation {
+            rule,
+            file: rel.to_string(),
+            line: idx + 1,
+            excerpt: raw_lines.get(idx).unwrap_or(&"").trim().to_string(),
+        });
+    };
+
+    let hash_scope = in_dirs(rel, HASH_SCOPE_DIRS);
+    let clock_scope = in_dirs(rel, CLOCK_SCOPE_DIRS) || CLOCK_SCOPE_FILES.contains(&rel);
+    let facade_scope = FACADE_FILES.contains(&rel);
+    let unwrap_scope = UNWRAP_FILES.contains(&rel);
+    let metrics_scope = rel == METRICS_FILE;
+
+    for (idx, line) in stripped_lines.iter().enumerate() {
+        if mask[idx] {
+            continue;
+        }
+        if hash_scope && (line.contains("HashMap") || line.contains("HashSet")) {
+            push("hash-iter", idx);
+        }
+        if clock_scope && (line.contains("Instant::now") || line.contains("SystemTime")) {
+            push("wall-clock", idx);
+        }
+        if metrics_scope && line.contains(".push(") {
+            let lo = idx.saturating_sub(METRICS_GUARD_WINDOW);
+            let guarded = (lo..=idx).any(|k| stripped_lines[k].contains("LATENCY_RESERVOIR_CAP"));
+            if !guarded {
+                push("metrics-unbounded-push", idx);
+            }
+        }
+        if unwrap_scope && line.contains(".unwrap()") {
+            push("request-path-unwrap", idx);
+        }
+        if facade_scope && (line.contains("std::sync") || line.contains("std::thread")) {
+            push("sync-facade", idx);
+        }
+    }
+    out
+}
+
+/// A whole-tree lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Violations that survived the allowlist, sorted (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Allowlist entries (by index into the parsed list) that matched
+    /// nothing — stale exemptions the caller should surface.
+    pub unused_allow: Vec<usize>,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, lint each, apply the
+/// allowlist. Traversal is sorted, so output order is deterministic.
+pub fn lint_tree(root: &Path, allow: &[AllowEntry]) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    let mut allow_used = vec![false; allow.len()];
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(path)?;
+        report.files_scanned += 1;
+        for v in lint_source(&rel, &src) {
+            let mut allowed = false;
+            for (i, a) in allow.iter().enumerate() {
+                if a.matches(&v) {
+                    allow_used[i] = true;
+                    allowed = true;
+                }
+            }
+            if !allowed {
+                report.violations.push(v);
+            }
+        }
+    }
+    report.violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report.unused_allow = allow_used
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &used)| if used { None } else { Some(i) })
+        .collect();
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Parse `// lint-expect: rule-id@LINE` markers out of a fixture file
+/// (markers live in comments, so the stripped pass never sees them).
+/// `// lint-expect: none` declares an intentionally clean fixture.
+pub fn parse_expectations(src: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for line in src.lines() {
+        let Some(rest) = line.trim().strip_prefix("// lint-expect:") else { continue };
+        let rest = rest.trim();
+        if rest == "none" {
+            continue;
+        }
+        if let Some((rule, ln)) = rest.split_once('@') {
+            if let Ok(ln) = ln.trim().parse::<usize>() {
+                out.push((rule.trim().to_string(), ln));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Run the fixture self-test: every fixture under `fixtures_root` must
+/// produce exactly its `// lint-expect:` markers (no allowlist).
+/// Returns human-readable mismatch descriptions; empty = pass.
+pub fn self_test(fixtures_root: &Path) -> std::io::Result<Vec<String>> {
+    let mut files = Vec::new();
+    collect_rs(fixtures_root, &mut files)?;
+    files.sort();
+    let mut failures = Vec::new();
+    if files.is_empty() {
+        failures.push(format!("no fixtures found under {}", fixtures_root.display()));
+    }
+    for path in &files {
+        let rel = path
+            .strip_prefix(fixtures_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(path)?;
+        let want = parse_expectations(&src);
+        let mut got: Vec<(String, usize)> =
+            lint_source(&rel, &src).into_iter().map(|v| (v.rule.to_string(), v.line)).collect();
+        got.sort();
+        if got != want {
+            failures.push(format!("{rel}: expected {want:?}, lint found {got:?}"));
+        }
+    }
+    Ok(failures)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripping_blanks_strings_and_comments() {
+        let src = "let a = \"HashMap in a string\"; // HashMap in a comment\nlet b = r#\"Instant::now in raw\"#;\n/* HashMap\nacross lines */ let c = 1;\n";
+        let out = strip_code(src);
+        assert!(!out.contains("HashMap"));
+        assert!(!out.contains("Instant::now"));
+        assert!(out.contains("let a ="));
+        assert!(out.contains("let c = 1;"));
+        assert_eq!(out.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn stripping_keeps_lifetimes_and_char_literals_apart() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\nlet esc = '\\n';";
+        let out = strip_code(src);
+        assert!(out.contains("fn f<'a>(x: &'a str)"), "lifetimes survive: {out}");
+        assert!(!out.contains("'x'"), "char literal blanked: {out}");
+        assert!(!out.contains("\\n';"), "escaped char blanked: {out}");
+    }
+
+    #[test]
+    fn test_mask_covers_exactly_the_test_item() {
+        // A mid-file #[cfg(test)] helper (the coordinator/metrics.rs
+        // shape) must mask its own item and nothing after it.
+        let src = "fn a() {\n    let x = 1;\n}\n#[cfg(test)]\nfn helper() {\n    let m = HashMap::new();\n}\nfn b() {\n    let y = 2;\n}\n";
+        let stripped = strip_code(src);
+        let lines: Vec<&str> = stripped.lines().collect();
+        let mask = test_mask(&lines);
+        assert_eq!(
+            mask,
+            vec![false, false, false, true, true, true, true, false, false, false]
+        );
+    }
+
+    #[test]
+    fn rules_fire_and_scope() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(lint_source("conv/x.rs", src).len(), 1);
+        assert_eq!(lint_source("conv/x.rs", src)[0].rule, "hash-iter");
+        // data/ and util/ are outside the deterministic scope.
+        assert!(lint_source("data/x.rs", src).is_empty());
+        // bin/, sync.rs, lintpass.rs sit outside every scope.
+        assert!(lint_source("bin/lint.rs", src).is_empty());
+        assert!(lint_source("sync.rs", "use std::sync::Mutex;\n").is_empty());
+    }
+
+    #[test]
+    fn metrics_push_guard_window() {
+        let guarded = "if self.samples.len() < LATENCY_RESERVOIR_CAP {\n    self.samples.push(x);\n}\n";
+        assert!(lint_source("coordinator/metrics.rs", guarded).is_empty());
+        let unguarded = "fn record(&mut self) {\n    self.samples.push(1.0);\n}\n";
+        let v = lint_source("coordinator/metrics.rs", unguarded);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].rule, v[0].line), ("metrics-unbounded-push", 2));
+        // The same push outside metrics.rs is fine.
+        assert!(lint_source("coordinator/server.rs", unguarded).is_empty());
+    }
+
+    #[test]
+    fn unwrap_rule_spares_expect_and_unwrap_or() {
+        let src = "let a = x.unwrap();\nlet b = y.expect(\"invariant\");\nlet c = z.unwrap_or(0);\n";
+        let v = lint_source("coordinator/net.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].rule, v[0].line), ("request-path-unwrap", 1));
+    }
+
+    #[test]
+    fn allowlist_parses_matches_and_rejects_garbage() {
+        let allow = parse_allowlist(
+            "# comment\n\nhash-iter | coordinator/net.rs | HashMap | lookup-only maps\n",
+        )
+        .expect("valid allowlist");
+        assert_eq!(allow.len(), 1);
+        let v = Violation {
+            rule: "hash-iter",
+            file: "coordinator/net.rs".into(),
+            line: 3,
+            excerpt: "use std::collections::HashMap;".into(),
+        };
+        assert!(allow[0].matches(&v));
+        let other = Violation { file: "coordinator/cache.rs".into(), ..v.clone() };
+        assert!(!allow[0].matches(&other));
+        assert!(parse_allowlist("bogus-rule | f.rs | * | note").is_err());
+        assert!(parse_allowlist("hash-iter | f.rs | *").is_err(), "missing note field");
+        assert!(parse_allowlist("hash-iter | f.rs | * | ").is_err(), "empty note");
+    }
+
+    #[test]
+    fn expectations_parse() {
+        let src = "// lint-expect: hash-iter@6\n// lint-expect: wall-clock@9\ncode();\n";
+        assert_eq!(
+            parse_expectations(src),
+            vec![("hash-iter".to_string(), 6), ("wall-clock".to_string(), 9)]
+        );
+        assert!(parse_expectations("// lint-expect: none\n").is_empty());
+    }
+}

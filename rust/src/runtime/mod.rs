@@ -84,7 +84,7 @@ mod pjrt {
     /// each worker that needs PJRT its own runtime).
     pub struct PjrtRuntime {
         client: xla::PjRtClient,
-        compiled: std::collections::HashMap<String, std::rc::Rc<CompiledModel>>,
+        compiled: std::collections::BTreeMap<String, std::rc::Rc<CompiledModel>>,
     }
 
     impl PjrtRuntime {

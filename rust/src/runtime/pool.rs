@@ -39,8 +39,7 @@
 //!   `map`, not the worker thread; the pool stays fully operational
 //!   for subsequent maps (see `workers_survive_panicking_jobs`).
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use crate::sync::{lock, mpsc, thread, Arc, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -49,7 +48,7 @@ pub struct WorkerPool {
     /// Mutex-wrapped so the pool is `Sync` (shared via `Arc` by the
     /// coordinator's server workers) on every toolchain vintage.
     tx: Option<Mutex<mpsc::Sender<Job>>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
     workers: usize,
 }
 
@@ -62,10 +61,10 @@ impl WorkerPool {
         let handles = (0..workers)
             .map(|_| {
                 let rx = Arc::clone(&rx);
-                std::thread::spawn(move || loop {
+                thread::spawn(move || loop {
                     // Hold the receiver lock only for the dequeue, not
                     // while running the job.
-                    let job = { rx.lock().unwrap().recv() };
+                    let job = { lock(&rx).recv() };
                     match job {
                         // Contain panicking jobs: the worker must
                         // survive (a shared engine would otherwise lose
@@ -89,13 +88,7 @@ impl WorkerPool {
     }
 
     fn submit(&self, job: Job) {
-        self.tx
-            .as_ref()
-            .expect("pool running")
-            .lock()
-            .unwrap()
-            .send(job)
-            .expect("worker threads alive");
+        lock(self.tx.as_ref().expect("pool running")).send(job).expect("worker threads alive");
     }
 
     /// Run `f` over every item on the pool and return the results in

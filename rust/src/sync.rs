@@ -1,0 +1,67 @@
+//! Concurrency facade — the single import point for lock, channel and
+//! thread primitives in every concurrency-bearing module
+//! (`runtime/pool`, `coordinator/{server, admission, net, metrics,
+//! cache}`, `fft/planner`).
+//!
+//! Normally these names resolve to `std::sync` / `std::thread`. Under
+//! `--cfg loom` they resolve to the `loom` package instead, so the
+//! whole library can be model-checked by `tests/loom_models.rs`
+//! without any per-module `#[cfg]` noise (the tokio wiring pattern;
+//! the offline image resolves `loom` to `rust/loom-stub`, see that
+//! crate's docs for what the stub weakens). The repo-invariant lint
+//! (`cargo run --bin lint`, rule `sync-facade`) rejects raw
+//! `std::sync` / `std::thread` paths in the facade-scoped modules so
+//! the migration cannot silently regress.
+//!
+//! The facade also centralizes the mutex-poisoning policy via
+//! [`lock`] / [`wait`]: serving-layer mutexes guard counters,
+//! registries and channel receivers whose invariants are
+//! per-operation, so a panic in one holder must not cascade into every
+//! later request returning `PoisonError` — recover the guard and keep
+//! serving. Code that *wants* poisoning to propagate should call
+//! `.lock()` directly and justify the `unwrap`/`expect` to the lint.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic;
+#[cfg(not(loom))]
+pub use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::thread;
+
+#[cfg(loom)]
+pub use loom::sync::atomic;
+#[cfg(loom)]
+pub use loom::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub use loom::thread;
+
+/// Acquire `m`, recovering the guard if a previous holder panicked
+/// (see the module docs for why the serving layer recovers rather
+/// than propagates poisoning).
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Block on `cv`, releasing `g` while parked; recovers from poisoning
+/// like [`lock`].
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::{lock, Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7, "guard recovered with state intact");
+    }
+}

@@ -1,0 +1,205 @@
+//! Loom models for the coordinator's scheduler protocol, the worker
+//! pool, and the striped basis cache — compiled only under
+//! `RUSTFLAGS="--cfg loom"` (the dedicated CI job):
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Under that cfg the whole crate builds against `crate::sync`'s loom
+//! side, so the primitives these models drive are the very ones
+//! production uses. The in-tree `loom` is `rust/loom-stub` (this image
+//! vendors no external crates): `loom::model` degrades to an iterated
+//! stress loop (`LOOM_STUB_ITERS`, default 64) over std primitives
+//! instead of exhaustive interleaving — repoint the path dependency in
+//! `rust/Cargo.toml` at the real crate to model-check exhaustively;
+//! the models themselves are written to real-loom discipline (state
+//! constructed inside `model`, ≤ 3 threads alive at once, bounded
+//! loops).
+//!
+//! What is pinned here and nowhere else:
+//!
+//! * **No lost dispatcher kick** — `kick()` concurrent with a parking
+//!   `wait_for_work` must wake it with the cursor advanced, never hang
+//!   ([`kick_is_never_lost`], [`push_then_kick_is_visible`]).
+//! * **Shutdown drains, never drops** — every accepted submission is
+//!   admitted before `Wake::Shutdown` is reported, under concurrent
+//!   submit/shutdown ([`shutdown_drains_queued_submissions`]).
+//! * **Cancel/admit race** — a queued request is admitted XOR
+//!   cancelled, exactly once ([`cancel_vs_admit_exactly_one_winner`]).
+//! * **Pool fan-out order** — `WorkerPool::map` restores input order
+//!   whatever the interleaving ([`pool_map_restores_input_order`]).
+//! * **Striped cache coherence** — concurrent put/get on distinct
+//!   (layer, head) shards: own get-after-put hits, aggregated stats
+//!   stay coherent ([`cache_striped_put_get_is_coherent`]).
+//!
+//! The stable-toolchain twins of the scheduler models (wall-clock
+//! watchdogs, full `Server` lifecycle) run unconditionally in
+//! `tests/shutdown_race.rs`.
+#![cfg(loom)]
+
+use conv_basis::basis::{ConvBasis, KConvBasis};
+use conv_basis::coordinator::{
+    AdmissionConfig, AdmissionQueue, BasisCache, CacheKey, CachedBasis, GenRequest, Metrics, Wake,
+};
+use conv_basis::runtime::pool::WorkerPool;
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+fn queue(cfg: AdmissionConfig) -> (Arc<AdmissionQueue>, Arc<Metrics>) {
+    let m = Arc::new(Metrics::new());
+    (Arc::new(AdmissionQueue::new(cfg, Arc::clone(&m))), m)
+}
+
+fn req(id: u64, prompt_len: usize, max_new: usize) -> GenRequest {
+    GenRequest::new(id, vec![1; prompt_len], max_new)
+}
+
+fn dummy_basis(n: usize) -> CachedBasis {
+    CachedBasis {
+        post_basis: KConvBasis::new(n, vec![ConvBasis { b: vec![1.0; n], m: n }]),
+        d_tilde: vec![1.0; n],
+    }
+}
+
+/// A kick racing a parking scheduler is never lost: `wait_for_work`
+/// returns `Work` with the kick cursor advanced, in every interleaving
+/// (kick before the park, during lock acquisition, after the park).
+#[test]
+fn kick_is_never_lost() {
+    loom::model(|| {
+        let (q, _m) = queue(AdmissionConfig::default());
+        let q2 = Arc::clone(&q);
+        let kicker = thread::spawn(move || q2.kick());
+        let mut seen = 0u64;
+        assert_eq!(q.wait_for_work(&mut seen), Wake::Work, "kick must wake the scheduler");
+        assert_eq!(seen, 1, "the consumed kick advances the cursor");
+        kicker.join().unwrap();
+    });
+}
+
+/// State published before `kick()` is visible after the kicked wake:
+/// the queue mutex orders the producer's batch push before the
+/// scheduler's `Wake::Work`, so a woken scheduler never sees an empty
+/// batch table (the missed-flush bug the kick counter exists to kill).
+#[test]
+fn push_then_kick_is_visible() {
+    loom::model(|| {
+        let (q, _m) = queue(AdmissionConfig::default());
+        let batches: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let (q2, b2) = (Arc::clone(&q), Arc::clone(&batches));
+        let producer = thread::spawn(move || {
+            b2.lock().unwrap().push(7);
+            q2.kick();
+        });
+        let mut seen = 0u64;
+        assert_eq!(q.wait_for_work(&mut seen), Wake::Work);
+        // The waiting line is empty, so the wake can only be the kick —
+        // and the kick happens-after the push.
+        assert_eq!(seen, 1);
+        assert_eq!(*batches.lock().unwrap(), vec![7], "pre-kick publish must be visible");
+        producer.join().unwrap();
+    });
+}
+
+/// Shutdown racing a submitter: every accepted request is admitted
+/// before the scheduler observes `Wake::Shutdown` — accepted work is
+/// never dropped, post-shutdown work is shed, and the loop terminates.
+#[test]
+fn shutdown_drains_queued_submissions() {
+    loom::model(|| {
+        let (q, m) = queue(AdmissionConfig::default());
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let (qs, acc) = (Arc::clone(&q), Arc::clone(&accepted));
+        let submitter = thread::spawn(move || {
+            for i in 0..2u64 {
+                if qs.submit(req(i, 2, 1)).is_ok() {
+                    acc.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        });
+        let qstop = Arc::clone(&q);
+        let stopper = thread::spawn(move || qstop.shutdown());
+        let mut seen = 0u64;
+        let mut admitted = 0usize;
+        loop {
+            match q.wait_for_work(&mut seen) {
+                Wake::Work => admitted += q.admit(0, 0, 0, 8).len(),
+                Wake::Shutdown => break,
+            }
+        }
+        submitter.join().unwrap();
+        stopper.join().unwrap();
+        assert_eq!(
+            admitted,
+            accepted.load(Ordering::SeqCst),
+            "Shutdown reported before the waiting line drained"
+        );
+        assert_eq!(m.snapshot().queue_depth, 0);
+    });
+}
+
+/// A queued request racing `cancel` against `admit` has exactly one
+/// winner — never both (double terminal), never neither (lost
+/// request) — and the depth gauge returns to zero either way.
+#[test]
+fn cancel_vs_admit_exactly_one_winner() {
+    loom::model(|| {
+        let (q, m) = queue(AdmissionConfig::default());
+        q.submit(req(5, 2, 1)).expect("fresh queue accepts");
+        let qc = Arc::clone(&q);
+        let canceller = thread::spawn(move || qc.cancel(5).is_some());
+        let admitted = q.admit(0, 0, 0, 8).len();
+        let cancelled = canceller.join().unwrap();
+        assert!(admitted <= 1);
+        assert!(
+            (admitted == 1) ^ cancelled,
+            "request must be admitted XOR cancelled (admitted={admitted}, cancelled={cancelled})"
+        );
+        assert_eq!(m.snapshot().queue_depth, 0);
+    });
+}
+
+/// Pool fan-out: results come back in input order whatever order the
+/// two workers dequeue and finish, and pool drop joins cleanly.
+/// (Under the real loom crate this model needs its `mpsc` gap closed —
+/// see `rust/loom-stub/src/lib.rs`.)
+#[test]
+fn pool_map_restores_input_order() {
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let out = pool.map(vec![10u64, 20, 30, 40, 50], |i, x| x + i as u64);
+        assert_eq!(out, vec![10, 21, 32, 43, 54]);
+    });
+}
+
+/// Striped cache under concurrent writers on distinct (layer, head)
+/// slots: each thread's get-after-put hits its own shard, and the
+/// cross-shard stats aggregation stays coherent.
+#[test]
+fn cache_striped_put_get_is_coherent() {
+    loom::model(|| {
+        let c = Arc::new(BasisCache::new(2));
+        let mut joins = Vec::new();
+        for t in 0..2u32 {
+            let c = Arc::clone(&c);
+            joins.push(thread::spawn(move || {
+                let k = CacheKey {
+                    model_id: 1,
+                    layer: t,
+                    head: 0,
+                    seq_len: 8,
+                    qk_fingerprint: t as u64,
+                };
+                c.put(k.clone(), dummy_basis(4));
+                assert!(c.get(&k).is_some(), "own get-after-put must hit its shard");
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // Layers 0 and 1 stripe to different shards; nothing evicts.
+        assert_eq!(c.stats(), (2, 0, 2), "(hits, misses, len) aggregate across shards");
+    });
+}

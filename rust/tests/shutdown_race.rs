@@ -1,0 +1,168 @@
+//! Stable-toolchain shutdown-race regressions for the generation
+//! scheduler — the always-run twins of `tests/loom_models.rs` (which
+//! needs `--cfg loom`). Three historical hazards are pinned:
+//!
+//! 1. A scheduler parked on the admission condvar with nothing queued
+//!    must observe shutdown and exit — no lost-wakeup hang
+//!    ([`parked_scheduler_shutdown_does_not_hang`], wall-clock
+//!    watchdog).
+//! 2. A submission burst immediately followed by shutdown must drain:
+//!    every request gets exactly one terminal event, none are dropped
+//!    ([`shutdown_after_burst_drops_no_queued_flight`]).
+//! 3. Submitters racing shutdown on the raw [`AdmissionQueue`]: every
+//!    submission is accepted XOR shed, every accepted one is admitted,
+//!    and the scheduler loop terminates
+//!    ([`admission_race_accounts_every_request`]).
+
+use conv_basis::coordinator::{
+    AdmissionConfig, AdmissionQueue, GenConfig, GenEvent, GenRequest, GenSink, Metrics, Server,
+    ServerConfig, Wake,
+};
+use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
+use conv_basis::tensor::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+fn tiny_model(seed: u64) -> Arc<Transformer> {
+    let mut rng = Rng::seeded(seed);
+    Arc::new(Transformer::new(&ModelConfig::tiny(64), &mut rng))
+}
+
+fn gen_server(seed: u64) -> Server {
+    Server::start(ServerConfig {
+        gen: Some(GenConfig {
+            model: tiny_model(seed),
+            backend: AttentionBackend::Exact,
+            max_concurrent: 4,
+            admission: AdmissionConfig::default(),
+            speculate: 0,
+        }),
+        cache_capacity: 64,
+        ..Default::default()
+    })
+}
+
+/// Shutdown must reach a scheduler that is parked (not spinning) on
+/// the admission condvar. A lost wakeup here hangs `shutdown()`
+/// forever, so the whole lifecycle runs on a watchdogged thread.
+#[test]
+fn parked_scheduler_shutdown_does_not_hang() {
+    let (done_tx, done_rx) = mpsc::channel();
+    thread::spawn(move || {
+        let server = gen_server(42);
+        // Give the scheduler time to reach its condvar park with an
+        // empty queue — the exact state a lost wakeup would strand.
+        thread::sleep(Duration::from_millis(50));
+        let snap = server.shutdown().snapshot();
+        let _ = done_tx.send(snap);
+    });
+    let snap = done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("shutdown hung: the parked scheduler never observed the shutdown wakeup");
+    assert_eq!(snap.gen_requests, 0);
+    assert_eq!(snap.queue_depth, 0);
+}
+
+/// Queued flights survive shutdown: `Wake::Shutdown` is reported only
+/// once the waiting line *and* the in-flight batch are drained, so a
+/// burst submitted just before `shutdown()` must produce exactly one
+/// terminal event per request — all `Done`, none silently dropped.
+#[test]
+fn shutdown_after_burst_drops_no_queued_flight() {
+    const K: u64 = 8;
+    let server = gen_server(7);
+    // Let the scheduler park first so the burst races a parked waiter
+    // (the same state as test 1) rather than a spinning one.
+    thread::sleep(Duration::from_millis(20));
+    let terminals = Arc::new(AtomicUsize::new(0));
+    let done = Arc::new(AtomicUsize::new(0));
+    for i in 0..K {
+        let (t, d) = (Arc::clone(&terminals), Arc::clone(&done));
+        let sink = GenSink::new(move |e| match e {
+            GenEvent::Token { .. } => {}
+            GenEvent::Done { tokens, .. } => {
+                assert_eq!(tokens.len(), 2, "drained flights decode their full budget");
+                t.fetch_add(1, Ordering::SeqCst);
+                d.fetch_add(1, Ordering::SeqCst);
+            }
+            GenEvent::Rejected { .. } | GenEvent::Busy { .. } | GenEvent::Cancelled { .. } => {
+                t.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        server.submit_generate(GenRequest::new(i, vec![1, 2, 3], 2).with_stream(sink));
+    }
+    // Shutdown races the still-queued burst (max_concurrent is 4, so
+    // at least one admission wave happens after this call).
+    let snap = server.shutdown().snapshot();
+    assert_eq!(terminals.load(Ordering::SeqCst) as u64, K, "one terminal event per request");
+    assert_eq!(done.load(Ordering::SeqCst) as u64, K, "every queued flight completed");
+    assert_eq!(snap.gen_requests, K);
+    assert_eq!(snap.gen_completed, K);
+    assert_eq!(snap.queue_depth, 0);
+}
+
+/// Submitter threads race shutdown on the raw admission queue (the
+/// protocol `generation_loop` runs): accounting must close exactly —
+/// accepted + shed == submitted, admitted == accepted, depth gauge
+/// back to zero — and the scheduler loop must terminate.
+#[test]
+fn admission_race_accounts_every_request() {
+    const SUBMITTERS: usize = 4;
+    const PER: usize = 16;
+    for round in 0..8u64 {
+        let metrics = Arc::new(Metrics::new());
+        // A tiny queue bound forces the shed path to race too.
+        let q = Arc::new(AdmissionQueue::new(
+            AdmissionConfig { max_queue: 4, ..Default::default() },
+            Arc::clone(&metrics),
+        ));
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let shed = Arc::new(AtomicUsize::new(0));
+        let scheduler = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                let mut seen = 0u64;
+                let mut admitted = 0usize;
+                loop {
+                    match q.wait_for_work(&mut seen) {
+                        Wake::Work => admitted += q.admit(0, 0, 0, usize::MAX).len(),
+                        Wake::Shutdown => break admitted,
+                    }
+                }
+            })
+        };
+        let submitters: Vec<_> = (0..SUBMITTERS)
+            .map(|t| {
+                let (q, acc, sh) = (Arc::clone(&q), Arc::clone(&accepted), Arc::clone(&shed));
+                thread::spawn(move || {
+                    for i in 0..PER {
+                        match q.submit(GenRequest::new((t * PER + i) as u64, vec![1, 2], 1)) {
+                            Ok(()) => {
+                                acc.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(_) => {
+                                sh.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                        if i % 3 == 0 {
+                            thread::yield_now();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for s in submitters {
+            s.join().unwrap();
+        }
+        q.shutdown();
+        let admitted = scheduler.join().expect("scheduler loop must terminate after shutdown");
+        let (acc, sh) = (accepted.load(Ordering::SeqCst), shed.load(Ordering::SeqCst));
+        assert_eq!(acc + sh, SUBMITTERS * PER, "round {round}: every submit resolved");
+        assert_eq!(admitted, acc, "round {round}: every accepted request was admitted");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.queue_depth, 0, "round {round}");
+        assert_eq!(snap.shed_requests as usize, sh, "round {round}");
+    }
+}

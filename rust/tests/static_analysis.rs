@@ -1,0 +1,117 @@
+//! The repo-invariant lint, turned on itself:
+//!
+//! * the shipped `src/` tree lints clean under the shipped
+//!   `lint.allow`, with zero stale allowlist entries;
+//! * every fixture under `lint-fixtures/` reproduces its
+//!   `// lint-expect: rule@line` markers exactly — rule id, file, and
+//!   line — so a rule that drifts (or a fixture that moves a line)
+//!   fails here before it fails confusingly in CI;
+//! * allowlist matching is substring-scoped and unused entries are
+//!   surfaced.
+//!
+//! The same checks gate CI as `cargo run --bin lint -- --self-test`
+//! followed by the tree pass, *before* the test step.
+
+use conv_basis::lintpass::{self, AllowEntry};
+use std::path::PathBuf;
+
+fn manifest() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn shipped_allowlist() -> Vec<AllowEntry> {
+    let text = std::fs::read_to_string(manifest().join("lint.allow")).expect("rust/lint.allow");
+    lintpass::parse_allowlist(&text).expect("shipped allowlist parses")
+}
+
+#[test]
+fn shipped_tree_lints_clean_with_shipped_allowlist() {
+    let allow = shipped_allowlist();
+    let report = lintpass::lint_tree(&manifest().join("src"), &allow).expect("walk src");
+    assert!(
+        report.is_clean(),
+        "determinism-lint violations in the shipped tree:\n{}",
+        report.violations.iter().map(|v| format!("  {v}\n")).collect::<String>()
+    );
+    assert!(
+        report.unused_allow.is_empty(),
+        "stale allowlist entries (delete them from rust/lint.allow): {:?}",
+        report.unused_allow.iter().map(|&i| (&allow[i].rule, &allow[i].file)).collect::<Vec<_>>()
+    );
+    // Sanity: the walk actually covered the crate, not an empty dir.
+    assert!(report.files_scanned > 30, "only {} files scanned", report.files_scanned);
+}
+
+#[test]
+fn shipped_allowlist_is_load_bearing_and_tight() {
+    // Without the allowlist the tree must be dirty (otherwise the
+    // allowlist is dead weight), and every raw violation must be
+    // covered by some shipped (rule, file) entry — no surprises hiding
+    // behind a broad match.
+    let raw = lintpass::lint_tree(&manifest().join("src"), &[]).expect("walk src");
+    assert!(!raw.violations.is_empty(), "allowlist is dead weight — delete rust/lint.allow?");
+    let allow = shipped_allowlist();
+    for v in &raw.violations {
+        assert!(
+            allow.iter().any(|a| a.rule == v.rule && a.file == v.file),
+            "violation not covered by any shipped allowlist entry: {v}"
+        );
+    }
+}
+
+#[test]
+fn fixtures_reproduce_their_markers() {
+    let failures = lintpass::self_test(&manifest().join("lint-fixtures")).expect("walk fixtures");
+    assert!(failures.is_empty(), "lint self-test failures:\n{failures:#?}");
+}
+
+#[test]
+fn fixtures_exact_rule_file_and_line() {
+    // One seeded violation per rule, plus one intentionally clean file
+    // (coordinator/clean.rs) pinning the false-positive behavior —
+    // asserted down to the exact (rule, file, line) triple.
+    let report =
+        lintpass::lint_tree(&manifest().join("lint-fixtures"), &[]).expect("walk fixtures");
+    let got: Vec<(&str, &str, usize)> =
+        report.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect();
+    assert_eq!(
+        got,
+        vec![
+            ("wall-clock", "conv/timing.rs", 7),
+            ("metrics-unbounded-push", "coordinator/metrics.rs", 10),
+            ("request-path-unwrap", "coordinator/net.rs", 7),
+            ("sync-facade", "fft/planner.rs", 6),
+            ("hash-iter", "gradient/assemble.rs", 6),
+        ]
+    );
+    assert_eq!(report.files_scanned, 6, "all fixtures (including the clean one) were scanned");
+}
+
+#[test]
+fn allowlist_substring_scopes_the_exemption() {
+    let hit = AllowEntry {
+        rule: "request-path-unwrap".into(),
+        file: "coordinator/net.rs".into(),
+        substring: "parse::<u64>()".into(),
+        note: "test".into(),
+    };
+    let report = lintpass::lint_tree(&manifest().join("lint-fixtures"), &[hit]).expect("walk");
+    assert!(
+        report.violations.iter().all(|v| v.rule != "request-path-unwrap"),
+        "matching substring must exempt the seeded unwrap"
+    );
+    assert!(report.unused_allow.is_empty());
+
+    let miss = AllowEntry {
+        rule: "request-path-unwrap".into(),
+        file: "coordinator/net.rs".into(),
+        substring: "no-such-text".into(),
+        note: "test".into(),
+    };
+    let report = lintpass::lint_tree(&manifest().join("lint-fixtures"), &[miss]).expect("walk");
+    assert!(
+        report.violations.iter().any(|v| v.rule == "request-path-unwrap"),
+        "non-matching substring must not exempt"
+    );
+    assert_eq!(report.unused_allow, vec![0], "the miss entry is reported stale");
+}
