@@ -1,0 +1,111 @@
+//! PR 9 router table: per-backend prefill cost at each n, then the
+//! routed engine running a mixed per-head table over the same sizes —
+//! the routed column must price like the *mix* of its resolved
+//! backends (routing itself is a table lookup, not a kernel). The
+//! routing decisions the policy resolved to are printed so the table
+//! is self-describing in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use conv_basis::attention::batched::{
+    AttnJob, BatchedBackend, BatchedEngine, EngineConfig, EngineJob, HeadRoute, RouterPolicy,
+};
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::basis::RecoverConfig;
+use conv_basis::lowrank::LowRankConfig;
+use conv_basis::tensor::{Matrix, Rng};
+use conv_basis::util::{fmt_dur, smoke, time_median, Table};
+
+fn prefill(e: &BatchedEngine, jobs: Vec<AttnJob>) {
+    let outs = e.submit(
+        jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect(),
+    );
+    assert!(!outs.is_empty());
+}
+
+/// One (q, k, v) per head — rope-structured so the conv routes
+/// recover, mild uniform values so the low-rank route stays in its
+/// accuracy envelope.
+fn head_inputs(n: usize, d: usize, heads: u32) -> Vec<(Matrix, Matrix, Matrix)> {
+    (0..heads)
+        .map(|h| {
+            let mut rng = Rng::seeded(0xBE + h as u64);
+            let (q, k) = rope_structured_qk(n, d, 2, &mut rng);
+            let v = Matrix::rand_uniform(n, d, 0.4, &mut rng);
+            (q, k, v)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("# PR 9 — adaptive router: per-backend vs routed prefill");
+    let quick = smoke() || std::env::args().any(|a| a == "--quick");
+    let ns: &[usize] = if smoke() {
+        &[96]
+    } else if quick {
+        &[256, 1024]
+    } else {
+        &[256, 1024, 4096]
+    };
+    let d = 8;
+    let heads = 4u32;
+
+    let mut table = Table::new(&["n", "exact", "strided", "conv", "lowrank", "routed(mixed)"]);
+    for &n in ns {
+        let inputs = head_inputs(n, d, heads);
+        let iters = if n <= 1024 { 5 } else { 3 };
+
+        let policy = Arc::new(
+            RouterPolicy::new(HeadRoute::Exact)
+                .set(0, 0, HeadRoute::Exact)
+                .set(0, 1, HeadRoute::Strided(8))
+                .set(0, 2, HeadRoute::Conv(RecoverConfig::exact(n)))
+                .set(0, 3, HeadRoute::LowRank(LowRankConfig::new(2, d as f64))),
+        );
+
+        let run = |backend_for: &dyn Fn(u32) -> BatchedBackend| {
+            let e = BatchedEngine::new(EngineConfig { workers: 4, cache_capacity: 4 });
+            time_median(iters, || {
+                let jobs: Vec<AttnJob> = inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(h, (q, k, v))| {
+                        AttnJob::causal(
+                            0,
+                            h as u32,
+                            q.clone(),
+                            k.clone(),
+                            v.clone(),
+                            backend_for(h as u32),
+                        )
+                    })
+                    .collect();
+                prefill(&e, jobs);
+            })
+        };
+
+        let t_exact = run(&|_| BatchedBackend::Exact);
+        let t_strided = run(&|_| BatchedBackend::Strided(8));
+        let t_conv = run(&|_| BatchedBackend::Conv(RecoverConfig::exact(n)));
+        let t_lowrank = run(&|_| BatchedBackend::LowRank(LowRankConfig::new(2, d as f64)));
+        let t_routed = run(&|_| BatchedBackend::Routed(Arc::clone(&policy)));
+
+        table.row(&[
+            n.to_string(),
+            fmt_dur(t_exact),
+            fmt_dur(t_strided),
+            fmt_dur(t_conv),
+            fmt_dur(t_lowrank),
+            fmt_dur(t_routed),
+        ]);
+
+        // The routing decisions behind the routed column.
+        let decisions: Vec<String> = policy
+            .decisions()
+            .map(|((layer, head), route)| format!("({layer},{head})→{route:?}"))
+            .collect();
+        println!("n={n} routed table: {}", decisions.join("  "));
+    }
+    println!();
+    table.print();
+}

@@ -108,6 +108,7 @@ fn main() {
             seq_len: ART_N,
             d_model: ART_D,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Explicit { q: q.clone(), k: k.clone(), v: v.clone() },
             submitted_at: Instant::now(),
         });

@@ -90,6 +90,25 @@
 //!   equivalent `Conv` prefill job (backward starts recovery-free after
 //!   a forward).
 //!
+//! # Routing (the fifth mode)
+//!
+//! [`BatchedBackend::Routed`] wraps a [`RouterPolicy`] — a frozen,
+//! deterministic per-(layer, head) table choosing exact / conv(k) /
+//! low-rank. Resolution happens *inside* job execution (a pure function
+//! of the table and the job's shape, never of wall clock or worker
+//! identity), then recurses into the identical operator arms, so a
+//! routed job is bit-identical to submitting its resolved backend
+//! directly and shares `BasisCache` entries with direct conv jobs.
+//! Policies come from an explicit static table or from measured
+//! [`HeadProfile`]s via [`RouterPolicy::from_profile`] with pinned
+//! [`ProfilePolicyConfig`] thresholds; only order-independent profile
+//! aggregates feed decisions. Low-rank routes cannot seed a
+//! [`DecodeState`], so decode-bound sessions pin to exact/conv
+//! (`router_decode_pins`); low-rank is also refused per job when the
+//! feature rank reaches the sequence length (`router_rank_refusals`).
+//! `tests/router.rs` pins the equivalence oracle and decision
+//! determinism across runs and worker counts.
+//!
 //! # Worked example
 //!
 //! ```
@@ -139,20 +158,24 @@
 //! ```
 
 use super::decode::{exact_decode_last_row, DecodeState};
+use super::lowrank_backend::{lowrank_prefill, lowrank_viable};
 use super::{
     apply_cached_basis, conv_attention_masked_with, conv_attention_strided_with, exact_attention,
     Mask, MaskKind,
 };
 use crate::basis::{exp_transform, recover_strided, QkColumnOracle, RecoverConfig};
-use crate::coordinator::{fingerprint, BasisCache, CacheKey, CachedBasis, Metrics, StepBasis};
+use crate::coordinator::{
+    fingerprint, BasisCache, CacheKey, CachedBasis, HeadProfile, Metrics, RouteKind, StepBasis,
+};
 use crate::fft::{FftPlanner, SharedFftPlanner};
 use crate::gradient::batched::{
     execute_attn_backward_job, execute_grad_job, AttnBackwardJob, AttnBackwardOutput, GradJob,
     GradOutput,
 };
-use crate::lowrank::{LowRankAttention, LowRankConfig};
+use crate::lowrank::LowRankConfig;
 use crate::runtime::pool::WorkerPool;
 use crate::tensor::Matrix;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Per-job attention operator (the engine-side mirror of the model
@@ -169,6 +192,218 @@ pub enum BatchedBackend {
     Strided(usize),
     /// Theorem 6.5 masked low-rank attention.
     LowRank(LowRankConfig),
+    /// The fifth mode — **not a fifth operator**: a deterministic
+    /// per-(layer, head) [`RouterPolicy`] that resolves to one of the
+    /// four operators above *inside job execution* (so pool fan-out
+    /// stays bit-identical for any worker count) and then runs the
+    /// identical code path — same kernels, same float-op order, same
+    /// cache keys. A routed job's output is therefore bit-identical to
+    /// submitting its resolved backend directly, and routed conv jobs
+    /// share `BasisCache` entries with direct conv jobs.
+    /// Serving-only: training-forward jobs reject `Routed` like every
+    /// other non-Exact/Conv backend.
+    Routed(Arc<RouterPolicy>),
+}
+
+/// One (layer, head) entry of a [`RouterPolicy`] table: which operator
+/// family serves that head, with its configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HeadRoute {
+    /// Exact `O(n²d)` attention.
+    Exact,
+    /// Adaptive binary-search conv recovery.
+    Conv(RecoverConfig),
+    /// Strided conv recovery at `k` uniform onsets.
+    Strided(usize),
+    /// Theorem 6.5 low-rank attention — guarded at job time: refused
+    /// (rerouted to the policy's conv fallback) when the feature rank
+    /// `C(d+g, g)` is not strictly below the sequence length, and
+    /// pinned to exact for decode seeding (low-rank cannot seed a
+    /// `DecodeState` — see [`super::lowrank_backend`]).
+    LowRank(LowRankConfig),
+}
+
+impl HeadRoute {
+    /// The operator family this route resolves to (decision-counter /
+    /// profile bucket).
+    pub fn kind(&self) -> RouteKind {
+        match self {
+            HeadRoute::Exact => RouteKind::Exact,
+            HeadRoute::Conv(_) | HeadRoute::Strided(_) => RouteKind::Conv,
+            HeadRoute::LowRank(_) => RouteKind::LowRank,
+        }
+    }
+}
+
+/// Pinned thresholds for building a [`RouterPolicy`] from measured
+/// [`HeadProfile`]s. Every field is data the caller fixes up front —
+/// nothing here (and nothing in the build) reads a clock, so two
+/// identical profiles always produce identical tables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfilePolicyConfig {
+    /// Heads whose conv fallback rate exceeds this go `Exact`
+    /// (recovery is unreliable for their structure; paying recovery +
+    /// fallback is strictly worse than exact).
+    pub max_fallback_rate: f64,
+    /// Heads at or below this mean recovery error keep the conv route
+    /// (the structure is there and conv wins).
+    pub max_recovery_err: f64,
+    /// The conv route assigned to conv-friendly heads.
+    pub conv: HeadRoute,
+    /// The low-rank configuration assigned to heads whose recovery
+    /// error is too high for conv but that still want subquadratic
+    /// serving (bounded-entry regime). Guarded at job time by the
+    /// rank-vs-n check.
+    pub lowrank: LowRankConfig,
+}
+
+impl Default for ProfilePolicyConfig {
+    fn default() -> Self {
+        ProfilePolicyConfig {
+            max_fallback_rate: 0.5,
+            max_recovery_err: 1e-3,
+            conv: HeadRoute::Strided(8),
+            lowrank: LowRankConfig::new(2, 1.0),
+        }
+    }
+}
+
+/// Deterministic per-(layer, head) routing policy — the data behind
+/// [`BatchedBackend::Routed`].
+///
+/// A policy is a **frozen decision table**: an explicit
+/// `(layer, head) → HeadRoute` map (a `BTreeMap`, per the hash-iter
+/// determinism lint) plus a default route for unlisted heads. It is
+/// built either directly ([`RouterPolicy::new`] / [`RouterPolicy::set`])
+/// or from measured per-head profiles
+/// ([`RouterPolicy::from_profile`] with [`ProfilePolicyConfig`]
+/// thresholds). Either way the table is pinned before any job runs:
+/// resolution at execution time is a pure function of
+/// `(table, layer, head, n, d)` — never of wall clock (the PR-8 lint
+/// forbids `Instant` in kernel paths), worker identity, or batch
+/// composition — so routing decisions are bit-reproducible across
+/// runs, worker counts, and lane mixes (`tests/router.rs`).
+///
+/// The one job-time adjustment is the **rank guard**: a `LowRank`
+/// route whose feature rank `C(d+g, g)` is not strictly below the
+/// job's sequence length is a strict loss, so it reroutes to
+/// [`RouterPolicy::lowrank_fallback`] (and counts
+/// `router_rank_refusals`). The guard depends only on job shape, so it
+/// is exactly as deterministic as the table itself.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouterPolicy {
+    table: BTreeMap<(u32, u32), HeadRoute>,
+    default: HeadRoute,
+    /// Where refused low-rank routes go (rank ≥ n). Never `LowRank`
+    /// itself (constructor-enforced), so resolution terminates.
+    lowrank_fallback: HeadRoute,
+}
+
+impl RouterPolicy {
+    /// A policy routing every head the same way.
+    pub fn new(default: HeadRoute) -> Self {
+        RouterPolicy {
+            table: BTreeMap::new(),
+            default,
+            lowrank_fallback: HeadRoute::Strided(8),
+        }
+    }
+
+    /// Builder: pin one (layer, head) to a route.
+    pub fn set(mut self, layer: u32, head: u32, route: HeadRoute) -> Self {
+        self.table.insert((layer, head), route);
+        self
+    }
+
+    /// Builder: the route refused low-rank jobs take (must not itself
+    /// be `LowRank`).
+    pub fn with_lowrank_fallback(mut self, route: HeadRoute) -> Self {
+        assert!(
+            !matches!(route, HeadRoute::LowRank(_)),
+            "the low-rank fallback must resolve to a non-low-rank operator"
+        );
+        self.lowrank_fallback = route;
+        self
+    }
+
+    /// Build a policy from measured per-head profiles with pinned
+    /// thresholds. The decision table (documented in ARCHITECTURE.md
+    /// §router):
+    ///
+    /// 1. `fallback_rate > max_fallback_rate` → `Exact` — conv
+    ///    recovery keeps failing for this head, so the conv attempt is
+    ///    pure overhead;
+    /// 2. else `mean_recovery_err ≤ max_recovery_err` → the `conv`
+    ///    route — the head's structure rewards a conv basis;
+    /// 3. else → `LowRank` — structure too noisy for conv, entries
+    ///    bounded enough for polynomial features (guarded at job time
+    ///    by rank < n).
+    ///
+    /// Only the **order-independent** profile aggregates feed the
+    /// decisions (integer fallback counters, integer-quantized error
+    /// mean) — never the EMA (order-sensitive) or the latency buckets
+    /// (wall-clock) — so any worker count collecting the profile
+    /// yields the same table, and two identical runs route
+    /// identically. Unprofiled heads take the `conv` route (the
+    /// optimistic default: recovery has its own exact fallback).
+    pub fn from_profile(
+        profiles: &BTreeMap<(u32, u32), HeadProfile>,
+        cfg: &ProfilePolicyConfig,
+    ) -> Self {
+        let mut policy = RouterPolicy::new(cfg.conv.clone());
+        for (&(layer, head), p) in profiles {
+            let route = if p.fallback_rate() > cfg.max_fallback_rate {
+                HeadRoute::Exact
+            } else if p.mean_recovery_err() <= cfg.max_recovery_err {
+                cfg.conv.clone()
+            } else {
+                HeadRoute::LowRank(cfg.lowrank)
+            };
+            policy.table.insert((layer, head), route);
+        }
+        policy
+    }
+
+    /// The table route for one head (before job-time guards).
+    pub fn route(&self, layer: u32, head: u32) -> &HeadRoute {
+        self.table.get(&(layer, head)).unwrap_or(&self.default)
+    }
+
+    /// Resolve one job's route: table lookup plus the rank guard.
+    /// Returns the final route and whether a low-rank route was
+    /// refused (rank ≥ n). Pure in `(self, layer, head, n, d)`.
+    pub fn resolve(&self, layer: u32, head: u32, n: usize, d: usize) -> (&HeadRoute, bool) {
+        match self.route(layer, head) {
+            HeadRoute::LowRank(cfg) if !lowrank_viable(cfg, n, d) => (&self.lowrank_fallback, true),
+            route => (route, false),
+        }
+    }
+
+    /// Table rows in deterministic (layer, head) order (bench /
+    /// report printing — a silent all-exact table can't hide).
+    pub fn decisions(&self) -> impl Iterator<Item = ((u32, u32), &HeadRoute)> {
+        self.table.iter().map(|(&lh, r)| (lh, r))
+    }
+
+    /// The default route for heads not in the table.
+    pub fn default_route(&self) -> &HeadRoute {
+        &self.default
+    }
+
+    /// How many (layer, head) slots of a `layers × heads` grid this
+    /// policy routes to low-rank — the count `prefill_batch` pins to
+    /// exact for decode-bound sessions (`router_decode_pins`).
+    pub fn lowrank_route_count(&self, layers: u32, heads: u32) -> u64 {
+        let mut count = 0u64;
+        for layer in 0..layers {
+            for head in 0..heads {
+                if matches!(self.route(layer, head), HeadRoute::LowRank(_)) {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
 }
 
 /// One (sequence, head) unit of attention work.
@@ -623,9 +858,29 @@ fn execute_job(
     metrics: &Metrics,
     model_id: u64,
 ) -> JobOutput {
+    // Derive the head-profile bucket before execution consumes the job.
+    // For `Routed` jobs the bucket is the *resolved* operator —
+    // re-resolved here through the same pure policy function the inner
+    // arm uses, so the profile observes the route that actually ran.
+    let profile = if job.training {
+        None
+    } else {
+        let kind = match &job.backend {
+            BatchedBackend::Exact => RouteKind::Exact,
+            BatchedBackend::Conv(_) | BatchedBackend::Strided(_) => RouteKind::Conv,
+            BatchedBackend::LowRank(_) => RouteKind::LowRank,
+            BatchedBackend::Routed(policy) => {
+                policy.resolve(job.layer, job.head, job.q.rows(), job.q.cols()).0.kind()
+            }
+        };
+        Some((job.layer, job.head, kind))
+    };
     let t0 = std::time::Instant::now();
     let mut out = execute_job_inner(job, planner, cache, metrics, model_id);
     out.exec = t0.elapsed();
+    if let Some((layer, head, kind)) = profile {
+        metrics.record_head_job(layer, head, kind, out.fell_back, out.exec);
+    }
     out
 }
 
@@ -652,8 +907,46 @@ fn execute_job_inner(
         }
         BatchedBackend::LowRank(cfg) => {
             Metrics::incr(&metrics.lowrank_requests);
-            let lr = LowRankAttention::new(&q, &k, mask, &cfg);
-            serving_output(lr.forward(&v), 0, false, false)
+            serving_output(lowrank_prefill(&q, &k, &v, mask, &cfg), 0, false, false)
+        }
+        BatchedBackend::Routed(policy) => {
+            // Resolve the route *inside* job execution so pool fan-out
+            // never sees routing: every worker count executes the same
+            // resolved job, and the recursion below re-enters the
+            // identical operator arms (same kernels, same cache keys)
+            // a direct-backend submit would hit.
+            Metrics::incr(&metrics.routed_jobs);
+            let (route, refused) = policy.resolve(layer, head, n, q.cols());
+            if refused {
+                Metrics::incr(&metrics.router_rank_refusals);
+            }
+            match route.kind() {
+                RouteKind::Exact => Metrics::incr(&metrics.router_exact_routes),
+                RouteKind::Conv => Metrics::incr(&metrics.router_conv_routes),
+                RouteKind::LowRank => Metrics::incr(&metrics.router_lowrank_routes),
+            }
+            let resolved = match route {
+                HeadRoute::Exact => BatchedBackend::Exact,
+                HeadRoute::Conv(cfg) => BatchedBackend::Conv(*cfg),
+                HeadRoute::Strided(k_bases) => BatchedBackend::Strided(*k_bases),
+                HeadRoute::LowRank(cfg) => BatchedBackend::LowRank(*cfg),
+            };
+            execute_job_inner(
+                AttnJob {
+                    layer,
+                    head,
+                    q,
+                    k,
+                    v,
+                    mask: Some(mask),
+                    backend: resolved,
+                    training: false,
+                },
+                planner,
+                cache,
+                metrics,
+                model_id,
+            )
         }
         BatchedBackend::Conv(cfg) => {
             Metrics::incr(&metrics.conv_requests);
@@ -1485,5 +1778,191 @@ mod tests {
         let snap = e.metrics().snapshot();
         assert_eq!((snap.lm_backward_calls, snap.lm_backward_jobs), (1, 1));
         assert_eq!(snap.lm_backward.count, 1, "per-job latency recorded");
+    }
+
+    // ---- Routed mode (the adaptive approximation router) ----
+
+    /// A mixed policy over a 1-layer × 3-head grid: head 0 exact,
+    /// head 1 strided conv, head 2 low-rank.
+    fn mixed_policy() -> Arc<RouterPolicy> {
+        Arc::new(
+            RouterPolicy::new(HeadRoute::Exact)
+                .set(0, 1, HeadRoute::Strided(4))
+                .set(0, 2, HeadRoute::LowRank(LowRankConfig::new(1, 4.0))),
+        )
+    }
+
+    /// Inputs every routed operator handles without fallback: RoPE
+    /// structure for conv recovery, bounded entries for low-rank.
+    fn routed_inputs(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::seeded(seed);
+        let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn routed_jobs_bit_match_their_resolved_backends() {
+        // One routed submit across the mixed table must be bit-identical
+        // to running each head's resolved backend directly, and the
+        // decision counters must agree with the table.
+        let policy = mixed_policy();
+        let (n, d) = (48, 4);
+        let heads: Vec<(Matrix, Matrix, Matrix)> =
+            (0..3).map(|h| routed_inputs(n, d, 2000 + h)).collect();
+
+        let routed_e = engine(2);
+        let routed = attend(
+            &routed_e,
+            heads
+                .iter()
+                .enumerate()
+                .map(|(h, (q, k, v))| {
+                    AttnJob::causal(
+                        0,
+                        h as u32,
+                        q.clone(),
+                        k.clone(),
+                        v.clone(),
+                        BatchedBackend::Routed(Arc::clone(&policy)),
+                    )
+                })
+                .collect(),
+        );
+
+        let direct_e = engine(2);
+        let directs = [
+            BatchedBackend::Exact,
+            BatchedBackend::Strided(4),
+            BatchedBackend::LowRank(LowRankConfig::new(1, 4.0)),
+        ];
+        let direct = attend(
+            &direct_e,
+            heads
+                .iter()
+                .zip(directs.iter())
+                .enumerate()
+                .map(|(h, ((q, k, v), b))| {
+                    AttnJob::causal(0, h as u32, q.clone(), k.clone(), v.clone(), b.clone())
+                })
+                .collect(),
+        );
+
+        for (h, (r, w)) in routed.iter().zip(&direct).enumerate() {
+            assert_eq!(
+                max_abs_diff(&r.y, &w.y),
+                0.0,
+                "head {h}: routed output must be bit-identical to the direct backend"
+            );
+            assert_eq!(r.fell_back, w.fell_back, "head {h}");
+        }
+        let snap = routed_e.metrics().snapshot();
+        assert_eq!(snap.routed_jobs, 3);
+        assert_eq!(
+            (snap.router_exact_routes, snap.router_conv_routes, snap.router_lowrank_routes),
+            (1, 1, 1)
+        );
+        assert_eq!(snap.router_rank_refusals, 0);
+    }
+
+    #[test]
+    fn routed_conv_shares_cache_with_direct_conv() {
+        // A routed conv job and the matching direct Strided job build
+        // the same CacheKey: the second submit is a cache hit.
+        let policy = Arc::new(RouterPolicy::new(HeadRoute::Strided(4)));
+        let e = engine(1);
+        let (q, k, v) = routed_inputs(40, 8, 2100);
+        let direct = attend(
+            &e,
+            vec![AttnJob::causal(0, 0, q.clone(), k.clone(), v.clone(), BatchedBackend::Strided(4))],
+        );
+        assert!(!direct[0].cache_hit);
+        let routed = attend(
+            &e,
+            vec![AttnJob::causal(0, 0, q, k, v, BatchedBackend::Routed(policy))],
+        );
+        assert!(routed[0].cache_hit, "routed conv must hit the direct conv's basis");
+        assert_eq!(max_abs_diff(&routed[0].y, &direct[0].y), 0.0);
+    }
+
+    #[test]
+    fn rank_guard_reroutes_unviable_lowrank() {
+        // Degree 2 at d = 4 has rank C(6, 2) = 15 ≥ n = 12: the policy's
+        // low-rank route must reroute to the fallback and be counted.
+        let policy = Arc::new(
+            RouterPolicy::new(HeadRoute::LowRank(LowRankConfig::new(2, 4.0)))
+                .with_lowrank_fallback(HeadRoute::Exact),
+        );
+        let e = engine(1);
+        let (n, d) = (12, 4);
+        let mut rng = Rng::seeded(2200);
+        let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+        let v = Matrix::randn(n, d, &mut rng);
+        let want = exact_attention(&q, &k, &v, &Mask::causal(n));
+        let outs =
+            attend(&e, vec![AttnJob::causal(0, 0, q, k, v, BatchedBackend::Routed(policy))]);
+        assert_eq!(max_abs_diff(&outs[0].y, &want), 0.0, "refused low-rank runs the fallback");
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.router_rank_refusals, 1);
+        assert_eq!(snap.router_lowrank_routes, 0, "a refused route is not a low-rank route");
+        assert_eq!(snap.router_exact_routes, 1);
+    }
+
+    #[test]
+    fn profile_driven_policy_is_deterministic_and_follows_the_table() {
+        // Build profiles exercising all three decision rows, convert
+        // twice: identical tables, and each head lands where the
+        // documented decision table says.
+        let metrics = Metrics::new();
+        // Head (0,0): fallback rate 1.0 > 0.5 → Exact.
+        metrics.record_head_job(0, 0, RouteKind::Conv, true, std::time::Duration::ZERO);
+        // Head (0,1): no fallbacks, tiny error → conv.
+        metrics.record_head_job(0, 1, RouteKind::Conv, false, std::time::Duration::ZERO);
+        metrics.record_head_recovery_err(0, 1, 1e-6);
+        // Head (0,2): no fallbacks, large error → low-rank.
+        metrics.record_head_job(0, 2, RouteKind::Conv, false, std::time::Duration::ZERO);
+        metrics.record_head_recovery_err(0, 2, 0.25);
+        let profiles = metrics.head_profiles();
+        let cfg = ProfilePolicyConfig::default();
+        let a = RouterPolicy::from_profile(&profiles, &cfg);
+        let b = RouterPolicy::from_profile(&profiles, &cfg);
+        assert_eq!(a, b, "same profile + same thresholds → same table");
+        assert_eq!(*a.route(0, 0), HeadRoute::Exact);
+        assert_eq!(*a.route(0, 1), cfg.conv);
+        assert_eq!(*a.route(0, 2), HeadRoute::LowRank(cfg.lowrank));
+        // Unprofiled heads take the optimistic conv default.
+        assert_eq!(*a.route(7, 7), cfg.conv);
+    }
+
+    #[test]
+    #[should_panic(expected = "a pool job panicked")]
+    fn routed_training_jobs_are_rejected() {
+        // The training path rejects Routed like every non-Exact/Conv
+        // backend; the pool contains the job panic and resurfaces it in
+        // the submitting caller.
+        let e = engine(1);
+        let (q, k, v) = routed_inputs(16, 4, 2300);
+        let job = AttnJob::causal(0, 0, q, k, v, BatchedBackend::Routed(mixed_policy()))
+            .for_training();
+        let _ = e.submit(vec![EngineJob::prefill(0, job)]);
+    }
+
+    #[test]
+    fn head_profiles_record_resolved_route_kinds() {
+        let policy = mixed_policy();
+        let e = engine(2);
+        let jobs: Vec<AttnJob> = (0..3)
+            .map(|h| {
+                let (q, k, v) = routed_inputs(48, 4, 2400 + h as u64);
+                AttnJob::causal(0, h, q, k, v, BatchedBackend::Routed(Arc::clone(&policy)))
+            })
+            .collect();
+        let _ = attend(&e, jobs);
+        let profiles = e.metrics().head_profiles();
+        assert_eq!(profiles.len(), 3);
+        assert_eq!(profiles[&(0, 0)].exact_jobs, 1);
+        assert_eq!(profiles[&(0, 1)].conv_jobs, 1);
+        assert_eq!(profiles[&(0, 2)].lowrank_jobs, 1);
     }
 }

@@ -1,0 +1,101 @@
+//! Low-rank prefill adapter: the [`crate::lowrank`] masked kernels
+//! (Theorem 6.5) shaped like an engine prefill operator.
+//!
+//! The `lowrank` module has carried the paper's masked low-rank
+//! approximation — `Ỹ = D̃⁻¹ (W ∘ U₁U₂ᵀ) V` with the causal
+//! prefix-sum kernel (Algorithm 4) — since the Theorem 6.5 PR, but
+//! only as a standalone library. This adapter is the thin seam that
+//! lets a [`BatchedBackend::LowRank`](super::batched::BatchedBackend)
+//! or routed job execute it as an `AttnJob`-shaped causal prefill:
+//! same `(q, k, v, mask) → y` signature as the exact and conv
+//! operators, same float-op order as calling
+//! [`LowRankAttention::new`] + [`LowRankAttention::forward`] directly
+//! (it delegates — routed low-rank output is therefore bit-identical
+//! to a direct `BatchedBackend::LowRank` job).
+//!
+//! # What a low-rank route can and cannot do
+//!
+//! * **Prefill**: `O(n·k·d)` with feature rank `k = C(d+g, g)` —
+//!   a win exactly when `k < n` ([`lowrank_viable`] is the router's
+//!   guard; past it, low-rank is strictly more work than exact).
+//! * **Decode**: a low-rank route **cannot seed a
+//!   [`DecodeState`](super::decode::DecodeState)**
+//!   ([`CAN_SEED_DECODE`] is `false`): the decode path appends rows to
+//!   a recovered *conv basis*, and `U₁U₂ᵀ` has no conv structure to
+//!   append to. The router therefore pins decode-bound sessions to
+//!   exact/conv (`AttentionBackend::Routed` maps `to_decode()` to the
+//!   exact last-row kernel), counting the refusals in
+//!   `Metrics::router_decode_pins` — the seed-hit invariants of the
+//!   generation path survive routing untouched.
+
+use super::Mask;
+use crate::lowrank::{LowRankAttention, LowRankConfig};
+use crate::tensor::Matrix;
+
+/// Low-rank routes cannot seed a conv [`DecodeState`]
+/// (see the module docs); the router pins decode to exact/conv.
+///
+/// [`DecodeState`]: super::decode::DecodeState
+pub const CAN_SEED_DECODE: bool = false;
+
+/// Is a low-rank route a win at this shape? Rank `k = C(d+g, g)` must
+/// be strictly below `n`, otherwise the `O(n·k·d)` feature path costs
+/// at least the `O(n²·d)` exact kernel. [`LowRankConfig::rank`]
+/// saturates on overflow, so absurd `(d, g)` pairs fail this check
+/// instead of wrapping into a spuriously tiny rank.
+pub fn lowrank_viable(cfg: &LowRankConfig, n: usize, d: usize) -> bool {
+    cfg.rank(d) < n
+}
+
+/// One (sequence, head) causal low-rank prefill, `AttnJob`-shaped:
+/// build the polynomial factors once, then
+/// `Ỹ = D̃⁻¹ (W ∘ U₁U₂ᵀ) V` through the mask's fast kernel (causal →
+/// Algorithm 4 prefix sums, `O(n·k)` per column). Bit-identical to
+/// `LowRankAttention::new(q, k, mask, cfg).forward(v)` — this adapter
+/// only shapes the call, it never reorders a float op.
+pub fn lowrank_prefill(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    mask: Mask,
+    cfg: &LowRankConfig,
+) -> Matrix {
+    LowRankAttention::new(q, k, mask, cfg).forward(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{max_abs_diff, Rng};
+
+    #[test]
+    fn adapter_is_bit_identical_to_direct_lowrank() {
+        let mut rng = Rng::seeded(42);
+        let (n, d) = (24, 4);
+        let q = Matrix::rand_uniform(n, d, 0.8, &mut rng);
+        let k = Matrix::rand_uniform(n, d, 0.8, &mut rng);
+        let v = Matrix::randn(n, d, &mut rng);
+        let cfg = LowRankConfig::new(2, d as f64);
+        let mask = Mask::causal(n);
+        let direct = LowRankAttention::new(&q, &k, mask.clone(), &cfg).forward(&v);
+        let adapted = lowrank_prefill(&q, &k, &v, mask, &cfg);
+        assert_eq!(max_abs_diff(&direct, &adapted), 0.0);
+    }
+
+    #[test]
+    fn viability_is_rank_below_n() {
+        let cfg = LowRankConfig::new(2, 4.0);
+        // C(4+2, 2) = 15: viable at n = 64, a loss at n = 15.
+        assert!(lowrank_viable(&cfg, 64, 4));
+        assert!(!lowrank_viable(&cfg, 15, 4));
+        assert!(!lowrank_viable(&cfg, 8, 4));
+        // Saturated ranks (overflowed binomials) are never viable.
+        let absurd = LowRankConfig::new(35, 1.0);
+        assert!(!lowrank_viable(&absurd, 1 << 20, 35));
+    }
+
+    #[test]
+    fn decode_seeding_is_declared_impossible() {
+        assert!(!CAN_SEED_DECODE);
+    }
+}

@@ -10,6 +10,7 @@
 
 pub mod batched;
 pub mod decode;
+pub mod lowrank_backend;
 pub mod mask;
 pub mod rope;
 

@@ -120,6 +120,7 @@ mod tests {
             seq_len: n,
             d_model: 8,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Synthetic { seed: id },
             submitted_at: Instant::now(),
         }

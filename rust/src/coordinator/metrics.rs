@@ -19,10 +19,108 @@
 
 use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{lock, Mutex};
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Max resident samples per latency series (see module docs).
 pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// EMA smoothing for [`HeadProfile::err_ema`] — a pinned constant
+/// (never tuned at runtime), part of the router determinism contract.
+pub const HEAD_ERR_EMA_ALPHA: f64 = 0.125;
+
+/// Quantum for the order-independent recovery-error aggregate: errors
+/// are accumulated as integer multiples of `1e-9` (saturating), so the
+/// per-head mean is identical regardless of the order concurrent
+/// workers recorded observations in — integer addition commutes where
+/// float addition does not. `RouterPolicy::from_profile` thresholds
+/// against this mean, never the (order-sensitive) EMA.
+pub const HEAD_ERR_QUANTUM: f64 = 1e-9;
+
+/// Which operator family served a (layer, head) prefill job — the
+/// profile's latency buckets (and the router's decision counters) key
+/// on this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteKind {
+    Exact,
+    Conv,
+    LowRank,
+}
+
+/// Measured per-(layer, head) serving profile: the inputs a
+/// profile-driven `RouterPolicy` thresholds against, plus
+/// observability extras.
+///
+/// Determinism note: routing decisions may depend only on the
+/// **order-independent** aggregates — `fallback_rate()` (integer
+/// counters) and `mean_recovery_err()` (integer-quantized sum) — so a
+/// profile fed by any worker count yields the same decision table.
+/// `err_ema` (sequential EMA) and the per-backend latency totals are
+/// observability views: the EMA depends on observation order and the
+/// latencies on wall clock, so neither may feed a routing decision
+/// (the PR-8 lint forbids wall-clock in kernel paths for exactly this
+/// reason).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HeadProfile {
+    /// Serving prefill jobs observed for this head.
+    pub jobs: u64,
+    /// Jobs whose conv path fell back to exact.
+    pub fallbacks: u64,
+    /// Recovery-error EMA (α = [`HEAD_ERR_EMA_ALPHA`]) — dashboard
+    /// view; order-sensitive, never a decision input.
+    pub err_ema: f64,
+    /// Recovery-error sum in [`HEAD_ERR_QUANTUM`] units (saturating) —
+    /// the order-independent aggregate decisions use.
+    pub err_quanta: u64,
+    /// Recovery-error observations recorded.
+    pub err_samples: u64,
+    /// Per-backend wall-time totals (ns) and job counts — latency
+    /// observability only (see the determinism note above).
+    pub exact_ns: u64,
+    pub exact_jobs: u64,
+    pub conv_ns: u64,
+    pub conv_jobs: u64,
+    pub lowrank_ns: u64,
+    pub lowrank_jobs: u64,
+}
+
+impl HeadProfile {
+    /// Fraction of this head's jobs whose conv recovery fell back to
+    /// exact (0.0 when nothing ran). Order-independent.
+    pub fn fallback_rate(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.fallbacks as f64 / self.jobs as f64
+        }
+    }
+
+    /// Mean recovery error over the recorded observations, from the
+    /// integer-quantized sum (order-independent; resolution
+    /// [`HEAD_ERR_QUANTUM`]). 0.0 when no observation was recorded.
+    pub fn mean_recovery_err(&self) -> f64 {
+        if self.err_samples == 0 {
+            0.0
+        } else {
+            (self.err_quanta as f64 * HEAD_ERR_QUANTUM) / self.err_samples as f64
+        }
+    }
+
+    /// Mean execution wall time (µs) for one backend bucket
+    /// (observability only).
+    pub fn mean_exec_us(&self, kind: RouteKind) -> f64 {
+        let (ns, jobs) = match kind {
+            RouteKind::Exact => (self.exact_ns, self.exact_jobs),
+            RouteKind::Conv => (self.conv_ns, self.conv_jobs),
+            RouteKind::LowRank => (self.lowrank_ns, self.lowrank_jobs),
+        };
+        if jobs == 0 {
+            0.0
+        } else {
+            ns as f64 / jobs as f64 / 1e3
+        }
+    }
+}
 
 /// Latency summary (microseconds).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -246,6 +344,29 @@ pub struct Metrics {
     /// decode states. Raised by `Transformer::{prefill_batch,
     /// decode_step}`, lowered by `DecodeSession::retire`.
     pub decode_resident_bytes: AtomicU64,
+    /// Prefill jobs that entered the engine with the `Routed` backend
+    /// (the per-(layer, head) policy mode). Each also lands in exactly
+    /// one of the `router_*_routes` decision counters below, plus the
+    /// per-backend request counter of whatever operator actually ran.
+    pub routed_jobs: AtomicU64,
+    /// Routed jobs resolved to the exact operator.
+    pub router_exact_routes: AtomicU64,
+    /// Routed jobs resolved to a conv operator (adaptive or strided).
+    pub router_conv_routes: AtomicU64,
+    /// Routed jobs resolved to the low-rank operator.
+    pub router_lowrank_routes: AtomicU64,
+    /// Low-rank routes refused at job time because the feature rank
+    /// `C(d+g, g)` was ≥ the sequence length (low-rank is a strict
+    /// loss there) — rerouted to the policy's conv fallback. Counted
+    /// *in addition to* the decision counter of the fallback route.
+    pub router_rank_refusals: AtomicU64,
+    /// Low-rank-preferring (layer, head) routes pinned to the exact
+    /// kernel for a decode-bound session: low-rank cannot seed a
+    /// `DecodeState` (no conv structure to append to), so
+    /// `AttentionBackend::Routed` decodes exact and counts each pinned
+    /// (session, layer, head) here. The decode seed-hit invariants
+    /// survive routing because of exactly this pin.
+    pub router_decode_pins: AtomicU64,
     queue_lat: Mutex<Reservoir>,
     exec_lat: Mutex<Reservoir>,
     e2e_lat: Mutex<Reservoir>,
@@ -253,6 +374,13 @@ pub struct Metrics {
     gen_lat: Mutex<Reservoir>,
     grad_lat: Mutex<Reservoir>,
     lm_backward_lat: Mutex<Reservoir>,
+    /// Per-(layer, head) serving aggregation ([`HeadProfile`]) — the
+    /// measured inputs a profile-driven `RouterPolicy` is built from.
+    /// A `BTreeMap` (not a `HashMap`): iteration order is part of the
+    /// determinism contract — `RouterPolicy::from_profile` walks it to
+    /// build the decision table, and the hash-iter lint forbids
+    /// nondeterministic-iteration maps on decision-feeding paths.
+    head_profiles: Mutex<BTreeMap<(u32, u32), HeadProfile>>,
 }
 
 impl Metrics {
@@ -316,6 +444,70 @@ impl Metrics {
         lock(&self.lm_backward_lat).record(d.as_secs_f64() * 1e6);
     }
 
+    /// Record one serving prefill job into its (layer, head) profile:
+    /// which operator family served it, whether the conv path fell
+    /// back, and its worker wall time (latency observability only —
+    /// see the [`HeadProfile`] determinism note). The engine calls
+    /// this once per serving prefill job.
+    pub fn record_head_job(
+        &self,
+        layer: u32,
+        head: u32,
+        kind: RouteKind,
+        fell_back: bool,
+        exec: Duration,
+    ) {
+        let ns = u64::try_from(exec.as_nanos()).unwrap_or(u64::MAX);
+        let mut map = lock(&self.head_profiles);
+        let p = map.entry((layer, head)).or_default();
+        p.jobs += 1;
+        if fell_back {
+            p.fallbacks += 1;
+        }
+        match kind {
+            RouteKind::Exact => {
+                p.exact_jobs += 1;
+                p.exact_ns = p.exact_ns.saturating_add(ns);
+            }
+            RouteKind::Conv => {
+                p.conv_jobs += 1;
+                p.conv_ns = p.conv_ns.saturating_add(ns);
+            }
+            RouteKind::LowRank => {
+                p.lowrank_jobs += 1;
+                p.lowrank_ns = p.lowrank_ns.saturating_add(ns);
+            }
+        }
+    }
+
+    /// Record one measured recovery error for a (layer, head) — the
+    /// calibration feed: true recovery error needs the exact oracle
+    /// next to the approximation, so a profiling pass (run both, diff)
+    /// records it here; the serving hot path never computes it. Both
+    /// aggregates advance: the EMA (dashboard) and the
+    /// order-independent quantized sum (what
+    /// `RouterPolicy::from_profile` thresholds against).
+    pub fn record_head_recovery_err(&self, layer: u32, head: u32, err: f64) {
+        let err = err.max(0.0);
+        let mut map = lock(&self.head_profiles);
+        let p = map.entry((layer, head)).or_default();
+        p.err_ema = if p.err_samples == 0 {
+            err
+        } else {
+            HEAD_ERR_EMA_ALPHA * err + (1.0 - HEAD_ERR_EMA_ALPHA) * p.err_ema
+        };
+        let quanta = (err / HEAD_ERR_QUANTUM).round();
+        let quanta = if quanta >= u64::MAX as f64 { u64::MAX } else { quanta as u64 };
+        p.err_quanta = p.err_quanta.saturating_add(quanta);
+        p.err_samples += 1;
+    }
+
+    /// Point-in-time copy of every (layer, head) profile, in
+    /// deterministic (layer, head) order.
+    pub fn head_profiles(&self) -> BTreeMap<(u32, u32), HeadProfile> {
+        lock(&self.head_profiles).clone()
+    }
+
     /// Resident sample count of the e2e series (reservoir bound proof
     /// for tests; the exact observation count lives in the snapshot).
     #[cfg(test)]
@@ -372,6 +564,12 @@ impl Metrics {
             gen_lane_attn_requests: self.gen_lane_attn_requests.load(Ordering::Relaxed),
             merged_attn_requests: self.merged_attn_requests.load(Ordering::Relaxed),
             decode_resident_bytes: self.decode_resident_bytes.load(Ordering::Relaxed),
+            routed_jobs: self.routed_jobs.load(Ordering::Relaxed),
+            router_exact_routes: self.router_exact_routes.load(Ordering::Relaxed),
+            router_conv_routes: self.router_conv_routes.load(Ordering::Relaxed),
+            router_lowrank_routes: self.router_lowrank_routes.load(Ordering::Relaxed),
+            router_rank_refusals: self.router_rank_refusals.load(Ordering::Relaxed),
+            router_decode_pins: self.router_decode_pins.load(Ordering::Relaxed),
             queue: lock(&self.queue_lat).summarize(),
             exec: lock(&self.exec_lat).summarize(),
             e2e: lock(&self.e2e_lat).summarize(),
@@ -433,6 +631,12 @@ pub struct MetricsSnapshot {
     pub gen_lane_attn_requests: u64,
     pub merged_attn_requests: u64,
     pub decode_resident_bytes: u64,
+    pub routed_jobs: u64,
+    pub router_exact_routes: u64,
+    pub router_conv_routes: u64,
+    pub router_lowrank_routes: u64,
+    pub router_rank_refusals: u64,
+    pub router_decode_pins: u64,
     pub queue: LatencyStats,
     pub exec: LatencyStats,
     pub e2e: LatencyStats,
@@ -575,6 +779,28 @@ impl MetricsSnapshot {
             self.step_basis_misses,
         )
     }
+
+    /// Render the per-(layer, head) router counters (the adaptive
+    /// approximation dashboard line): how many prefill jobs went
+    /// through the `Routed` mode, how the decisions split across the
+    /// three operator families, and the two refusal guards — rank
+    /// refusals (low-rank rerouted to conv because `C(d+g,g) ≥ n`) and
+    /// decode pins (low-rank heads pinned to exact for decode-bound
+    /// sessions). Deterministic routing means two identical runs
+    /// render identical lines — `tests/router.rs` asserts exactly
+    /// that.
+    pub fn router_report(&self) -> String {
+        format!(
+            "router: {} routed jobs | routes: exact={} conv={} lowrank={} | \
+             rank refusals: {} | decode pins: {}",
+            self.routed_jobs,
+            self.router_exact_routes,
+            self.router_conv_routes,
+            self.router_lowrank_routes,
+            self.router_rank_refusals,
+            self.router_decode_pins,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -706,6 +932,70 @@ mod tests {
     fn spec_rate_is_zero_before_drafting() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.spec_acceptance_rate(), 0.0);
+    }
+
+    #[test]
+    fn router_counters_and_report() {
+        let m = Metrics::new();
+        Metrics::add(&m.routed_jobs, 6);
+        Metrics::add(&m.router_exact_routes, 2);
+        Metrics::add(&m.router_conv_routes, 3);
+        Metrics::incr(&m.router_lowrank_routes);
+        Metrics::incr(&m.router_rank_refusals);
+        Metrics::add(&m.router_decode_pins, 2);
+        let s = m.snapshot();
+        assert_eq!(s.routed_jobs, 6);
+        assert_eq!(
+            (s.router_exact_routes, s.router_conv_routes, s.router_lowrank_routes),
+            (2, 3, 1)
+        );
+        assert_eq!((s.router_rank_refusals, s.router_decode_pins), (1, 2));
+        let r = s.router_report();
+        assert!(r.contains("6 routed jobs"));
+        assert!(r.contains("exact=2 conv=3 lowrank=1"));
+        assert!(r.contains("rank refusals: 1"));
+        assert!(r.contains("decode pins: 2"));
+    }
+
+    #[test]
+    fn head_profile_aggregates() {
+        let m = Metrics::new();
+        m.record_head_job(0, 1, RouteKind::Conv, false, Duration::from_micros(10));
+        m.record_head_job(0, 1, RouteKind::Conv, true, Duration::from_micros(30));
+        m.record_head_job(0, 1, RouteKind::Exact, false, Duration::from_micros(50));
+        m.record_head_recovery_err(0, 1, 1e-3);
+        m.record_head_recovery_err(0, 1, 3e-3);
+        let profiles = m.head_profiles();
+        let p = &profiles[&(0, 1)];
+        assert_eq!((p.jobs, p.fallbacks), (3, 1));
+        assert_eq!((p.conv_jobs, p.exact_jobs, p.lowrank_jobs), (2, 1, 0));
+        assert!((p.fallback_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p.mean_recovery_err() - 2e-3).abs() < 1e-9);
+        assert!(p.err_ema > 0.0);
+        assert!((p.mean_exec_us(RouteKind::Conv) - 20.0).abs() < 1e-6);
+        assert!((p.mean_exec_us(RouteKind::Exact) - 50.0).abs() < 1e-6);
+        assert_eq!(p.mean_exec_us(RouteKind::LowRank), 0.0);
+        // Untouched heads do not materialize.
+        assert!(!profiles.contains_key(&(0, 0)));
+    }
+
+    // The decision-feeding error aggregate must be order-independent:
+    // two profiles fed the same observations in different orders agree
+    // exactly on `mean_recovery_err` (integer quanta commute), even
+    // though the EMA — dashboard only — may differ.
+    #[test]
+    fn head_profile_mean_err_is_order_independent() {
+        let errs = [1e-3, 5e-4, 7e-3, 2e-6, 9e-4];
+        let (a, b) = (Metrics::new(), Metrics::new());
+        for &e in &errs {
+            a.record_head_recovery_err(0, 0, e);
+        }
+        for &e in errs.iter().rev() {
+            b.record_head_recovery_err(0, 0, e);
+        }
+        let (pa, pb) = (a.head_profiles()[&(0, 0)].clone(), b.head_profiles()[&(0, 0)].clone());
+        assert_eq!(pa.err_quanta, pb.err_quanta);
+        assert_eq!(pa.mean_recovery_err(), pb.mean_recovery_err());
     }
 
     #[test]

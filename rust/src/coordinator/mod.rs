@@ -54,7 +54,10 @@ mod server;
 pub use admission::{AdmissionConfig, AdmissionQueue, Wake};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use cache::{fingerprint, shard_of, BasisCache, CacheKey, CachedBasis, StepBasis, N_SHARDS};
-pub use metrics::{LatencyStats, Metrics, MetricsSnapshot, LATENCY_RESERVOIR_CAP};
+pub use metrics::{
+    HeadProfile, LatencyStats, Metrics, MetricsSnapshot, RouteKind, HEAD_ERR_EMA_ALPHA,
+    HEAD_ERR_QUANTUM, LATENCY_RESERVOIR_CAP,
+};
 pub use net::{NetConfig, NetServer};
 pub use router::{Backend, Router, RouterConfig};
 pub use server::{

@@ -13,11 +13,16 @@
 //! {"op":"generate","id":1,"prompt":[1,2,3],"max_new_tokens":8}
 //! {"op":"generate","id":3,"prompt":[4,5],"max_new_tokens":8,"speculate":4}
 //! {"op":"attn","id":2,"seq_len":128,"d_model":8,"seed":7}
+//! {"op":"attn","id":4,"seq_len":128,"d_model":8,"seed":7,"backend":"exact"}
 //! {"op":"cancel","id":1}
 //! ```
 //!
-//! `speculate` is optional: it overrides the server's speculative
-//! decoding depth γ for that one request (`0` opts out). `cancel`
+//! `backend` is optional on `attn`: `"exact"`, `"conv"` or
+//! `"lowrank"` pins that one request past the server-side router
+//! (any other value is rejected with an `error` line); omitting it
+//! keeps the routed default. `speculate` is optional: it overrides
+//! the server's speculative decoding depth γ for that one request
+//! (`0` opts out). `cancel`
 //! drops a previously submitted generation by its client id — queued
 //! or in flight — freeing its decode session; tokens already streamed
 //! stand and the terminal line is `cancelled`. Cancelling a finished
@@ -311,6 +316,18 @@ fn serve_connection(
                     write_error(&writer, "attn needs id, seq_len, d_model, seed");
                     continue;
                 };
+                // Optional per-request backend override; anything else
+                // (or no field) defers to the server-side router.
+                let backend = match json_str(line, "backend") {
+                    Some("exact") => Some(Backend::Exact),
+                    Some("conv") => Some(Backend::ConvBasis),
+                    Some("lowrank") => Some(Backend::LowRank),
+                    Some(_) => {
+                        write_error(&writer, "backend must be exact|conv|lowrank");
+                        continue;
+                    }
+                    None => None,
+                };
                 let internal = next_id.fetch_add(1, Ordering::Relaxed);
                 lock(routes).insert(internal, (client_id, writer.clone()));
                 server.submit(AttnRequest {
@@ -318,6 +335,7 @@ fn serve_connection(
                     seq_len: seq_len as usize,
                     d_model: d_model as usize,
                     bounded_entries: false,
+                    backend,
                     payload: Payload::Synthetic { seed },
                     submitted_at: Instant::now(),
                 });
@@ -399,5 +417,13 @@ mod tests {
     fn renders_token_arrays() {
         assert_eq!(join_usizes(&[1, 22, 3]), "1,22,3");
         assert_eq!(join_usizes(&[]), "");
+    }
+
+    #[test]
+    fn parses_optional_backend_knob() {
+        let pinned = r#"{"op":"attn","id":2,"seq_len":64,"d_model":8,"seed":7,"backend":"exact"}"#;
+        assert_eq!(json_str(pinned, "backend"), Some("exact"));
+        let routed = r#"{"op":"attn","id":2,"seq_len":64,"d_model":8,"seed":7}"#;
+        assert_eq!(json_str(routed, "backend"), None);
     }
 }

@@ -80,6 +80,13 @@ pub struct AttnRequest {
     pub d_model: usize,
     /// Router hint: entries known bounded (enables low-rank).
     pub bounded_entries: bool,
+    /// Explicit backend override (wire knob `"backend"`): `Some` pins
+    /// the request to that backend, `None` lets the request-level
+    /// [`Router`] decide from `seq_len`/`bounded_entries`. The ROADMAP
+    /// carried slice — clients that know their workload (an eval
+    /// harness pinning exact, a long-context batch pinning conv) skip
+    /// the policy.
+    pub backend: Option<Backend>,
     pub payload: Payload,
     pub submitted_at: Instant,
 }
@@ -609,7 +616,9 @@ fn handle_request(
     batch_tx: &mpsc::Sender<Batch>,
 ) -> usize {
     Metrics::incr(&metrics.requests_submitted);
-    let backend = router.route(req.seq_len, req.bounded_entries);
+    // The wire knob wins over the policy: an explicit `backend` pins
+    // the request; otherwise the request-level router decides.
+    let backend = req.backend.unwrap_or_else(|| router.route(req.seq_len, req.bounded_entries));
     let bucket = router.bucket(req.seq_len);
     let mut sent = 0;
     if let Some(batch) = batcher.push(backend, bucket, req) {
@@ -1172,6 +1181,7 @@ pub fn run_trace(
             seq_len: r.seq_len,
             d_model: r.d_model,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Synthetic { seed: r.id % 16 }, // repeats → cache hits
             submitted_at: Instant::now(),
         });
@@ -1222,6 +1232,7 @@ mod tests {
             seq_len: n,
             d_model: 8,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Synthetic { seed: id },
             submitted_at: Instant::now(),
         }
@@ -1274,6 +1285,7 @@ mod tests {
             seq_len: n,
             d_model: d,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Explicit { q, k, v },
             submitted_at: Instant::now(),
         });
@@ -1314,6 +1326,7 @@ mod tests {
                 seq_len: 96, // ≥ exact_below ⇒ conv
                 d_model: 8,
                 bounded_entries: false,
+                backend: None,
                 payload: Payload::Synthetic { seed: 1 },
                 submitted_at: Instant::now(),
             });
@@ -1327,6 +1340,30 @@ mod tests {
     }
 
     #[test]
+    fn explicit_backend_overrides_the_router() {
+        let server = small_server();
+        let (q, k, v) = synthesize(128, 8, 3);
+        let want = exact_attention(&q, &k, &v, &Mask::causal(128));
+        // 128 ≥ exact_below would route to conv; the override pins exact.
+        server.submit(AttnRequest {
+            id: 0,
+            seq_len: 128,
+            d_model: 8,
+            bounded_entries: false,
+            backend: Some(Backend::Exact),
+            payload: Payload::Explicit { q, k, v },
+            submitted_at: Instant::now(),
+        });
+        let resp = &server.collect(1)[0];
+        assert_eq!(resp.backend, Backend::Exact);
+        assert_eq!(resp.basis_k, 0);
+        assert_eq!(crate::tensor::max_abs_diff(&resp.y, &want), 0.0, "exact path, exact bits");
+        let s = server.shutdown().snapshot();
+        assert_eq!(s.exact_requests, 1);
+        assert_eq!(s.conv_requests, 0, "the router never saw this request");
+    }
+
+    #[test]
     fn conv_and_exact_agree_on_structured_payloads() {
         let server = small_server();
         let (q, k, v) = synthesize(128, 8, 3);
@@ -1336,6 +1373,7 @@ mod tests {
             seq_len: 128,
             d_model: 8,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Explicit { q, k, v },
             submitted_at: Instant::now(),
         });
@@ -1442,6 +1480,7 @@ mod tests {
                 seq_len: n,
                 d_model: d,
                 bounded_entries: false,
+                backend: None,
                 payload: Payload::Explicit { q, k, v },
                 submitted_at: Instant::now(),
             });
@@ -1870,6 +1909,7 @@ mod tests {
             seq_len: 32,
             d_model: 8,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Synthetic { seed: 0 },
             submitted_at: Instant::now(),
         });

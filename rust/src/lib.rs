@@ -81,7 +81,14 @@
 //!   [`attention::batched::AttnJob`]; jobs are pure, so results are
 //!   bit-identical for any worker count. *Recover once, apply per V*
 //!   happens engine-wide through the shared lock-striped
-//!   [`coordinator::BasisCache`].
+//!   [`coordinator::BasisCache`]. A request can pin its backend over
+//!   the wire (`"backend":"exact"|"conv"|"lowrank"`), and the model
+//!   layer can route **per (layer, head)** through
+//!   [`attention::batched::BatchedBackend::Routed`] — a deterministic
+//!   [`attention::batched::RouterPolicy`] table (explicit or built
+//!   from measured [`coordinator::HeadProfile`]s) resolved inside job
+//!   execution, so routed outputs stay bit-identical to direct
+//!   backends for any worker count (`tests/router.rs`).
 //! * **Autoregressive decode**: generation requests
 //!   ([`coordinator::GenRequest`]) → the server's decode scheduler →
 //!   `model::Transformer::prefill_batch` (seeds per-head
@@ -157,7 +164,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::attention::batched::{
         AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, DecodeOutput, EngineConfig,
-        EngineJob, EngineOp, EngineOutput, EngineResult, JobOutput,
+        EngineJob, EngineOp, EngineOutput, EngineResult, HeadRoute, JobOutput, ProfilePolicyConfig,
+        RouterPolicy,
     };
     pub use crate::attention::decode::DecodeState;
     pub use crate::gradient::batched::{FastGradConfig, GradJob, GradOutput};

@@ -23,7 +23,7 @@ use crate::attention::{Mask, MaskKind};
 use crate::tensor::Matrix;
 
 /// Configuration of the polynomial-feature approximation.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LowRankConfig {
     /// Taylor truncation degree `g`; feature rank is `C(d+g, g)`.
     pub degree: usize,
@@ -39,20 +39,34 @@ impl LowRankConfig {
     }
 
     /// Feature rank `k = C(d+g, g)` for hidden dim `d`.
+    ///
+    /// Saturates at `usize::MAX` instead of silently wrapping when the
+    /// binomial overflows (large `d`/`g` pairs overflow even `u128`
+    /// intermediates). A saturated rank is still correct for every
+    /// comparison the callers make — "is low-rank even worth it here"
+    /// is `rank < n`, and `usize::MAX` loses that comparison for any
+    /// real sequence length, so the router refuses the route instead
+    /// of allocating a wrapped-tiny feature matrix.
     pub fn rank(&self, d: usize) -> usize {
         binomial(d + self.degree, self.degree)
     }
 }
 
+/// `C(n, k)`, saturating at `usize::MAX` on overflow. Computed as the
+/// exact integer recurrence `C(n, i+1) = C(n, i)·(n−i)/(i+1)` so the
+/// running value is always the true binomial (never a truncated
+/// quotient) and the only failure mode is the checked multiply.
 fn binomial(n: usize, k: usize) -> usize {
     let k = k.min(n - k);
-    let mut num: u128 = 1;
-    let mut den: u128 = 1;
+    let mut c: u128 = 1;
     for i in 0..k {
-        num *= (n - i) as u128;
-        den *= (i + 1) as u128;
+        // c = C(n, i) here, so c·(n−i) is divisible by (i+1).
+        match c.checked_mul((n - i) as u128) {
+            Some(t) => c = t / (i as u128 + 1),
+            None => return usize::MAX,
+        }
     }
-    (num / den) as usize
+    usize::try_from(c).unwrap_or(usize::MAX)
 }
 
 /// The `(ε,k)`-approximation `exp(QKᵀ/scale) ≈ U₁U₂ᵀ`.
@@ -237,6 +251,21 @@ mod tests {
         assert_eq!(cfg.rank(4), 15);
         let cfg3 = LowRankConfig::new(3, 8.0);
         assert_eq!(cfg3.rank(8), binomial(11, 3));
+    }
+
+    #[test]
+    fn rank_saturates_instead_of_wrapping() {
+        // In range: C(60, 30) still fits u64 exactly.
+        assert_eq!(binomial(60, 30), 118_264_581_564_861_424);
+        // Past the boundary: C(70, 35) ≈ 1.12e20 > u64::MAX — the old
+        // unchecked `as usize` cast wrapped this to a small number.
+        assert_eq!(binomial(70, 35), usize::MAX);
+        assert_eq!(LowRankConfig::new(35, 1.0).rank(35), usize::MAX);
+        // Deep overflow (the u128 intermediate itself overflows).
+        assert_eq!(binomial(200, 100), usize::MAX);
+        // Saturation is monotone: a saturated rank always loses the
+        // router's `rank < n` comparison.
+        assert!(LowRankConfig::new(35, 1.0).rank(35) >= 4096);
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //! they replace the attention operator of an already-trained model with
 //! no parameter updates, exactly the paper's protocol.
 
-use crate::attention::batched::{BatchedBackend, DecodeOp};
+use crate::attention::batched::{BatchedBackend, DecodeOp, RouterPolicy};
 use crate::attention::{conv_attention, exact_attention, Mask};
 use crate::basis::RecoverConfig;
 use crate::lowrank::{LowRankAttention, LowRankConfig};
 use crate::tensor::Matrix;
+use std::sync::Arc;
 
 /// Which operator computes `softmax(QKᵀ)·V` per head.
 #[derive(Clone, Debug)]
@@ -25,6 +26,19 @@ pub enum AttentionBackend {
     ConvStrided(usize),
     /// Theorem 6.5: masked low-rank approximation.
     LowRank(LowRankConfig),
+    /// Per-(layer, head) adaptive routing: the policy resolves each
+    /// head to exact / conv(k) / low-rank inside the engine
+    /// ([`BatchedBackend::Routed`]). Engine-path only — this variant
+    /// requires the (layer, head) identity that `forward_batch` /
+    /// `prefill_batch` carry, so the single-head [`Self::attend`]
+    /// rejects it. Decode is pinned to the exact last-row kernel:
+    /// a low-rank route cannot seed a
+    /// [`DecodeState`](crate::attention::decode::DecodeState), and
+    /// pinning **all** routed heads to exact decode keeps the decode
+    /// plan independent of the policy table (conv seeding under a
+    /// mixed table would hit or miss per head, breaking the seed-hit
+    /// invariants `tests/decode.rs` pins).
+    Routed(Arc<RouterPolicy>),
 }
 
 impl AttentionBackend {
@@ -49,6 +63,7 @@ impl AttentionBackend {
             AttentionBackend::LowRank(cfg) => {
                 BatchedBackend::LowRank(LowRankConfig::new(cfg.degree, 1.0))
             }
+            AttentionBackend::Routed(policy) => BatchedBackend::Routed(Arc::clone(policy)),
         }
     }
 
@@ -69,7 +84,14 @@ impl AttentionBackend {
     ///   protocol).
     pub fn to_decode(&self) -> DecodeOp {
         match self {
-            AttentionBackend::Exact | AttentionBackend::LowRank(_) => DecodeOp::Exact,
+            // Routed decode pins to exact: low-rank routes cannot seed
+            // a DecodeState, and a policy-independent decode plan keeps
+            // the seed-hit invariants intact (see the variant docs).
+            // `Transformer::prefill_batch` counts the pinned low-rank
+            // slots in `Metrics::router_decode_pins`.
+            AttentionBackend::Exact
+            | AttentionBackend::LowRank(_)
+            | AttentionBackend::Routed(_) => DecodeOp::Exact,
             AttentionBackend::ConvBasis(cfg) => DecodeOp::conv(cfg.k_max),
             AttentionBackend::ConvStrided(k) => DecodeOp::conv(*k),
         }
@@ -121,6 +143,10 @@ impl AttentionBackend {
                 let lr = LowRankAttention::new(q, k, mask, &LowRankConfig::new(cfg.degree, 1.0));
                 (lr.forward(v), None)
             }
+            AttentionBackend::Routed(_) => panic!(
+                "Routed attention requires the engine path (forward_batch / prefill_batch): \
+                 per-head routing needs the (layer, head) identity attend() does not carry"
+            ),
         }
     }
 }
@@ -174,6 +200,30 @@ mod tests {
             .attend(&q, &k, &v, false)
             .0;
         assert!(max_abs_diff(&exact, &lr) < 1e-3);
+    }
+
+    #[test]
+    fn routed_backend_maps_to_engine_and_pins_decode_to_exact() {
+        use crate::attention::batched::HeadRoute;
+        let policy = Arc::new(RouterPolicy::new(HeadRoute::Strided(4)));
+        let b = AttentionBackend::Routed(policy);
+        assert!(matches!(b.to_batched(), BatchedBackend::Routed(_)));
+        assert!(
+            matches!(b.to_decode(), DecodeOp::Exact),
+            "routed decode is pinned to the exact last-row kernel"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "Routed attention requires the engine path")]
+    fn routed_backend_rejects_single_head_attend() {
+        use crate::attention::batched::HeadRoute;
+        let mut rng = Rng::seeded(215);
+        let q = Matrix::randn(8, 4, &mut rng);
+        let k = Matrix::randn(8, 4, &mut rng);
+        let v = Matrix::randn(8, 4, &mut rng);
+        let b = AttentionBackend::Routed(Arc::new(RouterPolicy::new(HeadRoute::Exact)));
+        let _ = b.attend(&q, &k, &v, false);
     }
 
     #[test]

@@ -787,6 +787,16 @@ impl Transformer {
         let spec = backend.to_batched();
         let op = backend.to_decode();
         let conv = matches!(op, DecodeOp::Conv { .. });
+        // Routed backends decode through the exact last-row kernel (see
+        // `AttentionBackend::to_decode`); account for every low-rank
+        // table slot that pin overrides for these decode-bound sessions.
+        if let AttentionBackend::Routed(policy) = backend {
+            let pins = policy.lowrank_route_count(self.layers.len() as u32, nh as u32)
+                * seqs.len() as u64;
+            if pins > 0 {
+                Metrics::add(&engine.metrics().router_decode_pins, pins);
+            }
+        }
 
         let mut xs: Vec<Matrix> = seqs
             .iter()

@@ -96,6 +96,7 @@ fn server_conv_batches_reuse_engine_cache() {
             seq_len: 96,
             d_model: 8,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Synthetic { seed: 42 },
             submitted_at: Instant::now(),
         });

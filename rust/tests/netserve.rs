@@ -150,6 +150,7 @@ fn concurrent_connections_stream_bit_identical_tokens() {
             seq_len: 128,
             d_model: 8,
             bounded_entries: false,
+            backend: None,
             payload: Payload::Synthetic { seed: c as u64 },
             submitted_at: Instant::now(),
         });
@@ -347,6 +348,68 @@ fn cancel_over_the_wire_frees_the_session_and_ends_with_cancelled() {
     assert_eq!(s.gen_completed, 0, "a cancelled generation is not a completion");
     assert_eq!(s.decode_resident_bytes, 0, "cancel must free the decode session's KV bytes");
     assert!(s.gen_tokens as usize >= streamed);
+}
+
+#[test]
+fn backend_wire_knob_pins_past_the_router() {
+    // seq_len 128 routes to conv by default (≥ exact_below); the
+    // per-request `backend` knob must pin it to exact anyway, the
+    // pinned output must bit-match an in-process oracle pinned the
+    // same way, and a bogus knob value must answer with an error line.
+    let model = model();
+    let net = NetServer::start(cfg(model.clone(), AdmissionConfig::default()), NetConfig::default())
+        .expect("bind");
+    let stream = TcpStream::connect(net.addr()).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        "{{\"op\":\"attn\",\"id\":1,\"seq_len\":128,\"d_model\":8,\"seed\":3,\"backend\":\"exact\"}}"
+    )
+    .unwrap();
+    writeln!(
+        writer,
+        "{{\"op\":\"attn\",\"id\":2,\"seq_len\":128,\"d_model\":8,\"seed\":3,\"backend\":\"warp\"}}"
+    )
+    .unwrap();
+
+    let (mut attn_line, mut saw_error) = (String::new(), false);
+    let mut line = String::new();
+    while attn_line.is_empty() || !saw_error {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("read") > 0, "server closed early");
+        let l = line.trim();
+        match jfield(l, "ev") {
+            "attn" => {
+                assert_eq!(ju(l, "id"), 1);
+                attn_line = l.to_string();
+            }
+            "error" => saw_error = true,
+            other => panic!("unexpected event {other:?}: {l}"),
+        }
+    }
+    let s = net.shutdown().snapshot();
+    assert_eq!(jfield(&attn_line, "backend"), "exact", "the knob must win over the router");
+    assert_eq!(ju(&attn_line, "basis_k"), 0, "exact serving uses no conv basis");
+    assert_eq!(s.requests_submitted, 1, "the rejected knob value never reaches the server");
+
+    // In-process oracle, pinned the same way: same bits on the wire.
+    let oracle = Server::start(cfg(model, AdmissionConfig::default()));
+    oracle.submit(AttnRequest {
+        id: 1,
+        seq_len: 128,
+        d_model: 8,
+        bounded_entries: false,
+        backend: Some(Backend::Exact),
+        payload: Payload::Synthetic { seed: 3 },
+        submitted_at: Instant::now(),
+    });
+    let resp = &oracle.collect(1)[0];
+    oracle.shutdown();
+    assert!(matches!(resp.backend, Backend::Exact));
+    let want_fp = format!("{:016x}", fingerprint(resp.y.data()));
+    assert_eq!(jfield(&attn_line, "y_fp"), want_fp, "pinned request bit-matches the oracle");
 }
 
 #[test]

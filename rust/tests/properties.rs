@@ -693,15 +693,17 @@ fn prop_submit_mixed_lanes_deterministic() {
 
 #[test]
 fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
-    // The ISSUE 4 fuzz pin, extended for ISSUEs 5 and 7: a
+    // The ISSUE 4 fuzz pin, extended for ISSUEs 5, 7 and 9: a
     // deterministic-seed generator builds random batches mixing ALL
-    // FOUR lanes — Prefill (serving, conv-forward *training*, AND the
-    // speculative-decoding verify submits built by `AttnJob::verify`)
-    // + Decode + Gradient + the LM-backward jobs (with and without a
-    // forward-provided basis handle) — with random sizes and modes,
-    // and every seed must produce input-ordered, key-echoed results
-    // that are bit-identical across worker counts 1/2/8, training
-    // artifacts (probs / basis handles) included.
+    // FOUR lanes — Prefill (serving, conv-forward *training*, the
+    // speculative-decoding verify submits built by `AttnJob::verify`,
+    // AND router-resolved `BatchedBackend::Routed` jobs with
+    // randomized per-head tables) + Decode + Gradient + the
+    // LM-backward jobs (with and without a forward-provided basis
+    // handle) — with random sizes and modes, and every seed must
+    // produce input-ordered, key-echoed results that are
+    // bit-identical across worker counts 1/2/8, training artifacts
+    // (probs / basis handles) included.
     use conv_basis::coordinator::CachedBasis;
     use conv_basis::gradient::batched::{
         AttnBackwardJob, AttnBackwardMode, FastGradConfig, GradJob,
@@ -729,7 +731,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
         let mut jobs = Vec::with_capacity(count);
         for idx in 0..count {
             let key = 1000 + idx as u64;
-            match rng.below(7) {
+            match rng.below(8) {
                 0 => {
                     // Prefill: random size, exact or strided operator.
                     let n = 12 + rng.below(28);
@@ -849,7 +851,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                     let v = Matrix::randn(n, d, &mut rng);
                     jobs.push(EngineJob::prefill(key, AttnJob::verify(6, idx as u32, q, k, v)));
                 }
-                _ => {
+                6 => {
                     // Fast LM backward CONSUMING a step-basis handle —
                     // the forward→backward handoff as a standalone job.
                     let n = 10 + rng.below(18);
@@ -878,6 +880,36 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                                 use_cache: false,
                             }),
                         },
+                    ));
+                }
+                _ => {
+                    // ROUTED prefill (the ISSUE 9 adaptive router): a
+                    // randomized per-head policy table resolves to one
+                    // of the direct operators *inside* job execution,
+                    // so routed jobs must stay exactly as pure,
+                    // order-preserving and worker-count-independent as
+                    // the arms above — and inert next to every other
+                    // lane.
+                    use conv_basis::attention::batched::{HeadRoute, RouterPolicy};
+                    use conv_basis::lowrank::LowRankConfig;
+                    let n = 16 + rng.below(24);
+                    let d = 2 + 2 * rng.below(2);
+                    let (q, k) = rope_structured_qk(n, d, 2, &mut rng);
+                    let v = Matrix::randn(n, d, &mut rng);
+                    let route = match rng.below(4) {
+                        0 => HeadRoute::Exact,
+                        1 => HeadRoute::Strided(1 + rng.below(4)),
+                        2 => HeadRoute::Conv(RecoverConfig::exact(n)),
+                        _ => HeadRoute::LowRank(LowRankConfig::new(1 + rng.below(2), 1.0)),
+                    };
+                    let policy = Arc::new(
+                        RouterPolicy::new(HeadRoute::Exact)
+                            .set(7, idx as u32, route)
+                            .with_lowrank_fallback(HeadRoute::Strided(2)),
+                    );
+                    jobs.push(EngineJob::prefill(
+                        key,
+                        AttnJob::causal(7, idx as u32, q, k, v, BatchedBackend::Routed(policy)),
                     ));
                 }
             }

@@ -1,0 +1,351 @@
+//! Backend-equivalence oracle harness for the adaptive approximation
+//! router (PR 9 headline): every route the `RouterPolicy` can pick
+//! must agree with the dense oracle within a *documented* tolerance,
+//! and routing decisions must be bit-reproducible across worker
+//! counts, runs, and lane mixes.
+//!
+//! # The documented low-rank tolerance (`LOWRANK_RTOL`)
+//!
+//! The low-rank route is the only approximate one (exact is exact;
+//! conv falls back to exact whenever recovery fails), so its error
+//! budget is the router's whole approximation story. Theorem 6.5
+//! bounds the normalized attention error by `4ε‖V‖∞` where `ε` is
+//! the relative error of the truncated-Taylor exponential features.
+//! For the harness inputs — entries uniform in `[-0.4, 0.4)`, head
+//! dim `d = 4`, AS23 scale `β = d = 4` — the logits satisfy
+//! `|x| = |q·k|/β ≤ 4·0.4²/4 = 0.16`, and the degree-`g` Lagrange
+//! remainder gives
+//!
+//! * `g = 1`: `ε ≤ |x|²/2 · e^|x| ≈ 1.6e-2` → normalized error
+//!   `≲ 3.6e-2 · ‖V‖∞`; we pin **`0.08 · ‖V‖∞`** (≈2× margin);
+//! * `g = 2`: `ε ≤ |x|³/6 · e^|x| ≈ 8e-4` → normalized error
+//!   `≲ 2e-3 · ‖V‖∞`; we pin **`0.01 · ‖V‖∞`** (≈5× margin).
+//!
+//! These are analytic, worst-case bounds — no measured slack — so the
+//! assertions hold for every `n` (the bound is per-row and
+//! `n`-independent) and every seed.
+
+use std::sync::Arc;
+
+use conv_basis::attention::batched::{
+    AttnJob, BatchedBackend, BatchedEngine, EngineConfig, EngineJob, HeadRoute,
+    ProfilePolicyConfig, RouterPolicy,
+};
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::Mask;
+use conv_basis::basis::RecoverConfig;
+use conv_basis::coordinator::{Metrics, RouteKind};
+use conv_basis::lowrank::{exact_scaled_attention, LowRankConfig};
+use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
+use conv_basis::tensor::{linf_norm_mat, max_abs_diff, Matrix, Rng};
+
+/// Documented low-rank tolerance: normalized attention error bound
+/// per Taylor degree, as a multiple of `‖V‖∞` (derivation above).
+fn lowrank_rtol(degree: usize) -> f64 {
+    match degree {
+        1 => 0.08,
+        2 => 0.01,
+        other => panic!("no documented tolerance for degree {other}"),
+    }
+}
+
+/// Harness inputs for the low-rank oracle comparison: entries bounded
+/// so the documented Taylor remainder applies.
+fn bounded_inputs(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::seeded(seed);
+    let q = Matrix::rand_uniform(n, d, 0.4, &mut rng);
+    let k = Matrix::rand_uniform(n, d, 0.4, &mut rng);
+    let v = Matrix::rand_uniform(n, d, 0.4, &mut rng);
+    (q, k, v)
+}
+
+fn prefill(e: &BatchedEngine, jobs: Vec<AttnJob>) -> Vec<Matrix> {
+    e.submit(jobs.into_iter().enumerate().map(|(i, j)| EngineJob::prefill(i as u64, j)).collect())
+        .into_iter()
+        .map(|o| o.result.into_prefill().y)
+        .collect()
+}
+
+/// Satellite (a): the low-rank causal route matches the dense scaled
+/// oracle within the documented tolerance at every harness size and
+/// degree.
+#[test]
+fn lowrank_route_matches_dense_oracle_within_documented_rtol() {
+    let d = 4;
+    let scale = d as f64; // the AS23 β = d convention
+    for n in [8usize, 32, 64] {
+        for degree in [1usize, 2] {
+            let (q, k, v) = bounded_inputs(n, d, 0x900 + (n as u64) * 10 + degree as u64);
+            let oracle = exact_scaled_attention(&q, &k, &v, &Mask::causal(n), scale);
+            let cfg = LowRankConfig::new(degree, scale);
+            let e = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 8 });
+            let ys = prefill(
+                &e,
+                vec![AttnJob::causal(0, 0, q, k, v.clone(), BatchedBackend::LowRank(cfg))],
+            );
+            let err = max_abs_diff(&ys[0], &oracle);
+            let tol = lowrank_rtol(degree) * linf_norm_mat(&v);
+            assert!(
+                err <= tol,
+                "n={n} degree={degree}: low-rank error {err:.3e} exceeds \
+                 documented tolerance {tol:.3e}"
+            );
+        }
+    }
+}
+
+/// The mixed static table the equivalence tests route through: all
+/// four operator families across 2 layers × 3 heads, plus one head
+/// left to the policy default.
+fn mixed_table(n: usize) -> RouterPolicy {
+    RouterPolicy::new(HeadRoute::Exact)
+        .set(0, 0, HeadRoute::Exact)
+        .set(0, 1, HeadRoute::Strided(4))
+        .set(0, 2, HeadRoute::Conv(RecoverConfig::exact(n)))
+        .set(1, 0, HeadRoute::LowRank(LowRankConfig::new(1, 4.0)))
+        .set(1, 1, HeadRoute::Strided(2))
+    // (1, 2) unset → policy default (Exact).
+}
+
+/// The direct backend each slot of [`mixed_table`] must resolve to.
+fn direct_backends(n: usize) -> Vec<((u32, u32), BatchedBackend)> {
+    vec![
+        ((0, 0), BatchedBackend::Exact),
+        ((0, 1), BatchedBackend::Strided(4)),
+        ((0, 2), BatchedBackend::Conv(RecoverConfig::exact(n))),
+        ((1, 0), BatchedBackend::LowRank(LowRankConfig::new(1, 4.0))),
+        ((1, 1), BatchedBackend::Strided(2)),
+        ((1, 2), BatchedBackend::Exact),
+    ]
+}
+
+/// Per-(layer, head) inputs: rope-structured Q/K (conv-recoverable)
+/// except the low-rank head, which gets the bounded harness inputs.
+fn mixed_inputs(n: usize) -> Vec<((u32, u32), (Matrix, Matrix, Matrix))> {
+    direct_backends(n)
+        .iter()
+        .map(|((layer, head), backend)| {
+            let seed = 0xB0 + (*layer as u64) * 8 + *head as u64;
+            let qkv = if matches!(backend, BatchedBackend::LowRank(_)) {
+                bounded_inputs(n, 4, seed)
+            } else {
+                let mut rng = Rng::seeded(seed);
+                let (q, k) = rope_structured_qk(n, 4, 2, &mut rng);
+                (q, k, Matrix::randn(n, 4, &mut rng))
+            };
+            ((*layer, *head), qkv)
+        })
+        .collect()
+}
+
+/// Satellite (b): a mixed static routing table is bit-identical
+/// across worker counts 1/2/8 AND bit-identical to running each
+/// head's resolved backend directly — the routed path adds zero
+/// float ops.
+#[test]
+fn mixed_table_bit_identical_across_workers_and_vs_direct_backends() {
+    let n = 48;
+    let policy = Arc::new(mixed_table(n));
+    let inputs = mixed_inputs(n);
+
+    // Each head's backend run individually (fresh engine per head so
+    // no cache interplay) — the bitwise oracle for every routed slot.
+    let direct: Vec<Matrix> = direct_backends(n)
+        .into_iter()
+        .zip(&inputs)
+        .map(|((slot, backend), (islot, (q, k, v)))| {
+            assert_eq!(slot, *islot);
+            let e = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 8 });
+            prefill(
+                &e,
+                vec![AttnJob::causal(slot.0, slot.1, q.clone(), k.clone(), v.clone(), backend)],
+            )
+            .remove(0)
+        })
+        .collect();
+
+    let mut per_worker: Vec<Vec<Matrix>> = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let e = BatchedEngine::new(EngineConfig { workers, cache_capacity: 16 });
+        let jobs: Vec<AttnJob> = inputs
+            .iter()
+            .map(|((layer, head), (q, k, v))| {
+                AttnJob::causal(
+                    *layer,
+                    *head,
+                    q.clone(),
+                    k.clone(),
+                    v.clone(),
+                    BatchedBackend::Routed(Arc::clone(&policy)),
+                )
+            })
+            .collect();
+        let ys = prefill(&e, jobs);
+
+        // Routing decisions counter-asserted per worker count: the
+        // same table must tally the same routes regardless of fan-out.
+        let snap = e.metrics().snapshot();
+        assert_eq!(snap.routed_jobs, 6, "{workers} workers");
+        assert_eq!(
+            (snap.router_exact_routes, snap.router_conv_routes, snap.router_lowrank_routes),
+            (2, 3, 1),
+            "{workers} workers: route tally"
+        );
+        assert_eq!(snap.router_rank_refusals, 0, "{workers} workers");
+
+        for (y, oracle) in ys.iter().zip(&direct) {
+            assert_eq!(
+                max_abs_diff(y, oracle),
+                0.0,
+                "{workers} workers: routed output differs from its direct backend"
+            );
+        }
+        per_worker.push(ys);
+    }
+    for ys in &per_worker[1..] {
+        for (a, b) in ys.iter().zip(&per_worker[0]) {
+            assert_eq!(max_abs_diff(a, b), 0.0, "bit drift across worker counts");
+        }
+    }
+}
+
+/// Feed a `Metrics` the measured history that must drive all three
+/// `from_profile` decision rows (identical every call — the point).
+fn feed_profile(m: &Metrics) {
+    use std::time::Duration;
+    let exec = Duration::from_micros(50);
+    // (0, 0): 3/4 jobs fell back → fallback_rate 0.75 > 0.5 → Exact.
+    for i in 0..4 {
+        m.record_head_job(0, 0, RouteKind::Conv, i < 3, exec);
+    }
+    // (0, 1): clean conv, tiny recovery error → stays on conv.
+    for _ in 0..4 {
+        m.record_head_job(0, 1, RouteKind::Conv, false, exec);
+        m.record_head_recovery_err(0, 1, 1e-5);
+    }
+    // (0, 2): clean conv but large recovery error → low-rank.
+    for _ in 0..4 {
+        m.record_head_job(0, 2, RouteKind::Conv, false, exec);
+        m.record_head_recovery_err(0, 2, 1e-2);
+    }
+}
+
+/// Satellite (c): a profile-driven policy with pinned thresholds makes
+/// the same decisions on two identical runs — asserted structurally
+/// (the policies compare equal) and operationally (two identical
+/// routed runs render identical `router_report` lines and outputs).
+#[test]
+fn profile_driven_policy_is_run_to_run_deterministic() {
+    let cfg = ProfilePolicyConfig {
+        max_fallback_rate: 0.5,
+        max_recovery_err: 1e-3,
+        conv: HeadRoute::Strided(4),
+        lowrank: LowRankConfig::new(2, 4.0),
+    };
+
+    // Two independently-fed metrics sinks → identical policies.
+    let policies: Vec<RouterPolicy> = (0..2)
+        .map(|_| {
+            let m = Metrics::new();
+            feed_profile(&m);
+            RouterPolicy::from_profile(&m.head_profiles(), &cfg)
+        })
+        .collect();
+    assert_eq!(policies[0], policies[1], "profile-driven decisions drifted between runs");
+    assert_eq!(*policies[0].route(0, 0), HeadRoute::Exact);
+    assert_eq!(*policies[0].route(0, 1), HeadRoute::Strided(4));
+    assert_eq!(*policies[0].route(0, 2), HeadRoute::LowRank(LowRankConfig::new(2, 4.0)));
+    // Unprofiled heads take the pinned conv default.
+    assert_eq!(*policies[0].route(7, 7), HeadRoute::Strided(4));
+
+    // Two identical routed runs → identical router_report lines.
+    let n = 32;
+    let policy = Arc::new(policies[0].clone());
+    let reports: Vec<(String, Vec<Matrix>)> = (0..2)
+        .map(|_| {
+            let e = BatchedEngine::new(EngineConfig { workers: 4, cache_capacity: 8 });
+            let jobs: Vec<AttnJob> = (0..3)
+                .map(|head| {
+                    let (q, k, v) = bounded_inputs(n, 4, 0xC0 + head as u64);
+                    AttnJob::causal(0, head, q, k, v, BatchedBackend::Routed(Arc::clone(&policy)))
+                })
+                .collect();
+            let ys = prefill(&e, jobs);
+            (e.metrics().snapshot().router_report(), ys)
+        })
+        .collect();
+    assert_eq!(reports[0].0, reports[1].0, "router_report drifted between identical runs");
+    assert_eq!(
+        reports[0].0,
+        "router: 3 routed jobs | routes: exact=1 conv=1 lowrank=1 | \
+         rank refusals: 0 | decode pins: 0"
+    );
+    for (a, b) in reports[0].1.iter().zip(&reports[1].1) {
+        assert_eq!(max_abs_diff(a, b), 0.0, "routed outputs drifted between identical runs");
+    }
+}
+
+/// Satellite (d): low-rank routes cannot seed decode state — a
+/// decode-bound session routed through a table with low-rank slots is
+/// pinned to the exact decode kernel, the pin is counted, and no
+/// basis seeding is attempted. An all-exact table must then decode
+/// bit-identically to the direct exact backend.
+#[test]
+fn lowrank_routed_sessions_are_pinned_to_exact_decode_and_counted() {
+    let cfg = ModelConfig {
+        vocab_size: 16,
+        d_model: 8,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 16,
+        max_seq: 32,
+    };
+    let mut rng = Rng::seeded(0xD1);
+    let model = Transformer::new(&cfg, &mut rng);
+    let prompts: Vec<Vec<usize>> = vec![vec![1, 2, 3, 4, 5, 6, 7, 8], vec![9, 10, 11, 12, 13, 14]];
+
+    // head_dim = 4, degree 1 → rank C(5,1) = 5 < both prompt lengths,
+    // so the low-rank slot is viable for *prefill* — the decode pin we
+    // assert below is purely table-driven, not a viability fallback.
+    let lowrank_policy = Arc::new(
+        RouterPolicy::new(HeadRoute::Exact).set(0, 0, HeadRoute::LowRank(LowRankConfig::new(
+            1, 1.0,
+        ))),
+    );
+    let routed = AttentionBackend::Routed(Arc::clone(&lowrank_policy));
+    let e = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
+    let mut sessions = model.prefill_batch(&prompts, &routed, &e);
+    let snap = e.metrics().snapshot();
+    // One low-rank table slot × two sessions, each pinned to exact.
+    assert_eq!(snap.router_decode_pins, 2, "every low-rank slot pins per decode session");
+    // Pinned-to-exact sessions never touch the basis-seeding path.
+    assert_eq!(
+        (snap.decode_seed_hits, snap.decode_seed_misses),
+        (0, 0),
+        "a routed decode-bound session must not attempt basis seeding"
+    );
+
+    // The pinned sessions decode: one greedy step produces finite
+    // logits through the exact decode kernel.
+    let (mut s, _logits): (Vec<_>, Vec<_>) = sessions.drain(..).unzip();
+    let step = model.decode_step(&mut s, &[3, 5], &e);
+    assert_eq!(step.len(), 2);
+    assert!(step.iter().all(|l| l.iter().all(|x| x.is_finite())));
+
+    // Oracle pin: an all-exact routed table is bit-identical to the
+    // direct exact backend through prefill AND decode.
+    let exact_policy = Arc::new(RouterPolicy::new(HeadRoute::Exact));
+    let routed_exact = AttentionBackend::Routed(exact_policy);
+    let er = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
+    let eo = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
+    let mut via_router = model.prefill_batch(&prompts, &routed_exact, &er);
+    let mut via_exact = model.prefill_batch(&prompts, &AttentionBackend::Exact, &eo);
+    for ((_, lr), (_, le)) in via_router.iter().zip(&via_exact) {
+        assert_eq!(lr, le, "routed-exact prefill logits must bit-match direct exact");
+    }
+    let (mut sr, _): (Vec<_>, Vec<_>) = via_router.drain(..).unzip();
+    let (mut se, _): (Vec<_>, Vec<_>) = via_exact.drain(..).unzip();
+    let dr = model.decode_step(&mut sr, &[3, 5], &er);
+    let de = model.decode_step(&mut se, &[3, 5], &eo);
+    assert_eq!(dr, de, "routed-exact decode logits must bit-match direct exact");
+}
