@@ -1,0 +1,145 @@
+//! Row-stream vs blocked exact kernels (ISSUE 10): forward, backward
+//! and decode, at n ∈ {256, 1024, 4096}.
+//!
+//! Three lanes per n, each timing the two `ExactKernel` families on
+//! identical inputs:
+//!
+//!   * `fwd`    — serving forward: `exact_attention` (n×n logits
+//!                matmul, dense stabilized softmax, n×n probs·V) vs
+//!                `blocked_attention_causal` (online-softmax tile walk
+//!                over the causal prefix only: no n×n temporaries,
+//!                half the logit flops, `BLOCK`-wide inner loops);
+//!   * `bwd`    — the engine's LM-backward lane in
+//!                `AttnBackwardMode::Exact`, row-stream vs blocked
+//!                kernel, consuming the same forward probs (the
+//!                blocked backward walks the causal prefix only);
+//!   * `decode` — one last-row step on a length-n prefix:
+//!                `exact_decode_last_row` vs `blocked_decode_last_row`
+//!                (both O(n·d); expected near parity — tracked here so
+//!                a regression in the shared tile walk shows up).
+//!
+//! `tests/blocked_kernels.rs` pins the two families to each other
+//! within `blocked_rtol`; this bench only measures. Numbers land in
+//! EXPERIMENTS.md §PR 10 (mirrored by `python/bench_blocked_mirror.py`
+//! on toolchain-less images).
+
+use conv_basis::attention::batched::{BatchedEngine, EngineConfig, EngineJob};
+use conv_basis::attention::blocked::{
+    blocked_attention_causal, blocked_decode_last_row, blocked_train_forward, causal_logits_row,
+};
+use conv_basis::attention::decode::exact_decode_last_row;
+use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::{exact_attention, ExactKernel, Mask};
+use conv_basis::gradient::batched::{AttnBackwardJob, AttnBackwardMode};
+use conv_basis::tensor::{Matrix, Rng};
+use conv_basis::util::{fmt_dur, sink, smoke, time_median, Table};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DH: usize = 8;
+/// Decode steps per timed iteration (a single last-row step is too
+/// short to time on its own).
+const DECODE_STEPS: usize = 64;
+
+fn ratio(rowstream: Duration, blocked: Duration) -> String {
+    format!("{:.2}×", rowstream.as_secs_f64() / blocked.as_secs_f64())
+}
+
+fn main() {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+    println!("# Exact kernels: row-stream vs blocked (fwd / bwd / decode)");
+    println!(
+        "(d_h={DH}, {workers} pool workers; both families pinned by \
+         tests/blocked_kernels.rs)"
+    );
+    let mut table = Table::new(&["lane", "n", "row-stream", "blocked", "blocked ×"]);
+    // `--smoke` (CI): one tiny n executes all three lanes.
+    let ns: &[usize] = if smoke() { &[48] } else { &[256, 1024, 4096] };
+    for &n in ns {
+        let mut rng = Rng::seeded(n as u64);
+        let (q, k) = rope_structured_qk(n, DH, 3, &mut rng);
+        let v = Matrix::randn(n, DH, &mut rng);
+        let dout = Matrix::randn(n, DH, &mut rng);
+        let iters = if n >= 4096 { 3 } else { 7 };
+
+        // Forward lane.
+        let mask = Mask::causal(n);
+        let t_rs = time_median(iters, || sink(exact_attention(&q, &k, &v, &mask)[(0, 0)]));
+        let t_bl = time_median(iters, || sink(blocked_attention_causal(&q, &k, &v)[(0, 0)]));
+        table.row(&[
+            "fwd".to_string(),
+            n.to_string(),
+            fmt_dur(t_rs),
+            fmt_dur(t_bl),
+            ratio(t_rs, t_bl),
+        ]);
+
+        // Backward lane: both kernels consume the same forward probs
+        // (training keeps these cached, so probs construction is not
+        // part of backward cost).
+        let (_, probs) = blocked_train_forward(&q, &k, &v);
+        let probs = Arc::new(probs);
+        let engine = BatchedEngine::new(EngineConfig { workers, cache_capacity: 8 });
+        let backward = |kernel: ExactKernel| -> f64 {
+            let job = EngineJob::attn_backward(
+                0,
+                AttnBackwardJob {
+                    layer: 0,
+                    head: 0,
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                    dout: dout.clone(),
+                    probs: Some(Arc::clone(&probs)),
+                    basis: None,
+                    mode: AttnBackwardMode::Exact(kernel),
+                },
+            );
+            let mut outs = engine.submit(vec![job]);
+            outs.pop().unwrap().result.into_attn_backward().dq[(0, 0)]
+        };
+        let t_rs_b = time_median(iters, || sink(backward(ExactKernel::RowStream)));
+        let t_bl_b = time_median(iters, || sink(backward(ExactKernel::Blocked)));
+        table.row(&[
+            "bwd".to_string(),
+            n.to_string(),
+            fmt_dur(t_rs_b),
+            fmt_dur(t_bl_b),
+            ratio(t_rs_b, t_bl_b),
+        ]);
+
+        // Decode lane: DECODE_STEPS last-row steps on the full prefix.
+        let h = causal_logits_row(q.row(n - 1), &k, n);
+        let t_rs_d = time_median(iters, || {
+            let mut acc = 0.0;
+            for _ in 0..DECODE_STEPS {
+                acc += exact_decode_last_row(&h, &v)[0];
+            }
+            sink(acc)
+        });
+        let t_bl_d = time_median(iters, || {
+            let mut acc = 0.0;
+            for _ in 0..DECODE_STEPS {
+                acc += blocked_decode_last_row(&h, &v)[0];
+            }
+            sink(acc)
+        });
+        table.row(&[
+            "decode".to_string(),
+            n.to_string(),
+            fmt_dur(t_rs_d),
+            fmt_dur(t_bl_d),
+            ratio(t_rs_d, t_bl_d),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check: row-stream fwd is O(n²·d_h) over ALL n² logits plus a dense \
+         n×n probs·V; blocked fwd streams the ~n²/2 causal logits through BLOCK-wide \
+         tiles with O(BLOCK + d_h) scratch per row and never materializes probs. \
+         bwd: both are O(n²·d_h) flops, but the blocked kernel touches only the \
+         causal prefix (half the flops) with the same two-pass row walk. decode is \
+         O(n·d_h) either way (decode column = kernel-flavor parity tracking, not a \
+         win)."
+    );
+}

@@ -6,7 +6,7 @@
 //!                       from a cached basis: `O(k·n + n·d)`, the
 //!                       engine's `DecodeOp::Conv` path;
 //!   * `exact row`     — `exact_decode_last_row` from the pre-exp
-//!                       logits row: `O(n·d)`, the `DecodeOp::Exact` /
+//!                       logits row: `O(n·d)`, the row-stream `DecodeOp::Exact` /
 //!                       KV-cache cost (logits-row cost included);
 //!   * `conv reprefill`— full `conv_attention_strided` at n+1: what a
 //!                       stack without decode state pays per token,
@@ -22,7 +22,7 @@
 
 use conv_basis::attention::decode::{exact_decode_last_row, DecodeState};
 use conv_basis::attention::rope::rope_structured_qk;
-use conv_basis::attention::{conv_attention_strided, exact_attention, Mask};
+use conv_basis::attention::{conv_attention_strided, exact_attention, ExactKernel, Mask};
 use conv_basis::tensor::{dot, Matrix, Rng};
 use conv_basis::util::{fmt_dur, sink, smoke, time_median, Table};
 

@@ -4,6 +4,7 @@
 //! `examples/fig4_accuracy_vs_k.rs`; this harness keeps n small so
 //! `cargo bench` stays fast while preserving the curve's shape.
 
+use conv_basis::attention::ExactKernel;
 use conv_basis::data::{ByteTokenizer, SentimentDataset};
 use conv_basis::model::{
     eval_classifier, train_classifier, AttentionBackend, ModelConfig, TrainConfig,
@@ -46,9 +47,12 @@ fn main() {
         .collect();
     let exact_hidden: Vec<_> = sample
         .iter()
-        .map(|t| model.forward(t, &AttentionBackend::Exact, false).final_hidden)
+        .map(|t| {
+            model.forward(t, &AttentionBackend::Exact(ExactKernel::RowStream), false).final_hidden
+        })
         .collect();
-    let acc_exact = eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact);
+    let acc_exact =
+        eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact(ExactKernel::RowStream));
 
     let mut table = Table::new(&["k", "rel ‖Y−Ỹ‖²_F/‖Y‖²_F", "accuracy", "exact acc"]);
     let ks: Vec<usize> = if smoke() { vec![1, 4, seq] } else { vec![1, 2, 4, 8, 16, 32, seq] };

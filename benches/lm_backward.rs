@@ -11,7 +11,7 @@
 //!                      per head, sequentially: what
 //!                      `Transformer::backward` did before the engine
 //!                      routing;
-//!   * `engine exact` — one `submit` of `AttnBackwardMode::Exact` jobs:
+//!   * `engine exact` — one `submit` of row-stream `AttnBackwardMode::Exact` jobs:
 //!                      identical bits (pinned by
 //!                      `tests/gradient_oracle.rs`), `O(n + n·d_h)`
 //!                      scratch, pool fan-out;
@@ -24,6 +24,7 @@
 
 use conv_basis::attention::batched::{BatchedEngine, EngineConfig, EngineJob};
 use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::ExactKernel;
 use conv_basis::basis::RecoverConfig;
 use conv_basis::gradient::batched::{AttnBackwardJob, AttnBackwardMode, FastGradConfig};
 use conv_basis::tensor::{dot, softmax, Matrix, Rng};
@@ -138,7 +139,7 @@ fn main() {
 
         let engine = BatchedEngine::new(EngineConfig { workers, cache_capacity: 32 });
         let t_exact = time_median(iters, || {
-            sink(submit_backward(&engine, &cases, &AttnBackwardMode::Exact))
+            sink(submit_backward(&engine, &cases, &AttnBackwardMode::Exact(ExactKernel::RowStream)))
         });
         // Warm fast path: the first (warmup) call inside time_median
         // fills the basis cache; timed iterations are recovery-free.

@@ -11,7 +11,7 @@
 //! Two strategies per n:
 //!
 //!   * `exact step` — `TrainAttentionMode::Exact` +
-//!     `AttnBackwardMode::Exact`: the `O(n²)` softmax forward (n×n
+//!     row-stream `AttnBackwardMode::Exact`: the `O(n²)` softmax forward (n×n
 //!     probs retained per head) and the row-streamed exact backward —
 //!     the PR-4 training path;
 //!   * `conv step`  — `TrainAttentionMode::Conv` +
@@ -31,6 +31,7 @@
 //! Numbers land in EXPERIMENTS.md §PR 5.
 
 use conv_basis::attention::batched::{BatchedEngine, EngineConfig};
+use conv_basis::attention::ExactKernel;
 use conv_basis::basis::RecoverConfig;
 use conv_basis::gradient::batched::{AttnBackwardMode, FastGradConfig};
 use conv_basis::model::{ModelConfig, TrainAttentionMode, Transformer};
@@ -83,7 +84,14 @@ fn main() {
 
         let engine = BatchedEngine::new(EngineConfig { workers, cache_capacity: 16 });
         let t_exact = time_median(iters, || {
-            step(&m, &seqs, &targets, &engine, &TrainAttentionMode::Exact, &AttnBackwardMode::Exact)
+            step(
+                &m,
+                &seqs,
+                &targets,
+                &engine,
+                &TrainAttentionMode::Exact,
+                &AttnBackwardMode::Exact(ExactKernel::RowStream),
+            )
         });
 
         let recover = RecoverConfig { k_max: 8, t: 2, delta: 1e-6, eps: 1e-12 };

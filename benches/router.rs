@@ -11,6 +11,7 @@ use conv_basis::attention::batched::{
     AttnJob, BatchedBackend, BatchedEngine, EngineConfig, EngineJob, HeadRoute, RouterPolicy,
 };
 use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::ExactKernel;
 use conv_basis::basis::RecoverConfig;
 use conv_basis::lowrank::LowRankConfig;
 use conv_basis::tensor::{Matrix, Rng};
@@ -84,7 +85,7 @@ fn main() {
             })
         };
 
-        let t_exact = run(&|_| BatchedBackend::Exact);
+        let t_exact = run(&|_| BatchedBackend::Exact(ExactKernel::RowStream));
         let t_strided = run(&|_| BatchedBackend::Strided(8));
         let t_conv = run(&|_| BatchedBackend::Conv(RecoverConfig::exact(n)));
         let t_lowrank = run(&|_| BatchedBackend::LowRank(LowRankConfig::new(2, d as f64)));

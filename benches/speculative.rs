@@ -14,6 +14,7 @@
 //!
 //! γ = 0 rows are the plain non-speculative scheduler for each backend.
 
+use conv_basis::attention::ExactKernel;
 use conv_basis::coordinator::{
     AdmissionConfig, GenConfig, GenRequest, GenStatus, Server, ServerConfig,
 };
@@ -88,7 +89,8 @@ fn main() {
     let mut table =
         Table::new(&["drafter", "γ", "tok/s", "decode steps/tok", "accept", "rounds"]);
     for &g in gammas {
-        run(&model, AttentionBackend::Exact, "exact", g, n_req, prompt_len, max_new, &mut table);
+        let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+        run(&model, exact, "exact", g, n_req, prompt_len, max_new, &mut table);
     }
     for &g in gammas {
         run(

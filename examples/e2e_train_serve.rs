@@ -16,6 +16,7 @@
 //!
 //! Results are recorded in EXPERIMENTS.md §e2e.
 
+use conv_basis::attention::ExactKernel;
 use conv_basis::coordinator::{
     run_trace, BatcherConfig, RouterConfig, Server, ServerConfig,
 };
@@ -91,7 +92,7 @@ fn main() {
         total / eval_windows.len() as f64
     };
     let mut table = Table::new(&["backend", "held-out loss", "Δ vs exact"]);
-    let exact_loss = mean_loss(&AttentionBackend::Exact);
+    let exact_loss = mean_loss(&AttentionBackend::Exact(ExactKernel::RowStream));
     table.row(&["exact".into(), format!("{exact_loss:.4}"), "—".into()]);
     for k in [seq / 16, seq / 4, seq] {
         let backend = if k >= seq {

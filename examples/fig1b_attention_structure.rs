@@ -13,6 +13,7 @@
 //! conv-basis size k, plus a coarse ASCII heatmap.
 
 use conv_basis::attention::rope::{rope_structured_qk, toeplitz_energy_fraction, toeplitzness};
+use conv_basis::attention::ExactKernel;
 use conv_basis::basis::decompose_exact;
 use conv_basis::model::{train_lm, AttentionBackend, ModelConfig, TrainConfig};
 use conv_basis::tensor::{Matrix, Rng};
@@ -100,7 +101,7 @@ fn main() {
         .take(n)
         .map(|b| b as usize)
         .collect();
-    let rec = model.forward(&prompt, &AttentionBackend::Exact, true);
+    let rec = model.forward(&prompt, &AttentionBackend::Exact(ExactKernel::RowStream), true);
     let _ = rec; // activations cached; reconstruct logits via weights:
     let dh = mcfg.d_model / mcfg.n_heads;
     // Recompute embeddings → ln1 → q,k with RoPE, as the model does.

@@ -10,6 +10,7 @@
 //! hours on CPU), conv attention with k ∈ {n/16 … n}; same two metrics,
 //! averaged over groups with the paper's 5-group protocol.
 
+use conv_basis::attention::ExactKernel;
 use conv_basis::data::{ByteTokenizer, SentimentDataset};
 use conv_basis::model::{
     eval_classifier, train_classifier, AttentionBackend, ModelConfig, TrainConfig,
@@ -53,7 +54,8 @@ fn main() {
         log.losses.first().unwrap().1,
         log.losses.last().unwrap().1
     );
-    let acc_exact = eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact);
+    let acc_exact =
+        eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact(ExactKernel::RowStream));
     println!("exact-attention accuracy: {acc_exact:.3}\n");
 
     let tok = ByteTokenizer::new();
@@ -65,7 +67,9 @@ fn main() {
         .collect();
     let exact_hidden: Vec<_> = err_samples
         .iter()
-        .map(|t| model.forward(t, &AttentionBackend::Exact, false).final_hidden)
+        .map(|t| {
+            model.forward(t, &AttentionBackend::Exact(ExactKernel::RowStream), false).final_hidden
+        })
         .collect();
 
     let ks: Vec<usize> =

@@ -157,6 +157,9 @@
 //! assert!(!step.rerecovered, "structured growth stays drift-free");
 //! ```
 
+use super::blocked::{
+    blocked_attention_causal, blocked_decode_last_row, blocked_train_forward, ExactKernel,
+};
 use super::decode::{exact_decode_last_row, DecodeState};
 use super::lowrank_backend::{lowrank_prefill, lowrank_viable};
 use super::{
@@ -182,8 +185,11 @@ use std::sync::Arc;
 /// layer's `AttentionBackend`; jobs in one batch may mix operators).
 #[derive(Clone, Debug)]
 pub enum BatchedBackend {
-    /// Exact `O(n²d)` attention.
-    Exact,
+    /// Exact `O(n²d)` attention, served by the selected
+    /// [`ExactKernel`] family (row-streamed oracle or blocked
+    /// streaming-softmax; blocked is causal-only and falls back to
+    /// row-stream under non-causal masks).
+    Exact(ExactKernel),
     /// Algorithm 1 with adaptive binary-search recovery; falls back to
     /// exact on recovery failure.
     Conv(RecoverConfig),
@@ -460,8 +466,11 @@ impl AttnJob {
     /// the last row of the length-`i+1` prefix's prefill (rows are
     /// independent under the causal mask), so one verify job yields
     /// the greedy-oracle logits for every drafted position at once.
+    /// Pinned to the row-stream kernel: verify is the oracle side of
+    /// speculation, and the row-per-prefix bit-identity above is the
+    /// row-stream family's contract.
     pub fn verify(layer: u32, head: u32, q: Matrix, k: Matrix, v: Matrix) -> Self {
-        AttnJob::causal(layer, head, q, k, v, BatchedBackend::Exact)
+        AttnJob::causal(layer, head, q, k, v, BatchedBackend::Exact(ExactKernel::RowStream))
     }
 }
 
@@ -548,6 +557,7 @@ impl EngineJob {
 /// use conv_basis::attention::batched::{
 ///     AttnJob, BatchedBackend, BatchedEngine, EngineConfig, EngineJob,
 /// };
+/// use conv_basis::attention::ExactKernel;
 /// use conv_basis::gradient::batched::{FastGradConfig, GradJob};
 /// use conv_basis::gradient::AttentionLossProblem;
 /// use conv_basis::tensor::{Matrix, Rng};
@@ -561,8 +571,9 @@ impl EngineJob {
 /// let k = Matrix::randn(n, d, &mut rng).scale(0.3);
 /// let v = Matrix::randn(n, d, &mut rng);
 /// let problem = Arc::new(AttentionLossProblem::random_structured(n, d, &mut rng));
+/// let exact = BatchedBackend::Exact(ExactKernel::RowStream);
 /// let outs = engine.submit(vec![
-///     EngineJob::prefill(10, AttnJob::causal(0, 0, q, k, v, BatchedBackend::Exact)),
+///     EngineJob::prefill(10, AttnJob::causal(0, 0, q, k, v, exact)),
 ///     EngineJob::gradient(
 ///         11,
 ///         GradJob {
@@ -866,7 +877,7 @@ fn execute_job(
         None
     } else {
         let kind = match &job.backend {
-            BatchedBackend::Exact => RouteKind::Exact,
+            BatchedBackend::Exact(_) => RouteKind::Exact,
             BatchedBackend::Conv(_) | BatchedBackend::Strided(_) => RouteKind::Conv,
             BatchedBackend::LowRank(_) => RouteKind::LowRank,
             BatchedBackend::Routed(policy) => {
@@ -901,9 +912,17 @@ fn execute_job_inner(
     // Local planner view over the engine-wide plan cache.
     let mut local = FftPlanner::with_shared(Arc::clone(planner));
     match backend {
-        BatchedBackend::Exact => {
+        BatchedBackend::Exact(kernel) => {
             Metrics::incr(&metrics.exact_requests);
-            serving_output(exact_attention(&q, &k, &v, &mask), 0, false, false)
+            let y = match kernel {
+                // Blocked is causal-only; non-causal exact jobs keep
+                // the row-streamed oracle.
+                ExactKernel::Blocked if matches!(mask.kind(), MaskKind::Causal) => {
+                    blocked_attention_causal(&q, &k, &v)
+                }
+                _ => exact_attention(&q, &k, &v, &mask),
+            };
+            serving_output(y, 0, false, false)
         }
         BatchedBackend::LowRank(cfg) => {
             Metrics::incr(&metrics.lowrank_requests);
@@ -926,7 +945,7 @@ fn execute_job_inner(
                 RouteKind::LowRank => Metrics::incr(&metrics.router_lowrank_routes),
             }
             let resolved = match route {
-                HeadRoute::Exact => BatchedBackend::Exact,
+                HeadRoute::Exact => BatchedBackend::Exact(ExactKernel::RowStream),
                 HeadRoute::Conv(cfg) => BatchedBackend::Conv(*cfg),
                 HeadRoute::Strided(k_bases) => BatchedBackend::Strided(*k_bases),
                 HeadRoute::LowRank(cfg) => BatchedBackend::LowRank(*cfg),
@@ -1066,9 +1085,23 @@ fn execute_training_job(
         }
     };
     match backend {
-        BatchedBackend::Exact => {
+        BatchedBackend::Exact(kernel) => {
             Metrics::incr(&metrics.exact_requests);
-            exact_train(&q, &k, &v, false)
+            match kernel {
+                ExactKernel::RowStream => exact_train(&q, &k, &v, false),
+                ExactKernel::Blocked => {
+                    let (y, probs) = blocked_train_forward(&q, &k, &v);
+                    JobOutput {
+                        y,
+                        basis_k: 0,
+                        fell_back: false,
+                        cache_hit: false,
+                        basis: None,
+                        probs: Some(Arc::new(probs)),
+                        exec: std::time::Duration::ZERO,
+                    }
+                }
+            }
         }
         BatchedBackend::Conv(cfg) => {
             Metrics::incr(&metrics.conv_requests);
@@ -1112,9 +1145,13 @@ fn execute_training_job(
 pub enum DecodeOp {
     /// Exact last-row attention from the precomputed pre-exp logits
     /// row (`O(n·d)` — what a KV-cache stack pays per step), with the
-    /// same float-op order as a full-prefill forward, so exact decode
-    /// **bit-matches** re-prefill.
-    Exact,
+    /// same float-op order as a full-prefill forward **of the same
+    /// [`ExactKernel`] family**, so exact decode bit-matches
+    /// re-prefill kernel-for-kernel (row-stream decode replays the
+    /// row-streamed forward; blocked decode replays the blocked tile
+    /// walk). `AttentionBackend::to_decode` pins the decode kernel to
+    /// the prefill flavor for exactly this reason.
+    Exact(ExactKernel),
     /// Cached-basis banded dot product (`O(k·n + n·d)`), growing the
     /// state per token and re-recovering a fresh strided basis (at
     /// `k_bases` onsets) from the full per-head Q/K when the append's
@@ -1230,8 +1267,11 @@ fn execute_decode_job(
     let t0 = std::time::Instant::now();
     let DecodeJob { layer, head, state, new_row, v, q, k, op } = job;
     let mut out = match op {
-        DecodeOp::Exact => DecodeOutput {
-            y_last: exact_decode_last_row(&new_row, &v),
+        DecodeOp::Exact(kernel) => DecodeOutput {
+            y_last: match kernel {
+                ExactKernel::RowStream => exact_decode_last_row(&new_row, &v),
+                ExactKernel::Blocked => blocked_decode_last_row(&new_row, &v),
+            },
             state: None,
             drift: 0.0,
             rerecovered: false,
@@ -1380,7 +1420,8 @@ mod tests {
             let k = Matrix::randn(n, d, &mut rng).scale(0.3);
             let v = Matrix::randn(n, d, &mut rng);
             want.push(exact_attention(&q, &k, &v, &Mask::causal(n)));
-            jobs.push(AttnJob::causal(0, h, q, k, v, BatchedBackend::Exact));
+            let backend = BatchedBackend::Exact(ExactKernel::RowStream);
+            jobs.push(AttnJob::causal(0, h, q, k, v, backend));
         }
         let outs = attend(&e, jobs);
         assert_eq!(outs.len(), 6);
@@ -1478,7 +1519,7 @@ mod tests {
             v: v.clone(),
             q: None,
             k: None,
-            op: DecodeOp::Exact,
+            op: DecodeOp::Exact(ExactKernel::RowStream),
         }]);
         let full = exact_attention(&q, &k, &v, &Mask::causal(n + 1));
         for (a, b) in outs[0].y_last.iter().zip(full.row(n)) {
@@ -1621,7 +1662,7 @@ mod tests {
             v: Matrix::randn(n + 1, d, &mut rng),
             q: None,
             k: None,
-            op: DecodeOp::Exact,
+            op: DecodeOp::Exact(ExactKernel::RowStream),
         };
         let problem = Arc::new(AttentionLossProblem::random_structured(16, 3, &mut rng));
         let grad = GradJob {
@@ -1643,7 +1684,7 @@ mod tests {
             dout: Matrix::randn(12, 3, &mut rng),
             probs: Some(probs),
             basis: None,
-            mode: AttnBackwardMode::Exact,
+            mode: AttnBackwardMode::Exact(ExactKernel::RowStream),
         };
         let outs = e.submit(vec![
             EngineJob::gradient(70, grad),
@@ -1686,10 +1727,10 @@ mod tests {
 
         // Exact training job: probs ride the output, bit-identical to
         // the model layer's training forward helper.
+        let backend = BatchedBackend::Exact(ExactKernel::RowStream);
         let outs = e.submit(vec![EngineJob::prefill(
             0,
-            AttnJob::causal(0, 0, q.clone(), k.clone(), v.clone(), BatchedBackend::Exact)
-                .for_training(),
+            AttnJob::causal(0, 0, q.clone(), k.clone(), v.clone(), backend).for_training(),
         )]);
         let out = outs[0].result.clone().into_prefill();
         let want_probs = crate::gradient::batched::dense_causal_probs(&q, &k);
@@ -1765,7 +1806,7 @@ mod tests {
                 dout: dout.clone(),
                 probs: Some(Arc::clone(&probs)),
                 basis: None,
-                mode: AttnBackwardMode::Exact,
+                mode: AttnBackwardMode::Exact(ExactKernel::RowStream),
             },
         )]);
         assert_eq!(outs[0].key, 42);
@@ -1832,7 +1873,7 @@ mod tests {
 
         let direct_e = engine(2);
         let directs = [
-            BatchedBackend::Exact,
+            BatchedBackend::Exact(ExactKernel::RowStream),
             BatchedBackend::Strided(4),
             BatchedBackend::LowRank(LowRankConfig::new(1, 4.0)),
         ];

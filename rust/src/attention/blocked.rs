@@ -1,0 +1,520 @@
+//! Flash-style **blocked streaming-softmax** exact kernels.
+//!
+//! The row-streamed exact kernels ([`exact_attention`], the training
+//! probs builder, [`exact_decode_last_row`]) materialize or stream full
+//! `n`-length rows: the softmax denominator is only known after the
+//! whole row's `exp` has been taken, so the value accumulation makes a
+//! second full pass with no L1/L2 tile reuse — the memory-bound shape
+//! Flash Attention (Dao et al., arXiv:2205.14135) identifies. The
+//! kernels here instead walk each query row's causal prefix in column
+//! **tiles** of [`BLOCK`] and renormalize online, so one pass over the
+//! logits suffices and every inner loop runs over tile-local scratch:
+//!
+//! ```text
+//!        columns  0        BLOCK      2·BLOCK            i
+//!                 ├─ tile 0 ─┤├─ tile 1 ─┤ … ├─ tile i/B ─┤│(masked)
+//! row i state:    m  running max   s  running Σexp   acc[d_v]
+//!   per tile t:   m' = max(m, max tile)        (tile max, ascending j)
+//!                 c  = exp(m − m')             (1.0 when m' == m)
+//!                 s  = s·c + Σ_j exp(l_j − m')
+//!                 acc= acc·c + Σ_j exp(l_j − m')·v_j
+//!   after tiles:  y_i = acc / s   (multiply by reciprocal)
+//! ```
+//!
+//! `x · 1.0 == x` bitwise, so tiles that do not raise the max are exact
+//! no-ops on `s` and `acc`; the first tile starts from `m = −∞`, where
+//! `c = exp(−∞ − m') = 0` for any finite tile max. The kernels assume
+//! **finite logits** (an `exp(−∞ − (−∞)) = NaN` can only arise from
+//! non-finite inputs, which already poison every kernel in this crate).
+//!
+//! # The two-level equivalence contract
+//!
+//! The row-streamed kernels pin themselves to the dense matrix form
+//! *bitwise*. Blocked kernels renormalize mid-row, so their float-op
+//! order is genuinely different; the contract becomes two-level
+//! (pinned by `tests/blocked_kernels.rs`):
+//!
+//! 1. **Against the row-streamed oracles**: agreement within the
+//!    analytic [`blocked_rtol`] tolerance below — and strictly *more*
+//!    robustness: online max subtraction survives logit magnitudes
+//!    far beyond `exp`'s overflow threshold (±709), where an
+//!    unstabilized kernel returns `inf/NaN`.
+//! 2. **Within the blocked family**, the load-bearing bit-identities
+//!    are preserved: [`blocked_decode_last_row`] replays the exact
+//!    tile walk of the matching [`blocked_attention_causal`] row
+//!    (tiles are indexed by *absolute* column position, so prefill row
+//!    `i` at length `i+1` and a decode step at length `i+1` execute
+//!    the same float ops in the same order), and every kernel is a
+//!    pure per-row function, so any engine worker count is
+//!    bit-identical.
+//!
+//! # Tolerance derivation (`BLOCKED_RTOL`)
+//!
+//! Softmax weights sum to 1, so each output element is a convex
+//! combination of a `V` column: `|y| ≤ ‖V‖∞`. Both kernel families
+//! compute the same mathematical sums with different association:
+//! an `n`-term summation carries `O(n·ε)` relative rounding
+//! (`ε = f64::EPSILON`), each `exp` is faithfully rounded (≤ 1 ulp),
+//! and the blocked path compounds one extra `exp(m − m')`
+//! renormalization per max-raising tile (≤ ⌈n/BLOCK⌉ of them, each
+//! ≤ 1 ulp multiplicative on `s` and `acc`). Numerator and
+//! denominator errors add through the final reciprocal. A safe
+//! engineering bound on the *difference between the two kernels* is
+//! therefore `C·n·ε·‖V‖∞` with a modest constant; [`blocked_rtol`]
+//! uses `C = 64`, several× the worst observed deviation at `n = 4096`
+//! while still ~1e-12 relative at bench sizes.
+//!
+//! Serving entry: the engine's exact lanes select kernels through
+//! [`ExactKernel`], threaded through `AttentionBackend`,
+//! `BatchedBackend`, `DecodeOp` and `AttnBackwardMode`.
+//!
+//! [`exact_attention`]: crate::attention::exact_attention
+//! [`exact_decode_last_row`]: crate::attention::decode::exact_decode_last_row
+
+use crate::tensor::Matrix;
+
+/// Column-tile width of the blocked kernels: 16 f64 lanes = two
+/// cache lines, wide enough for the compiler to vectorize the
+/// fixed-width inner loops (AVX2: 4 f64/lane), small enough that a
+/// tile of logits, weights and a `V` tile stay L1-resident.
+pub const BLOCK: usize = 16;
+
+/// Which exact-kernel family serves an exact attention lane.
+///
+/// Threaded through `AttentionBackend::Exact`, `BatchedBackend::Exact`,
+/// `DecodeOp::Exact` and `AttnBackwardMode::Exact` so every exact-lane
+/// consumer (serving prefill, decode, training forward, LM backward)
+/// can opt into the blocked kernels per job. Decode pins to the
+/// prefill's kernel flavor: the decode-bitmatches-prefill contract
+/// only holds *within* a family.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExactKernel {
+    /// The row-streamed kernels — bit-identical to the dense matrix
+    /// form, the oracle everything else is pinned against.
+    #[default]
+    RowStream,
+    /// The blocked streaming-softmax kernels in this module — within
+    /// [`blocked_rtol`] of the oracle, numerically robust to
+    /// large-magnitude logits, causal-mask only (non-causal exact
+    /// jobs fall back to the row-streamed kernel).
+    Blocked,
+}
+
+/// Absolute tolerance (per unit of `‖V‖∞`) for blocked-vs-row-streamed
+/// comparisons — the documented `BLOCKED_RTOL` of the equivalence
+/// harness. See the module doc for the derivation.
+pub fn blocked_rtol(n: usize) -> f64 {
+    64.0 * n as f64 * f64::EPSILON
+}
+
+/// Pre-exp causal logits of one query row against `k[..len]`, with
+/// exactly `Matrix::matmul`'s per-element accumulation order —
+/// ascending feature index, including the skip on exact-zero `q`
+/// entries — so a row computed here is bit-identical to the matching
+/// row of `q.matmul(&k.transpose())` and to the `new_row` the model's
+/// decode step hands the engine. Exposed so tests and benches can
+/// build decode rows that bit-match the blocked prefill.
+pub fn causal_logits_row(q_row: &[f64], k: &Matrix, len: usize) -> Vec<f64> {
+    assert!(len <= k.rows());
+    assert_eq!(q_row.len(), k.cols());
+    let mut out = vec![0.0; len];
+    causal_logits_row_into(q_row, k, &mut out);
+    out
+}
+
+fn causal_logits_row_into(q_row: &[f64], k: &Matrix, out: &mut [f64]) {
+    for (j, slot) in out.iter_mut().enumerate() {
+        let krow = k.row(j);
+        let mut acc = 0.0;
+        for (&qc, &kc) in q_row.iter().zip(krow) {
+            if qc == 0.0 {
+                continue;
+            }
+            acc += qc * kc;
+        }
+        *slot = acc;
+    }
+}
+
+/// The online-renormalization walk of one row (the recurrence in the
+/// module doc): streams `logits` in absolute tiles of [`BLOCK`],
+/// writes `y = softmax(logits)·v[..len]` into `out`, and returns
+/// `(m, 1/s)` — the row max and reciprocal denominator the training
+/// forward reuses to emit probability rows.
+///
+/// This is the **single** tile walk of the blocked family: prefill,
+/// training forward and decode all call it, which is what makes the
+/// decode-replays-prefill bit-identity structural rather than
+/// maintained-by-hand.
+fn stream_softmax_row(logits: &[f64], v: &Matrix, out: &mut [f64]) -> (f64, f64) {
+    let len = logits.len();
+    debug_assert!(len >= 1);
+    debug_assert!(len <= v.rows());
+    debug_assert_eq!(out.len(), v.cols());
+    for slot in out.iter_mut() {
+        *slot = 0.0;
+    }
+    let mut m = f64::NEG_INFINITY;
+    let mut s = 0.0f64;
+    let mut p = [0.0f64; BLOCK];
+    let mut t0 = 0;
+    while t0 < len {
+        let w = BLOCK.min(len - t0);
+        let tile = &logits[t0..t0 + w];
+        let mut tile_max = f64::NEG_INFINITY;
+        for &l in tile {
+            tile_max = tile_max.max(l);
+        }
+        let m_new = m.max(tile_max);
+        // exp(0) = 1 when the max did not move: the scale below is a
+        // bitwise no-op on s and acc. First tile: exp(−∞ − finite) = 0.
+        let corr = (m - m_new).exp();
+        s *= corr;
+        for slot in out.iter_mut() {
+            *slot *= corr;
+        }
+        for (slot, &l) in p[..w].iter_mut().zip(tile) {
+            *slot = (l - m_new).exp();
+        }
+        for &pj in &p[..w] {
+            s += pj;
+        }
+        // The hot loop: acc += p · V-tile. Full tiles take the
+        // fixed-width path (compile-time trip count ⇒ vectorized);
+        // the ragged last tile runs the same ops over the prefix.
+        if w == BLOCK {
+            for (jj, &pj) in p.iter().enumerate() {
+                let vrow = v.row(t0 + jj);
+                for (slot, &x) in out.iter_mut().zip(vrow) {
+                    *slot += pj * x;
+                }
+            }
+        } else {
+            for (jj, &pj) in p[..w].iter().enumerate() {
+                let vrow = v.row(t0 + jj);
+                for (slot, &x) in out.iter_mut().zip(vrow) {
+                    *slot += pj * x;
+                }
+            }
+        }
+        m = m_new;
+        t0 += w;
+    }
+    let inv = 1.0 / s;
+    for slot in out.iter_mut() {
+        *slot *= inv;
+    }
+    (m, inv)
+}
+
+/// One contiguous block of rows of the blocked causal forward; the
+/// thread-split driver hands each worker a disjoint row range. Rows
+/// are fully independent, so any split is bit-identical.
+fn forward_rows(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    rows: std::ops::Range<usize>,
+    y_out: &mut [f64],
+    mut probs_out: Option<&mut [f64]>,
+) {
+    let n = k.rows();
+    let d_v = v.cols();
+    let mut logits = vec![0.0; n];
+    for (ri, i) in rows.enumerate() {
+        let len = i + 1;
+        causal_logits_row_into(q.row(i), k, &mut logits[..len]);
+        let yrow = &mut y_out[ri * d_v..(ri + 1) * d_v];
+        let (m, inv) = stream_softmax_row(&logits[..len], v, yrow);
+        if let Some(p) = probs_out.as_deref_mut() {
+            // Second per-row pass: the probability row from the same
+            // logits scratch, normalized by the walk's (m, 1/s).
+            let prow = &mut p[ri * n..ri * n + len];
+            for (slot, &l) in prow.iter_mut().zip(&logits[..len]) {
+                *slot = (l - m).exp() * inv;
+            }
+        }
+    }
+}
+
+/// Shared driver of the two blocked forwards: computes `y` (and the
+/// probability rows when `keep_probs`), splitting rows across scoped
+/// threads once the causal work volume is large enough to amortize
+/// spawn — the same policy `Matrix::matmul` applies.
+fn blocked_forward(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    keep_probs: bool,
+) -> (Matrix, Option<Matrix>) {
+    let n = q.rows();
+    assert_eq!(k.rows(), n);
+    assert_eq!(v.rows(), n);
+    assert_eq!(q.cols(), k.cols());
+    let d_v = v.cols();
+    let mut y = Matrix::zeros(n, d_v);
+    let mut probs = if keep_probs { Some(Matrix::zeros(n, n)) } else { None };
+    // The causal prefix is half the dense volume.
+    let work = n * n * (q.cols() + d_v) / 2;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if work < 96 * 96 * 96 || threads == 1 || n < 2 * threads {
+        forward_rows(q, k, v, 0..n, y.data_mut(), probs.as_mut().map(|p| p.data_mut()));
+        return (y, probs);
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut y_rest: &mut [f64] = y.data_mut();
+        let mut p_rest: Option<&mut [f64]> = probs.as_mut().map(|p| p.data_mut());
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let (y_head, y_tail) = y_rest.split_at_mut((end - start) * d_v);
+            y_rest = y_tail;
+            let p_head = match p_rest.take() {
+                Some(p) => {
+                    let (head, tail) = p.split_at_mut((end - start) * n);
+                    p_rest = Some(tail);
+                    Some(head)
+                }
+                None => None,
+            };
+            let range = start..end;
+            scope.spawn(move || forward_rows(q, k, v, range, y_head, p_head));
+            start = end;
+        }
+    });
+    (y, probs)
+}
+
+/// Blocked causal exact attention: `softmax(QKᵀ)·V` under the causal
+/// mask via the online tile walk — one pass over the logits, no `n×n`
+/// materialization, only the causal prefix computed (the row-streamed
+/// [`exact_attention`](crate::attention::exact_attention) computes the
+/// full `QKᵀ` product before masking). `q` arrives pre-scaled, exactly
+/// as the engine's prefill jobs carry it.
+pub fn blocked_attention_causal(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    blocked_forward(q, k, v, false).0
+}
+
+/// Blocked **training** forward: `(y, probs)` where `probs` are the
+/// dense causal softmax rows the exact LM backward consumes. Two
+/// passes per row — the online walk for `y`, then a probability fill
+/// from the same logits scratch — so peak scratch stays `O(n)` beyond
+/// the `n×n` probs output itself. `y` is bit-identical to
+/// [`blocked_attention_causal`] (same walk); `probs` match the
+/// row-streamed `dense_causal_probs` within [`blocked_rtol`].
+pub fn blocked_train_forward(q: &Matrix, k: &Matrix, v: &Matrix) -> (Matrix, Matrix) {
+    let (y, probs) = blocked_forward(q, k, v, true);
+    (y, probs.expect("keep_probs requested"))
+}
+
+/// Blocked exact last-row decode from the precomputed pre-exp logits
+/// row (`new_row_of_h[j] = q_new · k_j`, causal, length `n`): replays
+/// the exact tile walk of [`blocked_attention_causal`]'s row `n−1` at
+/// sequence length `n` — same absolute tile grid, same float-op order
+/// — so a blocked decode step **bit-matches** a blocked re-prefill
+/// whenever the logit bits match (the model computes `new_row` in
+/// `Matrix::matmul`'s accumulation order; see [`causal_logits_row`]).
+pub fn blocked_decode_last_row(new_row_of_h: &[f64], v: &Matrix) -> Vec<f64> {
+    let n = new_row_of_h.len();
+    assert_eq!(v.rows(), n);
+    let mut y = vec![0.0; v.cols()];
+    stream_softmax_row(new_row_of_h, v, &mut y);
+    y
+}
+
+/// Blocked exact attention backward: `(dQ, dK, dV)` from the forward's
+/// probability rows, streaming each row's **causal prefix** in column
+/// tiles:
+///
+/// ```text
+/// dP = dout·Vᵀ            (prefix only)
+/// dS = P ∘ (dP − rowdot(P, dP))
+/// dQ = dS·K,  dK += dSᵀ·Q,  dV += Pᵀ·dout
+/// ```
+///
+/// Two tile passes per row: pass 1 computes the `dP` prefix, the
+/// Jacobian row-dot and the `dV` scatter while the tile's `V` rows are
+/// hot; pass 2 forms `dS` and scatters into `dQ`/`dK`. Scratch is one
+/// `n`-length `dP` row. The row-streamed
+/// `attn_backward_exact` walks all `n` columns per row (its zero-skips
+/// only short-circuit the scatters); restricting to the causal prefix
+/// halves the flops. Matches the row-streamed kernel within
+/// [`blocked_rtol`] (the Jacobian row-dot is re-associated).
+pub fn attn_backward_blocked(
+    probs: &Matrix,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    dout: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let n = probs.rows();
+    let dh = q.cols();
+    assert_eq!(probs.cols(), n);
+    assert_eq!(k.rows(), n);
+    assert_eq!(v.rows(), n);
+    assert_eq!(dout.rows(), n);
+    let mut dq = Matrix::zeros(n, dh);
+    let mut dk = Matrix::zeros(n, dh);
+    let mut dv = Matrix::zeros(n, dh);
+    let mut dp = vec![0.0; n];
+    for i in 0..n {
+        let prow = probs.row(i);
+        let dorow = dout.row(i);
+        let len = i + 1;
+        // Pass 1: dP prefix, Jacobian dot, dV scatter — tile-local.
+        let mut dot = 0.0;
+        let mut t0 = 0;
+        while t0 < len {
+            let w = BLOCK.min(len - t0);
+            for jj in 0..w {
+                let j = t0 + jj;
+                let pij = prow[j];
+                let vrow = v.row(j);
+                let mut acc = 0.0;
+                for (&dc, &vc) in dorow.iter().zip(vrow) {
+                    acc += dc * vc;
+                }
+                dp[j] = acc;
+                dot += pij * acc;
+                if pij != 0.0 {
+                    for (slot, &dc) in dv.row_mut(j).iter_mut().zip(dorow) {
+                        *slot += pij * dc;
+                    }
+                }
+            }
+            t0 += w;
+        }
+        // Pass 2: dS, scattered into dQ row i and the dK rows.
+        let qrow = q.row(i);
+        let dqrow = dq.row_mut(i);
+        let mut t0 = 0;
+        while t0 < len {
+            let w = BLOCK.min(len - t0);
+            for jj in 0..w {
+                let j = t0 + jj;
+                let ds = prow[j] * (dp[j] - dot);
+                if ds == 0.0 {
+                    continue;
+                }
+                let krow = k.row(j);
+                for (slot, &kc) in dqrow.iter_mut().zip(krow) {
+                    *slot += ds * kc;
+                }
+                for (slot, &qc) in dk.row_mut(j).iter_mut().zip(qrow) {
+                    *slot += ds * qc;
+                }
+            }
+            t0 += w;
+        }
+    }
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{exact_attention, Mask};
+    use crate::gradient::batched::{attn_backward_exact, dense_causal_probs};
+    use crate::tensor::{max_abs_diff, Rng};
+
+    fn inputs(n: usize, d: usize, seed: u64, scale: f64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::seeded(seed);
+        let q = Matrix::randn(n, d, &mut rng).scale(scale);
+        let k = Matrix::randn(n, d, &mut rng).scale(scale);
+        let v = Matrix::randn(n, d, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn blocked_forward_matches_rowstream_oracle() {
+        for &n in &[5usize, 16, 33, 50] {
+            let (q, k, v) = inputs(n, 6, 40 + n as u64, 0.4);
+            let blocked = blocked_attention_causal(&q, &k, &v);
+            let oracle = exact_attention(&q, &k, &v, &Mask::causal(n));
+            let v_inf = crate::tensor::linf_norm_mat(&v);
+            let err = max_abs_diff(&blocked, &oracle);
+            assert!(err <= blocked_rtol(n) * v_inf.max(1.0), "n={n}: err = {err}");
+        }
+    }
+
+    #[test]
+    fn blocked_decode_bitmatches_blocked_prefill_row() {
+        let (n, d) = (37, 5);
+        let (q, k, v) = inputs(n, d, 41, 0.4);
+        let full = blocked_attention_causal(&q, &k, &v);
+        for i in [0usize, 15, 16, 31, 32, n - 1] {
+            let new_row = causal_logits_row(q.row(i), &k, i + 1);
+            let vi = v.slice(0, i + 1, 0, d);
+            let y = blocked_decode_last_row(&new_row, &vi);
+            for (a, b) in y.iter().zip(full.row(i)) {
+                assert_eq!(*a, *b, "row {i}: decode must replay the prefill walk");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_train_forward_is_consistent() {
+        let (n, d) = (33, 4);
+        let (q, k, v) = inputs(n, d, 42, 0.4);
+        let (y, probs) = blocked_train_forward(&q, &k, &v);
+        // y is the same walk as the serving forward — bitwise.
+        assert_eq!(max_abs_diff(&y, &blocked_attention_causal(&q, &k, &v)), 0.0);
+        // probs rows are causal, normalized, and near the row-streamed
+        // builder.
+        let want = dense_causal_probs(&q, &k);
+        let v_inf = 1.0; // probs entries are already ≤ 1
+        assert!(max_abs_diff(&probs, &want) <= blocked_rtol(n) * v_inf);
+        for i in 0..n {
+            let s: f64 = probs.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "row {i} sums to {s}");
+            for &x in &probs.row(i)[i + 1..] {
+                assert_eq!(x, 0.0, "probs must be causal");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_backward_matches_rowstream_kernel() {
+        let (n, d) = (33, 4);
+        let (q, k, v) = inputs(n, d, 43, 0.4);
+        let mut rng = Rng::seeded(44);
+        let dout = Matrix::randn(n, d, &mut rng);
+        let probs = dense_causal_probs(&q, &k);
+        let (dq, dk, dv) = attn_backward_blocked(&probs, &q, &k, &v, &dout);
+        let (dq_w, dk_w, dv_w) = attn_backward_exact(&probs, &q, &k, &v, &dout);
+        let tol = blocked_rtol(n) * 16.0; // gradients are not convex combos
+        assert!(max_abs_diff(&dq, &dq_w) <= tol);
+        assert!(max_abs_diff(&dk, &dk_w) <= tol);
+        assert!(max_abs_diff(&dv, &dv_w) <= tol);
+    }
+
+    #[test]
+    fn blocked_survives_huge_logits() {
+        // Logit magnitudes past exp's ±709 overflow threshold: the
+        // online max subtraction must keep every row a finite convex
+        // combination.
+        let n = 24;
+        let (q, k, _) = inputs(n, 4, 45, 20.0);
+        let v = Matrix::ones(n, 4);
+        let y = blocked_attention_causal(&q, &k, &v);
+        assert!(y.is_finite());
+        for i in 0..n {
+            for &x in y.row(i) {
+                assert!((x - 1.0).abs() < 1e-9, "row {i}: {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_split_is_bit_identical_to_serial() {
+        // Above the work threshold the driver splits rows across
+        // threads; rows are independent, so the split must be a
+        // bitwise no-op. (n chosen to cross the matmul-style cutoff.)
+        let (q, k, v) = inputs(192, 24, 46, 0.2);
+        let threaded = blocked_attention_causal(&q, &k, &v);
+        let mut serial = Matrix::zeros(192, 24);
+        forward_rows(&q, &k, &v, 0..192, serial.data_mut(), None);
+        assert_eq!(max_abs_diff(&threaded, &serial), 0.0);
+    }
+}

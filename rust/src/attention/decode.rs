@@ -56,13 +56,19 @@
 //!   (the conv decode path);
 //! * [`exact_decode_last_row`] — exact, from a precomputed pre-exp
 //!   logits row, with the **same floating-point operation order** as
-//!   [`exact_attention`](crate::attention::exact_attention)'s last row,
-//!   so a decode step bit-matches a full prefill (the engine's
+//!   [`exact_attention`](crate::attention::exact_attention)'s last row
+//!   (both stabilized by the same ascending max-fold), so a decode
+//!   step bit-matches a full prefill (the engine's
 //!   [`DecodeOp::Exact`](crate::attention::batched::DecodeOp) path and
 //!   the `tests/decode.rs` bit-match property rely on this);
-//! * [`exact_attend_last_row_only`] — exact with a *stabilized*
-//!   softmax, the fair standalone KV-cache baseline for benches (not
-//!   bit-compatible with the unstabilized full forward).
+//! * [`exact_attend_last_row_only`] — exact stabilized softmax with
+//!   divide-by-denominator accumulation, the fair standalone KV-cache
+//!   baseline for benches (close to but not bit-compatible with the
+//!   full forward, which multiplies by the reciprocal).
+//!
+//! A fourth exact decode kernel,
+//! [`blocked_decode_last_row`](crate::attention::blocked), lives with
+//! the blocked family: it bit-matches *blocked* prefill instead.
 
 use super::Mask;
 use crate::basis::{ConvBasis, KConvBasis};
@@ -242,18 +248,24 @@ impl DecodeState {
 /// Exact last-row attention from a precomputed pre-exp logits row
 /// (`new_row_of_h[j] = q_last · k_j`, causal, length `n`), replicating
 /// [`exact_attention`](crate::attention::exact_attention)'s exact
-/// floating-point operation order on its last row — unstabilized
-/// `exp`, ascending-`j` accumulation, multiply-by-reciprocal — so an
-/// exact decode step **bit-matches** a fresh full prefill. This is the
-/// kernel behind the batched engine's
-/// [`DecodeOp::Exact`](crate::attention::batched::DecodeOp) and the
-/// fallback for degenerate conv decode states.
+/// floating-point operation order on its last row — ascending max
+/// fold, stabilized `exp`, ascending-`j` accumulation,
+/// multiply-by-reciprocal — so an exact decode step **bit-matches** a
+/// fresh full prefill. This is the kernel behind the batched engine's
+/// row-stream [`DecodeOp::Exact`](crate::attention::batched::DecodeOp)
+/// and the fallback for degenerate conv decode states.
 pub fn exact_decode_last_row(new_row_of_h: &[f64], v: &Matrix) -> Vec<f64> {
     let n = new_row_of_h.len();
     assert_eq!(v.rows(), n);
     let d = v.cols();
-    // Mirrors `exact_attention`: A[n−1, j] = exp(H[n−1, j]) …
-    let w: Vec<f64> = new_row_of_h.iter().map(|&h| h.exp()).collect();
+    // Mirrors `exact_attention`: the row max via the same ascending
+    // f64::max fold over the causal support …
+    let mut mx = f64::NEG_INFINITY;
+    for &h in new_row_of_h {
+        mx = mx.max(h);
+    }
+    // … A[n−1, j] = exp(H[n−1, j] − max) …
+    let w: Vec<f64> = new_row_of_h.iter().map(|&h| (h - mx).exp()).collect();
     // … D[n−1] via `Matrix::row_sums` (sequential iterator sum) …
     let den: f64 = w.iter().sum();
     // … (A·V)[n−1] via `Matrix::matmul`'s i-k-j accumulation (skip on

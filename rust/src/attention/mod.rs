@@ -9,11 +9,13 @@
 //! per-token state the decode jobs grow).
 
 pub mod batched;
+pub mod blocked;
 pub mod decode;
 pub mod lowrank_backend;
 pub mod mask;
 pub mod rope;
 
+pub use blocked::ExactKernel;
 pub use mask::{figure3_masks, Mask, MaskKind};
 
 use crate::basis::{
@@ -25,14 +27,33 @@ use crate::tensor::Matrix;
 /// Exact masked attention (Definition 3.3):
 /// `Att(M,Q,K,V) = D⁻¹·A·V`, `A = M ∘ exp(QKᵀ)`, `D = diag(A·1)`.
 /// `O(n²d)` time, `O(n²)` memory — the baseline of every benchmark.
+///
+/// The softmax is **stabilized**: each row subtracts its masked
+/// maximum before `exp`, so large-magnitude logits no longer overflow
+/// to `inf`/NaN. Subtracting a per-row constant inside `exp` and
+/// dividing by the matching row sum is mathematically the identity;
+/// the decode kernel
+/// ([`decode::exact_decode_last_row`]) applies the *same* max-fold,
+/// `exp`, sum and reciprocal in the same order, preserving the
+/// decode-bitmatches-prefill contract.
 pub fn exact_attention(q: &Matrix, k: &Matrix, v: &Matrix, mask: &Mask) -> Matrix {
     let n = q.rows();
     assert_eq!(k.rows(), n);
     assert_eq!(v.rows(), n);
     let logits = q.matmul(&k.transpose());
+    // Masked per-row max, ascending-j f64::max fold — the exact fold
+    // the decode kernel replays over its `new_row`.
+    let mut row_max = vec![f64::NEG_INFINITY; n];
+    for (i, mx) in row_max.iter_mut().enumerate() {
+        for j in 0..n {
+            if mask.entry(i, j) {
+                *mx = mx.max(logits[(i, j)]);
+            }
+        }
+    }
     let a = Matrix::from_fn(n, n, |i, j| {
         if mask.entry(i, j) {
-            logits[(i, j)].exp()
+            (logits[(i, j)] - row_max[i]).exp()
         } else {
             0.0
         }
@@ -44,10 +65,18 @@ pub fn exact_attention(q: &Matrix, k: &Matrix, v: &Matrix, mask: &Mask) -> Matri
 }
 
 /// Exact *unmasked* (full bidirectional) softmax attention — the
-/// Appendix A extension target.
+/// Appendix A extension target. Stabilized like [`exact_attention`]
+/// (per-row max subtraction over the full row).
 pub fn exact_attention_unmasked(q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+    let n = q.rows();
     let logits = q.matmul(&k.transpose());
-    let a = logits.map(f64::exp);
+    let mut row_max = vec![f64::NEG_INFINITY; n];
+    for (i, mx) in row_max.iter_mut().enumerate() {
+        for &l in logits.row(i) {
+            *mx = mx.max(l);
+        }
+    }
+    let a = Matrix::from_fn(n, logits.cols(), |i, j| (logits[(i, j)] - row_max[i]).exp());
     let d = a.row_sums();
     let av = a.matmul(v);
     let inv: Vec<f64> = d.iter().map(|&x| 1.0 / x).collect();
@@ -441,6 +470,50 @@ mod tests {
                 assert!((y[(i, j)] - 1.0).abs() < 1e-10);
             }
         }
+    }
+
+    #[test]
+    fn exact_attention_survives_adversarial_logit_scales() {
+        // Regression: the pre-stabilization kernels took `exp(logits)`
+        // directly, so any logit past ±709 overflowed the row to
+        // `inf/inf = NaN`. With V = 1 every row must still come back
+        // exactly as a convex combination — for the row-streamed
+        // kernel, the unmasked variant, AND the blocked kernel (the
+        // harness in tests/blocked_kernels.rs re-checks this contract
+        // end to end).
+        let mut rng = Rng::seeded(104);
+        let (n, d) = (24, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(20.0);
+        let k = Matrix::randn(n, d, &mut rng).scale(20.0);
+        let v = Matrix::ones(n, d);
+        for y in [
+            exact_attention(&q, &k, &v, &Mask::causal(n)),
+            exact_attention_unmasked(&q, &k, &v),
+            blocked::blocked_attention_causal(&q, &k, &v),
+        ] {
+            assert!(y.is_finite());
+            for i in 0..n {
+                for j in 0..d {
+                    assert!((y[(i, j)] - 1.0).abs() < 1e-9, "y[{i}][{j}] = {}", y[(i, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stabilized_exact_matches_blocked_on_adversarial_scales() {
+        // Same adversarial magnitudes, generic V: both exact families
+        // must stay finite and agree within the blocked tolerance.
+        let mut rng = Rng::seeded(105);
+        let (n, d) = (33, 4);
+        let q = Matrix::randn(n, d, &mut rng).scale(20.0);
+        let k = Matrix::randn(n, d, &mut rng).scale(20.0);
+        let v = Matrix::randn(n, d, &mut rng);
+        let row = exact_attention(&q, &k, &v, &Mask::causal(n));
+        let blk = blocked::blocked_attention_causal(&q, &k, &v);
+        assert!(row.is_finite() && blk.is_finite());
+        let tol = blocked::blocked_rtol(n) * crate::tensor::linf_norm_mat(&v).max(1.0);
+        assert!(max_abs_diff(&row, &blk) <= tol);
     }
 
     #[test]

@@ -56,6 +56,7 @@ use super::metrics::Metrics;
 use super::router::{Backend, Router, RouterConfig};
 use crate::attention::batched::{AttnJob, BatchedBackend, BatchedEngine, EngineJob, JobOutput};
 use crate::attention::rope::rope_structured_qk;
+use crate::attention::ExactKernel;
 use crate::lowrank::LowRankConfig;
 use crate::model::{AttentionBackend, DecodeSession, Transformer};
 use crate::tensor::{Matrix, Rng};
@@ -657,7 +658,7 @@ fn batch_to_jobs(
             Payload::Synthetic { seed } => synthesize(req.seq_len, req.d_model, seed),
         };
         let spec = match batch.backend {
-            Backend::Exact => BatchedBackend::Exact,
+            Backend::Exact => BatchedBackend::Exact(ExactKernel::RowStream),
             Backend::ConvBasis => BatchedBackend::Strided(router.k_budget(q.rows())),
             Backend::LowRank => {
                 BatchedBackend::LowRank(LowRankConfig::new(lowrank_degree, q.cols() as f64))
@@ -1082,7 +1083,8 @@ fn generation_loop(
             let spec_n = gam.iter().take_while(|&&g| g > 0).count();
             let seqs: Vec<Vec<usize>> =
                 sessions[..spec_n].iter().map(|s| s.tokens().to_vec()).collect();
-            let recs = model.forward_batch(&seqs, &AttentionBackend::Exact, engine);
+            let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+            let recs = model.forward_batch(&seqs, &exact, engine);
             for (i, rec) in recs.iter().enumerate() {
                 let g = gam[i];
                 let n_total = sessions[i].len();
@@ -1391,7 +1393,7 @@ mod tests {
         // re-prefill loop produces (exact decode bit-matches prefill),
         // while the metrics prove it never re-prefilled.
         let model = tiny_model(41);
-        let server = gen_server(AttentionBackend::Exact, model.clone());
+        let server = gen_server(AttentionBackend::Exact(ExactKernel::RowStream), model.clone());
         let prompts: [&[usize]; 3] = [&[1, 2, 3, 4], &[9, 8, 7], &[5, 5, 5, 5, 5, 5]];
         let max_new = 6;
         for (i, p) in prompts.iter().enumerate() {
@@ -1401,7 +1403,8 @@ mod tests {
         resps.sort_by_key(|r| r.id);
         let metrics = server.shutdown();
         for (i, p) in prompts.iter().enumerate() {
-            let want = generate_by_reprefill(&model, p, max_new, &AttentionBackend::Exact);
+            let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+            let want = generate_by_reprefill(&model, p, max_new, &exact);
             assert_eq!(resps[i].tokens, want, "prompt {i}");
             assert_eq!(resps[i].prompt_len, p.len());
             assert_eq!(resps[i].decode_steps, max_new - 1);
@@ -1458,7 +1461,7 @@ mod tests {
             lowrank_degree: 2,
             gen: Some(GenConfig {
                 model: model.clone(),
-                backend: AttentionBackend::Exact,
+                backend: AttentionBackend::Exact(ExactKernel::RowStream),
                 max_concurrent: 2,
                 admission: AdmissionConfig::default(),
                 speculate: 0,
@@ -1509,7 +1512,7 @@ mod tests {
     fn generation_truncates_at_max_seq_and_rejects_invalid() {
         let model = tiny_model(43);
         let max_seq = model.cfg.max_seq; // 64
-        let server = gen_server(AttentionBackend::Exact, model.clone());
+        let server = gen_server(AttentionBackend::Exact(ExactKernel::RowStream), model.clone());
         // Asks for more tokens than max_seq leaves room for.
         let prompt: Vec<usize> = (0..60).map(|i| (i % 11) + 1).collect();
         server.submit_generate(GenRequest::new(0, prompt.clone(), 50));
@@ -1537,7 +1540,7 @@ mod tests {
         // refused at the door: `gen_rejected` counts them, everything
         // else stays clean.
         let model = tiny_model(46);
-        let server = gen_server(AttentionBackend::Exact, model);
+        let server = gen_server(AttentionBackend::Exact(ExactKernel::RowStream), model);
         server.submit_generate(GenRequest::new(0, vec![1, 2, 3], 4));
         server.submit_generate(GenRequest::new(1, vec![], 4)); // reject: empty
         server.submit_generate(GenRequest::new(2, vec![1; 65], 4)); // reject: > max_seq
@@ -1574,7 +1577,7 @@ mod tests {
         // it and the scheduler keeps serving valid requests.
         let model = tiny_model(47);
         let vocab = model.cfg.vocab_size;
-        let server = gen_server(AttentionBackend::Exact, model);
+        let server = gen_server(AttentionBackend::Exact(ExactKernel::RowStream), model);
         server.submit_generate(GenRequest::new(0, vec![1, 2, 3], 4));
         server.submit_generate(GenRequest::new(1, vec![1, vocab, 2], 4)); // reject
         server.submit_generate(GenRequest::new(2, vec![999_999], 4)); // reject
@@ -1599,7 +1602,7 @@ mod tests {
     #[test]
     fn streaming_sink_receives_tokens_then_done() {
         let model = tiny_model(47);
-        let server = gen_server(AttentionBackend::Exact, model.clone());
+        let server = gen_server(AttentionBackend::Exact(ExactKernel::RowStream), model.clone());
         let events: Arc<Mutex<Vec<GenEvent>>> = Arc::new(Mutex::new(Vec::new()));
         let ev = events.clone();
         let sink = GenSink::new(move |e| ev.lock().unwrap().push(e.clone()));
@@ -1616,7 +1619,8 @@ mod tests {
                 _ => None,
             })
             .collect();
-        let want = generate_by_reprefill(&model, &[1, 2, 3], 6, &AttentionBackend::Exact);
+        let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+        let want = generate_by_reprefill(&model, &[1, 2, 3], 6, &exact);
         assert_eq!(toks.iter().map(|t| t.0).collect::<Vec<_>>(), (0..6).collect::<Vec<_>>());
         assert_eq!(toks.iter().map(|t| t.1).collect::<Vec<_>>(), want);
         match evs.last().unwrap() {
@@ -1635,7 +1639,7 @@ mod tests {
         // stream must equal the plain greedy oracle's while the decode
         // lane runs strictly fewer steps than tokens generated.
         let model = tiny_model(51);
-        let server = spec_server(AttentionBackend::Exact, model.clone(), 3);
+        let server = spec_server(AttentionBackend::Exact(ExactKernel::RowStream), model.clone(), 3);
         let prompts: [&[usize]; 2] = [&[1, 2, 3, 4], &[9, 8, 7]];
         let max_new = 9;
         for (i, p) in prompts.iter().enumerate() {
@@ -1645,7 +1649,8 @@ mod tests {
         resps.sort_by_key(|r| r.id);
         let s = server.shutdown().snapshot();
         for (i, p) in prompts.iter().enumerate() {
-            let want = generate_by_reprefill(&model, p, max_new, &AttentionBackend::Exact);
+            let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+            let want = generate_by_reprefill(&model, p, max_new, &exact);
             assert_eq!(resps[i].tokens, want, "prompt {i}");
         }
         assert_eq!(s.gen_tokens, (prompts.len() * max_new) as u64);
@@ -1669,7 +1674,7 @@ mod tests {
         let server = Server::start(ServerConfig {
             gen: Some(GenConfig {
                 model,
-                backend: AttentionBackend::Exact,
+                backend: AttentionBackend::Exact(ExactKernel::RowStream),
                 max_concurrent: 1, // forces the second request to queue
                 admission: AdmissionConfig::default(),
                 speculate: 0,
@@ -1744,7 +1749,7 @@ mod tests {
         let server = Server::start(ServerConfig {
             gen: Some(GenConfig {
                 model,
-                backend: AttentionBackend::Exact,
+                backend: AttentionBackend::Exact(ExactKernel::RowStream),
                 max_concurrent: 8,
                 admission: AdmissionConfig {
                     max_batch_prefill_tokens: 8,
@@ -1776,7 +1781,7 @@ mod tests {
         let server = Server::start(ServerConfig {
             gen: Some(GenConfig {
                 model,
-                backend: AttentionBackend::Exact,
+                backend: AttentionBackend::Exact(ExactKernel::RowStream),
                 max_concurrent: 1,
                 admission: AdmissionConfig { max_queue: 1, ..Default::default() },
                 speculate: 0,
@@ -1805,7 +1810,7 @@ mod tests {
         // drain every queued request to completion before exiting
         // (flush semantics, mirroring the attention path).
         let model = tiny_model(44);
-        let server = gen_server(AttentionBackend::Exact, model);
+        let server = gen_server(AttentionBackend::Exact(ExactKernel::RowStream), model);
         for i in 0..5u64 {
             server.submit_generate(GenRequest::new(i, vec![1, 2, 3], 8));
         }

@@ -63,7 +63,8 @@ use super::fast::{attn_backward_core, grad_core, FOperator, FastGradientReport};
 use super::naive::{grad_naive, loss_naive};
 use super::AttentionLossProblem;
 use crate::attention::batched::{conv_fingerprint, recover_cfg_tag};
-use crate::attention::{Mask, MaskKind};
+use crate::attention::blocked::attn_backward_blocked;
+use crate::attention::{ExactKernel, Mask, MaskKind};
 use crate::basis::RecoverConfig;
 use crate::coordinator::{BasisCache, CacheKey, CachedBasis, Metrics, StepBasis};
 use crate::fft::{FftPlanner, SharedFftPlanner};
@@ -256,7 +257,11 @@ pub enum AttnBackwardMode {
     /// `tests/gradient_oracle.rs`), `O(n²·d_h)`, but row-streamed:
     /// `O(n + n·d_h)` scratch instead of three `n×n` temporaries.
     /// Requires [`AttnBackwardJob::probs`]. The training default.
-    Exact,
+    /// The [`ExactKernel`] picks the family: `RowStream` is the dense
+    /// oracle above; `Blocked` streams each row's causal prefix in
+    /// column tiles (half the flops, within the blocked family's
+    /// documented tolerance of the oracle).
+    Exact(ExactKernel),
     /// Conv-basis fast path through the `f`-operator of
     /// `gradient::fast`: `O(k·n·d_h²·log n)`, within recovery
     /// tolerance of exact.
@@ -351,9 +356,12 @@ fn execute_attn_backward_inner(
 ) -> AttnBackwardOutput {
     let AttnBackwardJob { layer, head, q, k, v, dout, probs, basis, mode } = job;
     let cfg = match mode {
-        AttnBackwardMode::Exact => {
+        AttnBackwardMode::Exact(kernel) => {
             let probs = probs.expect("exact attention backward requires the forward's probs");
-            let (dq, dk, dv) = attn_backward_exact(&probs, &q, &k, &v, &dout);
+            let (dq, dk, dv) = match kernel {
+                ExactKernel::RowStream => attn_backward_exact(&probs, &q, &k, &v, &dout),
+                ExactKernel::Blocked => attn_backward_blocked(&probs, &q, &k, &v, &dout),
+            };
             return AttnBackwardOutput {
                 dq,
                 dk,
@@ -761,7 +769,8 @@ mod tests {
         // matrix to FFT rounding, so the fast backward tracks the exact
         // one to ~1e-8.
         let e = engine(2);
-        let exact = submit_backward(&e, backward_job(911, AttnBackwardMode::Exact));
+        let exact =
+            submit_backward(&e, backward_job(911, AttnBackwardMode::Exact(ExactKernel::RowStream)));
         let fast = submit_backward(
             &e,
             backward_job(911, AttnBackwardMode::Fast(FastGradConfig::exact(20))),
@@ -867,7 +876,8 @@ mod tests {
             recover: RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 },
             use_cache: false,
         };
-        let exact = submit_backward(&e, backward_job(913, AttnBackwardMode::Exact));
+        let exact =
+            submit_backward(&e, backward_job(913, AttnBackwardMode::Exact(ExactKernel::RowStream)));
         let fb = submit_backward(&e, backward_job(913, AttnBackwardMode::Fast(bad)));
         assert!(fb.fell_back);
         assert_eq!(max_abs_diff(&fb.dq, &exact.dq), 0.0);

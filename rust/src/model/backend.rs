@@ -5,7 +5,8 @@
 //! no parameter updates, exactly the paper's protocol.
 
 use crate::attention::batched::{BatchedBackend, DecodeOp, RouterPolicy};
-use crate::attention::{conv_attention, exact_attention, Mask};
+use crate::attention::blocked::{blocked_attention_causal, blocked_train_forward};
+use crate::attention::{conv_attention, exact_attention, ExactKernel, Mask};
 use crate::basis::RecoverConfig;
 use crate::lowrank::{LowRankAttention, LowRankConfig};
 use crate::tensor::Matrix;
@@ -14,8 +15,11 @@ use std::sync::Arc;
 /// Which operator computes `softmax(QKᵀ)·V` per head.
 #[derive(Clone, Debug)]
 pub enum AttentionBackend {
-    /// Exact `O(n²d)` attention (training + baseline).
-    Exact,
+    /// Exact `O(n²d)` attention (training + baseline), served by the
+    /// selected [`ExactKernel`] family — the row-streamed oracle or
+    /// the blocked streaming-softmax kernels. Decode pins to the same
+    /// flavor (see [`Self::to_decode`]).
+    Exact(ExactKernel),
     /// Algorithm 1 with the adaptive binary-search recovery
     /// (Algorithms 2–3). Falls back to exact on recovery failure
     /// (degenerate normalizer etc.) — the serving layer records
@@ -57,7 +61,7 @@ impl AttentionBackend {
     /// forward pass through one `BatchedEngine` call per layer.
     pub fn to_batched(&self) -> BatchedBackend {
         match self {
-            AttentionBackend::Exact => BatchedBackend::Exact,
+            AttentionBackend::Exact(kernel) => BatchedBackend::Exact(*kernel),
             AttentionBackend::ConvBasis(cfg) => BatchedBackend::Conv(*cfg),
             AttentionBackend::ConvStrided(k) => BatchedBackend::Strided(*k),
             AttentionBackend::LowRank(cfg) => {
@@ -84,14 +88,21 @@ impl AttentionBackend {
     ///   protocol).
     pub fn to_decode(&self) -> DecodeOp {
         match self {
-            // Routed decode pins to exact: low-rank routes cannot seed
-            // a DecodeState, and a policy-independent decode plan keeps
-            // the seed-hit invariants intact (see the variant docs).
+            // Exact decode inherits the prefill's kernel flavor: the
+            // decode-bitmatches-prefill contract only holds within one
+            // ExactKernel family, so mixing flavors across prefill and
+            // decode would break the bit pins in tests/decode.rs and
+            // tests/blocked_kernels.rs.
+            AttentionBackend::Exact(kernel) => DecodeOp::Exact(*kernel),
+            // Routed/low-rank decode pins to the row-stream exact row:
+            // low-rank routes cannot seed a DecodeState, and a
+            // policy-independent decode plan keeps the seed-hit
+            // invariants intact (see the variant docs).
             // `Transformer::prefill_batch` counts the pinned low-rank
             // slots in `Metrics::router_decode_pins`.
-            AttentionBackend::Exact
-            | AttentionBackend::LowRank(_)
-            | AttentionBackend::Routed(_) => DecodeOp::Exact,
+            AttentionBackend::LowRank(_) | AttentionBackend::Routed(_) => {
+                DecodeOp::Exact(ExactKernel::RowStream)
+            }
             AttentionBackend::ConvBasis(cfg) => DecodeOp::conv(cfg.k_max),
             AttentionBackend::ConvStrided(k) => DecodeOp::conv(*k),
         }
@@ -110,7 +121,7 @@ impl AttentionBackend {
         let n = q.rows();
         let mask = Mask::causal(n);
         match self {
-            AttentionBackend::Exact => {
+            AttentionBackend::Exact(ExactKernel::RowStream) => {
                 if keep_probs {
                     // The one source of truth for training-forward
                     // softmax rows: the LM-backward fallback replays
@@ -120,6 +131,14 @@ impl AttentionBackend {
                     (probs.matmul(v), Some(probs))
                 } else {
                     (exact_attention(q, k, v, &mask), None)
+                }
+            }
+            AttentionBackend::Exact(ExactKernel::Blocked) => {
+                if keep_probs {
+                    let (y, probs) = blocked_train_forward(q, k, v);
+                    (y, Some(probs))
+                } else {
+                    (blocked_attention_causal(q, k, v), None)
                 }
             }
             AttentionBackend::ConvBasis(cfg) => {
@@ -163,7 +182,7 @@ mod tests {
         let q = Matrix::randn(n, d, &mut rng).scale(0.5);
         let k = Matrix::randn(n, d, &mut rng).scale(0.5);
         let v = Matrix::randn(n, d, &mut rng);
-        let b = AttentionBackend::Exact;
+        let b = AttentionBackend::Exact(ExactKernel::RowStream);
         let (y1, p) = b.attend(&q, &k, &v, true);
         let (y2, _) = b.attend(&q, &k, &v, false);
         assert!(max_abs_diff(&y1, &y2) < 1e-10);
@@ -181,7 +200,7 @@ mod tests {
         let q = Matrix::randn(n, d, &mut rng).scale(0.4);
         let k = Matrix::randn(n, d, &mut rng).scale(0.4);
         let v = Matrix::randn(n, d, &mut rng);
-        let exact = AttentionBackend::Exact.attend(&q, &k, &v, false).0;
+        let exact = AttentionBackend::Exact(ExactKernel::RowStream).attend(&q, &k, &v, false).0;
         let conv = AttentionBackend::ConvBasis(RecoverConfig::exact(n))
             .attend(&q, &k, &v, false)
             .0;
@@ -195,7 +214,7 @@ mod tests {
         let q = Matrix::rand_uniform(n, d, 0.5, &mut rng);
         let k = Matrix::rand_uniform(n, d, 0.5, &mut rng);
         let v = Matrix::randn(n, d, &mut rng);
-        let exact = AttentionBackend::Exact.attend(&q, &k, &v, false).0;
+        let exact = AttentionBackend::Exact(ExactKernel::RowStream).attend(&q, &k, &v, false).0;
         let lr = AttentionBackend::LowRank(LowRankConfig::new(6, 1.0))
             .attend(&q, &k, &v, false)
             .0;
@@ -209,8 +228,8 @@ mod tests {
         let b = AttentionBackend::Routed(policy);
         assert!(matches!(b.to_batched(), BatchedBackend::Routed(_)));
         assert!(
-            matches!(b.to_decode(), DecodeOp::Exact),
-            "routed decode is pinned to the exact last-row kernel"
+            matches!(b.to_decode(), DecodeOp::Exact(ExactKernel::RowStream)),
+            "routed decode is pinned to the row-stream exact last-row kernel"
         );
     }
 

@@ -82,6 +82,7 @@ impl Adam {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::ExactKernel;
     use crate::model::{AttentionBackend, ModelConfig};
     use crate::tensor::Rng;
 
@@ -103,7 +104,8 @@ mod tests {
         let mut first = None;
         let mut last = 0.0;
         for _ in 0..30 {
-            let rec = model.forward(&tokens, &AttentionBackend::Exact, true);
+            let rec =
+                model.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
             let (loss, dlogits) = model.lm_loss(&rec, &targets, usize::MAX);
             if first.is_none() {
                 first = Some(loss);

@@ -26,6 +26,7 @@ use super::backend::AttentionBackend;
 use super::optim::Adam;
 use super::transformer::{ForwardRecord, ModelConfig, Transformer};
 use crate::attention::batched::{BatchedEngine, EngineConfig, EngineJob};
+use crate::attention::ExactKernel;
 use crate::basis::RecoverConfig;
 use crate::data::{ByteTokenizer, SentimentDataset, SyntheticCorpus};
 use crate::gradient::batched::{AttnBackwardMode, FastGradConfig, GradJob};
@@ -97,7 +98,7 @@ pub struct TrainLog {
 /// model and the loss curve (the e2e deliverable's loss log).
 ///
 /// Routes the whole step through a private [`BatchedEngine`] in
-/// [`TrainAttentionMode::Exact`] / [`AttnBackwardMode::Exact`] —
+/// [`TrainAttentionMode::Exact`] / row-stream [`AttnBackwardMode::Exact`] —
 /// bit-identical weights to the pre-engine dense loop (see
 /// [`train_lm_with_engine`] to share an engine or select the conv-basis
 /// forward/backward).
@@ -113,7 +114,7 @@ pub fn train_lm(
         corpus_bytes,
         &engine,
         &TrainAttentionMode::Exact,
-        &AttnBackwardMode::Exact,
+        &AttnBackwardMode::Exact(ExactKernel::RowStream),
     )
 }
 
@@ -222,7 +223,7 @@ pub fn train_classifier(
         dataset,
         &engine,
         &TrainAttentionMode::Exact,
-        &AttnBackwardMode::Exact,
+        &AttnBackwardMode::Exact(ExactKernel::RowStream),
     )
 }
 
@@ -439,7 +440,7 @@ fn assert_conv_modes_compatible(fwd: &TrainAttentionMode, bwd: &AttnBackwardMode
 /// [`train_attention_heads`] policy, applied to the LM loops).
 fn no_dead_cache_writes(mode: &AttnBackwardMode) -> AttnBackwardMode {
     match mode {
-        AttnBackwardMode::Exact => AttnBackwardMode::Exact,
+        AttnBackwardMode::Exact(kernel) => AttnBackwardMode::Exact(*kernel),
         AttnBackwardMode::Fast(cfg) => {
             AttnBackwardMode::Fast(FastGradConfig { use_cache: false, ..*cfg })
         }
@@ -548,7 +549,7 @@ mod tests {
             2000,
             &engine,
             &TrainAttentionMode::Exact,
-            &AttnBackwardMode::Exact,
+            &AttnBackwardMode::Exact(ExactKernel::RowStream),
         );
         assert!(log.final_loss.is_finite());
         assert_eq!(log.step_fwd_fallbacks, vec![0; tcfg.steps]);
@@ -585,7 +586,8 @@ mod tests {
         let tcfg =
             TrainConfig { steps: 60, lr: 3e-3, seq_len: 48, batch: 4, log_every: 20, seed: 4 };
         let (model, _) = train_classifier(&mcfg, &tcfg, &ds);
-        let acc = eval_classifier(&model, &ds.test, 48, &AttentionBackend::Exact);
+        let acc =
+            eval_classifier(&model, &ds.test, 48, &AttentionBackend::Exact(ExactKernel::RowStream));
         assert!(acc > 0.6, "accuracy = {acc}");
     }
 }

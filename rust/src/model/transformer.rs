@@ -12,6 +12,7 @@ use crate::attention::batched::{
     JobOutput,
 };
 use crate::attention::rope::Rope;
+use crate::attention::ExactKernel;
 use crate::coordinator::{Metrics, StepBasis};
 use crate::gradient::batched::{AttnBackwardJob, AttnBackwardMode};
 use crate::tensor::{Matrix, Rng};
@@ -625,7 +626,7 @@ impl Transformer {
     ///
     /// * [`TrainAttentionMode::Exact`] — the `O(n²)` softmax kernel;
     ///   per record **bit-identical** to
-    ///   `forward(tokens, &AttentionBackend::Exact, true)` (the jobs
+    ///   `forward(tokens, &AttentionBackend::Exact(kernel), true)` (the jobs
     ///   run the same training-softmax helper, and all non-attention
     ///   arithmetic is record-local in the same float-op order). The
     ///   softmax rows land in the cache for the exact backward.
@@ -653,7 +654,7 @@ impl Transformer {
         let nh = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
         let backend = match mode {
-            TrainAttentionMode::Exact => BatchedBackend::Exact,
+            TrainAttentionMode::Exact => BatchedBackend::Exact(ExactKernel::RowStream),
             TrainAttentionMode::Conv(cfg) => BatchedBackend::Conv(*cfg),
         };
 
@@ -1382,7 +1383,7 @@ impl Transformer {
     /// so per-layer submits spanning the whole micro-batch are the
     /// widest possible batching.
     ///
-    /// With [`AttnBackwardMode::Exact`] the accumulated `grads` are
+    /// With row-stream [`AttnBackwardMode::Exact`] the accumulated `grads` are
     /// **bit-identical** to calling the dense [`Self::backward`] per
     /// record in order, for any engine worker count: the streamed
     /// kernel replays the dense float-op order per output element, jobs
@@ -1616,7 +1617,8 @@ mod tests {
     #[test]
     fn forward_shapes() {
         let m = tiny_model(201);
-        let rec = m.forward(&[1, 2, 3, 4, 5], &AttentionBackend::Exact, false);
+        let rec =
+            m.forward(&[1, 2, 3, 4, 5], &AttentionBackend::Exact(ExactKernel::RowStream), false);
         assert_eq!(rec.logits.shape(), (5, 16));
         assert_eq!(rec.final_hidden.shape(), (5, 8));
         assert!(rec.logits.is_finite());
@@ -1640,7 +1642,7 @@ mod tests {
         let m = tiny_model(203);
         let tokens = [1usize, 2, 3, 4, 5, 6];
         let targets = [2usize, 3, 4, 5, 6, 7];
-        let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+        let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
         let (loss0, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
         let mut grads = m.zero_grads();
         m.backward(&rec, &dlogits, None, &mut grads);
@@ -1657,7 +1659,7 @@ mod tests {
             l.w1.axpy_mat(-lr, &gl.w1);
             l.w2.axpy_mat(-lr, &gl.w2);
         }
-        let rec2 = m2.forward(&tokens, &AttentionBackend::Exact, false);
+        let rec2 = m2.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), false);
         let (loss1, _) = m2.lm_loss(&rec2, &targets, usize::MAX);
         assert!(loss1 < loss0, "{loss1} !< {loss0}");
     }
@@ -1668,14 +1670,14 @@ mod tests {
         let m = tiny_model(204);
         let tokens = [3usize, 1, 4, 1, 5];
         let targets = [1usize, 4, 1, 5, 9];
-        let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+        let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
         let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
         let mut grads = m.zero_grads();
         m.backward(&rec, &dlogits, None, &mut grads);
 
         let eps = 1e-5;
         let loss_with = |m: &Transformer| {
-            let r = m.forward(&tokens, &AttentionBackend::Exact, false);
+            let r = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), false);
             m.lm_loss(&r, &targets, usize::MAX).0
         };
         // wq of layer 0, a few entries.
@@ -1730,7 +1732,7 @@ mod tests {
         let m = tiny_model(205);
         let tokens = [2usize, 7, 1, 9];
         let label = true;
-        let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+        let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
         let (_, _, dcls) = m.cls_loss(&rec, label);
         let mut grads = m.zero_grads();
         let zero_dlogits = Matrix::zeros(4, 16);
@@ -1738,7 +1740,7 @@ mod tests {
 
         let eps = 1e-5;
         let loss_with = |m: &Transformer| {
-            let r = m.forward(&tokens, &AttentionBackend::Exact, false);
+            let r = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), false);
             m.cls_loss(&r, label).0
         };
         let mut mp = m.clone();
@@ -1760,8 +1762,8 @@ mod tests {
     #[test]
     fn deterministic_forward() {
         let m = tiny_model(206);
-        let a = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
-        let b = m.forward(&[1, 2, 3], &AttentionBackend::Exact, false);
+        let a = m.forward(&[1, 2, 3], &AttentionBackend::Exact(ExactKernel::RowStream), false);
+        let b = m.forward(&[1, 2, 3], &AttentionBackend::Exact(ExactKernel::RowStream), false);
         assert!(max_abs_diff(&a.logits, &b.logits) == 0.0);
     }
 
@@ -1770,7 +1772,9 @@ mod tests {
         use crate::attention::batched::{BatchedEngine, EngineConfig};
         let m = tiny_model(208);
         let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
-        for backend in [AttentionBackend::Exact, AttentionBackend::ConvStrided(4)] {
+        for backend in
+            [AttentionBackend::Exact(ExactKernel::RowStream), AttentionBackend::ConvStrided(4)]
+        {
             let prompt = vec![1usize, 2, 3, 4, 5];
             let (sess, last) = m.prefill(&prompt, &backend, &engine);
             assert_eq!(sess.len(), prompt.len());
@@ -1792,12 +1796,13 @@ mod tests {
         let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
         let prompt = vec![3usize, 1, 4, 1];
         let feed = [5usize, 9, 2, 6];
-        let (mut sess, _) = m.prefill(&prompt, &AttentionBackend::Exact, &engine);
+        let (mut sess, _) =
+            m.prefill(&prompt, &AttentionBackend::Exact(ExactKernel::RowStream), &engine);
         let mut toks = prompt.clone();
         for &t in &feed {
             let logits = m.decode_step(std::slice::from_mut(&mut sess), &[t], &engine);
             toks.push(t);
-            let want = m.forward(&toks, &AttentionBackend::Exact, false);
+            let want = m.forward(&toks, &AttentionBackend::Exact(ExactKernel::RowStream), false);
             assert_eq!(
                 logits[0],
                 want.logits.row(toks.len() - 1).to_vec(),
@@ -1837,8 +1842,9 @@ mod tests {
         let prompt = vec![2usize, 4, 6, 8, 10];
         let engine_a = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
         let engine_b = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
-        let (mut sess_a, _) = m.prefill(&prompt, &AttentionBackend::Exact, &engine_a);
-        let (mut sess_b, _) = m.prefill(&prompt, &AttentionBackend::Exact, &engine_b);
+        let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+        let (mut sess_a, _) = m.prefill(&prompt, &exact, &engine_a);
+        let (mut sess_b, _) = m.prefill(&prompt, &exact, &engine_b);
 
         let mut rng = Rng::seeded(213);
         let (n, d) = (12, 4);
@@ -1853,7 +1859,7 @@ mod tests {
                     q,
                     k,
                     v,
-                    BatchedBackend::Exact,
+                    BatchedBackend::Exact(ExactKernel::RowStream),
                 )
             })
             .collect();
@@ -1887,7 +1893,9 @@ mod tests {
         let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
         let seqs: Vec<Vec<usize>> =
             vec![vec![1, 2, 3, 4, 5, 6], vec![7, 8, 9], vec![2, 4, 6, 8, 10, 12, 14, 1]];
-        for backend in [AttentionBackend::Exact, AttentionBackend::ConvStrided(4)] {
+        for backend in
+            [AttentionBackend::Exact(ExactKernel::RowStream), AttentionBackend::ConvStrided(4)]
+        {
             let singles: Vec<_> =
                 seqs.iter().map(|s| m.forward(s, &backend, false)).collect();
             let batched = m.forward_batch(&seqs, &backend, &engine);

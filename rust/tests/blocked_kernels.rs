@@ -1,0 +1,347 @@
+//! Kernel-equivalence oracle harness for the blocked exact kernels
+//! (ISSUE 10).
+//!
+//! Two-level contract, mirrored from `attention::blocked`'s module
+//! doc:
+//!
+//! 1. **Cross-family tolerance** — every blocked kernel (serving
+//!    forward, training forward, decode, backward) matches its
+//!    row-streamed oracle within the documented analytic bound
+//!    `blocked_rtol(n) · ‖V‖∞`, on random AND adversarial inputs, at
+//!    sizes straddling tile boundaries (n ∈ {8, 33, 64, 257} with
+//!    `BLOCK` = 16: below one tile, past two tiles, exactly four
+//!    tiles, sixteen tiles plus a ragged single-column tail). The
+//!    blocked side is *more* robust than a naive oracle: it must
+//!    survive logit magnitudes where an unstabilized softmax
+//!    overflows to inf/NaN.
+//! 2. **In-family bit-identity** — blocked decode replays blocked
+//!    prefill's float-op order step for step (`assert_eq!`, not
+//!    tolerance), the engine's blocked lanes are the library
+//!    functions bit for bit, and engine-routed blocked jobs are
+//!    bit-identical across worker counts 1/2/8.
+//!
+//! A central finite-difference check additionally pins the blocked
+//! backward to the analytic gradient, independently of every other
+//! kernel in the crate.
+
+use conv_basis::attention::batched::{
+    AttnJob, BatchedBackend, BatchedEngine, DecodeJob, DecodeOp, EngineConfig, EngineJob,
+    EngineResult,
+};
+use conv_basis::attention::blocked::{
+    attn_backward_blocked, blocked_attention_causal, blocked_decode_last_row, blocked_rtol,
+    blocked_train_forward, causal_logits_row, BLOCK,
+};
+use conv_basis::attention::decode::exact_decode_last_row;
+use conv_basis::attention::{exact_attention, ExactKernel, Mask};
+use conv_basis::gradient::batched::{AttnBackwardJob, AttnBackwardMode};
+use conv_basis::tensor::{linf_norm_mat, max_abs_diff, softmax, Matrix, Rng};
+use std::sync::Arc;
+
+/// Sizes straddling tile boundaries (see the module doc above).
+const SIZES: [usize; 4] = [8, 33, 64, 257];
+
+fn inputs(n: usize, d: usize, seed: u64, scale: f64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::seeded(seed);
+    let q = Matrix::randn(n, d, &mut rng).scale(scale);
+    let k = Matrix::randn(n, d, &mut rng).scale(scale);
+    let v = Matrix::randn(n, d, &mut rng);
+    (q, k, v)
+}
+
+/// The documented cross-family tolerance for one problem instance:
+/// the relative bound scaled by the magnitude of the values the
+/// softmax rows mix.
+fn tol(n: usize, v: &Matrix) -> f64 {
+    blocked_rtol(n) * linf_norm_mat(v).max(1.0)
+}
+
+#[test]
+fn blocked_forward_matches_rowstream_oracle_at_tile_straddling_sizes() {
+    assert_eq!(BLOCK, 16, "SIZES above were chosen to straddle the documented tile width");
+    for (i, &n) in SIZES.iter().enumerate() {
+        let (q, k, v) = inputs(n, 8, 900 + i as u64, 0.5);
+        let got = blocked_attention_causal(&q, &k, &v);
+        let want = exact_attention(&q, &k, &v, &Mask::causal(n));
+        let err = max_abs_diff(&got, &want);
+        let t = tol(n, &v);
+        assert!(err <= t, "n={n}: blocked forward drifted {err:.3e} > {t:.3e}");
+    }
+}
+
+#[test]
+fn blocked_train_forward_probs_match_dense_softmax_rows() {
+    for (i, &n) in SIZES.iter().enumerate() {
+        let (q, k, v) = inputs(n, 6, 910 + i as u64, 0.5);
+        let (y, probs) = blocked_train_forward(&q, &k, &v);
+        // The training forward's y is the serving forward, bit for
+        // bit: both run the same tile walk over the same inputs.
+        assert_eq!(
+            max_abs_diff(&y, &blocked_attention_causal(&q, &k, &v)),
+            0.0,
+            "n={n}: training y must be bit-identical to the serving forward"
+        );
+        let logits = q.matmul(&k.transpose());
+        for r in 0..n {
+            let want = softmax(&logits.row(r)[..=r]);
+            for (j, w) in want.iter().enumerate() {
+                let p = probs.row(r)[j];
+                assert!(
+                    (p - w).abs() <= blocked_rtol(n),
+                    "n={n}: probs[{r},{j}] = {p:.17e} vs dense softmax {w:.17e}"
+                );
+            }
+            for j in (r + 1)..n {
+                assert_eq!(probs.row(r)[j], 0.0, "n={n}: probs[{r},{j}] above the diagonal");
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_decode_tracks_rowstream_and_bitmatches_blocked_reprefill() {
+    // n = 41 walks the growing prefix across two tile boundaries
+    // (16 and 32) with ragged tails on both sides of each.
+    let (n, d) = (41, 5);
+    let (q, k, v) = inputs(n, d, 920, 0.5);
+    for i in 0..n {
+        let len = i + 1;
+        let kp = k.slice(0, len, 0, d);
+        let vp = v.slice(0, len, 0, d);
+        let h = causal_logits_row(q.row(i), &kp, len);
+        let got = blocked_decode_last_row(&h, &vp);
+        // In-family bit pin: decode replays the float-op order of a
+        // blocked prefill of the same prefix, step for step.
+        let qp = q.slice(0, len, 0, d);
+        let full = blocked_attention_causal(&qp, &kp, &vp);
+        assert_eq!(got, full.row(len - 1), "step {i}: blocked decode != blocked prefill bits");
+        // Cross-family tolerance pin against the row-stream decode.
+        let want = exact_decode_last_row(&h, &vp);
+        let t = tol(len, &vp);
+        for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= t,
+                "step {i}, col {j}: blocked decode drifted {:.3e} > {t:.3e}",
+                (a - b).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_survives_logit_scales_that_overflow_unstabilized_exp() {
+    let (n, d) = (64, 8);
+    let mut rng = Rng::seeded(930);
+    // randn·20 per side gives logits of magnitude ~d·400, far past
+    // ~709.78 where a raw `exp` overflows f64 to inf. An unmaxed
+    // softmax returns inf/inf = NaN here; both exact families must
+    // return the convex combination regardless.
+    let q = Matrix::randn(n, d, &mut rng).scale(20.0);
+    let k = Matrix::randn(n, d, &mut rng).scale(20.0);
+    let v = Matrix::ones(n, d);
+    let got = blocked_attention_causal(&q, &k, &v);
+    assert!(got.is_finite(), "blocked forward must survive huge logits");
+    let t = tol(n, &v);
+    for i in 0..n {
+        for (j, &x) in got.row(i).iter().enumerate() {
+            assert!(
+                (x - 1.0).abs() <= t,
+                "[{i},{j}]: a convex combination of ones must stay ~1, got {x:.17e}"
+            );
+        }
+    }
+    // Still agrees with the (stabilized) row-stream oracle.
+    let want = exact_attention(&q, &k, &v, &Mask::causal(n));
+    let err = max_abs_diff(&got, &want);
+    assert!(err <= t, "adversarial scale: blocked drifted {err:.3e} > {t:.3e} from row-stream");
+    // Decode at the same scale.
+    let h = causal_logits_row(q.row(n - 1), &k, n);
+    let row = blocked_decode_last_row(&h, &v);
+    assert!(row.iter().all(|x| x.is_finite()), "blocked decode must survive huge logits");
+    assert_eq!(row, got.row(n - 1), "decode/prefill bit pin holds at adversarial scale");
+}
+
+#[test]
+fn blocked_backward_passes_central_finite_difference() {
+    let (n, d) = (12, 4);
+    let (q, k, v) = inputs(n, d, 940, 0.4);
+    let mut rng = Rng::seeded(941);
+    let w = Matrix::randn(n, d, &mut rng);
+    // L(Q, K, V) = Σ_ij W_ij · Y_ij, so dL/dY = W.
+    let loss = |q: &Matrix, k: &Matrix, v: &Matrix| -> f64 {
+        let y = blocked_attention_causal(q, k, v);
+        let mut l = 0.0;
+        for i in 0..n {
+            for j in 0..d {
+                l += w.row(i)[j] * y.row(i)[j];
+            }
+        }
+        l
+    };
+    let (_, probs) = blocked_train_forward(&q, &k, &v);
+    let (dq, dk, dv) = attn_backward_blocked(&probs, &q, &k, &v, &w);
+    let eps = 1e-5;
+    let perturb = |m: &Matrix, r: usize, c: usize, delta: f64| -> Matrix {
+        Matrix::from_fn(m.rows(), m.cols(), |i, j| {
+            m.row(i)[j] + if (i, j) == (r, c) { delta } else { 0.0 }
+        })
+    };
+    for (name, grad) in [("dq", &dq), ("dk", &dk), ("dv", &dv)] {
+        for r in 0..n {
+            for c in 0..d {
+                let (lp, lm) = match name {
+                    "dq" => (
+                        loss(&perturb(&q, r, c, eps), &k, &v),
+                        loss(&perturb(&q, r, c, -eps), &k, &v),
+                    ),
+                    "dk" => (
+                        loss(&q, &perturb(&k, r, c, eps), &v),
+                        loss(&q, &perturb(&k, r, c, -eps), &v),
+                    ),
+                    _ => (
+                        loss(&q, &k, &perturb(&v, r, c, eps)),
+                        loss(&q, &k, &perturb(&v, r, c, -eps)),
+                    ),
+                };
+                let fd = (lp - lm) / (2.0 * eps);
+                let g = grad.row(r)[c];
+                assert!(
+                    (fd - g).abs() <= 1e-6 + 1e-5 * g.abs().max(fd.abs()),
+                    "{name}[{r},{c}]: finite diff {fd:.8e} vs analytic {g:.8e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_blocked_backward_matches_rowstream_mode_within_tolerance() {
+    // n = 57: three full tiles plus a ragged 9-column tail.
+    let (n, dh) = (57, 6);
+    let (q, k, v) = inputs(n, dh, 950, 0.3);
+    let mut rng = Rng::seeded(951);
+    let dout = Matrix::randn(n, dh, &mut rng);
+    let (_, probs) = blocked_train_forward(&q, &k, &v);
+    let probs = Arc::new(probs);
+    let e = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
+    let job = |key: u64, mode: AttnBackwardMode| {
+        EngineJob::attn_backward(
+            key,
+            AttnBackwardJob {
+                layer: 0,
+                head: 0,
+                q: q.clone(),
+                k: k.clone(),
+                v: v.clone(),
+                dout: dout.clone(),
+                probs: Some(probs.clone()),
+                basis: None,
+                mode,
+            },
+        )
+    };
+    let outs = e.submit(vec![
+        job(1, AttnBackwardMode::Exact(ExactKernel::RowStream)),
+        job(2, AttnBackwardMode::Exact(ExactKernel::Blocked)),
+    ]);
+    let rs = outs[0].result.clone().into_attn_backward();
+    let bl = outs[1].result.clone().into_attn_backward();
+    // Both modes consume the same probs; they differ only in
+    // accumulation order, so a small multiple of the forward bound
+    // covers the backward's extra reductions.
+    let t = blocked_rtol(n) * 16.0;
+    for (a, b, name) in [(&rs.dq, &bl.dq, "dq"), (&rs.dk, &bl.dk, "dk"), (&rs.dv, &bl.dv, "dv")] {
+        let err = max_abs_diff(a, b);
+        assert!(err <= t, "{name}: blocked backward drifted {err:.3e} > {t:.3e}");
+    }
+    // The engine's blocked lane is the library kernel, bit for bit.
+    let (dq, dk, dv) = attn_backward_blocked(&probs, &q, &k, &v, &dout);
+    assert_eq!(max_abs_diff(&bl.dq, &dq), 0.0, "engine dq != library dq");
+    assert_eq!(max_abs_diff(&bl.dk, &dk), 0.0, "engine dk != library dk");
+    assert_eq!(max_abs_diff(&bl.dv, &dv), 0.0, "engine dv != library dv");
+}
+
+#[test]
+fn engine_blocked_jobs_bit_identical_across_worker_counts() {
+    let mk_jobs = || -> Vec<EngineJob> {
+        let mut rng = Rng::seeded(960);
+        let mut jobs = Vec::new();
+        for (i, &n) in [19usize, 48, 130].iter().enumerate() {
+            let d = 4 + 2 * (i % 2);
+            let q = Matrix::randn(n, d, &mut rng).scale(0.4);
+            let k = Matrix::randn(n, d, &mut rng).scale(0.4);
+            let v = Matrix::randn(n, d, &mut rng);
+            let blocked = BatchedBackend::Exact(ExactKernel::Blocked);
+            jobs.push(EngineJob::prefill(
+                (10 + i) as u64,
+                AttnJob::causal(0, i as u32, q.clone(), k.clone(), v.clone(), blocked.clone()),
+            ));
+            jobs.push(EngineJob::prefill(
+                (20 + i) as u64,
+                AttnJob::causal(0, i as u32, q.clone(), k.clone(), v.clone(), blocked)
+                    .for_training(),
+            ));
+            jobs.push(EngineJob::decode(
+                (30 + i) as u64,
+                DecodeJob {
+                    layer: 0,
+                    head: i as u32,
+                    state: None,
+                    new_row: causal_logits_row(q.row(n - 1), &k, n),
+                    v,
+                    q: None,
+                    k: None,
+                    op: DecodeOp::Exact(ExactKernel::Blocked),
+                },
+            ));
+        }
+        jobs
+    };
+    let keys: Vec<u64> = mk_jobs().iter().map(|j| j.key).collect();
+    let mut per_worker = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let e = BatchedEngine::new(EngineConfig { workers, cache_capacity: 16 });
+        let outs = e.submit(mk_jobs());
+        assert_eq!(
+            outs.iter().map(|o| o.key).collect::<Vec<_>>(),
+            keys,
+            "input order + key echo ({workers} workers)"
+        );
+        per_worker.push(outs);
+    }
+    let base = &per_worker[0];
+    for (outs, workers) in per_worker[1..].iter().zip([2usize, 8]) {
+        for (a, b) in outs.iter().zip(base) {
+            match (&a.result, &b.result) {
+                (EngineResult::Prefill(x), EngineResult::Prefill(y)) => {
+                    assert_eq!(max_abs_diff(&x.y, &y.y), 0.0, "prefill bits ({workers} workers)");
+                    match (&x.probs, &y.probs) {
+                        (None, None) => {}
+                        (Some(px), Some(py)) => assert_eq!(
+                            max_abs_diff(px, py),
+                            0.0,
+                            "training probs bits ({workers} workers)"
+                        ),
+                        _ => panic!("probs presence flip ({workers} workers)"),
+                    }
+                }
+                (EngineResult::Decode(x), EngineResult::Decode(y)) => {
+                    assert_eq!(x.y_last, y.y_last, "decode bits ({workers} workers)");
+                }
+                _ => panic!("lane flip ({workers} workers)"),
+            }
+        }
+    }
+    // The engine's serving lane is the library kernel, bit for bit.
+    let mut rng = Rng::seeded(960);
+    let n = 19;
+    let q = Matrix::randn(n, 4, &mut rng).scale(0.4);
+    let k = Matrix::randn(n, 4, &mut rng).scale(0.4);
+    let v = Matrix::randn(n, 4, &mut rng);
+    let first = base[0].result.clone().into_prefill();
+    assert_eq!(
+        max_abs_diff(&first.y, &blocked_attention_causal(&q, &k, &v)),
+        0.0,
+        "engine blocked prefill != library kernel"
+    );
+}

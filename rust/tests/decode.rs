@@ -8,6 +8,7 @@ use conv_basis::attention::batched::{
 };
 use conv_basis::attention::decode::exact_attend_last;
 use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::ExactKernel;
 use conv_basis::model::{AttentionBackend, ModelConfig, Transformer};
 use conv_basis::tensor::{dot, Matrix, Rng};
 
@@ -52,7 +53,8 @@ fn prop_decode_steps_bitmatch_full_prefill_across_thread_counts() {
         let mut per_worker_logits: Vec<Vec<Vec<f64>>> = Vec::new();
         for workers in [1usize, 2, 8] {
             let e = engine(workers);
-            let (mut sess, last) = model.prefill(&prompt, &AttentionBackend::Exact, &e);
+            let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+            let (mut sess, last) = model.prefill(&prompt, &exact, &e);
             let mut steps = vec![last];
             for &t in &feed {
                 let logits = model.decode_step(std::slice::from_mut(&mut sess), &[t], &e);
@@ -69,7 +71,7 @@ fn prop_decode_steps_bitmatch_full_prefill_across_thread_counts() {
         }
         // …and bit-identical to a fresh full prefill at every length.
         let mut toks = prompt.clone();
-        let want = model.forward(&toks, &AttentionBackend::Exact, false);
+        let want = model.forward(&toks, &AttentionBackend::Exact(ExactKernel::RowStream), false);
         assert_eq!(
             per_worker_logits[0][0],
             want.logits.row(toks.len() - 1).to_vec(),
@@ -77,7 +79,8 @@ fn prop_decode_steps_bitmatch_full_prefill_across_thread_counts() {
         );
         for (i, &t) in feed.iter().enumerate() {
             toks.push(t);
-            let want = model.forward(&toks, &AttentionBackend::Exact, false);
+            let want =
+                model.forward(&toks, &AttentionBackend::Exact(ExactKernel::RowStream), false);
             assert_eq!(
                 per_worker_logits[0][i + 1],
                 want.logits.row(toks.len() - 1).to_vec(),

@@ -3,6 +3,7 @@
 //! over a workload trace.
 
 use conv_basis::attention::batched::{BatchedEngine, EngineConfig};
+use conv_basis::attention::ExactKernel;
 use conv_basis::coordinator::{
     run_trace, BatcherConfig, RouterConfig, Server, ServerConfig,
 };
@@ -33,7 +34,7 @@ fn figure4_protocol_small() {
 
     let tok = conv_basis::data::ByteTokenizer::new();
     let sample = tok.encode_for_classification(&ds.test[0].text, seq);
-    let exact_rec = model.forward(&sample, &AttentionBackend::Exact, false);
+    let exact_rec = model.forward(&sample, &AttentionBackend::Exact(ExactKernel::RowStream), false);
 
     let mut errs = Vec::new();
     for k in [1usize, 4, seq] {
@@ -58,7 +59,8 @@ fn figure4_protocol_small() {
     }
 
     // Accuracy with full-k conv equals exact accuracy.
-    let acc_exact = eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact);
+    let acc_exact =
+        eval_classifier(&model, &ds.test, seq, &AttentionBackend::Exact(ExactKernel::RowStream));
     let acc_conv = eval_classifier(
         &model,
         &ds.test,
@@ -126,7 +128,9 @@ fn trained_model_batched_forward_matches_singles_end_to_end() {
         .iter()
         .map(|s| s.bytes().map(|b| b as usize).collect())
         .collect();
-    for backend in [AttentionBackend::Exact, AttentionBackend::conv_with_k(4, 48)] {
+    for backend in
+        [AttentionBackend::Exact(ExactKernel::RowStream), AttentionBackend::conv_with_k(4, 48)]
+    {
         let singles: Vec<_> = prompts.iter().map(|p| model.forward(p, &backend, false)).collect();
         let batched = model.forward_batch(&prompts, &backend, &engine);
         for (b, s) in batched.iter().zip(&singles) {
@@ -158,7 +162,7 @@ fn lm_training_then_conv_generation_consistency() {
     let tcfg = TrainConfig { steps: 30, lr: 3e-3, seq_len: 32, batch: 2, log_every: 15, seed: 5 };
     let (model, _) = conv_basis::model::train_lm(&mcfg, &tcfg, 3000);
     let prompt: Vec<usize> = "the model computes".bytes().map(|b| b as usize).collect();
-    let exact = model.forward(&prompt, &AttentionBackend::Exact, false);
+    let exact = model.forward(&prompt, &AttentionBackend::Exact(ExactKernel::RowStream), false);
     let conv = model.forward(
         &prompt,
         &AttentionBackend::ConvBasis(conv_basis::basis::RecoverConfig::exact(prompt.len())),

@@ -16,6 +16,7 @@
 //!    *reported* (`grad_fallbacks`) rather than silently diverging.
 
 use conv_basis::attention::batched::{BatchedEngine, EngineConfig};
+use conv_basis::attention::ExactKernel;
 use conv_basis::gradient::batched::{AttnBackwardMode, FastGradConfig};
 use conv_basis::model::{
     train_lm_with_engine, AttentionBackend, Gradients, ModelConfig, TrainAttentionMode,
@@ -73,7 +74,7 @@ fn engine_exact_backward_bitmatches_dense_oracle() {
         let mut rng = Rng::seeded(4002 + n as u64);
         let tokens = random_tokens(n, 16, &mut rng);
         let targets = random_tokens(n, 16, &mut rng);
-        let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+        let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
         let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
 
         let mut dense = m.zero_grads();
@@ -88,7 +89,7 @@ fn engine_exact_backward_bitmatches_dense_oracle() {
                 None,
                 &mut routed,
                 &engine,
-                &AttnBackwardMode::Exact,
+                &AttnBackwardMode::Exact(ExactKernel::RowStream),
             );
             assert_grads_bit_identical(&dense, &routed, &format!("n={n} workers={workers}"));
             let snap = engine.metrics().snapshot();
@@ -109,8 +110,8 @@ fn engine_batched_backward_bitmatches_sequential_dense() {
         .iter()
         .map(|&n| (random_tokens(n, 16, &mut rng), random_tokens(n, 16, &mut rng)))
         .collect();
-    let recs: Vec<_> =
-        seqs.iter().map(|(t, _)| m.forward(t, &AttentionBackend::Exact, true)).collect();
+    let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+    let recs: Vec<_> = seqs.iter().map(|(t, _)| m.forward(t, &exact, true)).collect();
     let dls: Vec<Matrix> = recs
         .iter()
         .zip(&seqs)
@@ -126,7 +127,8 @@ fn engine_batched_backward_bitmatches_sequential_dense() {
         let engine = BatchedEngine::new(EngineConfig { workers, cache_capacity: 32 });
         let mut routed = m.zero_grads();
         let batch: Vec<_> = recs.iter().zip(&dls).map(|(r, dl)| (r, dl, None)).collect();
-        m.backward_batch_with_engine(&batch, &mut routed, &engine, &AttnBackwardMode::Exact);
+        let mode = AttnBackwardMode::Exact(ExactKernel::RowStream);
+        m.backward_batch_with_engine(&batch, &mut routed, &engine, &mode);
         assert_grads_bit_identical(&dense, &routed, &format!("batched workers={workers}"));
     }
 }
@@ -138,15 +140,16 @@ fn engine_backward_matches_finite_differences_every_parameter_group() {
     let m = oracle_model(4010, 16);
     let tokens = [3usize, 1, 4, 1, 5, 9, 2, 6];
     let targets = [1usize, 4, 1, 5, 9, 2, 6, 5];
-    let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+    let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
     let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
     let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
     let mut grads = m.zero_grads();
-    m.backward_with_engine(&rec, &dlogits, None, &mut grads, &engine, &AttnBackwardMode::Exact);
+    let mode = AttnBackwardMode::Exact(ExactKernel::RowStream);
+    m.backward_with_engine(&rec, &dlogits, None, &mut grads, &engine, &mode);
 
     let eps = 1e-5;
     let loss_with = |m: &Transformer| {
-        let r = m.forward(&tokens, &AttentionBackend::Exact, false);
+        let r = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), false);
         m.lm_loss(&r, &targets, usize::MAX).0
     };
     let check = |fd: f64, an: f64, name: &str| {
@@ -227,9 +230,10 @@ fn engine_backward_matches_finite_differences_every_parameter_group() {
     let (_, _, dcls) = m.cls_loss(&rec, true);
     let mut cgrads = m.zero_grads();
     let zero = Matrix::zeros(tokens.len(), 16);
-    m.backward_with_engine(&rec, &zero, Some(dcls), &mut cgrads, &engine, &AttnBackwardMode::Exact);
+    let mode = AttnBackwardMode::Exact(ExactKernel::RowStream);
+    m.backward_with_engine(&rec, &zero, Some(dcls), &mut cgrads, &engine, &mode);
     let cls_loss_with = |m: &Transformer| {
-        let r = m.forward(&tokens, &AttentionBackend::Exact, false);
+        let r = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), false);
         m.cls_loss(&r, true).0
     };
     let (mut mp, mut mm) = (m.clone(), m.clone());
@@ -290,17 +294,18 @@ fn fast_backward_within_documented_tolerance_on_trained_model() {
         2000,
         &engine,
         &TrainAttentionMode::Exact,
-        &AttnBackwardMode::Exact,
+        &AttnBackwardMode::Exact(ExactKernel::RowStream),
     );
 
     let mut rng = Rng::seeded(4020);
     let tokens = random_tokens(16, 260, &mut rng);
     let targets = random_tokens(16, 260, &mut rng);
-    let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+    let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
     let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
 
     let mut exact = m.zero_grads();
-    m.backward_with_engine(&rec, &dlogits, None, &mut exact, &engine, &AttnBackwardMode::Exact);
+    let mode = AttnBackwardMode::Exact(ExactKernel::RowStream);
+    m.backward_with_engine(&rec, &dlogits, None, &mut exact, &engine, &mode);
     let mut fast = m.zero_grads();
     let fast_mode = AttnBackwardMode::Fast(FastGradConfig {
         recover: conv_basis::basis::RecoverConfig::exact(16),
@@ -337,7 +342,7 @@ fn fast_train_lm_loss_curve_tracks_exact() {
         2000,
         &e1,
         &TrainAttentionMode::Exact,
-        &AttnBackwardMode::Exact,
+        &AttnBackwardMode::Exact(ExactKernel::RowStream),
     );
     let e2 = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 64 });
     let fast_mode = AttnBackwardMode::Fast(FastGradConfig {
@@ -376,7 +381,7 @@ fn cached_handle_backward_bitmatches_self_recovery() {
     let mut rng = Rng::seeded(4041);
     let tokens = random_tokens(16, 16, &mut rng);
     let targets = random_tokens(16, 16, &mut rng);
-    let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+    let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
     let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
     let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
 
@@ -415,12 +420,13 @@ fn fast_backward_recovery_failure_reports_grad_fallbacks() {
     let mut rng = Rng::seeded(4031);
     let tokens = random_tokens(12, 16, &mut rng);
     let targets = random_tokens(12, 16, &mut rng);
-    let rec = m.forward(&tokens, &AttentionBackend::Exact, true);
+    let rec = m.forward(&tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
     let (_, dlogits) = m.lm_loss(&rec, &targets, usize::MAX);
 
     let engine = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 32 });
     let mut exact = m.zero_grads();
-    m.backward_with_engine(&rec, &dlogits, None, &mut exact, &engine, &AttnBackwardMode::Exact);
+    let mode = AttnBackwardMode::Exact(ExactKernel::RowStream);
+    m.backward_with_engine(&rec, &dlogits, None, &mut exact, &engine, &mode);
 
     let bad = AttnBackwardMode::Fast(FastGradConfig {
         recover: conv_basis::basis::RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 },

@@ -5,6 +5,7 @@
 //! outputs, load shedding answers busy over the wire, and shutdown
 //! mid-stream is clean.
 
+use conv_basis::attention::ExactKernel;
 use conv_basis::coordinator::{
     fingerprint, AdmissionConfig, AttnRequest, Backend, GenConfig, GenRequest, NetConfig,
     NetServer, Payload, Server, ServerConfig,
@@ -41,7 +42,7 @@ fn exact_cfg(model: Arc<Transformer>, speculate: usize) -> ServerConfig {
         workers: 2,
         gen: Some(GenConfig {
             model,
-            backend: AttentionBackend::Exact,
+            backend: AttentionBackend::Exact(ExactKernel::RowStream),
             max_concurrent: 4,
             admission: AdmissionConfig::default(),
             speculate,

@@ -12,7 +12,7 @@ use conv_basis::attention::batched::{
 use conv_basis::attention::decode::DecodeState;
 use conv_basis::attention::rope::rope_structured_qk;
 use conv_basis::attention::{
-    conv_attention, conv_attention_masked, exact_attention, merge_bases, Mask,
+    conv_attention, conv_attention_masked, exact_attention, merge_bases, ExactKernel, Mask,
 };
 use conv_basis::basis::{
     decompose_exact, exp_transform, recover_from_oracle, ConvBasis, DenseColumnOracle,
@@ -446,7 +446,7 @@ fn prop_batched_deterministic_across_thread_counts() {
             let (q, k) = rope_structured_qk(n, d, 3, &mut rng);
             let v = Matrix::randn(n, d, &mut rng);
             let backend = match h % 3 {
-                0 => BatchedBackend::Exact,
+                0 => BatchedBackend::Exact(ExactKernel::RowStream),
                 1 => BatchedBackend::Strided(4),
                 _ => BatchedBackend::Conv(RecoverConfig::exact(n)),
             };
@@ -498,7 +498,7 @@ fn prop_decode_batch_deterministic() {
                             v,
                             q: None,
                             k: None,
-                            op: DecodeOp::Exact,
+                            op: DecodeOp::Exact(ExactKernel::RowStream),
                         }
                     } else {
                         let zeros = Matrix::zeros(n, d);
@@ -621,7 +621,7 @@ fn prop_submit_mixed_lanes_deterministic() {
                     v: Matrix::randn(nd + 1, dd, &mut rng),
                     q: None,
                     k: None,
-                    op: DecodeOp::Exact,
+                    op: DecodeOp::Exact(ExactKernel::RowStream),
                 },
             ));
             // Gradient lane: Definition 5.1 backward.
@@ -693,7 +693,7 @@ fn prop_submit_mixed_lanes_deterministic() {
 
 #[test]
 fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
-    // The ISSUE 4 fuzz pin, extended for ISSUEs 5, 7 and 9: a
+    // The ISSUE 4 fuzz pin, extended for ISSUEs 5, 7, 9 and 10: a
     // deterministic-seed generator builds random batches mixing ALL
     // FOUR lanes — Prefill (serving, conv-forward *training*, the
     // speculative-decoding verify submits built by `AttnJob::verify`,
@@ -703,7 +703,9 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
     // handle) — with random sizes and modes, and every seed must
     // produce input-ordered, key-echoed results that are
     // bit-identical across worker counts 1/2/8, training artifacts
-    // (probs / basis handles) included.
+    // (probs / basis handles) included. ISSUE 10 adds a ninth arm
+    // mixing the flash-style blocked exact kernels (serving prefill,
+    // training prefill, decode, LM backward) into the same batches.
     use conv_basis::coordinator::CachedBasis;
     use conv_basis::gradient::batched::{
         AttnBackwardJob, AttnBackwardMode, FastGradConfig, GradJob,
@@ -731,7 +733,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
         let mut jobs = Vec::with_capacity(count);
         for idx in 0..count {
             let key = 1000 + idx as u64;
-            match rng.below(8) {
+            match rng.below(9) {
                 0 => {
                     // Prefill: random size, exact or strided operator.
                     let n = 12 + rng.below(28);
@@ -739,7 +741,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                     let (q, k) = rope_structured_qk(n, d, 2, &mut rng);
                     let v = Matrix::randn(n, d, &mut rng);
                     let backend = if rng.below(2) == 0 {
-                        BatchedBackend::Exact
+                        BatchedBackend::Exact(ExactKernel::RowStream)
                     } else {
                         BatchedBackend::Strided(1 + rng.below(4))
                     };
@@ -767,7 +769,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                             v: Matrix::randn(n + 1, d, &mut rng),
                             q: None,
                             k: None,
-                            op: DecodeOp::Exact,
+                            op: DecodeOp::Exact(ExactKernel::RowStream),
                         },
                     ));
                 }
@@ -797,7 +799,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                     let k = Matrix::randn(n, dh, &mut rng).scale(0.3);
                     let probs = Arc::new(causal_probs(&q, &k));
                     let mode = if rng.below(2) == 0 {
-                        AttnBackwardMode::Exact
+                        AttnBackwardMode::Exact(ExactKernel::RowStream)
                     } else {
                         AttnBackwardMode::Fast(FastGradConfig::exact(n))
                     };
@@ -882,7 +884,7 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                         },
                     ));
                 }
-                _ => {
+                7 => {
                     // ROUTED prefill (the ISSUE 9 adaptive router): a
                     // randomized per-head policy table resolves to one
                     // of the direct operators *inside* job execution,
@@ -911,6 +913,67 @@ fn prop_submit_fuzzed_mixed_lanes_bit_identical_across_worker_counts() {
                         key,
                         AttnJob::causal(7, idx as u32, q, k, v, BatchedBackend::Routed(policy)),
                     ));
+                }
+                _ => {
+                    // BLOCKED exact lanes (ISSUE 10): the flash-style
+                    // tiled kernels behind `ExactKernel::Blocked`,
+                    // mixed into random batches as serving prefill,
+                    // training prefill (probs artifact), decode step,
+                    // and LM backward. Rows are independent in every
+                    // one of them, so they must stay exactly as pure
+                    // and worker-count-independent as the row-stream
+                    // arms above.
+                    let n = 10 + rng.below(40);
+                    let d = 2 + rng.below(4);
+                    let q = Matrix::randn(n, d, &mut rng).scale(0.3);
+                    let k = Matrix::randn(n, d, &mut rng).scale(0.3);
+                    let v = Matrix::randn(n, d, &mut rng);
+                    let blocked = BatchedBackend::Exact(ExactKernel::Blocked);
+                    match rng.below(4) {
+                        0 => jobs.push(EngineJob::prefill(
+                            key,
+                            AttnJob::causal(8, idx as u32, q, k, v, blocked),
+                        )),
+                        1 => jobs.push(EngineJob::prefill(
+                            key,
+                            AttnJob::causal(8, idx as u32, q, k, v, blocked).for_training(),
+                        )),
+                        2 => {
+                            let new_row: Vec<f64> = (0..n)
+                                .map(|j| conv_basis::tensor::dot(q.row(n - 1), k.row(j)))
+                                .collect();
+                            jobs.push(EngineJob::decode(
+                                key,
+                                DecodeJob {
+                                    layer: 8,
+                                    head: idx as u32,
+                                    state: None,
+                                    new_row,
+                                    v,
+                                    q: None,
+                                    k: None,
+                                    op: DecodeOp::Exact(ExactKernel::Blocked),
+                                },
+                            ));
+                        }
+                        _ => {
+                            let probs = Arc::new(causal_probs(&q, &k));
+                            jobs.push(EngineJob::attn_backward(
+                                key,
+                                AttnBackwardJob {
+                                    layer: 8,
+                                    head: idx as u32,
+                                    q,
+                                    k,
+                                    v,
+                                    dout: Matrix::randn(n, d, &mut rng),
+                                    probs: Some(probs),
+                                    basis: None,
+                                    mode: AttnBackwardMode::Exact(ExactKernel::Blocked),
+                                },
+                            ));
+                        }
+                    }
                 }
             }
         }

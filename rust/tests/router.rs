@@ -32,6 +32,7 @@ use conv_basis::attention::batched::{
     ProfilePolicyConfig, RouterPolicy,
 };
 use conv_basis::attention::rope::rope_structured_qk;
+use conv_basis::attention::ExactKernel;
 use conv_basis::attention::Mask;
 use conv_basis::basis::RecoverConfig;
 use conv_basis::coordinator::{Metrics, RouteKind};
@@ -110,12 +111,12 @@ fn mixed_table(n: usize) -> RouterPolicy {
 /// The direct backend each slot of [`mixed_table`] must resolve to.
 fn direct_backends(n: usize) -> Vec<((u32, u32), BatchedBackend)> {
     vec![
-        ((0, 0), BatchedBackend::Exact),
+        ((0, 0), BatchedBackend::Exact(ExactKernel::RowStream)),
         ((0, 1), BatchedBackend::Strided(4)),
         ((0, 2), BatchedBackend::Conv(RecoverConfig::exact(n))),
         ((1, 0), BatchedBackend::LowRank(LowRankConfig::new(1, 4.0))),
         ((1, 1), BatchedBackend::Strided(2)),
-        ((1, 2), BatchedBackend::Exact),
+        ((1, 2), BatchedBackend::Exact(ExactKernel::RowStream)),
     ]
 }
 
@@ -339,7 +340,8 @@ fn lowrank_routed_sessions_are_pinned_to_exact_decode_and_counted() {
     let er = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
     let eo = BatchedEngine::new(EngineConfig { workers: 2, cache_capacity: 16 });
     let mut via_router = model.prefill_batch(&prompts, &routed_exact, &er);
-    let mut via_exact = model.prefill_batch(&prompts, &AttentionBackend::Exact, &eo);
+    let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+    let mut via_exact = model.prefill_batch(&prompts, &exact, &eo);
     for ((_, lr), (_, le)) in via_router.iter().zip(&via_exact) {
         assert_eq!(lr, le, "routed-exact prefill logits must bit-match direct exact");
     }

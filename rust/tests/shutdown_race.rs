@@ -14,6 +14,7 @@
 //!    and the scheduler loop terminates
 //!    ([`admission_race_accounts_every_request`]).
 
+use conv_basis::attention::ExactKernel;
 use conv_basis::coordinator::{
     AdmissionConfig, AdmissionQueue, GenConfig, GenEvent, GenRequest, GenSink, Metrics, Server,
     ServerConfig, Wake,
@@ -34,7 +35,7 @@ fn gen_server(seed: u64) -> Server {
     Server::start(ServerConfig {
         gen: Some(GenConfig {
             model: tiny_model(seed),
-            backend: AttentionBackend::Exact,
+            backend: AttentionBackend::Exact(ExactKernel::RowStream),
             max_concurrent: 4,
             admission: AdmissionConfig::default(),
             speculate: 0,

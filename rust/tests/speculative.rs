@@ -11,6 +11,7 @@
 //! acceptance rate, never correctness). γ = 0 must be the identity:
 //! the plain pre-speculation scheduler path, counter for counter.
 
+use conv_basis::attention::ExactKernel;
 use conv_basis::coordinator::{
     AdmissionConfig, GenConfig, GenRequest, GenStatus, Server, ServerConfig,
 };
@@ -49,7 +50,7 @@ fn oracle(model: &Transformer, prompt: &[usize], max_new: usize) -> Vec<usize> {
     let mut toks = prompt.to_vec();
     let mut out = Vec::new();
     for _ in 0..max_new {
-        let rec = model.forward(&toks, &AttentionBackend::Exact, false);
+        let rec = model.forward(&toks, &AttentionBackend::Exact(ExactKernel::RowStream), false);
         let row = rec.logits.row(toks.len() - 1);
         let mut best = 0;
         for (i, &x) in row.iter().enumerate() {
@@ -98,8 +99,8 @@ fn speculative_greedy_bit_matches_oracle_for_all_gammas_and_worker_counts() {
     let want: Vec<Vec<usize>> = prompts().iter().map(|p| oracle(&model, p, max_new)).collect();
     for gamma in [1usize, 2, 4, 8] {
         for workers in [1usize, 2, 8] {
-            let server =
-                spec_server(model.clone(), AttentionBackend::Exact, workers, gamma);
+            let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+            let server = spec_server(model.clone(), exact, workers, gamma);
             let got = run_server(&server, &prompts(), max_new);
             let s = server.shutdown().snapshot();
             assert_eq!(
@@ -182,7 +183,7 @@ fn gamma_zero_is_the_identity_scheduler_path() {
     let model = tiny_model(73);
     let max_new = 6;
     let want: Vec<Vec<usize>> = prompts().iter().map(|p| oracle(&model, p, max_new)).collect();
-    let server = spec_server(model.clone(), AttentionBackend::Exact, 2, 0);
+    let server = spec_server(model.clone(), AttentionBackend::Exact(ExactKernel::RowStream), 2, 0);
     let got = run_server(&server, &prompts(), max_new);
     let s = server.shutdown().snapshot();
     assert_eq!(got, want);
@@ -205,7 +206,7 @@ fn per_request_speculate_knob_overrides_the_server_default() {
     let want = oracle(&model, &p, max_new);
 
     // Opt IN on a γ = 0 server.
-    let server = spec_server(model.clone(), AttentionBackend::Exact, 2, 0);
+    let server = spec_server(model.clone(), AttentionBackend::Exact(ExactKernel::RowStream), 2, 0);
     server.submit_generate(GenRequest::new(0, p.clone(), max_new).with_speculate(4));
     let resp = server.collect_generations(1);
     let s = server.shutdown().snapshot();
@@ -213,7 +214,7 @@ fn per_request_speculate_knob_overrides_the_server_default() {
     assert!(s.spec_rounds >= 1, "per-request speculate must engage on a γ=0 server");
 
     // Opt OUT on a γ = 4 server.
-    let server = spec_server(model.clone(), AttentionBackend::Exact, 2, 4);
+    let server = spec_server(model.clone(), AttentionBackend::Exact(ExactKernel::RowStream), 2, 4);
     server.submit_generate(GenRequest::new(0, p.clone(), max_new).with_speculate(0));
     let resp = server.collect_generations(1);
     let s = server.shutdown().snapshot();
@@ -232,7 +233,8 @@ fn mixed_gammas_in_one_wave_all_match_the_oracle() {
     let gammas = [0usize, 1, 8, 3];
     let want: Vec<Vec<usize>> = ps.iter().map(|p| oracle(&model, p, max_new)).collect();
     for workers in [1usize, 2, 8] {
-        let server = spec_server(model.clone(), AttentionBackend::Exact, workers, 2);
+        let exact = AttentionBackend::Exact(ExactKernel::RowStream);
+        let server = spec_server(model.clone(), exact, workers, 2);
         for (i, p) in ps.iter().enumerate() {
             server.submit_generate(
                 GenRequest::new(i as u64, p.clone(), max_new).with_speculate(gammas[i]),

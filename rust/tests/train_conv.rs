@@ -22,6 +22,7 @@
 //!    degrades cost, never the curve.
 
 use conv_basis::attention::batched::{BatchedEngine, EngineConfig};
+use conv_basis::attention::ExactKernel;
 use conv_basis::basis::RecoverConfig;
 use conv_basis::gradient::batched::{AttnBackwardMode, FastGradConfig};
 use conv_basis::model::{
@@ -119,7 +120,7 @@ fn conv_train_lm_tracks_exact_within_tolerance_and_is_bit_identical_across_worke
             &tcfg,
             2,
             &TrainAttentionMode::Exact,
-            &AttnBackwardMode::Exact,
+            &AttnBackwardMode::Exact(ExactKernel::RowStream),
         );
         let (fwd, bwd) = conv_mode(n);
         let (m1, log1, _) = run_lm(&mcfg, &tcfg, 1, &fwd, &bwd);
@@ -212,7 +213,7 @@ fn conv_train_kmax0_falls_back_counted_and_bit_matches_exact_training() {
         &tcfg,
         2,
         &TrainAttentionMode::Exact,
-        &AttnBackwardMode::Exact,
+        &AttnBackwardMode::Exact(ExactKernel::RowStream),
     );
 
     let hostile = RecoverConfig { k_max: 0, t: 1, delta: 1.0, eps: 0.0 };
@@ -267,7 +268,7 @@ fn forward_train_batch_bitmatches_per_record_forwards() {
         m.forward_train_batch(&seqs, &TrainAttentionMode::Exact, &engine);
     assert_eq!(fallbacks, 0);
     for (rec, tokens) in recs.iter().zip(&seqs) {
-        let want = m.forward(tokens, &AttentionBackend::Exact, true);
+        let want = m.forward(tokens, &AttentionBackend::Exact(ExactKernel::RowStream), true);
         assert_eq!(max_abs_diff(&rec.logits, &want.logits), 0.0, "exact-mode logits");
         assert_eq!(
             max_abs_diff(&rec.final_hidden, &want.final_hidden),
@@ -308,7 +309,8 @@ fn conv_train_classifier_tracks_exact() {
         let engine = BatchedEngine::new(EngineConfig { workers, cache_capacity: 32 });
         train_classifier_with_engine(&mcfg, &tcfg, &ds, &engine, fwd, bwd)
     };
-    let (_, log_exact) = run(2, &TrainAttentionMode::Exact, &AttnBackwardMode::Exact);
+    let (_, log_exact) =
+        run(2, &TrainAttentionMode::Exact, &AttnBackwardMode::Exact(ExactKernel::RowStream));
     let (fwd, bwd) = conv_mode(seq);
     let (_, log_a) = run(1, &fwd, &bwd);
     let (_, log_b) = run(8, &fwd, &bwd);
@@ -334,6 +336,6 @@ fn conv_forward_with_exact_backward_is_rejected_up_front() {
         2000,
         &engine,
         &TrainAttentionMode::Conv(RecoverConfig::exact(8)),
-        &AttnBackwardMode::Exact,
+        &AttnBackwardMode::Exact(ExactKernel::RowStream),
     );
 }
